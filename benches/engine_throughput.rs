@@ -1,0 +1,63 @@
+//! `cargo bench --bench engine_throughput` — measured serving throughput
+//! of the full coordinator per bit-width variant (the measured analogue
+//! of Fig. 6 on this CPU testbed).
+
+use odyssey::coordinator::{Engine, EngineOptions, GenParams, Request};
+use odyssey::exp::eval::load_corpus;
+use odyssey::quant::QuantRecipe;
+use odyssey::util::XorShift;
+
+fn main() {
+    odyssey::util::log::init_from_env();
+    let corpus = load_corpus("artifacts", "val")
+        .expect("artifacts (run `make artifacts`)");
+    let mut rng = XorShift::new(42);
+    let trace: Vec<Vec<i32>> = (0..8)
+        .map(|_| {
+            let start = rng.range(0, (corpus.len() - 96) as i64) as usize;
+            corpus[start..start + 48].iter().map(|&t| t as i32).collect()
+        })
+        .collect();
+
+    println!(
+        "{:<12} {:>12} {:>14} {:>14} {:>12}",
+        "variant", "tok/s", "prefill t/s", "decode t/s", "ttft p50 ms"
+    );
+    for variant in ["fp", "w8a8", "w4a8_fast"] {
+        // vanilla recipes: this bench measures ENGINE speed, not quality
+        let recipe = match variant {
+            "w8a8" => QuantRecipe::smoothquant_w8(),
+            "w4a16" | "w4a8_group" => QuantRecipe::rtn_grouped(0),
+            _ => QuantRecipe::vanilla_w4(),
+        };
+        let mut engine = Engine::new(EngineOptions {
+            variant: variant.into(),
+            recipe,
+            ..Default::default()
+        })
+        .expect("engine");
+        for (i, p) in trace.iter().enumerate() {
+            engine.submit(Request::new(
+                i as u64,
+                p.clone(),
+                GenParams { max_new_tokens: 8, ..Default::default() },
+            ));
+        }
+        let t0 = std::time::Instant::now();
+        let results = engine.run_until_idle().expect("run");
+        let wall = t0.elapsed().as_secs_f64();
+        let tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
+        println!(
+            "{:<12} {:>12.1} {:>14.1} {:>14.1} {:>12.1}",
+            variant,
+            tokens as f64 / wall,
+            engine.metrics.prefill_tps(),
+            engine.metrics.decode_tps(),
+            engine.metrics.ttft.p50() * 1e3,
+        );
+    }
+    println!(
+        "\n(XLA-CPU emulates int8 math; A100 tensor-core ratios come from \
+         `cargo bench --bench paper_tables`)"
+    );
+}

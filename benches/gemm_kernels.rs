@@ -1,0 +1,79 @@
+//! `cargo bench --bench gemm_kernels` — measured per-kernel latencies of
+//! every GEMM paradigm through the compiled AOT graphs (cpu shape set).
+//!
+//! This is the measured half of Fig. 7 / Table 5: the ordering
+//! (fastgemm <= w8a8 < grouped/asym at M=1; unfused > fast) cross-checks
+//! the A100 model's structural claims on real executables.
+
+use odyssey::exp::latency::random_gemm_args;
+use odyssey::runtime::Runtime;
+use odyssey::util::Bencher;
+
+fn main() {
+    odyssey::util::log::init_from_env();
+    let mut rt = Runtime::new("artifacts").expect("artifacts (run `make artifacts`)");
+    let graphs: Vec<_> =
+        rt.manifest.gemm_graphs("cpu").into_iter().cloned().collect();
+
+    // decode-like shapes (M=1) for every variant; context (M=1024) for a
+    // fast subset so the bench stays under a few minutes.
+    let mut rows = Vec::new();
+    for gi in &graphs {
+        let heavy = gi.m > 1;
+        if heavy
+            && !matches!(gi.variant.as_str(), "w4a8_fast" | "w8a8" | "fp")
+        {
+            continue;
+        }
+        if heavy && gi.n * gi.k > 1024 * 1024 {
+            continue; // keep context-stage benches to the smallest shape
+        }
+        let args = random_gemm_args(&gi.params).expect("args");
+        rt.executable(&gi.name).expect("compile");
+        let mut b = Bencher::new(&gi.name).with_budget(1.0).with_iters(3, 30);
+        let name = gi.name.clone();
+        let res = b.run(|| {
+            rt.run_literals(&name, &args).expect("run");
+        });
+        rows.push((gi.variant.clone(), gi.m, gi.n, gi.k, res));
+    }
+    rows.sort_by(|a, b| (a.1, a.2, a.3, a.0.clone())
+        .cmp(&(b.1, b.2, b.3, b.0.clone())));
+    println!(
+        "{:<16} {:>6} {:>6} {:>6} {:>12} {:>10}",
+        "variant", "M", "N", "K", "mean µs", "min µs"
+    );
+    for (v, m, n, k, r) in &rows {
+        println!(
+            "{:<16} {:>6} {:>6} {:>6} {:>12.1} {:>10.1}",
+            v,
+            m,
+            n,
+            k,
+            r.mean_s * 1e6,
+            r.min_s * 1e6
+        );
+    }
+
+    // headline ratios at the M=1 (self-decode) 1024x1024 shape
+    let t = |variant: &str| {
+        rows.iter()
+            .find(|(v, m, n, k, _)| v == variant && *m == 1 && *n == 1024
+                  && *k == 1024)
+            .map(|(_, _, _, _, r)| r.mean_s)
+    };
+    if let (Some(fast), Some(unfused)) = (t("w4a8_fast"), t("w4a8_unfused"))
+    {
+        println!(
+            "\nfusion ablation (Fig.4 b vs c) @ M=1 1024x1024: \
+             unfused/fused = {:.2}x",
+            unfused / fast
+        );
+    }
+    if let (Some(fast), Some(group)) = (t("w4a8_fast"), t("w4a8_group")) {
+        println!(
+            "fine-grained vs FastGEMM @ M=1 1024x1024: {:.2}x",
+            group / fast
+        );
+    }
+}

@@ -1,0 +1,96 @@
+//! `cargo bench --bench hot_loop` — the L3 §Perf ablation: decode-step
+//! cost under the legacy arg path (clone every weight literal + rebuild
+//! KV from host arrays + parse the full output tuple) vs the optimized
+//! path (borrowed weight literals + KV literal reuse + logits-only
+//! parse).  Documents the EXPERIMENTS.md §Perf before/after.
+
+use odyssey::model::{self, Checkpoint};
+use odyssey::quant::QuantRecipe;
+use odyssey::runtime::{self, Literal, Runtime};
+use odyssey::util::Bencher;
+
+fn main() {
+    odyssey::util::log::init_from_env();
+    let artifacts = "artifacts";
+    for variant in ["w4a8_fast", "fp"] {
+        let mut rt = Runtime::new(artifacts).expect("make artifacts first");
+        let info = rt.manifest.model("tiny3m").unwrap().clone();
+        let ckpt = Checkpoint::load(&rt.manifest, "tiny3m").unwrap();
+        let qw = model::quantize_checkpoint(
+            &ckpt,
+            None,
+            &QuantRecipe::vanilla_w4(),
+            variant,
+            rt.manifest.group_size,
+        )
+        .unwrap();
+        let weights: Vec<Literal> = qw
+            .tensors
+            .iter()
+            .map(|t| runtime::literal_from_st(t).unwrap())
+            .collect();
+        let graph = format!("tiny3m_{variant}_decode_b4");
+        rt.executable(&graph).expect("compile");
+
+        let b = 4usize;
+        let (h, s, d) = (info.n_heads, info.max_seq, info.head_dim);
+        let kv_shape = [b, h, s, d];
+        let cache_len: usize = kv_shape.iter().product();
+        let kv_host: Vec<Vec<f32>> =
+            (0..2 * info.n_layers).map(|_| vec![0f32; cache_len]).collect();
+        let token = runtime::literal_i32(&[b], &[5, 6, 7, 8]).unwrap();
+        let pos = runtime::literal_i32(&[b], &[3, 3, 3, 3]).unwrap();
+
+        // ---- legacy path: clones + host KV rebuild + full parse
+        let legacy = Bencher::new(&format!("{variant} legacy decode step"))
+            .with_budget(4.0)
+            .with_iters(4, 30)
+            .run(|| {
+                let mut args =
+                    Vec::with_capacity(2 + kv_host.len() + weights.len());
+                args.push(token.clone());
+                args.push(pos.clone());
+                for kvv in &kv_host {
+                    args.push(
+                        runtime::literal_f32(&kv_shape, kvv).unwrap(),
+                    );
+                }
+                args.extend(weights.iter().cloned());
+                let outs = rt.run_literals(&graph, &args).unwrap();
+                // parse EVERY output to f32 (the old adopt path)
+                for o in &outs {
+                    let _ = o.to_vec::<f32>().unwrap();
+                }
+            });
+        println!("{legacy}");
+
+        // ---- optimized path: refs + KV literal reuse + logits-only parse
+        let mut kv_lits: Vec<Literal> = kv_host
+            .iter()
+            .map(|v| runtime::literal_f32(&kv_shape, v).unwrap())
+            .collect();
+        let optimized =
+            Bencher::new(&format!("{variant} optimized decode step"))
+                .with_budget(4.0)
+                .with_iters(4, 30)
+                .run(|| {
+                    let mut args: Vec<&Literal> = Vec::with_capacity(
+                        2 + kv_lits.len() + weights.len(),
+                    );
+                    args.push(&token);
+                    args.push(&pos);
+                    args.extend(kv_lits.iter());
+                    args.extend(weights.iter());
+                    let mut outs =
+                        rt.run_literal_refs(&graph, &args).unwrap();
+                    let _ = outs[0].to_vec::<f32>().unwrap(); // logits only
+                    kv_lits = outs.split_off(1); // reuse next step
+                });
+        println!("{optimized}");
+        println!(
+            "{variant}: speedup {:.2}x (coordinator overhead removed: {:.2} ms/step)\n",
+            legacy.mean_s / optimized.mean_s,
+            (legacy.mean_s - optimized.mean_s) * 1e3
+        );
+    }
+}

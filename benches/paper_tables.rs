@@ -1,0 +1,28 @@
+//! `cargo bench --bench paper_tables` — regenerates every latency table
+//! and figure of the paper from the analytical A100 model:
+//! Fig. 1, Fig. 6, Fig. 7 (model half), Tables 4, 5 (model half), 7.
+//!
+//! Pure computation (no artifacts needed); the measured-CPU halves live
+//! in `gemm_kernels` and `engine_throughput`.
+
+fn main() {
+    odyssey::util::log::init_from_env();
+    for exp in ["fig1", "fig6", "tab4", "tab7"] {
+        println!("\n================ {exp} ================");
+        // these experiments are perfmodel-only: no artifacts required
+        odyssey::exp::run(exp, "artifacts").expect(exp);
+    }
+    // fig7/tab5 include measured halves that need artifacts; run the
+    // model halves here unconditionally and the measured halves only if
+    // artifacts exist.
+    let have_artifacts =
+        std::path::Path::new("artifacts/manifest.json").exists();
+    if have_artifacts {
+        for exp in ["fig7", "tab5"] {
+            println!("\n================ {exp} ================");
+            odyssey::exp::run(exp, "artifacts").expect(exp);
+        }
+    } else {
+        println!("\n(artifacts missing: skipped measured fig7/tab5 halves)");
+    }
+}

@@ -1,0 +1,44 @@
+//! `cargo bench --bench quantizer` — offline-tooling performance: RTN /
+//! LWC / GPTQ wall time per matrix size.  Not a paper table, but the
+//! quantization pass is part of the deploy story (PTQ cost, Sec. 6.2
+//! "low-cost benefit").
+
+use odyssey::quant::{gptq, lwc, rtn, GptqConfig};
+use odyssey::tensor::Tensor;
+use odyssey::util::Bencher;
+
+fn main() {
+    for (k, n) in [(256usize, 256usize), (256, 768), (768, 256)] {
+        let w = Tensor::randn(&[k, n], 1);
+        let x = Tensor::randn(&[256, k], 2);
+        let xt = x.transpose();
+        let h = xt.matmul(&x).map(|v| 2.0 * v / 256.0);
+
+        let r = Bencher::new(&format!("rtn_pc4       {k}x{n}"))
+            .with_budget(0.5)
+            .run(|| {
+                let _ = rtn::rtn_per_channel(&w, 4, None, None);
+            });
+        println!("{r}");
+        let r = Bencher::new(&format!("lwc_grid      {k}x{n}"))
+            .with_budget(1.5)
+            .with_iters(2, 10)
+            .run(|| {
+                let _ = lwc::lwc(&w, 4);
+            });
+        println!("{r}");
+        let r = Bencher::new(&format!("gptq          {k}x{n}"))
+            .with_budget(1.5)
+            .with_iters(2, 10)
+            .run(|| {
+                let _ = gptq::gptq_quantize(
+                    &w,
+                    &h,
+                    &GptqConfig::default(),
+                    None,
+                )
+                .unwrap();
+            });
+        println!("{r}");
+    }
+}

@@ -1,0 +1,109 @@
+//! END-TO-END VALIDATION DRIVER (recorded in EXPERIMENTS.md §E2E).
+//!
+//!     cargo run --release --example odyssey_e2e
+//!
+//! Exercises every layer on a real workload:
+//!   L1  Pallas FastGEMM + baselines (inside the AOT graphs)
+//!   L2  the LLaMA prefill/decode graphs, weights as arguments
+//!   L3  rust quantizer (LWC+GPTQ) + continuous-batching engine
+//!
+//! For each serving variant it replays the same 24-request trace
+//! (prompts sampled from the held-out corpus) and reports tokens/s,
+//! TTFT and e2e percentiles, plus a quality snapshot (held-out PPL) so
+//! speed and accuracy land in one table — the paper's whole argument.
+
+use odyssey::coordinator::{Engine, EngineOptions, GenParams, Request};
+use odyssey::exp::eval::{load_corpus, Evaluator};
+use odyssey::quant::QuantRecipe;
+use odyssey::util::XorShift;
+
+struct Row {
+    variant: &'static str,
+    tput: f64,
+    ttft_p50_ms: f64,
+    e2e_p50_ms: f64,
+    decode_tps: f64,
+    ppl: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    odyssey::util::log::init_from_env();
+    let artifacts = "artifacts";
+    let corpus = load_corpus(artifacts, "val")?;
+
+    // fixed request trace: same prompts for every variant
+    let mut rng = XorShift::new(0xE2E);
+    let trace: Vec<Vec<i32>> = (0..24)
+        .map(|_| {
+            let start = rng.range(0, (corpus.len() - 100) as i64) as usize;
+            let len = 24 + (rng.next_u64() % 48) as usize;
+            corpus[start..start + len].iter().map(|&t| t as i32).collect()
+        })
+        .collect();
+
+    let mut rows = Vec::new();
+    for (variant, recipe) in [
+        ("fp", QuantRecipe::vanilla_w4()),
+        ("w8a8", QuantRecipe::smoothquant_w8()),
+        ("w4a16", QuantRecipe::gptq_grouped(0)),
+        ("w4a8_fast", QuantRecipe::odyssey()),
+    ] {
+        println!("=== variant {variant} ===");
+        let mut engine = Engine::new(EngineOptions {
+            artifacts_dir: artifacts.into(),
+            variant: variant.into(),
+            recipe: recipe.clone(),
+            ..Default::default()
+        })?;
+        for (i, prompt) in trace.iter().enumerate() {
+            let ok = engine.submit(Request::new(
+                i as u64,
+                prompt.clone(),
+                GenParams { max_new_tokens: 16, ..Default::default() },
+            ));
+            assert!(ok, "queue must admit the trace");
+        }
+        let t0 = std::time::Instant::now();
+        let results = engine.run_until_idle()?;
+        let wall = t0.elapsed().as_secs_f64();
+        let tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
+        println!("{}", engine.metrics.report());
+        println!(
+            "wall {:.2}s, {} tokens -> {:.1} tok/s",
+            wall,
+            tokens,
+            tokens as f64 / wall
+        );
+
+        // quality snapshot through the same quantized weights
+        let mut ev = Evaluator::new(artifacts, "tiny3m", variant, &recipe)?;
+        let ppl = ev.perplexity(&corpus, 12)?;
+        rows.push(Row {
+            variant,
+            tput: tokens as f64 / wall,
+            ttft_p50_ms: engine.metrics.ttft.p50() * 1e3,
+            e2e_p50_ms: engine.metrics.total_latency.p50() * 1e3,
+            decode_tps: engine.metrics.decode_tps(),
+            ppl,
+        });
+    }
+
+    println!("\n================ E2E SUMMARY (tiny3m, CPU) ================");
+    println!(
+        "{:<12} {:>10} {:>12} {:>12} {:>12} {:>8}",
+        "variant", "tok/s", "ttft p50", "e2e p50", "decode t/s", "PPL"
+    );
+    for r in &rows {
+        println!(
+            "{:<12} {:>10.1} {:>10.1}ms {:>10.1}ms {:>12.1} {:>8.3}",
+            r.variant, r.tput, r.ttft_p50_ms, r.e2e_p50_ms, r.decode_tps,
+            r.ppl
+        );
+    }
+    println!(
+        "\nNote: CPU-measured variant ordering reflects XLA-CPU int8 \
+         emulation, not A100 tensor-core ratios; the A100 projections \
+         live in `odyssey reproduce fig6` / `cargo bench`."
+    );
+    Ok(())
+}

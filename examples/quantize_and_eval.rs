@@ -1,0 +1,65 @@
+//! Quantization-quality walkthrough: quantize the trained checkpoint with
+//! every recipe in the paper's ablation and compare weight-reconstruction
+//! MSE and held-out perplexity.
+//!
+//!     cargo run --release --example quantize_and_eval
+//!
+//! This is Table 6's story in example form: vanilla per-channel W4 is
+//! noticeably lossy; LWC claws back most of it; GPTQ compensation closes
+//! the rest of the gap.
+
+use odyssey::exp::eval::{load_corpus, Evaluator};
+use odyssey::model::{quantize_checkpoint, Checkpoint, Calibration};
+use odyssey::quant::QuantRecipe;
+use odyssey::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    odyssey::util::log::init_from_env();
+    let artifacts = "artifacts";
+    let rt = Runtime::new(artifacts)?;
+    let ckpt = Checkpoint::load(&rt.manifest, "tiny3m")?;
+    let calib = Calibration::load(&rt.manifest, "tiny3m")?;
+    let group = rt.manifest.group_size;
+    let val = load_corpus(artifacts, "val")?;
+
+    println!(
+        "{:<28} {:>14} {:>10}",
+        "recipe", "weight MSE", "val PPL"
+    );
+    for (label, recipe) in [
+        ("B: vanilla W4 per-channel", QuantRecipe::vanilla_w4()),
+        ("B + LWC", QuantRecipe::lwc_only()),
+        ("B + LWC + GPTQ (odyssey)", QuantRecipe::odyssey()),
+    ] {
+        // quantize (the rust quantizer — python is long gone)
+        let qw = quantize_checkpoint(
+            &ckpt,
+            Some(&calib),
+            &recipe,
+            "w4a8_fast",
+            group,
+        )?;
+        let mse: f64 = qw.stats.iter().map(|s| s.weight_mse).sum::<f64>()
+            / qw.stats.len() as f64;
+        // evaluate through the AOT W4A8 prefill graph
+        let mut ev =
+            Evaluator::new(artifacts, "tiny3m", "w4a8_fast", &recipe)?;
+        let ppl = ev.perplexity(&val, 16)?;
+        println!("{label:<28} {mse:>14.3e} {ppl:>10.3}");
+    }
+
+    // FP reference
+    let mut ev = Evaluator::new(
+        artifacts,
+        "tiny3m",
+        "fp",
+        &QuantRecipe::vanilla_w4(),
+    )?;
+    println!(
+        "{:<28} {:>14} {:>10.3}",
+        "FP32 reference",
+        "-",
+        ev.perplexity(&val, 16)?
+    );
+    Ok(())
+}

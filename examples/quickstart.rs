@@ -1,0 +1,49 @@
+//! Quickstart: bring up the OdysseyLLM engine on the W4A8 FastGEMM
+//! variant and generate a continuation.
+//!
+//!     make artifacts          # one-time python AOT pass
+//!     cargo run --release --example quickstart
+//!
+//! The engine loads the trained tiny-llama checkpoint, quantizes it with
+//! the paper's recipe (symmetric LWC + GPTQ, per-channel INT4 weights,
+//! dynamic per-token INT8 activations), compiles the AOT prefill/decode
+//! graphs on the PJRT CPU client, and serves the request — python never
+//! runs.
+
+use odyssey::coordinator::handle::EngineService;
+use odyssey::coordinator::{EngineOptions, GenParams};
+use odyssey::quant::QuantRecipe;
+
+fn main() -> anyhow::Result<()> {
+    odyssey::util::log::init_from_env();
+
+    // 1. spawn the engine (its own thread; handles are cloneable)
+    let svc = EngineService::spawn(EngineOptions {
+        variant: "w4a8_fast".into(),
+        recipe: QuantRecipe::odyssey(),
+        ..Default::default()
+    })?;
+
+    // 2. a prompt in the synthetic vocabulary: BOS + 'the <noun> ...'
+    let prompt = vec![1, 3, 220, 150, 3, 80, 12, 10, 3];
+
+    // 3. generate
+    let res = svc.handle.generate(
+        prompt.clone(),
+        GenParams { max_new_tokens: 24, ..Default::default() },
+    )?;
+    println!("prompt    : {prompt:?}");
+    println!("generated : {:?}", res.tokens);
+    println!(
+        "finish={:?}  ttft={:.1}ms  total={:.1}ms  ({:.1} tok/s)",
+        res.finish,
+        res.ttft_s * 1e3,
+        res.total_s * 1e3,
+        res.tokens_per_s()
+    );
+
+    // 4. engine metrics
+    println!("\n{}", svc.handle.stats()?);
+    svc.shutdown();
+    Ok(())
+}

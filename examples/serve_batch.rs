@@ -1,0 +1,90 @@
+//! Serving demo: bring up the HTTP front-end and the W4A8 engine, then
+//! hit it with concurrent clients over real sockets.
+//!
+//!     cargo run --release --example serve_batch
+//!
+//! Demonstrates the full router topology: HTTP workers parse requests on
+//! a thread pool and block on the engine handle; the engine continuously
+//! batches prefill/decode across the in-flight requests (watch the stats:
+//! decode steps < generated tokens because slots share steps).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use odyssey::coordinator::handle::EngineService;
+use odyssey::coordinator::EngineOptions;
+use odyssey::quant::QuantRecipe;
+
+fn http_post(addr: &str, path: &str, body: &str) -> anyhow::Result<String> {
+    let mut s = TcpStream::connect(addr)?;
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes())?;
+    let mut out = String::new();
+    s.read_to_string(&mut out)?;
+    Ok(out)
+}
+
+fn http_get(addr: &str, path: &str) -> anyhow::Result<String> {
+    let mut s = TcpStream::connect(addr)?;
+    s.write_all(
+        format!("GET {path} HTTP/1.1\r\nHost: localhost\r\n\r\n").as_bytes(),
+    )?;
+    let mut out = String::new();
+    s.read_to_string(&mut out)?;
+    Ok(out)
+}
+
+fn main() -> anyhow::Result<()> {
+    odyssey::util::log::init_from_env();
+    let addr = "127.0.0.1:18472";
+
+    // engine + server
+    let svc = EngineService::spawn(EngineOptions {
+        variant: "w4a8_fast".into(),
+        // vanilla recipe keeps startup fast for the demo; swap in
+        // QuantRecipe::odyssey() for the full LWC+GPTQ pipeline
+        recipe: QuantRecipe::vanilla_w4(),
+        ..Default::default()
+    })?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = svc.handle.clone();
+    let stop2 = Arc::clone(&stop);
+    let server = std::thread::spawn(move || {
+        let _ = odyssey::server::serve(addr, handle, 4, stop2);
+    });
+    std::thread::sleep(std::time::Duration::from_millis(200));
+
+    // concurrent clients
+    let t0 = std::time::Instant::now();
+    let clients: Vec<_> = (0..6)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let body = format!(
+                    r#"{{"tokens": [1, 3, {}, {}, 3, 80], "max_new_tokens": 12}}"#,
+                    140 + i,
+                    150 + i
+                );
+                http_post(addr, "/generate", &body)
+            })
+        })
+        .collect();
+    for (i, c) in clients.into_iter().enumerate() {
+        let resp = c.join().unwrap()?;
+        let body = resp.split("\r\n\r\n").nth(1).unwrap_or("");
+        println!("client {i}: {body}");
+    }
+    println!("\n6 concurrent requests in {:.2}s", t0.elapsed().as_secs_f64());
+
+    let stats = http_get(addr, "/stats")?;
+    println!("\n/stats:\n{}", stats.split("\r\n\r\n").nth(1).unwrap_or(""));
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = server.join();
+    svc.shutdown();
+    Ok(())
+}

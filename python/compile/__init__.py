@@ -1,0 +1,2 @@
+"""Build-time compile package: L1 kernels, L2 model, quantization
+reference, AOT export.  Never imported at runtime by the rust engine."""

@@ -1,0 +1,271 @@
+"""AOT driver: the ONE-TIME python pass producing everything in artifacts/.
+
+    python -m compile.aot --outdir ../artifacts
+
+Steps (each skipped when its outputs already exist, so `make artifacts`
+is an incremental no-op):
+
+  1. synthetic corpus + eval tasks            (data.py)
+  2. tiny-llama checkpoints, trained on 1.    (train.py)
+  3. calibration hessians + act stats         (calib.py)
+  4. rust cross-check goldens                 (goldens.py)
+  5. HLO text graphs: prefill/decode per (model, variant, batch bucket)
+     plus standalone GEMM kernel graphs       (model.py, kernels/*)
+  6. manifest.json describing every graph's parameter/output interface
+
+Interchange is HLO TEXT (see hlo.py for why).  After this script runs the
+rust binary is fully self-contained.
+"""
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import calib, configs, data, goldens, hlo, model, stio, train
+from .configs import ModelConfig
+
+DT = {"float32": "f32", "int8": "s8", "uint8": "u8", "int32": "s32"}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _entry(kind, path, params, outputs, **meta):
+    e = {"kind": kind, "path": os.path.basename(path),
+         "params": params, "outputs": outputs}
+    e.update(meta)
+    return e
+
+
+def _param_list(names_shapes_dtypes):
+    return [{"name": n, "shape": [int(x) for x in s],
+             "dtype": DT[str(np.dtype(d))]}
+            for (n, s, d) in names_shapes_dtypes]
+
+
+def export_model_graphs(cfg: ModelConfig, variants, prefill_batches,
+                        decode_batches, outdir, manifest):
+    S = configs.PREFILL_SEQ
+    for variant in variants:
+        wents = model.flat_param_entries(cfg, variant)
+        w_sds = [_sds(s, d) for (_n, s, d) in wents]
+        for B in prefill_batches:
+            name = f"{cfg.name}_{variant}_prefill_b{B}"
+            path = os.path.join(outdir, f"{name}.hlo.txt")
+            if not os.path.exists(path):
+                fn = model.make_prefill(cfg, variant)
+                args = (_sds((B, S), jnp.int32), _sds((B,), jnp.int32),
+                        *w_sds)
+                hlo.export(fn, args, path)
+                print(f"  lowered {name}", flush=True)
+            params = _param_list(
+                [("tokens", (B, S), np.int32), ("length", (B,), np.int32)]
+                + wents)
+            outs = [{"name": "logits", "shape": [B, S, cfg.vocab],
+                     "dtype": "f32"}]
+            for pfx in ("k_cache", "v_cache"):
+                for i in range(cfg.n_layers):
+                    outs.append({"name": f"{pfx}.{i}",
+                                 "shape": [B, cfg.n_heads, cfg.max_seq,
+                                           cfg.head_dim], "dtype": "f32"})
+            manifest["graphs"][name] = _entry(
+                "prefill", path, params, outs, model=cfg.name,
+                variant=variant, batch=B, seq=S)
+        for B in decode_batches:
+            name = f"{cfg.name}_{variant}_decode_b{B}"
+            path = os.path.join(outdir, f"{name}.hlo.txt")
+            kv = [_sds(s, jnp.float32) for s in model.kv_shapes(cfg, B)]
+            if not os.path.exists(path):
+                fn = model.make_decode(cfg, variant)
+                args = (_sds((B,), jnp.int32), _sds((B,), jnp.int32),
+                        *kv, *w_sds)
+                hlo.export(fn, args, path)
+                print(f"  lowered {name}", flush=True)
+            kv_params = \
+                [(f"k_cache.{i}", kv[i].shape, np.float32)
+                 for i in range(cfg.n_layers)] + \
+                [(f"v_cache.{i}", kv[i].shape, np.float32)
+                 for i in range(cfg.n_layers)]
+            params = _param_list(
+                [("token", (B,), np.int32), ("pos", (B,), np.int32)]
+                + kv_params + wents)
+            outs = [{"name": "logits", "shape": [B, cfg.vocab],
+                     "dtype": "f32"}]
+            for pfx in ("k_cache", "v_cache"):
+                for i in range(cfg.n_layers):
+                    outs.append({"name": f"{pfx}.{i}",
+                                 "shape": list(kv[i].shape),
+                                 "dtype": "f32"})
+            manifest["graphs"][name] = _entry(
+                "decode", path, params, outs, model=cfg.name,
+                variant=variant, batch=B, seq=cfg.max_seq)
+
+
+def _gemm_sig(variant, M, N, K, group):
+    g = max(K // group, 1)
+    if variant == "fp":
+        return [("x", (M, K), np.float32), ("w", (K, N), np.float32)]
+    if variant == "w8a8":
+        return [("xq", (M, K), np.int8), ("s_a", (M,), np.float32),
+                ("wq", (K, N), np.int8), ("s_w", (N,), np.float32)]
+    if variant in ("w4a8_fast", "w4a8_unfused"):
+        return [("xq", (M, K), np.int8), ("s_a", (M,), np.float32),
+                ("wp", (K // 2, N), np.uint8), ("s_w", (N,), np.float32)]
+    if variant == "w4a8_group":
+        return [("xq", (M, K), np.int8), ("s_a", (M,), np.float32),
+                ("wq", (K, N), np.int8), ("s_g", (g, N), np.float32)]
+    if variant == "w4a8_asym":
+        return [("xq", (M, K), np.int8), ("s_a", (M,), np.float32),
+                ("wu", (K, N), np.uint8), ("s_w", (N,), np.float32),
+                ("z", (N,), np.int32)]
+    if variant == "w4a16":
+        return [("x", (M, K), np.float32), ("wq", (K, N), np.int8),
+                ("s_g", (g, N), np.float32)]
+    raise ValueError(variant)
+
+
+def _gemm_fn(variant, group):
+    from .kernels import (asym, fastgemm, finegrained, fpgemm, w4a16, w8a8)
+    if variant == "fp":
+        return lambda x, w: (fpgemm.gemm_fp(x, w),)
+    if variant == "w8a8":
+        return lambda xq, sa, wq, sw: (w8a8.gemm_w8a8(xq, sa, wq, sw),)
+    if variant == "w4a8_fast":
+        return lambda xq, sa, wp, sw: (
+            fastgemm.gemm_w4a8_fast(xq, sa, wp, sw),)
+    if variant == "w4a8_unfused":
+        return lambda xq, sa, wp, sw: (
+            fpgemm.gemm_w4a8_unfused(xq, sa, wp, sw),)
+    if variant == "w4a8_group":
+        return lambda xq, sa, wq, sg: (
+            finegrained.gemm_w4a8_grouped(xq, sa, wq, sg, group),)
+    if variant == "w4a8_asym":
+        return lambda xq, sa, wu, sw, z: (
+            asym.gemm_w4a8_asym(xq, sa, wu, sw, z),)
+    if variant == "w4a16":
+        return lambda x, wq, sg: (w4a16.gemm_w4a16(x, wq, sg, group),)
+    raise ValueError(variant)
+
+
+# which variants get standalone GEMM graphs per shape set
+GEMM_EXPORTS = {
+    # fig7 / tab5 measured: the three W4A8 paradigms + baselines at the
+    # paper's LLaMA-2-70B TP4 shapes
+    "paper": ("fp", "w8a8", "w4a8_fast", "w4a8_group", "w4a8_asym",
+              "w4a16"),
+    # fusion ablation (Fig. 4 b vs c) + quick benches at CPU-scaled shapes
+    "cpu": ("fp", "w8a8", "w4a8_fast", "w4a8_unfused", "w4a8_group",
+            "w4a8_asym", "w4a16"),
+}
+
+
+def export_gemm_graphs(outdir, manifest):
+    sets = {
+        "paper": (configs.PAPER_GEMM_NK, 128),
+        "cpu": (configs.CPU_GEMM_NK, configs.GROUP_SIZE),
+    }
+    for set_name, (nks, group) in sets.items():
+        for variant in GEMM_EXPORTS[set_name]:
+            for (N, K) in nks:
+                for M in configs.PAPER_GEMM_MS:
+                    name = f"gemm_{variant}_{set_name}_m{M}n{N}k{K}"
+                    path = os.path.join(outdir, f"{name}.hlo.txt")
+                    sig = _gemm_sig(variant, M, N, K, group)
+                    if not os.path.exists(path):
+                        fn = _gemm_fn(variant, group)
+                        args = tuple(_sds(s, d) for (_n, s, d) in sig)
+                        hlo.export(fn, args, path)
+                        print(f"  lowered {name}", flush=True)
+                    manifest["graphs"][name] = _entry(
+                        "gemm", path, _param_list(sig),
+                        [{"name": "out", "shape": [M, N], "dtype": "f32"}],
+                        variant=variant, m=M, n=N, k=K, group=group,
+                        shape_set=set_name)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=700)
+    ap.add_argument("--steps9m", type=int, default=350)
+    ap.add_argument("--skip-9m", action="store_true")
+    args = ap.parse_args()
+    outdir = args.outdir
+    os.makedirs(outdir, exist_ok=True)
+
+    # 1. corpus + tasks ----------------------------------------------------
+    if not os.path.exists(os.path.join(outdir, "tasks.json")):
+        print("[aot] generating synthetic corpus + tasks", flush=True)
+        data.write_all(outdir)
+    train_tok = np.fromfile(os.path.join(outdir, "corpus_train.bin"),
+                            dtype=np.uint16)
+    val_tok = np.fromfile(os.path.join(outdir, "corpus_val.bin"),
+                          dtype=np.uint16)
+
+    # 2. train checkpoints ---------------------------------------------------
+    model_list = ["tiny3m"] + ([] if args.skip_9m else ["tiny9m"])
+    for mname in model_list:
+        cfg = configs.MODELS[mname]
+        ck = os.path.join(outdir, f"{cfg.name}.safetensors")
+        if not os.path.exists(ck):
+            steps = args.steps if mname == "tiny3m" else args.steps9m
+            print(f"[aot] training {mname} ({cfg.n_params()/1e6:.1f}M "
+                  f"params, {steps} steps)", flush=True)
+            train.train(cfg, train_tok, val_tok, steps=steps, outdir=outdir)
+
+    # 3. calibration ---------------------------------------------------------
+    for mname in model_list:
+        cfg = configs.MODELS[mname]
+        hp = os.path.join(outdir, f"hessians_{cfg.name}.safetensors")
+        if not os.path.exists(hp):
+            print(f"[aot] calibrating {mname} (128 seqs)", flush=True)
+            ws = {k: jnp.asarray(v) for k, v in stio.load(
+                os.path.join(outdir, f"{cfg.name}.safetensors")).items()}
+            ct = calib.calib_sequences(train_tok)
+            stats = calib.run_calibration(cfg, ws, ct)
+            calib.save_calibration(cfg, stats, outdir)
+
+    # 4. goldens --------------------------------------------------------------
+    if not os.path.exists(os.path.join(outdir, "goldens.safetensors")):
+        print("[aot] emitting rust cross-check goldens", flush=True)
+        goldens.save(outdir)
+
+    # 5./6. HLO graphs + manifest ---------------------------------------------
+    manifest = {"group_size": configs.GROUP_SIZE, "graphs": {},
+                "models": {}}
+    for mname in model_list:
+        cfg = configs.MODELS[mname]
+        manifest["models"][mname] = {
+            "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "vocab": cfg.vocab,
+            "max_seq": cfg.max_seq, "head_dim": cfg.head_dim,
+            "weights": f"{cfg.name}.safetensors",
+            "hessians": f"hessians_{cfg.name}.safetensors",
+            "n_params": cfg.n_params(),
+        }
+    print("[aot] lowering model graphs", flush=True)
+    cfg3 = configs.MODELS["tiny3m"]
+    export_model_graphs(cfg3, configs.VARIANTS, configs.PREFILL_BATCHES,
+                        configs.DECODE_BATCHES, outdir, manifest)
+    if not args.skip_9m:
+        cfg9 = configs.MODELS["tiny9m"]
+        export_model_graphs(cfg9, ("fp", "w8a8", "w4a8_fast"),
+                            (1, 4), (1,), outdir, manifest)
+    print("[aot] lowering GEMM kernel graphs", flush=True)
+    export_gemm_graphs(outdir, manifest)
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest with {len(manifest['graphs'])} graphs")
+    with open(os.path.join(outdir, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

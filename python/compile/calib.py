@@ -1,0 +1,105 @@
+"""Calibration pass: per-linear input Hessians + activation statistics.
+
+The paper calibrates on 128 random C4 sequences; we use 128 sequences of
+the synthetic corpus.  For every linear-group input tap (q/k/v share one,
+gate/up share one) we accumulate
+
+  H        = 2 * sum_t x_t x_t^T / T          (GPTQ, Eq. 10's H_F)
+  absmax   = max_t |x_t|   per input channel  (SmoothQuant)
+  absmean  = mean_t |x_t|  per input channel  (AWQ)
+
+and store them in artifacts/hessians_<model>.safetensors for the rust
+quantizer (python never runs at request/quantize time on the rust side).
+"""
+
+import os
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from . import configs, model, stio
+from .configs import ModelConfig
+
+# tap name -> matrices consuming that input
+TAP_CONSUMERS = {
+    "attn_in": ("wq", "wk", "wv"),
+    "attn_out_in": ("wo",),
+    "mlp_in": ("w_gate", "w_up"),
+    "mlp_down_in": ("w_down",),
+}
+
+
+def calib_sequences(tokens: np.ndarray, n_seq: int = 128, seq: int = 64,
+                    seed: int = 11):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, len(tokens) - seq, size=n_seq)
+    return np.stack([tokens[i:i + seq] for i in idx]).astype(np.int32)
+
+
+def run_calibration(cfg: ModelConfig, ws: dict, calib_tokens: np.ndarray,
+                    batch: int = 8):
+    """Returns dict name -> np.ndarray with hessian/absmax/absmean/sample
+    entries per layer tap (+ lm_head_in)."""
+    flat = model.quantize_weights(cfg, ws, "fp")
+    stats = {}
+
+    def acc(name, x):
+        x = np.asarray(x, np.float64)
+        e = stats.setdefault(name, {
+            "h": np.zeros((x.shape[1], x.shape[1])),
+            "absmax": np.zeros(x.shape[1]),
+            "abssum": np.zeros(x.shape[1]),
+            "count": 0, "sample": None})
+        e["h"] += x.T @ x
+        e["absmax"] = np.maximum(e["absmax"], np.abs(x).max(axis=0))
+        e["abssum"] += np.abs(x).sum(axis=0)
+        if e["sample"] is None:
+            e["sample"] = x[:64].astype(np.float32)
+        e["count"] += x.shape[0]
+
+    n_seq, seq = calib_tokens.shape
+    for b0 in range(0, n_seq, batch):
+        toks = jnp.asarray(calib_tokens[b0:b0 + batch])
+        length = jnp.full((toks.shape[0],), seq, jnp.int32)
+        (_logits, _ks, _vs), taps = model.prefill(
+            cfg, "fp", toks, length, *flat, use_ref=True, collect_taps=True)
+        # taps arrive layer-by-layer: 4 per layer, then lm_head_in
+        ti = 0
+        for layer in range(cfg.n_layers):
+            for tap_name in ("attn_in", "attn_out_in", "mlp_in",
+                             "mlp_down_in"):
+                name, x = taps[ti]
+                assert name == tap_name
+                acc(f"layers.{layer}.{tap_name}", x)
+                ti += 1
+        name, x = taps[ti]
+        assert name == "lm_head_in"
+        acc("lm_head_in", x)
+
+    out = {}
+    for name, e in stats.items():
+        out[f"{name}.hessian"] = (2.0 * e["h"] / e["count"]).astype(
+            np.float32)
+        out[f"{name}.absmax"] = e["absmax"].astype(np.float32)
+        out[f"{name}.absmean"] = (e["abssum"] / e["count"]).astype(
+            np.float32)
+        out[f"{name}.sample"] = e["sample"]
+    return out
+
+
+def save_calibration(cfg: ModelConfig, stats: dict,
+                     outdir: str = "../artifacts"):
+    os.makedirs(outdir, exist_ok=True)
+    stio.save(os.path.join(outdir, f"hessians_{cfg.name}.safetensors"),
+              stats)
+
+
+def matrix_tap(name: str) -> str:
+    """Canonical matrix name -> its calibration tap name."""
+    leaf = name.split(".")[-1]
+    for tap, mats in TAP_CONSUMERS.items():
+        if leaf in mats:
+            prefix = name.rsplit(".", 1)[0]
+            return f"{prefix}.{tap}"
+    raise KeyError(name)

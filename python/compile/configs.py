@@ -1,0 +1,102 @@
+"""Model / variant / export configuration shared by L2 (python) and L3 (rust).
+
+The canonical weight ordering defined here is the contract the rust side
+relies on when assembling PJRT executable arguments; aot.py additionally
+writes artifacts/manifest.json so rust never has to re-derive it.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        per_layer = 4 * d * d + 3 * d * f + 2 * d
+        return self.n_layers * per_layer + 2 * v * d + d
+
+
+# LLaMA-architecture tiny models trained at build time (substitutes for the
+# paper's LLaMA-1/2 7B..70B — see DESIGN.md substitution index).  Dims keep
+# every K/N divisible by 128 where possible so kernel tiles stay MXU-shaped.
+MODELS = {
+    "tiny3m": ModelConfig("tiny3m", d_model=256, n_layers=4, n_heads=8,
+                          d_ff=768, vocab=512, max_seq=256),
+    "tiny9m": ModelConfig("tiny9m", d_model=384, n_layers=6, n_heads=8,
+                          d_ff=1152, vocab=512, max_seq=256),
+}
+
+DEFAULT_MODEL = "tiny3m"
+
+# GEMM bit-width variants (see kernels/__init__.py for the kernel mapping).
+VARIANTS = ("fp", "w8a8", "w4a8_fast", "w4a8_group", "w4a8_asym", "w4a16")
+
+# group size for the fine-grained baselines ("g128" in the paper; scaled to
+# the tiny models' K so there are >= 2 groups per channel).
+GROUP_SIZE = 64
+
+# serving buckets exported by aot.py
+PREFILL_BATCHES = (1, 4)
+DECODE_BATCHES = (1, 4)
+PREFILL_SEQ = 128
+
+# paper Table 5 / Fig. 7 GEMM shapes: (N, K) pairs; M=1024 context stage,
+# M=1 self-decode stage.
+PAPER_GEMM_NK = ((4096, 4096), (1024, 8192), (11088, 4096), (5120, 5120))
+PAPER_GEMM_MS = (1024, 1)
+# CPU-scaled shapes for quick measured benches (same aspect ratios).
+CPU_GEMM_NK = ((1024, 1024), (256, 2048), (2816, 1024), (1280, 1280))
+
+
+@dataclass
+class LayerWeights:
+    """Canonical per-layer weight names, in argument order."""
+    names: tuple = ("attn_norm", "wq", "wk", "wv", "wo",
+                    "mlp_norm", "w_gate", "w_up", "w_down")
+
+
+# Matrices that get quantized (per layer); norms/embeddings stay f32.
+LAYER_MATRICES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+TAIL_WEIGHTS = ("norm_f", "embed", "lm_head")
+
+
+def weight_names(cfg: ModelConfig):
+    """Flat canonical weight name list: layers then tail."""
+    out = []
+    for i in range(cfg.n_layers):
+        for n in LayerWeights.names:
+            out.append(f"layers.{i}.{n}")
+    out.extend(TAIL_WEIGHTS)
+    return out
+
+
+def matrix_shape(cfg: ModelConfig, name: str):
+    """(K, N) shape of a quantizable matrix, by canonical name."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    leaf = name.split(".")[-1]
+    return {
+        "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+        "w_gate": (d, f), "w_up": (d, f), "w_down": (f, d),
+        "embed": (v, d), "lm_head": (d, v),
+    }[leaf]
+
+
+def quantized_matrix_names(cfg: ModelConfig):
+    """Canonical names of every matrix the quantizer touches."""
+    return [f"layers.{i}.{m}" for i in range(cfg.n_layers)
+            for m in LAYER_MATRICES]

@@ -1,0 +1,212 @@
+"""Synthetic corpus + evaluation-task generators.
+
+Stand-in for the paper's LAMBADA / C4 / WikiText2 / CommonSenseQA / MMLU
+(none downloadable here — see DESIGN.md substitution index).  The corpus is
+a probabilistic template grammar with long-range dependencies so that
+
+  * held-out perplexity is meaningful (C4/WikiText analogue),
+  * a LAMBADA-style cloze exists: the final word of a paragraph is
+    recoverable only from earlier context (coreference copy),
+  * multiple-choice tasks exist whose wrong answers violate grammar-class
+    constraints (CommonSense-QA analogue),
+  * a few-shot category task exists (MMLU analogue).
+
+Everything is deterministic given the seed; the token stream and task files
+are written into artifacts/ for the rust evaluator.
+"""
+
+import json
+import os
+
+import numpy as np
+
+PAD, BOS, EOS = 0, 1, 2
+# token id blocks (vocab 512)
+THE, A, AND, THEN, DOT, COMMA, SO, BUT, WHO, ISA, QMARK = range(3, 14)
+N_NOUN, N_VERB, N_ADJ, N_ADV, N_CAT = 120, 80, 60, 24, 4
+NOUN0 = 16
+VERB0 = NOUN0 + N_NOUN          # 136
+ADJ0 = VERB0 + N_VERB           # 216
+ADV0 = ADJ0 + N_ADJ             # 276
+CAT0 = ADV0 + N_ADV             # 300
+VOCAB = 512
+
+N_CLASS = 8                      # noun/verb agreement classes
+
+
+def noun_class(n):
+    return n % N_CLASS
+
+
+def verb_class(v):
+    return v % N_CLASS
+
+
+def noun_category(n):
+    return n % N_CAT
+
+
+class Grammar:
+    """Template grammar with agreement constraints."""
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+        # each verb class accepts subjects of one noun class and objects of
+        # another (fixed by seed) — the "commonsense" structure.
+        r = np.random.default_rng(1234)
+        self.verb_subj = r.integers(0, N_CLASS, size=N_CLASS)
+        self.verb_obj = r.integers(0, N_CLASS, size=N_CLASS)
+
+    def _noun(self, cls=None):
+        while True:
+            n = int(self.rng.integers(0, N_NOUN))
+            if cls is None or noun_class(n) == cls:
+                return NOUN0 + n
+
+    def _verb(self, cls=None):
+        while True:
+            v = int(self.rng.integers(0, N_VERB))
+            if cls is None or verb_class(v) == cls:
+                return VERB0 + v
+
+    def sentence(self, subj=None, allow_adj=True):
+        """One grammatical sentence; returns (tokens, subject_token)."""
+        rng = self.rng
+        if subj is None:
+            subj = self._noun()
+        scls = noun_class(subj - NOUN0)
+        # verb whose subject class matches
+        vcands = [v for v in range(N_CLASS) if self.verb_subj[v] == scls]
+        vcls = int(rng.choice(vcands)) if vcands else scls
+        verb = self._verb(vcls)
+        obj = self._noun(int(self.verb_obj[vcls]))
+        toks = [THE]
+        if allow_adj and rng.random() < 0.4:
+            toks.append(ADJ0 + int(rng.integers(0, N_ADJ)))
+        toks += [subj, verb, THE, obj]
+        if rng.random() < 0.25:
+            toks.append(ADV0 + int(rng.integers(0, N_ADV)))
+        toks.append(DOT)
+        return toks, subj
+
+    def paragraph(self):
+        """2-3 sentences; final sentence repeats the first subject after
+        'then the' — the LAMBADA-style long-range copy."""
+        toks = [BOS]
+        first, subj0 = self.sentence()
+        toks += first
+        for _ in range(int(self.rng.integers(0, 2))):
+            s, _ = self.sentence()
+            toks += s
+        # coreferent final sentence: 'then the SUBJ ...' with no adjective,
+        # so the copy target always follows the THEN-THE bigram (a clean
+        # induction-head pattern the LAMBADA-style cloze probes)
+        s, _ = self.sentence(subj=subj0, allow_adj=False)
+        toks += [THEN] + s
+        toks.append(EOS)
+        return toks, subj0
+
+    def fact(self, noun=None):
+        """'the NOUN isa CAT .' — the MMLU-style category fact."""
+        if noun is None:
+            noun = NOUN0 + int(self.rng.integers(0, N_NOUN))
+        cat = CAT0 + noun_category(noun - NOUN0)
+        return [THE, noun, ISA, cat, DOT], noun, cat
+
+
+def gen_corpus(n_tokens: int, seed: int = 0) -> np.ndarray:
+    g = Grammar(seed)
+    out = []
+    while len(out) < n_tokens:
+        if g.rng.random() < 0.15:
+            f, _, _ = g.fact()
+            out += [BOS] + f + [EOS]
+        else:
+            p, _ = g.paragraph()
+            out += p
+    return np.asarray(out[:n_tokens], dtype=np.uint16)
+
+
+def gen_cloze(n: int, seed: int = 100):
+    """LAMBADA analogue: context ends right before the repeated subject.
+
+    Returns list of {ctx, target} — candidates are all nouns implicitly.
+    """
+    g = Grammar(seed)
+    tasks = []
+    while len(tasks) < n:
+        p, subj = g.paragraph()
+        # target = last occurrence of subj (in the final sentence)
+        idxs = [i for i, t in enumerate(p) if t == subj]
+        if len(idxs) < 2:
+            continue
+        cut = idxs[-1]
+        if cut < 8 or cut > 120:
+            continue
+        tasks.append({"ctx": [int(t) for t in p[:cut]], "target": int(subj)})
+    return tasks
+
+
+def gen_mcq(n: int, seed: int = 200):
+    """CommonSenseQA analogue: pick the object noun of the right class;
+    distractors come from wrong classes."""
+    g = Grammar(seed)
+    tasks = []
+    while len(tasks) < n:
+        toks, subj = g.sentence()
+        # find object position: the token after the second THE
+        the_idx = [i for i, t in enumerate(toks) if t == THE]
+        if len(the_idx) < 2:
+            continue
+        oi = the_idx[1] + 1
+        obj = toks[oi]
+        ocls = noun_class(obj - NOUN0)
+        wrong = []
+        while len(wrong) < 3:
+            cand = g._noun()
+            if noun_class(cand - NOUN0) != ocls and cand != obj:
+                wrong.append(cand)
+        cands = [int(obj)] + [int(w) for w in wrong]
+        order = g.rng.permutation(4)
+        cands = [cands[i] for i in order]
+        answer = int(np.where(order == 0)[0][0])
+        tasks.append({"ctx": [BOS] + [int(t) for t in toks[:oi]],
+                      "candidates": cands, "answer": answer})
+    return tasks
+
+
+def gen_fewshot(n: int, shots: int = 3, seed: int = 300):
+    """MMLU analogue: k-shot category facts, then query 'the NOUN isa ?'."""
+    g = Grammar(seed)
+    tasks = []
+    for _ in range(n):
+        ctx = [BOS]
+        for _ in range(shots):
+            f, _, _ = g.fact()
+            ctx += f
+        f, noun, cat = g.fact()
+        ctx += f[:3]                      # the NOUN isa
+        cands = [CAT0 + c for c in range(N_CAT)]
+        tasks.append({"ctx": [int(t) for t in ctx],
+                      "candidates": cands,
+                      "answer": int(cat - CAT0)})
+    return tasks
+
+
+def write_all(outdir: str, train_tokens: int = 600_000,
+              val_tokens: int = 60_000, seed: int = 0):
+    os.makedirs(outdir, exist_ok=True)
+    train = gen_corpus(train_tokens, seed=seed)
+    val = gen_corpus(val_tokens, seed=seed + 1)
+    train.tofile(os.path.join(outdir, "corpus_train.bin"))
+    val.tofile(os.path.join(outdir, "corpus_val.bin"))
+    tasks = {
+        "cloze": gen_cloze(400),
+        "mcq": gen_mcq(400),
+        "fewshot": gen_fewshot(300),
+        "vocab": VOCAB,
+        "noun_range": [NOUN0, NOUN0 + N_NOUN],
+    }
+    with open(os.path.join(outdir, "tasks.json"), "w") as f:
+        json.dump(tasks, f)
+    return train, val, tasks

@@ -1,0 +1,103 @@
+"""Golden-file emitter: python-reference results the rust unit tests
+replay bit-for-bit (ints) / to 1e-5 (floats).
+
+Everything is derived from fixed seeds so `make artifacts` is
+deterministic.  Output: artifacts/goldens.safetensors.
+"""
+
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import quant, stio
+from .kernels import ref
+
+
+def build_goldens(seed: int = 42) -> dict:
+    rng = np.random.default_rng(seed)
+    g = {}
+
+    K, N = 32, 16
+    w = rng.normal(size=(K, N)).astype(np.float32)
+    x = rng.normal(size=(64, K)).astype(np.float32)
+    # inject a few outlier channels like real LLM activations
+    x[:, 3] *= 8.0
+    x[:, 17] *= 5.0
+    g["in.w"] = w
+    g["in.x"] = x
+
+    # RTN per-channel 4/8 bit
+    for bits in (4, 8):
+        q, s = quant.rtn_per_channel(w, bits)
+        g[f"rtn_pc{bits}.q"] = q
+        g[f"rtn_pc{bits}.s"] = s
+    # RTN per-group
+    qg, sg = quant.rtn_per_group(w, 8, 4)
+    g["rtn_g8.q"] = qg
+    g["rtn_g8.s"] = sg
+
+    # LWC grid search
+    gamma, beta = quant.lwc_grid_search(w, 4)
+    g["lwc.gamma"] = gamma
+    g["lwc.beta"] = beta
+    qlwc, slwc = quant.rtn_per_channel(w, 4, gamma, beta)
+    g["lwc.q"] = qlwc
+    g["lwc.s"] = slwc
+
+    # GPTQ (pc scales fixed by LWC) and GPTQ-ro
+    H = (2.0 * x.T @ x / x.shape[0]).astype(np.float32)
+    g["in.h"] = H
+    qq, qs, _ = quant.gptq_quantize(w, H, 4, scale=slwc)
+    g["gptq.q"] = qq
+    g["gptq.s"] = qs
+    qr, rs, perm = quant.gptq_quantize(w, H, 4, act_order=True)
+    g["gptq_ro.q"] = qr
+    g["gptq_ro.s"] = rs
+    g["gptq_ro.perm"] = perm.astype(np.int64)
+    qgrp, sgrp, _ = quant.gptq_quantize(w, H, 4, group=8)
+    g["gptq_g8.q"] = qgrp
+    g["gptq_g8.s"] = sgrp
+
+    # packing
+    p = np.asarray(ref.pack_int4(jnp.asarray(qlwc)))
+    g["pack.p"] = p
+    g["pack.unpacked_x16"] = np.asarray(ref.unpack_int4_x16(jnp.asarray(p)))
+
+    # SmoothQuant / AWQ scales
+    absmax = np.abs(x).max(axis=0).astype(np.float32)
+    absmean = np.abs(x).mean(axis=0).astype(np.float32)
+    g["in.absmax"] = absmax
+    g["in.absmean"] = absmean
+    g["sq.scales"] = quant.smoothquant_scales(absmax, w, 0.5)
+    g["awq.scales"] = quant.awq_scales(absmean, w, x, bits=4, group=8)
+
+    # activation quant
+    xq, s_a = ref.quant_act_per_token(jnp.asarray(x[:8]))
+    g["actq.q"] = np.asarray(xq)
+    g["actq.s"] = np.asarray(s_a)
+
+    # GEMM I/O per variant (M=8)
+    xs = jnp.asarray(x[:8])
+    xq8, sa8 = ref.quant_act_per_token(xs)
+    q8, s8 = quant.rtn_per_channel(w, 8)
+    g["gemm_w8a8.out"] = np.asarray(
+        ref.gemm_w8a8(xq8, sa8, jnp.asarray(q8), jnp.asarray(s8)))
+    g["gemm_fast.out"] = np.asarray(
+        ref.gemm_w4a8_fast(xq8, sa8, jnp.asarray(p), jnp.asarray(slwc)))
+    g["gemm_group.out"] = np.asarray(
+        ref.gemm_w4a8_grouped(xq8, sa8, jnp.asarray(qg), jnp.asarray(sg), 8))
+    uu, us, uz = ref.quant_weight_per_channel_asym(jnp.asarray(w), 4)
+    g["asym.u"] = np.asarray(uu)
+    g["asym.s"] = np.asarray(us)
+    g["asym.z"] = np.asarray(uz)
+    g["gemm_asym.out"] = np.asarray(ref.gemm_w4a8_asym(xq8, sa8, uu, us, uz))
+    g["gemm_w4a16.out"] = np.asarray(
+        ref.gemm_w4a16(xs, jnp.asarray(qg), jnp.asarray(sg), 8))
+    g["gemm_fp.out"] = np.asarray(ref.gemm_fp(xs, jnp.asarray(w)))
+    return g
+
+
+def save(outdir: str):
+    os.makedirs(outdir, exist_ok=True)
+    stio.save(os.path.join(outdir, "goldens.safetensors"), build_goldens())

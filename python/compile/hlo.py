@@ -1,0 +1,48 @@
+"""HLO-text lowering helper — the L2 -> L3 interchange format.
+
+HLO *text* (not serialized HloModuleProto) is the only format the rust
+side's xla_extension 0.5.1 accepts: jax >= 0.5 emits protos with 64-bit
+instruction ids which old XLA rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly.  Always lower with
+return_tuple=True and unwrap with `to_tuple()` on the rust side.
+"""
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax `Lowered` to XLA HLO text via stablehlo.
+
+    `print_large_constants=True` is load-bearing: the default printer
+    elides big constants as `{...}`, which the old text parser silently
+    reads back as ZEROS (e.g. every arange/iota folded at trace time).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_to_text(fn, *example_args) -> str:
+    """jit + lower `fn` at the given example args and emit HLO text."""
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def export(fn, example_args, out_path: str) -> dict:
+    """Lower and write HLO text; return a manifest entry describing the
+    parameter/output interface (shapes, dtypes, order) for the rust side."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    flat, _ = jax.tree_util.tree_flatten(example_args)
+    out_tree = jax.eval_shape(fn, *example_args)
+    out_flat, _ = jax.tree_util.tree_flatten(out_tree)
+    return {
+        "path": out_path,
+        "params": [{"shape": list(a.shape), "dtype": str(a.dtype)}
+                   for a in flat],
+        "outputs": [{"shape": list(o.shape), "dtype": str(o.dtype)}
+                    for o in out_flat],
+    }

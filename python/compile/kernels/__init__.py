@@ -1,0 +1,22 @@
+"""L1 — Pallas GEMM kernels for every bit-width paradigm in the paper.
+
+variant registry used by model.py / aot.py / the rust manifest:
+
+  fp         — Fig. 2 FP16 baseline (f32 on this host)       fpgemm.gemm_fp
+  w8a8       — Fig. 2(c) SmoothQuant layout                  w8a8.gemm_w8a8
+  w4a8_fast  — the paper's FastGEMM (Fig. 4(c))              fastgemm.gemm_w4a8_fast
+  w4a8_group — Fig. 2(b) fine-grained baseline               finegrained.gemm_w4a8_grouped
+  w4a8_asym  — 'Asym GEMM' baseline (Fig. 7)                 asym.gemm_w4a8_asym
+  w4a16      — Fig. 2(a) GPTQ/AWQ deploy style               w4a16.gemm_w4a16
+  w4a8_unfused — Fig. 4(b) two-kernel vanilla W4A8           fpgemm.gemm_w4a8_unfused
+"""
+
+from . import ref                       # noqa: F401
+from .fastgemm import gemm_w4a8_fast    # noqa: F401
+from .w8a8 import gemm_w8a8             # noqa: F401
+from .finegrained import gemm_w4a8_grouped  # noqa: F401
+from .asym import gemm_w4a8_asym        # noqa: F401
+from .w4a16 import gemm_w4a16           # noqa: F401
+from .fpgemm import gemm_fp, gemm_w4a8_unfused, convert_sint4_to_s8x16  # noqa: F401
+
+VARIANTS = ("fp", "w8a8", "w4a8_fast", "w4a8_group", "w4a8_asym", "w4a16")

@@ -1,0 +1,54 @@
+"""Asymmetric W4A8 GEMM kernel — the paper's 'Asym GEMM' baseline (Fig. 7).
+
+Zero-point handling forces the s8 subtraction modern GPUs do not provide
+(PTX has no sub.s8); the correction term must be computed in s32.  We model
+it faithfully: u4 weights GEMM in s8, then a widened zero-point correction
+`z * rowsum(x)` subtracted in s32 before the per-channel dequant.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _kernel(xq_ref, sa_ref, wu_ref, sw_ref, z_ref, o_ref):
+    xq = xq_ref[...]
+    acc = jax.lax.dot_general(xq, wu_ref[...].astype(jnp.int8),
+                              (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    # the widening fallback: zero-point correction in s32
+    rs = jnp.sum(xq.astype(jnp.int32), axis=1)            # [bm]
+    acc = acc - rs[:, None] * z_ref[...][None, :]
+    o_ref[...] = (acc.astype(jnp.float32)
+                  * sa_ref[...][:, None] * sw_ref[...][None, :])
+
+
+def gemm_w4a8_asym(xq: jax.Array, s_a: jax.Array, wu: jax.Array,
+                   s_w: jax.Array, z: jax.Array,
+                   *, interpret: bool = True) -> jax.Array:
+    """xq: s8[M,K], wu: u8[K,N] (uint4-valued), s_w: f32[N], z: s32[N]."""
+    m, k = xq.shape
+    k_w, n = wu.shape
+    assert k == k_w
+    (bm, bn), grid = common.gemm_tiles(m, n)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(xq, s_a, wu, s_w, z)
+
+
+def vmem_footprint(m: int, n: int, k: int) -> int:
+    (bm, bn), _ = common.gemm_tiles(m, n)
+    return common.vmem_bytes(bm, bn, k, x_bytes=1, w_bytes_per_k=1) + bn * 8

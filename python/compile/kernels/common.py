@@ -1,0 +1,63 @@
+"""Shared tiling helpers for the Pallas GEMM kernels.
+
+All kernels use a 2-D grid over (M-tiles, N-tiles) and keep the full K
+(reduction) extent resident in the block — the VMEM-budget arithmetic for
+that choice is in `vmem_bytes` and reported by DESIGN.md §Perf.  On a real
+TPU the HBM->VMEM schedule expressed by the BlockSpecs below is what the
+paper expressed with CUDA threadblocks; `interpret=True` lowers the same
+program to plain HLO so the CPU PJRT client can run it.
+"""
+
+import math
+
+import jax.numpy as jnp
+
+# Default tile ceiling.  128 matches the MXU systolic-array edge; blocks are
+# shrunk to the largest divisor of the dim that stays <= the ceiling so the
+# grid always covers the array exactly (no masking needed).
+TILE_M = 128
+TILE_N = 128
+
+_DTYPE_BYTES = {jnp.int8.dtype: 1, jnp.uint8.dtype: 1,
+                jnp.float32.dtype: 4, jnp.int32.dtype: 4}
+
+
+def largest_tile(dim: int, ceiling: int) -> int:
+    """Largest divisor of `dim` that is <= ceiling (>= 1)."""
+    if dim <= ceiling:
+        return dim
+    for t in range(ceiling, 0, -1):
+        if dim % t == 0:
+            return t
+    return 1
+
+
+def gemm_tiles(m: int, n: int, tile_m: int = TILE_M, tile_n: int = TILE_N):
+    """Pick (bm, bn) block shape and the grid for an MxN output."""
+    bm = largest_tile(m, tile_m)
+    bn = largest_tile(n, tile_n)
+    return (bm, bn), (m // bm, n // bn)
+
+
+def vmem_bytes(bm: int, bn: int, k: int, x_bytes: int, w_bytes_per_k: float,
+               acc_bytes: int = 4) -> int:
+    """Estimated VMEM residency for one grid step of a full-K GEMM block.
+
+    x block: bm*k*x_bytes; w block: k*bn*w_bytes_per_k (0.5 for packed int4);
+    accumulator/output: bm*bn*acc_bytes; scales are negligible.
+    """
+    return int(bm * k * x_bytes + math.ceil(k * bn * w_bytes_per_k)
+               + bm * bn * acc_bytes)
+
+
+def mxu_util_estimate(bm: int, bn: int, k: int, edge: int = 128) -> float:
+    """Fraction of MXU lanes busy for a (bm x k) @ (k x bn) tile issue.
+
+    The systolic array processes edge x edge tiles; partial tiles waste
+    lanes.  This is the structural utilization estimate recorded in
+    EXPERIMENTS.md §Perf (interpret mode gives no hardware counters).
+    """
+    eff_m = bm / (math.ceil(bm / edge) * edge)
+    eff_n = bn / (math.ceil(bn / edge) * edge)
+    eff_k = k / (math.ceil(k / edge) * edge)
+    return eff_m * eff_n * eff_k

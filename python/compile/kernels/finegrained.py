@@ -1,0 +1,68 @@
+"""Fine-grained (group-wise) W4A8 GEMM kernel — paper Fig. 2(b), Eq. 5.
+
+The hardware-UNFRIENDLY baseline the paper argues against: every K-group's
+s32 partial sum must be dequantized (Integer2Float + FMA) back into an f32
+accumulator before the next group — overhead that lands in the GEMM inner
+loop and cancels the INT8 math advantage (Fig. 7 'fine-grained').
+
+Kept as a first-class kernel so the ablation benches can measure exactly
+that cost against FastGEMM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _kernel(xq_ref, sa_ref, wq_ref, sg_ref, o_ref, *, group: int):
+    k = xq_ref.shape[1]
+    n_groups = k // group
+    bn = wq_ref.shape[1]
+    bm = xq_ref.shape[0]
+
+    def body(g, acc):
+        xg = jax.lax.dynamic_slice(xq_ref[...], (0, g * group), (bm, group))
+        wg = jax.lax.dynamic_slice(wq_ref[...], (g * group, 0), (group, bn))
+        part = jax.lax.dot_general(xg, wg, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.int32)
+        # the per-group Integer2Float + FMA the paper's Fig. 7 measures:
+        sg = jax.lax.dynamic_slice(sg_ref[...], (g, 0), (1, bn))
+        return acc + part.astype(jnp.float32) * sg
+    acc = jax.lax.fori_loop(0, n_groups, body,
+                            jnp.zeros((bm, bn), jnp.float32))
+    o_ref[...] = acc * sa_ref[...][:, None]
+
+
+def gemm_w4a8_grouped(xq: jax.Array, s_a: jax.Array, wq: jax.Array,
+                      s_g: jax.Array, group: int,
+                      *, interpret: bool = True) -> jax.Array:
+    """xq: s8[M,K], s_a: f32[M], wq: s8[K,N] (int4-valued), s_g: f32[K//g,N]."""
+    m, k = xq.shape
+    k_w, n = wq.shape
+    assert k == k_w and k % group == 0
+    g_rows = k // group
+    (bm, bn), grid = common.gemm_tiles(m, n)
+    return pl.pallas_call(
+        functools.partial(_kernel, group=group),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((g_rows, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(xq, s_a, wq, s_g)
+
+
+def vmem_footprint(m: int, n: int, k: int, group: int = 128) -> int:
+    (bm, bn), _ = common.gemm_tiles(m, n)
+    # int4 stored unpacked as s8 here (1 B/elem) + group scales
+    return common.vmem_bytes(bm, bn, k, x_bytes=1, w_bytes_per_k=1) \
+        + (k // group) * bn * 4

@@ -1,0 +1,72 @@
+"""FP GEMM kernel — the FP16 baseline of every figure (f32 on this host).
+
+Also ships `gemm_w4a8_unfused`, the paper's Fig. 4(b) 'vanilla' two-kernel
+W4A8: a SEPARATE conversion kernel materializes the s8 weight matrix (an
+extra HBM round-trip) before a plain W8A8 GEMM — the thing kernel fusion
+removes.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common, w8a8
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def gemm_fp(x: jax.Array, w: jax.Array, *, interpret: bool = True):
+    """x: f32[M,K], w: f32[K,N] -> f32[M,N]."""
+    m, k = x.shape
+    k_w, n = w.shape
+    assert k == k_w
+    (bm, bn), grid = common.gemm_tiles(m, n)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+
+
+# --- paper Fig. 4(b): unfused conversion + GEMM (baseline for ablation) ---
+
+def _convert_kernel(wp_ref, o_ref):
+    wp = wp_ref[...]
+    lo16 = jax.lax.bitcast_convert_type((wp << 4).astype(jnp.uint8), jnp.int8)
+    hi16 = jax.lax.bitcast_convert_type(wp & 0xF0, jnp.int8)
+    o_ref[...] = jnp.stack([lo16, hi16], axis=1).reshape(
+        2 * wp.shape[0], wp.shape[1])
+
+
+def convert_sint4_to_s8x16(wp: jax.Array, *, interpret: bool = True):
+    """Standalone conversion kernel: u8[K/2,N] packed -> s8[K,N] (x16)."""
+    k2, n = wp.shape
+    bn = common.largest_tile(n, common.TILE_N)
+    return pl.pallas_call(
+        _convert_kernel,
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((k2, bn), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((2 * k2, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((2 * k2, n), jnp.int8),
+        interpret=interpret,
+    )(wp)
+
+
+def gemm_w4a8_unfused(xq, s_a, wp, s_w, *, interpret: bool = True):
+    """Fig. 4(b): materialize converted weights, then separate W8A8 GEMM."""
+    w16 = convert_sint4_to_s8x16(wp, interpret=interpret)
+    return w8a8.gemm_w8a8(xq, s_a, w16, s_w / 16.0, interpret=interpret)
+
+
+def vmem_footprint(m: int, n: int, k: int) -> int:
+    (bm, bn), _ = common.gemm_tiles(m, n)
+    return common.vmem_bytes(bm, bn, k, x_bytes=4, w_bytes_per_k=4)

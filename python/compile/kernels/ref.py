@@ -1,0 +1,227 @@
+"""Pure-jnp reference oracles for every GEMM variant in OdysseyLLM.
+
+These are the CORRECTNESS ground truth for the Pallas kernels (checked by
+pytest + hypothesis in python/tests/) and for the rust quant core (golden
+files emitted by compile/goldens.py).
+
+Conventions (shared verbatim with rust/src/quant/):
+  * Activations  x  : f32[M, K]     (M tokens, K input features)
+  * Weights      W  : f32[K, N]     (N output channels); quantized scales
+                                    are per *output channel* -> s_w: f32[N]
+  * INT4 values live in [-8, 7] stored two's-complement in the low nibble.
+  * Packing is along K: P[k2, n] = (Wq[2*k2, n] & 0xF) | (Wq[2*k2+1, n] << 4)
+    so a packed byte holds two K-adjacent values of the SAME output channel.
+  * The FastGEMM trick (paper Fig. 4(d) / Fig. 5): unpacking places a nibble
+    in the HIGH 4 bits of an s8, i.e. value*16; the INT32 accumulator result
+    is divided by 16 in the per-channel dequant epilogue.
+"""
+
+import jax
+import jax.numpy as jnp
+
+INT4_MIN, INT4_MAX = -8, 7
+INT8_MAX = 127
+
+
+# --------------------------------------------------------------------------
+# quantizers (reference semantics)
+# --------------------------------------------------------------------------
+
+def quant_act_per_token(x: jax.Array, eps: float = 1e-8):
+    """Dynamic symmetric per-token INT8 quantization of activations.
+
+    Returns (q: s8[M,K], s_a: f32[M]).  RTN-pt in the paper's Table 1.
+    """
+    s = jnp.max(jnp.abs(x), axis=-1) / INT8_MAX
+    s = jnp.maximum(s, eps)
+    q = jnp.clip(jnp.round(x / s[..., None]), -INT8_MAX, INT8_MAX)
+    return q.astype(jnp.int8), s
+
+
+def quant_weight_per_channel_sym(w: jax.Array, bits: int = 4,
+                                 gamma=None, beta=None, eps: float = 1e-12):
+    """Symmetric per-output-channel weight quantization (paper Eq. 8/9).
+
+    gamma/beta are the (optional) LWC clip intensities, f32[N] each.
+    Returns (q: s8[K,N] holding values in [qmin, qmax], s: f32[N]).
+    """
+    qmax = 2 ** (bits - 1) - 1
+    qmin = -(2 ** (bits - 1))
+    hi = jnp.max(w, axis=0)
+    lo = jnp.min(w, axis=0)
+    if gamma is not None:
+        hi = gamma * hi
+    if beta is not None:
+        lo = beta * lo
+    s = jnp.maximum(jnp.maximum(jnp.abs(hi), jnp.abs(lo)) / qmax, eps)
+    q = jnp.clip(jnp.round(w / s[None, :]), qmin, qmax)
+    return q.astype(jnp.int8), s
+
+
+def quant_weight_per_group_sym(w: jax.Array, group: int, bits: int = 4,
+                               eps: float = 1e-12):
+    """Symmetric group-wise (fine-grained, 'g128') weight quantization.
+
+    Groups run along K.  Returns (q: s8[K,N], s: f32[K//group, N]).
+    """
+    K, N = w.shape
+    assert K % group == 0, f"K={K} not divisible by group={group}"
+    qmax = 2 ** (bits - 1) - 1
+    wg = w.reshape(K // group, group, N)
+    s = jnp.maximum(jnp.max(jnp.abs(wg), axis=1) / qmax, eps)  # [K//g, N]
+    q = jnp.clip(jnp.round(wg / s[:, None, :]), -qmax - 1, qmax)
+    return q.reshape(K, N).astype(jnp.int8), s
+
+
+def quant_weight_per_channel_asym(w: jax.Array, bits: int = 4,
+                                  eps: float = 1e-12):
+    """Asymmetric per-channel UINT4 weight quantization (the paper's
+    'Asym GEMM' baseline).  Returns (u: u8[K,N] in [0, 2^b-1],
+    s: f32[N], z: s32[N] zero points)."""
+    qmax = 2 ** bits - 1
+    hi = jnp.max(w, axis=0)
+    lo = jnp.min(w, axis=0)
+    s = jnp.maximum((hi - lo) / qmax, eps)
+    z = jnp.clip(jnp.round(-lo / s), 0, qmax).astype(jnp.int32)
+    u = jnp.clip(jnp.round(w / s[None, :]) + z[None, :], 0, qmax)
+    return u.astype(jnp.uint8), s, z
+
+
+# --------------------------------------------------------------------------
+# INT4 packing (paper Fig. 4(d) / Fig. 5 — SINT4toS8)
+# --------------------------------------------------------------------------
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack s8[K,N] int4 values (in [-8,7]) into u8[K//2, N] bytes.
+
+    Two K-adjacent values per byte: low nibble = even k, high = odd k.
+    """
+    K, N = q.shape
+    assert K % 2 == 0
+    u = jnp.asarray(q, jnp.int32) & 0xF
+    lo = u[0::2, :]
+    hi = u[1::2, :]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4_x16(p: jax.Array) -> jax.Array:
+    """SINT4toS8: unpack u8[K2,N] into s8[2*K2,N] where every element is
+    16x the original int4 value (nibble placed in the high 4 bits).
+
+    This is the FastGEMM conversion: no subtraction, sign bit reused.
+    """
+    K2, N = p.shape
+    lo16 = jax.lax.bitcast_convert_type((p << 4).astype(jnp.uint8), jnp.int8)
+    hi16 = jax.lax.bitcast_convert_type(p & 0xF0, jnp.int8)
+    out = jnp.stack([lo16, hi16], axis=1)                          # [K2,2,N]
+    return out.reshape(2 * K2, N)
+
+
+def unpack_int4(p: jax.Array) -> jax.Array:
+    """Exact inverse of pack_int4 -> s8[2*K2, N] with values in [-8,7].
+
+    This is the 'vanilla' UINT4toS8 path that needs extra arithmetic (the
+    conversion FastGEMM avoids): x16 then an arithmetic /16.
+    """
+    w16 = unpack_int4_x16(p).astype(jnp.int32)
+    return (w16 // 16).astype(jnp.int8)  # exact: every value is 16*w
+
+
+# --------------------------------------------------------------------------
+# GEMM variant oracles.  All return f32[M, N].
+# --------------------------------------------------------------------------
+
+def _idot(a, b):
+    """Integer matmul with an s32 accumulator (the MXU/TensorCore path)."""
+    return jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def gemm_fp(x: jax.Array, w: jax.Array) -> jax.Array:
+    """FP baseline (paper's FP16; f32 on this CPU testbed)."""
+    return jnp.dot(x, w)
+
+
+def gemm_w8a8(xq: jax.Array, s_a: jax.Array, wq: jax.Array,
+              s_w: jax.Array) -> jax.Array:
+    """W8A8 per-token/per-channel (paper Eq. 6/7): dequant AFTER the GEMM."""
+    acc = _idot(xq, wq)
+    return acc.astype(jnp.float32) * s_a[:, None] * s_w[None, :]
+
+
+def gemm_w4a8_fast(xq: jax.Array, s_a: jax.Array, wp: jax.Array,
+                   s_w: jax.Array) -> jax.Array:
+    """FastGEMM: packed int4 weights, x16 high-nibble unpack fused with the
+    int GEMM, single per-channel dequant epilogue dividing by 16."""
+    w16 = unpack_int4_x16(wp)
+    acc = _idot(xq, w16)
+    return acc.astype(jnp.float32) * (s_a[:, None] * (s_w[None, :] / 16.0))
+
+
+def gemm_w4a8_grouped(xq: jax.Array, s_a: jax.Array, wq: jax.Array,
+                      s_g: jax.Array, group: int) -> jax.Array:
+    """Fine-grained W4A8 (paper Eq. 5): per-group dequantize WHILE
+    accumulating — the hardware-unfriendly baseline."""
+    M, K = xq.shape
+    _, N = wq.shape
+    G = K // group
+    xg = xq.reshape(M, G, group)
+    wg = wq.reshape(G, group, N)
+    acc = jnp.zeros((M, N), jnp.float32)
+    for g in range(G):
+        part = _idot(xg[:, g, :], wg[g])                 # s32 [M,N]
+        acc = acc + part.astype(jnp.float32) * s_g[g][None, :]
+    return acc * s_a[:, None]
+
+
+def gemm_w4a8_asym(xq: jax.Array, s_a: jax.Array, wu: jax.Array,
+                   s_w: jax.Array, z: jax.Array) -> jax.Array:
+    """Asymmetric W4A8: zero-point subtraction forces the widening the
+    paper's 'Asym GEMM' pays for.  out = s_a*s_w*((Xq·U) - z*rowsum(Xq))."""
+    acc = _idot(xq, wu.astype(jnp.int8))                  # u4 fits in s8
+    rs = jnp.sum(xq.astype(jnp.int32), axis=1)            # [M]
+    corr = rs[:, None] * z[None, :]
+    return (acc - corr).astype(jnp.float32) * s_a[:, None] * s_w[None, :]
+
+
+def gemm_w4a16(x: jax.Array, wq: jax.Array, s_g: jax.Array,
+               group: int) -> jax.Array:
+    """W4A16 (paper Eq. 4): dequantize group-wise int4 weights to float
+    BEFORE an FP GEMM (the GPTQ/AWQ deployment style)."""
+    K, N = wq.shape
+    G = K // group
+    wf = wq.reshape(G, group, N).astype(jnp.float32) * s_g[:, None, :]
+    return jnp.dot(x, wf.reshape(K, N))
+
+
+# --------------------------------------------------------------------------
+# end-to-end reference linears (fp32 in, fp32 out) used by the model oracle
+# --------------------------------------------------------------------------
+
+def linear_fp(x, w):
+    return gemm_fp(x, w)
+
+
+def linear_w8a8(x, wq, s_w):
+    xq, s_a = quant_act_per_token(x)
+    return gemm_w8a8(xq, s_a, wq, s_w)
+
+
+def linear_w4a8_fast(x, wp, s_w):
+    xq, s_a = quant_act_per_token(x)
+    return gemm_w4a8_fast(xq, s_a, wp, s_w)
+
+
+def linear_w4a8_grouped(x, wq, s_g, group):
+    xq, s_a = quant_act_per_token(x)
+    return gemm_w4a8_grouped(xq, s_a, wq, s_g, group)
+
+
+def linear_w4a8_asym(x, wu, s_w, z):
+    xq, s_a = quant_act_per_token(x)
+    return gemm_w4a8_asym(xq, s_a, wu, s_w, z)
+
+
+def linear_w4a16(x, wq, s_g, group):
+    return gemm_w4a16(x, wq, s_g, group)

@@ -1,0 +1,52 @@
+"""W4A16 GEMM kernel — paper Fig. 2(a), Eq. 4 (the GPTQ/AWQ deploy style).
+
+Group-wise int4 weights are dequantized to float INSIDE the kernel, before
+a float GEMM.  Low memory traffic (int4 weights) but the dequant runs on
+the vector unit for every element and the matmul itself is float — the
+reason W4A16 wins self-decode but loses pre-filling (paper Sec. 4.1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _kernel(x_ref, wq_ref, sg_ref, o_ref, *, group: int):
+    k, bn = wq_ref.shape
+    g = k // group
+    wf = (wq_ref[...].reshape(g, group, bn).astype(jnp.float32)
+          * sg_ref[...][:, None, :]).reshape(k, bn)
+    o_ref[...] = jnp.dot(x_ref[...], wf,
+                         preferred_element_type=jnp.float32)
+
+
+def gemm_w4a16(x: jax.Array, wq: jax.Array, s_g: jax.Array, group: int,
+               *, interpret: bool = True) -> jax.Array:
+    """x: f32[M,K], wq: s8[K,N] (int4-valued), s_g: f32[K//g,N] -> f32[M,N]."""
+    m, k = x.shape
+    k_w, n = wq.shape
+    assert k == k_w and k % group == 0
+    g_rows = k // group
+    (bm, bn), grid = common.gemm_tiles(m, n)
+    return pl.pallas_call(
+        functools.partial(_kernel, group=group),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((g_rows, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, wq, s_g)
+
+
+def vmem_footprint(m: int, n: int, k: int, group: int = 128) -> int:
+    (bm, bn), _ = common.gemm_tiles(m, n)
+    # x in f32 + unpacked-int4 weights + dequantized f32 copy of the block
+    return common.vmem_bytes(bm, bn, k, x_bytes=4, w_bytes_per_k=1 + 4)

@@ -1,0 +1,47 @@
+"""W8A8 GEMM kernel (paper Fig. 2(c), Eq. 6/7) — the SmoothQuant layout.
+
+Per-channel weight scales + per-token activation scales; dequantization
+happens once, AFTER the s8 x s8 -> s32 GEMM.  This is the paper's "most
+hardware-friendly" baseline and our serving engine's W8A8 variant.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _kernel(xq_ref, sa_ref, wq_ref, sw_ref, o_ref):
+    acc = jax.lax.dot_general(xq_ref[...], wq_ref[...],
+                              (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    o_ref[...] = (acc.astype(jnp.float32)
+                  * sa_ref[...][:, None] * sw_ref[...][None, :])
+
+
+def gemm_w8a8(xq: jax.Array, s_a: jax.Array, wq: jax.Array, s_w: jax.Array,
+              *, interpret: bool = True) -> jax.Array:
+    """xq: s8[M,K], s_a: f32[M], wq: s8[K,N], s_w: f32[N] -> f32[M,N]."""
+    m, k = xq.shape
+    k_w, n = wq.shape
+    assert k == k_w
+    (bm, bn), grid = common.gemm_tiles(m, n)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(xq, s_a, wq, s_w)
+
+
+def vmem_footprint(m: int, n: int, k: int) -> int:
+    (bm, bn), _ = common.gemm_tiles(m, n)
+    return common.vmem_bytes(bm, bn, k, x_bytes=1, w_bytes_per_k=1)

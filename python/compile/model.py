@@ -1,0 +1,425 @@
+"""L2 — LLaMA-architecture forward passes, parameterized by GEMM variant.
+
+Two entry points are AOT-lowered per (model, variant, batch-bucket):
+
+  * prefill : tokens[B,S], length[B]  -> logits[B,S,V], per-layer KV caches
+  * decode  : token[B], pos[B], KV    -> logits[B,V],   updated KV caches
+
+Weights are *arguments* (a flat list in the canonical configs.weight_names
+order, with quantized matrices expanded into their payload tensors), so the
+same compiled executable serves any checkpoint — the rust coordinator owns
+the weights, the graph owns only the math.
+
+Every linear runs through the L1 Pallas kernel of the chosen variant
+(`use_ref=True` swaps in the pure-jnp oracles for testing).  Activations
+are quantized per token ONCE per "linear group" (q/k/v share one input,
+gate/up share one input) — the fusion the paper's engine applies.
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import configs
+from .configs import ModelConfig
+from .kernels import (asym, fastgemm, finegrained, fpgemm, ref, w4a16, w8a8)
+
+
+# --------------------------------------------------------------------------
+# variant payload specs
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class VariantSpec:
+    """How a quantized matrix is represented and applied."""
+    name: str
+    payload: tuple            # payload tensor suffixes, in argument order
+    quant_act: bool           # whether x is per-token int8-quantized
+
+    def payload_names(self, base: str):
+        return [f"{base}.{p}" for p in self.payload]
+
+
+SPECS = {
+    "fp": VariantSpec("fp", ("w",), False),
+    "w8a8": VariantSpec("w8a8", ("wq", "s_w"), True),
+    "w4a8_fast": VariantSpec("w4a8_fast", ("wp", "s_w"), True),
+    "w4a8_group": VariantSpec("w4a8_group", ("wq", "s_g"), True),
+    "w4a8_asym": VariantSpec("w4a8_asym", ("wu", "s_w", "z"), True),
+    "w4a16": VariantSpec("w4a16", ("wq", "s_g"), False),
+}
+
+
+def payload_shapes(variant: str, k: int, n: int, group: int):
+    """Shapes+dtypes of the payload tensors for a KxN matrix."""
+    g = k // group
+    return {
+        "fp": [((k, n), jnp.float32)],
+        "w8a8": [((k, n), jnp.int8), ((n,), jnp.float32)],
+        "w4a8_fast": [((k // 2, n), jnp.uint8), ((n,), jnp.float32)],
+        "w4a8_group": [((k, n), jnp.int8), ((g, n), jnp.float32)],
+        "w4a8_asym": [((k, n), jnp.uint8), ((n,), jnp.float32),
+                      ((n,), jnp.int32)],
+        "w4a16": [((k, n), jnp.int8), ((g, n), jnp.float32)],
+    }[variant]
+
+
+def quantize_matrix(variant: str, w, group: int):
+    """Reference payload construction from an f32[K,N] matrix (RTN only —
+    the full LWC/GPTQ pipeline lives in quant.py / rust quant::)."""
+    w = jnp.asarray(w)
+    if variant == "fp":
+        return [w]
+    if variant == "w8a8":
+        q, s = ref.quant_weight_per_channel_sym(w, 8)
+        return [q, s]
+    if variant == "w4a8_fast":
+        q, s = ref.quant_weight_per_channel_sym(w, 4)
+        return [ref.pack_int4(q), s]
+    if variant in ("w4a8_group", "w4a16"):
+        q, s = ref.quant_weight_per_group_sym(w, group, 4)
+        return [q, s]
+    if variant == "w4a8_asym":
+        u, s, z = ref.quant_weight_per_channel_asym(w, 4)
+        return [u, s, z]
+    raise ValueError(variant)
+
+
+def _apply(variant: str, xq_or_x, s_a, payload, group: int, use_ref: bool):
+    """Run one GEMM given the (possibly pre-quantized) input."""
+    if variant == "fp":
+        f = ref.gemm_fp if use_ref else fpgemm.gemm_fp
+        return f(xq_or_x, payload[0])
+    if variant == "w8a8":
+        f = ref.gemm_w8a8 if use_ref else w8a8.gemm_w8a8
+        return f(xq_or_x, s_a, payload[0], payload[1])
+    if variant == "w4a8_fast":
+        f = ref.gemm_w4a8_fast if use_ref else fastgemm.gemm_w4a8_fast
+        return f(xq_or_x, s_a, payload[0], payload[1])
+    if variant == "w4a8_group":
+        f = (ref.gemm_w4a8_grouped if use_ref
+             else finegrained.gemm_w4a8_grouped)
+        return f(xq_or_x, s_a, payload[0], payload[1], group)
+    if variant == "w4a8_asym":
+        f = ref.gemm_w4a8_asym if use_ref else asym.gemm_w4a8_asym
+        return f(xq_or_x, s_a, payload[0], payload[1], payload[2])
+    if variant == "w4a16":
+        f = ref.gemm_w4a16 if use_ref else w4a16.gemm_w4a16
+        return f(xq_or_x, payload[0], payload[1], group)
+    raise ValueError(variant)
+
+
+class LinearGroup:
+    """Applies several matrices to ONE input, quantizing the input once."""
+
+    def __init__(self, variant: str, group: int, use_ref: bool):
+        self.spec = SPECS[variant]
+        self.variant = variant
+        self.group = group
+        self.use_ref = use_ref
+
+    def __call__(self, x2d, payloads):
+        """x2d: f32[M,K]; payloads: list of payload lists -> [f32[M,N]]."""
+        if self.spec.quant_act:
+            xq, s_a = ref.quant_act_per_token(x2d)
+        else:
+            xq, s_a = x2d, None
+        return [_apply(self.variant, xq, s_a, p, self.group, self.use_ref)
+                for p in payloads]
+
+
+# --------------------------------------------------------------------------
+# LLaMA blocks
+# --------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def rope_tables(cfg: ModelConfig, positions):
+    """positions: i32[...]; returns (cos, sin) of shape [..., head_dim//2]."""
+    hd = cfg.head_dim
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2) / hd))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., H, Dh]; cos/sin broadcastable to [..., 1, Dh//2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1)
+
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate) * up
+
+
+NEG_INF = -1e9
+
+
+# --------------------------------------------------------------------------
+# weights handling
+# --------------------------------------------------------------------------
+
+def init_weights(cfg: ModelConfig, seed: int = 0):
+    """f32 initialization (dict name -> np.ndarray), canonical order."""
+    rng = np.random.default_rng(seed)
+    ws = {}
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+
+    def mat(k, n):
+        return (rng.standard_normal((k, n)) / np.sqrt(k)).astype(np.float32)
+
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        ws[p + "attn_norm"] = np.ones(d, np.float32)
+        for nm in ("wq", "wk", "wv", "wo"):
+            ws[p + nm] = mat(d, d)
+        ws[p + "mlp_norm"] = np.ones(d, np.float32)
+        ws[p + "w_gate"] = mat(d, f)
+        ws[p + "w_up"] = mat(d, f)
+        ws[p + "w_down"] = mat(f, d)
+    ws["norm_f"] = np.ones(d, np.float32)
+    ws["embed"] = (rng.standard_normal((v, d)) * 0.02).astype(np.float32)
+    ws["lm_head"] = mat(d, v)
+    return ws
+
+
+def quantize_weights(cfg: ModelConfig, ws, variant: str,
+                     group: int = configs.GROUP_SIZE):
+    """dict of f32 weights -> flat payload list in canonical arg order."""
+    flat = []
+    for name in configs.weight_names(cfg):
+        leaf = name.split(".")[-1]
+        if leaf in configs.LAYER_MATRICES:
+            flat.extend(quantize_matrix(variant, ws[name], group))
+        else:
+            flat.append(jnp.asarray(ws[name]))
+    return flat
+
+
+def flat_param_entries(cfg: ModelConfig, variant: str,
+                       group: int = configs.GROUP_SIZE):
+    """(name, shape, dtype) for every flat weight argument — the manifest."""
+    out = []
+    for name in configs.weight_names(cfg):
+        leaf = name.split(".")[-1]
+        if leaf in configs.LAYER_MATRICES:
+            k, n = configs.matrix_shape(cfg, name)
+            spec = SPECS[variant]
+            shapes = payload_shapes(variant, k, n, group)
+            for suffix, (shape, dt) in zip(spec.payload, shapes):
+                out.append((f"{name}.{suffix}", shape, dt))
+        elif leaf in ("attn_norm", "mlp_norm", "norm_f"):
+            out.append((name, (cfg.d_model,), jnp.float32))
+        else:  # embed / lm_head stay f32
+            out.append((name, configs.matrix_shape(cfg, name), jnp.float32))
+    return out
+
+
+class WeightCursor:
+    """Walks the flat weight-argument list in canonical order."""
+
+    def __init__(self, cfg: ModelConfig, variant: str, flat):
+        self.cfg = cfg
+        self.spec = SPECS[variant]
+        self.flat = list(flat)
+        self.i = 0
+
+    def take(self):
+        out = self.flat[self.i]
+        self.i += 1
+        return out
+
+    def matrix(self):
+        """Take one quantized-matrix payload (list of tensors)."""
+        n = len(self.spec.payload)
+        out = self.flat[self.i:self.i + n]
+        self.i += n
+        return out
+
+
+# --------------------------------------------------------------------------
+# forward passes
+# --------------------------------------------------------------------------
+
+def _layer_prefill(cfg, lin, cur, x, cos, sin, mask, taps):
+    """One decoder layer over x: f32[B,S,D].  Returns (x, kT, vT)."""
+    B, S, D = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    attn_norm = cur.take()
+    wq, wk, wv, wo = cur.matrix(), cur.matrix(), cur.matrix(), cur.matrix()
+    mlp_norm = cur.take()
+    w_gate, w_up, w_down = cur.matrix(), cur.matrix(), cur.matrix()
+
+    h = rms_norm(x, attn_norm, cfg.norm_eps)
+    h2 = h.reshape(B * S, D)
+    if taps is not None:
+        taps.append(("attn_in", h2))
+    q, k, v = lin(h2, [wq, wk, wv])
+    q = apply_rope(q.reshape(B, S, H, Dh), cos, sin)
+    k = apply_rope(k.reshape(B, S, H, Dh), cos, sin)
+    v = v.reshape(B, S, H, Dh)
+    qT = q.transpose(0, 2, 1, 3)          # [B,H,S,Dh]
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qT, kT) / np.sqrt(Dh)
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    att = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", att, vT).transpose(0, 2, 1, 3)
+    o2 = o.reshape(B * S, D)
+    if taps is not None:
+        taps.append(("attn_out_in", o2))
+    (o_proj,) = lin(o2, [wo])
+    x = x + o_proj.reshape(B, S, D)
+
+    h = rms_norm(x, mlp_norm, cfg.norm_eps)
+    h2 = h.reshape(B * S, D)
+    if taps is not None:
+        taps.append(("mlp_in", h2))
+    gate, up = lin(h2, [w_gate, w_up])
+    act = swiglu(gate, up)
+    if taps is not None:
+        taps.append(("mlp_down_in", act))
+    (down,) = lin(act, [w_down])
+    x = x + down.reshape(B, S, D)
+    return x, kT, vT
+
+
+def prefill(cfg: ModelConfig, variant: str, tokens, length, *flat_weights,
+            group: int = configs.GROUP_SIZE, use_ref: bool = False,
+            collect_taps: bool = False):
+    """tokens: i32[B,S], length: i32[B].
+
+    Returns (logits[B,S,V] f32, *k_caches, *v_caches) with caches padded to
+    cfg.max_seq: each [B,H,max_seq,Dh].
+    """
+    B, S = tokens.shape
+    lin = LinearGroup(variant, group, use_ref)
+    cur = WeightCursor(cfg, variant, flat_weights)
+    taps = [] if collect_taps else None
+
+    positions = jnp.arange(S)[None, :].repeat(B, 0)          # [B,S]
+    cos, sin = rope_tables(cfg, positions)                   # [B,S,Dh/2]
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    idx = jnp.arange(S)
+    causal = idx[None, :] <= idx[:, None]                    # [S,S]
+    keymask = idx[None, None, :] < length[:, None, None]     # [B,1,S]
+    mask = causal[None, :, :] & keymask                      # [B,S,S]
+
+    embed = flat_weights[-2]                                 # canonical tail
+    x = jnp.take(embed, tokens, axis=0)                      # [B,S,D]
+
+    ks, vs = [], []
+    for _ in range(cfg.n_layers):
+        x, kT, vT = _layer_prefill(cfg, lin, cur, x, cos, sin, mask, taps)
+        pad = cfg.max_seq - S
+        ks.append(jnp.pad(kT, ((0, 0), (0, 0), (0, pad), (0, 0))))
+        vs.append(jnp.pad(vT, ((0, 0), (0, 0), (0, pad), (0, 0))))
+    norm_f = cur.take()
+    x = rms_norm(x, norm_f, cfg.norm_eps)
+    x2 = x.reshape(B * S, cfg.d_model)
+    if taps is not None:
+        taps.append(("lm_head_in", x2))
+    _embed = cur.take()          # keeps the cursor aligned with the layout
+    lm_head = cur.take()
+    logits = ref.gemm_fp(x2, lm_head).reshape(B, S, cfg.vocab)
+    if collect_taps:
+        return (logits, ks, vs), taps
+    return (logits, *ks, *vs)
+
+
+def _layer_decode(cfg, lin, cur, x, pos, cos, sin, kc, vc):
+    """x: f32[B,D]; kc/vc: [B,H,Smax,Dh].  Returns (x, kc, vc)."""
+    B, D = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    attn_norm = cur.take()
+    wq, wk, wv, wo = cur.matrix(), cur.matrix(), cur.matrix(), cur.matrix()
+    mlp_norm = cur.take()
+    w_gate, w_up, w_down = cur.matrix(), cur.matrix(), cur.matrix()
+
+    h = rms_norm(x, attn_norm, cfg.norm_eps)
+    q, k, v = lin(h, [wq, wk, wv])
+    q = apply_rope(q.reshape(B, H, Dh), cos, sin)
+    k = apply_rope(k.reshape(B, H, Dh), cos, sin)
+    v = v.reshape(B, H, Dh)
+
+    # write k,v at pos — per batch element (continuous batching).
+    def upd(cache, val, p):
+        return jax.lax.dynamic_update_slice(
+            cache, val[:, None, :], (0, p, 0))
+    kc = jax.vmap(upd)(kc, k, pos)
+    vc = jax.vmap(upd)(vc, v, pos)
+
+    scores = jnp.einsum("bhd,bhkd->bhk", q, kc) / np.sqrt(Dh)
+    k_idx = jnp.arange(kc.shape[2])[None, None, :]
+    mask = k_idx <= pos[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    att = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhk,bhkd->bhd", att, vc).reshape(B, D)
+    (o_proj,) = lin(o, [wo])
+    x = x + o_proj
+
+    h = rms_norm(x, mlp_norm, cfg.norm_eps)
+    gate, up = lin(h, [w_gate, w_up])
+    (down,) = lin(swiglu(gate, up), [w_down])
+    return x + down, kc, vc
+
+
+def decode(cfg: ModelConfig, variant: str, token, pos, *rest,
+           group: int = configs.GROUP_SIZE, use_ref: bool = False):
+    """token: i32[B], pos: i32[B], rest = n_layers k-caches, n_layers
+    v-caches, then the flat weights.
+
+    Returns (logits[B,V], *new_k_caches, *new_v_caches).
+    """
+    L = cfg.n_layers
+    kcs = list(rest[:L])
+    vcs = list(rest[L:2 * L])
+    flat_weights = rest[2 * L:]
+    lin = LinearGroup(variant, group, use_ref)
+    cur = WeightCursor(cfg, variant, flat_weights)
+
+    cos, sin = rope_tables(cfg, pos)                      # [B,Dh/2]
+    cos, sin = cos[:, None, :], sin[:, None, :]           # [B,1,Dh/2]
+    embed = flat_weights[-2]
+    x = jnp.take(embed, token, axis=0)                    # [B,D]
+
+    new_k, new_v = [], []
+    for i in range(L):
+        x, kc, vc = _layer_decode(cfg, lin, cur, x, pos, cos, sin,
+                                  kcs[i], vcs[i])
+        new_k.append(kc)
+        new_v.append(vc)
+    norm_f = cur.take()
+    x = rms_norm(x, norm_f, cfg.norm_eps)
+    _embed = cur.take()
+    lm_head = cur.take()
+    logits = ref.gemm_fp(x, lm_head)
+    return (logits, *new_k, *new_v)
+
+
+# --------------------------------------------------------------------------
+# jit'able builders (fixed model/variant/bucket)
+# --------------------------------------------------------------------------
+
+def make_prefill(cfg, variant, use_ref=False, group=configs.GROUP_SIZE):
+    return functools.partial(prefill, cfg, variant, group=group,
+                             use_ref=use_ref)
+
+
+def make_decode(cfg, variant, use_ref=False, group=configs.GROUP_SIZE):
+    return functools.partial(decode, cfg, variant, group=group,
+                             use_ref=use_ref)
+
+
+def kv_shapes(cfg: ModelConfig, batch: int):
+    """Shapes of the 2*n_layers KV cache arguments."""
+    s = (batch, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+    return [s] * (2 * cfg.n_layers)

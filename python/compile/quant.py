@@ -1,0 +1,229 @@
+"""Python reference implementations of the OdysseyLLM quantization recipe.
+
+The production quantizer lives in rust (rust/src/quant/); these numpy/jax
+versions are (a) the cross-check goldens for the rust unit tests, and
+(b) the faithful gradient-descent LWC (OmniQuant-style) that the rust side
+replaces with a deterministic grid search (see DESIGN.md substitution
+index — both minimize the same per-channel MSE objective).
+
+Matrix convention matches kernels/ref.py: W is f32[K, N], scales are per
+OUTPUT channel (N); the GPTQ Hessian is over the INPUT dim (K):
+H = 2 X^T X with X the f32[T, K] calibration activations.
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# plain RTN
+# --------------------------------------------------------------------------
+
+def rtn_per_channel(w: np.ndarray, bits: int, gamma=None, beta=None):
+    """Symmetric per-output-channel RTN.  Returns (q s8[K,N], s f32[N])."""
+    qmax = 2 ** (bits - 1) - 1
+    qmin = -(2 ** (bits - 1))
+    hi = w.max(axis=0)
+    lo = w.min(axis=0)
+    if gamma is not None:
+        hi = gamma * hi
+    if beta is not None:
+        lo = beta * lo
+    s = np.maximum(np.maximum(np.abs(hi), np.abs(lo)) / qmax, 1e-12)
+    q = np.clip(np.round(w / s[None, :]), qmin, qmax)
+    return q.astype(np.int8), s.astype(np.float32)
+
+
+def rtn_per_group(w: np.ndarray, group: int, bits: int):
+    """Symmetric group-wise RTN (g128 style).  (q s8[K,N], s f32[K//g,N])."""
+    K, N = w.shape
+    qmax = 2 ** (bits - 1) - 1
+    wg = w.reshape(K // group, group, N)
+    s = np.maximum(np.abs(wg).max(axis=1) / qmax, 1e-12)
+    q = np.clip(np.round(wg / s[:, None, :]), -qmax - 1, qmax)
+    return q.reshape(K, N).astype(np.int8), s.astype(np.float32)
+
+
+def dequant_per_channel(q: np.ndarray, s: np.ndarray) -> np.ndarray:
+    return q.astype(np.float32) * s[None, :]
+
+
+# --------------------------------------------------------------------------
+# LWC — Learnable Weight Clipping (paper Sec. 5.1, Eq. 8/9)
+# --------------------------------------------------------------------------
+
+LWC_GRID = np.round(np.arange(0.40, 1.0001, 0.025), 6)
+
+
+def lwc_grid_search(w: np.ndarray, bits: int = 4, grid=LWC_GRID):
+    """Deterministic per-channel grid search over (gamma, beta) minimizing
+    the per-channel fake-quant MSE.  EXACTLY mirrors rust quant::lwc.
+
+    Returns (gamma f32[N], beta f32[N]).
+    """
+    K, N = w.shape
+    qmax = 2 ** (bits - 1) - 1
+    qmin = -(2 ** (bits - 1))
+    hi = w.max(axis=0)
+    lo = w.min(axis=0)
+    best_mse = np.full(N, np.inf, np.float64)
+    best_g = np.ones(N, np.float32)
+    best_b = np.ones(N, np.float32)
+    for g in grid:
+        for b in grid:
+            s = np.maximum(np.maximum(np.abs(g * hi), np.abs(b * lo)) / qmax,
+                           1e-12)
+            q = np.clip(np.round(w / s[None, :]), qmin, qmax)
+            err = w - q * s[None, :]
+            mse = np.mean(err * err, axis=0)
+            better = mse < best_mse
+            best_mse = np.where(better, mse, best_mse)
+            best_g = np.where(better, g, best_g)
+            best_b = np.where(better, b, best_b)
+    return best_g.astype(np.float32), best_b.astype(np.float32)
+
+
+def lwc_sgd(w: np.ndarray, bits: int = 4, steps: int = 120, lr: float = 5e-3):
+    """OmniQuant-style learnable clipping via STE gradient descent (the
+    paper's actual method).  Returns (gamma f32[N], beta f32[N])."""
+    qmax = 2 ** (bits - 1) - 1
+    qmin = -(2 ** (bits - 1))
+    wj = jnp.asarray(w)
+    hi = jnp.max(wj, axis=0)
+    lo = jnp.min(wj, axis=0)
+
+    def fakequant_mse(params):
+        g, b = params
+        s = jnp.maximum(jnp.maximum(jnp.abs(g * hi), jnp.abs(b * lo)) / qmax,
+                        1e-12)
+        x = wj / s[None, :]
+        # straight-through round
+        xq = x + jax.lax.stop_gradient(jnp.clip(jnp.round(x), qmin, qmax) - x)
+        err = wj - xq * s[None, :]
+        return jnp.mean(err * err)
+
+    grad = jax.jit(jax.grad(fakequant_mse))
+    g = jnp.ones_like(hi)
+    b = jnp.ones_like(lo)
+    for _ in range(steps):
+        dg, db = grad((g, b))
+        g = jnp.clip(g - lr * dg, 0.3, 1.0)
+        b = jnp.clip(b - lr * db, 0.3, 1.0)
+    return np.asarray(g, np.float32), np.asarray(b, np.float32)
+
+
+# --------------------------------------------------------------------------
+# GPTQ — Hessian-based training-free compensation (paper Sec. 5.2)
+# --------------------------------------------------------------------------
+
+def gptq_quantize(w: np.ndarray, hessian: np.ndarray, bits: int = 4,
+                  scale: np.ndarray = None, percdamp: float = 0.01,
+                  act_order: bool = False, group: int = 0):
+    """GPTQ over a f32[K,N] matrix with input-dim Hessian f32[K,K].
+
+    `scale`: fixed per-output-channel scales (e.g. from LWC); computed via
+    RTN when None and group==0.  `group` > 0 switches to fine-grained
+    scales recomputed per group (the GPTQ-g128 baseline).  `act_order`
+    processes input dims by decreasing Hessian diagonal (the paper's 'ro').
+
+    Returns (q s8[K,N], scales, perm or None).  Scales shape: [N] when
+    group==0 else [K//group, N].
+    """
+    K, N = w.shape
+    qmax = 2 ** (bits - 1) - 1
+    qmin = -(2 ** (bits - 1))
+    W = w.astype(np.float64).copy()
+    H = hessian.astype(np.float64).copy()
+
+    # act_order ('ro') is the paper's per-channel reordering trick; with
+    # group scales the boundaries would live in permuted space, so the
+    # combination is rejected (the paper only evaluates ro with pc).
+    assert not (act_order and group), "act_order requires per-channel scales"
+    perm = None
+    if act_order:
+        perm = np.argsort(-np.diag(H)).astype(np.int64)
+        W = W[perm, :]
+        H = H[np.ix_(perm, perm)]
+
+    # dead input dims
+    dead = np.diag(H) == 0
+    H[dead, dead] = 1.0
+    W[dead, :] = 0.0
+
+    damp = percdamp * np.mean(np.diag(H))
+    H[np.arange(K), np.arange(K)] += damp
+    # standard GPTQ: upper Cholesky factor of inv(H); row k holds the
+    # error-propagation coefficients for input dim k.
+    Hinv = np.linalg.inv(H)
+    Hinv = np.linalg.cholesky((Hinv + Hinv.T) / 2).T
+
+    if group == 0:
+        if scale is None:
+            _, scale = rtn_per_channel(w, bits)
+        s_full = np.broadcast_to(scale[None, :], (K, N)).copy()
+    else:
+        s_full = np.empty((K, N))
+
+    Q = np.zeros((K, N), np.int8)
+    for k in range(K):
+        if group and k % group == 0:
+            # recompute group scales from the COMPENSATED weights
+            blk = W[k:k + group, :]
+            s_g = np.maximum(np.abs(blk).max(axis=0) / qmax, 1e-12)
+            s_full[k:k + group, :] = s_g[None, :]
+        wk = W[k, :]
+        sk = s_full[k, :]
+        q = np.clip(np.round(wk / sk), qmin, qmax)
+        Q[k, :] = q.astype(np.int8)
+        dq = q * sk
+        err = (wk - dq) / Hinv[k, k]
+        if k + 1 < K:
+            W[k + 1:, :] -= np.outer(Hinv[k, k + 1:], err)
+
+    if act_order:
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(K)
+        Q = Q[inv, :]
+
+    if group == 0:
+        scales = s_full[0, :].astype(np.float32)
+    else:
+        scales = s_full.reshape(K // group, group, N)[:, 0, :] \
+            .astype(np.float32)
+    return Q, scales, perm
+
+
+# --------------------------------------------------------------------------
+# SmoothQuant / AWQ input-channel scaling (foldable linears only)
+# --------------------------------------------------------------------------
+
+def smoothquant_scales(act_absmax: np.ndarray, w: np.ndarray,
+                       alpha: float = 0.5) -> np.ndarray:
+    """s_j = max|X_j|^a / max|W_j|^(1-a) over input channels j (f32[K])."""
+    wmax = np.maximum(np.abs(w).max(axis=1), 1e-8)
+    s = np.power(np.maximum(act_absmax, 1e-8), alpha) / \
+        np.power(wmax, 1.0 - alpha)
+    return np.maximum(s, 1e-8).astype(np.float32)
+
+
+def awq_scales(act_absmean: np.ndarray, w: np.ndarray, x_sample: np.ndarray,
+               bits: int = 4, group: int = 64,
+               alphas=np.arange(0.0, 1.01, 0.1)) -> np.ndarray:
+    """AWQ-style activation-aware scale: grid over alpha minimizing the
+    output MSE of the group-quantized scaled weights on a calib sample."""
+    best_s, best_loss = np.ones(w.shape[0], np.float32), np.inf
+    y_ref = x_sample @ w
+    for a in alphas:
+        s = np.power(np.maximum(act_absmean, 1e-8), a)
+        s = (s / np.sqrt(s.max() * s.min() + 1e-12)).astype(np.float32)
+        s = np.maximum(s, 1e-4)
+        ws = w * s[:, None]
+        q, sg = rtn_per_group(ws, group, bits)
+        wdq = (q.reshape(-1, group, w.shape[1]).astype(np.float32)
+               * sg[:, None, :]).reshape(w.shape) / s[:, None]
+        loss = float(np.mean((x_sample @ wdq - y_ref) ** 2))
+        if loss < best_loss:
+            best_loss, best_s = loss, s
+    return best_s

@@ -1,0 +1,56 @@
+"""Minimal safetensors reader/writer (the format rust/src/formats mirrors).
+
+Layout: 8-byte little-endian header length, JSON header mapping tensor name
+-> {dtype, shape, data_offsets}, then the raw little-endian tensor bytes.
+Only the dtypes this project uses are supported.
+"""
+
+import json
+
+import numpy as np
+
+_DTYPES = {
+    "F32": np.float32, "F64": np.float64, "I32": np.int32, "I8": np.int8,
+    "U8": np.uint8, "I64": np.int64, "U16": np.uint16,
+}
+_NAMES = {np.dtype(v): k for k, v in _DTYPES.items()}
+
+
+def save(path: str, tensors: dict):
+    """tensors: dict name -> np.ndarray (C-contiguous)."""
+    header = {}
+    offset = 0
+    blobs = []
+    for name in sorted(tensors):
+        arr = np.ascontiguousarray(tensors[name])
+        nbytes = arr.nbytes
+        header[name] = {
+            "dtype": _NAMES[arr.dtype],
+            "shape": list(arr.shape),
+            "data_offsets": [offset, offset + nbytes],
+        }
+        blobs.append(arr.tobytes())
+        offset += nbytes
+    hjson = json.dumps(header, separators=(",", ":")).encode()
+    pad = (8 - len(hjson) % 8) % 8     # keep data 8-aligned like upstream
+    hjson += b" " * pad
+    with open(path, "wb") as f:
+        f.write(len(hjson).to_bytes(8, "little"))
+        f.write(hjson)
+        for b in blobs:
+            f.write(b)
+
+
+def load(path: str) -> dict:
+    with open(path, "rb") as f:
+        n = int.from_bytes(f.read(8), "little")
+        header = json.loads(f.read(n))
+        data = f.read()
+    out = {}
+    for name, meta in header.items():
+        if name == "__metadata__":
+            continue
+        lo, hi = meta["data_offsets"]
+        arr = np.frombuffer(data[lo:hi], dtype=_DTYPES[meta["dtype"]])
+        out[name] = arr.reshape(meta["shape"]).copy()
+    return out

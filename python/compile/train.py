@@ -1,0 +1,134 @@
+"""Build-time training of the tiny LLaMA models on the synthetic corpus.
+
+This produces the FP32 checkpoints every quantization experiment starts
+from (the stand-in for the paper's pretrained LLaMA-1/2 — see DESIGN.md).
+Hand-rolled AdamW (optax is not available in this environment).
+
+Run via `make artifacts` (aot.py drives it); the loss curve is written to
+artifacts/train_log_<model>.json and summarized in EXPERIMENTS.md.
+"""
+
+import functools
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import configs, data, model, stio
+from .configs import ModelConfig
+
+
+def train_forward(cfg: ModelConfig, ws: dict, tokens):
+    """Lean pure-jnp forward for training: tokens i32[B,S] -> logits."""
+    B, S = tokens.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    x = jnp.take(ws["embed"], tokens, axis=0)
+    pos = jnp.arange(S)[None, :].repeat(B, 0)
+    cos, sin = model.rope_tables(cfg, pos)
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    idx = jnp.arange(S)
+    mask = (idx[None, :] <= idx[:, None])[None, None, :, :]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        h = model.rms_norm(x, ws[p + "attn_norm"], cfg.norm_eps)
+        q = (h @ ws[p + "wq"]).reshape(B, S, H, Dh)
+        k = (h @ ws[p + "wk"]).reshape(B, S, H, Dh)
+        v = (h @ ws[p + "wv"]).reshape(B, S, H, Dh)
+        q = model.apply_rope(q, cos, sin).transpose(0, 2, 1, 3)
+        k = model.apply_rope(k, cos, sin).transpose(0, 2, 1, 3)
+        v = v.transpose(0, 2, 1, 3)
+        sc = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(Dh)
+        sc = jnp.where(mask, sc, model.NEG_INF)
+        att = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", att, v).transpose(0, 2, 1, 3)
+        x = x + o.reshape(B, S, -1) @ ws[p + "wo"]
+        h = model.rms_norm(x, ws[p + "mlp_norm"], cfg.norm_eps)
+        act = model.swiglu(h @ ws[p + "w_gate"], h @ ws[p + "w_up"])
+        x = x + act @ ws[p + "w_down"]
+    x = model.rms_norm(x, ws["norm_f"], cfg.norm_eps)
+    return x @ ws["lm_head"]
+
+
+def loss_fn(cfg, ws, tokens):
+    """Next-token cross entropy over tokens i32[B,S+1]."""
+    logits = train_forward(cfg, ws, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def adamw_update(ws, grads, m, v, step, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 wd=0.01):
+    new_ws, new_m, new_v = {}, {}, {}
+    bc1 = 1 - b1 ** step
+    bc2 = 1 - b2 ** step
+    for k in ws:
+        g = grads[k]
+        m_k = b1 * m[k] + (1 - b1) * g
+        v_k = b2 * v[k] + (1 - b2) * g * g
+        upd = (m_k / bc1) / (jnp.sqrt(v_k / bc2) + eps)
+        decay = wd if ws[k].ndim == 2 else 0.0
+        new_ws[k] = ws[k] - lr * (upd + decay * ws[k])
+        new_m[k] = m_k
+        new_v[k] = v_k
+    return new_ws, new_m, new_v
+
+
+def batches(tokens: np.ndarray, batch: int, seq: int, seed: int):
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - seq - 1
+    while True:
+        idx = rng.integers(0, n, size=batch)
+        yield np.stack([tokens[i:i + seq + 1] for i in idx]).astype(np.int32)
+
+
+def eval_ppl(cfg, ws, val: np.ndarray, seq: int = 128, max_chunks: int = 64):
+    """Held-out perplexity of the f32 model (python-side reference)."""
+    lf = jax.jit(functools.partial(loss_fn, cfg))
+    tot, cnt = 0.0, 0
+    for i in range(0, min(len(val) - seq - 1, max_chunks * seq), seq):
+        chunk = val[i:i + seq + 1][None, :].astype(np.int32)
+        tot += float(lf(ws, jnp.asarray(chunk)))
+        cnt += 1
+    return math.exp(tot / max(cnt, 1))
+
+
+def train(cfg: ModelConfig, train_tokens: np.ndarray, val_tokens: np.ndarray,
+          steps: int = 800, batch: int = 8, seq: int = 128,
+          lr: float = 3e-3, seed: int = 0, log_every: int = 25,
+          outdir: str = "../artifacts"):
+    ws = {k: jnp.asarray(v) for k, v in model.init_weights(cfg, seed).items()}
+    m = {k: jnp.zeros_like(v) for k, v in ws.items()}
+    v = {k: jnp.zeros_like(vv) for k, vv in ws.items()}
+    vg = jax.jit(jax.value_and_grad(functools.partial(loss_fn, cfg),
+                                    argnums=0))
+    gen = batches(train_tokens, batch, seq, seed + 7)
+    log = []
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        tok = jnp.asarray(next(gen))
+        cur_lr = lr * 0.5 * (1 + math.cos(math.pi * step / steps))
+        cur_lr = max(cur_lr, lr * 0.05)
+        if step < 20:                          # warmup
+            cur_lr = lr * step / 20
+        loss, grads = vg(ws, tok)
+        ws, m, v = adamw_update(ws, grads, m, v, step, cur_lr)
+        if step % log_every == 0 or step == 1:
+            log.append({"step": step, "loss": float(loss),
+                        "lr": cur_lr, "elapsed_s": time.time() - t0})
+            print(f"[train {cfg.name}] step {step:4d} "
+                  f"loss {float(loss):.4f} lr {cur_lr:.2e}", flush=True)
+    ppl = eval_ppl(cfg, ws, val_tokens, seq)
+    log.append({"final_val_ppl": ppl})
+    print(f"[train {cfg.name}] final val ppl {ppl:.3f}")
+    os.makedirs(outdir, exist_ok=True)
+    stio.save(os.path.join(outdir, f"{cfg.name}.safetensors"),
+              {k: np.asarray(vv) for k, vv in ws.items()})
+    with open(os.path.join(outdir, f"train_log_{cfg.name}.json"), "w") as f:
+        json.dump(log, f, indent=1)
+    return ws, ppl

@@ -1,0 +1,72 @@
+"""Synthetic corpus / task generator invariants."""
+
+import numpy as np
+
+from compile import data
+
+
+def test_corpus_deterministic():
+    a = data.gen_corpus(5000, seed=3)
+    b = data.gen_corpus(5000, seed=3)
+    np.testing.assert_array_equal(a, b)
+    c = data.gen_corpus(5000, seed=4)
+    assert not np.array_equal(a, c)
+
+
+def test_corpus_tokens_in_vocab():
+    t = data.gen_corpus(20000, seed=0)
+    assert t.min() >= 0 and t.max() < data.VOCAB
+
+
+def test_cloze_targets_recoverable():
+    tasks = data.gen_cloze(50)
+    for t in tasks:
+        # target is a noun and appears earlier in the context (coreference)
+        assert data.NOUN0 <= t["target"] < data.NOUN0 + data.N_NOUN
+        assert t["target"] in t["ctx"], "copy source must be in context"
+        # final-sentence cue: context ends with ... THEN-THE
+        assert t["ctx"][-1] == data.THE
+        assert data.THEN in t["ctx"]
+
+
+def test_mcq_well_formed():
+    tasks = data.gen_mcq(50)
+    for t in tasks:
+        assert len(t["candidates"]) == 4
+        assert 0 <= t["answer"] < 4
+        right = t["candidates"][t["answer"]]
+        wrong = [c for i, c in enumerate(t["candidates"])
+                 if i != t["answer"]]
+        rcls = data.noun_class(right - data.NOUN0)
+        for w in wrong:
+            assert data.noun_class(w - data.NOUN0) != rcls
+
+
+def test_fewshot_answer_is_category():
+    tasks = data.gen_fewshot(30)
+    for t in tasks:
+        assert len(t["candidates"]) == data.N_CAT
+        # the context's final tokens are 'the NOUN isa'
+        assert t["ctx"][-1] == data.ISA
+        noun = t["ctx"][-2]
+        assert data.noun_category(noun - data.NOUN0) == t["answer"]
+
+
+def test_grammar_agreement_in_corpus():
+    """When a subject class has a matching verb class, the sampled
+    THE-NOUN-VERB trigram must obey it (classes without a match fall back
+    to an arbitrary verb — the grammar's 'irregular verbs')."""
+    g = data.Grammar(9)
+    covered = {int(c) for c in g.verb_subj}
+    checked = 0
+    for _ in range(300):
+        toks, subj = g.sentence()
+        scls = data.noun_class(subj - data.NOUN0)
+        if scls not in covered:
+            continue
+        i = toks.index(subj)
+        verb = toks[i + 1]
+        vcls = data.verb_class(verb - data.VERB0)
+        assert int(g.verb_subj[vcls]) == scls
+        checked += 1
+    assert checked > 50

@@ -1,0 +1,221 @@
+"""Pallas kernels vs the pure-jnp oracles — the CORE L1 correctness
+signal, swept over shapes/dtypes with hypothesis."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (asym, common, fastgemm, finegrained, fpgemm,
+                             ref, w4a16, w8a8)
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def rand_case(seed, m, k, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    return x, w
+
+
+dims = st.tuples(
+    st.integers(1, 5),            # m multiplier
+    st.integers(1, 4),            # k multiplier (x16)
+    st.integers(1, 4),            # n multiplier (x8)
+    st.integers(0, 2 ** 31 - 1),  # seed
+)
+
+
+class TestFastGemm:
+    @settings(max_examples=25, deadline=None)
+    @given(dims)
+    def test_matches_ref(self, case):
+        mm, km, nm, seed = case
+        m, k, n = 3 * mm, 16 * km, 8 * nm
+        x, w = rand_case(seed, m, k, n)
+        xq, sa = ref.quant_act_per_token(x)
+        q, s = ref.quant_weight_per_channel_sym(w, 4)
+        p = ref.pack_int4(q)
+        got = fastgemm.gemm_w4a8_fast(xq, sa, p, s)
+        want = ref.gemm_w4a8_fast(xq, sa, p, s)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_m1_decode_shape(self):
+        x, w = rand_case(7, 1, 64, 48)
+        xq, sa = ref.quant_act_per_token(x)
+        q, s = ref.quant_weight_per_channel_sym(w, 4)
+        p = ref.pack_int4(q)
+        got = fastgemm.gemm_w4a8_fast(xq, sa, p, s)
+        assert got.shape == (1, 48)
+        np.testing.assert_allclose(
+            got, ref.gemm_w4a8_fast(xq, sa, p, s), rtol=RTOL, atol=ATOL)
+
+    def test_extreme_int4_values(self):
+        # all-corners weights: every int4 value appears
+        k, n = 16, 16
+        q = jnp.asarray(
+            np.tile(np.arange(-8, 8, dtype=np.int8)[:, None], (1, n)))
+        p = ref.pack_int4(q)
+        s = jnp.full((n,), 0.1, jnp.float32)
+        x = jnp.asarray(np.eye(4, k, dtype=np.float32) * 127)
+        xq, sa = ref.quant_act_per_token(x)
+        got = fastgemm.gemm_w4a8_fast(xq, sa, p, s)
+        want = ref.gemm_w4a8_fast(xq, sa, p, s)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+        # row 0 of eye picks weight row 0: check exact math
+        np.testing.assert_allclose(
+            np.asarray(got)[0],
+            np.asarray(q)[0].astype(np.float32) * 0.1 * 127
+            * np.asarray(sa)[0],
+            rtol=1e-4)
+
+
+class TestPacking:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 16), st.integers(1, 12),
+           st.integers(0, 2 ** 31 - 1))
+    def test_roundtrip(self, k2, n, seed):
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.integers(-8, 8, size=(2 * k2, n), dtype=np.int8))
+        p = ref.pack_int4(q)
+        assert p.dtype == jnp.uint8 and p.shape == (k2, n)
+        np.testing.assert_array_equal(ref.unpack_int4(p), q)
+        x16 = ref.unpack_int4_x16(p)
+        np.testing.assert_array_equal(
+            np.asarray(x16, np.int32), np.asarray(q, np.int32) * 16)
+
+    def test_paper_example(self):
+        # Fig. 5: -7 packs to low nibble 1001; high-nibble placement = -112
+        q = jnp.asarray(np.array([[-7], [3]], np.int8))
+        p = ref.pack_int4(q)
+        assert int(p[0, 0]) == 0b0011_1001
+        assert int(ref.unpack_int4_x16(p)[0, 0]) == -112
+
+
+class TestW8A8:
+    @settings(max_examples=20, deadline=None)
+    @given(dims)
+    def test_matches_ref(self, case):
+        mm, km, nm, seed = case
+        m, k, n = 2 * mm, 16 * km, 8 * nm
+        x, w = rand_case(seed, m, k, n)
+        xq, sa = ref.quant_act_per_token(x)
+        q, s = ref.quant_weight_per_channel_sym(w, 8)
+        np.testing.assert_allclose(
+            w8a8.gemm_w8a8(xq, sa, q, s),
+            ref.gemm_w8a8(xq, sa, q, s), rtol=RTOL, atol=ATOL)
+
+
+class TestGrouped:
+    # NOTE n >= 16: jax's CURRENT XLA-CPU backend has an LLVM-lowering bug
+    # (add i32 + i8 type mismatch) for tiny int8 dots inside loops at
+    # m=2, n=8; no model shape is that small.  Upstream issue, not ours.
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 4), st.integers(1, 3), st.integers(1, 3),
+           st.integers(0, 2 ** 31 - 1))
+    def test_matches_ref(self, mm, km, nm, seed):
+        g = 16
+        m, k, n = 2 * mm, g * 2 * km, 16 * nm
+        x, w = rand_case(seed, m, k, n)
+        xq, sa = ref.quant_act_per_token(x)
+        q, s = ref.quant_weight_per_group_sym(w, g, 4)
+        np.testing.assert_allclose(
+            finegrained.gemm_w4a8_grouped(xq, sa, q, s, g),
+            ref.gemm_w4a8_grouped(xq, sa, q, s, g), rtol=RTOL, atol=ATOL)
+
+
+class TestAsym:
+    @settings(max_examples=20, deadline=None)
+    @given(dims)
+    def test_matches_ref(self, case):
+        mm, km, nm, seed = case
+        m, k, n = 2 * mm, 16 * km, 8 * nm
+        x, w = rand_case(seed, m, k, n)
+        xq, sa = ref.quant_act_per_token(x)
+        u, s, z = ref.quant_weight_per_channel_asym(w, 4)
+        np.testing.assert_allclose(
+            asym.gemm_w4a8_asym(xq, sa, u, s, z),
+            ref.gemm_w4a8_asym(xq, sa, u, s, z), rtol=RTOL, atol=ATOL)
+
+    def test_skewed_weights(self):
+        # all-positive weights: asym must still reconstruct closely
+        rng = np.random.default_rng(3)
+        w = jnp.asarray(np.abs(rng.normal(size=(32, 8))).astype(np.float32))
+        u, s, z = ref.quant_weight_per_channel_asym(w, 4)
+        deq = (np.asarray(u, np.int32) - np.asarray(z)[None, :]) \
+            * np.asarray(s)[None, :]
+        assert np.abs(deq - np.asarray(w)).max() <= np.asarray(s).max() + 1e-6
+
+
+class TestW4A16:
+    @settings(max_examples=15, deadline=None)
+    @given(dims)
+    def test_matches_ref(self, case):
+        mm, km, nm, seed = case
+        g = 16
+        m, k, n = 2 * mm, g * km, 8 * nm
+        x, w = rand_case(seed, m, k, n)
+        q, s = ref.quant_weight_per_group_sym(w, g, 4)
+        np.testing.assert_allclose(
+            w4a16.gemm_w4a16(x, q, s, g),
+            ref.gemm_w4a16(x, q, s, g), rtol=RTOL, atol=ATOL)
+
+
+class TestFpAndUnfused:
+    def test_fp_matches(self):
+        x, w = rand_case(5, 8, 64, 32)
+        np.testing.assert_allclose(
+            fpgemm.gemm_fp(x, w), ref.gemm_fp(x, w), rtol=RTOL, atol=1e-4)
+
+    def test_unfused_equals_fused(self):
+        # Fig. 4(b) vs (c): identical numerics, different kernel count
+        x, w = rand_case(6, 8, 32, 16)
+        xq, sa = ref.quant_act_per_token(x)
+        q, s = ref.quant_weight_per_channel_sym(w, 4)
+        p = ref.pack_int4(q)
+        fused = fastgemm.gemm_w4a8_fast(xq, sa, p, s)
+        unfused = fpgemm.gemm_w4a8_unfused(xq, sa, p, s)
+        np.testing.assert_allclose(unfused, fused, rtol=RTOL, atol=ATOL)
+
+    def test_convert_kernel_is_x16(self):
+        rng = np.random.default_rng(8)
+        q = jnp.asarray(rng.integers(-8, 8, size=(16, 8), dtype=np.int8))
+        p = ref.pack_int4(q)
+        w16 = fpgemm.convert_sint4_to_s8x16(p)
+        np.testing.assert_array_equal(
+            np.asarray(w16, np.int32), np.asarray(q, np.int32) * 16)
+
+
+class TestActQuant:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 8), st.integers(2, 64),
+           st.integers(0, 2 ** 31 - 1))
+    def test_error_within_half_step(self, m, k, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32) * 10)
+        q, s = ref.quant_act_per_token(x)
+        deq = np.asarray(q, np.float32) * np.asarray(s)[:, None]
+        err = np.abs(deq - np.asarray(x))
+        assert (err <= np.asarray(s)[:, None] * 0.5 + 1e-6).all()
+
+    def test_zero_row(self):
+        x = jnp.zeros((2, 8), jnp.float32)
+        q, s = ref.quant_act_per_token(x)
+        assert (np.asarray(q) == 0).all() and (np.asarray(s) > 0).all()
+
+
+class TestTiling:
+    def test_largest_tile_divides(self):
+        for dim in [1, 7, 128, 11088, 4096, 77]:
+            t = common.largest_tile(dim, 128)
+            assert dim % t == 0 and 1 <= t <= 128
+
+    def test_vmem_budget_packed_half(self):
+        full = common.vmem_bytes(128, 128, 1024, 1, 1.0)
+        packed = common.vmem_bytes(128, 128, 1024, 1, 0.5)
+        assert full - packed == 1024 * 128 // 2
+
+    def test_mxu_estimate_bounds(self):
+        assert common.mxu_util_estimate(128, 128, 1024) == 1.0
+        assert common.mxu_util_estimate(1, 128, 1024) < 0.01

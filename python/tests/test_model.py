@@ -1,0 +1,101 @@
+"""L2 model invariants: pallas path vs pure-jnp oracle, prefill/decode
+consistency, KV-cache shapes, padding-mask correctness."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile import configs, model
+
+CFG = configs.ModelConfig("unit", d_model=64, n_layers=2, n_heads=4,
+                          d_ff=96, vocab=64, max_seq=32)
+
+
+@pytest.fixture(scope="module")
+def ws():
+    return model.init_weights(CFG, 0)
+
+
+def toks(seed, b, s):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(3, CFG.vocab, size=(b, s)), jnp.int32)
+
+
+@pytest.mark.parametrize("variant", configs.VARIANTS)
+def test_pallas_matches_ref(ws, variant):
+    t = toks(1, 2, 8)
+    length = jnp.asarray([8, 8], jnp.int32)
+    flat = model.quantize_weights(CFG, ws, variant, group=16)
+    lr = np.asarray(model.prefill(CFG, variant, t, length, *flat,
+                                  group=16, use_ref=True)[0])
+    lp = np.asarray(model.prefill(CFG, variant, t, length, *flat,
+                                  group=16, use_ref=False)[0])
+    # int-quant boundaries amplify 1-ulp scale diffs; top-1 must agree
+    assert np.abs(lr - lp).max() < 0.05
+    assert (lr.argmax(-1) == lp.argmax(-1)).mean() > 0.95
+
+
+def test_decode_consistent_with_prefill(ws):
+    variant = "fp"
+    t = toks(2, 2, 8)
+    length = jnp.asarray([8, 8], jnp.int32)
+    flat = model.quantize_weights(CFG, ws, variant, group=16)
+    out = model.prefill(CFG, variant, t, length, *flat, group=16)
+    logits = np.asarray(out[0])
+    ks, vs = out[1:1 + CFG.n_layers], out[1 + CFG.n_layers:]
+    # feed token at position 5; decode logits must equal prefill position 5
+    dout = model.decode(CFG, variant, t[:, 5], jnp.asarray([5, 5], jnp.int32),
+                        *ks, *vs, *flat, group=16)
+    np.testing.assert_allclose(np.asarray(dout[0]), logits[:, 5],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_padding_mask_blocks_future(ws):
+    """Row with length=4 must produce the same logits at position 3 as a
+    row whose padding tokens differ — padding cannot leak."""
+    variant = "fp"
+    flat = model.quantize_weights(CFG, ws, variant, group=16)
+    t1 = toks(3, 1, 8)
+    t2 = np.asarray(t1).copy()
+    t2[0, 4:] = 5  # different padding content
+    length = jnp.asarray([4], jnp.int32)
+    l1 = np.asarray(model.prefill(CFG, variant, t1, length, *flat,
+                                  group=16)[0])
+    l2 = np.asarray(model.prefill(CFG, variant, jnp.asarray(t2), length,
+                                  *flat, group=16)[0])
+    np.testing.assert_allclose(l1[0, 3], l2[0, 3], rtol=1e-5, atol=1e-5)
+
+
+def test_kv_cache_shapes(ws):
+    variant = "fp"
+    flat = model.quantize_weights(CFG, ws, variant, group=16)
+    t = toks(4, 1, 8)
+    out = model.prefill(CFG, variant, t, jnp.asarray([8], jnp.int32), *flat,
+                        group=16)
+    assert len(out) == 1 + 2 * CFG.n_layers
+    for c in out[1:]:
+        assert c.shape == (1, CFG.n_heads, CFG.max_seq, CFG.head_dim)
+
+
+def test_flat_param_entries_match_payloads(ws):
+    for variant in configs.VARIANTS:
+        flat = model.quantize_weights(CFG, ws, variant, group=16)
+        ents = model.flat_param_entries(CFG, variant, group=16)
+        assert len(flat) == len(ents)
+        for arr, (_n, shape, dt) in zip(flat, ents):
+            assert tuple(arr.shape) == tuple(shape)
+            assert arr.dtype == dt
+
+
+def test_batch_rows_independent(ws):
+    """Each batch row's logits depend only on its own tokens."""
+    variant = "fp"
+    flat = model.quantize_weights(CFG, ws, variant, group=16)
+    t = toks(5, 2, 8)
+    length = jnp.asarray([8, 8], jnp.int32)
+    both = np.asarray(model.prefill(CFG, variant, t, length, *flat,
+                                    group=16)[0])
+    solo = np.asarray(model.prefill(
+        CFG, variant, t[:1], jnp.asarray([8], jnp.int32),
+        *flat, group=16)[0])
+    np.testing.assert_allclose(both[0], solo[0], rtol=1e-5, atol=1e-5)

@@ -1,0 +1,134 @@
+"""Quantization reference (compile/quant.py) property tests — the same
+invariants the rust quant core asserts, so both sides stay honest."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+
+def rand_w(seed, k=32, n=8):
+    return np.random.default_rng(seed).normal(size=(k, n)) \
+        .astype(np.float32)
+
+
+def calib(seed, t=128, k=32):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(t, k)).astype(np.float32)
+    x[:, 3] *= 6.0  # outlier channel, like real activations
+    h = (2.0 * x.T @ x / t).astype(np.float32)
+    return x, h
+
+
+class TestRtn:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.sampled_from([4, 8]))
+    def test_values_in_range(self, seed, bits):
+        q, s = quant.rtn_per_channel(rand_w(seed), bits)
+        lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+        assert q.min() >= lo and q.max() <= hi
+        assert (s > 0).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_group_beats_channel_mse(self, seed):
+        w = rand_w(seed)
+        qc, sc = quant.rtn_per_channel(w, 4)
+        qg, sg = quant.rtn_per_group(w, 8, 4)
+        mse_c = np.mean((quant.dequant_per_channel(qc, sc) - w) ** 2)
+        wg = qg.reshape(4, 8, 8).astype(np.float32) * sg[:, None, :]
+        mse_g = np.mean((wg.reshape(32, 8) - w) ** 2)
+        assert mse_g <= mse_c + 1e-12
+
+
+class TestLwc:
+    def test_grid_never_hurts(self):
+        w = rand_w(1, 128, 6)
+        g, b = quant.lwc_grid_search(w, 4)
+        qv, sv = quant.rtn_per_channel(w, 4)
+        qc, sc = quant.rtn_per_channel(w, 4, g, b)
+        mse_v = np.mean((quant.dequant_per_channel(qv, sv) - w) ** 2)
+        mse_c = np.mean((quant.dequant_per_channel(qc, sc) - w) ** 2)
+        assert mse_c <= mse_v + 1e-12
+
+    def test_sgd_comparable_to_grid(self):
+        # the paper's SGD-learned clipping should land near the grid
+        # optimum on the same objective
+        w = rand_w(2, 128, 4)
+        w[np.abs(w) > 2.0] *= 3.0  # heavy tails
+        gg, gb = quant.lwc_grid_search(w, 4)
+        sg, sb = quant.lwc_sgd(w, 4, steps=150)
+
+        def mse(gamma, beta):
+            q, s = quant.rtn_per_channel(w, 4, gamma, beta)
+            return np.mean((quant.dequant_per_channel(q, s) - w) ** 2)
+
+        m_grid, m_sgd = mse(gg, gb), mse(sg, sb)
+        m_van = mse(None, None)
+        assert m_grid <= m_van
+        # STE-SGD takes small steps on a piecewise-constant objective; it
+        # must move in the right direction (improve on vanilla), while the
+        # exhaustive grid remains the tighter optimum the rust port uses.
+        assert m_sgd <= m_van + 1e-12
+        assert m_grid <= m_sgd + 1e-12
+
+
+class TestGptq:
+    def test_beats_rtn_on_output_mse(self):
+        w = rand_w(3)
+        x, h = calib(4)
+        q, s, _ = quant.gptq_quantize(w, h, 4)
+        w_g = quant.dequant_per_channel(q, s)
+        qr, sr = quant.rtn_per_channel(w, 4)
+        w_r = quant.dequant_per_channel(qr, sr)
+        e_g = np.mean((x @ w_g - x @ w) ** 2)
+        e_r = np.mean((x @ w_r - x @ w) ** 2)
+        assert e_g < e_r, f"gptq {e_g} vs rtn {e_r}"
+
+    def test_act_order_permutation_valid(self):
+        w = rand_w(5)
+        _, h = calib(6)
+        q, s, perm = quant.gptq_quantize(w, h, 4, act_order=True)
+        assert sorted(perm.tolist()) == list(range(32))
+        assert q.shape == w.shape
+
+    def test_identity_hessian_is_rtn(self):
+        w = rand_w(7)
+        h = np.eye(32, dtype=np.float32)
+        q, s, _ = quant.gptq_quantize(w, h, 4)
+        qr, sr = quant.rtn_per_channel(w, 4)
+        np.testing.assert_array_equal(q, qr)
+
+    def test_group_act_order_rejected(self):
+        w = rand_w(8)
+        _, h = calib(9)
+        try:
+            quant.gptq_quantize(w, h, 4, act_order=True, group=8)
+            raise RuntimeError("should have raised")
+        except AssertionError:
+            pass
+
+
+class TestSmoothQuant:
+    def test_forward_invariance(self):
+        w = rand_w(10, 16, 8)
+        x, _ = calib(11, 64, 16)
+        s = quant.smoothquant_scales(np.abs(x).max(0), w, 0.5)
+        y0 = x @ w
+        y1 = (x / s[None, :]) @ (w * s[:, None])
+        np.testing.assert_allclose(y0, y1, rtol=1e-4, atol=1e-4)
+
+    def test_outlier_channel_scaled_up(self):
+        w = rand_w(12, 16, 8)
+        absmax = np.ones(16, np.float32)
+        absmax[3] = 50.0
+        s = quant.smoothquant_scales(absmax, w, 0.5)
+        assert s[3] > s[(np.arange(16) != 3)].max()
+
+
+class TestAwq:
+    def test_scales_positive(self):
+        w = rand_w(13, 16, 8)
+        x, _ = calib(14, 64, 16)
+        s = quant.awq_scales(np.abs(x).mean(0), w, x, bits=4, group=8)
+        assert (s > 0).all() and np.isfinite(s).all()

@@ -1,0 +1,29 @@
+"""safetensors io roundtrip (the format the rust side mirrors)."""
+
+import numpy as np
+
+from compile import stio
+
+
+def test_roundtrip(tmp_path):
+    p = str(tmp_path / "t.safetensors")
+    tensors = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b.q": np.array([-8, 0, 7], np.int8),
+        "c": np.array([1, 65535], np.uint16),
+        "d": np.arange(4, dtype=np.int32),
+    }
+    stio.save(p, tensors)
+    back = stio.load(p)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+def test_header_is_8_aligned(tmp_path):
+    p = str(tmp_path / "t.safetensors")
+    stio.save(p, {"x": np.zeros(3, np.float32)})
+    raw = open(p, "rb").read()
+    n = int.from_bytes(raw[:8], "little")
+    assert (8 + n) % 8 == 0

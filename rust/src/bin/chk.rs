@@ -1,0 +1,16 @@
+use odyssey::runtime::Runtime;
+fn main() -> anyhow::Result<()> {
+    let mut rt = Runtime::new("artifacts")?;
+    let gi = rt.manifest.graph("tiny3m_fp_decode_b1")?.clone();
+    let args: Vec<_> = gi.params.iter().map(|p| odyssey::runtime::literal_zeros(p).unwrap()).collect();
+    let bufs = rt.stage(&args)?;
+    let exe = rt.executable("tiny3m_fp_decode_b1")?;
+    let out = exe.execute::<xla::Literal>(&args)?;
+    println!("replicas={} buffers_per_replica={}", out.len(), out[0].len());
+    println!("buf0 shape: {:?}", out[0][0].on_device_shape()?);
+    let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+    let out2 = exe.execute_b::<&xla::PjRtBuffer>(&refs)?;
+    println!("execute_b buffers_per_replica={}", out2[0].len());
+    println!("b shape0: {:?}", out2[0][0].on_device_shape()?);
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! Build-pipeline smoke test: load the AOT fastgemm HLO (packed int4 + s8
+//! activation quant, lowered from the Pallas kernel) on the PJRT CPU client
+//! and compare against python-side goldens.  Run via `make smoke`.
+use anyhow::Result;
+use xla::FromRawBytes;
+
+fn main() -> Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    println!("platform={}", client.platform_name());
+    let proto = xla::HloModuleProto::from_text_file("artifacts/smoke_fastgemm.hlo.txt")?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+
+    let x = xla::Literal::read_npy("/tmp/smoke_x.npy", &())?;
+    let p = xla::Literal::read_npy("/tmp/smoke_p.npy", &())?;
+    let s = xla::Literal::read_npy("/tmp/smoke_s.npy", &())?;
+    let want = xla::Literal::read_npy("/tmp/smoke_out.npy", &())?.to_vec::<f32>()?;
+
+    let out = exe.execute::<xla::Literal>(&[x, p, s])?[0][0]
+        .to_literal_sync()?
+        .to_tuple1()?
+        .to_vec::<f32>()?;
+    assert_eq!(out.len(), want.len());
+    let max_err = out
+        .iter()
+        .zip(want.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!("max_err={max_err}");
+    assert!(max_err < 1e-4, "bridge numerics mismatch");
+    println!("smoke_bridge OK");
+    Ok(())
+}

@@ -1,0 +1,154 @@
+//! Hand-rolled CLI substrate (clap is unavailable offline): flag parsing
+//! with `--key value` / `--switch` syntax plus positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (without the program name).  `switch_names` lists flags
+    /// that take no value.
+    pub fn parse(argv: &[String], switch_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if switch_names.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else {
+                    i += 1;
+                    let v = argv.get(i).ok_or_else(|| {
+                        anyhow!("flag --{name} needs a value")
+                    })?;
+                    out.flags.insert(name.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v}")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+pub const USAGE: &str = "\
+odyssey — deployable W4A8 quantization for LLMs (paper reproduction)
+
+USAGE:
+  odyssey <command> [flags]
+
+COMMANDS:
+  info                         show manifest summary (models, graphs)
+  quantize                     quantize a checkpoint to a variant
+      --model tiny3m --variant w4a8_fast --recipe odyssey --out q.safetensors
+      recipes: odyssey | vanilla | lwc | smoothquant | rtn-g | gptq-g | awq-g
+  eval                         perplexity + cloze for one method
+      --model tiny3m --variant w4a8_fast --recipe odyssey
+  generate                     one-shot generation from a token prompt
+      --prompt 1,17,140,9 --max-new-tokens 16 --variant w4a8_fast
+  serve                        HTTP server (POST /generate, GET /stats)
+      --addr 127.0.0.1:8080 --variant w4a8_fast --workers 4
+  bench-gemm                   measured GEMM kernels (cpu shape set)
+      --variants w4a8_fast,w8a8 --m 1
+  reproduce <exp|all>          regenerate a paper table/figure
+      exps: fig1 fig3 fig6 fig7 tab1 tab2 tab3 tab4 tab5 tab6 tab7 tab8 e2e
+
+GLOBAL FLAGS:
+  --artifacts DIR              artifacts directory (default: artifacts)
+";
+
+/// Recipe names accepted by --recipe.
+pub fn parse_recipe(name: &str) -> Result<crate::quant::QuantRecipe> {
+    use crate::quant::QuantRecipe as R;
+    Ok(match name {
+        "odyssey" => R::odyssey(),
+        "vanilla" => R::vanilla_w4(),
+        "lwc" => R::lwc_only(),
+        "smoothquant" => R::smoothquant_w8(),
+        "rtn-g" => R::rtn_grouped(0),
+        "gptq-g" => R::gptq_grouped(0),
+        "awq-g" => R::awq_grouped(0),
+        "gptq-ro" => R::gptq_ro(),
+        other => return Err(anyhow!("unknown recipe '{other}'")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(
+            &sv(&["reproduce", "tab5", "--artifacts", "art", "--force"]),
+            &["force"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["reproduce", "tab5"]);
+        assert_eq!(a.get("artifacts"), Some("art"));
+        assert!(a.has("force"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&sv(&["--model=tiny9m"]), &[]).unwrap();
+        assert_eq!(a.get("model"), Some("tiny9m"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&sv(&["--model"]), &[]).is_err());
+    }
+
+    #[test]
+    fn usize_parsing() {
+        let a = Args::parse(&sv(&["--n", "12"]), &[]).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 12);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        let b = Args::parse(&sv(&["--n", "xy"]), &[]).unwrap();
+        assert!(b.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn recipes_resolve() {
+        assert!(parse_recipe("odyssey").is_ok());
+        assert!(parse_recipe("gptq-g").is_ok());
+        assert!(parse_recipe("nope").is_err());
+    }
+}

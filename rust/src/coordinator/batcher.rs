@@ -1,0 +1,176 @@
+//! Continuous batching policy.
+//!
+//! The paper's engine (like vLLM/Orca) interleaves two kinds of work:
+//! *prefill* (compute-bound, batch of new prompts) and *self-decode*
+//! (memory-bound, one token for every active sequence).  The batcher
+//! decides each engine iteration: admit new requests into free KV slots
+//! via a prefill step, then run one decode step over the active slots.
+//! Prefill-priority keeps TTFT low; decode keeps all slots moving.
+
+use super::queue::RequestQueue;
+use super::request::Request;
+
+/// What the engine should do next.
+#[derive(Debug)]
+pub enum Step {
+    /// Run a prefill over these requests (assigned to the given KV slots).
+    Prefill(Vec<(Request, usize)>),
+    /// Run one decode step over the active slots.
+    Decode,
+    /// Nothing to do.
+    Idle,
+}
+
+/// Batching policy knobs.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// max requests admitted per prefill step (graph bucket size)
+    pub prefill_batch: usize,
+    /// max prompt tokens per request (graph seq bucket)
+    pub max_prompt: usize,
+    /// admit new work before decoding when slots are free
+    pub prefill_priority: bool,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { prefill_batch: 4, max_prompt: 128, prefill_priority: true }
+    }
+}
+
+/// Decide the next step.  `free_slots` comes from the KV manager,
+/// `active` is the number of occupied slots, `alloc` claims slots.
+pub fn next_step(
+    policy: &BatchPolicy,
+    queue: &mut RequestQueue,
+    free_slots: usize,
+    active: usize,
+    mut alloc: impl FnMut(u64) -> Option<usize>,
+) -> (Step, Vec<Request>) {
+    let want_prefill = !queue.is_empty()
+        && free_slots > 0
+        && (policy.prefill_priority || active == 0);
+    if want_prefill {
+        let n = policy.prefill_batch.min(free_slots);
+        let (batch, rejected) = queue.pop_batch(n, policy.max_prompt);
+        if !batch.is_empty() {
+            let mut assigned = Vec::new();
+            let mut overflow = Vec::new();
+            for r in batch {
+                match alloc(r.id) {
+                    Some(slot) => assigned.push((r, slot)),
+                    None => overflow.push(r),
+                }
+            }
+            // overflow shouldn't happen (we checked free_slots) but keep
+            // requests safe by treating them as rejected-for-retry
+            let mut rej = rejected;
+            rej.extend(overflow);
+            if !assigned.is_empty() {
+                return (Step::Prefill(assigned), rej);
+            }
+            return (Step::Idle, rej);
+        }
+        if active > 0 {
+            return (Step::Decode, rejected);
+        }
+        return (Step::Idle, rejected);
+    }
+    if active > 0 {
+        (Step::Decode, Vec::new())
+    } else {
+        (Step::Idle, Vec::new())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::GenParams;
+
+    fn req(id: u64, len: usize) -> Request {
+        Request::new(id, vec![1; len], GenParams::default())
+    }
+
+    fn seq_alloc() -> impl FnMut(u64) -> Option<usize> {
+        let mut next = 0usize;
+        move |_| {
+            let s = next;
+            next += 1;
+            Some(s)
+        }
+    }
+
+    #[test]
+    fn prefill_takes_priority() {
+        let mut q = RequestQueue::new(8);
+        q.push(req(1, 4));
+        q.push(req(2, 4));
+        let (step, rej) =
+            next_step(&BatchPolicy::default(), &mut q, 4, 2, seq_alloc());
+        assert!(rej.is_empty());
+        match step {
+            Step::Prefill(batch) => {
+                assert_eq!(batch.len(), 2);
+                assert_eq!(batch[0].1, 0);
+                assert_eq!(batch[1].1, 1);
+            }
+            other => panic!("expected prefill, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_when_queue_empty() {
+        let mut q = RequestQueue::new(8);
+        let (step, _) =
+            next_step(&BatchPolicy::default(), &mut q, 2, 3, seq_alloc());
+        assert!(matches!(step, Step::Decode));
+    }
+
+    #[test]
+    fn idle_when_nothing() {
+        let mut q = RequestQueue::new(8);
+        let (step, _) =
+            next_step(&BatchPolicy::default(), &mut q, 4, 0, seq_alloc());
+        assert!(matches!(step, Step::Idle));
+    }
+
+    #[test]
+    fn no_slots_forces_decode() {
+        let mut q = RequestQueue::new(8);
+        q.push(req(1, 4));
+        let (step, _) =
+            next_step(&BatchPolicy::default(), &mut q, 0, 4, seq_alloc());
+        assert!(matches!(step, Step::Decode));
+        assert_eq!(q.len(), 1, "request stays queued");
+    }
+
+    #[test]
+    fn oversize_prompt_rejected_not_batched() {
+        let mut q = RequestQueue::new(8);
+        q.push(req(1, 4096));
+        q.push(req(2, 4));
+        let (step, rej) =
+            next_step(&BatchPolicy::default(), &mut q, 4, 0, seq_alloc());
+        assert_eq!(rej.len(), 1);
+        match step {
+            Step::Prefill(batch) => assert_eq!(batch[0].0.id, 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bucket_cap_respected() {
+        let mut q = RequestQueue::new(16);
+        for i in 0..10 {
+            q.push(req(i, 4));
+        }
+        let policy = BatchPolicy { prefill_batch: 4, ..Default::default() };
+        let (step, _) = next_step(&policy, &mut q, 8, 0, seq_alloc());
+        match step {
+            Step::Prefill(batch) => assert_eq!(batch.len(), 4),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(q.len(), 6);
+    }
+}

@@ -1,0 +1,606 @@
+//! The generation engine: owns the PJRT runtime, the quantized weights,
+//! and the KV state; executes the continuous-batching loop over the AOT
+//! prefill/decode executables.
+//!
+//! Python is long gone by the time this runs — the executables come from
+//! `artifacts/*.hlo.txt` and the weights from the rust quantizer.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::batcher::{next_step, BatchPolicy, Step};
+use crate::coordinator::kv::KvState;
+use crate::coordinator::metrics::EngineMetrics;
+use crate::coordinator::queue::{Admit, RequestQueue};
+use crate::coordinator::request::{
+    FinishReason, GenResult, Request,
+};
+use crate::formats::config::GraphKind;
+use crate::model::{self, Calibration, Checkpoint};
+use crate::quant::QuantRecipe;
+use crate::runtime::{self, Literal, Runtime};
+use crate::util::XorShift;
+
+/// Engine construction options.
+#[derive(Clone, Debug)]
+pub struct EngineOptions {
+    pub artifacts_dir: String,
+    pub model: String,
+    pub variant: String,
+    pub recipe: QuantRecipe,
+    pub prefill_batch: usize,
+    pub decode_batch: usize,
+    pub max_queue: usize,
+    /// load a pre-quantized checkpoint instead of quantizing at startup
+    pub checkpoint: Option<String>,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            artifacts_dir: "artifacts".into(),
+            model: "tiny3m".into(),
+            variant: "w4a8_fast".into(),
+            recipe: QuantRecipe::odyssey(),
+            prefill_batch: 4,
+            decode_batch: 4,
+            max_queue: 256,
+            checkpoint: None,
+        }
+    }
+}
+
+struct ActiveSeq {
+    req: Request,
+    slot: usize,
+    generated: Vec<i32>,
+    last_token: i32,
+    ttft_s: f64,
+    rng: XorShift,
+}
+
+/// The engine.  Single-threaded by design (PJRT handles intra-op
+/// parallelism); wrap in [`super::EngineHandle`] for concurrent callers.
+pub struct Engine {
+    pub rt: Runtime,
+    pub opts: EngineOptions,
+    info: crate::formats::config::ModelInfo,
+    weight_args: Vec<Literal>,
+    kv: KvState,
+    /// Device-format KV from the last decode step (k literals then v
+    /// literals).  When `Some`, these are authoritative and the host
+    /// arrays in `kv` are stale; prefill slot-splices sync back first.
+    /// Avoids the parse-to-f32 + rebuild round-trip every decode step
+    /// (EXPERIMENTS.md §Perf).
+    kv_lits: Option<Vec<Literal>>,
+    queue: RequestQueue,
+    policy: BatchPolicy,
+    active: BTreeMap<u64, ActiveSeq>,
+    pub metrics: EngineMetrics,
+    prefill_graph: String,
+    decode_graph: String,
+    finished: Vec<GenResult>,
+}
+
+impl Engine {
+    /// Build the engine: load manifest + checkpoint, quantize weights for
+    /// the variant, compile the two serving graphs.
+    pub fn new(opts: EngineOptions) -> Result<Self> {
+        let t0 = Instant::now();
+        let mut rt = Runtime::new(&opts.artifacts_dir)?;
+        let info = rt.manifest.model(&opts.model)?.clone();
+        let group = rt.manifest.group_size;
+
+        // ---- weights
+        let payload_names = model::payload_names(&info, &opts.variant)?;
+        let qw = if let Some(path) = &opts.checkpoint {
+            model::QuantizedWeights::load(
+                std::path::Path::new(path),
+                &opts.variant,
+                &payload_names,
+            )?
+        } else {
+            let ckpt = Checkpoint::load(&rt.manifest, &opts.model)?;
+            let calib = if opts.recipe.use_gptq
+                || opts.recipe.use_lwc
+                || opts.recipe.use_smoothquant
+                || opts.recipe.use_awq
+            {
+                Some(Calibration::load(&rt.manifest, &opts.model)?)
+            } else {
+                None
+            };
+            model::quantize_checkpoint(
+                &ckpt,
+                calib.as_ref(),
+                &opts.recipe,
+                &opts.variant,
+                group,
+            )?
+        };
+        if qw.names != payload_names {
+            bail!("weight payload names diverge from manifest order");
+        }
+        let weight_args = qw
+            .tensors
+            .iter()
+            .map(runtime::literal_from_st)
+            .collect::<Result<Vec<_>>>()?;
+
+        // ---- graphs
+        let prefill_graph = rt.manifest.stage_graph(
+            &opts.model,
+            &opts.variant,
+            "prefill",
+            opts.prefill_batch,
+        );
+        let decode_graph = rt.manifest.stage_graph(
+            &opts.model,
+            &opts.variant,
+            "decode",
+            opts.decode_batch,
+        );
+        // verify + eager-compile
+        for (g, kind) in [
+            (&prefill_graph, GraphKind::Prefill),
+            (&decode_graph, GraphKind::Decode),
+        ] {
+            let gi = rt.manifest.graph(g)?;
+            if gi.kind != kind {
+                bail!("graph {g} has wrong kind");
+            }
+        }
+        rt.executable(&prefill_graph)?;
+        rt.executable(&decode_graph)?;
+
+        let prefill_seq =
+            rt.manifest.graph(&prefill_graph)?.seq;
+        let kv = KvState::new(
+            opts.decode_batch,
+            info.n_layers,
+            info.n_heads,
+            info.max_seq,
+            info.head_dim,
+        );
+        crate::util::log::info(&format!(
+            "engine up: model={} variant={} params={:.1}M graphs=({}, {}) in {:.2}s",
+            opts.model,
+            opts.variant,
+            info.n_params as f64 / 1e6,
+            prefill_graph,
+            decode_graph,
+            t0.elapsed().as_secs_f64(),
+        ));
+        Ok(Engine {
+            rt,
+            info,
+            weight_args,
+            kv,
+            kv_lits: None,
+            queue: RequestQueue::new(opts.max_queue),
+            policy: BatchPolicy {
+                prefill_batch: opts.prefill_batch,
+                max_prompt: prefill_seq,
+                prefill_priority: true,
+            },
+            active: BTreeMap::new(),
+            metrics: EngineMetrics::default(),
+            prefill_graph,
+            decode_graph,
+            finished: Vec::new(),
+            opts,
+        })
+    }
+
+    pub fn info(&self) -> &crate::formats::config::ModelInfo {
+        &self.info
+    }
+
+    /// Reset metrics counters (test/bench hygiene when reusing an engine).
+    pub fn reset_metrics(&mut self) {
+        self.metrics = EngineMetrics::default();
+    }
+
+    /// Submit a request; `false` means shed (queue full).
+    pub fn submit(&mut self, req: Request) -> bool {
+        matches!(self.queue.push(req), Admit::Accepted)
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.active.len()
+    }
+
+    /// Drain finished results accumulated since the last call.
+    pub fn take_finished(&mut self) -> Vec<GenResult> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Run engine iterations until no work remains.
+    pub fn run_until_idle(&mut self) -> Result<Vec<GenResult>> {
+        while self.step()? {}
+        Ok(self.take_finished())
+    }
+
+    /// One engine iteration.  Returns false when idle.
+    pub fn step(&mut self) -> Result<bool> {
+        let free = self.kv.free_slots();
+        let active = self.active.len();
+        let kvref = &mut self.kv;
+        let (step, rejected) = next_step(
+            &self.policy,
+            &mut self.queue,
+            free,
+            active,
+            |rid| kvref.alloc(rid).ok(),
+        );
+        for r in rejected {
+            self.finished.push(GenResult {
+                id: r.id,
+                prompt_len: r.prompt.len(),
+                tokens: Vec::new(),
+                finish: FinishReason::Rejected,
+                ttft_s: 0.0,
+                total_s: r.arrived.elapsed().as_secs_f64(),
+            });
+            self.metrics.rejected += 1;
+        }
+        match step {
+            Step::Idle => Ok(false),
+            Step::Prefill(batch) => {
+                self.do_prefill(batch)?;
+                Ok(true)
+            }
+            Step::Decode => {
+                self.do_decode()?;
+                Ok(true)
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // prefill
+    // ------------------------------------------------------------------
+    fn do_prefill(&mut self, batch: Vec<(Request, usize)>) -> Result<()> {
+        let t0 = Instant::now();
+        let b = self.opts.prefill_batch;
+        let s = self.policy.max_prompt;
+        let v = self.info.vocab;
+        let n_layers = self.info.n_layers;
+
+        let mut tokens = vec![0i32; b * s];
+        let mut lengths = vec![0i32; b];
+        for (row, (req, _slot)) in batch.iter().enumerate() {
+            lengths[row] = req.prompt.len() as i32;
+            tokens[row * s..row * s + req.prompt.len()]
+                .copy_from_slice(&req.prompt);
+        }
+        let tok_l = runtime::literal_i32(&[b, s], &tokens)?;
+        let len_l = runtime::literal_i32(&[b], &lengths)?;
+        let mut args: Vec<&Literal> =
+            Vec::with_capacity(2 + self.weight_args.len());
+        args.push(&tok_l);
+        args.push(&len_l);
+        args.extend(self.weight_args.iter());
+
+        let outs = self.rt.run_literal_refs(&self.prefill_graph, &args)?;
+        if outs.len() != 1 + 2 * n_layers {
+            bail!("prefill returned {} outputs", outs.len());
+        }
+        let logits = runtime::literal_to_f32(&outs[0], b * s * v)?;
+        let mut layer_k = Vec::with_capacity(n_layers);
+        let mut layer_v = Vec::with_capacity(n_layers);
+        let cache_len =
+            b * self.info.n_heads * self.info.max_seq * self.info.head_dim;
+        for l in 0..n_layers {
+            layer_k.push(runtime::literal_to_f32(&outs[1 + l], cache_len)?);
+        }
+        for l in 0..n_layers {
+            layer_v.push(runtime::literal_to_f32(
+                &outs[1 + n_layers + l],
+                cache_len,
+            )?);
+        }
+
+        let dt = t0.elapsed().as_secs_f64();
+        self.metrics.prefill_steps += 1;
+        self.metrics.prefill_time_s += dt;
+        let n_reqs = batch.len();
+
+        // the slot splice below edits the HOST arrays: fold any newer
+        // device-format KV back first
+        self.sync_kv_to_host()?;
+        for (row, (req, slot)) in batch.into_iter().enumerate() {
+            let plen = req.prompt.len();
+            self.kv.install_from_prefill(
+                slot, &layer_k, &layer_v, row, b, plen,
+            )?;
+            // sample the first generated token from the last prompt logit
+            let off = (row * s + (plen - 1)) * v;
+            let mut rng = XorShift::new(req.params.seed ^ req.id);
+            let tok = sample(&logits[off..off + v], &req.params.temperature,
+                             req.params.top_k, &mut rng);
+            let ttft = req.arrived.elapsed().as_secs_f64();
+            self.metrics.prefill_tokens += plen as u64;
+            self.active.insert(
+                req.id,
+                ActiveSeq {
+                    slot,
+                    generated: vec![tok],
+                    last_token: tok,
+                    ttft_s: ttft,
+                    rng,
+                    req,
+                },
+            );
+        }
+        crate::util::log::debug(&format!(
+            "prefill: {n_reqs} reqs in {:.1}ms",
+            dt * 1e3
+        ));
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // decode
+    // ------------------------------------------------------------------
+    fn do_decode(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        let b = self.opts.decode_batch;
+        let v = self.info.vocab;
+        let n_layers = self.info.n_layers;
+
+        let mut token = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        for seq in self.active.values() {
+            token[seq.slot] = seq.last_token;
+            pos[seq.slot] = self.kv.pos[seq.slot] as i32;
+        }
+
+        let tok_l = runtime::literal_i32(&[b], &token)?;
+        let pos_l = runtime::literal_i32(&[b], &pos)?;
+        let kv_shape = [
+            b,
+            self.info.n_heads,
+            self.info.max_seq,
+            self.info.head_dim,
+        ];
+        // KV: reuse last step's output literals verbatim; rebuild from
+        // the host arrays only after a prefill changed slot contents.
+        let kv_local: Vec<Literal>;
+        let kv_refs: Vec<&Literal> = match &self.kv_lits {
+            Some(lits) => lits.iter().collect(),
+            None => {
+                let mut lits = Vec::with_capacity(2 * n_layers);
+                for l in 0..n_layers {
+                    lits.push(runtime::literal_f32(&kv_shape,
+                                                   &self.kv.k[l])?);
+                }
+                for l in 0..n_layers {
+                    lits.push(runtime::literal_f32(&kv_shape,
+                                                   &self.kv.v[l])?);
+                }
+                kv_local = lits;
+                kv_local.iter().collect()
+            }
+        };
+        let mut args: Vec<&Literal> = Vec::with_capacity(
+            2 + 2 * n_layers + self.weight_args.len());
+        args.push(&tok_l);
+        args.push(&pos_l);
+        args.extend(kv_refs);
+        args.extend(self.weight_args.iter());
+
+        let mut outs = self.rt.run_literal_refs(&self.decode_graph, &args)?;
+        if outs.len() != 1 + 2 * n_layers {
+            bail!("decode returned {} outputs", outs.len());
+        }
+        let logits = runtime::literal_to_f32(&outs[0], b * v)?;
+        // keep the updated KV in device format (no f32 parse/rebuild)
+        self.kv_lits = Some(outs.split_off(1));
+
+        let dt = t0.elapsed().as_secs_f64();
+        self.metrics.decode_steps += 1;
+        self.metrics.decode_time_s += dt;
+
+        // sample next token / finish sequences
+        let mut done: Vec<u64> = Vec::new();
+        for (id, seq) in self.active.iter_mut() {
+            self.kv.advance(seq.slot)?;
+            self.metrics.decode_tokens += 1;
+            let off = seq.slot * v;
+            let tok = sample(
+                &logits[off..off + v],
+                &seq.req.params.temperature,
+                seq.req.params.top_k,
+                &mut seq.rng,
+            );
+            seq.generated.push(tok);
+            seq.last_token = tok;
+            let hit_eos = seq.req.params.eos == Some(tok);
+            let hit_max =
+                seq.generated.len() >= seq.req.params.max_new_tokens;
+            let hit_cap = self.kv.headroom(seq.slot) <= 1;
+            if hit_eos || hit_max || hit_cap {
+                done.push(*id);
+            }
+        }
+        for id in done {
+            let seq = self.active.remove(&id).unwrap();
+            self.kv.free(seq.slot);
+            let finish = if seq.req.params.eos == Some(seq.last_token) {
+                FinishReason::Eos
+            } else {
+                FinishReason::MaxTokens
+            };
+            let total = seq.req.arrived.elapsed().as_secs_f64();
+            self.metrics.record_completion(
+                seq.ttft_s,
+                total,
+                seq.generated.len(),
+            );
+            self.finished.push(GenResult {
+                id,
+                prompt_len: seq.req.prompt.len(),
+                tokens: seq.generated,
+                finish,
+                ttft_s: seq.ttft_s,
+                total_s: total,
+            });
+        }
+        Ok(())
+    }
+
+    /// Fold device-format KV literals back into the host arrays (needed
+    /// before a prefill splices new sequences into slots).
+    fn sync_kv_to_host(&mut self) -> Result<()> {
+        let n_layers = self.info.n_layers;
+        if let Some(lits) = self.kv_lits.take() {
+            let cache_len = self.opts.decode_batch
+                * self.info.n_heads
+                * self.info.max_seq
+                * self.info.head_dim;
+            let mut layer_k = Vec::with_capacity(n_layers);
+            let mut layer_v = Vec::with_capacity(n_layers);
+            for (i, lit) in lits.iter().enumerate() {
+                let data = runtime::literal_to_f32(lit, cache_len)?;
+                if i < n_layers {
+                    layer_k.push(data);
+                } else {
+                    layer_v.push(data);
+                }
+            }
+            self.kv.adopt_decode_output(layer_k, layer_v)?;
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // direct graph access for evaluators (exp/)
+    // ------------------------------------------------------------------
+
+    /// Run the prefill graph directly; returns flattened logits [B*S*V].
+    pub fn prefill_logits(
+        &mut self,
+        tokens: &[i32],
+        lengths: &[i32],
+    ) -> Result<Vec<f32>> {
+        let b = self.opts.prefill_batch;
+        let s = self.policy.max_prompt;
+        if tokens.len() != b * s || lengths.len() != b {
+            bail!(
+                "prefill_logits wants [{b},{s}] tokens (+{b} lengths), got {}",
+                tokens.len()
+            );
+        }
+        let tok_l = runtime::literal_i32(&[b, s], tokens)?;
+        let len_l = runtime::literal_i32(&[b], lengths)?;
+        let mut args: Vec<&Literal> =
+            Vec::with_capacity(2 + self.weight_args.len());
+        args.push(&tok_l);
+        args.push(&len_l);
+        args.extend(self.weight_args.iter());
+        let outs = self.rt.run_literal_refs(&self.prefill_graph, &args)?;
+        runtime::literal_to_f32(&outs[0], b * s * self.info.vocab)
+    }
+
+    /// (batch, seq, vocab) of the serving prefill bucket.
+    pub fn prefill_dims(&self) -> (usize, usize, usize) {
+        (self.opts.prefill_batch, self.policy.max_prompt, self.info.vocab)
+    }
+
+    /// Swap in a different quantized weight set (same variant/layout).
+    pub fn replace_weights(
+        &mut self,
+        qw: &model::QuantizedWeights,
+    ) -> Result<()> {
+        let payload_names =
+            model::payload_names(&self.info, &self.opts.variant)?;
+        if qw.names != payload_names {
+            bail!("replacement weights have wrong layout");
+        }
+        self.weight_args = qw
+            .tensors
+            .iter()
+            .map(runtime::literal_from_st)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(())
+    }
+}
+
+/// Sample a token id from logits.
+fn sample(logits: &[f32], temperature: &f32, top_k: usize,
+          rng: &mut XorShift) -> i32 {
+    if *temperature <= 0.0 {
+        return argmax(logits) as i32;
+    }
+    // softmax with temperature over (optionally) the top-k set
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if top_k > 0 && top_k < logits.len() {
+        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.truncate(top_k);
+    }
+    let maxv = idx.iter().map(|&i| logits[i]).fold(f32::MIN, f32::max);
+    let mut probs: Vec<f64> = idx
+        .iter()
+        .map(|&i| (((logits[i] - maxv) / *temperature) as f64).exp())
+        .collect();
+    let z: f64 = probs.iter().sum();
+    for p in &mut probs {
+        *p /= z;
+    }
+    let mut u = rng.next_f64();
+    for (k, &p) in probs.iter().enumerate() {
+        if u < p {
+            return idx[k] as i32;
+        }
+        u -= p;
+    }
+    idx[idx.len() - 1] as i32
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let mut rng = XorShift::new(1);
+        let logits = vec![0.1f32, 3.0, -1.0, 2.9];
+        assert_eq!(sample(&logits, &0.0, 0, &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_sampling_in_topk() {
+        let mut rng = XorShift::new(2);
+        let logits = vec![5.0f32, 4.9, -10.0, -10.0];
+        for _ in 0..50 {
+            let t = sample(&logits, &1.0, 2, &mut rng);
+            assert!(t == 0 || t == 1, "top-2 only, got {t}");
+        }
+    }
+
+    #[test]
+    fn sampling_deterministic_by_seed() {
+        let logits = vec![1.0f32, 1.1, 0.9, 1.05];
+        let mut a = XorShift::new(42);
+        let mut b = XorShift::new(42);
+        for _ in 0..20 {
+            assert_eq!(
+                sample(&logits, &0.8, 0, &mut a),
+                sample(&logits, &0.8, 0, &mut b)
+            );
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Thread-safe front door to the engine.
+//!
+//! The `Engine` (and the PJRT types underneath) are not `Sync`, so the
+//! engine runs on its own thread and callers talk to it over channels —
+//! the same topology a vLLM router uses between HTTP workers and the
+//! model executor.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::engine::{Engine, EngineOptions};
+use super::request::{GenParams, GenResult, Request};
+
+enum Cmd {
+    Generate(Request, Sender<GenResult>),
+    Stats(Sender<String>),
+    Shutdown,
+}
+
+/// Cloneable handle; `generate` blocks until the result is ready.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: Sender<Cmd>,
+    next_id: std::sync::Arc<std::sync::atomic::AtomicU64>,
+}
+
+/// The engine thread plus its handle.
+pub struct EngineService {
+    pub handle: EngineHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+// Sender<Cmd> is Send; the handle is shared across server threads.
+impl EngineService {
+    /// Spawn the engine on its own thread.
+    pub fn spawn(opts: EngineOptions) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("odyssey-engine".into())
+            .spawn(move || engine_thread(opts, rx, ready_tx))?;
+        // wait for engine construction (compile etc.)
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(EngineService {
+            handle: EngineHandle {
+                tx,
+                next_id: std::sync::Arc::new(
+                    std::sync::atomic::AtomicU64::new(1),
+                ),
+            },
+            join: Some(join),
+        })
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.handle.tx.send(Cmd::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for EngineService {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Cmd::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl EngineHandle {
+    /// Blocking generation call (safe from any thread).
+    pub fn generate(
+        &self,
+        prompt: Vec<i32>,
+        params: GenParams,
+    ) -> Result<GenResult> {
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Generate(Request::new(id, prompt, params), tx))
+            .map_err(|_| anyhow!("engine gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped request"))
+    }
+
+    /// Engine metrics snapshot (formatted).
+    pub fn stats(&self) -> Result<String> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Stats(tx))
+            .map_err(|_| anyhow!("engine gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped stats call"))
+    }
+}
+
+fn engine_thread(
+    opts: EngineOptions,
+    rx: Receiver<Cmd>,
+    ready: Sender<Result<()>>,
+) {
+    let mut engine = match Engine::new(opts) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let mut waiters: std::collections::HashMap<u64, Sender<GenResult>> =
+        std::collections::HashMap::new();
+    'outer: loop {
+        // 1. drain commands (block only when fully idle)
+        loop {
+            let cmd = if engine.pending() == 0 && waiters.is_empty() {
+                match rx.recv() {
+                    Ok(c) => Some(c),
+                    Err(_) => break 'outer,
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(c) => Some(c),
+                    Err(mpsc::TryRecvError::Empty) => None,
+                    Err(mpsc::TryRecvError::Disconnected) => break 'outer,
+                }
+            };
+            match cmd {
+                Some(Cmd::Generate(req, tx)) => {
+                    let id = req.id;
+                    if engine.submit(req) {
+                        waiters.insert(id, tx);
+                    } else {
+                        // shed: synthesize a rejection
+                        let _ = tx.send(GenResult {
+                            id,
+                            prompt_len: 0,
+                            tokens: Vec::new(),
+                            finish:
+                                super::request::FinishReason::Rejected,
+                            ttft_s: 0.0,
+                            total_s: 0.0,
+                        });
+                    }
+                }
+                Some(Cmd::Stats(tx)) => {
+                    let _ = tx.send(engine.metrics.report());
+                }
+                Some(Cmd::Shutdown) => break 'outer,
+                None => break,
+            }
+        }
+        // 2. one engine iteration
+        match engine.step() {
+            Ok(_progress) => {}
+            Err(e) => {
+                crate::util::log::error(&format!("engine step: {e:#}"));
+            }
+        }
+        // 3. deliver finished results
+        for res in engine.take_finished() {
+            if let Some(tx) = waiters.remove(&res.id) {
+                let _ = tx.send(res);
+            }
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! KV-cache slot manager.
+//!
+//! The AOT decode graph has a FIXED batch dimension B; its per-layer cache
+//! tensors are `[B, H, max_seq, head_dim]`.  The manager owns the host
+//! mirror of those tensors and a slot map: each active request occupies
+//! one batch slot, with its own write position.  Freed slots are recycled
+//! (continuous batching).  Idle slots decode garbage that is simply
+//! ignored — the masks in the graph make them numerically safe.
+
+use anyhow::{bail, Result};
+
+/// Host-side KV state for one decode bucket.
+pub struct KvState {
+    pub batch: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+    /// per-layer K then V caches, each `[B, H, max_seq, Dh]` flattened
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    /// slot -> occupying request id (None = free)
+    pub slots: Vec<Option<u64>>,
+    /// per-slot next write position (== current sequence length)
+    pub pos: Vec<usize>,
+}
+
+impl KvState {
+    pub fn new(
+        batch: usize,
+        n_layers: usize,
+        n_heads: usize,
+        max_seq: usize,
+        head_dim: usize,
+    ) -> Self {
+        let numel = batch * n_heads * max_seq * head_dim;
+        KvState {
+            batch,
+            n_layers,
+            n_heads,
+            max_seq,
+            head_dim,
+            k: (0..n_layers).map(|_| vec![0f32; numel]).collect(),
+            v: (0..n_layers).map(|_| vec![0f32; numel]).collect(),
+            slots: vec![None; batch],
+            pos: vec![0; batch],
+        }
+    }
+
+    /// Claim a free slot for a request.
+    pub fn alloc(&mut self, request_id: u64) -> Result<usize> {
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if s.is_none() {
+                *s = Some(request_id);
+                self.pos[i] = 0;
+                return Ok(i);
+            }
+        }
+        bail!("no free KV slots (batch={})", self.batch)
+    }
+
+    /// Release a slot.
+    pub fn free(&mut self, slot: usize) {
+        self.slots[slot] = None;
+        self.pos[slot] = 0;
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_none()).count()
+    }
+
+    pub fn active_slots(&self) -> Vec<usize> {
+        (0..self.batch).filter(|&i| self.slots[i].is_some()).collect()
+    }
+
+    /// Elements per slot per layer (H * max_seq * Dh).
+    fn slot_stride(&self) -> usize {
+        self.n_heads * self.max_seq * self.head_dim
+    }
+
+    /// Copy one request's prefill cache rows (`[H, max_seq, Dh]` within a
+    /// prefill output of batch `src_batch`, row `src_row`) into `slot`.
+    pub fn install_from_prefill(
+        &mut self,
+        slot: usize,
+        layer_k: &[Vec<f32>],
+        layer_v: &[Vec<f32>],
+        src_row: usize,
+        src_batch: usize,
+        prompt_len: usize,
+    ) -> Result<()> {
+        if layer_k.len() != self.n_layers || layer_v.len() != self.n_layers {
+            bail!("layer count mismatch");
+        }
+        let stride = self.slot_stride();
+        for l in 0..self.n_layers {
+            if layer_k[l].len() != src_batch * stride {
+                bail!(
+                    "prefill cache layer {l}: len {} != {}",
+                    layer_k[l].len(),
+                    src_batch * stride
+                );
+            }
+            let src = &layer_k[l][src_row * stride..(src_row + 1) * stride];
+            self.k[l][slot * stride..(slot + 1) * stride]
+                .copy_from_slice(src);
+            let src = &layer_v[l][src_row * stride..(src_row + 1) * stride];
+            self.v[l][slot * stride..(slot + 1) * stride]
+                .copy_from_slice(src);
+        }
+        self.pos[slot] = prompt_len;
+        Ok(())
+    }
+
+    /// Adopt the decode graph's updated caches wholesale (they return the
+    /// full `[B, ...]` tensors).
+    pub fn adopt_decode_output(
+        &mut self,
+        layer_k: Vec<Vec<f32>>,
+        layer_v: Vec<Vec<f32>>,
+    ) -> Result<()> {
+        if layer_k.len() != self.n_layers || layer_v.len() != self.n_layers {
+            bail!("layer count mismatch");
+        }
+        self.k = layer_k;
+        self.v = layer_v;
+        Ok(())
+    }
+
+    /// Advance a slot's position after a decode step.
+    pub fn advance(&mut self, slot: usize) -> Result<()> {
+        if self.pos[slot] + 1 >= self.max_seq {
+            bail!("slot {slot} overflowed max_seq={}", self.max_seq);
+        }
+        self.pos[slot] += 1;
+        Ok(())
+    }
+
+    /// Remaining capacity of a slot.
+    pub fn headroom(&self, slot: usize) -> usize {
+        self.max_seq - self.pos[slot]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kv() -> KvState {
+        KvState::new(2, 2, 2, 8, 4)
+    }
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut s = kv();
+        assert_eq!(s.free_slots(), 2);
+        let a = s.alloc(100).unwrap();
+        let b = s.alloc(101).unwrap();
+        assert_ne!(a, b);
+        assert!(s.alloc(102).is_err());
+        s.free(a);
+        assert_eq!(s.free_slots(), 1);
+        let c = s.alloc(103).unwrap();
+        assert_eq!(c, a, "freed slot is recycled");
+    }
+
+    #[test]
+    fn install_prefill_rows() {
+        let mut s = kv();
+        let slot = s.alloc(1).unwrap();
+        let stride = 2 * 8 * 4; // H * S * Dh
+        // prefill batch of 4; row 2 is ours, filled with 7.0
+        let mut k0 = vec![0f32; 4 * stride];
+        k0[2 * stride..3 * stride].iter_mut().for_each(|v| *v = 7.0);
+        let layers_k = vec![k0.clone(), k0.clone()];
+        let layers_v = vec![k0.clone(), k0];
+        s.install_from_prefill(slot, &layers_k, &layers_v, 2, 4, 5)
+            .unwrap();
+        assert_eq!(s.pos[slot], 5);
+        assert!(s.k[0][slot * stride..(slot + 1) * stride]
+            .iter()
+            .all(|&v| v == 7.0));
+    }
+
+    #[test]
+    fn advance_guards_overflow() {
+        let mut s = kv();
+        let slot = s.alloc(1).unwrap();
+        s.pos[slot] = 6;
+        s.advance(slot).unwrap();
+        assert!(s.advance(slot).is_err()); // would hit max_seq=8
+    }
+
+    #[test]
+    fn mismatched_layers_rejected() {
+        let mut s = kv();
+        let slot = s.alloc(1).unwrap();
+        let bad = vec![vec![0f32; 10]];
+        assert!(s
+            .install_from_prefill(slot, &bad, &bad, 0, 1, 1)
+            .is_err());
+    }
+}

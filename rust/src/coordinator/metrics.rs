@@ -1,0 +1,97 @@
+//! Engine throughput / latency accounting.
+
+use crate::util::stats::Summary;
+
+/// Counters + distributions maintained by the engine loop.
+#[derive(Default)]
+pub struct EngineMetrics {
+    pub prefill_steps: u64,
+    pub decode_steps: u64,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    pub prefill_time_s: f64,
+    pub decode_time_s: f64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub ttft: Summary,
+    pub total_latency: Summary,
+    pub tokens_out: Summary,
+}
+
+impl EngineMetrics {
+    pub fn record_completion(
+        &mut self,
+        ttft_s: f64,
+        total_s: f64,
+        n_tokens: usize,
+    ) {
+        self.completed += 1;
+        self.ttft.add(ttft_s);
+        self.total_latency.add(total_s);
+        self.tokens_out.add(n_tokens as f64);
+    }
+
+    /// Decode throughput in generated tokens per second.
+    pub fn decode_tps(&self) -> f64 {
+        if self.decode_time_s > 0.0 {
+            self.decode_tokens as f64 / self.decode_time_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Prefill throughput in prompt tokens per second.
+    pub fn prefill_tps(&self) -> f64 {
+        if self.prefill_time_s > 0.0 {
+            self.prefill_tokens as f64 / self.prefill_time_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Multi-line human report.
+    pub fn report(&mut self) -> String {
+        format!(
+            "completed={} rejected={}\n\
+             prefill: {} steps, {} tokens, {:.1} tok/s ({:.3}s total)\n\
+             decode : {} steps, {} tokens, {:.1} tok/s ({:.3}s total)\n\
+             ttft   : {}\n\
+             e2e    : {}",
+            self.completed,
+            self.rejected,
+            self.prefill_steps,
+            self.prefill_tokens,
+            self.prefill_tps(),
+            self.prefill_time_s,
+            self.decode_steps,
+            self.decode_tokens,
+            self.decode_tps(),
+            self.decode_time_s,
+            self.ttft.report_ms(),
+            self.total_latency.report_ms(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_accounting() {
+        let mut m = EngineMetrics::default();
+        m.decode_tokens = 100;
+        m.decode_time_s = 2.0;
+        assert!((m.decode_tps() - 50.0).abs() < 1e-9);
+        m.record_completion(0.1, 1.0, 16);
+        assert_eq!(m.completed, 1);
+        assert!(m.report().contains("completed=1"));
+    }
+
+    #[test]
+    fn zero_time_is_zero_tps() {
+        let m = EngineMetrics::default();
+        assert_eq!(m.decode_tps(), 0.0);
+        assert_eq!(m.prefill_tps(), 0.0);
+    }
+}

@@ -1,0 +1,28 @@
+//! The serving coordinator — the L3 system contribution.
+//!
+//! vLLM-router-like layering, scaled to this testbed:
+//!
+//! * [`request`] — request/response types and sampling parameters.
+//! * [`queue`]   — admission queue with backpressure.
+//! * [`kv`]      — KV-cache slot manager (fixed decode-batch slots over
+//!                 the AOT decode graph's cache tensors).
+//! * [`batcher`] — continuous batching policy: drains the queue into
+//!                 prefill buckets and packs active slots into decode
+//!                 steps.
+//! * [`engine`]  — the generation loop over the PJRT executables; owns
+//!                 the runtime, quantized weights, and KV state.
+//! * [`handle`]  — thread-safe front door (mpsc) for servers/examples.
+//! * [`metrics`] — throughput/latency accounting.
+
+pub mod batcher;
+pub mod engine;
+pub mod handle;
+pub mod kv;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+
+pub use engine::{Engine, EngineOptions};
+pub use handle::EngineHandle;
+pub use metrics::EngineMetrics;
+pub use request::{GenParams, GenResult, Request};

@@ -1,0 +1,121 @@
+//! Admission queue with bounded capacity (backpressure) and FIFO order.
+
+use std::collections::VecDeque;
+
+use super::request::Request;
+
+/// Result of an admission attempt.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Admit {
+    Accepted,
+    /// queue full — caller should retry/shed (HTTP 429)
+    Rejected,
+}
+
+/// Bounded FIFO request queue.
+#[derive(Debug)]
+pub struct RequestQueue {
+    items: VecDeque<Request>,
+    capacity: usize,
+    /// lifetime counters
+    pub accepted: u64,
+    pub rejected: u64,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize) -> Self {
+        RequestQueue {
+            items: VecDeque::new(),
+            capacity,
+            accepted: 0,
+            rejected: 0,
+        }
+    }
+
+    pub fn push(&mut self, r: Request) -> Admit {
+        if self.items.len() >= self.capacity {
+            self.rejected += 1;
+            return Admit::Rejected;
+        }
+        self.items.push_back(r);
+        self.accepted += 1;
+        Admit::Accepted
+    }
+
+    /// Pop up to `n` requests whose prompts fit in `max_prompt` tokens;
+    /// over-long prompts are returned separately for rejection.
+    pub fn pop_batch(
+        &mut self,
+        n: usize,
+        max_prompt: usize,
+    ) -> (Vec<Request>, Vec<Request>) {
+        let mut batch = Vec::new();
+        let mut rejected = Vec::new();
+        while batch.len() < n {
+            match self.items.pop_front() {
+                None => break,
+                Some(r) if r.prompt.len() > max_prompt => rejected.push(r),
+                Some(r) => batch.push(r),
+            }
+        }
+        (batch, rejected)
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::GenParams;
+
+    fn req(id: u64, len: usize) -> Request {
+        Request::new(id, vec![1; len], GenParams::default())
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut q = RequestQueue::new(10);
+        for i in 0..5 {
+            assert_eq!(q.push(req(i, 4)), Admit::Accepted);
+        }
+        let (batch, rej) = q.pop_batch(3, 100);
+        assert!(rej.is_empty());
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let mut q = RequestQueue::new(2);
+        assert_eq!(q.push(req(0, 1)), Admit::Accepted);
+        assert_eq!(q.push(req(1, 1)), Admit::Accepted);
+        assert_eq!(q.push(req(2, 1)), Admit::Rejected);
+        assert_eq!(q.rejected, 1);
+        assert_eq!(q.accepted, 2);
+    }
+
+    #[test]
+    fn oversize_prompts_filtered() {
+        let mut q = RequestQueue::new(10);
+        q.push(req(0, 4));
+        q.push(req(1, 999));
+        q.push(req(2, 4));
+        let (batch, rej) = q.pop_batch(4, 128);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(rej.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn pop_from_empty() {
+        let mut q = RequestQueue::new(4);
+        let (batch, rej) = q.pop_batch(4, 128);
+        assert!(batch.is_empty() && rej.is_empty());
+    }
+}

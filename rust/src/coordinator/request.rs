@@ -1,0 +1,100 @@
+//! Request / response types for the serving engine.
+
+use std::time::Instant;
+
+/// Sampling parameters.
+#[derive(Clone, Debug)]
+pub struct GenParams {
+    pub max_new_tokens: usize,
+    /// 0.0 = greedy
+    pub temperature: f32,
+    pub top_k: usize,
+    /// stop token (EOS in the synthetic vocab)
+    pub eos: Option<i32>,
+    pub seed: u64,
+}
+
+impl Default for GenParams {
+    fn default() -> Self {
+        GenParams {
+            max_new_tokens: 32,
+            temperature: 0.0,
+            top_k: 0,
+            eos: Some(2),
+            seed: 0,
+        }
+    }
+}
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub params: GenParams,
+    pub arrived: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, params: GenParams) -> Self {
+        Request { id, prompt, params, arrived: Instant::now() }
+    }
+}
+
+/// Why generation stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    MaxTokens,
+    /// prompt too long for the graph bucket
+    Rejected,
+}
+
+/// Completed generation.
+#[derive(Clone, Debug)]
+pub struct GenResult {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+    /// time to first token (prefill + queueing), seconds
+    pub ttft_s: f64,
+    /// total wall time, seconds
+    pub total_s: f64,
+}
+
+impl GenResult {
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.total_s > 0.0 {
+            self.tokens.len() as f64 / self.total_s
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_params_sane() {
+        let p = GenParams::default();
+        assert_eq!(p.temperature, 0.0);
+        assert_eq!(p.eos, Some(2));
+        assert!(p.max_new_tokens > 0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = GenResult {
+            id: 1,
+            prompt_len: 4,
+            tokens: vec![1, 2, 3, 4],
+            finish: FinishReason::MaxTokens,
+            ttft_s: 0.1,
+            total_s: 2.0,
+        };
+        assert!((r.tokens_per_s() - 2.0).abs() < 1e-9);
+    }
+}

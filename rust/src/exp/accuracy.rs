@@ -1,0 +1,430 @@
+//! Accuracy experiments: Tables 1/2/3/6/8 and Fig. 3, on the trained
+//! tiny-llama checkpoints + synthetic task suite (DESIGN.md substitution
+//! index maps these to the paper's LAMBADA / C4 / WikiText / CSQA / MMLU).
+
+use anyhow::Result;
+
+use crate::formats::safetensors::StTensor;
+use crate::model::{
+    self, payload_names, Calibration, Checkpoint, LAYER_MATRICES,
+};
+use crate::quant::{fake, gptq, lwc, rtn, GptqConfig, QuantRecipe};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+use super::eval::{load_corpus, Evaluator, Tasks};
+
+/// Method rows used across the accuracy tables.
+#[derive(Clone, Debug)]
+pub enum Method {
+    Fp16,
+    /// per-token activation quant, W8 per-channel RTN (the RTN-pt proxy:
+    /// the paper shows W16A8 ≈ FP16; our W8A8-RTN8 graph adds only the
+    /// near-lossless 8-bit weight RTN on top)
+    RtnPt,
+    /// fine-grained weight-only RTN (RTN-g)
+    RtnGroup,
+    /// fine-grained weight-only GPTQ (GPTQ-g)
+    GptqGroup,
+    /// per-channel weight-only RTN on the W4A16 graph (RTN pc)
+    RtnPc,
+    /// per-channel GPTQ with activation reordering (GPTQ-ro pc)
+    GptqRo,
+    /// AWQ-g (activation-aware, fine-grained, weight-only)
+    AwqGroup,
+    /// SmoothQuant W8A8
+    SmoothQuant,
+    /// the paper's W4A8 recipe (LWC + GPTQ, per-channel, FastGEMM)
+    Odyssey,
+    /// ablation rows (Table 6)
+    VanillaW4A8,
+    LwcW4A8,
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Fp16 => "FP16",
+            Method::RtnPt => "RTN-pt (W8A8)",
+            Method::RtnGroup => "RTN-g64 (W4A16)",
+            Method::GptqGroup => "GPTQ-g64 (W4A16)",
+            Method::RtnPc => "RTN-pc (W4A16)",
+            Method::GptqRo => "GPTQ-ro pc (W4A16)",
+            Method::AwqGroup => "AWQ-g64 (W4A16)",
+            Method::SmoothQuant => "SmoothQuant (W8A8)",
+            Method::Odyssey => "OdysseyLLM (W4A8)",
+            Method::VanillaW4A8 => "B: vanilla W4A8",
+            Method::LwcW4A8 => "B+LWC (W4A8)",
+        }
+    }
+
+    /// Which AOT graph variant evaluates this method.
+    pub fn variant(&self) -> &'static str {
+        match self {
+            Method::Fp16 => "fp",
+            Method::RtnPt | Method::SmoothQuant => "w8a8",
+            Method::Odyssey | Method::VanillaW4A8 | Method::LwcW4A8 => {
+                "w4a8_fast"
+            }
+            _ => "w4a16",
+        }
+    }
+
+    fn recipe(&self) -> QuantRecipe {
+        match self {
+            Method::Fp16 | Method::RtnPt => QuantRecipe::vanilla_w4(),
+            Method::RtnGroup => QuantRecipe::rtn_grouped(0),
+            Method::GptqGroup => QuantRecipe::gptq_grouped(0),
+            Method::AwqGroup => QuantRecipe::awq_grouped(0),
+            Method::SmoothQuant => QuantRecipe::smoothquant_w8(),
+            Method::Odyssey => QuantRecipe::odyssey(),
+            Method::VanillaW4A8 => QuantRecipe::vanilla_w4(),
+            Method::LwcW4A8 => QuantRecipe::lwc_only(),
+            // pc-on-grouped-graph methods are built specially below
+            Method::RtnPc | Method::GptqRo => QuantRecipe::vanilla_w4(),
+        }
+    }
+
+    /// Build an evaluator for this method on `model_name`.
+    pub fn evaluator(
+        &self,
+        artifacts_dir: &str,
+        model_name: &str,
+    ) -> Result<Evaluator> {
+        match self {
+            Method::RtnPc | Method::GptqRo => {
+                pc_on_grouped_evaluator(
+                    artifacts_dir,
+                    model_name,
+                    matches!(self, Method::GptqRo),
+                )
+            }
+            _ => Evaluator::new(
+                artifacts_dir,
+                model_name,
+                self.variant(),
+                &self.recipe(),
+            ),
+        }
+    }
+}
+
+/// Per-channel weight quantization evaluated through the grouped W4A16
+/// graph by replicating the channel scale across all K-groups.
+fn pc_on_grouped_evaluator(
+    artifacts_dir: &str,
+    model_name: &str,
+    act_order: bool,
+) -> Result<Evaluator> {
+    let rt = Runtime::new(artifacts_dir)?;
+    let info = rt.manifest.model(model_name)?.clone();
+    let group = rt.manifest.group_size;
+    let ckpt = Checkpoint::load(&rt.manifest, model_name)?;
+    let calib = if act_order {
+        Some(Calibration::load(&rt.manifest, model_name)?)
+    } else {
+        None
+    };
+
+    let mut tensors = Vec::new();
+    for name in model::weight_names(&info) {
+        let leaf = name.rsplit('.').next().unwrap();
+        let w = ckpt.get(&name)?;
+        if LAYER_MATRICES.contains(&leaf) {
+            let (q, s_chan) = if act_order {
+                let c = calib.as_ref().unwrap();
+                let h = c
+                    .hessians
+                    .get(&model::matrix_tap(&name)?)
+                    .ok_or_else(|| anyhow::anyhow!("missing hessian"))?;
+                let cfg = GptqConfig { act_order: true, ..Default::default() };
+                let res = gptq::gptq_quantize(w, h, &cfg, None)?;
+                (res.q, res.scales)
+            } else {
+                rtn::rtn_per_channel(w, 4, None, None)
+            };
+            // replicate channel scales across groups: [K/g, N]
+            let gs = w.rows() / group;
+            let mut s_g = Vec::with_capacity(gs * w.cols());
+            for _ in 0..gs {
+                s_g.extend_from_slice(&s_chan);
+            }
+            tensors.push(StTensor::from_i8(&q));
+            tensors.push(StTensor::from_f32(&Tensor::from_vec(
+                &[gs, w.cols()],
+                s_g,
+            )));
+        } else {
+            tensors.push(StTensor::from_f32(w));
+        }
+    }
+    // sanity: layout must match the manifest's w4a16 payload list
+    let expected = payload_names(&info, "w4a16")?;
+    assert_eq!(tensors.len(), expected.len());
+    Evaluator::from_payloads(rt, model_name, "w4a16", &info, tensors)
+}
+
+const PPL_CHUNKS: usize = 24;
+
+/// Table 1 — quantization-granularity baselines, cloze accuracy.
+pub fn tab1(artifacts_dir: &str) -> Result<()> {
+    let tasks = Tasks::load(artifacts_dir)?;
+    println!(
+        "Table 1 analogue — synthetic-LAMBADA cloze accuracy \
+         ({} tasks), tiny3m",
+        tasks.cloze.len()
+    );
+    let methods = [
+        Method::Fp16,
+        Method::RtnPt,
+        Method::RtnGroup,
+        Method::GptqGroup,
+        Method::RtnPc,
+        Method::GptqRo,
+    ];
+    let mut fp_acc = 0.0;
+    for m in &methods {
+        let mut ev = m.evaluator(artifacts_dir, "tiny3m")?;
+        let acc = ev.cloze_accuracy(&tasks.cloze, tasks.noun_range)?;
+        if matches!(m, Method::Fp16) {
+            fp_acc = acc;
+        }
+        println!(
+            "{:<22} {:>7.2}%  ({:+.2}%)",
+            m.label(),
+            acc * 100.0,
+            (acc - fp_acc) * 100.0
+        );
+    }
+    println!(
+        "(paper shape: pt/g128 near-lossless; RTN-pc drops 3-10%; \
+         GPTQ-ro recovers part)"
+    );
+    Ok(())
+}
+
+/// Table 2 — method comparison: cloze + PPL on both corpus splits.
+pub fn tab2(artifacts_dir: &str) -> Result<()> {
+    let tasks = Tasks::load(artifacts_dir)?;
+    let val = load_corpus(artifacts_dir, "val")?;
+    let half = val.len() / 2;
+    let (wiki, c4) = val.split_at(half);
+    println!(
+        "Table 2 analogue — LAMBADA-cloze / C4-ppl / WikiText-ppl, tiny3m"
+    );
+    println!(
+        "{:<22} {:>8} {:>8} {:>8}",
+        "method", "cloze%", "ppl-A", "ppl-B"
+    );
+    for m in [
+        Method::Fp16,
+        Method::AwqGroup,
+        Method::GptqGroup,
+        Method::SmoothQuant,
+        Method::Odyssey,
+    ] {
+        let mut ev = m.evaluator(artifacts_dir, "tiny3m")?;
+        let acc = ev.cloze_accuracy(&tasks.cloze, tasks.noun_range)?;
+        let p1 = ev.perplexity(c4, PPL_CHUNKS)?;
+        let p2 = ev.perplexity(wiki, PPL_CHUNKS)?;
+        println!(
+            "{:<22} {:>8.2} {:>8.3} {:>8.3}",
+            m.label(),
+            acc * 100.0,
+            p1,
+            p2
+        );
+    }
+    Ok(())
+}
+
+/// Table 3 — common-sense-QA analogue: 4 MCQ shards.
+pub fn tab3(artifacts_dir: &str) -> Result<()> {
+    mcq_table(artifacts_dir, false)
+}
+
+/// Table 8 — MMLU analogue: few-shot category task, 4 shards.
+pub fn tab8(artifacts_dir: &str) -> Result<()> {
+    mcq_table(artifacts_dir, true)
+}
+
+fn mcq_table(artifacts_dir: &str, fewshot: bool) -> Result<()> {
+    let tasks = Tasks::load(artifacts_dir)?;
+    let all = if fewshot { &tasks.fewshot } else { &tasks.mcq };
+    let name = if fewshot {
+        "Table 8 analogue — few-shot category MCQ (MMLU stand-in)"
+    } else {
+        "Table 3 analogue — zero-shot MCQ (CommonSense-QA stand-in)"
+    };
+    println!("{name}, tiny3m, {} tasks in 4 shards", all.len());
+    let shard = all.len() / 4;
+    println!(
+        "{:<22} {:>8} {:>8} {:>8} {:>8} {:>8}",
+        "method", "shard0", "shard1", "shard2", "shard3", "avg"
+    );
+    for m in [
+        Method::Fp16,
+        Method::AwqGroup,
+        Method::GptqGroup,
+        Method::SmoothQuant,
+        Method::Odyssey,
+    ] {
+        let mut ev = m.evaluator(artifacts_dir, "tiny3m")?;
+        let mut accs = Vec::new();
+        for i in 0..4 {
+            let slice = &all[i * shard..(i + 1) * shard];
+            accs.push(ev.mcq_accuracy(slice)?);
+        }
+        let avg: f64 = accs.iter().sum::<f64>() / 4.0;
+        println!(
+            "{:<22} {:>8.4} {:>8.4} {:>8.4} {:>8.4} {:>8.4}",
+            m.label(),
+            accs[0],
+            accs[1],
+            accs[2],
+            accs[3],
+            avg
+        );
+    }
+    if !fewshot {
+        println!(
+            "(the zero-shot grammar MCQ saturates at ceiling for every              method after full training — i.e. no quantization damage,              the paper's conclusion; the few-shot task (tab8) retains              dynamic range)"
+        );
+    }
+    Ok(())
+}
+
+/// Table 6 — the recipe ablation: B / B+LWC / B+LWC+GPTQ.
+///
+/// Reported on three axes: held-out PPL (the paper's metric), mean
+/// per-matrix weight MSE, and the Eq. 1 layer-output MSE on calibration
+/// samples — the objective LWC/GPTQ explicitly minimize.  On the tiny
+/// models the PPL deltas saturate (clean Gaussian-ish trained weights
+/// quantize near-losslessly at per-channel INT4), while the MSE axes
+/// show the paper's monotone improvement unambiguously.
+pub fn tab6(artifacts_dir: &str) -> Result<()> {
+    use crate::quant::{pipeline::WeightFormat, Quantizer};
+    let val = load_corpus(artifacts_dir, "val")?;
+    println!("Table 6 analogue — W4A8 recipe ablation");
+    println!(
+        "{:<10} {:<14} {:>9} {:>14} {:>16}",
+        "model", "recipe", "PPL", "weight MSE", "output MSE (Eq.1)"
+    );
+    let rt = Runtime::new(artifacts_dir)?;
+    let models: Vec<String> = rt
+        .manifest
+        .models
+        .keys()
+        .filter(|m| {
+            rt.manifest
+                .graphs
+                .contains_key(&format!("{m}_w4a8_fast_prefill_b4"))
+        })
+        .cloned()
+        .collect();
+    let group = rt.manifest.group_size;
+    drop(rt);
+    for model_name in models {
+        let rt = Runtime::new(artifacts_dir)?;
+        let ckpt = Checkpoint::load(&rt.manifest, &model_name)?;
+        let calib = Calibration::load(&rt.manifest, &model_name)?;
+        for (label, m, recipe) in [
+            ("B (vanilla)", Method::VanillaW4A8,
+             crate::quant::QuantRecipe::vanilla_w4()),
+            ("B+LWC", Method::LwcW4A8,
+             crate::quant::QuantRecipe::lwc_only()),
+            ("B+LWC+GPTQ", Method::Odyssey,
+             crate::quant::QuantRecipe::odyssey()),
+        ] {
+            // per-matrix MSEs over every quantized matrix
+            let qz = Quantizer::new(recipe.clone(), group);
+            let mut wmse = 0f64;
+            let mut omse = 0f64;
+            let mut n_mats = 0f64;
+            for name in model::weight_names(&ckpt.info) {
+                let leaf = name.rsplit('.').next().unwrap();
+                if !LAYER_MATRICES.contains(&leaf) {
+                    continue;
+                }
+                let w = ckpt.get(&name)?;
+                let tap = model::matrix_tap(&name)?;
+                let hess = calib.hessians.get(&tap);
+                let (payload, st) = qz.quantize_matrix(
+                    &name,
+                    w,
+                    hess,
+                    WeightFormat::W4Packed,
+                )?;
+                wmse += st.weight_mse;
+                // Eq. 1 on the stored calibration sample
+                if let Some(x) = calib.samples.get(&tap) {
+                    let p = payload[0].to_u8()?;
+                    let sc = payload[1].to_f32()?;
+                    let q = crate::quant::pack::unpack_int4(&p);
+                    let wdq =
+                        rtn::dequant_per_channel(&q, sc.data());
+                    omse += gptq::layer_output_mse(x, w, &wdq);
+                }
+                n_mats += 1.0;
+            }
+            let mut ev = m.evaluator(artifacts_dir, &model_name)?;
+            let ppl = ev.perplexity(&val, PPL_CHUNKS)?;
+            println!(
+                "{:<10} {:<14} {:>9.3} {:>14.4e} {:>16.4e}",
+                model_name,
+                label,
+                ppl,
+                wmse / n_mats,
+                omse / n_mats
+            );
+        }
+    }
+    println!(
+        "(paper shape: monotone improvement B -> B+LWC -> B+LWC+GPTQ; on          the tiny models the PPL axis saturates, the MSE axes do not)"
+    );
+    Ok(())
+}
+
+/// Fig. 3 — per-layer q_proj fake-quant MSE, vanilla vs LWC-clamped.
+pub fn fig3(artifacts_dir: &str) -> Result<()> {
+    let rt = Runtime::new(artifacts_dir)?;
+    let ckpt = Checkpoint::load(&rt.manifest, "tiny3m")?;
+    println!(
+        "Fig.3 analogue — per-layer wq INT4-pc fake-quant MSE, tiny3m"
+    );
+    println!(
+        "{:<14} {:>12} {:>12} {:>8} {:>8} {:>10}",
+        "layer", "vanilla MSE", "clamped MSE", "gamma", "beta", "improve"
+    );
+    for i in 0..ckpt.info.n_layers {
+        let w = ckpt.get(&format!("layers.{i}.wq"))?;
+        let r = fake::clamp_mse_report(w, 4);
+        println!(
+            "{:<14} {:>12.3e} {:>12.3e} {:>8.3} {:>8.3} {:>9.1}%",
+            format!("layers.{i}.wq"),
+            r.mse_vanilla,
+            r.mse_clamped,
+            r.mean_gamma,
+            r.mean_beta,
+            (1.0 - r.mse_clamped / r.mse_vanilla) * 100.0
+        );
+    }
+    // weight range narrowing (Fig. 3 top): report min/max before/after
+    let w = ckpt.get("layers.0.wq")?;
+    let res = lwc::lwc(w, 4);
+    let hi = w.col_max();
+    let lo = w.col_min();
+    let (mut chi, mut clo) = (0f32, 0f32);
+    for j in 0..w.cols() {
+        chi = chi.max(res.gamma[j] * hi[j]);
+        clo = clo.min(res.beta[j] * lo[j]);
+    }
+    println!(
+        "layer0 wq range: vanilla ({:.3}, {:.3}) -> clamped ({:.3}, {:.3})",
+        lo.iter().fold(0f32, |a, &v| a.min(v)),
+        hi.iter().fold(0f32, |a, &v| a.max(v)),
+        clo,
+        chi
+    );
+    Ok(())
+}

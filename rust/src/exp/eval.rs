@@ -1,0 +1,318 @@
+//! Model-quality evaluator: held-out perplexity (C4/WikiText analogue),
+//! LAMBADA-style cloze accuracy, and multiple-choice scoring — all
+//! through the AOT prefill executables, weights supplied by the rust
+//! quantizer.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::formats::json::Json;
+use crate::formats::safetensors::StTensor;
+use crate::model::{self, Calibration, Checkpoint};
+use crate::quant::QuantRecipe;
+use crate::runtime::{self, Literal, Runtime};
+
+/// Evaluation tasks loaded from artifacts/tasks.json.
+pub struct Tasks {
+    pub cloze: Vec<(Vec<i32>, i32)>,
+    pub mcq: Vec<(Vec<i32>, Vec<i32>, usize)>,
+    pub fewshot: Vec<(Vec<i32>, Vec<i32>, usize)>,
+    pub noun_range: (i32, i32),
+}
+
+impl Tasks {
+    pub fn load(artifacts_dir: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(
+            Path::new(artifacts_dir).join("tasks.json"),
+        )?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("tasks.json: {e}"))?;
+        let ivec = |v: &Json| -> Vec<i32> {
+            v.as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_i64())
+                .map(|x| x as i32)
+                .collect()
+        };
+        let mut cloze = Vec::new();
+        for t in j.get("cloze").as_arr().unwrap_or(&[]) {
+            cloze.push((
+                ivec(t.get("ctx")),
+                t.get("target").as_i64().unwrap_or(0) as i32,
+            ));
+        }
+        let mut mcq = Vec::new();
+        for t in j.get("mcq").as_arr().unwrap_or(&[]) {
+            mcq.push((
+                ivec(t.get("ctx")),
+                ivec(t.get("candidates")),
+                t.get("answer").as_usize().unwrap_or(0),
+            ));
+        }
+        let mut fewshot = Vec::new();
+        for t in j.get("fewshot").as_arr().unwrap_or(&[]) {
+            fewshot.push((
+                ivec(t.get("ctx")),
+                ivec(t.get("candidates")),
+                t.get("answer").as_usize().unwrap_or(0),
+            ));
+        }
+        let nr = j.get("noun_range").usize_vec();
+        if nr.len() != 2 {
+            bail!("tasks.json missing noun_range");
+        }
+        Ok(Tasks {
+            cloze,
+            mcq,
+            fewshot,
+            noun_range: (nr[0] as i32, nr[1] as i32),
+        })
+    }
+}
+
+/// Load the held-out corpus (u16 token stream).
+pub fn load_corpus(artifacts_dir: &str, split: &str) -> Result<Vec<u16>> {
+    let bytes = std::fs::read(
+        Path::new(artifacts_dir).join(format!("corpus_{split}.bin")),
+    )?;
+    Ok(bytes
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+        .collect())
+}
+
+/// Lightweight evaluator: runtime + one prefill graph + quantized weights.
+pub struct Evaluator {
+    rt: Runtime,
+    graph: String,
+    weight_args: Vec<Literal>,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+impl Evaluator {
+    /// Quantize `model` with `recipe` for `variant` and set up the b=4
+    /// prefill graph.
+    pub fn new(
+        artifacts_dir: &str,
+        model_name: &str,
+        variant: &str,
+        recipe: &QuantRecipe,
+    ) -> Result<Self> {
+        let rt = Runtime::new(artifacts_dir)?;
+        let info = rt.manifest.model(model_name)?.clone();
+        let ckpt = Checkpoint::load(&rt.manifest, model_name)?;
+        let calib = if recipe.use_gptq
+            || recipe.use_lwc
+            || recipe.use_smoothquant
+            || recipe.use_awq
+        {
+            Some(Calibration::load(&rt.manifest, model_name)?)
+        } else {
+            None
+        };
+        let group = rt.manifest.group_size;
+        let qw = model::quantize_checkpoint(
+            &ckpt,
+            calib.as_ref(),
+            recipe,
+            variant,
+            group,
+        )?;
+        Self::from_payloads(rt, model_name, variant, &info, qw.tensors)
+    }
+
+    /// Set up from explicit payload tensors (canonical order).
+    pub fn from_payloads(
+        mut rt: Runtime,
+        model_name: &str,
+        variant: &str,
+        info: &crate::formats::config::ModelInfo,
+        tensors: Vec<StTensor>,
+    ) -> Result<Self> {
+        let graph = rt.manifest.stage_graph(model_name, variant, "prefill", 4);
+        let gi = rt.manifest.graph(&graph)?.clone();
+        rt.executable(&graph)?;
+        let weight_args = tensors
+            .iter()
+            .map(runtime::literal_from_st)
+            .collect::<Result<Vec<_>>>()?;
+        // params = tokens, length, weights...
+        if weight_args.len() + 2 != gi.params.len() {
+            bail!(
+                "{graph}: weights {} + 2 != params {}",
+                weight_args.len(),
+                gi.params.len()
+            );
+        }
+        Ok(Evaluator {
+            rt,
+            graph,
+            weight_args,
+            batch: gi.batch,
+            seq: gi.seq,
+            vocab: info.vocab,
+        })
+    }
+
+    /// Raw logits for a [batch, seq] token block.
+    pub fn logits(
+        &mut self,
+        tokens: &[i32],
+        lengths: &[i32],
+    ) -> Result<Vec<f32>> {
+        let (b, s) = (self.batch, self.seq);
+        assert_eq!(tokens.len(), b * s);
+        assert_eq!(lengths.len(), b);
+        let tok_l = runtime::literal_i32(&[b, s], tokens)?;
+        let len_l = runtime::literal_i32(&[b], lengths)?;
+        let mut args: Vec<&Literal> =
+            Vec::with_capacity(2 + self.weight_args.len());
+        args.push(&tok_l);
+        args.push(&len_l);
+        args.extend(self.weight_args.iter());
+        let outs = self.rt.run_literal_refs(&self.graph, &args)?;
+        runtime::literal_to_f32(&outs[0], b * s * self.vocab)
+    }
+
+    /// Held-out perplexity over the first `max_chunks` windows.
+    pub fn perplexity(
+        &mut self,
+        corpus: &[u16],
+        max_chunks: usize,
+    ) -> Result<f64> {
+        let (b, s, v) = (self.batch, self.seq, self.vocab);
+        let mut nll = 0f64;
+        let mut count = 0usize;
+        let mut chunk_starts: Vec<usize> = Vec::new();
+        let mut pos = 0;
+        while pos + s + 1 < corpus.len() && chunk_starts.len() < max_chunks {
+            chunk_starts.push(pos);
+            pos += s;
+        }
+        for block in chunk_starts.chunks(b) {
+            let mut tokens = vec![0i32; b * s];
+            let mut lengths = vec![0i32; b];
+            for (row, &st) in block.iter().enumerate() {
+                for i in 0..s {
+                    tokens[row * s + i] = corpus[st + i] as i32;
+                }
+                lengths[row] = s as i32;
+            }
+            let logits = self.logits(&tokens, &lengths)?;
+            for (row, &st) in block.iter().enumerate() {
+                for i in 0..s - 1 {
+                    let target = corpus[st + i + 1] as usize;
+                    let off = (row * s + i) * v;
+                    nll -= log_softmax_at(&logits[off..off + v], target);
+                    count += 1;
+                }
+            }
+        }
+        Ok((nll / count as f64).exp())
+    }
+
+    /// LAMBADA-style cloze: argmax over the noun range at the last
+    /// context position must equal the target.
+    pub fn cloze_accuracy(
+        &mut self,
+        tasks: &[(Vec<i32>, i32)],
+        noun_range: (i32, i32),
+    ) -> Result<f64> {
+        let (b, s, v) = (self.batch, self.seq, self.vocab);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for block in tasks.chunks(b) {
+            let mut tokens = vec![0i32; b * s];
+            let mut lengths = vec![1i32; b];
+            for (row, (ctx, _)) in block.iter().enumerate() {
+                let n = ctx.len().min(s);
+                tokens[row * s..row * s + n]
+                    .copy_from_slice(&ctx[ctx.len() - n..]);
+                lengths[row] = n as i32;
+            }
+            let logits = self.logits(&tokens, &lengths)?;
+            for (row, (ctx, target)) in block.iter().enumerate() {
+                let n = ctx.len().min(s);
+                let off = (row * s + n - 1) * v;
+                let slice = &logits[off..off + v];
+                let mut best = noun_range.0;
+                for t in noun_range.0..noun_range.1 {
+                    if slice[t as usize] > slice[best as usize] {
+                        best = t;
+                    }
+                }
+                if best == *target {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total as f64)
+    }
+
+    /// Multiple-choice accuracy: candidate with max logprob at the answer
+    /// position wins.
+    pub fn mcq_accuracy(
+        &mut self,
+        tasks: &[(Vec<i32>, Vec<i32>, usize)],
+    ) -> Result<f64> {
+        let (b, s, v) = (self.batch, self.seq, self.vocab);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for block in tasks.chunks(b) {
+            let mut tokens = vec![0i32; b * s];
+            let mut lengths = vec![1i32; b];
+            for (row, (ctx, _, _)) in block.iter().enumerate() {
+                let n = ctx.len().min(s);
+                tokens[row * s..row * s + n]
+                    .copy_from_slice(&ctx[ctx.len() - n..]);
+                lengths[row] = n as i32;
+            }
+            let logits = self.logits(&tokens, &lengths)?;
+            for (row, (ctx, cands, answer)) in block.iter().enumerate() {
+                let n = ctx.len().min(s);
+                let off = (row * s + n - 1) * v;
+                let slice = &logits[off..off + v];
+                let mut best = 0usize;
+                for (ci, &c) in cands.iter().enumerate() {
+                    if slice[c as usize] > slice[cands[best] as usize] {
+                        best = ci;
+                    }
+                }
+                if best == *answer {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total as f64)
+    }
+}
+
+fn log_softmax_at(logits: &[f32], idx: usize) -> f64 {
+    let maxv = logits.iter().fold(f32::MIN, |a, &b| a.max(b)) as f64;
+    let z: f64 =
+        logits.iter().map(|&x| ((x as f64) - maxv).exp()).sum::<f64>();
+    (logits[idx] as f64 - maxv) - z.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let logits = vec![1.0f32, 2.0, 3.0];
+        let p: f64 = (0..3).map(|i| log_softmax_at(&logits, i).exp()).sum();
+        assert!((p - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_softmax_orders() {
+        let logits = vec![1.0f32, 5.0];
+        assert!(log_softmax_at(&logits, 1) > log_softmax_at(&logits, 0));
+    }
+}

@@ -1,0 +1,54 @@
+//! Experiment drivers — one per paper table/figure (see DESIGN.md's
+//! per-experiment index).  Shared by `odyssey reproduce <exp>` and the
+//! bench binaries.
+
+pub mod accuracy;
+pub mod eval;
+pub mod latency;
+
+use anyhow::{bail, Result};
+
+/// All experiment ids.
+pub const EXPERIMENTS: [&str; 13] = [
+    "fig1", "fig3", "fig6", "fig7", "tab1", "tab2", "tab3", "tab4", "tab5",
+    "tab6", "tab7", "tab8", "e2e",
+];
+
+/// Run one experiment by id, printing its table to stdout.
+pub fn run(id: &str, artifacts_dir: &str) -> Result<()> {
+    match id {
+        "fig1" => latency::fig1(),
+        "fig6" => latency::fig6(),
+        "fig7" => latency::fig7(artifacts_dir),
+        "tab4" => latency::tab4(),
+        "tab5" => latency::tab5(artifacts_dir),
+        "tab7" => latency::tab7(),
+        "fig3" => accuracy::fig3(artifacts_dir),
+        "tab1" => accuracy::tab1(artifacts_dir),
+        "tab2" => accuracy::tab2(artifacts_dir),
+        "tab3" => accuracy::tab3(artifacts_dir),
+        "tab6" => accuracy::tab6(artifacts_dir),
+        "tab8" => accuracy::tab8(artifacts_dir),
+        "e2e" => latency::e2e(artifacts_dir),
+        "all" => {
+            for e in EXPERIMENTS {
+                println!("\n================ {e} ================");
+                run(e, artifacts_dir)?;
+            }
+            Ok(())
+        }
+        other => bail!(
+            "unknown experiment '{other}' (known: {})",
+            EXPERIMENTS.join(", ")
+        ),
+    }
+}
+
+/// Fixed-width table printing helper.
+pub fn print_row(cells: &[String], widths: &[usize]) {
+    let mut line = String::new();
+    for (c, w) in cells.iter().zip(widths.iter()) {
+        line.push_str(&format!("{:<width$}  ", c, width = w));
+    }
+    println!("{}", line.trim_end());
+}

@@ -1,0 +1,355 @@
+//! Typed configuration: the artifacts manifest (written by aot.py) and
+//! the engine config consumed by the CLI / server.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::json::Json;
+
+/// Element dtype tags used by the manifest (match aot.py's DT map).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    S8,
+    U8,
+    S32,
+}
+
+impl Dtype {
+    pub fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "s8" => Dtype::S8,
+            "u8" => Dtype::U8,
+            "s32" => Dtype::S32,
+            _ => bail!("unknown dtype tag {s}"),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::S32 => 4,
+            Dtype::S8 | Dtype::U8 => 1,
+        }
+    }
+}
+
+/// One graph parameter or output.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ParamSpec {
+            name: j
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("param missing name"))?
+                .to_string(),
+            shape: j.get("shape").usize_vec(),
+            dtype: Dtype::from_str(
+                j.get("dtype").as_str().unwrap_or("f32"),
+            )?,
+        })
+    }
+}
+
+/// Kinds of AOT graphs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GraphKind {
+    Prefill,
+    Decode,
+    Gemm,
+}
+
+/// Manifest entry describing one HLO artifact.
+#[derive(Clone, Debug)]
+pub struct GraphInfo {
+    pub name: String,
+    pub kind: GraphKind,
+    pub path: String,
+    pub params: Vec<ParamSpec>,
+    pub outputs: Vec<ParamSpec>,
+    pub model: Option<String>,
+    pub variant: String,
+    pub batch: usize,
+    pub seq: usize,
+    /// GEMM-only metadata
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub group: usize,
+    pub shape_set: String,
+}
+
+/// Model description from the manifest.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+    pub weights_file: String,
+    pub hessians_file: String,
+    pub n_params: usize,
+}
+
+/// The parsed artifacts/manifest.json.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub group_size: usize,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub graphs: BTreeMap<String, GraphInfo>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let group_size = j.get("group_size").as_usize().unwrap_or(64);
+
+        let mut models = BTreeMap::new();
+        if let Some(obj) = j.get("models").as_obj() {
+            for (name, m) in obj {
+                models.insert(
+                    name.clone(),
+                    ModelInfo {
+                        name: name.clone(),
+                        d_model: m.get("d_model").as_usize().unwrap_or(0),
+                        n_layers: m.get("n_layers").as_usize().unwrap_or(0),
+                        n_heads: m.get("n_heads").as_usize().unwrap_or(0),
+                        d_ff: m.get("d_ff").as_usize().unwrap_or(0),
+                        vocab: m.get("vocab").as_usize().unwrap_or(0),
+                        max_seq: m.get("max_seq").as_usize().unwrap_or(0),
+                        head_dim: m.get("head_dim").as_usize().unwrap_or(0),
+                        weights_file: m
+                            .get("weights")
+                            .as_str()
+                            .unwrap_or("")
+                            .to_string(),
+                        hessians_file: m
+                            .get("hessians")
+                            .as_str()
+                            .unwrap_or("")
+                            .to_string(),
+                        n_params: m.get("n_params").as_usize().unwrap_or(0),
+                    },
+                );
+            }
+        }
+
+        let mut graphs = BTreeMap::new();
+        if let Some(obj) = j.get("graphs").as_obj() {
+            for (name, g) in obj {
+                let kind = match g.get("kind").as_str() {
+                    Some("prefill") => GraphKind::Prefill,
+                    Some("decode") => GraphKind::Decode,
+                    Some("gemm") => GraphKind::Gemm,
+                    other => bail!("graph {name}: bad kind {other:?}"),
+                };
+                let params = g
+                    .get("params")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(ParamSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = g
+                    .get("outputs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(ParamSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                graphs.insert(
+                    name.clone(),
+                    GraphInfo {
+                        name: name.clone(),
+                        kind,
+                        path: g
+                            .get("path")
+                            .as_str()
+                            .unwrap_or("")
+                            .to_string(),
+                        params,
+                        outputs,
+                        model: g.get("model").as_str().map(str::to_string),
+                        variant: g
+                            .get("variant")
+                            .as_str()
+                            .unwrap_or("")
+                            .to_string(),
+                        batch: g.get("batch").as_usize().unwrap_or(0),
+                        seq: g.get("seq").as_usize().unwrap_or(0),
+                        m: g.get("m").as_usize().unwrap_or(0),
+                        n: g.get("n").as_usize().unwrap_or(0),
+                        k: g.get("k").as_usize().unwrap_or(0),
+                        group: g.get("group").as_usize().unwrap_or(0),
+                        shape_set: g
+                            .get("shape_set")
+                            .as_str()
+                            .unwrap_or("")
+                            .to_string(),
+                    },
+                );
+            }
+        }
+        Ok(Manifest { dir, group_size, models, graphs })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphInfo> {
+        self.graphs
+            .get(name)
+            .ok_or_else(|| anyhow!("graph '{name}' not in manifest"))
+    }
+
+    /// Canonical graph name for a model stage.
+    pub fn stage_graph(
+        &self,
+        model: &str,
+        variant: &str,
+        stage: &str,
+        batch: usize,
+    ) -> String {
+        format!("{model}_{variant}_{stage}_b{batch}")
+    }
+
+    pub fn hlo_path(&self, g: &GraphInfo) -> PathBuf {
+        self.dir.join(&g.path)
+    }
+
+    /// All GEMM graphs of a shape set.
+    pub fn gemm_graphs(&self, shape_set: &str) -> Vec<&GraphInfo> {
+        self.graphs
+            .values()
+            .filter(|g| g.kind == GraphKind::Gemm && g.shape_set == shape_set)
+            .collect()
+    }
+}
+
+/// Engine configuration (CLI flags or JSON config file).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub artifacts_dir: String,
+    pub model: String,
+    pub variant: String,
+    pub prefill_batch: usize,
+    pub decode_batch: usize,
+    pub max_new_tokens: usize,
+    pub max_queue: usize,
+    pub checkpoint: Option<String>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            artifacts_dir: "artifacts".into(),
+            model: "tiny3m".into(),
+            variant: "w4a8_fast".into(),
+            prefill_batch: 4,
+            decode_batch: 4,
+            max_new_tokens: 32,
+            max_queue: 256,
+            checkpoint: None,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn from_json(j: &Json) -> Self {
+        let d = EngineConfig::default();
+        EngineConfig {
+            artifacts_dir: j
+                .get("artifacts_dir")
+                .as_str()
+                .unwrap_or(&d.artifacts_dir)
+                .to_string(),
+            model: j.get("model").as_str().unwrap_or(&d.model).to_string(),
+            variant: j
+                .get("variant")
+                .as_str()
+                .unwrap_or(&d.variant)
+                .to_string(),
+            prefill_batch: j
+                .get("prefill_batch")
+                .as_usize()
+                .unwrap_or(d.prefill_batch),
+            decode_batch: j
+                .get("decode_batch")
+                .as_usize()
+                .unwrap_or(d.decode_batch),
+            max_new_tokens: j
+                .get("max_new_tokens")
+                .as_usize()
+                .unwrap_or(d.max_new_tokens),
+            max_queue: j.get("max_queue").as_usize().unwrap_or(d.max_queue),
+            checkpoint: j.get("checkpoint").as_str().map(str::to_string),
+        }
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("config: {e}"))?;
+        Ok(Self::from_json(&j))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_config_defaults_and_overrides() {
+        let j = Json::parse(r#"{"variant": "w8a8", "decode_batch": 8}"#)
+            .unwrap();
+        let c = EngineConfig::from_json(&j);
+        assert_eq!(c.variant, "w8a8");
+        assert_eq!(c.decode_batch, 8);
+        assert_eq!(c.model, "tiny3m");
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(Dtype::F32.size(), 4);
+        assert_eq!(Dtype::S8.size(), 1);
+        assert!(Dtype::from_str("bogus").is_err());
+    }
+
+    #[test]
+    fn stage_graph_names() {
+        let m = Manifest {
+            dir: PathBuf::from("x"),
+            group_size: 64,
+            models: BTreeMap::new(),
+            graphs: BTreeMap::new(),
+        };
+        assert_eq!(
+            m.stage_graph("tiny3m", "w4a8_fast", "prefill", 4),
+            "tiny3m_w4a8_fast_prefill_b4"
+        );
+    }
+}

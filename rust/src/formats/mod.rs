@@ -1,0 +1,10 @@
+//! File formats: JSON (parser + emitter) and safetensors, written from
+//! scratch (serde is unavailable offline).  `config` layers typed engine /
+//! model configuration on top.
+
+pub mod config;
+pub mod json;
+pub mod safetensors;
+
+pub use json::Json;
+pub use safetensors::{SafeTensors, StDtype, StTensor};

@@ -1,0 +1,327 @@
+//! safetensors reader/writer (mirrors python/compile/stio.py).
+//!
+//! Layout: 8-byte LE header length, JSON header mapping tensor name ->
+//! {dtype, shape, data_offsets}, then raw little-endian bytes.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::json::Json;
+use crate::tensor::Tensor;
+
+/// Supported dtypes (the subset this project emits).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StDtype {
+    F32,
+    F64,
+    I64,
+    I32,
+    I8,
+    U8,
+    U16,
+}
+
+impl StDtype {
+    pub fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "F32" => StDtype::F32,
+            "F64" => StDtype::F64,
+            "I64" => StDtype::I64,
+            "I32" => StDtype::I32,
+            "I8" => StDtype::I8,
+            "U8" => StDtype::U8,
+            "U16" => StDtype::U16,
+            _ => bail!("unsupported safetensors dtype {s}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StDtype::F32 => "F32",
+            StDtype::F64 => "F64",
+            StDtype::I64 => "I64",
+            StDtype::I32 => "I32",
+            StDtype::I8 => "I8",
+            StDtype::U8 => "U8",
+            StDtype::U16 => "U16",
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            StDtype::F64 | StDtype::I64 => 8,
+            StDtype::F32 | StDtype::I32 => 4,
+            StDtype::U16 => 2,
+            StDtype::I8 | StDtype::U8 => 1,
+        }
+    }
+}
+
+/// One stored tensor: dtype + shape + raw little-endian bytes.
+#[derive(Clone, Debug)]
+pub struct StTensor {
+    pub dtype: StDtype,
+    pub shape: Vec<usize>,
+    pub bytes: Vec<u8>,
+}
+
+macro_rules! convert_impl {
+    ($fn_to:ident, $fn_from:ident, $ty:ty, $dt:expr) => {
+        /// Typed view (copies; errors on dtype mismatch).
+        pub fn $fn_to(&self) -> Result<Tensor<$ty>> {
+            if self.dtype != $dt {
+                bail!(
+                    "dtype mismatch: stored {:?}, requested {}",
+                    self.dtype,
+                    stringify!($ty)
+                );
+            }
+            let n = self.bytes.len() / std::mem::size_of::<$ty>();
+            let mut out = Vec::with_capacity(n);
+            for chunk in self.bytes.chunks_exact(std::mem::size_of::<$ty>()) {
+                out.push(<$ty>::from_le_bytes(chunk.try_into().unwrap()));
+            }
+            Ok(Tensor::from_vec(&self.shape, out))
+        }
+
+        /// Construct from a typed tensor.
+        pub fn $fn_from(t: &Tensor<$ty>) -> StTensor {
+            let mut bytes =
+                Vec::with_capacity(t.len() * std::mem::size_of::<$ty>());
+            for v in t.data() {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            StTensor { dtype: $dt, shape: t.shape().to_vec(), bytes }
+        }
+    };
+}
+
+impl StTensor {
+    convert_impl!(to_f32, from_f32, f32, StDtype::F32);
+    convert_impl!(to_f64, from_f64, f64, StDtype::F64);
+    convert_impl!(to_i64, from_i64, i64, StDtype::I64);
+    convert_impl!(to_i32, from_i32, i32, StDtype::I32);
+    convert_impl!(to_i8, from_i8, i8, StDtype::I8);
+    convert_impl!(to_u8, from_u8, u8, StDtype::U8);
+    convert_impl!(to_u16, from_u16, u16, StDtype::U16);
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// An in-memory safetensors file.
+#[derive(Default, Debug)]
+pub struct SafeTensors {
+    pub tensors: BTreeMap<String, StTensor>,
+}
+
+impl SafeTensors {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: StTensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&StTensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("tensor '{name}' not found"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.tensors.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let raw = fs::read(path.as_ref()).with_context(|| {
+            format!("reading {}", path.as_ref().display())
+        })?;
+        Self::from_bytes(&raw)
+    }
+
+    pub fn from_bytes(raw: &[u8]) -> Result<Self> {
+        if raw.len() < 8 {
+            bail!("file too short for safetensors header");
+        }
+        let hlen = u64::from_le_bytes(raw[0..8].try_into().unwrap()) as usize;
+        if raw.len() < 8 + hlen {
+            bail!("header length {hlen} exceeds file size");
+        }
+        let header = std::str::from_utf8(&raw[8..8 + hlen])
+            .context("header not utf8")?;
+        let json = Json::parse(header.trim_end())
+            .map_err(|e| anyhow!("header json: {e}"))?;
+        let obj = json.as_obj().ok_or_else(|| anyhow!("header not object"))?;
+        let data = &raw[8 + hlen..];
+        let mut out = SafeTensors::new();
+        for (name, meta) in obj {
+            if name == "__metadata__" {
+                continue;
+            }
+            let dtype = StDtype::from_str(
+                meta.get("dtype")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("{name}: missing dtype"))?,
+            )?;
+            let shape = meta.get("shape").usize_vec();
+            let offs = meta.get("data_offsets").usize_vec();
+            if offs.len() != 2 || offs[1] > data.len() || offs[0] > offs[1] {
+                bail!("{name}: bad data_offsets {offs:?}");
+            }
+            let bytes = data[offs[0]..offs[1]].to_vec();
+            let expected: usize =
+                shape.iter().product::<usize>() * dtype.size();
+            if bytes.len() != expected {
+                bail!(
+                    "{name}: byte length {} != shape {:?} * {}",
+                    bytes.len(),
+                    shape,
+                    dtype.size()
+                );
+            }
+            out.insert(name, StTensor { dtype, shape, bytes });
+        }
+        Ok(out)
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let bytes = self.to_bytes();
+        let mut f = fs::File::create(path.as_ref()).with_context(|| {
+            format!("creating {}", path.as_ref().display())
+        })?;
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut header = BTreeMap::new();
+        let mut offset = 0usize;
+        for (name, t) in &self.tensors {
+            let entry = Json::obj(vec![
+                ("dtype", Json::str(t.dtype.name())),
+                (
+                    "shape",
+                    Json::Arr(
+                        t.shape.iter().map(|&s| Json::num(s as f64)).collect(),
+                    ),
+                ),
+                (
+                    "data_offsets",
+                    Json::Arr(vec![
+                        Json::num(offset as f64),
+                        Json::num((offset + t.bytes.len()) as f64),
+                    ]),
+                ),
+            ]);
+            header.insert(name.clone(), entry);
+            offset += t.bytes.len();
+        }
+        let mut hjson = Json::Obj(header).emit().into_bytes();
+        let pad = (8 - hjson.len() % 8) % 8;
+        hjson.extend(std::iter::repeat(b' ').take(pad));
+        let mut out = Vec::with_capacity(8 + hjson.len() + offset);
+        out.extend_from_slice(&(hjson.len() as u64).to_le_bytes());
+        out.extend_from_slice(&hjson);
+        for t in self.tensors.values() {
+            out.extend_from_slice(&t.bytes);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32_i8() {
+        let mut st = SafeTensors::new();
+        st.insert(
+            "a",
+            StTensor::from_f32(&Tensor::from_vec(&[2, 2], vec![1., -2., 3.5, 0.])),
+        );
+        st.insert(
+            "b.q",
+            StTensor::from_i8(&Tensor::from_vec(&[3], vec![-8i8, 0, 7])),
+        );
+        let bytes = st.to_bytes();
+        let st2 = SafeTensors::from_bytes(&bytes).unwrap();
+        assert_eq!(
+            st2.get("a").unwrap().to_f32().unwrap().data(),
+            &[1., -2., 3.5, 0.]
+        );
+        assert_eq!(st2.get("b.q").unwrap().to_i8().unwrap().data(), &[-8, 0, 7]);
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let mut st = SafeTensors::new();
+        st.insert(
+            "x",
+            StTensor::from_i32(&Tensor::from_vec(&[1], vec![42i32])),
+        );
+        let bytes = st.to_bytes();
+        let st2 = SafeTensors::from_bytes(&bytes).unwrap();
+        assert!(st2.get("x").unwrap().to_f32().is_err());
+        assert_eq!(st2.get("x").unwrap().to_i32().unwrap().data(), &[42]);
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let st = SafeTensors::new();
+        assert!(st.get("nope").is_err());
+    }
+
+    #[test]
+    fn corrupt_header_rejected() {
+        assert!(SafeTensors::from_bytes(&[1, 2, 3]).is_err());
+        let mut bad = vec![0u8; 16];
+        bad[0] = 100; // header length beyond file
+        assert!(SafeTensors::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn u16_roundtrip() {
+        let mut st = SafeTensors::new();
+        st.insert(
+            "tok",
+            StTensor::from_u16(&Tensor::from_vec(&[4], vec![0u16, 1, 511, 65535])),
+        );
+        let st2 = SafeTensors::from_bytes(&st.to_bytes()).unwrap();
+        assert_eq!(
+            st2.get("tok").unwrap().to_u16().unwrap().data(),
+            &[0, 1, 511, 65535]
+        );
+    }
+
+    #[test]
+    fn python_compat_header_shape() {
+        // shape/data_offsets must parse from a python-emitted style header
+        let payload = [0u8, 0, 128, 63]; // 1.0f32 LE
+        let header = br#"{"t":{"dtype":"F32","shape":[1],"data_offsets":[0,4]}}"#;
+        let mut raw = Vec::new();
+        let mut h = header.to_vec();
+        let pad = (8 - h.len() % 8) % 8;
+        h.extend(std::iter::repeat(b' ').take(pad));
+        raw.extend_from_slice(&(h.len() as u64).to_le_bytes());
+        raw.extend_from_slice(&h);
+        raw.extend_from_slice(&payload);
+        let st = SafeTensors::from_bytes(&raw).unwrap();
+        assert_eq!(st.get("t").unwrap().to_f32().unwrap().data(), &[1.0]);
+    }
+}

@@ -1,0 +1,53 @@
+//! # OdysseyLLM — deployable W4A8 quantization for LLMs
+//!
+//! Rust reproduction of *"A Speed Odyssey for Deployable Quantization of
+//! LLMs"* (Li et al., 2023).  This crate is the L3 layer of a three-layer
+//! stack:
+//!
+//! * **L1** — Pallas GEMM kernels (`python/compile/kernels/`): FastGEMM
+//!   (the paper's fused SINT4toS8 W4A8 kernel) plus every baseline bit
+//!   width paradigm, lowered AOT to HLO text.
+//! * **L2** — a JAX LLaMA-architecture model (`python/compile/model.py`)
+//!   whose prefill/decode graphs call the L1 kernels and take weights as
+//!   arguments.
+//! * **L3** — this crate: the quantization toolchain (RTN / LWC / GPTQ /
+//!   SmoothQuant / AWQ, SINT4 packing), the PJRT runtime that loads the
+//!   AOT artifacts, the serving coordinator (continuous batching, KV cache
+//!   management, prefill/decode scheduling), the analytical A100 perf
+//!   model, and the experiment drivers that regenerate every table and
+//!   figure of the paper.
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! binary is self-contained.
+//!
+//! ## Module map
+//!
+//! | module        | role |
+//! |---------------|------|
+//! | [`util`]      | logging, timing, stats, RNG, thread pool, mini prop-test |
+//! | [`tensor`]    | minimal ndarray (f32/i8/u8/i32) |
+//! | [`linalg`]    | Cholesky / triangular solve / SPD inverse for GPTQ |
+//! | [`formats`]   | JSON + safetensors + config files (no serde available) |
+//! | [`quant`]     | the paper's quantization recipe + all baselines |
+//! | [`model`]     | LLaMA checkpoint container + canonical naming |
+//! | [`runtime`]   | PJRT client, artifact registry, executable cache |
+//! | [`coordinator`]| serving engine: router, batcher, scheduler, KV manager |
+//! | [`server`]    | std::net HTTP/1.1 front-end |
+//! | [`perfmodel`] | analytical A100 roofline + engine comparators |
+//! | [`exp`]       | one driver per paper table/figure |
+
+pub mod cli;
+pub mod coordinator;
+pub mod exp;
+pub mod formats;
+pub mod linalg;
+pub mod model;
+pub mod perfmodel;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod util;
+
+/// Default artifacts directory (relative to the repo root).
+pub const ARTIFACTS_DIR: &str = "artifacts";

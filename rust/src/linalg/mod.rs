@@ -1,0 +1,203 @@
+//! Dense linear algebra for the GPTQ pipeline: Cholesky factorization,
+//! triangular solves, and SPD inversion — all in f64 for numerical
+//! headroom (matches the python reference, which runs GPTQ in float64).
+
+use crate::tensor::Tensor;
+
+/// Lower-triangular Cholesky factor L of an SPD matrix A (A = L Lᵀ).
+/// Returns `None` if A is not positive definite.
+pub fn cholesky(a: &Tensor<f64>) -> Option<Tensor<f64>> {
+    assert_eq!(a.ndim(), 2);
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "cholesky needs a square matrix");
+    let mut l = Tensor::<f64>::zeros(&[n, n]);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at2(i, j);
+            for k in 0..j {
+                sum -= l.at2(i, k) * l.at2(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l.set2(i, j, sum.sqrt());
+            } else {
+                l.set2(i, j, sum / l.at2(j, j));
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L y = b with L lower triangular (forward substitution).
+pub fn solve_lower(l: &Tensor<f64>, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut y = vec![0f64; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l.at2(i, k) * y[k];
+        }
+        y[i] = sum / l.at2(i, i);
+    }
+    y
+}
+
+/// Solve Lᵀ x = y with L lower triangular (back substitution).
+pub fn solve_lower_transpose(l: &Tensor<f64>, y: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(y.len(), n);
+    let mut x = vec![0f64; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l.at2(k, i) * x[k];
+        }
+        x[i] = sum / l.at2(i, i);
+    }
+    x
+}
+
+/// Inverse of an SPD matrix via Cholesky (column-by-column solves).
+pub fn spd_inverse(a: &Tensor<f64>) -> Option<Tensor<f64>> {
+    let n = a.rows();
+    let l = cholesky(a)?;
+    let mut inv = Tensor::<f64>::zeros(&[n, n]);
+    let mut e = vec![0f64; n];
+    for j in 0..n {
+        e.iter_mut().for_each(|v| *v = 0.0);
+        e[j] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_lower_transpose(&l, &y);
+        for i in 0..n {
+            inv.set2(i, j, x[i]);
+        }
+    }
+    // symmetrize to kill round-off drift
+    for i in 0..n {
+        for j in 0..i {
+            let v = 0.5 * (inv.at2(i, j) + inv.at2(j, i));
+            inv.set2(i, j, v);
+            inv.set2(j, i, v);
+        }
+    }
+    Some(inv)
+}
+
+/// The GPTQ factor: upper-triangular U with Uᵀ U = inv(A).
+/// (cholesky(inv(A)) transposed — matches `np.linalg.cholesky(inv).T`.)
+pub fn gptq_hinv_factor(a: &Tensor<f64>) -> Option<Tensor<f64>> {
+    let inv = spd_inverse(a)?;
+    let l = cholesky(&inv)?;
+    Some(l.transpose())
+}
+
+/// A @ B for f64 (small matrices; test/verification use only).
+pub fn matmul_f64(a: &Tensor<f64>, b: &Tensor<f64>) -> Tensor<f64> {
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.cols();
+    assert_eq!(k, b.rows());
+    let mut out = Tensor::<f64>::zeros(&[m, n]);
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a.at2(i, kk);
+            for j in 0..n {
+                out.set2(i, j, out.at2(i, j) + av * b.at2(kk, j));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift;
+
+    fn random_spd(n: usize, seed: u64) -> Tensor<f64> {
+        let mut rng = XorShift::new(seed);
+        let mut m = Tensor::<f64>::zeros(&[n, n]);
+        for i in 0..n {
+            for j in 0..n {
+                m.set2(i, j, rng.normal());
+            }
+        }
+        // A = M Mᵀ + n·I  is SPD
+        let mt = m.transpose();
+        let mut a = matmul_f64(&m, &mt);
+        for i in 0..n {
+            a.set2(i, i, a.at2(i, i) + n as f64);
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_spd(8, 1);
+        let l = cholesky(&a).unwrap();
+        let rec = matmul_f64(&l, &l.transpose());
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((rec.at2(i, j) - a.at2(i, j)).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 2.0, 1.0]);
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solves_invert() {
+        let a = random_spd(6, 2);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..6).map(|i| i as f64 - 2.5).collect();
+        let y = solve_lower(&l, &b);
+        let x = solve_lower_transpose(&l, &y);
+        // check A x == b
+        for i in 0..6 {
+            let mut acc = 0f64;
+            for j in 0..6 {
+                acc += a.at2(i, j) * x[j];
+            }
+            assert!((acc - b[i]).abs() < 1e-8, "row {i}: {acc} vs {}", b[i]);
+        }
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        let a = random_spd(7, 3);
+        let inv = spd_inverse(&a).unwrap();
+        let prod = matmul_f64(&a, &inv);
+        for i in 0..7 {
+            for j in 0..7 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.at2(i, j) - want).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn gptq_factor_property() {
+        // Uᵀ U must equal inv(A)
+        let a = random_spd(5, 4);
+        let u = gptq_hinv_factor(&a).unwrap();
+        let utu = matmul_f64(&u.transpose(), &u);
+        let inv = spd_inverse(&a).unwrap();
+        for i in 0..5 {
+            for j in 0..5 {
+                assert!((utu.at2(i, j) - inv.at2(i, j)).abs() < 1e-9);
+            }
+        }
+        // and U must be upper triangular
+        for i in 0..5 {
+            for j in 0..i {
+                assert_eq!(u.at2(i, j), 0.0);
+            }
+        }
+    }
+}

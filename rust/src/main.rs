@@ -1,0 +1,195 @@
+//! `odyssey` — CLI entrypoint for the OdysseyLLM reproduction.
+//! See `odyssey --help` (cli::USAGE) for the command catalog.
+
+use anyhow::{anyhow, bail, Result};
+
+use odyssey::cli::{self, Args};
+use odyssey::coordinator::handle::EngineService;
+use odyssey::coordinator::{EngineOptions, GenParams};
+use odyssey::exp;
+use odyssey::model::{self, Calibration, Checkpoint};
+use odyssey::runtime::Runtime;
+use odyssey::util::log;
+
+fn main() {
+    log::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty()
+        || argv[0] == "--help"
+        || argv[0] == "-h"
+        || argv[0] == "help"
+    {
+        print!("{}", cli::USAGE);
+        return;
+    }
+    if let Err(e) = run(&argv) {
+        log::error(&format!("{e:#}"));
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["force"])?;
+    let cmd = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("missing command"))?
+        .clone();
+    let artifacts = args.get_or("artifacts", "artifacts");
+    match cmd.as_str() {
+        "info" => info(&artifacts),
+        "quantize" => quantize(&args, &artifacts),
+        "eval" => eval(&args, &artifacts),
+        "generate" => generate(&args, &artifacts),
+        "serve" => serve(&args, &artifacts),
+        "bench-gemm" => bench_gemm(&args, &artifacts),
+        "reproduce" => {
+            let exp_id = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("reproduce needs an experiment id"))?;
+            exp::run(exp_id, &artifacts)
+        }
+        other => bail!("unknown command '{other}'\n{}", cli::USAGE),
+    }
+}
+
+fn info(artifacts: &str) -> Result<()> {
+    let rt = Runtime::new(artifacts)?;
+    println!("artifacts: {}", rt.manifest.dir.display());
+    println!("group size: {}", rt.manifest.group_size);
+    println!("\nmodels:");
+    for (name, m) in &rt.manifest.models {
+        println!(
+            "  {name}: {} layers, d={}, ff={}, vocab={}, {:.1}M params",
+            m.n_layers,
+            m.d_model,
+            m.d_ff,
+            m.vocab,
+            m.n_params as f64 / 1e6
+        );
+    }
+    let mut by_kind = std::collections::BTreeMap::new();
+    for g in rt.manifest.graphs.values() {
+        *by_kind.entry(format!("{:?}", g.kind)).or_insert(0usize) += 1;
+    }
+    println!("\ngraphs: {} total {:?}", rt.manifest.graphs.len(), by_kind);
+    Ok(())
+}
+
+fn quantize(args: &Args, artifacts: &str) -> Result<()> {
+    let model_name = args.get_or("model", "tiny3m");
+    let variant = args.get_or("variant", "w4a8_fast");
+    let recipe = cli::parse_recipe(&args.get_or("recipe", "odyssey"))?;
+    let out = args.get_or(
+        "out",
+        &format!("{artifacts}/{model_name}_{variant}_quantized.safetensors"),
+    );
+    let rt = Runtime::new(artifacts)?;
+    let ckpt = Checkpoint::load(&rt.manifest, &model_name)?;
+    let calib = if recipe.use_gptq || recipe.use_lwc || recipe.use_smoothquant || recipe.use_awq
+    {
+        Some(Calibration::load(&rt.manifest, &model_name)?)
+    } else {
+        None
+    };
+    let t0 = std::time::Instant::now();
+    let qw = model::quantize_checkpoint(
+        &ckpt,
+        calib.as_ref(),
+        &recipe,
+        &variant,
+        rt.manifest.group_size,
+    )?;
+    qw.save(std::path::Path::new(&out))?;
+    let avg_mse: f64 = qw.stats.iter().map(|s| s.weight_mse).sum::<f64>()
+        / qw.stats.len().max(1) as f64;
+    println!(
+        "quantized {} matrices in {:.1}s (mean weight MSE {:.3e}) -> {}",
+        qw.stats.len(),
+        t0.elapsed().as_secs_f64(),
+        avg_mse,
+        out
+    );
+    Ok(())
+}
+
+fn eval(args: &Args, artifacts: &str) -> Result<()> {
+    let model_name = args.get_or("model", "tiny3m");
+    let variant = args.get_or("variant", "w4a8_fast");
+    let recipe = cli::parse_recipe(&args.get_or("recipe", "odyssey"))?;
+    let mut ev =
+        exp::eval::Evaluator::new(artifacts, &model_name, &variant, &recipe)?;
+    let val = exp::eval::load_corpus(artifacts, "val")?;
+    let tasks = exp::eval::Tasks::load(artifacts)?;
+    let ppl = ev.perplexity(&val, 24)?;
+    let cloze = ev.cloze_accuracy(&tasks.cloze, tasks.noun_range)?;
+    let mcq = ev.mcq_accuracy(&tasks.mcq)?;
+    println!(
+        "{model_name}/{variant}: ppl={ppl:.3} cloze={:.2}% mcq={:.2}%",
+        cloze * 100.0,
+        mcq * 100.0
+    );
+    Ok(())
+}
+
+fn generate(args: &Args, artifacts: &str) -> Result<()> {
+    let prompt: Vec<i32> = args
+        .get("prompt")
+        .ok_or_else(|| anyhow!("--prompt 1,2,3 required"))?
+        .split(',')
+        .map(|t| t.trim().parse::<i32>())
+        .collect::<Result<Vec<_>, _>>()
+        .map_err(|e| anyhow!("bad --prompt: {e}"))?;
+    let opts = EngineOptions {
+        artifacts_dir: artifacts.to_string(),
+        model: args.get_or("model", "tiny3m"),
+        variant: args.get_or("variant", "w4a8_fast"),
+        recipe: cli::parse_recipe(&args.get_or("recipe", "odyssey"))?,
+        ..Default::default()
+    };
+    let svc = EngineService::spawn(opts)?;
+    let params = GenParams {
+        max_new_tokens: args.get_usize("max-new-tokens", 16)?,
+        temperature: args
+            .get("temperature")
+            .map(|t| t.parse::<f32>())
+            .transpose()
+            .map_err(|e| anyhow!("bad --temperature: {e}"))?
+            .unwrap_or(0.0),
+        ..Default::default()
+    };
+    let res = svc.handle.generate(prompt, params)?;
+    println!("generated: {:?}", res.tokens);
+    println!(
+        "finish={:?} ttft={:.1}ms total={:.1}ms ({:.1} tok/s)",
+        res.finish,
+        res.ttft_s * 1e3,
+        res.total_s * 1e3,
+        res.tokens_per_s()
+    );
+    svc.shutdown();
+    Ok(())
+}
+
+fn serve(args: &Args, artifacts: &str) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:8080");
+    let workers = args.get_usize("workers", 4)?;
+    let opts = EngineOptions {
+        artifacts_dir: artifacts.to_string(),
+        model: args.get_or("model", "tiny3m"),
+        variant: args.get_or("variant", "w4a8_fast"),
+        recipe: cli::parse_recipe(&args.get_or("recipe", "odyssey"))?,
+        ..Default::default()
+    };
+    let svc = EngineService::spawn(opts)?;
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    odyssey::server::serve(&addr, svc.handle.clone(), workers, stop)
+}
+
+fn bench_gemm(args: &Args, artifacts: &str) -> Result<()> {
+    let variants = args.get_or("variants", "w4a8_fast,w8a8,fp");
+    let vlist: Vec<&str> = variants.split(',').collect();
+    let m = args.get_usize("m", 1)?;
+    exp::latency::measured_gemm_set(artifacts, &vlist, m)
+}

@@ -1,0 +1,386 @@
+//! LLaMA checkpoint container: canonical weight naming (mirrors
+//! python/compile/configs.py), f32 checkpoint loading, calibration-stat
+//! loading, and full-checkpoint quantization into the flat argument lists
+//! the AOT graphs expect.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::formats::config::{Manifest, ModelInfo};
+use crate::formats::safetensors::{SafeTensors, StTensor};
+use crate::quant::{pipeline, QuantRecipe, Quantizer, WeightFormat};
+use crate::tensor::Tensor;
+
+/// Per-layer weight leaf names, in canonical argument order.
+pub const LAYER_WEIGHTS: [&str; 9] = [
+    "attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up",
+    "w_down",
+];
+
+/// Leaves that are quantizable matrices.
+pub const LAYER_MATRICES: [&str; 7] =
+    ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"];
+
+/// Tail weights after all layers.
+pub const TAIL_WEIGHTS: [&str; 3] = ["norm_f", "embed", "lm_head"];
+
+/// Flat canonical weight name list for a model.
+pub fn weight_names(info: &ModelInfo) -> Vec<String> {
+    let mut out = Vec::new();
+    for i in 0..info.n_layers {
+        for leaf in LAYER_WEIGHTS {
+            out.push(format!("layers.{i}.{leaf}"));
+        }
+    }
+    out.extend(TAIL_WEIGHTS.iter().map(|s| s.to_string()));
+    out
+}
+
+/// Calibration tap feeding a given matrix (mirrors calib.py).
+pub fn matrix_tap(name: &str) -> Result<String> {
+    let (prefix, leaf) = name
+        .rsplit_once('.')
+        .ok_or_else(|| anyhow!("bad matrix name {name}"))?;
+    let tap = match leaf {
+        "wq" | "wk" | "wv" => "attn_in",
+        "wo" => "attn_out_in",
+        "w_gate" | "w_up" => "mlp_in",
+        "w_down" => "mlp_down_in",
+        _ => return Err(anyhow!("{name} is not a quantizable matrix")),
+    };
+    Ok(format!("{prefix}.{tap}"))
+}
+
+/// An f32 checkpoint (name -> tensor).
+pub struct Checkpoint {
+    pub info: ModelInfo,
+    pub tensors: BTreeMap<String, Tensor<f32>>,
+}
+
+impl Checkpoint {
+    /// Load the trained f32 checkpoint named in the manifest.
+    pub fn load(manifest: &Manifest, model: &str) -> Result<Self> {
+        let info = manifest.model(model)?.clone();
+        let st = SafeTensors::load(manifest.dir.join(&info.weights_file))
+            .with_context(|| format!("loading checkpoint for {model}"))?;
+        let mut tensors = BTreeMap::new();
+        for name in st.names() {
+            tensors.insert(name.clone(), st.get(name)?.to_f32()?);
+        }
+        // verify every canonical weight is present
+        for name in weight_names(&info) {
+            if !tensors.contains_key(&name) {
+                return Err(anyhow!("checkpoint missing weight {name}"));
+            }
+        }
+        Ok(Checkpoint { info, tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor<f32>> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("weight {name} missing"))
+    }
+}
+
+/// Calibration statistics (hessians + activation stats per tap).
+pub struct Calibration {
+    pub hessians: BTreeMap<String, Tensor<f32>>,
+    pub absmax: BTreeMap<String, Vec<f32>>,
+    pub absmean: BTreeMap<String, Vec<f32>>,
+    pub samples: BTreeMap<String, Tensor<f32>>,
+}
+
+impl Calibration {
+    pub fn load(manifest: &Manifest, model: &str) -> Result<Self> {
+        let info = manifest.model(model)?;
+        let st = SafeTensors::load(manifest.dir.join(&info.hessians_file))
+            .with_context(|| format!("loading calibration for {model}"))?;
+        let mut c = Calibration {
+            hessians: BTreeMap::new(),
+            absmax: BTreeMap::new(),
+            absmean: BTreeMap::new(),
+            samples: BTreeMap::new(),
+        };
+        for name in st.names() {
+            let t = st.get(name)?;
+            if let Some(tap) = name.strip_suffix(".hessian") {
+                c.hessians.insert(tap.to_string(), t.to_f32()?);
+            } else if let Some(tap) = name.strip_suffix(".absmax") {
+                c.absmax.insert(tap.to_string(), t.to_f32()?.into_vec());
+            } else if let Some(tap) = name.strip_suffix(".absmean") {
+                c.absmean.insert(tap.to_string(), t.to_f32()?.into_vec());
+            } else if let Some(tap) = name.strip_suffix(".sample") {
+                c.samples.insert(tap.to_string(), t.to_f32()?);
+            }
+        }
+        Ok(c)
+    }
+}
+
+/// A fully quantized checkpoint ready to feed a graph: payload tensors in
+/// canonical flat-argument order, with names.
+pub struct QuantizedWeights {
+    pub variant: String,
+    pub names: Vec<String>,
+    pub tensors: Vec<StTensor>,
+    pub stats: Vec<pipeline::MatrixStats>,
+}
+
+/// Quantize a checkpoint for `variant` with `recipe`.
+///
+/// SmoothQuant/AWQ smoothing is applied group-wise (q/k/v and gate/up) and
+/// folded into the preceding norms, exactly like the upstream methods, so
+/// the graph math is unchanged.
+pub fn quantize_checkpoint(
+    ckpt: &Checkpoint,
+    calib: Option<&Calibration>,
+    recipe: &QuantRecipe,
+    variant: &str,
+    group_size: usize,
+) -> Result<QuantizedWeights> {
+    let format = WeightFormat::for_variant(variant)?;
+    let qz = Quantizer::new(recipe.clone(), group_size);
+    let mut names = Vec::new();
+    let mut tensors = Vec::new();
+    let mut stats = Vec::new();
+
+    // working copies for smoothing
+    let mut work: BTreeMap<String, Tensor<f32>> = ckpt.tensors.clone();
+
+    // 1. smoothing pass (per layer, foldable groups only)
+    if recipe.use_smoothquant || recipe.use_awq {
+        let calib = calib.ok_or_else(|| {
+            anyhow!("smoothing recipes require calibration stats")
+        })?;
+        for i in 0..ckpt.info.n_layers {
+            let p = format!("layers.{i}");
+            for (norm_name, mat_names, tap) in [
+                (
+                    format!("{p}.attn_norm"),
+                    vec![format!("{p}.wq"), format!("{p}.wk"), format!("{p}.wv")],
+                    format!("{p}.attn_in"),
+                ),
+                (
+                    format!("{p}.mlp_norm"),
+                    vec![format!("{p}.w_gate"), format!("{p}.w_up")],
+                    format!("{p}.mlp_in"),
+                ),
+            ] {
+                let absmax = calib
+                    .absmax
+                    .get(&tap)
+                    .ok_or_else(|| anyhow!("missing absmax for {tap}"))?;
+                let absmean = calib
+                    .absmean
+                    .get(&tap)
+                    .ok_or_else(|| anyhow!("missing absmean for {tap}"))?;
+                let sample = calib.samples.get(&tap);
+                let norm = work
+                    .get(&norm_name)
+                    .ok_or_else(|| anyhow!("missing {norm_name}"))?
+                    .data()
+                    .to_vec();
+                // take matrices out to satisfy the borrow checker
+                let mut mats: Vec<Tensor<f32>> = mat_names
+                    .iter()
+                    .map(|n| work.remove(n).unwrap())
+                    .collect();
+                {
+                    let mut refs: Vec<&mut Tensor<f32>> =
+                        mats.iter_mut().collect();
+                    let folded = qz.smooth_group(
+                        absmax,
+                        absmean,
+                        sample,
+                        &norm,
+                        &mut refs,
+                    );
+                    let norm_t =
+                        Tensor::from_vec(&[folded.len()], folded);
+                    work.insert(norm_name.clone(), norm_t);
+                }
+                for (n, m) in mat_names.iter().zip(mats.into_iter()) {
+                    work.insert(n.clone(), m);
+                }
+            }
+        }
+    }
+
+    // 2. per-matrix quantization in canonical order
+    for name in weight_names(&ckpt.info) {
+        let leaf = name.rsplit('.').next().unwrap();
+        let t = work
+            .get(&name)
+            .ok_or_else(|| anyhow!("missing weight {name}"))?;
+        if LAYER_MATRICES.contains(&leaf) {
+            let hess = match calib {
+                Some(c) => c.hessians.get(&matrix_tap(&name)?),
+                None => None,
+            };
+            let (payload, st) =
+                qz.quantize_matrix(&name, t, hess, format)?;
+            for (suffix, tensor) in
+                format.payload_suffixes().iter().zip(payload.into_iter())
+            {
+                names.push(format!("{name}.{suffix}"));
+                tensors.push(tensor);
+            }
+            stats.push(st);
+        } else {
+            names.push(name.clone());
+            tensors.push(StTensor::from_f32(t));
+        }
+    }
+    Ok(QuantizedWeights {
+        variant: variant.to_string(),
+        names,
+        tensors,
+        stats,
+    })
+}
+
+impl QuantizedWeights {
+    /// Persist as a safetensors file (plus variant marker).
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut st = SafeTensors::new();
+        for (n, t) in self.names.iter().zip(self.tensors.iter()) {
+            st.insert(n, t.clone());
+        }
+        st.save(path)
+    }
+
+    /// Load payloads back in the canonical order given by `names`.
+    pub fn load(
+        path: &std::path::Path,
+        variant: &str,
+        expected_names: &[String],
+    ) -> Result<Self> {
+        let st = SafeTensors::load(path)?;
+        let mut tensors = Vec::with_capacity(expected_names.len());
+        for n in expected_names {
+            tensors.push(st.get(n)?.clone());
+        }
+        Ok(QuantizedWeights {
+            variant: variant.to_string(),
+            names: expected_names.to_vec(),
+            tensors,
+            stats: Vec::new(),
+        })
+    }
+}
+
+/// Expected flat payload names for (model, variant) — must equal the
+/// manifest's weight-argument names.
+pub fn payload_names(info: &ModelInfo, variant: &str) -> Result<Vec<String>> {
+    let format = WeightFormat::for_variant(variant)?;
+    let mut out = Vec::new();
+    for name in weight_names(info) {
+        let leaf = name.rsplit('.').next().unwrap();
+        if LAYER_MATRICES.contains(&leaf) {
+            for s in format.payload_suffixes() {
+                out.push(format!("{name}.{s}"));
+            }
+        } else {
+            out.push(name);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_info() -> ModelInfo {
+        ModelInfo {
+            name: "t".into(),
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            vocab: 32,
+            max_seq: 16,
+            head_dim: 8,
+            weights_file: String::new(),
+            hessians_file: String::new(),
+            n_params: 0,
+        }
+    }
+
+    #[test]
+    fn canonical_order_matches_python() {
+        let names = weight_names(&dummy_info());
+        assert_eq!(names[0], "layers.0.attn_norm");
+        assert_eq!(names[1], "layers.0.wq");
+        assert_eq!(names[8], "layers.0.w_down");
+        assert_eq!(names[9], "layers.1.attn_norm");
+        assert_eq!(names[names.len() - 3], "norm_f");
+        assert_eq!(names[names.len() - 2], "embed");
+        assert_eq!(names[names.len() - 1], "lm_head");
+    }
+
+    #[test]
+    fn tap_mapping() {
+        assert_eq!(matrix_tap("layers.3.wq").unwrap(), "layers.3.attn_in");
+        assert_eq!(
+            matrix_tap("layers.0.w_down").unwrap(),
+            "layers.0.mlp_down_in"
+        );
+        assert!(matrix_tap("layers.0.attn_norm").is_err());
+    }
+
+    #[test]
+    fn payload_names_expand_matrices() {
+        let info = dummy_info();
+        let names = payload_names(&info, "w4a8_fast").unwrap();
+        assert!(names.contains(&"layers.0.wq.wp".to_string()));
+        assert!(names.contains(&"layers.0.wq.s_w".to_string()));
+        assert!(names.contains(&"norm_f".to_string()));
+        // fp variant keeps plain names with .w suffix on matrices
+        let fp = payload_names(&info, "fp").unwrap();
+        assert!(fp.contains(&"layers.0.wq.w".to_string()));
+    }
+
+    #[test]
+    fn quantize_tiny_checkpoint_roundtrip() {
+        let info = dummy_info();
+        let mut tensors = BTreeMap::new();
+        let mut seed = 60;
+        for name in weight_names(&info) {
+            let leaf = name.rsplit('.').next().unwrap();
+            let t = match leaf {
+                "attn_norm" | "mlp_norm" | "norm_f" => {
+                    Tensor::full(&[info.d_model], 1.0f32)
+                }
+                "wq" | "wk" | "wv" | "wo" => {
+                    Tensor::randn(&[info.d_model, info.d_model], seed)
+                }
+                "w_gate" | "w_up" => {
+                    Tensor::randn(&[info.d_model, info.d_ff], seed)
+                }
+                "w_down" => Tensor::randn(&[info.d_ff, info.d_model], seed),
+                "embed" => Tensor::randn(&[info.vocab, info.d_model], seed),
+                "lm_head" => Tensor::randn(&[info.d_model, info.vocab], seed),
+                _ => unreachable!(),
+            };
+            seed += 1;
+            tensors.insert(name, t);
+        }
+        let ckpt = Checkpoint { info: info.clone(), tensors };
+        let qw = quantize_checkpoint(
+            &ckpt,
+            None,
+            &QuantRecipe::vanilla_w4(),
+            "w4a8_fast",
+            8,
+        )
+        .unwrap();
+        let expected = payload_names(&info, "w4a8_fast").unwrap();
+        assert_eq!(qw.names, expected);
+        assert_eq!(qw.tensors.len(), expected.len());
+        // 14 quantized matrices (2 layers x 7)
+        assert_eq!(qw.stats.len(), 14);
+    }
+}

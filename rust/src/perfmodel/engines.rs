@@ -1,0 +1,192 @@
+//! Engine comparator profiles: ours, TensorRT-LLM, HuggingFace eager,
+//! HuggingFace + bitsandbytes NF4.
+//!
+//! Profiles differ only in *structural* properties, not fitted constants:
+//! kernel fusion quality (per-layer fixed overhead), host-sync cost per
+//! decode step, and — for NF4 — the normal-float dequantization that runs
+//! a lookup + rescale on CUDA cores for every weight element before an
+//! fp16 GEMM (bitsandbytes' documented design).
+
+use super::gemm::{gemm_cost, GemmKind};
+use super::llm::{e2e_latency, EngineOverhead, LlmShape, PhaseLatency};
+use super::GpuSpec;
+
+/// The engines compared in Tables 4 and 7.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// our CUTLASS-style engine (the paper's "Ours")
+    Ours,
+    /// TensorRT-LLM: equally fused, marginally better scheduling
+    TrtLlm,
+    /// HuggingFace transformers eager: per-op kernels, python host loop
+    HfEager,
+    /// HuggingFace + bitsandbytes NF4 4-bit
+    HfNf4,
+}
+
+impl EngineKind {
+    pub fn overhead(&self) -> EngineOverhead {
+        match self {
+            // tight kernel fusion: tiny per-layer cost, fast sampler
+            EngineKind::Ours => EngineOverhead {
+                per_layer_s: 1.0e-6,
+                per_step_s: 30e-6,
+                gemm_scale: 1.0,
+            },
+            // TRT-LLM's scheduler is a bit tighter than ours per step,
+            // kernels comparable (paper Table 4 shows ours ~5% slower
+            // at FP16)
+            EngineKind::TrtLlm => EngineOverhead {
+                per_layer_s: 0.8e-6,
+                per_step_s: 25e-6,
+                gemm_scale: 0.97,
+            },
+            // eager mode: every op its own kernel + python dispatch
+            // (~10 extra launches/layer) and a slow host sampling loop
+            EngineKind::HfEager => EngineOverhead {
+                per_layer_s: 45e-6,
+                per_step_s: 2.0e-3,
+                gemm_scale: 1.25,
+            },
+            // NF4 inherits eager overheads; GEMM cost handled separately
+            EngineKind::HfNf4 => EngineOverhead {
+                per_layer_s: 45e-6,
+                per_step_s: 2.0e-3,
+                gemm_scale: 1.0,
+            },
+        }
+    }
+
+    /// Engine-specific end-to-end latency.
+    pub fn latency(
+        &self,
+        g: &GpuSpec,
+        shape: &LlmShape,
+        kind: GemmKind,
+        batch: usize,
+        in_tokens: usize,
+        out_tokens: usize,
+        group: usize,
+    ) -> PhaseLatency {
+        match self {
+            EngineKind::HfNf4 => {
+                // bitsandbytes NF4 GEMMs + eager-mode dispatch overheads
+                let oh = self.overhead();
+                e2e_latency(
+                    g,
+                    shape,
+                    GemmKind::Nf4 { group: 64 },
+                    &oh,
+                    batch,
+                    in_tokens,
+                    out_tokens,
+                    0,
+                )
+            }
+            _ => e2e_latency(
+                g,
+                shape,
+                kind,
+                &self.overhead(),
+                batch,
+                in_tokens,
+                out_tokens,
+                group,
+            ),
+        }
+    }
+}
+
+/// QUIK per-kernel comparator (paper Table 5): our FastGEMM vs QUIK's
+/// multi-kernel W4A4-with-outliers at a given (M, N, K).
+pub fn quik_vs_fastgemm(
+    g: &GpuSpec,
+    m: usize,
+    n: usize,
+    k: usize,
+) -> (f64, f64) {
+    let quik = gemm_cost(
+        g,
+        GemmKind::QuikW4A4 { outlier_frac_x1000: 50 },
+        m,
+        n,
+        k,
+        0,
+    )
+    .total();
+    let fast = gemm_cost(g, GemmKind::W4A8Fast, m, n, k, 0).total();
+    (quik, fast)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g() -> GpuSpec {
+        GpuSpec::a100_80g()
+    }
+
+    #[test]
+    fn trt_fp16_close_to_ours_fp16() {
+        let s = LlmShape::llama2_13b();
+        let ours = EngineKind::Ours
+            .latency(&g(), &s, GemmKind::Fp16, 1, 1024, 128, 0)
+            .total();
+        let trt = EngineKind::TrtLlm
+            .latency(&g(), &s, GemmKind::Fp16, 1, 1024, 128, 0)
+            .total();
+        let ratio = ours / trt;
+        // paper Table 4: ours within ~8% of TRT at FP16
+        assert!(ratio > 1.0 && ratio < 1.15, "ratio {ratio}");
+    }
+
+    #[test]
+    fn our_w4a8_beats_trt_fp16_by_about_2x() {
+        let s = LlmShape::llama2_13b();
+        let trt_fp16 = EngineKind::TrtLlm
+            .latency(&g(), &s, GemmKind::Fp16, 1, 1024, 128, 0)
+            .total();
+        let ours_w4a8 = EngineKind::Ours
+            .latency(&g(), &s, GemmKind::W4A8Fast, 1, 1024, 128, 0)
+            .total();
+        let boost = trt_fp16 / ours_w4a8;
+        // paper: 2.23x for 13B — the model should land in the band
+        assert!(boost > 1.6 && boost < 3.0, "boost {boost}");
+    }
+
+    #[test]
+    fn hf_eager_much_slower() {
+        let s = LlmShape::llama2_7b();
+        let hf = EngineKind::HfEager
+            .latency(&g(), &s, GemmKind::Fp16, 1, 1024, 128, 0)
+            .total();
+        let ours = EngineKind::Ours
+            .latency(&g(), &s, GemmKind::W4A8Fast, 1, 1024, 128, 0)
+            .total();
+        let boost = hf / ours;
+        // paper Table 7: 4.57x for 7B bs=1
+        assert!(boost > 3.0 && boost < 7.0, "boost {boost}");
+    }
+
+    #[test]
+    fn nf4_slower_than_hf_fp16() {
+        // paper A.3: the HF 4-bit NF4 path is SLOWER than HF fp16
+        let s = LlmShape::llama2_7b();
+        let fp16 = EngineKind::HfEager
+            .latency(&g(), &s, GemmKind::Fp16, 1, 1024, 128, 0)
+            .total();
+        let nf4 = EngineKind::HfNf4
+            .latency(&g(), &s, GemmKind::Fp16, 1, 1024, 128, 64)
+            .total();
+        assert!(nf4 > fp16, "nf4 {nf4} vs fp16 {fp16}");
+    }
+
+    #[test]
+    fn quik_table5_shape() {
+        // context decode: roughly on par; self-decode: >=3x
+        let (q_ctx, f_ctx) = quik_vs_fastgemm(&g(), 1024, 4096, 4096);
+        let (q_dec, f_dec) = quik_vs_fastgemm(&g(), 1, 4096, 4096);
+        assert!(q_ctx / f_ctx < 1.6, "context parity: {}", q_ctx / f_ctx);
+        assert!(q_dec / f_dec > 2.5, "self-decode win: {}", q_dec / f_dec);
+    }
+}

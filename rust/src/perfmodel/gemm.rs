@@ -1,0 +1,288 @@
+//! Per-kernel GEMM cost model, one entry per bit-width paradigm.
+//!
+//! time = max(compute, memory) + inner_loop_overhead + epilogue + launch
+//!
+//! The distinguishing term is `inner_loop_overhead`: work that the
+//! paradigm forces onto the CUDA-core ALUs *inside* the K loop, where it
+//! cannot hide behind Tensor Core math:
+//!
+//! * fine-grained W4A8 (Eq. 5): one Integer2Float + FMA per output element
+//!   per K-group — `M*N*(K/G) * 2` ALU ops.
+//! * asymmetric W4A8: s8 subtraction is unsupported (PTX has no sub.s8);
+//!   operands widen to s32 — modeled as `M*N*K / 4` extra ALU ops (one
+//!   widened op per 4-element packed word) plus the zero-point correction.
+//! * unfused conversion (Fig. 4(b)): a separate kernel materializes the
+//!   s8 weights — an extra HBM write+read of K*N bytes and a second launch.
+//! * FastGEMM: conversion folds into the shared-memory load (free behind
+//!   the MXU/TC pipeline); only the ÷16-adjusted per-channel epilogue
+//!   remains: `M*N` FMAs AFTER the GEMM.
+//! * QUIK W4A4+outliers: three separate kernels (int4 GEMM on the dense
+//!   part, fp16 GEMM on outlier columns, gather/add) with their own
+//!   launches and aggregated I/O — the paper's A.2 analysis.
+
+use super::GpuSpec;
+
+/// GEMM paradigms (mirror the kernel/artifact variant names).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GemmKind {
+    Fp16,
+    W8A8,
+    W4A8Fast,
+    W4A8Group,
+    W4A8Asym,
+    W4A8Unfused,
+    W4A16,
+    /// QUIK-style W4A4 with an fp16 outlier fallback
+    QuikW4A4 { outlier_frac_x1000: u32 },
+    /// bitsandbytes NF4: codebook-dequantize the full weight matrix to a
+    /// materialized fp16 copy, then run a plain fp16 GEMM (appendix A.3)
+    Nf4 { group: u32 },
+}
+
+impl GemmKind {
+    pub fn from_variant(v: &str) -> Option<Self> {
+        Some(match v {
+            "fp" => GemmKind::Fp16,
+            "w8a8" => GemmKind::W8A8,
+            "w4a8_fast" => GemmKind::W4A8Fast,
+            "w4a8_group" => GemmKind::W4A8Group,
+            "w4a8_asym" => GemmKind::W4A8Asym,
+            "w4a8_unfused" => GemmKind::W4A8Unfused,
+            "w4a16" => GemmKind::W4A16,
+            _ => return None,
+        })
+    }
+
+    /// weight bytes per element
+    pub fn w_bytes(&self) -> f64 {
+        match self {
+            GemmKind::Fp16 => 2.0,
+            GemmKind::W8A8 => 1.0,
+            GemmKind::W4A8Fast
+            | GemmKind::W4A8Group
+            | GemmKind::W4A8Asym
+            | GemmKind::W4A8Unfused
+            | GemmKind::W4A16 => 0.5,
+            GemmKind::QuikW4A4 { .. } => 0.5,
+            GemmKind::Nf4 { .. } => 0.5,
+        }
+    }
+
+    /// activation bytes per element
+    pub fn a_bytes(&self) -> f64 {
+        match self {
+            GemmKind::Fp16 | GemmKind::W4A16 | GemmKind::Nf4 { .. } => 2.0,
+            GemmKind::QuikW4A4 { .. } => 0.5,
+            _ => 1.0,
+        }
+    }
+
+    /// math throughput (ops/s) on the spec
+    fn mac_rate(&self, g: &GpuSpec) -> f64 {
+        match self {
+            GemmKind::Fp16 | GemmKind::W4A16 | GemmKind::Nf4 { .. } => {
+                g.fp16_tc
+            }
+            GemmKind::QuikW4A4 { .. } => g.int4_tc,
+            _ => g.int8_tc,
+        }
+    }
+}
+
+/// Cost breakdown for one GEMM call (seconds).
+#[derive(Clone, Debug, Default)]
+pub struct GemmCost {
+    pub compute_s: f64,
+    pub memory_s: f64,
+    pub overhead_s: f64,
+    pub launch_s: f64,
+}
+
+impl GemmCost {
+    pub fn total(&self) -> f64 {
+        self.compute_s.max(self.memory_s) + self.overhead_s + self.launch_s
+    }
+}
+
+/// Model one `[M,K] x [K,N]` GEMM under `kind`.
+pub fn gemm_cost(
+    g: &GpuSpec,
+    kind: GemmKind,
+    m: usize,
+    n: usize,
+    k: usize,
+    group: usize,
+) -> GemmCost {
+    let (mf, nf, kf) = (m as f64, n as f64, k as f64);
+    let macs = 2.0 * mf * nf * kf;
+    let alu = g.alu_fp32 * g.eff_compute;
+    let bw = g.hbm_bw * g.eff_mem;
+
+    // ---- base streams: weights + activations + f16 output
+    let mut bytes = kf * nf * kind.w_bytes() + mf * kf * kind.a_bytes()
+        + mf * nf * 2.0;
+    // ---- per-channel / per-group scale streams
+    let groups = if group > 0 { (k / group) as f64 } else { 1.0 };
+    bytes += nf * groups * 2.0;
+
+    let mut compute = macs / (kind.mac_rate(g) * g.eff_compute);
+    let mut overhead = 0.0;
+    let mut launch = g.kernel_launch;
+
+    match kind {
+        GemmKind::Fp16 => {}
+        GemmKind::W8A8 => {
+            // per-channel dequant epilogue: one FMA per output element
+            overhead += mf * nf / alu;
+        }
+        GemmKind::W4A8Fast => {
+            // fused conversion hides behind TC math; epilogue identical
+            // to W8A8 (the /16 folds into the scale)
+            overhead += mf * nf / alu;
+        }
+        GemmKind::W4A8Group => {
+            // per-group I2F + FMA inside the K loop: 2 ALU ops per
+            // output element per group (Eq. 5's Dq)
+            overhead += mf * nf * groups * 2.0 / alu;
+        }
+        GemmKind::W4A8Asym => {
+            // widened s32 zero-point handling: ~one extra ALU op per MAC/4
+            // (per packed word) + correction term
+            overhead += (mf * nf * kf / 4.0) / alu;
+            overhead += mf * nf / alu;
+        }
+        GemmKind::W4A8Unfused => {
+            // separate conversion kernel (Fig. 4(b)): write + read the
+            // materialized s8 weights, and a second launch
+            bytes += 2.0 * kf * nf;
+            launch += g.kernel_launch;
+            overhead += mf * nf / alu;
+        }
+        GemmKind::W4A16 => {
+            // dequant to fp16 BEFORE the GEMM: I2F+FMA per weight element
+            // on CUDA cores (cannot ride the TC pipeline)
+            overhead += kf * nf * 2.0 / alu;
+        }
+        GemmKind::Nf4 { group } => {
+            // separate dequant kernel: read packed int4 + absmax scales,
+            // codebook-lookup per element (~8 lookup-bound ALU ops), and
+            // WRITE + re-READ the fp16 weight copy before the GEMM
+            bytes += 2.0 * 2.0 * kf * nf; // fp16 materialization round-trip
+            bytes += kf * nf / group as f64 * 2.0; // absmax blocks
+            overhead += kf * nf * 8.0 / (alu * 0.5);
+            launch += g.kernel_launch; // the dequant kernel
+        }
+        GemmKind::QuikW4A4 { outlier_frac_x1000 } => {
+            let of = outlier_frac_x1000 as f64 / 1000.0;
+            // dense int4 part.  The outlier split prevents full-tile
+            // occupancy, so QUIK's W4A4 CUTLASS kernels land at roughly
+            // INT8-level effective throughput (the paper's A.2: 'ideally
+            // pure W4A4 would be 2x faster ... the benefit vanishes').
+            compute = macs * (1.0 - of) / (g.int8_tc * g.eff_compute);
+            // skinny fp16 outlier GEMM
+            let t_out = macs * of / (g.fp16_tc * g.eff_compute * 0.5);
+            overhead += t_out;
+            // QUIK runs ~6 separate kernels per linear: act-quant,
+            // int4 GEMM, outlier gather, outlier fp16 GEMM, dequant, add
+            // — each with its own launch + tail (A.2 'aggregated I/O
+            // overhead on various kernels')
+            launch += 5.0 * g.kernel_launch;
+            // aggregated I/O: act-quant pass (read+write M*K), outlier
+            // activations in fp16, and an s32->f16 output round-trip
+            bytes += 2.0 * mf * kf + mf * kf * of * 2.0
+                + mf * nf * (4.0 + 2.0);
+            overhead += mf * nf / alu;
+        }
+    }
+
+    GemmCost {
+        compute_s: compute,
+        memory_s: bytes / bw,
+        overhead_s: overhead,
+        launch_s: launch,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g() -> GpuSpec {
+        GpuSpec::a100_80g()
+    }
+
+    #[test]
+    fn decode_is_memory_bound() {
+        // M=1 self-decode: memory dominates compute for every paradigm
+        let c = gemm_cost(&g(), GemmKind::W4A8Fast, 1, 4096, 4096, 0);
+        assert!(c.memory_s > c.compute_s);
+    }
+
+    #[test]
+    fn context_is_compute_bound() {
+        let c = gemm_cost(&g(), GemmKind::Fp16, 1024, 4096, 4096, 0);
+        assert!(c.compute_s > c.memory_s);
+    }
+
+    #[test]
+    fn fastgemm_beats_group_and_asym() {
+        // Fig. 7's ordering at a context shape
+        let f = gemm_cost(&g(), GemmKind::W4A8Fast, 1024, 4096, 4096, 0)
+            .total();
+        let gr = gemm_cost(&g(), GemmKind::W4A8Group, 1024, 4096, 4096, 128)
+            .total();
+        let a = gemm_cost(&g(), GemmKind::W4A8Asym, 1024, 4096, 4096, 0)
+            .total();
+        assert!(f < gr, "fast {f} vs group {gr}");
+        assert!(f < a, "fast {f} vs asym {a}");
+    }
+
+    #[test]
+    fn w4_halves_decode_traffic_vs_w8() {
+        let w4 = gemm_cost(&g(), GemmKind::W4A8Fast, 1, 8192, 8192, 0);
+        let w8 = gemm_cost(&g(), GemmKind::W8A8, 1, 8192, 8192, 0);
+        let ratio = w8.memory_s / w4.memory_s;
+        assert!(
+            ratio > 1.7 && ratio < 2.2,
+            "weight-dominated traffic should nearly halve: {ratio}"
+        );
+    }
+
+    #[test]
+    fn quik_loses_self_decode_wins_nothing_at_m1() {
+        // the paper's Table 5: at M=1 QUIK's multi-kernel overhead swamps
+        // the int4 math advantage
+        let quik = gemm_cost(
+            &g(),
+            GemmKind::QuikW4A4 { outlier_frac_x1000: 50 },
+            1,
+            4096,
+            4096,
+            0,
+        )
+        .total();
+        let fast =
+            gemm_cost(&g(), GemmKind::W4A8Fast, 1, 4096, 4096, 0).total();
+        assert!(
+            quik / fast > 2.0 && quik / fast < 6.0,
+            "QUIK should be ~3-4x slower at M=1 (paper: 4.33x): {}",
+            quik / fast
+        );
+    }
+
+    #[test]
+    fn w4a16_slow_in_context_fast_in_decode() {
+        // Sec 4.1: W4A16 wins self-decode (bytes) but loses pre-fill
+        // (dequant overhead + fp16 math)
+        let ctx16 =
+            gemm_cost(&g(), GemmKind::W4A16, 1024, 4096, 4096, 128).total();
+        let ctx8 =
+            gemm_cost(&g(), GemmKind::W8A8, 1024, 4096, 4096, 0).total();
+        assert!(ctx16 > ctx8);
+        let dec16 =
+            gemm_cost(&g(), GemmKind::W4A16, 1, 4096, 4096, 128).total();
+        let dec_fp =
+            gemm_cost(&g(), GemmKind::Fp16, 1, 4096, 4096, 0).total();
+        assert!(dec16 < dec_fp);
+    }
+}

@@ -1,0 +1,292 @@
+//! LLaMA-family shape catalog + end-to-end phase latency composition.
+//!
+//! An inference pass = context decoding (prefill, M = batch·seq) followed
+//! by `out_tokens` self-decode steps (M = batch).  Each step runs the
+//! seven per-layer GEMMs plus the LM head; attention math and KV-cache
+//! traffic are modeled separately (they are bit-width independent except
+//! through activation precision).
+
+use super::gemm::{gemm_cost, GemmKind};
+use super::GpuSpec;
+
+/// Transformer shape (per tensor-parallel rank).
+#[derive(Clone, Debug)]
+pub struct LlmShape {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    /// KV projection width (GQA: < d_model)
+    pub kv_dim: usize,
+    pub tp: usize,
+}
+
+impl LlmShape {
+    pub fn llama2_7b() -> Self {
+        LlmShape {
+            name: "LLaMA-2-7B",
+            n_layers: 32,
+            d_model: 4096,
+            d_ff: 11008,
+            vocab: 32000,
+            kv_dim: 4096,
+            tp: 1,
+        }
+    }
+
+    pub fn llama2_13b() -> Self {
+        LlmShape {
+            name: "LLaMA-2-13B",
+            n_layers: 40,
+            d_model: 5120,
+            d_ff: 13824,
+            vocab: 32000,
+            kv_dim: 5120,
+            tp: 1,
+        }
+    }
+
+    pub fn llama2_70b() -> Self {
+        LlmShape {
+            name: "LLaMA-2-70B",
+            n_layers: 80,
+            d_model: 8192,
+            d_ff: 28672,
+            vocab: 32000,
+            kv_dim: 1024, // GQA: 8 kv heads * 128
+            tp: 4,
+        }
+    }
+
+    pub fn llama1_13b() -> Self {
+        LlmShape {
+            name: "LLaMA-13B",
+            n_layers: 40,
+            d_model: 5120,
+            d_ff: 13824,
+            vocab: 32000,
+            kv_dim: 5120,
+            tp: 1,
+        }
+    }
+
+    /// The per-layer GEMMs as (N, K) with TP sharding applied.
+    pub fn layer_gemms(&self) -> Vec<(usize, usize)> {
+        let d = self.d_model;
+        let ff = self.d_ff / self.tp;
+        let kv = self.kv_dim / self.tp;
+        let dh = d / self.tp;
+        vec![
+            (dh, d),  // wq
+            (kv, d),  // wk
+            (kv, d),  // wv
+            (d, dh),  // wo
+            (ff, d),  // gate
+            (ff, d),  // up
+            (d, ff),  // down
+        ]
+    }
+
+    /// Total weight bytes per rank at `w_bytes` per element.
+    pub fn weight_bytes(&self, w_bytes: f64) -> f64 {
+        let per_layer: f64 = self
+            .layer_gemms()
+            .iter()
+            .map(|&(n, k)| (n * k) as f64)
+            .sum();
+        (per_layer * self.n_layers as f64
+            + (self.d_model * self.vocab) as f64 / self.tp as f64)
+            * w_bytes
+    }
+}
+
+/// Phase latencies in seconds.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseLatency {
+    pub context_s: f64,
+    pub self_decode_s: f64,
+}
+
+impl PhaseLatency {
+    pub fn total(&self) -> f64 {
+        self.context_s + self.self_decode_s
+    }
+}
+
+/// Per-step engine overhead beyond the GEMMs (kernel scheduling, layout,
+/// sampling) — the knob that distinguishes engines (see `engines`).
+#[derive(Clone, Debug)]
+pub struct EngineOverhead {
+    /// extra fixed time per layer per step (fusion quality)
+    pub per_layer_s: f64,
+    /// extra fixed time per decode step (host sync, sampling)
+    pub per_step_s: f64,
+    /// multiplier on every GEMM (kernel quality vs the tuned model)
+    pub gemm_scale: f64,
+}
+
+impl Default for EngineOverhead {
+    fn default() -> Self {
+        EngineOverhead { per_layer_s: 1.0e-6, per_step_s: 30e-6, gemm_scale: 1.0 }
+    }
+}
+
+/// Elementwise / auxiliary kernels per layer (norms x2, rope, residual
+/// adds x2, SwiGLU, activation quant): ~6 extra kernel launches and ~12
+/// read/write passes over the hidden state in fp16.  Bit-width
+/// independent — this is what keeps real end-to-end boosts below the pure
+/// GEMM ratio.
+fn elementwise_layer_cost(g: &GpuSpec, m: usize, d_model: usize) -> f64 {
+    let bytes = 12.0 * (m * d_model) as f64 * 2.0;
+    bytes / (g.hbm_bw * g.eff_mem) + 6.0 * g.kernel_launch
+}
+
+/// Attention + KV traffic for one decode step (fp16 KV).
+fn attention_decode_cost(
+    g: &GpuSpec,
+    shape: &LlmShape,
+    batch: usize,
+    past: usize,
+) -> f64 {
+    // per layer: read past KV (2 tensors) + dot products
+    let kv_bytes = 2.0 * (past * shape.kv_dim / shape.tp) as f64 * 2.0
+        * batch as f64;
+    let macs = 2.0 * 2.0 * (past * shape.d_model / shape.tp) as f64
+        * batch as f64;
+    let mem = kv_bytes / (g.hbm_bw * g.eff_mem);
+    let cmp = macs / (g.fp16_tc * g.eff_compute);
+    mem.max(cmp) + g.kernel_launch
+}
+
+/// Attention cost for the context phase (S×S scores, fp16).
+fn attention_context_cost(
+    g: &GpuSpec,
+    shape: &LlmShape,
+    batch: usize,
+    seq: usize,
+) -> f64 {
+    let macs = 2.0 * 2.0
+        * (seq * seq * shape.d_model / shape.tp) as f64
+        * batch as f64;
+    macs / (g.fp16_tc * g.eff_compute) + g.kernel_launch
+}
+
+/// End-to-end latency for (kind, batch, in_tokens, out_tokens).
+pub fn e2e_latency(
+    g: &GpuSpec,
+    shape: &LlmShape,
+    kind: GemmKind,
+    overhead: &EngineOverhead,
+    batch: usize,
+    in_tokens: usize,
+    out_tokens: usize,
+    group: usize,
+) -> PhaseLatency {
+    let l = shape.n_layers as f64;
+
+    // ---- context phase
+    let m_ctx = batch * in_tokens;
+    let mut ctx = 0.0;
+    for &(n, k) in &shape.layer_gemms() {
+        ctx += gemm_cost(g, kind, m_ctx, n, k, group).total()
+            * overhead.gemm_scale;
+    }
+    ctx += attention_context_cost(g, shape, batch, in_tokens);
+    ctx += elementwise_layer_cost(g, m_ctx, shape.d_model);
+    ctx += overhead.per_layer_s;
+    ctx *= l;
+    // LM head once (fp16)
+    ctx += gemm_cost(
+        g,
+        GemmKind::Fp16,
+        batch,
+        shape.vocab / shape.tp,
+        shape.d_model,
+        0,
+    )
+    .total();
+    ctx += overhead.per_step_s;
+
+    // ---- self-decode phase
+    let mut dec = 0.0;
+    for step in 0..out_tokens {
+        let past = in_tokens + step;
+        let mut t = 0.0;
+        for &(n, k) in &shape.layer_gemms() {
+            t += gemm_cost(g, kind, batch, n, k, group).total()
+                * overhead.gemm_scale;
+        }
+        t += attention_decode_cost(g, shape, batch, past);
+        t += elementwise_layer_cost(g, batch, shape.d_model);
+        t += overhead.per_layer_s;
+        t *= l; // the sums above cover ONE layer
+        dec += t;
+        dec += gemm_cost(
+            g,
+            GemmKind::Fp16,
+            batch,
+            shape.vocab / shape.tp,
+            shape.d_model,
+            0,
+        )
+        .total();
+        dec += overhead.per_step_s;
+    }
+
+    PhaseLatency { context_s: ctx, self_decode_s: dec }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g() -> GpuSpec {
+        GpuSpec::a100_80g()
+    }
+
+    #[test]
+    fn shapes_param_counts() {
+        // sanity: 7B params within 15%
+        let s = LlmShape::llama2_7b();
+        let params = s.weight_bytes(1.0);
+        assert!(
+            (params - 6.7e9).abs() / 6.7e9 < 0.15,
+            "7B params modeled as {params:.3e}"
+        );
+    }
+
+    #[test]
+    fn w4a8_beats_fp16_both_phases() {
+        let s = LlmShape::llama2_13b();
+        let oh = EngineOverhead::default();
+        let f16 = e2e_latency(&g(), &s, GemmKind::Fp16, &oh, 1, 1024, 128, 0);
+        let w48 =
+            e2e_latency(&g(), &s, GemmKind::W4A8Fast, &oh, 1, 1024, 128, 0);
+        assert!(w48.context_s < f16.context_s);
+        assert!(w48.self_decode_s < f16.self_decode_s);
+        let boost = f16.total() / w48.total();
+        // paper Fig. 6: ~1.9-2.2x for 13B
+        assert!(boost > 1.5 && boost < 3.5, "boost {boost}");
+    }
+
+    #[test]
+    fn w4a16_wins_decode_loses_context_vs_w8a8() {
+        let s = LlmShape::llama2_7b();
+        let oh = EngineOverhead::default();
+        let w8 = e2e_latency(&g(), &s, GemmKind::W8A8, &oh, 1, 1024, 128, 0);
+        let w416 =
+            e2e_latency(&g(), &s, GemmKind::W4A16, &oh, 1, 1024, 128, 128);
+        assert!(w416.context_s > w8.context_s, "W4A16 slower prefill");
+        assert!(w416.self_decode_s < w8.self_decode_s, "W4A16 faster decode");
+    }
+
+    #[test]
+    fn decode_dominates_total() {
+        // 128 output tokens at batch 1: self-decode >> context (Fig. 1)
+        let s = LlmShape::llama1_13b();
+        let oh = EngineOverhead::default();
+        let r = e2e_latency(&g(), &s, GemmKind::Fp16, &oh, 1, 1024, 128, 0);
+        assert!(r.self_decode_s > r.context_s);
+    }
+}

@@ -1,0 +1,172 @@
+//! Symmetric Learnable Weight Clipping (paper Sec. 5.1, Eq. 8/9).
+//!
+//! The paper learns per-channel clip intensities (γ, β) by SGD
+//! (OmniQuant-style).  This deterministic port grid-searches the same
+//! per-channel fake-quant MSE objective over (γ, β) ∈ grid² — the python
+//! reference (`compile/quant.py::lwc_grid_search`) is bit-identical and
+//! the SGD variant (`lwc_sgd`) is cross-checked to land within a grid
+//! step.  See DESIGN.md's substitution index.
+
+use crate::tensor::Tensor;
+
+/// The search grid: 0.40 .. 1.00 step 0.025 (mirrors python LWC_GRID).
+pub fn default_grid() -> Vec<f32> {
+    let mut g = Vec::new();
+    let mut v = 0.40f64;
+    while v <= 1.0001 {
+        g.push((v * 1e6).round() as f32 / 1e6);
+        v += 0.025;
+    }
+    g
+}
+
+/// Result of the clipping search.
+#[derive(Clone, Debug)]
+pub struct LwcResult {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    /// per-channel fake-quant MSE at the optimum
+    pub mse: Vec<f64>,
+    /// per-channel fake-quant MSE at (γ, β) = (1, 1) — the vanilla baseline
+    pub mse_vanilla: Vec<f64>,
+}
+
+/// Grid-search (γ, β) per output channel minimizing fake-quant MSE.
+///
+/// `row_weights` (typically diag(H)/2 = E[x_k²] from calibration) turns
+/// the plain weight-MSE objective into a second-order approximation of
+/// the Eq. 1 layer-output MSE — the objective OmniQuant's learned
+/// clipping actually optimizes.  Without activation statistics the
+/// unweighted objective can clip channels whose large weights meet large
+/// activations, HURTING output error.
+pub fn lwc_grid_search(
+    w: &Tensor<f32>,
+    bits: u32,
+    grid: &[f32],
+    row_weights: Option<&[f32]>,
+) -> LwcResult {
+    let (k, n) = (w.rows(), w.cols());
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let qmin = -(1i32 << (bits - 1)) as f32;
+    let hi = w.col_max();
+    let lo = w.col_min();
+    let rw: Vec<f64> = match row_weights {
+        Some(r) => {
+            assert_eq!(r.len(), k);
+            r.iter().map(|&v| (v as f64).max(1e-12)).collect()
+        }
+        None => vec![1.0; k],
+    };
+
+    // column-major copy so each channel's sweep is cache-friendly
+    let wt = w.transpose();
+
+    let mut gamma = vec![1f32; n];
+    let mut beta = vec![1f32; n];
+    let mut best = vec![f64::INFINITY; n];
+    let mut vanilla = vec![0f64; n];
+
+    for j in 0..n {
+        let col = wt.row(j);
+        for &g in grid {
+            for &b in grid {
+                let s = ((g * hi[j]).abs().max((b * lo[j]).abs()) / qmax)
+                    .max(1e-12);
+                let mut mse = 0f64;
+                for (kk, &v) in col.iter().enumerate() {
+                    let q = (v / s).round().clamp(qmin, qmax);
+                    let e = (v - q * s) as f64;
+                    mse += rw[kk] * e * e;
+                }
+                mse /= k as f64;
+                if mse < best[j] {
+                    best[j] = mse;
+                    gamma[j] = g;
+                    beta[j] = b;
+                }
+                if (g - 1.0).abs() < 1e-9 && (b - 1.0).abs() < 1e-9 {
+                    vanilla[j] = mse;
+                }
+            }
+        }
+    }
+    LwcResult { gamma, beta, mse: best, mse_vanilla: vanilla }
+}
+
+/// Convenience: search with the default grid, unweighted objective.
+pub fn lwc(w: &Tensor<f32>, bits: u32) -> LwcResult {
+    lwc_grid_search(w, bits, &default_grid(), None)
+}
+
+/// Search with the default grid and activation-weighted objective.
+pub fn lwc_weighted(
+    w: &Tensor<f32>,
+    bits: u32,
+    row_weights: &[f32],
+) -> LwcResult {
+    lwc_grid_search(w, bits, &default_grid(), Some(row_weights))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn;
+
+    #[test]
+    fn grid_has_expected_bounds() {
+        let g = default_grid();
+        assert!((g[0] - 0.4).abs() < 1e-6);
+        assert!((g[g.len() - 1] - 1.0).abs() < 1e-6);
+        assert_eq!(g.len(), 25);
+    }
+
+    #[test]
+    fn lwc_never_hurts_mse() {
+        // the (1,1) point is in the grid, so the optimum can only improve
+        let w = Tensor::randn(&[128, 6], 7);
+        let r = lwc(&w, 4);
+        for j in 0..6 {
+            assert!(r.mse[j] <= r.mse_vanilla[j] + 1e-15);
+        }
+    }
+
+    #[test]
+    fn lwc_clips_outlier_channel() {
+        // one huge outlier in a channel forces clipping below 1.0
+        let mut w = Tensor::randn(&[256, 2], 8);
+        let m = w
+            .data()
+            .iter()
+            .fold(0f32, |a, v| a.max(v.abs()));
+        w.set2(0, 0, 4.0 * m); // moderate outlier in channel 0
+        let r = lwc(&w, 4);
+        assert!(
+            r.gamma[0] < 1.0 || r.beta[0] < 1.0,
+            "outlier channel should clip: gamma={} beta={}",
+            r.gamma[0],
+            r.beta[0]
+        );
+        // and the clipped MSE must strictly beat vanilla
+        assert!(r.mse[0] < r.mse_vanilla[0]);
+    }
+
+    #[test]
+    fn clipped_quantization_mse_improves_end_to_end() {
+        // full path: RTN with LWC scales vs plain RTN on a heavy-tailed
+        // weight matrix (Fig. 3's experiment in miniature)
+        let mut w = Tensor::randn(&[128, 4], 9);
+        // heavy tail: cube some entries
+        for v in w.data_mut() {
+            if v.abs() > 2.0 {
+                *v *= 3.0;
+            }
+        }
+        let r = lwc(&w, 4);
+        let (qv, sv) = rtn::rtn_per_channel(&w, 4, None, None);
+        let (qc, sc) =
+            rtn::rtn_per_channel(&w, 4, Some(&r.gamma), Some(&r.beta));
+        let mse_v = rtn::dequant_per_channel(&qv, &sv).mse(&w);
+        let mse_c = rtn::dequant_per_channel(&qc, &sc).mse(&w);
+        assert!(mse_c <= mse_v, "clipped {mse_c} vs vanilla {mse_v}");
+    }
+}

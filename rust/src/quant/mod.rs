@@ -1,0 +1,37 @@
+//! The quantization core — the paper's recipe and every baseline.
+//!
+//! Matrix convention (identical to `python/compile/kernels/ref.py`):
+//! weights are f32 `[K, N]` (K input features, N output channels); weight
+//! scales are per OUTPUT channel unless group-wise; activations `[M, K]`
+//! are quantized per token (row).
+//!
+//! | module        | paper reference |
+//! |---------------|-----------------|
+//! | [`scale`]     | Sec. 3 (symmetric/asymmetric, granularity glossary) |
+//! | [`rtn`]       | Table 1 RTN baselines (pt / pc / g128) |
+//! | [`lwc`]       | Sec. 5.1 symmetric Learnable Weight Clipping |
+//! | [`gptq`]      | Sec. 5.2 Hessian-based compensation (+ 'ro' reorder) |
+//! | [`pack`]      | Sec. 5.3 / Fig. 4(d) SINT4 two's-complement packing |
+//! | [`smoothquant`]| SmoothQuant W8A8 comparator |
+//! | [`awq`]       | AWQ-g128 comparator |
+//! | [`fake`]      | fake-quant MSE tooling (Fig. 3) |
+//! | [`pipeline`]  | recipe orchestration: B / B+LWC / B+LWC+GPTQ (Table 6) |
+
+pub mod awq;
+pub mod fake;
+pub mod gptq;
+pub mod lwc;
+pub mod pack;
+pub mod pipeline;
+pub mod rtn;
+pub mod scale;
+pub mod smoothquant;
+
+pub use gptq::GptqConfig;
+pub use pipeline::{QuantRecipe, Quantizer, WeightFormat};
+
+/// INT4 value range.
+pub const INT4_MIN: i32 = -8;
+pub const INT4_MAX: i32 = 7;
+/// Symmetric INT8 activation range (−127..127, matching the kernels).
+pub const INT8_MAX: i32 = 127;

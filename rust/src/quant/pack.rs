@@ -1,0 +1,122 @@
+//! SINT4 packing — the storage half of FastGEMM (paper Sec. 5.3,
+//! Fig. 4(d), Fig. 5 and appendix A.1).
+//!
+//! Two K-adjacent int4 values (two's complement, low nibble) share a byte:
+//! `P[k2, n] = (Q[2k2, n] & 0xF) | (Q[2k2+1, n] << 4)`.
+//!
+//! The FastGEMM unpack places a nibble in the HIGH 4 bits of an s8 —
+//! arithmetically 16× the int4 value with the sign bit reused, so the GPU
+//! (or MXU) needs no subtraction; the ×16 is undone by the dequant
+//! epilogue.  `unpack_x16` reproduces that conversion bit-exactly and is
+//! cross-checked against the python goldens.
+
+use crate::tensor::Tensor;
+
+/// Pack int4 values (s8 in [-8, 7], shape [K, N], K even) into u8[K/2, N].
+pub fn pack_int4(q: &Tensor<i8>) -> Tensor<u8> {
+    let (k, n) = (q.rows(), q.cols());
+    assert_eq!(k % 2, 0, "K must be even to pack int4 pairs");
+    let mut out = Tensor::<u8>::zeros(&[k / 2, n]);
+    for k2 in 0..k / 2 {
+        let lo_row = q.row(2 * k2);
+        let hi_row = q.row(2 * k2 + 1);
+        let orow = out.row_mut(k2);
+        for j in 0..n {
+            debug_assert!((-8..=7).contains(&(lo_row[j] as i32)));
+            debug_assert!((-8..=7).contains(&(hi_row[j] as i32)));
+            let lo = (lo_row[j] as u8) & 0x0F;
+            let hi = (hi_row[j] as u8) & 0x0F;
+            orow[j] = lo | (hi << 4);
+        }
+    }
+    out
+}
+
+/// FastGEMM's SINT4toS8: unpack to s8 values equal to 16× the int4
+/// (nibble placed in the high 4 bits).  Shape [2*K2, N].
+pub fn unpack_x16(p: &Tensor<u8>) -> Tensor<i8> {
+    let (k2, n) = (p.rows(), p.cols());
+    let mut out = Tensor::<i8>::zeros(&[2 * k2, n]);
+    for i in 0..k2 {
+        let prow = p.row(i);
+        for j in 0..n {
+            let b = prow[j];
+            let lo16 = (b << 4) as i8; // low nibble → high bits
+            let hi16 = (b & 0xF0) as i8; // high nibble already in place
+            out.set2(2 * i, j, lo16);
+            out.set2(2 * i + 1, j, hi16);
+        }
+    }
+    out
+}
+
+/// Exact inverse of `pack_int4`: recover int4 values in [-8, 7].
+pub fn unpack_int4(p: &Tensor<u8>) -> Tensor<i8> {
+    let x16 = unpack_x16(p);
+    x16.map(|v| (v as i32 >> 4) as i8) // arithmetic shift: exact /16
+}
+
+/// Packed byte count for a [K, N] int4 matrix.
+pub fn packed_len(k: usize, n: usize) -> usize {
+    assert_eq!(k % 2, 0);
+    k / 2 * n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::Prop;
+
+    #[test]
+    fn paper_example_minus7() {
+        // Fig. 5: -7 is 1111_1001 two's complement; its low nibble 1001
+        // placed high gives 1001_0000 = -112 = -7 * 16.
+        let q = Tensor::from_vec(&[2, 1], vec![-7i8, 3]);
+        let p = pack_int4(&q);
+        assert_eq!(p.data()[0], 0b0011_1001);
+        let x16 = unpack_x16(&p);
+        assert_eq!(x16.data(), &[-112, 48]); // -7*16, 3*16
+        assert_eq!(unpack_int4(&p).data(), &[-7, 3]);
+    }
+
+    #[test]
+    fn full_range_roundtrip() {
+        let vals: Vec<i8> = (-8..=7).collect();
+        let q = Tensor::from_vec(&[16, 1], vals.clone());
+        let p = pack_int4(&q);
+        assert_eq!(unpack_int4(&p).data(), vals.as_slice());
+        // x16 invariant
+        let x16 = unpack_x16(&p);
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(x16.data()[i] as i32, v as i32 * 16);
+        }
+    }
+
+    #[test]
+    fn density_is_half() {
+        assert_eq!(packed_len(64, 10), 320);
+    }
+
+    #[test]
+    fn prop_pack_unpack_roundtrip() {
+        Prop::new("pack/unpack roundtrip").cases(100).check(|rng| {
+            let k = 2 * (1 + (rng.next_u64() % 16) as usize);
+            let n = 1 + (rng.next_u64() % 8) as usize;
+            let vals: Vec<i8> =
+                (0..k * n).map(|_| rng.range(-8, 8) as i8).collect();
+            let q = Tensor::from_vec(&[k, n], vals);
+            let p = pack_int4(&q);
+            assert_eq!(unpack_int4(&p), q);
+            let x16 = unpack_x16(&p);
+            for i in 0..k {
+                for j in 0..n {
+                    assert_eq!(
+                        x16.at2(i, j) as i32,
+                        q.at2(i, j) as i32 * 16,
+                        "x16 trick must be exact"
+                    );
+                }
+            }
+        });
+    }
+}

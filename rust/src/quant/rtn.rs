@@ -1,0 +1,198 @@
+//! Round-To-Nearest quantization — the Table 1 baselines.
+
+use crate::tensor::Tensor;
+
+use super::scale;
+
+/// Per-output-channel symmetric RTN.  Returns (q s8[K,N], s f32[N]).
+pub fn rtn_per_channel(
+    w: &Tensor<f32>,
+    bits: u32,
+    gamma: Option<&[f32]>,
+    beta: Option<&[f32]>,
+) -> (Tensor<i8>, Vec<f32>) {
+    let s = scale::sym_per_channel_scales(w, bits, gamma, beta);
+    (quantize_with_channel_scales(w, &s, bits), s)
+}
+
+/// Quantize with given per-channel scales.
+pub fn quantize_with_channel_scales(
+    w: &Tensor<f32>,
+    s: &[f32],
+    bits: u32,
+) -> Tensor<i8> {
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let qmin = -(1i32 << (bits - 1)) as f32;
+    let (k, n) = (w.rows(), w.cols());
+    assert_eq!(s.len(), n);
+    let mut q = Tensor::<i8>::zeros(&[k, n]);
+    for i in 0..k {
+        let row = w.row(i);
+        let qrow = q.row_mut(i);
+        for j in 0..n {
+            qrow[j] = (row[j] / s[j]).round().clamp(qmin, qmax) as i8;
+        }
+    }
+    q
+}
+
+/// Group-wise symmetric RTN ('g128' style).  Returns (q, s [K/g, N]).
+pub fn rtn_per_group(
+    w: &Tensor<f32>,
+    group: usize,
+    bits: u32,
+) -> (Tensor<i8>, Tensor<f32>) {
+    let s = scale::sym_per_group_scales(w, group, bits);
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let qmin = -(1i32 << (bits - 1)) as f32;
+    let (k, n) = (w.rows(), w.cols());
+    let mut q = Tensor::<i8>::zeros(&[k, n]);
+    for i in 0..k {
+        let g = i / group;
+        let row = w.row(i);
+        let qrow = q.row_mut(i);
+        for j in 0..n {
+            qrow[j] = (row[j] / s.at2(g, j)).round().clamp(qmin, qmax) as i8;
+        }
+    }
+    (q, s)
+}
+
+/// Asymmetric per-channel RTN (UINT).  Returns (u u8[K,N], s, z).
+pub fn rtn_per_channel_asym(
+    w: &Tensor<f32>,
+    bits: u32,
+) -> (Tensor<u8>, Vec<f32>, Vec<i32>) {
+    let (s, z) = scale::asym_per_channel_scales(w, bits);
+    let qmax = ((1i32 << bits) - 1) as f32;
+    let (k, n) = (w.rows(), w.cols());
+    let mut u = Tensor::<u8>::zeros(&[k, n]);
+    for i in 0..k {
+        let row = w.row(i);
+        let urow = u.row_mut(i);
+        for j in 0..n {
+            urow[j] =
+                ((row[j] / s[j]).round() + z[j] as f32).clamp(0.0, qmax) as u8;
+        }
+    }
+    (u, s, z)
+}
+
+/// Dequantize per-channel int weights back to f32 (for MSE studies).
+pub fn dequant_per_channel(q: &Tensor<i8>, s: &[f32]) -> Tensor<f32> {
+    let n = q.cols();
+    assert_eq!(s.len(), n);
+    let mut out = Tensor::<f32>::zeros(&[q.rows(), n]);
+    for i in 0..q.rows() {
+        let qrow = q.row(i);
+        let orow = out.row_mut(i);
+        for j in 0..n {
+            orow[j] = qrow[j] as f32 * s[j];
+        }
+    }
+    out
+}
+
+/// Dequantize group-wise int weights.
+pub fn dequant_per_group(
+    q: &Tensor<i8>,
+    s: &Tensor<f32>,
+    group: usize,
+) -> Tensor<f32> {
+    let (k, n) = (q.rows(), q.cols());
+    let mut out = Tensor::<f32>::zeros(&[k, n]);
+    for i in 0..k {
+        let g = i / group;
+        let qrow = q.row(i);
+        let orow = out.row_mut(i);
+        for j in 0..n {
+            orow[j] = qrow[j] as f32 * s.at2(g, j);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::Prop;
+
+    #[test]
+    fn int4_values_in_range() {
+        let w = Tensor::randn(&[32, 8], 1);
+        let (q, _s) = rtn_per_channel(&w, 4, None, None);
+        for &v in q.data() {
+            assert!((-8..=7).contains(&(v as i32)));
+        }
+    }
+
+    #[test]
+    fn int8_roundtrip_error_half_step() {
+        let w = Tensor::randn(&[64, 4], 2);
+        let (q, s) = rtn_per_channel(&w, 8, None, None);
+        let deq = dequant_per_channel(&q, &s);
+        for i in 0..64 {
+            for j in 0..4 {
+                assert!((deq.at2(i, j) - w.at2(i, j)).abs() <= s[j] * 0.5 + 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn group_quant_beats_per_channel_mse() {
+        // fine-grained must never be worse than per-channel on MSE
+        let w = Tensor::randn(&[64, 8], 3);
+        let (qc, sc) = rtn_per_channel(&w, 4, None, None);
+        let (qg, sg) = rtn_per_group(&w, 8, 4);
+        let mse_c = dequant_per_channel(&qc, &sc).mse(&w);
+        let mse_g = dequant_per_group(&qg, &sg, 8).mse(&w);
+        assert!(
+            mse_g <= mse_c + 1e-12,
+            "group mse {mse_g} vs channel {mse_c}"
+        );
+    }
+
+    #[test]
+    fn asym_covers_skewed_range() {
+        let mut w = Tensor::randn(&[32, 2], 4);
+        // skew channel 0 positive
+        for i in 0..32 {
+            w.set2(0.min(i), 0, w.at2(i, 0).abs());
+        }
+        let (u, s, z) = rtn_per_channel_asym(&w, 4);
+        for &v in u.data() {
+            assert!(v <= 15);
+        }
+        // dequant error bounded by one step
+        for i in 0..32 {
+            for j in 0..2 {
+                let deq = (u.at2(i, j) as i32 - z[j]) as f32 * s[j];
+                assert!((deq - w.at2(i, j)).abs() <= s[j] + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_rtn_idempotent() {
+        // quantizing an already-dequantized matrix is exact
+        Prop::new("rtn idempotent").cases(30).check(|rng| {
+            let k = 8 + (rng.next_u64() % 8) as usize * 2;
+            let n = 2 + (rng.next_u64() % 6) as usize;
+            let w = Tensor::randn(&[k, n], rng.next_u64());
+            let (q, s) = rtn_per_channel(&w, 4, None, None);
+            let deq = dequant_per_channel(&q, &s);
+            let (q2, _s2) = rtn_per_channel(&deq, 4, None, None);
+            // scales recomputed from deq may shrink slightly; values must
+            // round-trip within one quantization level
+            let deq2 = dequant_per_channel(&q2, &_s2);
+            for j in 0..n {
+                for i in 0..k {
+                    assert!(
+                        (deq2.at2(i, j) - deq.at2(i, j)).abs()
+                            <= s[j] * 0.51 + 1e-6
+                    );
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,165 @@
+//! Scale computation for every granularity in the paper's glossary
+//! (Sec. 3): per-token (activations), per-channel and per-group (weights),
+//! symmetric and asymmetric.
+
+use crate::tensor::Tensor;
+
+use super::INT8_MAX;
+
+/// Per-token symmetric INT8 activation quantization (`RTN-pt`).
+/// Returns (q s8[M,K], s f32[M]).
+pub fn quant_act_per_token(x: &Tensor<f32>) -> (Tensor<i8>, Vec<f32>) {
+    let (m, k) = (x.rows(), x.cols());
+    let mut q = Tensor::<i8>::zeros(&[m, k]);
+    let mut scales = Vec::with_capacity(m);
+    for i in 0..m {
+        let row = x.row(i);
+        let amax = row.iter().fold(0f32, |a, v| a.max(v.abs()));
+        let s = (amax / INT8_MAX as f32).max(1e-8);
+        scales.push(s);
+        let qrow = q.row_mut(i);
+        for (j, &v) in row.iter().enumerate() {
+            qrow[j] = (v / s).round().clamp(-(INT8_MAX as f32),
+                                            INT8_MAX as f32) as i8;
+        }
+    }
+    (q, scales)
+}
+
+/// Symmetric per-output-channel scales (paper Eq. 9), with optional LWC
+/// clip intensities gamma/beta (per channel).
+pub fn sym_per_channel_scales(
+    w: &Tensor<f32>,
+    bits: u32,
+    gamma: Option<&[f32]>,
+    beta: Option<&[f32]>,
+) -> Vec<f32> {
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let hi = w.col_max();
+    let lo = w.col_min();
+    (0..w.cols())
+        .map(|j| {
+            let h = gamma.map_or(hi[j], |g| g[j] * hi[j]);
+            let l = beta.map_or(lo[j], |b| b[j] * lo[j]);
+            (h.abs().max(l.abs()) / qmax).max(1e-12)
+        })
+        .collect()
+}
+
+/// Symmetric per-group scales along K.  Returns f32[K/group * N] viewed as
+/// a [K/group, N] tensor.
+pub fn sym_per_group_scales(
+    w: &Tensor<f32>,
+    group: usize,
+    bits: u32,
+) -> Tensor<f32> {
+    let (k, n) = (w.rows(), w.cols());
+    assert_eq!(k % group, 0, "K={k} not divisible by group={group}");
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let gs = k / group;
+    let mut out = Tensor::<f32>::zeros(&[gs, n]);
+    for g in 0..gs {
+        for j in 0..n {
+            let mut amax = 0f32;
+            for kk in 0..group {
+                amax = amax.max(w.at2(g * group + kk, j).abs());
+            }
+            out.set2(g, j, (amax / qmax).max(1e-12));
+        }
+    }
+    out
+}
+
+/// Asymmetric per-channel (UINT) scales + zero points.
+/// Returns (s f32[N], z i32[N]).
+pub fn asym_per_channel_scales(
+    w: &Tensor<f32>,
+    bits: u32,
+) -> (Vec<f32>, Vec<i32>) {
+    let qmax = ((1i32 << bits) - 1) as f32;
+    let hi = w.col_max();
+    let lo = w.col_min();
+    let mut s = Vec::with_capacity(w.cols());
+    let mut z = Vec::with_capacity(w.cols());
+    for j in 0..w.cols() {
+        let sj = ((hi[j] - lo[j]) / qmax).max(1e-12);
+        s.push(sj);
+        z.push((-lo[j] / sj).round().clamp(0.0, qmax) as i32);
+    }
+    (s, z)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn act_quant_roundtrips_within_step() {
+        let x = Tensor::from_vec(&[2, 3], vec![1.0, -2.0, 0.5, 10.0, 0.0, -5.0]);
+        let (q, s) = quant_act_per_token(&x);
+        for i in 0..2 {
+            for j in 0..3 {
+                let deq = q.at2(i, j) as f32 * s[i];
+                assert!((deq - x.at2(i, j)).abs() <= s[i] * 0.5 + 1e-6);
+            }
+        }
+        // max magnitude maps to ±127
+        assert_eq!(q.at2(1, 0), 127);
+    }
+
+    #[test]
+    fn act_quant_zero_row_safe() {
+        let x = Tensor::<f32>::zeros(&[1, 4]);
+        let (q, s) = quant_act_per_token(&x);
+        assert!(s[0] > 0.0);
+        assert_eq!(q.data(), &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn sym_scales_match_absmax() {
+        let w = Tensor::from_vec(&[2, 2], vec![0.7, -0.2, -0.9, 0.1]);
+        let s = sym_per_channel_scales(&w, 4, None, None);
+        assert!((s[0] - 0.9 / 7.0).abs() < 1e-7);
+        assert!((s[1] - 0.2 / 7.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn lwc_shrinks_scales() {
+        let w = Tensor::randn(&[64, 8], 5);
+        let g = vec![0.5f32; 8];
+        let b = vec![0.5f32; 8];
+        let s_full = sym_per_channel_scales(&w, 4, None, None);
+        let s_clip = sym_per_channel_scales(&w, 4, Some(&g), Some(&b));
+        for j in 0..8 {
+            assert!(s_clip[j] <= s_full[j] + 1e-9);
+        }
+    }
+
+    #[test]
+    fn group_scales_shape() {
+        let w = Tensor::randn(&[32, 4], 6);
+        let s = sym_per_group_scales(&w, 8, 4);
+        assert_eq!(s.shape(), &[4, 4]);
+        // each group scale >= 0 and reflects the group absmax
+        for g in 0..4 {
+            for j in 0..4 {
+                let mut amax = 0f32;
+                for kk in 0..8 {
+                    amax = amax.max(w.at2(g * 8 + kk, j).abs());
+                }
+                assert!((s.at2(g, j) - amax / 7.0).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn asym_zero_point_covers_range() {
+        let w = Tensor::from_vec(&[2, 1], vec![-0.3, 0.5]);
+        let (s, z) = asym_per_channel_scales(&w, 4);
+        // dequantized 0 and 15 must bracket [-0.3, 0.5]
+        let lo = (0 - z[0]) as f32 * s[0];
+        let hi = (15 - z[0]) as f32 * s[0];
+        // zero-point rounding can cost up to one quantization step
+        assert!(lo <= -0.3 + s[0] && hi >= 0.5 - s[0]);
+    }
+}

@@ -1,0 +1,138 @@
+//! SmoothQuant comparator: migrate activation outliers into weights via
+//! per-input-channel scales, folded into the preceding RMSNorm.
+//!
+//! s_j = max|X_j|^α / max|W_j|^(1−α).  The forward stays exact because
+//! X/s · (s·W) = X·W; what changes is where the dynamic range lives.
+//! Only linears whose input comes straight from a norm are smoothable
+//! (q/k/v and gate/up in a LLaMA block) — same restriction as upstream.
+
+use crate::tensor::Tensor;
+
+/// Per-input-channel smoothing scales (length K).
+pub fn smoothquant_scales(
+    act_absmax: &[f32],
+    w: &Tensor<f32>,
+    alpha: f32,
+) -> Vec<f32> {
+    let k = w.rows();
+    assert_eq!(act_absmax.len(), k);
+    // per-input-channel weight absmax = per-ROW absmax of W[K,N]
+    (0..k)
+        .map(|i| {
+            let wmax = w
+                .row(i)
+                .iter()
+                .fold(0f32, |a, v| a.max(v.abs()))
+                .max(1e-8);
+            (act_absmax[i].max(1e-8).powf(alpha) / wmax.powf(1.0 - alpha))
+                .max(1e-8)
+        })
+        .collect()
+}
+
+/// Combine smoothing scales across several matrices sharing one input
+/// (q/k/v): use the elementwise max of their per-matrix weight absmax,
+/// like the upstream implementation.
+pub fn smoothquant_scales_shared(
+    act_absmax: &[f32],
+    ws: &[&Tensor<f32>],
+    alpha: f32,
+) -> Vec<f32> {
+    let k = act_absmax.len();
+    let mut wmax = vec![1e-8f32; k];
+    for w in ws {
+        assert_eq!(w.rows(), k);
+        for i in 0..k {
+            let m = w.row(i).iter().fold(0f32, |a, v| a.max(v.abs()));
+            wmax[i] = wmax[i].max(m);
+        }
+    }
+    (0..k)
+        .map(|i| {
+            (act_absmax[i].max(1e-8).powf(alpha)
+                / wmax[i].powf(1.0 - alpha))
+            .max(1e-8)
+        })
+        .collect()
+}
+
+/// Scale weight rows by s (W' = diag(s) · W).
+pub fn scale_weight_rows(w: &Tensor<f32>, s: &[f32]) -> Tensor<f32> {
+    assert_eq!(w.rows(), s.len());
+    let mut out = w.clone();
+    for i in 0..w.rows() {
+        let f = s[i];
+        for v in out.row_mut(i) {
+            *v *= f;
+        }
+    }
+    out
+}
+
+/// Fold 1/s into the preceding norm's scale vector.
+pub fn fold_into_norm(norm_scale: &[f32], s: &[f32]) -> Vec<f32> {
+    assert_eq!(norm_scale.len(), s.len());
+    norm_scale.iter().zip(s.iter()).map(|(n, s)| n / s).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_invariance() {
+        // (x / s) @ (diag(s) w) == x @ w
+        let x = Tensor::randn(&[5, 8], 20);
+        let w = Tensor::randn(&[8, 3], 21);
+        let absmax = x.col_absmax();
+        let s = smoothquant_scales(&absmax, &w, 0.5);
+        let ws = scale_weight_rows(&w, &s);
+        let mut xs = x.clone();
+        for i in 0..5 {
+            for j in 0..8 {
+                let v = xs.at2(i, j) / s[j];
+                xs.set2(i, j, v);
+            }
+        }
+        let y0 = x.matmul(&w);
+        let y1 = xs.matmul(&ws);
+        assert!(y0.max_abs_diff(&y1) < 1e-4);
+    }
+
+    #[test]
+    fn outlier_channel_gets_large_scale() {
+        let mut x = Tensor::randn(&[64, 4], 22);
+        for i in 0..64 {
+            let v = x.at2(i, 2) * 50.0;
+            x.set2(i, 2, v);
+        }
+        let w = Tensor::randn(&[4, 4], 23);
+        let s = smoothquant_scales(&x.col_absmax(), &w, 0.5);
+        assert!(s[2] > s[0] && s[2] > s[1] && s[2] > s[3]);
+    }
+
+    #[test]
+    fn alpha_zero_ignores_activations() {
+        let x_absmax = vec![100.0f32, 1.0];
+        let w = Tensor::from_vec(&[2, 1], vec![2.0f32, 2.0]);
+        let s = smoothquant_scales(&x_absmax, &w, 0.0);
+        assert!((s[0] - s[1]).abs() < 1e-7); // depends only on W
+    }
+
+    #[test]
+    fn shared_scales_use_max_weight() {
+        let a = Tensor::from_vec(&[2, 1], vec![1.0f32, 0.1]);
+        let b = Tensor::from_vec(&[2, 1], vec![0.1f32, 1.0]);
+        let s = smoothquant_scales_shared(&[1.0, 1.0], &[&a, &b], 0.5);
+        // both channels see wmax=1.0 -> equal scales
+        assert!((s[0] - s[1]).abs() < 1e-7);
+    }
+
+    #[test]
+    fn norm_fold_is_inverse() {
+        let norm = vec![2.0f32, 3.0];
+        let s = vec![4.0f32, 0.5];
+        let folded = fold_into_norm(&norm, &s);
+        assert_eq!(folded, vec![0.5, 6.0]);
+    }
+}

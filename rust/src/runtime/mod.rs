@@ -1,0 +1,277 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Executables are compiled lazily and cached by graph name.  Weights can
+//! be staged as device buffers once and reused across calls (`execute_b`)
+//! — the key hot-loop optimization (see EXPERIMENTS.md §Perf).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::formats::config::{Dtype, GraphInfo, Manifest, ParamSpec};
+use crate::formats::safetensors::{StDtype, StTensor};
+
+pub use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+/// Convert a safetensors tensor into an XLA literal of the right shape.
+pub fn literal_from_st(t: &StTensor) -> Result<Literal> {
+    let ty = match t.dtype {
+        StDtype::F32 => xla::ElementType::F32,
+        StDtype::I8 => xla::ElementType::S8,
+        StDtype::U8 => xla::ElementType::U8,
+        StDtype::I32 => xla::ElementType::S32,
+        StDtype::I64 => xla::ElementType::S64,
+        StDtype::U16 => xla::ElementType::U16,
+        StDtype::F64 => xla::ElementType::F64,
+    };
+    Literal::create_from_shape_and_untyped_data(ty, &t.shape, &t.bytes)
+        .map_err(|e| anyhow!("literal: {e:?}"))
+}
+
+/// f32 literal from raw values.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        &bytes,
+    )
+    .map_err(|e| anyhow!("literal_f32: {e:?}"))
+}
+
+/// i32 literal from raw values.
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        shape,
+        &bytes,
+    )
+    .map_err(|e| anyhow!("literal_i32: {e:?}"))
+}
+
+/// Zero-filled literal matching a manifest param spec.
+pub fn literal_zeros(spec: &ParamSpec) -> Result<Literal> {
+    let n: usize = spec.numel();
+    let bytes = vec![0u8; n * spec.dtype.size()];
+    let ty = match spec.dtype {
+        Dtype::F32 => xla::ElementType::F32,
+        Dtype::S8 => xla::ElementType::S8,
+        Dtype::U8 => xla::ElementType::U8,
+        Dtype::S32 => xla::ElementType::S32,
+    };
+    Literal::create_from_shape_and_untyped_data(ty, &spec.shape, &bytes)
+        .map_err(|e| anyhow!("literal_zeros: {e:?}"))
+}
+
+/// The runtime: PJRT client + manifest + compiled-executable cache.
+///
+/// NOT `Sync` — owned by the engine thread; other threads talk to the
+/// engine over channels (see `coordinator`).
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    executables: BTreeMap<String, PjRtLoadedExecutable>,
+    pub compile_times: BTreeMap<String, f64>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client =
+            PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            executables: BTreeMap::new(),
+            compile_times: BTreeMap::new(),
+        })
+    }
+
+    /// Compile (or fetch cached) the named graph.
+    pub fn executable(&mut self, name: &str) -> Result<&PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let info = self.manifest.graph(name)?.clone();
+            let path = self.manifest.hlo_path(&info);
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            let dt = t0.elapsed().as_secs_f64();
+            crate::util::log::debug(&format!("compiled {name} in {dt:.2}s"));
+            self.compile_times.insert(name.to_string(), dt);
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Graph metadata.
+    pub fn graph_info(&self, name: &str) -> Result<GraphInfo> {
+        Ok(self.manifest.graph(name)?.clone())
+    }
+
+    /// Execute with host literals; returns the flattened output literals
+    /// (the AOT graphs return one tuple).
+    pub fn run_literals(
+        &mut self,
+        name: &str,
+        args: &[Literal],
+    ) -> Result<Vec<Literal>> {
+        let info = self.manifest.graph(name)?;
+        if args.len() != info.params.len() {
+            bail!(
+                "{name}: expected {} args, got {}",
+                info.params.len(),
+                args.len()
+            );
+        }
+        let exe = self.executable(name)?;
+        let out = exe
+            .execute::<Literal>(args)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let result = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Execute with BORROWED literals (no clones — the hot-loop path:
+    /// weight literals are built once and passed by reference each step).
+    pub fn run_literal_refs(
+        &mut self,
+        name: &str,
+        args: &[&Literal],
+    ) -> Result<Vec<Literal>> {
+        let info = self.manifest.graph(name)?;
+        if args.len() != info.params.len() {
+            bail!(
+                "{name}: expected {} args, got {}",
+                info.params.len(),
+                args.len()
+            );
+        }
+        let exe = self.executable(name)?;
+        let out = exe
+            .execute::<&Literal>(args)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let result = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Stage host literals as device buffers (for weight reuse).
+    pub fn stage(&self, lits: &[Literal]) -> Result<Vec<PjRtBuffer>> {
+        lits.iter()
+            .map(|l| {
+                self.client
+                    .buffer_from_host_literal(None, l)
+                    .map_err(|e| anyhow!("stage: {e:?}"))
+            })
+            .collect()
+    }
+
+    /// Execute with pre-staged device buffers; returns raw output buffers
+    /// (still on device — chain them into the next call without copies).
+    pub fn run_buffers(
+        &mut self,
+        name: &str,
+        args: &[&PjRtBuffer],
+    ) -> Result<Vec<PjRtBuffer>> {
+        let info = self.manifest.graph(name)?;
+        if args.len() != info.params.len() {
+            bail!(
+                "{name}: expected {} args, got {}",
+                info.params.len(),
+                args.len()
+            );
+        }
+        let exe = self.executable(name)?;
+        let mut out = exe
+            .execute_b::<&PjRtBuffer>(args)
+            .map_err(|e| anyhow!("execute_b {name}: {e:?}"))?;
+        Ok(out.remove(0))
+    }
+
+    /// Copy one output buffer back to the host as a tuple of literals.
+    pub fn fetch(&self, buf: &PjRtBuffer) -> Result<Vec<Literal>> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+
+    pub fn loaded_graphs(&self) -> usize {
+        self.executables.len()
+    }
+}
+
+/// Read a f32 literal into a Vec (length checked).
+pub fn literal_to_f32(l: &Literal, expect_len: usize) -> Result<Vec<f32>> {
+    let v = l
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("literal_to_f32: {e:?}"))?;
+    if v.len() != expect_len {
+        bail!("expected {} f32s, got {}", expect_len, v.len());
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn st_literal_roundtrip_f32() {
+        let t = StTensor::from_f32(&Tensor::from_vec(
+            &[2, 2],
+            vec![1.0f32, -2.0, 3.5, 0.25],
+        ));
+        let lit = literal_from_st(&t).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, -2.0, 3.5, 0.25]);
+    }
+
+    #[test]
+    fn st_literal_roundtrip_i8_u8() {
+        let t = StTensor::from_i8(&Tensor::from_vec(&[3], vec![-8i8, 0, 7]));
+        let lit = literal_from_st(&t).unwrap();
+        assert_eq!(lit.to_vec::<i8>().unwrap(), vec![-8, 0, 7]);
+        let u = StTensor::from_u8(&Tensor::from_vec(&[2], vec![0u8, 255]));
+        let lu = literal_from_st(&u).unwrap();
+        assert_eq!(lu.to_vec::<u8>().unwrap(), vec![0, 255]);
+    }
+
+    #[test]
+    fn literal_helpers() {
+        let l = literal_f32(&[2], &[1.5, 2.5]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.5, 2.5]);
+        let i = literal_i32(&[2], &[-1, 42]).unwrap();
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![-1, 42]);
+        let z = literal_zeros(&ParamSpec {
+            name: "z".into(),
+            shape: vec![3],
+            dtype: Dtype::F32,
+        })
+        .unwrap();
+        assert_eq!(z.to_vec::<f32>().unwrap(), vec![0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,212 @@
+//! HTTP/1.1 message substrate: request parsing + response emission.
+//! Deliberately small: one request per connection, Content-Length bodies
+//! only (no chunked encoding) — all this project's clients need.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::formats::json::Json;
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Parse from raw bytes (header section must be complete).
+    pub fn parse(buf: &[u8]) -> Result<(HttpRequest, usize)> {
+        let hdr_end = find_header_end(buf)
+            .ok_or_else(|| anyhow!("incomplete header"))?;
+        let head = std::str::from_utf8(&buf[..hdr_end])
+            .map_err(|_| anyhow!("header not utf8"))?;
+        let mut lines = head.split("\r\n");
+        let request_line =
+            lines.next().ok_or_else(|| anyhow!("empty request"))?;
+        let mut parts = request_line.split_whitespace();
+        let method = parts
+            .next()
+            .ok_or_else(|| anyhow!("missing method"))?
+            .to_uppercase();
+        let path = parts
+            .next()
+            .ok_or_else(|| anyhow!("missing path"))?
+            .to_string();
+        let version = parts.next().unwrap_or("HTTP/1.1");
+        if !version.starts_with("HTTP/1.") {
+            bail!("unsupported version {version}");
+        }
+        let mut headers = BTreeMap::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once(':')
+                .ok_or_else(|| anyhow!("bad header line"))?;
+            headers.insert(
+                k.trim().to_lowercase(),
+                v.trim().to_string(),
+            );
+        }
+        let content_len: usize = headers
+            .get("content-length")
+            .map(|v| v.parse())
+            .transpose()
+            .map_err(|_| anyhow!("bad content-length"))?
+            .unwrap_or(0);
+        Ok((
+            HttpRequest {
+                method,
+                path,
+                headers,
+                body: Vec::new(),
+            },
+            hdr_end + 4 + content_len,
+        ))
+    }
+
+    /// Blocking read of one request from a stream.
+    pub fn read_from<R: Read>(stream: &mut R) -> Result<HttpRequest> {
+        let mut buf = Vec::with_capacity(1024);
+        let mut chunk = [0u8; 4096];
+        // read until headers complete
+        let hdr_end = loop {
+            let n = stream.read(&mut chunk)?;
+            if n == 0 {
+                bail!("connection closed mid-header");
+            }
+            buf.extend_from_slice(&chunk[..n]);
+            if let Some(e) = find_header_end(&buf) {
+                break e;
+            }
+            if buf.len() > 64 * 1024 {
+                bail!("headers too large");
+            }
+        };
+        let (mut req, total) = HttpRequest::parse(&buf)?;
+        // read remaining body bytes
+        while buf.len() < total {
+            let n = stream.read(&mut chunk)?;
+            if n == 0 {
+                bail!("connection closed mid-body");
+            }
+            buf.extend_from_slice(&chunk[..n]);
+            if buf.len() > 8 * 1024 * 1024 {
+                bail!("body too large");
+            }
+        }
+        req.body = buf[hdr_end + 4..total].to_vec();
+        Ok(req)
+    }
+}
+
+fn find_header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// An HTTP response.
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn text(status: u16, body: &str) -> Self {
+        HttpResponse {
+            status,
+            content_type: "text/plain",
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    pub fn json(status: u16, j: &Json) -> Self {
+        HttpResponse {
+            status,
+            content_type: "application/json",
+            body: j.emit().into_bytes(),
+        }
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let reason = match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            429 => "Too Many Requests",
+            500 => "Internal Server Error",
+            _ => "Unknown",
+        };
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            reason,
+            self.content_type,
+            self.body.len()
+        );
+        let mut out = head.into_bytes();
+        out.extend_from_slice(&self.body);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_get() {
+        let raw = b"GET /stats HTTP/1.1\r\nHost: x\r\n\r\n";
+        let (req, total) = HttpRequest::parse(raw).unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/stats");
+        assert_eq!(total, raw.len());
+    }
+
+    #[test]
+    fn parse_post_with_body() {
+        let raw =
+            b"POST /generate HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello";
+        let (req, total) = HttpRequest::parse(raw).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(total, raw.len());
+        // body is attached by read_from; parse only computes the span
+        let mut cursor = std::io::Cursor::new(raw.to_vec());
+        let full = HttpRequest::read_from(&mut cursor).unwrap();
+        assert_eq!(full.body, b"hello");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(HttpRequest::parse(b"\r\n\r\n").is_err());
+        assert!(
+            HttpRequest::parse(b"GET /x SPDY/3\r\n\r\n").is_err(),
+            "bad version"
+        );
+        assert!(HttpRequest::parse(b"GET /incomplete").is_err());
+    }
+
+    #[test]
+    fn response_bytes_shape() {
+        let r = HttpResponse::text(404, "nope");
+        let s = String::from_utf8(r.to_bytes()).unwrap();
+        assert!(s.starts_with("HTTP/1.1 404 Not Found\r\n"));
+        assert!(s.ends_with("nope"));
+        assert!(s.contains("Content-Length: 4"));
+    }
+
+    #[test]
+    fn case_insensitive_headers() {
+        let raw = b"POST / HTTP/1.1\r\ncOnTeNt-LeNgTh: 2\r\n\r\nok";
+        let mut cursor = std::io::Cursor::new(raw.to_vec());
+        let req = HttpRequest::read_from(&mut cursor).unwrap();
+        assert_eq!(req.body, b"ok");
+    }
+}

@@ -1,0 +1,147 @@
+//! Minimal HTTP/1.1 front-end over std::net (tokio unavailable offline).
+//!
+//! Routes:
+//! * `POST /generate` — body `{"tokens": [..], "max_new_tokens": n,
+//!   "temperature": t, "top_k": k}` → generated token ids + timings.
+//! * `GET /stats`  — engine metrics snapshot.
+//! * `GET /health` — liveness.
+//!
+//! Requests are parsed by the in-crate HTTP substrate ([`http`]); each
+//! connection is handled on the thread pool and blocks on the engine
+//! handle (the engine itself pipelines via continuous batching).
+
+pub mod http;
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::request::{FinishReason, GenParams};
+use crate::coordinator::EngineHandle;
+use crate::formats::json::Json;
+use crate::util::ThreadPool;
+
+use http::{HttpRequest, HttpResponse};
+
+/// Serve forever (or until `stop` flips).
+pub fn serve(
+    addr: &str,
+    engine: EngineHandle,
+    workers: usize,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    crate::util::log::info(&format!("http server on {addr}"));
+    let pool = ThreadPool::new(workers);
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let engine = engine.clone();
+                pool.execute(move || {
+                    if let Err(e) = handle_conn(stream, &engine) {
+                        crate::util::log::debug(&format!("conn: {e:#}"));
+                    }
+                });
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+fn handle_conn(mut stream: TcpStream, engine: &EngineHandle) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    let req = match HttpRequest::read_from(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            let resp = HttpResponse::text(400, &format!("bad request: {e}"));
+            stream.write_all(&resp.to_bytes())?;
+            return Ok(());
+        }
+    };
+    let resp = route(&req, engine);
+    stream.write_all(&resp.to_bytes())?;
+    Ok(())
+}
+
+/// Dispatch one request (pure; unit-testable without sockets).
+pub fn route(req: &HttpRequest, engine: &EngineHandle) -> HttpResponse {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => HttpResponse::json(200, &Json::obj(vec![
+            ("status", Json::str("ok")),
+        ])),
+        ("GET", "/stats") => match engine.stats() {
+            Ok(s) => HttpResponse::text(200, &s),
+            Err(e) => HttpResponse::text(500, &format!("{e:#}")),
+        },
+        ("POST", "/generate") => generate(req, engine),
+        _ => HttpResponse::text(404, "not found"),
+    }
+}
+
+fn generate(req: &HttpRequest, engine: &EngineHandle) -> HttpResponse {
+    let body = match std::str::from_utf8(&req.body) {
+        Ok(b) => b,
+        Err(_) => return HttpResponse::text(400, "body not utf8"),
+    };
+    let j = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return HttpResponse::text(400, &format!("bad json: {e}")),
+    };
+    let tokens: Vec<i32> = match j.get("tokens").as_arr() {
+        Some(a) => a.iter().filter_map(|v| v.as_i64()).map(|v| v as i32)
+            .collect(),
+        None => return HttpResponse::text(400, "missing 'tokens' array"),
+    };
+    if tokens.is_empty() {
+        return HttpResponse::text(400, "'tokens' must be non-empty");
+    }
+    let mut params = GenParams::default();
+    if let Some(n) = j.get("max_new_tokens").as_usize() {
+        params.max_new_tokens = n.max(1);
+    }
+    if let Some(t) = j.get("temperature").as_f64() {
+        params.temperature = t as f32;
+    }
+    if let Some(k) = j.get("top_k").as_usize() {
+        params.top_k = k;
+    }
+    if let Some(s) = j.get("seed").as_i64() {
+        params.seed = s as u64;
+    }
+    match engine.generate(tokens, params) {
+        Ok(res) => {
+            if res.finish == FinishReason::Rejected {
+                return HttpResponse::json(429, &Json::obj(vec![
+                    ("error", Json::str("queue full or prompt too long")),
+                ]));
+            }
+            HttpResponse::json(200, &Json::obj(vec![
+                (
+                    "tokens",
+                    Json::Arr(res.tokens.iter()
+                        .map(|&t| Json::num(t as f64)).collect()),
+                ),
+                ("finish", Json::str(match res.finish {
+                    FinishReason::Eos => "eos",
+                    FinishReason::MaxTokens => "length",
+                    FinishReason::Rejected => "rejected",
+                })),
+                ("ttft_ms", Json::num(res.ttft_s * 1e3)),
+                ("total_ms", Json::num(res.total_s * 1e3)),
+                ("tokens_per_s", Json::num(res.tokens_per_s())),
+            ]))
+        }
+        Err(e) => HttpResponse::text(500, &format!("{e:#}")),
+    }
+}

@@ -1,0 +1,81 @@
+//! Tiled f32 matmul for the quantization pipeline (GPTQ, AWQ search,
+//! fake-quant MSE studies).  The serving hot path never uses this — model
+//! math runs in the AOT XLA executables; this is offline tooling.
+
+use super::Tensor;
+
+/// C = A @ B for 2-D f32 tensors, cache-tiled with a transposed-B inner
+/// loop so the inner product walks contiguous memory.
+pub fn matmul_f32(a: &Tensor<f32>, b: &Tensor<f32>) -> Tensor<f32> {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (kb, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, kb, "inner dims mismatch: {k} vs {kb}");
+
+    let bt = b.transpose();
+    let mut out = vec![0f32; m * n];
+    const TILE: usize = 64;
+    for i0 in (0..m).step_by(TILE) {
+        let i1 = (i0 + TILE).min(m);
+        for j0 in (0..n).step_by(TILE) {
+            let j1 = (j0 + TILE).min(n);
+            for i in i0..i1 {
+                let arow = a.row(i);
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in j0..j1 {
+                    let brow = bt.row(j);
+                    let mut acc = 0f32;
+                    for kk in 0..k {
+                        acc += arow[kk] * brow[kk];
+                    }
+                    orow[j] = acc;
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let i = Tensor::from_vec(&[2, 2], vec![1., 0., 0., 1.]);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn known_product() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::from_vec(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matches_naive_on_random() {
+        let a = Tensor::randn(&[70, 33], 1);
+        let b = Tensor::randn(&[33, 41], 2);
+        let c = a.matmul(&b);
+        // naive check at a few points
+        for &(i, j) in &[(0usize, 0usize), (69, 40), (35, 20)] {
+            let mut acc = 0f32;
+            for k in 0..33 {
+                acc += a.at2(i, k) * b.at2(k, j);
+            }
+            assert!((c.at2(i, j) - acc).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dims mismatch")]
+    fn dim_mismatch_panics() {
+        let a = Tensor::<f32>::zeros(&[2, 3]);
+        let b = Tensor::<f32>::zeros(&[4, 2]);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,296 @@
+//! Minimal dense ndarray substrate (`ndarray` is unavailable offline).
+//!
+//! Row-major, owned storage; exactly the operations the quantization core
+//! and evaluators need: 2-D matmul, transpose, slicing along axis 0,
+//! reductions, and elementwise maps.  Generic over the element types used
+//! in this project (f32 / f64 / i8 / u8 / i32 / u16 / i64).
+
+mod matmul;
+
+pub use matmul::matmul_f32;
+
+use std::fmt;
+
+/// Dense row-major tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+impl<T: fmt::Debug> fmt::Debug for Tensor<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 16 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    /// Zero-filled (well, `T::default()`-filled) tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![T::default(); n] }
+    }
+}
+
+impl<T: Copy> Tensor<T> {
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: T) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn full(shape: &[usize], v: T) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Number of rows (dim 0) for 2-D tensors.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.ndim(), 2);
+        self.shape[0]
+    }
+
+    /// Number of columns (dim 1) for 2-D tensors.
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.ndim(), 2);
+        self.shape[1]
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> T {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: T) {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    /// Row slice of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[T] {
+        assert_eq!(self.ndim(), 2);
+        let c = self.shape[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [T] {
+        assert_eq!(self.ndim(), 2);
+        let c = self.shape[1];
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Column of a 2-D tensor (copied).
+    pub fn col(&self, j: usize) -> Vec<T> {
+        assert_eq!(self.ndim(), 2);
+        (0..self.shape[0]).map(|i| self.at2(i, j)).collect()
+    }
+
+    /// Reshape without moving data.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Transpose a 2-D tensor (copies).
+    pub fn transpose(&self) -> Self {
+        assert_eq!(self.ndim(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = Vec::with_capacity(r * c);
+        for j in 0..c {
+            for i in 0..r {
+                out.push(self.at2(i, j));
+            }
+        }
+        Tensor::from_vec(&[c, r], out)
+    }
+
+    /// Elementwise map into a (possibly different-typed) tensor.
+    pub fn map<U: Copy, F: FnMut(T) -> U>(&self, mut f: F) -> Tensor<U> {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// Rows `[lo, hi)` of a 2-D tensor, copied into a new tensor.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Self {
+        assert_eq!(self.ndim(), 2);
+        assert!(lo <= hi && hi <= self.shape[0]);
+        let c = self.shape[1];
+        Tensor::from_vec(&[hi - lo, c], self.data[lo * c..hi * c].to_vec())
+    }
+}
+
+impl Tensor<f32> {
+    /// Gaussian-random tensor (deterministic by seed).
+    pub fn randn(shape: &[usize], seed: u64) -> Self {
+        let mut rng = crate::util::XorShift::new(seed);
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: rng.normal_vec(n) }
+    }
+
+    /// Frobenius-style mean-squared difference.
+    pub fn mse(&self, other: &Self) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        let mut acc = 0f64;
+        for (a, b) in self.data.iter().zip(other.data.iter()) {
+            let d = (*a - *b) as f64;
+            acc += d * d;
+        }
+        acc / self.data.len() as f64
+    }
+
+    /// Maximum absolute difference.
+    pub fn max_abs_diff(&self, other: &Self) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max)
+    }
+
+    /// Per-column max (2-D): output length = cols.
+    pub fn col_max(&self) -> Vec<f32> {
+        self.col_fold(f32::NEG_INFINITY, |acc, v| acc.max(v))
+    }
+
+    /// Per-column min (2-D).
+    pub fn col_min(&self) -> Vec<f32> {
+        self.col_fold(f32::INFINITY, |acc, v| acc.min(v))
+    }
+
+    /// Per-column absolute max (2-D).
+    pub fn col_absmax(&self) -> Vec<f32> {
+        self.col_fold(0.0, |acc, v| acc.max(v.abs()))
+    }
+
+    fn col_fold<F: Fn(f32, f32) -> f32>(&self, init: f32, f: F) -> Vec<f32> {
+        assert_eq!(self.ndim(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = vec![init; c];
+        for i in 0..r {
+            let row = self.row(i);
+            for j in 0..c {
+                out[j] = f(out[j], row[j]);
+            }
+        }
+        out
+    }
+
+    /// 2-D matrix product (delegates to the tiled kernel).
+    pub fn matmul(&self, other: &Self) -> Self {
+        matmul_f32(self, other)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+        assert_eq!(t.col(1), vec![2., 5.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        let _ = Tensor::from_vec(&[2, 2], vec![1.0f32]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.transpose();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.at2(2, 1), 6.0);
+        assert_eq!(tt.transpose(), t);
+    }
+
+    #[test]
+    fn map_changes_type() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.4f32, -1.6, 2.5, 0.0]);
+        let q: Tensor<i8> = t.map(|v| v.round() as i8);
+        assert_eq!(q.data(), &[1, -2, 3, 0]);
+    }
+
+    #[test]
+    fn col_reductions() {
+        let t = Tensor::from_vec(&[2, 2], vec![1., -4., 3., 2.]);
+        assert_eq!(t.col_max(), vec![3., 2.]);
+        assert_eq!(t.col_min(), vec![1., -4.]);
+        assert_eq!(t.col_absmax(), vec![3., 4.]);
+    }
+
+    #[test]
+    fn slice_rows_copies() {
+        let t = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let s = t.slice_rows(1, 3);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn mse_and_maxdiff() {
+        let a = Tensor::from_vec(&[1, 2], vec![1.0f32, 2.0]);
+        let b = Tensor::from_vec(&[1, 2], vec![1.5f32, 2.0]);
+        assert!((a.mse(&b) - 0.125).abs() < 1e-9);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let a = Tensor::randn(&[4, 4], 9);
+        let b = Tensor::randn(&[4, 4], 9);
+        assert_eq!(a, b);
+    }
+}

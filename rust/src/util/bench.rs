@@ -1,0 +1,118 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Usage mirrors the bench binaries in `benches/`:
+//! ```ignore
+//! let mut b = Bencher::new("fastgemm m1024");
+//! let res = b.run(|| { work(); });
+//! println!("{}", res);
+//! ```
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Result of one benchmark: timing summary in seconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub min_s: f64,
+    pub std_s: f64,
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:40} {:>10.3} ms/iter (p50 {:.3}, min {:.3}, sd {:.3}, n={})",
+            self.name,
+            self.mean_s * 1e3,
+            self.p50_s * 1e3,
+            self.min_s * 1e3,
+            self.std_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Adaptive-iteration bencher: warms up, then measures until either
+/// `max_iters` or `budget_s` of wall time is spent.
+pub struct Bencher {
+    name: String,
+    pub warmup: usize,
+    pub max_iters: usize,
+    pub min_iters: usize,
+    pub budget_s: f64,
+}
+
+impl Bencher {
+    pub fn new(name: &str) -> Self {
+        Bencher {
+            name: name.to_string(),
+            warmup: 1,
+            max_iters: 50,
+            min_iters: 3,
+            budget_s: 2.0,
+        }
+    }
+
+    pub fn with_budget(mut self, s: f64) -> Self {
+        self.budget_s = s;
+        self
+    }
+
+    pub fn with_iters(mut self, min: usize, max: usize) -> Self {
+        self.min_iters = min;
+        self.max_iters = max;
+        self
+    }
+
+    pub fn run<F: FnMut()>(&mut self, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut s = Summary::new();
+        let start = Instant::now();
+        loop {
+            let t = Instant::now();
+            f();
+            s.add(t.elapsed().as_secs_f64());
+            let done_budget = start.elapsed().as_secs_f64() > self.budget_s
+                && s.len() >= self.min_iters;
+            if s.len() >= self.max_iters || done_budget {
+                break;
+            }
+        }
+        BenchResult {
+            name: self.name.clone(),
+            iters: s.len(),
+            mean_s: s.mean(),
+            p50_s: s.p50(),
+            min_s: s.min(),
+            std_s: s.std(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let mut b = Bencher::new("noop").with_budget(0.05).with_iters(3, 10);
+        let r = b.run(|| { std::hint::black_box(1 + 1); });
+        assert!(r.iters >= 3 && r.iters <= 10);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.min_s <= r.mean_s + 1e-12);
+    }
+
+    #[test]
+    fn display_contains_name() {
+        let mut b = Bencher::new("xyz").with_budget(0.01).with_iters(3, 3);
+        let r = b.run(|| {});
+        assert!(format!("{r}").contains("xyz"));
+    }
+}

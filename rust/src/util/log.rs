@@ -1,0 +1,76 @@
+//! Tiny leveled logger (stderr).  `ODYSSEY_LOG=debug|info|warn|error`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+
+/// Set the global log level.
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Initialize from the ODYSSEY_LOG env var (default: info).
+pub fn init_from_env() {
+    let l = match std::env::var("ODYSSEY_LOG").as_deref() {
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        Ok("error") => Level::Error,
+        _ => Level::Info,
+    };
+    set_level(l);
+}
+
+fn enabled(l: Level) -> bool {
+    l as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+fn emit(l: Level, msg: &str) {
+    if enabled(l) {
+        eprintln!("[{:5}] {}", format!("{:?}", l).to_lowercase(), msg);
+    }
+}
+
+pub fn debug(msg: &str) {
+    emit(Level::Debug, msg);
+}
+
+pub fn info(msg: &str) {
+    emit(Level::Info, msg);
+}
+
+pub fn warn(msg: &str) {
+    emit(Level::Warn, msg);
+}
+
+pub fn error(msg: &str) {
+    emit(Level::Error, msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Info < Level::Warn);
+        assert!(Level::Warn < Level::Error);
+    }
+
+    #[test]
+    fn set_and_filter() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,45 @@
+//! Substrate utilities: logging, timing, statistics, deterministic RNG,
+//! a thread pool, and a miniature property-testing harness.
+//!
+//! These exist because the build environment is fully offline: no tokio,
+//! no criterion, no proptest, no rand.  Everything here is std-only.
+
+pub mod bench;
+pub mod log;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+pub use bench::{BenchResult, Bencher};
+pub use log::{set_level, Level};
+pub use propcheck::Prop;
+pub use rng::XorShift;
+pub use stats::Summary;
+pub use threadpool::ThreadPool;
+
+use std::time::Instant;
+
+/// Wall-clock timer with human-readable reporting.
+pub struct Timer {
+    start: Instant,
+    label: &'static str,
+}
+
+impl Timer {
+    pub fn start(label: &'static str) -> Self {
+        Timer { start: Instant::now(), label }
+    }
+
+    /// Elapsed seconds since construction.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Log the elapsed time at info level and return it.
+    pub fn report(&self) -> f64 {
+        let s = self.secs();
+        crate::util::log::info(&format!("{}: {:.3}s", self.label, s));
+        s
+    }
+}

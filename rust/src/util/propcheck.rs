@@ -1,0 +1,83 @@
+//! Miniature property-testing harness (proptest is unavailable offline).
+//!
+//! A `Prop` runs a closure over N generated cases from a seeded RNG and
+//! reports the first failing seed so failures reproduce exactly:
+//!
+//! ```ignore
+//! Prop::new("pack/unpack roundtrip").cases(200).check(|rng| {
+//!     let q = random_int4(rng);
+//!     assert_eq!(unpack(pack(&q)), q);
+//! });
+//! ```
+
+use super::rng::XorShift;
+
+pub struct Prop {
+    name: &'static str,
+    cases: usize,
+    base_seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &'static str) -> Self {
+        Prop { name, cases: 100, base_seed: 0xC0FFEE }
+    }
+
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.base_seed = s;
+        self
+    }
+
+    /// Run the property across `cases` seeds; panic with the failing seed
+    /// on first failure.
+    pub fn check<F: Fn(&mut XorShift) + std::panic::RefUnwindSafe>(
+        &self,
+        f: F,
+    ) {
+        for case in 0..self.cases {
+            let seed = self.base_seed.wrapping_add(case as u64);
+            let result = std::panic::catch_unwind(|| {
+                let mut rng = XorShift::new(seed);
+                f(&mut rng);
+            });
+            if let Err(e) = result {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!(
+                    "property '{}' failed at case {} (seed {:#x}): {}",
+                    self.name, case, seed, msg
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        Prop::new("addition commutes").cases(50).check(|rng| {
+            let a = rng.range(-100, 100);
+            let b = rng.range(-100, 100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always fails")]
+    fn failing_property_reports_seed() {
+        Prop::new("always fails").cases(5).check(|_rng| {
+            panic!("always fails");
+        });
+    }
+}

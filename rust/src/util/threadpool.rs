@@ -1,0 +1,167 @@
+//! Fixed-size thread pool over std::sync::mpsc (tokio is unavailable
+//! offline).  Used by the HTTP server and by data-parallel quantization.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A simple fixed-size worker pool.  Jobs run FIFO; `join` blocks until
+/// all submitted jobs have completed (the pool stays usable afterwards).
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let mut workers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let rx = Arc::clone(&rx);
+            let pending = Arc::clone(&pending);
+            workers.push(thread::spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match job {
+                    Ok(job) => {
+                        job();
+                        let (lock, cv) = &*pending;
+                        let mut cnt = lock.lock().unwrap();
+                        *cnt -= 1;
+                        if *cnt == 0 {
+                            cv.notify_all();
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }));
+        }
+        ThreadPool { tx: Some(tx), workers, pending }
+    }
+
+    /// Pool sized to the machine (cores, min 2).
+    pub fn default_size() -> Self {
+        let n = thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .max(2);
+        Self::new(n)
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn join(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut cnt = lock.lock().unwrap();
+        while *cnt > 0 {
+            cnt = cv.wait(cnt).unwrap();
+        }
+    }
+
+    /// Map `f` over `items` in parallel, preserving order.
+    pub fn par_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let results: Arc<Mutex<Vec<Option<R>>>> = Arc::new(Mutex::new(
+            items.iter().map(|_| None).collect(),
+        ));
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            self.execute(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+        self.join();
+        Arc::try_unwrap(results)
+            .unwrap_or_else(|_| panic!("results still shared"))
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.unwrap())
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.par_map((0..50).collect::<Vec<i32>>(), |x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn join_without_jobs_returns() {
+        let pool = ThreadPool::new(2);
+        pool.join(); // must not hang
+    }
+
+    #[test]
+    fn reusable_after_join() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(AtomicUsize::new(0));
+        for round in 0..3 {
+            for _ in 0..10 {
+                let c = Arc::clone(&c);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.join();
+            assert_eq!(c.load(Ordering::SeqCst), (round + 1) * 10);
+        }
+    }
+}

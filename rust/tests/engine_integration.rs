@@ -1,0 +1,204 @@
+//! Engine / coordinator integration over the real artifacts: generation
+//! correctness, continuous batching, determinism, shedding, and the
+//! thread-safe service front door.
+
+use std::sync::{Mutex, OnceLock};
+
+use odyssey::coordinator::handle::EngineService;
+use odyssey::coordinator::request::FinishReason;
+use odyssey::coordinator::{Engine, EngineOptions, GenParams, Request};
+use odyssey::quant::QuantRecipe;
+
+/// Serialize engine construction: each PJRT client spawns a full CPU
+/// thread pool, so cargo's parallel tests must not build engines
+/// concurrently (Engine itself is !Send — the client uses Rc).
+fn with_engine<R>(f: impl FnOnce(&mut Engine) -> R) -> R {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    let _guard = LOCK.get_or_init(|| Mutex::new(())).lock().unwrap();
+    let mut engine = Engine::new(opts("fp")).expect("make artifacts first");
+    engine.reset_metrics();
+    f(&mut engine)
+}
+
+fn opts(variant: &str) -> EngineOptions {
+    EngineOptions {
+        variant: variant.into(),
+        // vanilla: engine tests exercise SERVING, not quantizer quality
+        recipe: if variant == "w8a8" {
+            QuantRecipe::smoothquant_w8()
+        } else {
+            QuantRecipe::vanilla_w4()
+        },
+        max_queue: 8,
+        ..Default::default()
+    }
+}
+
+fn prompt(seed: i32, len: usize) -> Vec<i32> {
+    (0..len).map(|i| 3 + ((seed + i as i32 * 7) % 500)).collect()
+}
+
+#[test]
+fn generates_requested_tokens() {
+    with_engine(|engine| {
+    engine.submit(Request::new(
+        1,
+        prompt(1, 12),
+        GenParams { max_new_tokens: 5, eos: None, ..Default::default() },
+    ));
+    let results = engine.run_until_idle().unwrap();
+    assert_eq!(results.len(), 1);
+    assert_eq!(results[0].tokens.len(), 5);
+    assert_eq!(results[0].finish, FinishReason::MaxTokens);
+    assert!(results[0].ttft_s > 0.0);
+    assert!(results[0].total_s >= results[0].ttft_s);
+    // tokens must be valid vocab ids
+    let vocab = engine.info().vocab as i32;
+    assert!(results[0].tokens.iter().all(|&t| (0..vocab).contains(&t)));
+    });
+}
+
+#[test]
+fn greedy_generation_is_deterministic() {
+    with_engine(|engine| {
+    let mut outs = Vec::new();
+    for round in 0..2 {
+        engine.submit(Request::new(
+            10 + round,
+            prompt(7, 16),
+            GenParams { max_new_tokens: 6, eos: None, ..Default::default() },
+        ));
+        let r = engine.run_until_idle().unwrap();
+        outs.push(r[0].tokens.clone());
+    }
+    assert_eq!(outs[0], outs[1], "greedy decode must be reproducible");
+    });
+}
+
+#[test]
+fn continuous_batching_shares_decode_steps() {
+    with_engine(|engine| {
+    let n = 4; // == decode bucket
+    for i in 0..n {
+        engine.submit(Request::new(
+            i,
+            prompt(i as i32, 10),
+            GenParams { max_new_tokens: 8, eos: None, ..Default::default() },
+        ));
+    }
+    let results = engine.run_until_idle().unwrap();
+    assert_eq!(results.len(), n as usize);
+    // 4 sequences x 8 tokens; the first token comes from prefill, so
+    // decode steps must be ~7, NOT ~28 — that's continuous batching.
+    assert!(
+        engine.metrics.decode_steps <= 9,
+        "decode steps {} should be shared across the batch",
+        engine.metrics.decode_steps
+    );
+    });
+}
+
+#[test]
+fn more_requests_than_slots_all_complete() {
+    with_engine(|engine| {
+    for i in 0..7 {
+        assert!(engine.submit(Request::new(
+            i,
+            prompt(i as i32 + 3, 8),
+            GenParams { max_new_tokens: 4, eos: None, ..Default::default() },
+        )));
+    }
+    let results = engine.run_until_idle().unwrap();
+    assert_eq!(results.len(), 7);
+    assert!(results
+        .iter()
+        .all(|r| r.finish == FinishReason::MaxTokens));
+    });
+}
+
+#[test]
+fn oversize_prompt_is_rejected_cleanly() {
+    with_engine(|engine| {
+    engine.submit(Request::new(1, prompt(0, 1000), GenParams::default()));
+    engine.submit(Request::new(
+        2,
+        prompt(0, 8),
+        GenParams { max_new_tokens: 2, eos: None, ..Default::default() },
+    ));
+    let results = engine.run_until_idle().unwrap();
+    assert_eq!(results.len(), 2);
+    let rejected = results.iter().find(|r| r.id == 1).unwrap();
+    assert_eq!(rejected.finish, FinishReason::Rejected);
+    let ok = results.iter().find(|r| r.id == 2).unwrap();
+    assert_eq!(ok.finish, FinishReason::MaxTokens);
+    });
+}
+
+#[test]
+fn queue_backpressure_sheds() {
+    with_engine(|engine| {
+    let mut accepted = 0;
+    for i in 0..20 {
+        if engine.submit(Request::new(i, prompt(1, 8), GenParams::default()))
+        {
+            accepted += 1;
+        }
+    }
+    assert_eq!(accepted, 8, "max_queue=8 must shed the rest");
+    // drain so later tests see an empty queue
+    let _ = engine.run_until_idle().unwrap();
+    });
+}
+
+#[test]
+fn service_handles_concurrent_callers() {
+    with_engine(|_shared| {
+    let svc = EngineService::spawn(opts("fp")).unwrap();
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            let h = svc.handle.clone();
+            std::thread::spawn(move || {
+                h.generate(
+                    prompt(i, 10),
+                    GenParams {
+                        max_new_tokens: 4,
+                        eos: None,
+                        ..Default::default()
+                    },
+                )
+                .unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let r = h.join().unwrap();
+        assert_eq!(r.tokens.len(), 4);
+    }
+    let stats = svc.handle.stats().unwrap();
+    assert!(stats.contains("completed=6"), "stats: {stats}");
+    svc.shutdown();
+    });
+}
+
+#[test]
+fn variant_engines_agree_on_next_token() {
+    // all bit widths serve the same model: greedy first tokens should
+    // agree between FP and W8A8 on an in-distribution prompt
+    let p: Vec<i32> = vec![1, 3, 220, 150, 3, 80, 12];
+    let params =
+        GenParams { max_new_tokens: 3, eos: None, ..Default::default() };
+    let fp_first = with_engine(|engine| {
+        engine.submit(Request::new(1, p.clone(), params.clone()));
+        engine.run_until_idle().unwrap()[0].tokens[0]
+    });
+    let w8_first = with_engine(|_shared| {
+        // hold the lock so only one extra PJRT client exists at a time
+        let mut engine = Engine::new(opts("w8a8")).unwrap();
+        engine.submit(Request::new(1, p.clone(), params.clone()));
+        engine.run_until_idle().unwrap()[0].tokens[0]
+    });
+    assert_eq!(
+        fp_first, w8_first,
+        "fp vs w8a8 diverge on the first greedy token"
+    );
+}

@@ -1,0 +1,190 @@
+//! Cross-language golden tests: the rust quant core replayed against the
+//! python reference outputs (artifacts/goldens.safetensors, emitted by
+//! compile/goldens.py from fixed seeds).
+//!
+//! Integer outputs must match BIT-FOR-BIT; float scales to 1e-5.  These
+//! are the contracts that make the rust quantizer interchangeable with
+//! the python one.
+
+use odyssey::formats::safetensors::SafeTensors;
+use odyssey::quant::{awq, gptq, lwc, pack, rtn, scale, smoothquant,
+                     GptqConfig};
+use odyssey::tensor::Tensor;
+
+fn goldens() -> SafeTensors {
+    SafeTensors::load("artifacts/goldens.safetensors")
+        .expect("run `make artifacts` first")
+}
+
+fn t_f32(g: &SafeTensors, name: &str) -> Tensor<f32> {
+    g.get(name).unwrap().to_f32().unwrap()
+}
+
+fn t_i8(g: &SafeTensors, name: &str) -> Tensor<i8> {
+    g.get(name).unwrap().to_i8().unwrap()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + y.abs()),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn rtn_per_channel_matches_python() {
+    let g = goldens();
+    let w = t_f32(&g, "in.w");
+    for bits in [4u32, 8] {
+        let (q, s) = rtn::rtn_per_channel(&w, bits, None, None);
+        let qp = t_i8(&g, &format!("rtn_pc{bits}.q"));
+        let sp = t_f32(&g, &format!("rtn_pc{bits}.s"));
+        assert_eq!(q.data(), qp.data(), "rtn_pc{bits} ints");
+        assert_close(&s, sp.data(), 1e-6, "rtn scales");
+    }
+}
+
+#[test]
+fn rtn_per_group_matches_python() {
+    let g = goldens();
+    let w = t_f32(&g, "in.w");
+    let (q, s) = rtn::rtn_per_group(&w, 8, 4);
+    assert_eq!(q.data(), t_i8(&g, "rtn_g8.q").data());
+    assert_close(s.data(), t_f32(&g, "rtn_g8.s").data(), 1e-6, "g scales");
+}
+
+#[test]
+fn lwc_grid_matches_python() {
+    let g = goldens();
+    let w = t_f32(&g, "in.w");
+    let r = lwc::lwc(&w, 4);
+    assert_close(&r.gamma, t_f32(&g, "lwc.gamma").data(), 1e-6, "gamma");
+    assert_close(&r.beta, t_f32(&g, "lwc.beta").data(), 1e-6, "beta");
+    let (q, s) =
+        rtn::rtn_per_channel(&w, 4, Some(&r.gamma), Some(&r.beta));
+    assert_eq!(q.data(), t_i8(&g, "lwc.q").data(), "lwc-quantized ints");
+    assert_close(&s, t_f32(&g, "lwc.s").data(), 1e-6, "lwc scales");
+}
+
+#[test]
+fn gptq_matches_python() {
+    let g = goldens();
+    let w = t_f32(&g, "in.w");
+    let h = t_f32(&g, "in.h");
+    let s_lwc = t_f32(&g, "lwc.s");
+    let res = gptq::gptq_quantize(
+        &w,
+        &h,
+        &GptqConfig::default(),
+        Some(s_lwc.data()),
+    )
+    .unwrap();
+    let qp = t_i8(&g, "gptq.q");
+    // GPTQ accumulates float error-feedback; rust (f64, same order)
+    // matches python bit-for-bit
+    assert_eq!(res.q.data(), qp.data(), "gptq ints");
+    assert_close(&res.scales, t_f32(&g, "gptq.s").data(), 1e-6, "gptq s");
+}
+
+#[test]
+fn gptq_act_order_matches_python() {
+    let g = goldens();
+    let w = t_f32(&g, "in.w");
+    let h = t_f32(&g, "in.h");
+    let res = gptq::gptq_quantize(
+        &w,
+        &h,
+        &GptqConfig { act_order: true, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    let perm_py = g.get("gptq_ro.perm").unwrap().to_i64().unwrap();
+    let perm: Vec<i64> =
+        res.perm.unwrap().iter().map(|&v| v as i64).collect();
+    assert_eq!(perm, perm_py.data(), "ro permutation");
+    assert_eq!(res.q.data(), t_i8(&g, "gptq_ro.q").data(), "ro ints");
+}
+
+#[test]
+fn gptq_grouped_matches_python() {
+    let g = goldens();
+    let w = t_f32(&g, "in.w");
+    let h = t_f32(&g, "in.h");
+    let res = gptq::gptq_quantize(
+        &w,
+        &h,
+        &GptqConfig { group: 8, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    assert_eq!(res.q.data(), t_i8(&g, "gptq_g8.q").data(), "g8 ints");
+    assert_close(
+        &res.scales,
+        t_f32(&g, "gptq_g8.s").data(),
+        1e-6,
+        "g8 scales",
+    );
+}
+
+#[test]
+fn packing_matches_python() {
+    let g = goldens();
+    let q = t_i8(&g, "lwc.q");
+    let p = pack::pack_int4(&q);
+    let pp = g.get("pack.p").unwrap().to_u8().unwrap();
+    assert_eq!(p.data(), pp.data(), "packed bytes");
+    let x16 = pack::unpack_x16(&p);
+    let xp = t_i8(&g, "pack.unpacked_x16");
+    assert_eq!(x16.data(), xp.data(), "x16 unpack");
+}
+
+#[test]
+fn smoothquant_scales_match_python() {
+    let g = goldens();
+    let w = t_f32(&g, "in.w");
+    let absmax = t_f32(&g, "in.absmax");
+    let s = smoothquant::smoothquant_scales(absmax.data(), &w, 0.5);
+    assert_close(&s, t_f32(&g, "sq.scales").data(), 1e-5, "sq scales");
+}
+
+#[test]
+fn awq_scales_match_python() {
+    let g = goldens();
+    let w = t_f32(&g, "in.w");
+    let x = t_f32(&g, "in.x");
+    let absmean = t_f32(&g, "in.absmean");
+    let res = awq::awq_search(absmean.data(), &w, &x, 4, 8);
+    assert_close(
+        &res.scales,
+        t_f32(&g, "awq.scales").data(),
+        1e-4,
+        "awq scales",
+    );
+}
+
+#[test]
+fn act_quant_matches_python() {
+    let g = goldens();
+    let x = t_f32(&g, "in.x").slice_rows(0, 8);
+    let (q, s) = scale::quant_act_per_token(&x);
+    assert_eq!(q.data(), t_i8(&g, "actq.q").data(), "act ints");
+    assert_close(&s, t_f32(&g, "actq.s").data(), 1e-6, "act scales");
+}
+
+#[test]
+fn asym_matches_python() {
+    let g = goldens();
+    let w = t_f32(&g, "in.w");
+    let (u, s, z) = rtn::rtn_per_channel_asym(&w, 4);
+    assert_eq!(
+        u.data(),
+        g.get("asym.u").unwrap().to_u8().unwrap().data(),
+        "asym uints"
+    );
+    assert_close(&s, t_f32(&g, "asym.s").data(), 1e-6, "asym scales");
+    let zp = g.get("asym.z").unwrap().to_i32().unwrap();
+    assert_eq!(&z, zp.data(), "zero points");
+}

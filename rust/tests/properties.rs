@@ -1,0 +1,284 @@
+//! Cross-module property tests (mini-propcheck harness; seeds reported
+//! on failure).  Pure CPU — no artifacts needed.
+
+use odyssey::coordinator::kv::KvState;
+use odyssey::coordinator::queue::{Admit, RequestQueue};
+use odyssey::coordinator::request::{GenParams, Request};
+use odyssey::formats::json::Json;
+use odyssey::formats::safetensors::{SafeTensors, StTensor};
+use odyssey::quant::{gptq, lwc, pack, rtn, scale, GptqConfig};
+use odyssey::tensor::Tensor;
+use odyssey::util::propcheck::Prop;
+use odyssey::util::XorShift;
+
+// ---------------------------------------------------------------- quant
+
+/// The FastGEMM identity at the integer level: for any int8 activations
+/// and int4 weights, acc(x, 16·w) / 16 == acc(x, w) EXACTLY (s32 math).
+#[test]
+fn prop_fastgemm_x16_identity() {
+    Prop::new("fastgemm x16 identity").cases(200).check(|rng| {
+        let k = 2 * (1 + (rng.next_u64() % 32) as usize);
+        let n = 1 + (rng.next_u64() % 8) as usize;
+        let q: Vec<i8> = (0..k * n).map(|_| rng.range(-8, 8) as i8).collect();
+        let x: Vec<i8> =
+            (0..k).map(|_| rng.range(-127, 128) as i8).collect();
+        let qt = Tensor::from_vec(&[k, n], q);
+        let p = pack::pack_int4(&qt);
+        let w16 = pack::unpack_x16(&p);
+        for j in 0..n {
+            let mut acc: i32 = 0;
+            let mut acc16: i32 = 0;
+            for i in 0..k {
+                acc += x[i] as i32 * qt.at2(i, j) as i32;
+                acc16 += x[i] as i32 * w16.at2(i, j) as i32;
+            }
+            assert_eq!(acc16, acc * 16, "x16 accumulate must be exact");
+            assert_eq!(acc16 / 16, acc);
+        }
+    });
+}
+
+#[test]
+fn prop_lwc_at_least_as_good_as_vanilla() {
+    Prop::new("lwc >= vanilla").cases(25).check(|rng| {
+        let k = 16 + (rng.next_u64() % 64) as usize;
+        let n = 1 + (rng.next_u64() % 6) as usize;
+        let w = Tensor::randn(&[k, n], rng.next_u64());
+        let r = lwc::lwc(&w, 4);
+        for j in 0..n {
+            assert!(r.mse[j] <= r.mse_vanilla[j] + 1e-15);
+        }
+    });
+}
+
+#[test]
+fn prop_gptq_never_worse_than_rtn_on_calib_objective() {
+    Prop::new("gptq <= rtn output-mse").cases(10).check(|rng| {
+        let (k, n, t) = (24, 8, 192);
+        let w = Tensor::randn(&[k, n], rng.next_u64());
+        let mut x = Tensor::randn(&[t, k], rng.next_u64());
+        // correlated channels (what GPTQ exploits)
+        for i in 0..t {
+            let base = x.at2(i, 0);
+            for j in 1..4 {
+                let v = 0.7 * base + 0.3 * x.at2(i, j);
+                x.set2(i, j, v);
+            }
+        }
+        let xt = x.transpose();
+        let h = xt.matmul(&x).map(|v| 2.0 * v / t as f32);
+        let res =
+            gptq::gptq_quantize(&w, &h, &GptqConfig::default(), None)
+                .unwrap();
+        let w_g = rtn::dequant_per_channel(&res.q, &res.scales);
+        let (qr, sr) = rtn::rtn_per_channel(&w, 4, None, None);
+        let w_r = rtn::dequant_per_channel(&qr, &sr);
+        let e_g = gptq::layer_output_mse(&x, &w, &w_g);
+        let e_r = gptq::layer_output_mse(&x, &w, &w_r);
+        assert!(
+            e_g <= e_r * 1.001,
+            "gptq {e_g} must not lose to rtn {e_r}"
+        );
+    });
+}
+
+#[test]
+fn prop_act_quant_scales_bound_error() {
+    Prop::new("act quant error bound").cases(50).check(|rng| {
+        let m = 1 + (rng.next_u64() % 6) as usize;
+        let k = 2 + (rng.next_u64() % 48) as usize;
+        let x = Tensor::randn(&[m, k], rng.next_u64());
+        let (q, s) = scale::quant_act_per_token(&x);
+        for i in 0..m {
+            for j in 0..k {
+                let deq = q.at2(i, j) as f32 * s[i];
+                assert!((deq - x.at2(i, j)).abs() <= 0.5 * s[i] + 1e-6);
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------- coordinator
+
+#[test]
+fn prop_kv_slots_never_double_allocate() {
+    Prop::new("kv slot model").cases(50).check(|rng| {
+        let b = 2 + (rng.next_u64() % 6) as usize;
+        let mut kv = KvState::new(b, 2, 2, 16, 4);
+        let mut live: Vec<usize> = Vec::new();
+        for step in 0..100u64 {
+            if rng.next_f64() < 0.5 && kv.free_slots() > 0 {
+                let slot = kv.alloc(step).unwrap();
+                assert!(
+                    !live.contains(&slot),
+                    "slot {slot} double-allocated"
+                );
+                live.push(slot);
+            } else if !live.is_empty() {
+                let idx = (rng.next_u64() % live.len() as u64) as usize;
+                let slot = live.swap_remove(idx);
+                kv.free(slot);
+            }
+            assert_eq!(kv.free_slots(), b - live.len());
+        }
+    });
+}
+
+#[test]
+fn prop_queue_fifo_and_conservation() {
+    Prop::new("queue conservation").cases(50).check(|rng| {
+        let cap = 4 + (rng.next_u64() % 12) as usize;
+        let mut q = RequestQueue::new(cap);
+        let mut next_id = 0u64;
+        let mut expected: std::collections::VecDeque<u64> =
+            Default::default();
+        let mut popped: Vec<u64> = Vec::new();
+        for _ in 0..200 {
+            if rng.next_f64() < 0.6 {
+                let r = Request::new(next_id, vec![1; 4],
+                                     GenParams::default());
+                if q.push(r) == Admit::Accepted {
+                    expected.push_back(next_id);
+                }
+                next_id += 1;
+            } else {
+                let n = 1 + (rng.next_u64() % 3) as usize;
+                let (batch, rej) = q.pop_batch(n, 100);
+                assert!(rej.is_empty());
+                for r in batch {
+                    let want = expected.pop_front().unwrap();
+                    assert_eq!(r.id, want, "FIFO violated");
+                    popped.push(r.id);
+                }
+            }
+            assert!(q.len() <= cap);
+        }
+        assert_eq!(q.len(), expected.len());
+    });
+}
+
+// --------------------------------------------------------------- formats
+
+fn random_json(rng: &mut XorShift, depth: usize) -> Json {
+    match if depth == 0 { rng.next_u64() % 4 } else { rng.next_u64() % 6 } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.next_f64() < 0.5),
+        2 => Json::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+        3 => {
+            let n = rng.next_u64() % 8;
+            let n_special = (rng.next_u64() % 4) as usize;
+            let mut s: String = (0..n)
+                .map(|i| char::from(b'a' + ((rng.next_u64() + i) % 26) as u8))
+                .collect();
+            s.extend(['\\', '"', '\n'].into_iter().take(n_special));
+            Json::Str(s)
+        }
+        4 => Json::Arr(
+            (0..rng.next_u64() % 4)
+                .map(|_| random_json(rng, depth - 1))
+                .collect(),
+        ),
+        _ => Json::Obj(
+            (0..rng.next_u64() % 4)
+                .map(|i| {
+                    (format!("k{i}"), random_json(rng, depth - 1))
+                })
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    Prop::new("json emit/parse roundtrip").cases(200).check(|rng| {
+        let v = random_json(rng, 3);
+        let text = v.emit();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("parse failed on {text}: {e}"));
+        assert_eq!(back, v, "roundtrip mismatch for {text}");
+    });
+}
+
+#[test]
+fn prop_safetensors_roundtrip() {
+    Prop::new("safetensors roundtrip").cases(50).check(|rng| {
+        let mut st = SafeTensors::new();
+        let n_tensors = 1 + rng.next_u64() % 5;
+        for i in 0..n_tensors {
+            let rows = 1 + (rng.next_u64() % 8) as usize;
+            let cols = 1 + (rng.next_u64() % 8) as usize;
+            match rng.next_u64() % 3 {
+                0 => st.insert(
+                    &format!("t{i}"),
+                    StTensor::from_f32(&Tensor::randn(
+                        &[rows, cols],
+                        rng.next_u64(),
+                    )),
+                ),
+                1 => st.insert(
+                    &format!("t{i}"),
+                    StTensor::from_i8(&Tensor::from_vec(
+                        &[rows * cols],
+                        (0..rows * cols)
+                            .map(|_| rng.range(-128, 128) as i8)
+                            .collect(),
+                    )),
+                ),
+                _ => st.insert(
+                    &format!("t{i}"),
+                    StTensor::from_i32(&Tensor::from_vec(
+                        &[rows, cols],
+                        (0..rows * cols)
+                            .map(|_| rng.range(-1000, 1000) as i32)
+                            .collect(),
+                    )),
+                ),
+            }
+        }
+        let bytes = st.to_bytes();
+        let back = SafeTensors::from_bytes(&bytes).unwrap();
+        assert_eq!(back.len(), st.len());
+        for name in st.names() {
+            let a = st.get(name).unwrap();
+            let b = back.get(name).unwrap();
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.bytes, b.bytes);
+        }
+    });
+}
+
+// ------------------------------------------------------------- corrupted
+
+#[test]
+fn corrupted_safetensors_rejected_not_panicking() {
+    Prop::new("safetensors fuzz").cases(100).check(|rng| {
+        let mut st = SafeTensors::new();
+        st.insert(
+            "x",
+            StTensor::from_f32(&Tensor::randn(&[4, 4], 1)),
+        );
+        let mut bytes = st.to_bytes();
+        // flip random bytes: must either parse or error, never panic
+        for _ in 0..3 {
+            let i = (rng.next_u64() % bytes.len() as u64) as usize;
+            bytes[i] ^= (rng.next_u64() & 0xFF) as u8;
+        }
+        let _ = SafeTensors::from_bytes(&bytes);
+    });
+}
+
+#[test]
+fn corrupted_json_rejected_not_panicking() {
+    Prop::new("json fuzz").cases(200).check(|rng| {
+        let src = r#"{"a": [1, 2, {"b": "str"}], "c": -2.5e3}"#;
+        let mut bytes = src.as_bytes().to_vec();
+        for _ in 0..2 {
+            let i = (rng.next_u64() % bytes.len() as u64) as usize;
+            bytes[i] = (rng.next_u64() % 128) as u8;
+        }
+        if let Ok(text) = std::str::from_utf8(&bytes) {
+            let _ = Json::parse(text); // must not panic
+        }
+    });
+}

@@ -1,0 +1,163 @@
+//! Runtime integration: compile real AOT artifacts on the PJRT CPU
+//! client and verify cross-kernel numerical contracts.
+
+use odyssey::exp::latency::random_gemm_args;
+use odyssey::quant::{pack, rtn, scale};
+use odyssey::runtime::{literal_f32, literal_from_st, Runtime};
+use odyssey::formats::safetensors::StTensor;
+use odyssey::tensor::Tensor;
+
+fn rt() -> Runtime {
+    Runtime::new("artifacts").expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_loads_and_is_complete() {
+    let rt = rt();
+    assert!(rt.manifest.models.contains_key("tiny3m"));
+    assert!(rt.manifest.group_size > 0);
+    // every graph's HLO file exists
+    for g in rt.manifest.graphs.values() {
+        assert!(
+            rt.manifest.hlo_path(g).exists(),
+            "missing artifact {}",
+            g.path
+        );
+    }
+    // serving graphs present for every tiny3m variant
+    for variant in
+        ["fp", "w8a8", "w4a8_fast", "w4a8_group", "w4a8_asym", "w4a16"]
+    {
+        for stage in ["prefill", "decode"] {
+            let name = rt.manifest.stage_graph("tiny3m", variant, stage, 4);
+            assert!(rt.manifest.graphs.contains_key(&name), "{name}");
+        }
+    }
+}
+
+#[test]
+fn gemm_graph_executes_with_valid_output() {
+    let mut rt = rt();
+    let gi = rt
+        .manifest
+        .gemm_graphs("cpu")
+        .into_iter()
+        .find(|g| g.variant == "w8a8" && g.m == 1)
+        .expect("cpu w8a8 graph")
+        .clone();
+    let args = random_gemm_args(&gi.params).unwrap();
+    let outs = rt.run_literals(&gi.name, &args).unwrap();
+    assert_eq!(outs.len(), 1);
+    let v = outs[0].to_vec::<f32>().unwrap();
+    assert_eq!(v.len(), gi.m * gi.n);
+    assert!(v.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn fastgemm_graph_equals_w8a8_graph_times_16() {
+    // FastGEMM contract on the REAL artifacts: feeding w8a8 with the
+    // x16-unpacked weights and s_w/16 must reproduce fastgemm exactly.
+    let mut rt = rt();
+    let fast = rt
+        .manifest
+        .gemm_graphs("cpu")
+        .into_iter()
+        .find(|g| g.variant == "w4a8_fast" && g.m == 1 && g.n == 1024)
+        .unwrap()
+        .clone();
+    let w8 = rt
+        .manifest
+        .gemm_graphs("cpu")
+        .into_iter()
+        .find(|g| {
+            g.variant == "w8a8" && g.m == 1 && g.n == fast.n && g.k == fast.k
+        })
+        .unwrap()
+        .clone();
+
+    let (m, n, k) = (fast.m, fast.n, fast.k);
+    // random int4 weights + activations
+    let x = Tensor::randn(&[m, k], 11);
+    let (xq, s_a) = scale::quant_act_per_token(&x);
+    let wf = Tensor::randn(&[k, n], 12);
+    let (q4, s_w) = rtn::rtn_per_channel(&wf, 4, None, None);
+    let p = pack::pack_int4(&q4);
+    let x16 = pack::unpack_x16(&p);
+
+    let xq_l = literal_from_st(&StTensor::from_i8(&xq)).unwrap();
+    let sa_l = literal_f32(&[m], &s_a).unwrap();
+
+    let fast_out = rt
+        .run_literals(
+            &fast.name,
+            &[
+                xq_l.clone(),
+                sa_l.clone(),
+                literal_from_st(&StTensor::from_u8(&p)).unwrap(),
+                literal_f32(&[n], &s_w).unwrap(),
+            ],
+        )
+        .unwrap()[0]
+        .to_vec::<f32>()
+        .unwrap();
+
+    let s16: Vec<f32> = s_w.iter().map(|v| v / 16.0).collect();
+    let w8_out = rt
+        .run_literals(
+            &w8.name,
+            &[
+                xq_l,
+                sa_l,
+                literal_from_st(&StTensor::from_i8(&x16)).unwrap(),
+                literal_f32(&[n], &s16).unwrap(),
+            ],
+        )
+        .unwrap()[0]
+        .to_vec::<f32>()
+        .unwrap();
+
+    let maxd = fast_out
+        .iter()
+        .zip(w8_out.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(maxd < 1e-4, "x16 contract violated: maxdiff {maxd}");
+}
+
+#[test]
+fn wrong_arg_count_rejected() {
+    let mut rt = rt();
+    let gi = rt
+        .manifest
+        .gemm_graphs("cpu")
+        .into_iter()
+        .find(|g| g.variant == "fp" && g.m == 1)
+        .unwrap()
+        .clone();
+    let mut args = random_gemm_args(&gi.params).unwrap();
+    args.pop();
+    assert!(rt.run_literals(&gi.name, &args).is_err());
+}
+
+#[test]
+fn unknown_graph_rejected() {
+    let mut rt = rt();
+    assert!(rt.run_literals("nope_graph", &[]).is_err());
+    assert!(rt.executable("nope_graph").is_err());
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let mut rt = rt();
+    let gi = rt
+        .manifest
+        .gemm_graphs("cpu")
+        .into_iter()
+        .find(|g| g.variant == "fp" && g.m == 1)
+        .unwrap()
+        .clone();
+    rt.executable(&gi.name).unwrap();
+    let n1 = rt.loaded_graphs();
+    rt.executable(&gi.name).unwrap();
+    assert_eq!(rt.loaded_graphs(), n1, "second call must hit the cache");
+}
