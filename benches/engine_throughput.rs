@@ -9,8 +9,8 @@ use odyssey::util::XorShift;
 
 fn main() {
     odyssey::util::log::init_from_env();
-    let corpus = load_corpus("artifacts", "val")
-        .expect("artifacts (run `make artifacts`)");
+    odyssey::runtime::synth::ensure_artifacts("artifacts").expect("artifacts");
+    let corpus = load_corpus("artifacts", "val").expect("corpus");
     let mut rng = XorShift::new(42);
     let trace: Vec<Vec<i32>> = (0..8)
         .map(|_| {

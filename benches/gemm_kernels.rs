@@ -11,7 +11,8 @@ use odyssey::util::Bencher;
 
 fn main() {
     odyssey::util::log::init_from_env();
-    let mut rt = Runtime::new("artifacts").expect("artifacts (run `make artifacts`)");
+    odyssey::runtime::synth::ensure_artifacts("artifacts").expect("artifacts");
+    let mut rt = Runtime::new("artifacts").expect("runtime");
     let graphs: Vec<_> =
         rt.manifest.gemm_graphs("cpu").into_iter().cloned().collect();
 

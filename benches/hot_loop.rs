@@ -12,6 +12,7 @@ use odyssey::util::Bencher;
 fn main() {
     odyssey::util::log::init_from_env();
     let artifacts = "artifacts";
+    odyssey::runtime::synth::ensure_artifacts(artifacts).expect("artifacts");
     for variant in ["w4a8_fast", "fp"] {
         let mut rt = Runtime::new(artifacts).expect("make artifacts first");
         let info = rt.manifest.model("tiny3m").unwrap().clone();

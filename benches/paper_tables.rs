@@ -7,6 +7,8 @@
 
 fn main() {
     odyssey::util::log::init_from_env();
+    // measured halves (fig7/tab5) need artifacts; synthesize if absent
+    let _ = odyssey::runtime::synth::ensure_artifacts("artifacts");
     for exp in ["fig1", "fig6", "tab4", "tab7"] {
         println!("\n================ {exp} ================");
         // these experiments are perfmodel-only: no artifacts required

@@ -29,6 +29,7 @@ struct Row {
 fn main() -> anyhow::Result<()> {
     odyssey::util::log::init_from_env();
     let artifacts = "artifacts";
+    odyssey::runtime::synth::ensure_artifacts(artifacts)?;
     let corpus = load_corpus(artifacts, "val")?;
 
     // fixed request trace: same prompts for every variant

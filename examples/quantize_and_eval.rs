@@ -16,6 +16,7 @@ use odyssey::runtime::Runtime;
 fn main() -> anyhow::Result<()> {
     odyssey::util::log::init_from_env();
     let artifacts = "artifacts";
+    odyssey::runtime::synth::ensure_artifacts(artifacts)?;
     let rt = Runtime::new(artifacts)?;
     let ckpt = Checkpoint::load(&rt.manifest, "tiny3m")?;
     let calib = Calibration::load(&rt.manifest, "tiny3m")?;

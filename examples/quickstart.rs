@@ -16,6 +16,7 @@ use odyssey::quant::QuantRecipe;
 
 fn main() -> anyhow::Result<()> {
     odyssey::util::log::init_from_env();
+    odyssey::runtime::synth::ensure_artifacts("artifacts")?;
 
     // 1. spawn the engine (its own thread; handles are cloneable)
     let svc = EngineService::spawn(EngineOptions {

@@ -41,6 +41,7 @@ fn http_get(addr: &str, path: &str) -> anyhow::Result<String> {
 
 fn main() -> anyhow::Result<()> {
     odyssey::util::log::init_from_env();
+    odyssey::runtime::synth::ensure_artifacts("artifacts")?;
     let addr = "127.0.0.1:18472";
 
     // engine + server

@@ -1,16 +1,29 @@
-use odyssey::runtime::Runtime;
+//! Quick plumbing check: run the tiny3m fp decode graph once with
+//! zero-filled arguments on the selected backend and report the output
+//! surface.  `cargo run --bin chk` (set ODYSSEY_BACKEND=pjrt for the
+//! AOT path).
+
+use odyssey::runtime::{literal_zeros, synth, Runtime};
+
 fn main() -> anyhow::Result<()> {
+    odyssey::util::log::init_from_env();
+    synth::ensure_artifacts("artifacts")?;
     let mut rt = Runtime::new("artifacts")?;
     let gi = rt.manifest.graph("tiny3m_fp_decode_b1")?.clone();
-    let args: Vec<_> = gi.params.iter().map(|p| odyssey::runtime::literal_zeros(p).unwrap()).collect();
-    let bufs = rt.stage(&args)?;
-    let exe = rt.executable("tiny3m_fp_decode_b1")?;
-    let out = exe.execute::<xla::Literal>(&args)?;
-    println!("replicas={} buffers_per_replica={}", out.len(), out[0].len());
-    println!("buf0 shape: {:?}", out[0][0].on_device_shape()?);
-    let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
-    let out2 = exe.execute_b::<&xla::PjRtBuffer>(&refs)?;
-    println!("execute_b buffers_per_replica={}", out2[0].len());
-    println!("b shape0: {:?}", out2[0][0].on_device_shape()?);
+    let args: Vec<_> = gi
+        .params
+        .iter()
+        .map(|p| literal_zeros(p).expect("zeros"))
+        .collect();
+    let outs = rt.run_literals(&gi.name, &args)?;
+    println!(
+        "backend={} graph={} outputs={}",
+        rt.backend_name(),
+        gi.name,
+        outs.len()
+    );
+    for (o, spec) in outs.iter().zip(gi.outputs.iter()) {
+        println!("  {}: shape {:?} {:?}", spec.name, o.shape(), o.dtype());
+    }
     Ok(())
 }

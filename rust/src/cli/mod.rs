@@ -71,6 +71,7 @@ USAGE:
 
 COMMANDS:
   info                         show manifest summary (models, graphs)
+  synth-artifacts              generate synthetic artifacts (no python)
   quantize                     quantize a checkpoint to a variant
       --model tiny3m --variant w4a8_fast --recipe odyssey --out q.safetensors
       recipes: odyssey | vanilla | lwc | smoothquant | rtn-g | gptq-g | awq-g
@@ -87,7 +88,20 @@ COMMANDS:
 
 GLOBAL FLAGS:
   --artifacts DIR              artifacts directory (default: artifacts)
+  --backend native|pjrt        execution backend (default: native CPU;
+                               env ODYSSEY_BACKEND also honored; pjrt
+                               needs --features pjrt + AOT HLO)
 ";
+
+/// Backend names accepted by --backend (defaults to the native CPU
+/// interpreter).
+pub fn parse_backend(args: &Args) -> Result<crate::runtime::BackendKind> {
+    match args.get("backend") {
+        Some(name) => crate::runtime::BackendKind::parse(name),
+        // no flag: fall back to ODYSSEY_BACKEND, then native
+        None => Ok(crate::runtime::BackendKind::from_env()),
+    }
+}
 
 /// Recipe names accepted by --recipe.
 pub fn parse_recipe(name: &str) -> Result<crate::quant::QuantRecipe> {
@@ -150,5 +164,18 @@ mod tests {
         assert!(parse_recipe("odyssey").is_ok());
         assert!(parse_recipe("gptq-g").is_ok());
         assert!(parse_recipe("nope").is_err());
+    }
+
+    #[test]
+    fn backend_flag_resolves() {
+        use crate::runtime::BackendKind;
+        let a = Args::parse(&sv(&["--backend", "pjrt"]), &[]).unwrap();
+        assert_eq!(parse_backend(&a).unwrap(), BackendKind::Pjrt);
+        // no flag: env fallback — assert against from_env so the test
+        // holds regardless of the ambient ODYSSEY_BACKEND setting
+        let d = Args::parse(&sv(&[]), &[]).unwrap();
+        assert_eq!(parse_backend(&d).unwrap(), BackendKind::from_env());
+        let bad = Args::parse(&sv(&["--backend", "tpu"]), &[]).unwrap();
+        assert!(parse_backend(&bad).is_err());
     }
 }

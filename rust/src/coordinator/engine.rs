@@ -1,9 +1,10 @@
-//! The generation engine: owns the PJRT runtime, the quantized weights,
-//! and the KV state; executes the continuous-batching loop over the AOT
-//! prefill/decode executables.
+//! The generation engine: owns the execution runtime (native CPU
+//! interpreter or PJRT), the quantized weights, and the KV state;
+//! executes the continuous-batching loop over the prefill/decode graphs.
 //!
-//! Python is long gone by the time this runs — the executables come from
-//! `artifacts/*.hlo.txt` and the weights from the rust quantizer.
+//! Python is long gone by the time this runs — graph math comes from the
+//! selected [`crate::runtime::ExecBackend`] and the weights from the
+//! rust quantizer.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -20,7 +21,7 @@ use crate::coordinator::request::{
 use crate::formats::config::GraphKind;
 use crate::model::{self, Calibration, Checkpoint};
 use crate::quant::QuantRecipe;
-use crate::runtime::{self, Literal, Runtime};
+use crate::runtime::{self, BackendKind, Literal, Runtime};
 use crate::util::XorShift;
 
 /// Engine construction options.
@@ -35,6 +36,9 @@ pub struct EngineOptions {
     pub max_queue: usize,
     /// load a pre-quantized checkpoint instead of quantizing at startup
     pub checkpoint: Option<String>,
+    /// execution backend (native CPU interpreter by default; `pjrt`
+    /// runs the AOT artifacts and needs the pjrt feature)
+    pub backend: BackendKind,
 }
 
 impl Default for EngineOptions {
@@ -48,6 +52,9 @@ impl Default for EngineOptions {
             decode_batch: 4,
             max_queue: 256,
             checkpoint: None,
+            // honor ODYSSEY_BACKEND like Runtime::new, so engine entry
+            // points (benches, examples, EngineService) follow it too
+            backend: BackendKind::from_env(),
         }
     }
 }
@@ -89,7 +96,8 @@ impl Engine {
     /// the variant, compile the two serving graphs.
     pub fn new(opts: EngineOptions) -> Result<Self> {
         let t0 = Instant::now();
-        let mut rt = Runtime::new(&opts.artifacts_dir)?;
+        let mut rt =
+            Runtime::with_backend(&opts.artifacts_dir, opts.backend)?;
         let info = rt.manifest.model(&opts.model)?.clone();
         let group = rt.manifest.group_size;
 
@@ -165,9 +173,10 @@ impl Engine {
             info.head_dim,
         );
         crate::util::log::info(&format!(
-            "engine up: model={} variant={} params={:.1}M graphs=({}, {}) in {:.2}s",
+            "engine up: model={} variant={} backend={} params={:.1}M graphs=({}, {}) in {:.2}s",
             opts.model,
             opts.variant,
+            rt.backend_name(),
             info.n_params as f64 / 1e6,
             prefill_graph,
             decode_graph,

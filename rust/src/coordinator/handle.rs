@@ -1,9 +1,10 @@
 //! Thread-safe front door to the engine.
 //!
-//! The `Engine` (and the PJRT types underneath) are not `Sync`, so the
-//! engine runs on its own thread and callers talk to it over channels —
-//! the same topology a vLLM router uses between HTTP workers and the
-//! model executor.
+//! The `Engine` (and the execution backend underneath — single-threaded
+//! by design, whichever `ExecBackend` is selected) is not shared across
+//! threads: it runs on its own thread and callers talk to it over
+//! channels — the same topology a vLLM router uses between HTTP workers
+//! and the model executor.
 
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread::JoinHandle;

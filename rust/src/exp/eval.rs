@@ -94,14 +94,29 @@ pub struct Evaluator {
 
 impl Evaluator {
     /// Quantize `model` with `recipe` for `variant` and set up the b=4
-    /// prefill graph.
+    /// prefill graph (backend from `ODYSSEY_BACKEND`, default native).
     pub fn new(
         artifacts_dir: &str,
         model_name: &str,
         variant: &str,
         recipe: &QuantRecipe,
     ) -> Result<Self> {
-        let rt = Runtime::new(artifacts_dir)?;
+        Self::with_runtime(
+            Runtime::new(artifacts_dir)?,
+            model_name,
+            variant,
+            recipe,
+        )
+    }
+
+    /// Same, on an explicitly constructed runtime (e.g. a specific
+    /// backend selected via `Runtime::with_backend`).
+    pub fn with_runtime(
+        rt: Runtime,
+        model_name: &str,
+        variant: &str,
+        recipe: &QuantRecipe,
+    ) -> Result<Self> {
         let info = rt.manifest.model(model_name)?.clone();
         let ckpt = Checkpoint::load(&rt.manifest, model_name)?;
         let calib = if recipe.use_gptq

@@ -167,7 +167,12 @@ pub fn tab5(artifacts_dir: &str) -> Result<()> {
     }
     println!("(paper self-decode boosts: 4.33x / 4.21x / 3.37x / 4.28x)");
     println!("\nMeasured CPU cross-check (scaled shapes, fastgemm vs w8a8):");
-    measured_gemm_set(artifacts_dir, &["w4a8_fast", "w8a8"], 1)?;
+    measured_gemm_set(
+        artifacts_dir,
+        &["w4a8_fast", "w8a8"],
+        1,
+        crate::runtime::BackendKind::from_env(),
+    )?;
     Ok(())
 }
 
@@ -255,6 +260,7 @@ pub fn fig7(artifacts_dir: &str) -> Result<()> {
         artifacts_dir,
         &["w4a8_group", "w4a8_asym", "w4a8_fast", "w4a8_unfused"],
         1,
+        crate::runtime::BackendKind::from_env(),
     )?;
     Ok(())
 }
@@ -265,8 +271,9 @@ pub fn measured_gemm_set(
     artifacts_dir: &str,
     variants: &[&str],
     m_filter: usize,
+    backend: crate::runtime::BackendKind,
 ) -> Result<()> {
-    let mut rt = Runtime::new(artifacts_dir)?;
+    let mut rt = Runtime::with_backend(artifacts_dir, backend)?;
     let graphs: Vec<_> = rt
         .manifest
         .gemm_graphs("cpu")
@@ -320,25 +327,15 @@ pub fn random_gemm_args(
                     runtime::literal_f32(&p.shape, &vals)
                 }
                 Dtype::S8 => {
-                    let bytes: Vec<u8> = (0..n)
-                        .map(|_| rng.range(-8, 8) as i8 as u8)
-                        .collect();
-                    runtime::Literal::create_from_shape_and_untyped_data(
-                        xla::ElementType::S8,
-                        &p.shape,
-                        &bytes,
-                    )
-                    .map_err(|e| anyhow::anyhow!("{e:?}"))
+                    let vals: Vec<i8> =
+                        (0..n).map(|_| rng.range(-8, 8) as i8).collect();
+                    runtime::literal_i8(&p.shape, &vals)
                 }
                 Dtype::U8 => {
-                    let bytes: Vec<u8> =
-                        (0..n).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
-                    runtime::Literal::create_from_shape_and_untyped_data(
-                        xla::ElementType::U8,
-                        &p.shape,
-                        &bytes,
-                    )
-                    .map_err(|e| anyhow::anyhow!("{e:?}"))
+                    let vals: Vec<u8> = (0..n)
+                        .map(|_| (rng.next_u64() & 0xFF) as u8)
+                        .collect();
+                    runtime::literal_u8(&p.shape, &vals)
                 }
                 Dtype::S32 => {
                     let vals: Vec<i32> =

@@ -11,26 +11,33 @@
 //!   whose prefill/decode graphs call the L1 kernels and take weights as
 //!   arguments.
 //! * **L3** — this crate: the quantization toolchain (RTN / LWC / GPTQ /
-//!   SmoothQuant / AWQ, SINT4 packing), the PJRT runtime that loads the
-//!   AOT artifacts, the serving coordinator (continuous batching, KV cache
-//!   management, prefill/decode scheduling), the analytical A100 perf
-//!   model, and the experiment drivers that regenerate every table and
-//!   figure of the paper.
+//!   SmoothQuant / AWQ, SINT4 packing), a pluggable execution runtime
+//!   (native CPU interpreter by default; PJRT over the AOT artifacts
+//!   behind `--features pjrt`), the serving coordinator (continuous
+//!   batching, KV cache management, prefill/decode scheduling), the
+//!   analytical A100 perf model, and the experiment drivers that
+//!   regenerate every table and figure of the paper.
 //!
-//! Python never runs on the request path: after `make artifacts` the
-//! binary is self-contained.
+//! Python never runs on the request path.  It is not even required to
+//! get started: the default **native backend** executes the
+//! prefill/decode/GEMM graphs in pure Rust — including the FastGEMM
+//! W4A8 path (SINT4toS8 x16 unpack + int8 GEMM + dequant epilogue) —
+//! and `runtime::synth` fabricates a full artifact set (checkpoint,
+//! corpus, calibration stats, manifest) when the python AOT pass has
+//! not been run.  The `pjrt` feature preserves the original
+//! AOT-HLO-on-PJRT path for environments with the XLA toolchain.
 //!
 //! ## Module map
 //!
 //! | module        | role |
 //! |---------------|------|
 //! | [`util`]      | logging, timing, stats, RNG, thread pool, mini prop-test |
-//! | [`tensor`]    | minimal ndarray (f32/i8/u8/i32) |
+//! | [`tensor`]    | minimal ndarray (f32/i8/u8/i32) + tiled f32 matmul |
 //! | [`linalg`]    | Cholesky / triangular solve / SPD inverse for GPTQ |
-//! | [`formats`]   | JSON + safetensors + config files (no serde available) |
+//! | [`formats`]   | JSON + safetensors + manifest/config files (no serde) |
 //! | [`quant`]     | the paper's quantization recipe + all baselines |
 //! | [`model`]     | LLaMA checkpoint container + canonical naming |
-//! | [`runtime`]   | PJRT client, artifact registry, executable cache |
+//! | [`runtime`]   | `ExecBackend` trait, native CPU + pjrt backends, `Value` host tensors, synthetic artifacts |
 //! | [`coordinator`]| serving engine: router, batcher, scheduler, KV manager |
 //! | [`server`]    | std::net HTTP/1.1 front-end |
 //! | [`perfmodel`] | analytical A100 roofline + engine comparators |

@@ -37,7 +37,8 @@ fn run(argv: &[String]) -> Result<()> {
         .clone();
     let artifacts = args.get_or("artifacts", "artifacts");
     match cmd.as_str() {
-        "info" => info(&artifacts),
+        "info" => info(&args, &artifacts),
+        "synth-artifacts" => synth_artifacts(&artifacts),
         "quantize" => quantize(&args, &artifacts),
         "eval" => eval(&args, &artifacts),
         "generate" => generate(&args, &artifacts),
@@ -54,9 +55,10 @@ fn run(argv: &[String]) -> Result<()> {
     }
 }
 
-fn info(artifacts: &str) -> Result<()> {
-    let rt = Runtime::new(artifacts)?;
+fn info(args: &Args, artifacts: &str) -> Result<()> {
+    let rt = Runtime::with_backend(artifacts, cli::parse_backend(args)?)?;
     println!("artifacts: {}", rt.manifest.dir.display());
+    println!("backend: {}", rt.backend_name());
     println!("group size: {}", rt.manifest.group_size);
     println!("\nmodels:");
     for (name, m) in &rt.manifest.models {
@@ -77,6 +79,20 @@ fn info(artifacts: &str) -> Result<()> {
     Ok(())
 }
 
+fn synth_artifacts(artifacts: &str) -> Result<()> {
+    odyssey::runtime::synth::ensure_artifacts(artifacts)?;
+    // report from the manifest alone — generation succeeded regardless
+    // of which execution backend this binary can construct
+    let manifest = odyssey::formats::config::Manifest::load(artifacts)?;
+    println!(
+        "artifacts ready at {} ({} models, {} graphs)",
+        manifest.dir.display(),
+        manifest.models.len(),
+        manifest.graphs.len()
+    );
+    Ok(())
+}
+
 fn quantize(args: &Args, artifacts: &str) -> Result<()> {
     let model_name = args.get_or("model", "tiny3m");
     let variant = args.get_or("variant", "w4a8_fast");
@@ -85,7 +101,7 @@ fn quantize(args: &Args, artifacts: &str) -> Result<()> {
         "out",
         &format!("{artifacts}/{model_name}_{variant}_quantized.safetensors"),
     );
-    let rt = Runtime::new(artifacts)?;
+    let rt = Runtime::with_backend(artifacts, cli::parse_backend(args)?)?;
     let ckpt = Checkpoint::load(&rt.manifest, &model_name)?;
     let calib = if recipe.use_gptq || recipe.use_lwc || recipe.use_smoothquant || recipe.use_awq
     {
@@ -118,8 +134,13 @@ fn eval(args: &Args, artifacts: &str) -> Result<()> {
     let model_name = args.get_or("model", "tiny3m");
     let variant = args.get_or("variant", "w4a8_fast");
     let recipe = cli::parse_recipe(&args.get_or("recipe", "odyssey"))?;
-    let mut ev =
-        exp::eval::Evaluator::new(artifacts, &model_name, &variant, &recipe)?;
+    let rt = Runtime::with_backend(artifacts, cli::parse_backend(args)?)?;
+    let mut ev = exp::eval::Evaluator::with_runtime(
+        rt,
+        &model_name,
+        &variant,
+        &recipe,
+    )?;
     let val = exp::eval::load_corpus(artifacts, "val")?;
     let tasks = exp::eval::Tasks::load(artifacts)?;
     let ppl = ev.perplexity(&val, 24)?;
@@ -146,6 +167,7 @@ fn generate(args: &Args, artifacts: &str) -> Result<()> {
         model: args.get_or("model", "tiny3m"),
         variant: args.get_or("variant", "w4a8_fast"),
         recipe: cli::parse_recipe(&args.get_or("recipe", "odyssey"))?,
+        backend: cli::parse_backend(args)?,
         ..Default::default()
     };
     let svc = EngineService::spawn(opts)?;
@@ -180,6 +202,7 @@ fn serve(args: &Args, artifacts: &str) -> Result<()> {
         model: args.get_or("model", "tiny3m"),
         variant: args.get_or("variant", "w4a8_fast"),
         recipe: cli::parse_recipe(&args.get_or("recipe", "odyssey"))?,
+        backend: cli::parse_backend(args)?,
         ..Default::default()
     };
     let svc = EngineService::spawn(opts)?;
@@ -191,5 +214,10 @@ fn bench_gemm(args: &Args, artifacts: &str) -> Result<()> {
     let variants = args.get_or("variants", "w4a8_fast,w8a8,fp");
     let vlist: Vec<&str> = variants.split(',').collect();
     let m = args.get_usize("m", 1)?;
-    exp::latency::measured_gemm_set(artifacts, &vlist, m)
+    exp::latency::measured_gemm_set(
+        artifacts,
+        &vlist,
+        m,
+        cli::parse_backend(args)?,
+    )
 }

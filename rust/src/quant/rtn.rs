@@ -16,6 +16,11 @@ pub fn rtn_per_channel(
 }
 
 /// Quantize with given per-channel scales.
+///
+/// Channels with a zero / non-finite scale (an all-zero channel when the
+/// caller computed scales without the usual epsilon) quantize to an
+/// explicit `q = 0` — `row[j] / 0.0` would otherwise produce NaN that
+/// only *happens* to saturate to 0 through the `as i8` cast.
 pub fn quantize_with_channel_scales(
     w: &Tensor<f32>,
     s: &[f32],
@@ -30,7 +35,11 @@ pub fn quantize_with_channel_scales(
         let row = w.row(i);
         let qrow = q.row_mut(i);
         for j in 0..n {
-            qrow[j] = (row[j] / s[j]).round().clamp(qmin, qmax) as i8;
+            qrow[j] = if s[j] > 0.0 && s[j].is_finite() {
+                (row[j] / s[j]).round().clamp(qmin, qmax) as i8
+            } else {
+                0
+            };
         }
     }
     q
@@ -52,7 +61,13 @@ pub fn rtn_per_group(
         let row = w.row(i);
         let qrow = q.row_mut(i);
         for j in 0..n {
-            qrow[j] = (row[j] / s.at2(g, j)).round().clamp(qmin, qmax) as i8;
+            let sj = s.at2(g, j);
+            qrow[j] = if sj > 0.0 && sj.is_finite() {
+                (row[j] / sj).round().clamp(qmin, qmax) as i8
+            } else {
+                // all-zero group: emit q = 0 instead of NaN-through-cast
+                0
+            };
         }
     }
     (q, s)
@@ -169,6 +184,40 @@ mod tests {
                 let deq = (u.at2(i, j) as i32 - z[j]) as f32 * s[j];
                 assert!((deq - w.at2(i, j)).abs() <= s[j] + 1e-6);
             }
+        }
+    }
+
+    #[test]
+    fn zero_scale_channel_quantizes_to_zero() {
+        // an all-zero channel with a literal 0.0 scale must produce
+        // q = 0 explicitly, not NaN saturated through the i8 cast
+        let w = Tensor::from_vec(&[2, 2], vec![0.0f32, 1.0, 0.0, -1.0]);
+        let q = quantize_with_channel_scales(&w, &[0.0, 0.5], 4);
+        assert_eq!(q.col(0), vec![0, 0]);
+        assert_eq!(q.col(1), vec![2, -2]);
+        // non-finite scales are treated the same way
+        let q2 = quantize_with_channel_scales(&w, &[f32::NAN, 0.5], 4);
+        assert_eq!(q2.col(0), vec![0, 0]);
+        // dequant of the zero channel is exactly zero
+        let deq = dequant_per_channel(&q, &[0.0, 0.5]);
+        assert_eq!(deq.col(0), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn zero_group_quantizes_to_zero() {
+        // one group all zeros: sym_per_group_scales floors the scale at
+        // its epsilon, but a hand-built zero scale must still be safe
+        let mut w = Tensor::randn(&[16, 2], 9);
+        for i in 0..8 {
+            w.set2(i, 0, 0.0);
+        }
+        let (q, s) = rtn_per_group(&w, 8, 4);
+        for i in 0..8 {
+            assert_eq!(q.at2(i, 0), 0, "zero group row {i}");
+        }
+        assert!(s.at2(0, 0) > 0.0, "scale stays positive (epsilon floor)");
+        for &v in q.data() {
+            assert!((-8..=7).contains(&(v as i32)));
         }
     }
 

@@ -1,122 +1,471 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//! Execution runtime: loads the artifact manifest and executes the
+//! prefill/decode/GEMM graphs through a pluggable backend.
 //!
-//! Wraps the `xla` crate: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! Executables are compiled lazily and cached by graph name.  Weights can
-//! be staged as device buffers once and reused across calls (`execute_b`)
-//! — the key hot-loop optimization (see EXPERIMENTS.md §Perf).
+//! Two [`ExecBackend`] implementations exist:
+//!
+//! * [`native`] — the default: interprets the graphs in pure Rust on the
+//!   host CPU (FastGEMM SINT4toS8 unpack, int8 accumulation, dequant
+//!   epilogues).  Needs no AOT artifacts beyond the manifest + weights,
+//!   so the whole serving stack runs on any machine.
+//! * [`pjrt`] (feature `pjrt`) — the original path: compiles the AOT
+//!   HLO-text artifacts on the PJRT CPU client and executes them there.
+//!
+//! Data crosses the backend boundary as host [`Value`]s (shape + typed
+//! buffer).  `Literal` remains as an alias for source compatibility with
+//! the PJRT-era call sites.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::formats::config::{Dtype, GraphInfo, Manifest, ParamSpec};
 use crate::formats::safetensors::{StDtype, StTensor};
 
-pub use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod synth;
 
-/// Convert a safetensors tensor into an XLA literal of the right shape.
-pub fn literal_from_st(t: &StTensor) -> Result<Literal> {
+// ---------------------------------------------------------------------
+// host values
+// ---------------------------------------------------------------------
+
+/// Element types a [`Value`] can hold (superset of the manifest dtypes —
+/// safetensors checkpoints may carry the extra ones).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    F64,
+    S8,
+    U8,
+    S32,
+    S64,
+    U16,
+}
+
+impl ElementType {
+    pub fn size(&self) -> usize {
+        match self {
+            ElementType::S8 | ElementType::U8 => 1,
+            ElementType::U16 => 2,
+            ElementType::F32 | ElementType::S32 => 4,
+            ElementType::F64 | ElementType::S64 => 8,
+        }
+    }
+}
+
+/// Typed storage behind a [`Value`].
+#[derive(Clone, Debug, PartialEq)]
+enum Buf {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I8(Vec<i8>),
+    U8(Vec<u8>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    U16(Vec<u16>),
+}
+
+/// A host tensor value: the argument/result currency of [`ExecBackend`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Value {
+    shape: Vec<usize>,
+    buf: Buf,
+}
+
+/// Kept as an alias so PJRT-era call sites keep reading naturally.
+pub type Literal = Value;
+
+/// Scalar types extractable from a [`Value`].
+pub trait Element: Copy {
+    const NAME: &'static str;
+    fn pull(v: &Value) -> Option<&[Self]>;
+}
+
+macro_rules! element_impl {
+    ($ty:ty, $name:literal, $variant:ident) => {
+        impl Element for $ty {
+            const NAME: &'static str = $name;
+            fn pull(v: &Value) -> Option<&[Self]> {
+                match &v.buf {
+                    Buf::$variant(d) => Some(d),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+element_impl!(f32, "f32", F32);
+element_impl!(f64, "f64", F64);
+element_impl!(i8, "i8", I8);
+element_impl!(u8, "u8", U8);
+element_impl!(i32, "i32", I32);
+element_impl!(i64, "i64", I64);
+element_impl!(u16, "u16", U16);
+
+macro_rules! value_ctor {
+    ($fn_name:ident, $ty:ty, $variant:ident) => {
+        /// Build a value from owned data (shape is length-checked).
+        pub fn $fn_name(shape: &[usize], data: Vec<$ty>) -> Value {
+            assert_eq!(
+                shape.iter().product::<usize>(),
+                data.len(),
+                "value shape {:?} does not match data length {}",
+                shape,
+                data.len()
+            );
+            Value { shape: shape.to_vec(), buf: Buf::$variant(data) }
+        }
+    };
+}
+
+impl Value {
+    value_ctor!(f32, f32, F32);
+    value_ctor!(f64, f64, F64);
+    value_ctor!(i8, i8, I8);
+    value_ctor!(u8, u8, U8);
+    value_ctor!(i32, i32, I32);
+    value_ctor!(i64, i64, I64);
+    value_ctor!(u16, u16, U16);
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dtype(&self) -> ElementType {
+        match &self.buf {
+            Buf::F32(_) => ElementType::F32,
+            Buf::F64(_) => ElementType::F64,
+            Buf::I8(_) => ElementType::S8,
+            Buf::U8(_) => ElementType::U8,
+            Buf::I32(_) => ElementType::S32,
+            Buf::I64(_) => ElementType::S64,
+            Buf::U16(_) => ElementType::U16,
+        }
+    }
+
+    /// Parse raw little-endian bytes (the PJRT-era constructor).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Value> {
+        let numel: usize = shape.iter().product();
+        if numel * ty.size() != data.len() {
+            bail!(
+                "value: shape {shape:?} of {ty:?} wants {} bytes, got {}",
+                numel * ty.size(),
+                data.len()
+            );
+        }
+        let buf = match ty {
+            ElementType::F32 => Buf::F32(
+                data.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            ElementType::F64 => Buf::F64(
+                data.chunks_exact(8)
+                    .map(|c| {
+                        f64::from_le_bytes([
+                            c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+                        ])
+                    })
+                    .collect(),
+            ),
+            ElementType::S8 => {
+                Buf::I8(data.iter().map(|&b| b as i8).collect())
+            }
+            ElementType::U8 => Buf::U8(data.to_vec()),
+            ElementType::S32 => Buf::I32(
+                data.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            ElementType::S64 => Buf::I64(
+                data.chunks_exact(8)
+                    .map(|c| {
+                        i64::from_le_bytes([
+                            c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+                        ])
+                    })
+                    .collect(),
+            ),
+            ElementType::U16 => Buf::U16(
+                data.chunks_exact(2)
+                    .map(|c| u16::from_le_bytes([c[0], c[1]]))
+                    .collect(),
+            ),
+        };
+        Ok(Value { shape: shape.to_vec(), buf })
+    }
+
+    /// Raw little-endian bytes of the buffer (for backends/serialization).
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.numel() * self.dtype().size());
+        match &self.buf {
+            Buf::F32(d) => {
+                d.iter().for_each(|v| out.extend(v.to_le_bytes()))
+            }
+            Buf::F64(d) => {
+                d.iter().for_each(|v| out.extend(v.to_le_bytes()))
+            }
+            Buf::I8(d) => d.iter().for_each(|&v| out.push(v as u8)),
+            Buf::U8(d) => out.extend_from_slice(d),
+            Buf::I32(d) => {
+                d.iter().for_each(|v| out.extend(v.to_le_bytes()))
+            }
+            Buf::I64(d) => {
+                d.iter().for_each(|v| out.extend(v.to_le_bytes()))
+            }
+            Buf::U16(d) => {
+                d.iter().for_each(|v| out.extend(v.to_le_bytes()))
+            }
+        }
+        out
+    }
+
+    /// Copy out as a typed vector (errors on dtype mismatch).
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        T::pull(self)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| {
+                anyhow!("value holds {:?}, asked for {}", self.dtype(),
+                        T::NAME)
+            })
+    }
+
+    /// Borrow the buffer as a typed slice (errors on dtype mismatch).
+    pub fn as_slice<T: Element>(&self) -> Result<&[T]> {
+        T::pull(self).ok_or_else(|| {
+            anyhow!("value holds {:?}, asked for {}", self.dtype(), T::NAME)
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// constructors shared by the engine / evaluators / benches
+// ---------------------------------------------------------------------
+
+/// Convert a safetensors tensor into a [`Value`] of the right shape.
+pub fn literal_from_st(t: &StTensor) -> Result<Value> {
     let ty = match t.dtype {
-        StDtype::F32 => xla::ElementType::F32,
-        StDtype::I8 => xla::ElementType::S8,
-        StDtype::U8 => xla::ElementType::U8,
-        StDtype::I32 => xla::ElementType::S32,
-        StDtype::I64 => xla::ElementType::S64,
-        StDtype::U16 => xla::ElementType::U16,
-        StDtype::F64 => xla::ElementType::F64,
+        StDtype::F32 => ElementType::F32,
+        StDtype::I8 => ElementType::S8,
+        StDtype::U8 => ElementType::U8,
+        StDtype::I32 => ElementType::S32,
+        StDtype::I64 => ElementType::S64,
+        StDtype::U16 => ElementType::U16,
+        StDtype::F64 => ElementType::F64,
     };
-    Literal::create_from_shape_and_untyped_data(ty, &t.shape, &t.bytes)
-        .map_err(|e| anyhow!("literal: {e:?}"))
+    Value::create_from_shape_and_untyped_data(ty, &t.shape, &t.bytes)
 }
 
-/// f32 literal from raw values.
-pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
-    let mut bytes = Vec::with_capacity(data.len() * 4);
-    for v in data {
-        bytes.extend_from_slice(&v.to_le_bytes());
+fn check_shape(shape: &[usize], len: usize) -> Result<()> {
+    if shape.iter().product::<usize>() != len {
+        bail!("value shape {shape:?} does not match data length {len}");
     }
-    Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32,
-        shape,
-        &bytes,
-    )
-    .map_err(|e| anyhow!("literal_f32: {e:?}"))
+    Ok(())
 }
 
-/// i32 literal from raw values.
-pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
-    let mut bytes = Vec::with_capacity(data.len() * 4);
-    for v in data {
-        bytes.extend_from_slice(&v.to_le_bytes());
+/// f32 value from raw data (errors on shape/length mismatch).
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<Value> {
+    check_shape(shape, data.len())?;
+    Ok(Value::f32(shape, data.to_vec()))
+}
+
+/// i32 value from raw data.
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<Value> {
+    check_shape(shape, data.len())?;
+    Ok(Value::i32(shape, data.to_vec()))
+}
+
+/// i8 value from raw data.
+pub fn literal_i8(shape: &[usize], data: &[i8]) -> Result<Value> {
+    check_shape(shape, data.len())?;
+    Ok(Value::i8(shape, data.to_vec()))
+}
+
+/// u8 value from raw data.
+pub fn literal_u8(shape: &[usize], data: &[u8]) -> Result<Value> {
+    check_shape(shape, data.len())?;
+    Ok(Value::u8(shape, data.to_vec()))
+}
+
+/// Zero-filled value matching a manifest param spec.
+pub fn literal_zeros(spec: &ParamSpec) -> Result<Value> {
+    let n = spec.numel();
+    Ok(match spec.dtype {
+        Dtype::F32 => Value::f32(&spec.shape, vec![0f32; n]),
+        Dtype::S8 => Value::i8(&spec.shape, vec![0i8; n]),
+        Dtype::U8 => Value::u8(&spec.shape, vec![0u8; n]),
+        Dtype::S32 => Value::i32(&spec.shape, vec![0i32; n]),
+    })
+}
+
+/// Read an f32 value into a Vec (length checked).
+pub fn literal_to_f32(l: &Value, expect_len: usize) -> Result<Vec<f32>> {
+    let v = l.to_vec::<f32>()?;
+    if v.len() != expect_len {
+        bail!("expected {} f32s, got {}", expect_len, v.len());
     }
-    Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::S32,
-        shape,
-        &bytes,
-    )
-    .map_err(|e| anyhow!("literal_i32: {e:?}"))
+    Ok(v)
 }
 
-/// Zero-filled literal matching a manifest param spec.
-pub fn literal_zeros(spec: &ParamSpec) -> Result<Literal> {
-    let n: usize = spec.numel();
-    let bytes = vec![0u8; n * spec.dtype.size()];
-    let ty = match spec.dtype {
-        Dtype::F32 => xla::ElementType::F32,
-        Dtype::S8 => xla::ElementType::S8,
-        Dtype::U8 => xla::ElementType::U8,
-        Dtype::S32 => xla::ElementType::S32,
-    };
-    Literal::create_from_shape_and_untyped_data(ty, &spec.shape, &bytes)
-        .map_err(|e| anyhow!("literal_zeros: {e:?}"))
+// ---------------------------------------------------------------------
+// backends
+// ---------------------------------------------------------------------
+
+/// A graph execution engine.  Backends are driven exclusively through
+/// the [`Runtime`] facade: `prepare` is called once per graph before the
+/// first `execute` (compile-and-cache for PJRT, validate for native).
+pub trait ExecBackend {
+    /// Short identifier ("native" / "pjrt") for logs and stats.
+    fn name(&self) -> &'static str;
+
+    /// Make a graph executable (compile, validate, warm caches).
+    fn prepare(&mut self, manifest: &Manifest, info: &GraphInfo)
+        -> Result<()>;
+
+    /// Run a prepared graph on host values; returns the flattened output
+    /// list in manifest output order.
+    fn execute(
+        &mut self,
+        manifest: &Manifest,
+        info: &GraphInfo,
+        args: &[&Value],
+    ) -> Result<Vec<Value>>;
 }
 
-/// The runtime: PJRT client + manifest + compiled-executable cache.
+/// Which [`ExecBackend`] to construct.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust CPU interpreter (always available).
+    #[default]
+    Native,
+    /// PJRT/XLA over the AOT HLO artifacts (requires feature `pjrt`).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "native" | "cpu" => BackendKind::Native,
+            "pjrt" | "xla" => BackendKind::Pjrt,
+            other => bail!("unknown backend '{other}' (native | pjrt)"),
+        })
+    }
+
+    /// Environment-derived default: `ODYSSEY_BACKEND` when set to a
+    /// valid name, else native.  Infallible (usable in `Default`), but
+    /// a set-and-invalid value is loudly logged rather than silently
+    /// ignored; [`Runtime::new`] parses the same variable strictly.
+    pub fn from_env() -> Self {
+        match std::env::var("ODYSSEY_BACKEND") {
+            Ok(v) => Self::parse(&v).unwrap_or_else(|_| {
+                // warn once — Default::default() may evaluate this on
+                // paths that then override the backend explicitly
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| {
+                    crate::util::log::error(&format!(
+                        "ignoring invalid ODYSSEY_BACKEND='{v}' \
+                         (expected native | pjrt); using native"
+                    ));
+                });
+                BackendKind::Native
+            }),
+            Err(_) => BackendKind::Native,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+fn make_backend(kind: BackendKind) -> Result<Box<dyn ExecBackend>> {
+    match kind {
+        BackendKind::Native => {
+            Ok(Box::new(native::NativeBackend::new()))
+        }
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => Ok(Box::new(pjrt::PjrtBackend::new()?)),
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Pjrt => bail!(
+            "pjrt backend requested but this binary was built without \
+             the 'pjrt' feature (rebuild with --features pjrt)"
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------
+// the runtime facade
+// ---------------------------------------------------------------------
+
+/// The runtime: manifest + a pluggable execution backend.
 ///
 /// NOT `Sync` — owned by the engine thread; other threads talk to the
 /// engine over channels (see `coordinator`).
 pub struct Runtime {
-    pub client: PjRtClient,
     pub manifest: Manifest,
-    executables: BTreeMap<String, PjRtLoadedExecutable>,
+    backend: Box<dyn ExecBackend>,
+    prepared: BTreeSet<String>,
     pub compile_times: BTreeMap<String, f64>,
 }
 
 impl Runtime {
+    /// Open with the default backend: `ODYSSEY_BACKEND` env override
+    /// ("native" / "pjrt"), else the native CPU backend.
     pub fn new(artifacts_dir: &str) -> Result<Self> {
+        let kind = match std::env::var("ODYSSEY_BACKEND") {
+            Ok(v) => BackendKind::parse(&v)?,
+            Err(_) => BackendKind::default(),
+        };
+        Self::with_backend(artifacts_dir, kind)
+    }
+
+    /// Open with an explicit backend.
+    pub fn with_backend(
+        artifacts_dir: &str,
+        kind: BackendKind,
+    ) -> Result<Self> {
         let manifest = Manifest::load(artifacts_dir)?;
-        let client =
-            PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
         Ok(Runtime {
-            client,
             manifest,
-            executables: BTreeMap::new(),
+            backend: make_backend(kind)?,
+            prepared: BTreeSet::new(),
             compile_times: BTreeMap::new(),
         })
     }
 
-    /// Compile (or fetch cached) the named graph.
-    pub fn executable(&mut self, name: &str) -> Result<&PjRtLoadedExecutable> {
-        if !self.executables.contains_key(name) {
+    /// Backend identifier ("native" / "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Prepare (or fetch cached) the named graph.
+    pub fn executable(&mut self, name: &str) -> Result<()> {
+        if !self.prepared.contains(name) {
             let info = self.manifest.graph(name)?.clone();
-            let path = self.manifest.hlo_path(&info);
             let t0 = std::time::Instant::now();
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-            )
-            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.backend.prepare(&self.manifest, &info)?;
             let dt = t0.elapsed().as_secs_f64();
-            crate::util::log::debug(&format!("compiled {name} in {dt:.2}s"));
+            crate::util::log::debug(&format!(
+                "prepared {name} on {} in {dt:.3}s",
+                self.backend.name()
+            ));
             self.compile_times.insert(name.to_string(), dt);
-            self.executables.insert(name.to_string(), exe);
+            self.prepared.insert(name.to_string());
         }
-        Ok(&self.executables[name])
+        Ok(())
     }
 
     /// Graph metadata.
@@ -124,41 +473,29 @@ impl Runtime {
         Ok(self.manifest.graph(name)?.clone())
     }
 
-    /// Execute with host literals; returns the flattened output literals
-    /// (the AOT graphs return one tuple).
+    /// Execute with owned values; returns the flattened outputs.
     pub fn run_literals(
         &mut self,
         name: &str,
-        args: &[Literal],
-    ) -> Result<Vec<Literal>> {
-        let info = self.manifest.graph(name)?;
-        if args.len() != info.params.len() {
-            bail!(
-                "{name}: expected {} args, got {}",
-                info.params.len(),
-                args.len()
-            );
-        }
-        let exe = self.executable(name)?;
-        let out = exe
-            .execute::<Literal>(args)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let result = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
-        result
-            .to_tuple()
-            .map_err(|e| anyhow!("untuple {name}: {e:?}"))
+        args: &[Value],
+    ) -> Result<Vec<Value>> {
+        let refs: Vec<&Value> = args.iter().collect();
+        self.run_literal_refs(name, &refs)
     }
 
-    /// Execute with BORROWED literals (no clones — the hot-loop path:
-    /// weight literals are built once and passed by reference each step).
+    /// Execute with BORROWED values — the hot-loop path: the facade
+    /// passes weight values by reference each step without cloning.
+    /// (Backends may still copy internally; see the ROADMAP item on
+    /// backend-level weight staging.)
     pub fn run_literal_refs(
         &mut self,
         name: &str,
-        args: &[&Literal],
-    ) -> Result<Vec<Literal>> {
-        let info = self.manifest.graph(name)?;
+        args: &[&Value],
+    ) -> Result<Vec<Value>> {
+        self.executable(name)?;
+        // borrow (not clone) the graph info: this runs per decode step
+        let Runtime { manifest, backend, .. } = self;
+        let info = manifest.graph(name)?;
         if args.len() != info.params.len() {
             bail!(
                 "{name}: expected {} args, got {}",
@@ -166,73 +503,12 @@ impl Runtime {
                 args.len()
             );
         }
-        let exe = self.executable(name)?;
-        let out = exe
-            .execute::<&Literal>(args)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let result = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
-        result
-            .to_tuple()
-            .map_err(|e| anyhow!("untuple {name}: {e:?}"))
-    }
-
-    /// Stage host literals as device buffers (for weight reuse).
-    pub fn stage(&self, lits: &[Literal]) -> Result<Vec<PjRtBuffer>> {
-        lits.iter()
-            .map(|l| {
-                self.client
-                    .buffer_from_host_literal(None, l)
-                    .map_err(|e| anyhow!("stage: {e:?}"))
-            })
-            .collect()
-    }
-
-    /// Execute with pre-staged device buffers; returns raw output buffers
-    /// (still on device — chain them into the next call without copies).
-    pub fn run_buffers(
-        &mut self,
-        name: &str,
-        args: &[&PjRtBuffer],
-    ) -> Result<Vec<PjRtBuffer>> {
-        let info = self.manifest.graph(name)?;
-        if args.len() != info.params.len() {
-            bail!(
-                "{name}: expected {} args, got {}",
-                info.params.len(),
-                args.len()
-            );
-        }
-        let exe = self.executable(name)?;
-        let mut out = exe
-            .execute_b::<&PjRtBuffer>(args)
-            .map_err(|e| anyhow!("execute_b {name}: {e:?}"))?;
-        Ok(out.remove(0))
-    }
-
-    /// Copy one output buffer back to the host as a tuple of literals.
-    pub fn fetch(&self, buf: &PjRtBuffer) -> Result<Vec<Literal>> {
-        let lit = buf
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+        backend.execute(manifest, info, args)
     }
 
     pub fn loaded_graphs(&self) -> usize {
-        self.executables.len()
+        self.prepared.len()
     }
-}
-
-/// Read a f32 literal into a Vec (length checked).
-pub fn literal_to_f32(l: &Literal, expect_len: usize) -> Result<Vec<f32>> {
-    let v = l
-        .to_vec::<f32>()
-        .map_err(|e| anyhow!("literal_to_f32: {e:?}"))?;
-    if v.len() != expect_len {
-        bail!("expected {} f32s, got {}", expect_len, v.len());
-    }
-    Ok(v)
 }
 
 #[cfg(test)]
@@ -248,6 +524,7 @@ mod tests {
         ));
         let lit = literal_from_st(&t).unwrap();
         assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, -2.0, 3.5, 0.25]);
+        assert_eq!(lit.shape(), &[2, 2]);
     }
 
     #[test]
@@ -273,5 +550,34 @@ mod tests {
         })
         .unwrap();
         assert_eq!(z.to_vec::<f32>().unwrap(), vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let l = literal_f32(&[2], &[1.0, 2.0]).unwrap();
+        assert!(l.to_vec::<i8>().is_err());
+        assert!(l.as_slice::<i32>().is_err());
+    }
+
+    #[test]
+    fn untyped_bytes_roundtrip() {
+        let l = literal_i32(&[3], &[-1, 0, 7]).unwrap();
+        let bytes = l.to_le_bytes();
+        let back = Value::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &[3],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(back, l);
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("native").unwrap(),
+                   BackendKind::Native);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("gpu").is_err());
+        assert_eq!(BackendKind::default(), BackendKind::Native);
     }
 }

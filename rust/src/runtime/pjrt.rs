@@ -1,0 +1,172 @@
+//! PJRT/XLA execution backend (feature `pjrt`): loads the AOT HLO-text
+//! artifacts produced by `python -m compile.aot` and executes them on
+//! the PJRT CPU client.  Executables are compiled lazily and cached by
+//! graph name — the original (pre-refactor) runtime, now behind
+//! [`ExecBackend`].
+//!
+//! The default build links the offline `xla` stub (see
+//! `third_party/xla-stub`), which type-checks this backend but errors at
+//! execute time; swap in the real `xla` crate to run artifacts.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::formats::config::{Dtype, GraphInfo, Manifest, ParamSpec};
+
+use super::{ExecBackend, ElementType, Value};
+
+fn xla_elem(ty: ElementType) -> xla::ElementType {
+    match ty {
+        ElementType::F32 => xla::ElementType::F32,
+        ElementType::F64 => xla::ElementType::F64,
+        ElementType::S8 => xla::ElementType::S8,
+        ElementType::U8 => xla::ElementType::U8,
+        ElementType::S32 => xla::ElementType::S32,
+        ElementType::S64 => xla::ElementType::S64,
+        ElementType::U16 => xla::ElementType::U16,
+    }
+}
+
+fn literal_of(v: &Value) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla_elem(v.dtype()),
+        v.shape(),
+        &v.to_le_bytes(),
+    )
+    .map_err(|e| anyhow!("literal: {e:?}"))
+}
+
+fn value_of(lit: &xla::Literal, spec: &ParamSpec) -> Result<Value> {
+    fn sized<T>(spec: &ParamSpec, v: Vec<T>) -> Result<Vec<T>> {
+        // checked, not asserted: a stale manifest whose output spec
+        // disagrees with the artifact must surface as Err, not a panic
+        // on the engine thread
+        if v.len() != spec.numel() {
+            return Err(anyhow!(
+                "output {}: artifact returned {} elements, manifest \
+                 shape {:?} wants {}",
+                spec.name,
+                v.len(),
+                spec.shape,
+                spec.numel()
+            ));
+        }
+        Ok(v)
+    }
+    Ok(match spec.dtype {
+        Dtype::F32 => Value::f32(
+            &spec.shape,
+            sized(
+                spec,
+                lit.to_vec::<f32>()
+                    .map_err(|e| anyhow!("fetch: {e:?}"))?,
+            )?,
+        ),
+        Dtype::S8 => Value::i8(
+            &spec.shape,
+            sized(
+                spec,
+                lit.to_vec::<i8>()
+                    .map_err(|e| anyhow!("fetch: {e:?}"))?,
+            )?,
+        ),
+        Dtype::U8 => Value::u8(
+            &spec.shape,
+            sized(
+                spec,
+                lit.to_vec::<u8>()
+                    .map_err(|e| anyhow!("fetch: {e:?}"))?,
+            )?,
+        ),
+        Dtype::S32 => Value::i32(
+            &spec.shape,
+            sized(
+                spec,
+                lit.to_vec::<i32>()
+                    .map_err(|e| anyhow!("fetch: {e:?}"))?,
+            )?,
+        ),
+    })
+}
+
+/// PJRT client + compiled-executable cache.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(PjrtBackend { client, executables: BTreeMap::new() })
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn prepare(
+        &mut self,
+        manifest: &Manifest,
+        info: &GraphInfo,
+    ) -> Result<()> {
+        if self.executables.contains_key(&info.name) {
+            return Ok(());
+        }
+        let path = manifest.hlo_path(info);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", info.name))?;
+        self.executables.insert(info.name.clone(), exe);
+        Ok(())
+    }
+
+    fn execute(
+        &mut self,
+        _manifest: &Manifest,
+        info: &GraphInfo,
+        args: &[&Value],
+    ) -> Result<Vec<Value>> {
+        let exe = self
+            .executables
+            .get(&info.name)
+            .ok_or_else(|| anyhow!("{} not prepared", info.name))?;
+        let lits = args
+            .iter()
+            .map(|v| literal_of(v))
+            .collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        let out = exe
+            .execute::<&xla::Literal>(&refs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", info.name))?;
+        let result = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e:?}", info.name))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {}: {e:?}", info.name))?;
+        if parts.len() != info.outputs.len() {
+            return Err(anyhow!(
+                "{}: graph returned {} outputs, manifest lists {}",
+                info.name,
+                parts.len(),
+                info.outputs.len()
+            ));
+        }
+        parts
+            .iter()
+            .zip(info.outputs.iter())
+            .map(|(lit, spec)| value_of(lit, spec))
+            .collect()
+    }
+}

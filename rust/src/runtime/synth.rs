@@ -1,0 +1,699 @@
+//! Synthetic artifacts: a pure-Rust stand-in for `python -m compile.aot`.
+//!
+//! A clean checkout has no `artifacts/` directory (the python AOT pass
+//! needs JAX + training time).  This module fabricates a complete,
+//! manifest-compatible artifact set for the `tiny3m` model so the native
+//! backend, the quantizer, the serving engine, and the test suite all
+//! run end-to-end offline:
+//!
+//! * `tiny3m.safetensors` — a deterministic random-init checkpoint
+//!   (LLaMA layout, canonical weight names).
+//! * `corpus_train.bin` / `corpus_val.bin` + `tasks.json` — a synthetic
+//!   token stream and eval task file for the evaluators.
+//! * `hessians_tiny3m.safetensors` — REAL calibration statistics
+//!   (absmax / absmean / Hessians / activation samples per tap),
+//!   collected by running the native fp prefill over the corpus.
+//! * `manifest.json` + placeholder `*.hlo.txt` files — every serving
+//!   graph (6 variants x prefill/decode x batch buckets) and the cpu
+//!   GEMM shape set.  The native backend interprets graphs from the
+//!   manifest alone; the HLO text files only matter to the pjrt
+//!   backend, which requires the real python artifacts.
+//!
+//! Weights are untrained (the synthetic "model" speaks noise), which is
+//! exactly what the engine/runtime tests need: serving, batching and
+//! numerics are exercised; text quality is not.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::formats::config::ModelInfo;
+use crate::formats::json::Json;
+use crate::formats::safetensors::{SafeTensors, StTensor};
+use crate::model::{weight_names, LAYER_MATRICES};
+use crate::tensor::Tensor;
+use crate::util::XorShift;
+
+use super::native::{forward_prefill, TapSink};
+use super::Value;
+
+/// Mirror of `configs.py` (tiny3m + export buckets).
+const GROUP_SIZE: usize = 64;
+const PREFILL_SEQ: usize = 128;
+const PREFILL_BATCHES: [usize; 2] = [1, 4];
+const DECODE_BATCHES: [usize; 2] = [1, 4];
+const VARIANTS: [&str; 6] =
+    ["fp", "w8a8", "w4a8_fast", "w4a8_group", "w4a8_asym", "w4a16"];
+const GEMM_VARIANTS: [&str; 7] = [
+    "fp", "w8a8", "w4a8_fast", "w4a8_unfused", "w4a8_group", "w4a8_asym",
+    "w4a16",
+];
+const CPU_GEMM_NK: [(usize, usize); 4] =
+    [(1024, 1024), (256, 2048), (2816, 1024), (1280, 1280)];
+const GEMM_MS: [usize; 2] = [1024, 1];
+
+const TRAIN_TOKENS: usize = 65536;
+const VAL_TOKENS: usize = 16384;
+const SEED: u64 = 20260727;
+
+fn tiny3m() -> ModelInfo {
+    let (d, l, h, ff, v, smax) = (256, 4, 8, 768, 512, 256);
+    ModelInfo {
+        name: "tiny3m".into(),
+        d_model: d,
+        n_layers: l,
+        n_heads: h,
+        d_ff: ff,
+        vocab: v,
+        max_seq: smax,
+        head_dim: d / h,
+        weights_file: "tiny3m.safetensors".into(),
+        hessians_file: "hessians_tiny3m.safetensors".into(),
+        n_params: l * (4 * d * d + 3 * d * ff + 2 * d) + 2 * v * d + d,
+    }
+}
+
+/// (K, N) of a quantizable/embedding matrix by canonical leaf name.
+fn matrix_shape(info: &ModelInfo, leaf: &str) -> (usize, usize) {
+    let (d, f, v) = (info.d_model, info.d_ff, info.vocab);
+    match leaf {
+        "wq" | "wk" | "wv" | "wo" => (d, d),
+        "w_gate" | "w_up" => (d, f),
+        "w_down" => (f, d),
+        "embed" => (v, d),
+        "lm_head" => (d, v),
+        other => panic!("not a matrix: {other}"),
+    }
+}
+
+/// Ensure `dir` holds a complete artifact set; generates the synthetic
+/// one if `manifest.json` is absent.  Safe to call concurrently from
+/// test threads (serialized in-process; cross-process installs go
+/// through a tmp-dir + atomic rename).
+pub fn ensure_artifacts(dir: &str) -> Result<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    let _guard = LOCK.get_or_init(|| Mutex::new(())).lock().unwrap();
+
+    let root = Path::new(dir);
+    if root.join("manifest.json").exists() {
+        return Ok(());
+    }
+    if root.exists() {
+        // Partial/foreign directory: fill it in place (manifest last).
+        // The in-process mutex above does not cover OTHER processes
+        // (parallel test binaries), so take an exclusive lock file;
+        // a lock older than 2 minutes is treated as a crashed writer.
+        let lockpath = root.join(".synth.lock");
+        loop {
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&lockpath)
+            {
+                Ok(_) => break,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::AlreadyExists =>
+                {
+                    if root.join("manifest.json").exists() {
+                        return Ok(()); // the lock holder finished
+                    }
+                    // staleness is judged by the lock FILE's age, not
+                    // this waiter's wait time: a freshly re-created
+                    // lock (live recoverer) is young and survives,
+                    // only a crashed writer's old lock gets removed
+                    let stale = std::fs::metadata(&lockpath)
+                        .and_then(|m| m.modified())
+                        .ok()
+                        .and_then(|t| t.elapsed().ok())
+                        .map(|age| age.as_secs() > 120)
+                        .unwrap_or(false);
+                    if stale {
+                        let _ = std::fs::remove_file(&lockpath);
+                    }
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(100),
+                    );
+                }
+                // permanent failure (path is a file, read-only fs...):
+                // surface it instead of spinning forever
+                Err(e) => {
+                    return Err(anyhow!(
+                        "cannot lock {}: {e}",
+                        lockpath.display()
+                    ));
+                }
+            }
+        }
+        let res = generate_into(root);
+        let _ = std::fs::remove_file(&lockpath);
+        return res;
+    }
+    let tmp = PathBuf::from(format!("{dir}.tmp-{}", std::process::id()));
+    if tmp.exists() {
+        std::fs::remove_dir_all(&tmp)?;
+    }
+    std::fs::create_dir_all(&tmp)?;
+    generate_into(&tmp)?;
+    match std::fs::rename(&tmp, root) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            if root.join("manifest.json").exists() {
+                // another process won the race
+                let _ = std::fs::remove_dir_all(&tmp);
+                Ok(())
+            } else {
+                Err(anyhow!("installing synthetic artifacts: {e}"))
+            }
+        }
+    }
+}
+
+fn generate_into(dir: &Path) -> Result<()> {
+    let info = tiny3m();
+    crate::util::log::info(&format!(
+        "synthesizing artifacts for {} into {} (no python AOT pass found)",
+        info.name,
+        dir.display()
+    ));
+    let train = write_corpus(dir)?;
+    write_tasks(dir, &info)?;
+    let weights = write_checkpoint(dir, &info)?;
+    write_calibration(dir, &info, &weights, &train)?;
+    write_graphs_and_manifest(dir, &info)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// corpus + tasks
+// ---------------------------------------------------------------------
+
+/// Token stream with light bigram structure over vocab [3, 503).
+fn gen_tokens(n: usize, seed: u64) -> Vec<u16> {
+    let mut rng = XorShift::new(seed);
+    let mut prev: u64 = 7;
+    (0..n)
+        .map(|_| {
+            // half markov, half noise: enough structure for perplexity
+            // to be finite and stable, no training required
+            let nxt = if rng.next_u64() % 2 == 0 {
+                prev.wrapping_mul(31).wrapping_add(17) % 500
+            } else {
+                rng.next_u64() % 500
+            };
+            prev = nxt;
+            3 + nxt as u16
+        })
+        .collect()
+}
+
+fn write_corpus(dir: &Path) -> Result<Vec<u16>> {
+    let train = gen_tokens(TRAIN_TOKENS, SEED);
+    let val = gen_tokens(VAL_TOKENS, SEED ^ 0x5A5A);
+    for (name, toks) in
+        [("corpus_train.bin", &train), ("corpus_val.bin", &val)]
+    {
+        let mut bytes = Vec::with_capacity(toks.len() * 2);
+        for t in toks.iter() {
+            bytes.extend_from_slice(&t.to_le_bytes());
+        }
+        std::fs::write(dir.join(name), bytes)
+            .with_context(|| format!("writing {name}"))?;
+    }
+    Ok(train)
+}
+
+fn write_tasks(dir: &Path, info: &ModelInfo) -> Result<()> {
+    let mut rng = XorShift::new(SEED ^ 0xBEEF);
+    let noun_lo = 100i64;
+    let noun_hi = 200i64;
+    let mut cloze = Vec::new();
+    for _ in 0..16 {
+        let ctx: Vec<Json> = (0..12)
+            .map(|_| Json::Num(rng.range(3, info.vocab as i64 - 8) as f64))
+            .collect();
+        cloze.push(Json::obj(vec![
+            ("ctx", Json::Arr(ctx)),
+            ("target", Json::Num(rng.range(noun_lo, noun_hi) as f64)),
+        ]));
+    }
+    let mut mcq = Vec::new();
+    for _ in 0..12 {
+        let ctx: Vec<Json> = (0..10)
+            .map(|_| Json::Num(rng.range(3, info.vocab as i64 - 8) as f64))
+            .collect();
+        let cands: Vec<Json> = (0..4)
+            .map(|c| Json::Num((noun_lo + 7 * c + rng.range(0, 6)) as f64))
+            .collect();
+        mcq.push(Json::obj(vec![
+            ("ctx", Json::Arr(ctx)),
+            ("candidates", Json::Arr(cands)),
+            ("answer", Json::Num(rng.range(0, 4) as f64)),
+        ]));
+    }
+    // fewshot mirrors mcq with longer contexts; must be non-empty or
+    // the tab8 experiment's accuracy slices divide by zero
+    let mut fewshot = Vec::new();
+    for _ in 0..8 {
+        let ctx: Vec<Json> = (0..24)
+            .map(|_| Json::Num(rng.range(3, info.vocab as i64 - 8) as f64))
+            .collect();
+        let cands: Vec<Json> = (0..4)
+            .map(|c| Json::Num((noun_lo + 11 * c + rng.range(0, 9)) as f64))
+            .collect();
+        fewshot.push(Json::obj(vec![
+            ("ctx", Json::Arr(ctx)),
+            ("candidates", Json::Arr(cands)),
+            ("answer", Json::Num(rng.range(0, 4) as f64)),
+        ]));
+    }
+    let tasks = Json::obj(vec![
+        ("cloze", Json::Arr(cloze)),
+        ("mcq", Json::Arr(mcq)),
+        ("fewshot", Json::Arr(fewshot)),
+        (
+            "noun_range",
+            Json::Arr(vec![
+                Json::Num(noun_lo as f64),
+                Json::Num(noun_hi as f64),
+            ]),
+        ),
+    ]);
+    std::fs::write(dir.join("tasks.json"), tasks.emit())
+        .context("writing tasks.json")?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// checkpoint + calibration
+// ---------------------------------------------------------------------
+
+fn write_checkpoint(
+    dir: &Path,
+    info: &ModelInfo,
+) -> Result<BTreeMap<String, Tensor<f32>>> {
+    let mut weights: BTreeMap<String, Tensor<f32>> = BTreeMap::new();
+    let mut seed = SEED ^ 0xC0FFEE;
+    for name in weight_names(info) {
+        let leaf = name.rsplit('.').next().unwrap();
+        let t = match leaf {
+            "attn_norm" | "mlp_norm" | "norm_f" => {
+                Tensor::full(&[info.d_model], 1.0f32)
+            }
+            "embed" => {
+                let (k, n) = matrix_shape(info, leaf);
+                Tensor::randn(&[k, n], seed).map(|v| v * 0.02)
+            }
+            _ => {
+                let (k, n) = matrix_shape(info, leaf);
+                let inv = 1.0 / (k as f32).sqrt();
+                Tensor::randn(&[k, n], seed).map(|v| v * inv)
+            }
+        };
+        seed = seed.wrapping_add(1);
+        weights.insert(name, t);
+    }
+    let mut st = SafeTensors::new();
+    for (name, t) in &weights {
+        st.insert(name, StTensor::from_f32(t));
+    }
+    st.save(dir.join(&info.weights_file))
+        .context("writing synthetic checkpoint")?;
+    Ok(weights)
+}
+
+fn write_calibration(
+    dir: &Path,
+    info: &ModelInfo,
+    weights: &BTreeMap<String, Tensor<f32>>,
+    train: &[u16],
+) -> Result<()> {
+    // flat fp weight args in canonical order
+    let flat: Vec<Value> = weight_names(info)
+        .iter()
+        .map(|name| {
+            let t = &weights[name];
+            Value::f32(t.shape(), t.data().to_vec())
+        })
+        .collect();
+
+    let (b, s) = (4usize, PREFILL_SEQ);
+    let mut taps = TapSink::new(64);
+    for call in 0..2usize {
+        let mut tokens = vec![0i32; b * s];
+        for (row, tok) in tokens.chunks_mut(s).enumerate() {
+            let start = (call * b + row) * s;
+            for (i, t) in tok.iter_mut().enumerate() {
+                *t = train[start + i] as i32;
+            }
+        }
+        let tok_v = Value::i32(&[b, s], tokens);
+        let len_v = Value::i32(&[b], vec![s as i32; b]);
+        let mut args: Vec<&Value> = vec![&tok_v, &len_v];
+        args.extend(flat.iter());
+        forward_prefill(info, "fp", GROUP_SIZE, b, s, &args,
+                        Some(&mut taps))?;
+    }
+
+    let mut st = SafeTensors::new();
+    for (tap, rows) in &taps.rows {
+        let rows_f = *rows as f32;
+        let absmax = &taps.absmax[tap];
+        let k = absmax.len();
+        st.insert(
+            &format!("{tap}.absmax"),
+            StTensor::from_f32(&Tensor::from_vec(&[k], absmax.clone())),
+        );
+        let absmean: Vec<f32> =
+            taps.abssum[tap].iter().map(|v| v / rows_f).collect();
+        st.insert(
+            &format!("{tap}.absmean"),
+            StTensor::from_f32(&Tensor::from_vec(&[k], absmean)),
+        );
+        // H = 2/T * X^T X — the GPTQ convention used by the quantizer
+        let h = taps.xtx[tap].map(|v| v * 2.0 / rows_f);
+        st.insert(&format!("{tap}.hessian"), StTensor::from_f32(&h));
+        let srows = taps.sample_rows[tap];
+        st.insert(
+            &format!("{tap}.sample"),
+            StTensor::from_f32(&Tensor::from_vec(
+                &[srows, k],
+                taps.samples[tap].clone(),
+            )),
+        );
+    }
+    st.save(dir.join(&info.hessians_file))
+        .context("writing synthetic calibration")?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// manifest + placeholder graph files
+// ---------------------------------------------------------------------
+
+fn jnum(n: usize) -> Json {
+    Json::Num(n as f64)
+}
+
+fn jstr(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+fn jshape(shape: &[usize]) -> Json {
+    Json::Arr(shape.iter().map(|&x| jnum(x)).collect())
+}
+
+fn jparam(name: &str, shape: &[usize], dtype: &str) -> Json {
+    Json::obj(vec![
+        ("name", jstr(name)),
+        ("shape", jshape(shape)),
+        ("dtype", jstr(dtype)),
+    ])
+}
+
+/// Payload (suffix, shape, dtype) triples of one quantized matrix.
+fn payload_entries(
+    variant: &str,
+    k: usize,
+    n: usize,
+    g: usize,
+) -> Vec<(&'static str, Vec<usize>, &'static str)> {
+    match variant {
+        "fp" => vec![("w", vec![k, n], "f32")],
+        "w8a8" => {
+            vec![("wq", vec![k, n], "s8"), ("s_w", vec![n], "f32")]
+        }
+        "w4a8_fast" => {
+            vec![("wp", vec![k / 2, n], "u8"), ("s_w", vec![n], "f32")]
+        }
+        "w4a8_group" | "w4a16" => vec![
+            ("wq", vec![k, n], "s8"),
+            ("s_g", vec![k / g, n], "f32"),
+        ],
+        "w4a8_asym" => vec![
+            ("wu", vec![k, n], "u8"),
+            ("s_w", vec![n], "f32"),
+            ("z", vec![n], "s32"),
+        ],
+        other => panic!("unknown variant {other}"),
+    }
+}
+
+/// Flat weight-argument params for (model, variant) — the manifest half
+/// of `model.py::flat_param_entries`.
+fn weight_params(info: &ModelInfo, variant: &str) -> Vec<Json> {
+    let mut out = Vec::new();
+    for name in weight_names(info) {
+        let leaf = name.rsplit('.').next().unwrap();
+        if LAYER_MATRICES.contains(&leaf) {
+            let (k, n) = matrix_shape(info, leaf);
+            for (suffix, shape, dt) in
+                payload_entries(variant, k, n, GROUP_SIZE)
+            {
+                out.push(jparam(&format!("{name}.{suffix}"), &shape, dt));
+            }
+        } else if leaf == "embed" || leaf == "lm_head" {
+            let (k, n) = matrix_shape(info, leaf);
+            out.push(jparam(&name, &[k, n], "f32"));
+        } else {
+            out.push(jparam(&name, &[info.d_model], "f32"));
+        }
+    }
+    out
+}
+
+fn gemm_params(
+    variant: &str,
+    m: usize,
+    n: usize,
+    k: usize,
+    g: usize,
+) -> Vec<Json> {
+    let gs = (k / g).max(1);
+    match variant {
+        "fp" => vec![
+            jparam("x", &[m, k], "f32"),
+            jparam("w", &[k, n], "f32"),
+        ],
+        "w8a8" => vec![
+            jparam("xq", &[m, k], "s8"),
+            jparam("s_a", &[m], "f32"),
+            jparam("wq", &[k, n], "s8"),
+            jparam("s_w", &[n], "f32"),
+        ],
+        "w4a8_fast" | "w4a8_unfused" => vec![
+            jparam("xq", &[m, k], "s8"),
+            jparam("s_a", &[m], "f32"),
+            jparam("wp", &[k / 2, n], "u8"),
+            jparam("s_w", &[n], "f32"),
+        ],
+        "w4a8_group" => vec![
+            jparam("xq", &[m, k], "s8"),
+            jparam("s_a", &[m], "f32"),
+            jparam("wq", &[k, n], "s8"),
+            jparam("s_g", &[gs, n], "f32"),
+        ],
+        "w4a8_asym" => vec![
+            jparam("xq", &[m, k], "s8"),
+            jparam("s_a", &[m], "f32"),
+            jparam("wu", &[k, n], "u8"),
+            jparam("s_w", &[n], "f32"),
+            jparam("z", &[n], "s32"),
+        ],
+        "w4a16" => vec![
+            jparam("x", &[m, k], "f32"),
+            jparam("wq", &[k, n], "s8"),
+            jparam("s_g", &[gs, n], "f32"),
+        ],
+        other => panic!("unknown gemm variant {other}"),
+    }
+}
+
+fn kv_shape(info: &ModelInfo, b: usize) -> Vec<usize> {
+    vec![b, info.n_heads, info.max_seq, info.head_dim]
+}
+
+fn write_graphs_and_manifest(dir: &Path, info: &ModelInfo) -> Result<()> {
+    let mut graphs: BTreeMap<String, Json> = BTreeMap::new();
+    let placeholder = "// synthetic placeholder — the native backend \
+                       interprets the manifest directly; run the python \
+                       AOT pass for real HLO artifacts\n";
+
+    // serving graphs
+    for variant in VARIANTS {
+        let wents = weight_params(info, variant);
+        for b in PREFILL_BATCHES {
+            let name =
+                format!("{}_{variant}_prefill_b{b}", info.name);
+            let mut params = vec![
+                jparam("tokens", &[b, PREFILL_SEQ], "s32"),
+                jparam("length", &[b], "s32"),
+            ];
+            params.extend(wents.iter().cloned());
+            let mut outs = vec![jparam(
+                "logits",
+                &[b, PREFILL_SEQ, info.vocab],
+                "f32",
+            )];
+            for pfx in ["k_cache", "v_cache"] {
+                for l in 0..info.n_layers {
+                    outs.push(jparam(
+                        &format!("{pfx}.{l}"),
+                        &kv_shape(info, b),
+                        "f32",
+                    ));
+                }
+            }
+            graphs.insert(
+                name.clone(),
+                Json::obj(vec![
+                    ("kind", jstr("prefill")),
+                    ("path", jstr(&format!("{name}.hlo.txt"))),
+                    ("params", Json::Arr(params)),
+                    ("outputs", Json::Arr(outs)),
+                    ("model", jstr(&info.name)),
+                    ("variant", jstr(variant)),
+                    ("batch", jnum(b)),
+                    ("seq", jnum(PREFILL_SEQ)),
+                ]),
+            );
+        }
+        for b in DECODE_BATCHES {
+            let name = format!("{}_{variant}_decode_b{b}", info.name);
+            let mut params = vec![
+                jparam("token", &[b], "s32"),
+                jparam("pos", &[b], "s32"),
+            ];
+            for pfx in ["k_cache", "v_cache"] {
+                for l in 0..info.n_layers {
+                    params.push(jparam(
+                        &format!("{pfx}.{l}"),
+                        &kv_shape(info, b),
+                        "f32",
+                    ));
+                }
+            }
+            params.extend(wents.iter().cloned());
+            let mut outs =
+                vec![jparam("logits", &[b, info.vocab], "f32")];
+            for pfx in ["k_cache", "v_cache"] {
+                for l in 0..info.n_layers {
+                    outs.push(jparam(
+                        &format!("{pfx}.{l}"),
+                        &kv_shape(info, b),
+                        "f32",
+                    ));
+                }
+            }
+            graphs.insert(
+                name.clone(),
+                Json::obj(vec![
+                    ("kind", jstr("decode")),
+                    ("path", jstr(&format!("{name}.hlo.txt"))),
+                    ("params", Json::Arr(params)),
+                    ("outputs", Json::Arr(outs)),
+                    ("model", jstr(&info.name)),
+                    ("variant", jstr(variant)),
+                    ("batch", jnum(b)),
+                    ("seq", jnum(info.max_seq)),
+                ]),
+            );
+        }
+    }
+
+    // cpu GEMM shape set
+    for variant in GEMM_VARIANTS {
+        for (n, k) in CPU_GEMM_NK {
+            for m in GEMM_MS {
+                let name = format!("gemm_{variant}_cpu_m{m}n{n}k{k}");
+                graphs.insert(
+                    name.clone(),
+                    Json::obj(vec![
+                        ("kind", jstr("gemm")),
+                        ("path", jstr(&format!("{name}.hlo.txt"))),
+                        (
+                            "params",
+                            Json::Arr(gemm_params(
+                                variant, m, n, k, GROUP_SIZE,
+                            )),
+                        ),
+                        (
+                            "outputs",
+                            Json::Arr(vec![jparam("out", &[m, n], "f32")]),
+                        ),
+                        ("variant", jstr(variant)),
+                        ("m", jnum(m)),
+                        ("n", jnum(n)),
+                        ("k", jnum(k)),
+                        ("group", jnum(GROUP_SIZE)),
+                        ("shape_set", jstr("cpu")),
+                    ]),
+                );
+            }
+        }
+    }
+
+    for name in graphs.keys() {
+        std::fs::write(dir.join(format!("{name}.hlo.txt")), placeholder)
+            .with_context(|| format!("writing {name}.hlo.txt"))?;
+    }
+
+    let model_entry = Json::obj(vec![
+        ("d_model", jnum(info.d_model)),
+        ("n_layers", jnum(info.n_layers)),
+        ("n_heads", jnum(info.n_heads)),
+        ("d_ff", jnum(info.d_ff)),
+        ("vocab", jnum(info.vocab)),
+        ("max_seq", jnum(info.max_seq)),
+        ("head_dim", jnum(info.head_dim)),
+        ("weights", jstr(&info.weights_file)),
+        ("hessians", jstr(&info.hessians_file)),
+        ("n_params", jnum(info.n_params)),
+    ]);
+    let manifest = Json::obj(vec![
+        ("group_size", jnum(GROUP_SIZE)),
+        (
+            "models",
+            Json::Obj(BTreeMap::from([(
+                info.name.clone(),
+                model_entry,
+            )])),
+        ),
+        ("graphs", Json::Obj(graphs)),
+        ("synthetic", Json::Bool(true)),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.emit())
+        .context("writing manifest.json")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_stream_in_vocab() {
+        let toks = gen_tokens(512, 1);
+        assert!(toks.iter().all(|&t| (3..503).contains(&t)));
+        // not constant
+        assert!(toks.iter().any(|&t| t != toks[0]));
+    }
+
+    #[test]
+    fn payload_entries_match_formats() {
+        let e = payload_entries("w4a8_fast", 256, 768, 64);
+        assert_eq!(e[0].0, "wp");
+        assert_eq!(e[0].1, vec![128, 768]);
+        assert_eq!(e[1].1, vec![768]);
+        let g = payload_entries("w4a16", 256, 512, 64);
+        assert_eq!(g[1].1, vec![4, 512]);
+    }
+
+    #[test]
+    fn tiny3m_param_count_matches_name() {
+        let info = tiny3m();
+        assert!(info.n_params > 3_000_000 && info.n_params < 4_000_000);
+        assert_eq!(info.head_dim, 32);
+    }
+}

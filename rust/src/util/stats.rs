@@ -52,8 +52,14 @@ impl Summary {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.values
-                .sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // NaN samples (e.g. the mean of an empty sub-summary folded
+            // back in) must neither panic partial_cmp().unwrap() nor
+            // land at the FRONT (total_cmp alone puts negative-sign
+            // NaNs before -inf): order by (is_nan, total_cmp) so every
+            // NaN sorts after every finite sample.
+            self.values.sort_by(|a, b| {
+                a.is_nan().cmp(&b.is_nan()).then(a.total_cmp(b))
+            });
             self.sorted = true;
         }
     }
@@ -129,6 +135,21 @@ mod tests {
         let mut s = Summary::new();
         assert!(s.mean().is_nan());
         assert!(s.p50().is_nan());
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic() {
+        // regression: a NaN latency sample (mean of an empty
+        // sub-summary) used to panic percentile() via partial_cmp
+        let mut s = Summary::new();
+        s.add(2.0);
+        s.add(Summary::new().mean()); // NaN
+        s.add(-f64::NAN); // negative-sign NaN (total_cmp sorts it FIRST)
+        s.add(1.0);
+        let p0 = s.percentile(0.0);
+        assert_eq!(p0, 1.0, "finite samples sort ahead of every NaN");
+        assert!(s.percentile(100.0).is_nan(), "NaNs sort last");
+        let _ = s.report_ms(); // must not panic either
     }
 
     #[test]

@@ -1,6 +1,9 @@
-//! Engine / coordinator integration over the real artifacts: generation
-//! correctness, continuous batching, determinism, shedding, and the
-//! thread-safe service front door.
+//! Engine / coordinator integration on the native CPU backend:
+//! generation correctness, continuous batching, determinism, shedding,
+//! and the thread-safe service front door.
+//!
+//! Artifacts are synthesized on first use (`runtime::synth`), so these
+//! tests run from a clean checkout with no python AOT pass.
 
 use std::sync::{Mutex, OnceLock};
 
@@ -8,14 +11,17 @@ use odyssey::coordinator::handle::EngineService;
 use odyssey::coordinator::request::FinishReason;
 use odyssey::coordinator::{Engine, EngineOptions, GenParams, Request};
 use odyssey::quant::QuantRecipe;
+use odyssey::runtime::{synth, BackendKind};
 
-/// Serialize engine construction: each PJRT client spawns a full CPU
-/// thread pool, so cargo's parallel tests must not build engines
-/// concurrently (Engine itself is !Send — the client uses Rc).
+/// Serialize engine construction: engines are cheap on the native
+/// backend but the first call synthesizes the artifact set, and keeping
+/// the old one-engine-at-a-time topology mirrors production (the engine
+/// is !Sync and owned by one thread).
 fn with_engine<R>(f: impl FnOnce(&mut Engine) -> R) -> R {
     static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
     let _guard = LOCK.get_or_init(|| Mutex::new(())).lock().unwrap();
-    let mut engine = Engine::new(opts("fp")).expect("make artifacts first");
+    synth::ensure_artifacts("artifacts").expect("synthesize artifacts");
+    let mut engine = Engine::new(opts("fp")).expect("engine construction");
     engine.reset_metrics();
     f(&mut engine)
 }
@@ -30,6 +36,9 @@ fn opts(variant: &str) -> EngineOptions {
             QuantRecipe::vanilla_w4()
         },
         max_queue: 8,
+        // the point of this suite: everything runs through the native
+        // CPU backend, no PJRT/XLA anywhere
+        backend: BackendKind::Native,
         ..Default::default()
     }
 }
@@ -55,6 +64,32 @@ fn generates_requested_tokens() {
     // tokens must be valid vocab ids
     let vocab = engine.info().vocab as i32;
     assert!(results[0].tokens.iter().all(|&t| (0..vocab).contains(&t)));
+    });
+}
+
+#[test]
+fn w4a8_fast_generates_end_to_end_on_native_backend() {
+    // the acceptance path: the paper's FastGEMM W4A8 variant serving
+    // tokens through the pure-Rust backend, no AOT artifacts involved
+    with_engine(|_shared| {
+        let mut engine = Engine::new(opts("w4a8_fast")).unwrap();
+        assert_eq!(engine.rt.backend_name(), "native");
+        engine.submit(Request::new(
+            99,
+            prompt(5, 12),
+            GenParams { max_new_tokens: 6, eos: None, ..Default::default() },
+        ));
+        let results = engine.run_until_idle().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].tokens.len(), 6);
+        assert_eq!(results[0].finish, FinishReason::MaxTokens);
+        let vocab = engine.info().vocab as i32;
+        assert!(results[0]
+            .tokens
+            .iter()
+            .all(|&t| (0..vocab).contains(&t)));
+        assert!(engine.metrics.decode_steps >= 5, "decode ran");
+        assert!(engine.metrics.prefill_steps >= 1, "prefill ran");
     });
 }
 
@@ -180,25 +215,58 @@ fn service_handles_concurrent_callers() {
     });
 }
 
+/// Logits at the last prompt position from the b=4 prefill graph
+/// (row 0 carries the prompt; the other rows are padding).
+fn last_pos_logits(engine: &mut Engine, prompt: &[i32]) -> Vec<f32> {
+    let (b, s, v) = engine.prefill_dims();
+    let mut tokens = vec![0i32; b * s];
+    let mut lengths = vec![1i32; b];
+    tokens[..prompt.len()].copy_from_slice(prompt);
+    lengths[0] = prompt.len() as i32;
+    let logits = engine.prefill_logits(&tokens, &lengths).unwrap();
+    let off = (prompt.len() - 1) * v;
+    logits[off..off + v].to_vec()
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// How many logits strictly exceed the one at `idx` (0 = argmax).
+fn rank_of(xs: &[f32], idx: usize) -> usize {
+    xs.iter().filter(|&&v| v > xs[idx]).count()
+}
+
 #[test]
 fn variant_engines_agree_on_next_token() {
-    // all bit widths serve the same model: greedy first tokens should
-    // agree between FP and W8A8 on an in-distribution prompt
+    // all bit widths serve the same model: on an in-distribution prompt
+    // the FP and W8A8 engines must rank the next token (nearly) the
+    // same — each one's greedy choice sits in the other's top 5.  (The
+    // synthetic checkpoint is untrained, so exact argmax equality would
+    // over-constrain 8-bit rounding noise on near-tied logits.)
     let p: Vec<i32> = vec![1, 3, 220, 150, 3, 80, 12];
-    let params =
-        GenParams { max_new_tokens: 3, eos: None, ..Default::default() };
-    let fp_first = with_engine(|engine| {
-        engine.submit(Request::new(1, p.clone(), params.clone()));
-        engine.run_until_idle().unwrap()[0].tokens[0]
-    });
-    let w8_first = with_engine(|_shared| {
-        // hold the lock so only one extra PJRT client exists at a time
+    let fp_logits = with_engine(|engine| last_pos_logits(engine, &p));
+    let w8_logits = with_engine(|_shared| {
         let mut engine = Engine::new(opts("w8a8")).unwrap();
-        engine.submit(Request::new(1, p.clone(), params.clone()));
-        engine.run_until_idle().unwrap()[0].tokens[0]
+        last_pos_logits(&mut engine, &p)
     });
-    assert_eq!(
-        fp_first, w8_first,
-        "fp vs w8a8 diverge on the first greedy token"
+    assert_eq!(fp_logits.len(), w8_logits.len());
+    let fp_top = argmax(&fp_logits);
+    let w8_top = argmax(&w8_logits);
+    assert!(
+        rank_of(&w8_logits, fp_top) < 5,
+        "fp argmax {fp_top} ranks {} under w8a8",
+        rank_of(&w8_logits, fp_top)
+    );
+    assert!(
+        rank_of(&fp_logits, w8_top) < 5,
+        "w8a8 argmax {w8_top} ranks {} under fp",
+        rank_of(&fp_logits, w8_top)
     );
 }

@@ -282,3 +282,66 @@ fn corrupted_json_rejected_not_panicking() {
         }
     });
 }
+
+// ------------------------------------------- native backend interop
+
+/// The engine-path interop contract at the tiny3m weight shapes: for
+/// every int4 nibble value, running the packed weights through the
+/// native FastGEMM kernel (`unpack_x16` + /16 dequant epilogue) equals
+/// the vanilla route (`unpack_int4` to true int4 values, then the plain
+/// per-channel epilogue) BIT-EXACTLY.
+#[test]
+fn prop_fastgemm_epilogue_matches_unpacked_route_bit_exact() {
+    use odyssey::runtime::native::{gemm_w4a8_fast, gemm_w8a8};
+
+    // (K, N) pairs used by the tiny3m matrices: attention, gate/up, down
+    let shapes = [(256usize, 256usize), (256, 768), (768, 256)];
+    Prop::new("fastgemm epilogue interop").cases(3).check(|rng| {
+        for &(k, n) in &shapes {
+            let m = 2;
+            let x = Tensor::randn(&[m, k], rng.next_u64());
+            let (xq, s_a) = scale::quant_act_per_token(&x);
+            // int4 weights covering ALL 16 nibble values: first rows
+            // sweep -8..=7 in every column, the rest are random
+            let mut q = Tensor::<i8>::zeros(&[k, n]);
+            for i in 0..k {
+                for j in 0..n {
+                    let v = if i < 16 {
+                        i as i32 - 8
+                    } else {
+                        rng.range(-8, 8) as i32
+                    };
+                    q.set2(i, j, v as i8);
+                }
+            }
+            let s_w: Vec<f32> =
+                (0..n).map(|_| 0.01 + rng.next_f32() * 0.05).collect();
+            let p = pack::pack_int4(&q);
+
+            // FastGEMM route: x16 weights, s_w/16 epilogue (inside)
+            let fast = gemm_w4a8_fast(&xq, &s_a, &p, &s_w);
+            // vanilla route: true int4 values + plain epilogue
+            let w4 = pack::unpack_int4(&p);
+            assert_eq!(w4, q, "unpack must invert pack");
+            let vanilla = gemm_w8a8(&xq, &s_a, &w4, &s_w);
+
+            assert_eq!(
+                fast.shape(),
+                vanilla.shape(),
+                "shape mismatch at ({k},{n})"
+            );
+            for (i, (a, b)) in fast
+                .data()
+                .iter()
+                .zip(vanilla.data().iter())
+                .enumerate()
+            {
+                assert!(
+                    a == b,
+                    "({k},{n})[{i}]: fast {a} != vanilla {b} \
+                     (must be bit-exact)"
+                );
+            }
+        }
+    });
+}

@@ -1,19 +1,29 @@
-//! Runtime integration: compile real AOT artifacts on the PJRT CPU
-//! client and verify cross-kernel numerical contracts.
+//! Runtime integration on the native CPU backend: manifest completeness,
+//! GEMM graph execution, and cross-kernel numerical contracts.
+//!
+//! Artifacts are synthesized on first use (`runtime::synth`) — no python
+//! AOT pass required.  The same tests run against real AOT artifacts on
+//! the pjrt backend by swapping `BackendKind`.
 
 use odyssey::exp::latency::random_gemm_args;
-use odyssey::quant::{pack, rtn, scale};
-use odyssey::runtime::{literal_f32, literal_from_st, Runtime};
 use odyssey::formats::safetensors::StTensor;
+use odyssey::model::{self, Checkpoint};
+use odyssey::quant::{pack, rtn, scale, QuantRecipe};
+use odyssey::runtime::{
+    literal_f32, literal_from_st, literal_i32, synth, BackendKind, Runtime,
+};
 use odyssey::tensor::Tensor;
 
 fn rt() -> Runtime {
-    Runtime::new("artifacts").expect("run `make artifacts` first")
+    synth::ensure_artifacts("artifacts").expect("synthesize artifacts");
+    Runtime::with_backend("artifacts", BackendKind::Native)
+        .expect("native runtime")
 }
 
 #[test]
 fn manifest_loads_and_is_complete() {
     let rt = rt();
+    assert_eq!(rt.backend_name(), "native");
     assert!(rt.manifest.models.contains_key("tiny3m"));
     assert!(rt.manifest.group_size > 0);
     // every graph's HLO file exists
@@ -55,7 +65,7 @@ fn gemm_graph_executes_with_valid_output() {
 
 #[test]
 fn fastgemm_graph_equals_w8a8_graph_times_16() {
-    // FastGEMM contract on the REAL artifacts: feeding w8a8 with the
+    // FastGEMM contract through the runtime: feeding w8a8 with the
     // x16-unpacked weights and s_w/16 must reproduce fastgemm exactly.
     let mut rt = rt();
     let fast = rt
@@ -122,6 +132,47 @@ fn fastgemm_graph_equals_w8a8_graph_times_16() {
         .map(|(a, b)| (a - b).abs())
         .fold(0f32, f32::max);
     assert!(maxd < 1e-4, "x16 contract violated: maxdiff {maxd}");
+}
+
+#[test]
+fn prefill_graph_serves_w4a8_fast_weights() {
+    // quantize the synthetic checkpoint with the FastGEMM layout and
+    // push it through the b=1 prefill graph on the native backend
+    let mut rt = rt();
+    let info = rt.manifest.model("tiny3m").unwrap().clone();
+    let ckpt = Checkpoint::load(&rt.manifest, "tiny3m").unwrap();
+    let qw = model::quantize_checkpoint(
+        &ckpt,
+        None,
+        &QuantRecipe::vanilla_w4(),
+        "w4a8_fast",
+        rt.manifest.group_size,
+    )
+    .unwrap();
+    let graph = rt.manifest.stage_graph("tiny3m", "w4a8_fast", "prefill", 1);
+    let gi = rt.manifest.graph(&graph).unwrap().clone();
+    let (b, s) = (gi.batch, gi.seq);
+
+    let mut tokens = vec![0i32; b * s];
+    for (i, t) in tokens.iter_mut().enumerate().take(10) {
+        *t = 3 + i as i32;
+    }
+    let mut args =
+        vec![literal_i32(&[b, s], &tokens).unwrap(),
+             literal_i32(&[b], &[10]).unwrap()];
+    for t in &qw.tensors {
+        args.push(literal_from_st(t).unwrap());
+    }
+    let outs = rt.run_literals(&graph, &args).unwrap();
+    assert_eq!(outs.len(), 1 + 2 * info.n_layers);
+    let logits = outs[0].to_vec::<f32>().unwrap();
+    assert_eq!(logits.len(), b * s * info.vocab);
+    assert!(logits.iter().all(|x| x.is_finite()));
+    // KV caches come back in device layout, padded to max_seq
+    assert_eq!(
+        outs[1].shape(),
+        &[b, info.n_heads, info.max_seq, info.head_dim]
+    );
 }
 
 #[test]
