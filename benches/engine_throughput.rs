@@ -1,9 +1,15 @@
 //! `cargo bench --bench engine_throughput` — measured serving throughput
 //! of the full coordinator per bit-width variant (the measured analogue
 //! of Fig. 6 on this CPU testbed).
+//!
+//! Engines stage their weight tail once at construction; the staging
+//! counters printed per variant prove the serving loop runs with zero
+//! weight re-materializations.  A `BENCH {...}` json line per variant
+//! feeds the trajectory file.
 
 use odyssey::coordinator::{Engine, EngineOptions, GenParams, Request};
 use odyssey::exp::eval::load_corpus;
+use odyssey::formats::json::Json;
 use odyssey::quant::QuantRecipe;
 use odyssey::util::XorShift;
 
@@ -20,8 +26,9 @@ fn main() {
         .collect();
 
     println!(
-        "{:<12} {:>12} {:>14} {:>14} {:>12}",
-        "variant", "tok/s", "prefill t/s", "decode t/s", "ttft p50 ms"
+        "{:<12} {:>12} {:>14} {:>14} {:>12} {:>12}",
+        "variant", "tok/s", "prefill t/s", "decode t/s", "ttft p50 ms",
+        "stagings"
     );
     for variant in ["fp", "w8a8", "w4a8_fast"] {
         // vanilla recipes: this bench measures ENGINE speed, not quality
@@ -47,14 +54,37 @@ fn main() {
         let results = engine.run_until_idle().expect("run");
         let wall = t0.elapsed().as_secs_f64();
         let tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
+        let stats = engine.staging_stats();
         println!(
-            "{:<12} {:>12.1} {:>14.1} {:>14.1} {:>12.1}",
+            "{:<12} {:>12.1} {:>14.1} {:>14.1} {:>12.1} {:>12}",
             variant,
             tokens as f64 / wall,
             engine.metrics.prefill_tps(),
             engine.metrics.decode_tps(),
             engine.metrics.ttft.p50() * 1e3,
+            stats.stage_calls,
         );
+        // a staged engine must not re-materialize weights while serving
+        if stats.stage_calls > 0 {
+            assert_eq!(
+                stats.weight_bytes_rematerialized, 0,
+                "{variant}: serving loop re-materialized weight bytes"
+            );
+        }
+        let bench = Json::obj(vec![
+            ("bench", Json::Str("engine_throughput".into())),
+            ("variant", Json::Str(variant.into())),
+            ("tok_per_s", Json::Num(tokens as f64 / wall)),
+            ("decode_tps", Json::Num(engine.metrics.decode_tps())),
+            ("ttft_p50_ms", Json::Num(engine.metrics.ttft.p50() * 1e3)),
+            ("stage_calls", Json::Num(stats.stage_calls as f64)),
+            ("staged_execs", Json::Num(stats.staged_execs as f64)),
+            (
+                "weight_bytes_rematerialized",
+                Json::Num(stats.weight_bytes_rematerialized as f64),
+            ),
+        ]);
+        println!("BENCH {}", bench.emit());
     }
     println!(
         "\n(XLA-CPU emulates int8 math; A100 tensor-core ratios come from \

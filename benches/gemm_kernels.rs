@@ -4,9 +4,15 @@
 //! This is the measured half of Fig. 7 / Table 5: the ordering
 //! (fastgemm <= w8a8 < grouped/asym at M=1; unfused > fast) cross-checks
 //! the A100 model's structural claims on real executables.
+//!
+//! Weights are STAGED once per graph (same discipline as
+//! `exp::latency::measured_gemm_set`): timed iterations pass only the
+//! activation head, while in-kernel conversion costs — FastGEMM's fused
+//! x16 unpack vs the unfused baseline's value recovery — stay inside
+//! the measured region, keeping the fusion ablation apples-to-apples.
 
 use odyssey::exp::latency::random_gemm_args;
-use odyssey::runtime::Runtime;
+use odyssey::runtime::{Literal, Runtime};
 use odyssey::util::Bencher;
 
 fn main() {
@@ -30,11 +36,19 @@ fn main() {
             continue; // keep context-stage benches to the smallest shape
         }
         let args = random_gemm_args(&gi.params).expect("args");
-        rt.executable(&gi.name).expect("compile");
+        let n_dyn = gi
+            .dynamic_param_count(&rt.manifest)
+            .expect("argument classes");
+        let weights: Vec<(&str, &Literal)> = gi.params[n_dyn..]
+            .iter()
+            .map(|p| p.name.as_str())
+            .zip(args[n_dyn..].iter())
+            .collect();
+        let staged = rt.stage(&gi.name, &weights).expect("stage");
+        let dynamic: Vec<&Literal> = args[..n_dyn].iter().collect();
         let mut b = Bencher::new(&gi.name).with_budget(1.0).with_iters(3, 30);
-        let name = gi.name.clone();
         let res = b.run(|| {
-            rt.run_literals(&name, &args).expect("run");
+            rt.run_staged(&staged, &dynamic).expect("run");
         });
         rows.push((gi.variant.clone(), gi.m, gi.n, gi.k, res));
     }

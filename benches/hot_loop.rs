@@ -1,9 +1,20 @@
 //! `cargo bench --bench hot_loop` — the L3 §Perf ablation: decode-step
-//! cost under the legacy arg path (clone every weight literal + rebuild
-//! KV from host arrays + parse the full output tuple) vs the optimized
-//! path (borrowed weight literals + KV literal reuse + logits-only
-//! parse).  Documents the EXPERIMENTS.md §Perf before/after.
+//! cost under three argument disciplines:
+//!
+//! 1. legacy — clone every weight literal + rebuild KV from host arrays
+//!    + parse the full output tuple;
+//! 2. optimized — borrowed weight literals + KV literal reuse +
+//!    logits-only parse (weights still re-materialized inside the
+//!    backend every step);
+//! 3. staged — `Runtime::stage` materializes the weight tail ONCE, each
+//!    step passes only `[token, pos, KV...]` (`Runtime::run_staged`).
+//!
+//! Besides timings, the staging counters report the number of weight
+//! bytes each discipline copies per decode step — the regression signal
+//! for the prepare-once API — and a machine-readable `BENCH {...}` json
+//! line per variant feeds the trajectory file.
 
+use odyssey::formats::json::Json;
 use odyssey::model::{self, Checkpoint};
 use odyssey::quant::QuantRecipe;
 use odyssey::runtime::{self, Literal, Runtime};
@@ -43,6 +54,7 @@ fn main() {
         let pos = runtime::literal_i32(&[b], &[3, 3, 3, 3]).unwrap();
 
         // ---- legacy path: clones + host KV rebuild + full parse
+        let stats0 = rt.staging_stats();
         let legacy = Bencher::new(&format!("{variant} legacy decode step"))
             .with_budget(4.0)
             .with_iters(4, 30)
@@ -64,6 +76,10 @@ fn main() {
                 }
             });
         println!("{legacy}");
+        let stats1 = rt.staging_stats();
+        let unstaged_bytes_per_step = (stats1.weight_bytes_rematerialized
+            - stats0.weight_bytes_rematerialized)
+            / (stats1.unstaged_execs - stats0.unstaged_execs).max(1);
 
         // ---- optimized path: refs + KV literal reuse + logits-only parse
         let mut kv_lits: Vec<Literal> = kv_host
@@ -88,10 +104,78 @@ fn main() {
                     kv_lits = outs.split_off(1); // reuse next step
                 });
         println!("{optimized}");
-        println!(
-            "{variant}: speedup {:.2}x (coordinator overhead removed: {:.2} ms/step)\n",
-            legacy.mean_s / optimized.mean_s,
-            (legacy.mean_s - optimized.mean_s) * 1e3
+
+        // ---- staged path: weight tail staged ONCE, dynamic args only
+        let pairs: Vec<(&str, &Literal)> = qw
+            .names
+            .iter()
+            .map(String::as_str)
+            .zip(weights.iter())
+            .collect();
+        let staged = rt.stage(&graph, &pairs).unwrap();
+        let mut kv_staged: Vec<Literal> = kv_host
+            .iter()
+            .map(|v| runtime::literal_f32(&kv_shape, v).unwrap())
+            .collect();
+        let stats2 = rt.staging_stats();
+        let staged_res =
+            Bencher::new(&format!("{variant} staged decode step"))
+                .with_budget(4.0)
+                .with_iters(4, 30)
+                .run(|| {
+                    let mut dynamic: Vec<&Literal> =
+                        Vec::with_capacity(2 + kv_staged.len());
+                    dynamic.push(&token);
+                    dynamic.push(&pos);
+                    dynamic.extend(kv_staged.iter());
+                    let mut outs = rt.run_staged(&staged, &dynamic).unwrap();
+                    let _ = outs[0].to_vec::<f32>().unwrap(); // logits only
+                    kv_staged = outs.split_off(1); // reuse next step
+                });
+        println!("{staged_res}");
+        let stats3 = rt.staging_stats();
+        // regression guard: staged steps must re-materialize NOTHING
+        let staged_bytes_total = stats3.weight_bytes_rematerialized
+            - stats2.weight_bytes_rematerialized;
+        assert_eq!(
+            staged_bytes_total, 0,
+            "staged decode steps re-materialized weight bytes"
         );
+        assert_eq!(
+            stats3.stage_calls,
+            stats2.stage_calls,
+            "staged decode steps re-staged weights"
+        );
+
+        println!(
+            "{variant}: staged speedup vs legacy {:.2}x, vs optimized {:.2}x \
+             (weight bytes/step: {unstaged_bytes_per_step} -> 0; staged \
+             once: {} bytes)\n",
+            legacy.mean_s / staged_res.mean_s,
+            optimized.mean_s / staged_res.mean_s,
+            staged.weight_bytes(),
+        );
+
+        let bench = Json::obj(vec![
+            ("bench", Json::Str("hot_loop".into())),
+            ("variant", Json::Str(variant.into())),
+            ("legacy_ms", Json::Num(legacy.mean_s * 1e3)),
+            ("optimized_ms", Json::Num(optimized.mean_s * 1e3)),
+            ("staged_ms", Json::Num(staged_res.mean_s * 1e3)),
+            (
+                "weight_bytes_per_step_unstaged",
+                Json::Num(unstaged_bytes_per_step as f64),
+            ),
+            ("weight_bytes_per_step_staged", Json::Num(0.0)),
+            (
+                "staged_weight_bytes",
+                Json::Num(staged.weight_bytes() as f64),
+            ),
+            (
+                "speedup_vs_legacy",
+                Json::Num(legacy.mean_s / staged_res.mean_s),
+            ),
+        ]);
+        println!("BENCH {}", bench.emit());
     }
 }

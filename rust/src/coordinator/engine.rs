@@ -21,7 +21,9 @@ use crate::coordinator::request::{
 use crate::formats::config::GraphKind;
 use crate::model::{self, Calibration, Checkpoint};
 use crate::quant::QuantRecipe;
-use crate::runtime::{self, BackendKind, Literal, Runtime};
+use crate::runtime::{
+    self, BackendKind, Literal, Runtime, StagedGraph, StagingStats,
+};
 use crate::util::XorShift;
 
 /// Engine construction options.
@@ -39,6 +41,11 @@ pub struct EngineOptions {
     /// execution backend (native CPU interpreter by default; `pjrt`
     /// runs the AOT artifacts and needs the pjrt feature)
     pub backend: BackendKind,
+    /// stage the weight tail once at construction and run the serving
+    /// loop through `execute_staged` (default; `ODYSSEY_NO_STAGING=1`
+    /// flips the default off — the per-step escape hatch the parity
+    /// tests compare against)
+    pub staging: bool,
 }
 
 impl Default for EngineOptions {
@@ -55,6 +62,7 @@ impl Default for EngineOptions {
             // honor ODYSSEY_BACKEND like Runtime::new, so engine entry
             // points (benches, examples, EngineService) follow it too
             backend: BackendKind::from_env(),
+            staging: runtime::staging_enabled_from_env(),
         }
     }
 }
@@ -74,7 +82,14 @@ pub struct Engine {
     pub rt: Runtime,
     pub opts: EngineOptions,
     info: crate::formats::config::ModelInfo,
+    /// weight payload literals for the UNSTAGED path; emptied once the
+    /// graphs are staged (the backend then owns the only weight copy —
+    /// keeping both would double the resident weight footprint)
     weight_args: Vec<Literal>,
+    /// prepare-once weight handles (staged at construction unless
+    /// `opts.staging` is off): decode steps pass only dynamic args
+    staged_prefill: Option<StagedGraph>,
+    staged_decode: Option<StagedGraph>,
     kv: KvState,
     /// Device-format KV from the last decode step (k literals then v
     /// literals).  When `Some`, these are authoritative and the host
@@ -163,6 +178,25 @@ impl Engine {
         rt.executable(&prefill_graph)?;
         rt.executable(&decode_graph)?;
 
+        // prepare-once weight staging: hand the backend the weight tail
+        // a single time; every serving step then passes dynamic args only
+        let (staged_prefill, staged_decode) = if opts.staging {
+            let (p, d) = Self::stage_serving_graphs(
+                &mut rt,
+                &prefill_graph,
+                &decode_graph,
+                &payload_names,
+                &weight_args,
+            )?;
+            (Some(p), Some(d))
+        } else {
+            (None, None)
+        };
+        // the backend now owns the staged copy; the literal set would
+        // never be read again on the staged path
+        let weight_args =
+            if staged_decode.is_some() { Vec::new() } else { weight_args };
+
         let prefill_seq =
             rt.manifest.graph(&prefill_graph)?.seq;
         let kv = KvState::new(
@@ -173,10 +207,11 @@ impl Engine {
             info.head_dim,
         );
         crate::util::log::info(&format!(
-            "engine up: model={} variant={} backend={} params={:.1}M graphs=({}, {}) in {:.2}s",
+            "engine up: model={} variant={} backend={} staging={} params={:.1}M graphs=({}, {}) in {:.2}s",
             opts.model,
             opts.variant,
             rt.backend_name(),
+            if staged_decode.is_some() { "on" } else { "off" },
             info.n_params as f64 / 1e6,
             prefill_graph,
             decode_graph,
@@ -186,6 +221,8 @@ impl Engine {
             rt,
             info,
             weight_args,
+            staged_prefill,
+            staged_decode,
             kv,
             kv_lits: None,
             queue: RequestQueue::new(opts.max_queue),
@@ -201,6 +238,27 @@ impl Engine {
             finished: Vec::new(),
             opts,
         })
+    }
+
+    /// Stage both serving graphs from ONE weight materialization: the
+    /// decode graph is staged (the backend parses the payloads once),
+    /// and the prefill graph shares the same backend-owned handles via
+    /// `stage_shared` — their static tails are spec-identical.
+    fn stage_serving_graphs(
+        rt: &mut Runtime,
+        prefill_graph: &str,
+        decode_graph: &str,
+        payload_names: &[String],
+        weight_args: &[Literal],
+    ) -> Result<(StagedGraph, StagedGraph)> {
+        let pairs: Vec<(&str, &Literal)> = payload_names
+            .iter()
+            .map(String::as_str)
+            .zip(weight_args.iter())
+            .collect();
+        let decode = rt.stage(decode_graph, &pairs)?;
+        let prefill = rt.stage_shared(prefill_graph, &decode)?;
+        Ok((prefill, decode))
     }
 
     pub fn info(&self) -> &crate::formats::config::ModelInfo {
@@ -287,13 +345,18 @@ impl Engine {
         }
         let tok_l = runtime::literal_i32(&[b, s], &tokens)?;
         let len_l = runtime::literal_i32(&[b], &lengths)?;
-        let mut args: Vec<&Literal> =
-            Vec::with_capacity(2 + self.weight_args.len());
-        args.push(&tok_l);
-        args.push(&len_l);
-        args.extend(self.weight_args.iter());
-
-        let outs = self.rt.run_literal_refs(&self.prefill_graph, &args)?;
+        // staged: the backend already owns the weight tail; pass only
+        // the dynamic head.  Unstaged: legacy full-argument path.
+        let outs = if let Some(staged) = &self.staged_prefill {
+            self.rt.run_staged(staged, &[&tok_l, &len_l])?
+        } else {
+            let mut args: Vec<&Literal> =
+                Vec::with_capacity(2 + self.weight_args.len());
+            args.push(&tok_l);
+            args.push(&len_l);
+            args.extend(self.weight_args.iter());
+            self.rt.run_literal_refs(&self.prefill_graph, &args)?
+        };
         if outs.len() != 1 + 2 * n_layers {
             bail!("prefill returned {} outputs", outs.len());
         }
@@ -394,14 +457,24 @@ impl Engine {
                 kv_local.iter().collect()
             }
         };
-        let mut args: Vec<&Literal> = Vec::with_capacity(
-            2 + 2 * n_layers + self.weight_args.len());
-        args.push(&tok_l);
-        args.push(&pos_l);
-        args.extend(kv_refs);
-        args.extend(self.weight_args.iter());
-
-        let mut outs = self.rt.run_literal_refs(&self.decode_graph, &args)?;
+        // staged: dynamic head only (token, pos, KV) — no weight
+        // payloads move per token.  Unstaged: legacy full-argument path.
+        let mut outs = if let Some(staged) = &self.staged_decode {
+            let mut dynamic: Vec<&Literal> =
+                Vec::with_capacity(2 + 2 * n_layers);
+            dynamic.push(&tok_l);
+            dynamic.push(&pos_l);
+            dynamic.extend(kv_refs);
+            self.rt.run_staged(staged, &dynamic)?
+        } else {
+            let mut args: Vec<&Literal> = Vec::with_capacity(
+                2 + 2 * n_layers + self.weight_args.len());
+            args.push(&tok_l);
+            args.push(&pos_l);
+            args.extend(kv_refs);
+            args.extend(self.weight_args.iter());
+            self.rt.run_literal_refs(&self.decode_graph, &args)?
+        };
         if outs.len() != 1 + 2 * n_layers {
             bail!("decode returned {} outputs", outs.len());
         }
@@ -505,12 +578,16 @@ impl Engine {
         }
         let tok_l = runtime::literal_i32(&[b, s], tokens)?;
         let len_l = runtime::literal_i32(&[b], lengths)?;
-        let mut args: Vec<&Literal> =
-            Vec::with_capacity(2 + self.weight_args.len());
-        args.push(&tok_l);
-        args.push(&len_l);
-        args.extend(self.weight_args.iter());
-        let outs = self.rt.run_literal_refs(&self.prefill_graph, &args)?;
+        let outs = if let Some(staged) = &self.staged_prefill {
+            self.rt.run_staged(staged, &[&tok_l, &len_l])?
+        } else {
+            let mut args: Vec<&Literal> =
+                Vec::with_capacity(2 + self.weight_args.len());
+            args.push(&tok_l);
+            args.push(&len_l);
+            args.extend(self.weight_args.iter());
+            self.rt.run_literal_refs(&self.prefill_graph, &args)?
+        };
         runtime::literal_to_f32(&outs[0], b * s * self.info.vocab)
     }
 
@@ -520,6 +597,8 @@ impl Engine {
     }
 
     /// Swap in a different quantized weight set (same variant/layout).
+    /// Re-stages the serving graphs when staging is active, so the old
+    /// handles are dropped and the new weights become the staged set.
     pub fn replace_weights(
         &mut self,
         qw: &model::QuantizedWeights,
@@ -529,12 +608,32 @@ impl Engine {
         if qw.names != payload_names {
             bail!("replacement weights have wrong layout");
         }
-        self.weight_args = qw
+        let weight_args = qw
             .tensors
             .iter()
             .map(runtime::literal_from_st)
             .collect::<Result<Vec<_>>>()?;
+        if self.staged_prefill.is_some() || self.staged_decode.is_some() {
+            let (p, d) = Self::stage_serving_graphs(
+                &mut self.rt,
+                &self.prefill_graph,
+                &self.decode_graph,
+                &payload_names,
+                &weight_args,
+            )?;
+            self.staged_prefill = Some(p);
+            self.staged_decode = Some(d);
+            // staged path: the backend holds the only weight copy
+            self.weight_args = Vec::new();
+        } else {
+            self.weight_args = weight_args;
+        }
         Ok(())
+    }
+
+    /// Weight-staging counters from the backend (see [`StagingStats`]).
+    pub fn staging_stats(&self) -> StagingStats {
+        self.rt.staging_stats()
     }
 }
 

@@ -11,7 +11,7 @@ use crate::formats::json::Json;
 use crate::formats::safetensors::StTensor;
 use crate::model::{self, Calibration, Checkpoint};
 use crate::quant::QuantRecipe;
-use crate::runtime::{self, Literal, Runtime};
+use crate::runtime::{self, Literal, Runtime, StagedGraph};
 
 /// Evaluation tasks loaded from artifacts/tasks.json.
 pub struct Tasks {
@@ -82,11 +82,11 @@ pub fn load_corpus(artifacts_dir: &str, split: &str) -> Result<Vec<u16>> {
         .collect())
 }
 
-/// Lightweight evaluator: runtime + one prefill graph + quantized weights.
+/// Lightweight evaluator: runtime + one prefill graph with its weights
+/// staged once — every eval window passes only `[tokens, length]`.
 pub struct Evaluator {
     rt: Runtime,
-    graph: String,
-    weight_args: Vec<Literal>,
+    staged: StagedGraph,
     pub batch: usize,
     pub seq: usize,
     pub vocab: usize,
@@ -162,10 +162,19 @@ impl Evaluator {
                 gi.params.len()
             );
         }
+        // weights staged ONCE: each eval window then re-materializes
+        // nothing (the perplexity loop used to copy the full tail per
+        // corpus window)
+        let payload_names = model::payload_names(info, variant)?;
+        let pairs: Vec<(&str, &Literal)> = payload_names
+            .iter()
+            .map(String::as_str)
+            .zip(weight_args.iter())
+            .collect();
+        let staged = rt.stage(&graph, &pairs)?;
         Ok(Evaluator {
             rt,
-            graph,
-            weight_args,
+            staged,
             batch: gi.batch,
             seq: gi.seq,
             vocab: info.vocab,
@@ -183,12 +192,7 @@ impl Evaluator {
         assert_eq!(lengths.len(), b);
         let tok_l = runtime::literal_i32(&[b, s], tokens)?;
         let len_l = runtime::literal_i32(&[b], lengths)?;
-        let mut args: Vec<&Literal> =
-            Vec::with_capacity(2 + self.weight_args.len());
-        args.push(&tok_l);
-        args.push(&len_l);
-        args.extend(self.weight_args.iter());
-        let outs = self.rt.run_literal_refs(&self.graph, &args)?;
+        let outs = self.rt.run_staged(&self.staged, &[&tok_l, &len_l])?;
         runtime::literal_to_f32(&outs[0], b * s * self.vocab)
     }
 

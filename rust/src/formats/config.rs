@@ -92,6 +92,63 @@ pub struct GraphInfo {
     pub shape_set: String,
 }
 
+impl GraphInfo {
+    /// Argument classes: the number of LEADING dynamic (per-step)
+    /// parameters — token ids, lengths, positions, activations, KV
+    /// caches.  Everything after them is the STATIC weight-payload tail,
+    /// stageable once via `ExecBackend::stage`.
+    ///
+    /// * prefill: `[tokens, length]` are dynamic (2);
+    /// * decode: `[token, pos, k_cache.0.., v_cache.0..]` are dynamic
+    ///   (2 + 2·n_layers, looked up through the manifest's model entry);
+    /// * gemm: the activation head is dynamic — `[x]` for fp/w4a16 (1),
+    ///   `[xq, s_a]` for the quantized-activation variants (2).
+    pub fn dynamic_param_count(&self, manifest: &Manifest) -> Result<usize> {
+        let n = match self.kind {
+            GraphKind::Prefill => 2,
+            GraphKind::Decode => {
+                let model = self.model.as_deref().ok_or_else(|| {
+                    anyhow!("decode graph {} has no model", self.name)
+                })?;
+                2 + 2 * manifest.model(model)?.n_layers
+            }
+            GraphKind::Gemm => gemm_dynamic_args(&self.variant),
+        };
+        if n > self.params.len() {
+            bail!(
+                "graph {}: {} dynamic params but only {} params listed",
+                self.name,
+                n,
+                self.params.len()
+            );
+        }
+        Ok(n)
+    }
+
+    /// The dynamic (per-step) parameter specs — see
+    /// [`Self::dynamic_param_count`].
+    pub fn dynamic_params(&self, manifest: &Manifest) -> Result<&[ParamSpec]> {
+        Ok(&self.params[..self.dynamic_param_count(manifest)?])
+    }
+
+    /// The static (weight payload) parameter specs — the stageable tail.
+    pub fn static_params(&self, manifest: &Manifest) -> Result<&[ParamSpec]> {
+        Ok(&self.params[self.dynamic_param_count(manifest)?..])
+    }
+}
+
+/// Dynamic (activation) argument count of a GEMM variant: `[x]` for the
+/// fp-activation variants, `[xq, s_a]` for quantized activations.  The
+/// single source of truth for the GEMM argument-class split (used by
+/// both the manifest-level [`GraphInfo::dynamic_param_count`] and the
+/// native kernel dispatch).
+pub fn gemm_dynamic_args(variant: &str) -> usize {
+    match variant {
+        "fp" | "w4a16" => 1,
+        _ => 2,
+    }
+}
+
 /// Model description from the manifest.
 #[derive(Clone, Debug)]
 pub struct ModelInfo {
@@ -337,6 +394,81 @@ mod tests {
         assert_eq!(Dtype::F32.size(), 4);
         assert_eq!(Dtype::S8.size(), 1);
         assert!(Dtype::from_str("bogus").is_err());
+    }
+
+    fn dummy_graph(kind: GraphKind, variant: &str, n_params: usize) -> GraphInfo {
+        GraphInfo {
+            name: "g".into(),
+            kind,
+            path: String::new(),
+            params: (0..n_params)
+                .map(|i| ParamSpec {
+                    name: format!("p{i}"),
+                    shape: vec![1],
+                    dtype: Dtype::F32,
+                })
+                .collect(),
+            outputs: Vec::new(),
+            model: Some("m".into()),
+            variant: variant.into(),
+            batch: 1,
+            seq: 1,
+            m: 0,
+            n: 0,
+            k: 0,
+            group: 0,
+            shape_set: String::new(),
+        }
+    }
+
+    fn dummy_manifest() -> Manifest {
+        let mut models = BTreeMap::new();
+        models.insert(
+            "m".to_string(),
+            ModelInfo {
+                name: "m".into(),
+                d_model: 8,
+                n_layers: 3,
+                n_heads: 2,
+                d_ff: 16,
+                vocab: 32,
+                max_seq: 16,
+                head_dim: 4,
+                weights_file: String::new(),
+                hessians_file: String::new(),
+                n_params: 0,
+            },
+        );
+        Manifest {
+            dir: PathBuf::from("x"),
+            group_size: 64,
+            models,
+            graphs: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn dynamic_param_split_per_graph_kind() {
+        let m = dummy_manifest();
+        // prefill: [tokens, length | weights...]
+        let g = dummy_graph(GraphKind::Prefill, "w4a8_fast", 10);
+        assert_eq!(g.dynamic_param_count(&m).unwrap(), 2);
+        assert_eq!(g.dynamic_params(&m).unwrap().len(), 2);
+        assert_eq!(g.static_params(&m).unwrap().len(), 8);
+        // decode: [token, pos, 2*n_layers caches | weights...]
+        let g = dummy_graph(GraphKind::Decode, "w8a8", 12);
+        assert_eq!(g.dynamic_param_count(&m).unwrap(), 2 + 2 * 3);
+        assert_eq!(g.static_params(&m).unwrap().len(), 4);
+        // gemm: quantized activations are [xq, s_a]; fp/w4a16 just [x]
+        let g = dummy_graph(GraphKind::Gemm, "w4a8_fast", 4);
+        assert_eq!(g.dynamic_param_count(&m).unwrap(), 2);
+        let g = dummy_graph(GraphKind::Gemm, "fp", 2);
+        assert_eq!(g.dynamic_param_count(&m).unwrap(), 1);
+        let g = dummy_graph(GraphKind::Gemm, "w4a16", 3);
+        assert_eq!(g.dynamic_param_count(&m).unwrap(), 1);
+        // a param list shorter than the dynamic head is rejected
+        let g = dummy_graph(GraphKind::Decode, "w8a8", 3);
+        assert!(g.dynamic_param_count(&m).is_err());
     }
 
     #[test]

@@ -37,7 +37,7 @@
 //! | [`formats`]   | JSON + safetensors + manifest/config files (no serde) |
 //! | [`quant`]     | the paper's quantization recipe + all baselines |
 //! | [`model`]     | LLaMA checkpoint container + canonical naming |
-//! | [`runtime`]   | `ExecBackend` trait, native CPU + pjrt backends, `Value` host tensors, synthetic artifacts |
+//! | [`runtime`]   | `ExecBackend` trait (prepare-once weight staging incl.), native CPU + pjrt backends, `Value` host tensors, synthetic artifacts |
 //! | [`coordinator`]| serving engine: router, batcher, scheduler, KV manager |
 //! | [`server`]    | std::net HTTP/1.1 front-end |
 //! | [`perfmodel`] | analytical A100 roofline + engine comparators |

@@ -13,6 +13,31 @@
 //! Data crosses the backend boundary as host [`Value`]s (shape + typed
 //! buffer).  `Literal` remains as an alias for source compatibility with
 //! the PJRT-era call sites.
+//!
+//! # Weight staging (prepare-once execution)
+//!
+//! A graph's parameter list splits into two argument classes (see
+//! [`GraphInfo::dynamic_param_count`]): a short DYNAMIC head that changes
+//! every step (token ids, positions, activations, KV caches) and a long
+//! STATIC tail of weight payloads that never changes during serving.
+//! Calling [`ExecBackend::execute`] re-materializes the static tail on
+//! every step — O(model size) per generated token.  The staging API
+//! removes that cost:
+//!
+//! 1. [`ExecBackend::stage`] hands the backend the static weights ONCE
+//!    and returns a [`StagedGraph`] of backend-owned handles — on the
+//!    native backend the payloads are parsed into Arc-shared tensors
+//!    with the FastGEMM SINT4toS8 x16 unpack already applied; on the
+//!    pjrt backend they become pre-serialized device buffers.
+//! 2. [`ExecBackend::execute_staged`] then runs a step from only the
+//!    dynamic arguments, reusing the staged handles.
+//!
+//! Staged execution is bit-identical to unstaged execution (pinned by
+//! `tests/properties.rs` and `tests/engine_integration.rs`).  The engine
+//! stages its two serving graphs at construction; set
+//! `ODYSSEY_NO_STAGING=1` to fall back to the per-step path.
+//! [`StagingStats`] counts materializations so tests and benches can
+//! assert that decode steps stop copying weight bytes.
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -321,9 +346,214 @@ pub fn literal_to_f32(l: &Value, expect_len: usize) -> Result<Vec<f32>> {
 // backends
 // ---------------------------------------------------------------------
 
+/// Counters for the prepare-once weight-staging path.  `stage_calls`
+/// and `weight_bytes_staged` grow only when weights are (re)staged;
+/// `unstaged_execs` / `weight_bytes_rematerialized` grow on every
+/// legacy `execute` call, which re-materializes the full weight tail.
+/// A healthy staged hot loop shows `staged_execs` climbing while the
+/// other counters stay frozen.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StagingStats {
+    /// Weight materializations: calls to [`ExecBackend::stage`].
+    pub stage_calls: u64,
+    /// Executions served from a staged handle (no weight copies).
+    pub staged_execs: u64,
+    /// Legacy executions that re-materialized the weight tail.
+    pub unstaged_execs: u64,
+    /// Bytes of weight payload materialized by `stage` calls.
+    pub weight_bytes_staged: u64,
+    /// Bytes of weight payload re-materialized by `execute` calls.
+    pub weight_bytes_rematerialized: u64,
+}
+
+/// Backend-specific staged-weight payload (private to the runtime).
+pub(crate) enum StagedHandle {
+    Native(native::NativeStaged),
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtStaged),
+}
+
+/// Prepared-once weights for one graph: backend-owned handles for the
+/// static (weight) parameter tail, plus the metadata needed to run
+/// decode/prefill steps from dynamic arguments alone.  Obtained from
+/// [`ExecBackend::stage`] (via [`Runtime::stage`]); consumed by
+/// [`ExecBackend::execute_staged`] ([`Runtime::run_staged`]).
+pub struct StagedGraph {
+    pub(crate) info: GraphInfo,
+    pub(crate) backend: &'static str,
+    pub(crate) n_dynamic: usize,
+    pub(crate) weight_bytes: usize,
+    pub(crate) handle: StagedHandle,
+}
+
+impl StagedGraph {
+    /// Name of the staged graph.
+    pub fn graph(&self) -> &str {
+        &self.info.name
+    }
+
+    /// Backend that owns the handles ("native" / "pjrt").
+    pub fn backend(&self) -> &'static str {
+        self.backend
+    }
+
+    /// Number of leading dynamic parameters `execute_staged` expects.
+    pub fn n_dynamic(&self) -> usize {
+        self.n_dynamic
+    }
+
+    /// Number of staged (static) weight parameters.
+    pub fn n_static(&self) -> usize {
+        self.info.params.len() - self.n_dynamic
+    }
+
+    /// Total bytes of weight payload held by the staged handles.
+    pub fn weight_bytes(&self) -> usize {
+        self.weight_bytes
+    }
+}
+
+/// Validate a `stage()` weight list against the graph's static param
+/// tail (shared by both backends): count, canonical name order, and
+/// element count must all match the manifest.
+fn check_staged_weights(
+    manifest: &Manifest,
+    info: &GraphInfo,
+    weights: &[(&str, &Value)],
+) -> Result<usize> {
+    let n_dynamic = info.dynamic_param_count(manifest)?;
+    let statics = &info.params[n_dynamic..];
+    if weights.len() != statics.len() {
+        bail!(
+            "{}: staging {} weights, manifest lists {} static params",
+            info.name,
+            weights.len(),
+            statics.len()
+        );
+    }
+    for ((name, value), spec) in weights.iter().zip(statics.iter()) {
+        if *name != spec.name {
+            bail!(
+                "{}: staged weight '{name}' out of order (manifest \
+                 expects '{}')",
+                info.name,
+                spec.name
+            );
+        }
+        if value.shape() != spec.shape.as_slice() {
+            bail!(
+                "{}: staged weight '{name}' has shape {:?}, manifest \
+                 wants {:?}",
+                info.name,
+                value.shape(),
+                spec.shape
+            );
+        }
+        if !dtype_compatible(value.dtype(), spec.dtype) {
+            bail!(
+                "{}: staged weight '{name}' holds {:?}, manifest dtype \
+                 is {:?}",
+                info.name,
+                value.dtype(),
+                spec.dtype
+            );
+        }
+    }
+    Ok(n_dynamic)
+}
+
+/// Does a host value's element type match a manifest dtype tag?  (The
+/// manifest carries the four serving dtypes; anything else in a Value
+/// cannot satisfy a weight spec.)
+fn dtype_compatible(v: ElementType, d: Dtype) -> bool {
+    matches!(
+        (d, v),
+        (Dtype::F32, ElementType::F32)
+            | (Dtype::S8, ElementType::S8)
+            | (Dtype::U8, ElementType::U8)
+            | (Dtype::S32, ElementType::S32)
+    )
+}
+
+/// Validate that `target`'s static tail is spec-identical (names,
+/// shapes, dtypes) to the tail `base` was staged with, so the staged
+/// payload can be SHARED instead of re-materialized.  Returns the
+/// target's dynamic param count.
+fn check_shared_staging(
+    manifest: &Manifest,
+    target: &GraphInfo,
+    base: &StagedGraph,
+) -> Result<usize> {
+    let n_dynamic = target.dynamic_param_count(manifest)?;
+    let t_static = &target.params[n_dynamic..];
+    let b_static = &base.info.params[base.n_dynamic..];
+    if target.variant != base.info.variant {
+        bail!(
+            "{}: variant '{}' differs from staged graph {}'s '{}'",
+            target.name,
+            target.variant,
+            base.info.name,
+            base.info.variant
+        );
+    }
+    if target.model != base.info.model {
+        bail!(
+            "{}: model {:?} differs from staged graph {}'s {:?}",
+            target.name,
+            target.model,
+            base.info.name,
+            base.info.model
+        );
+    }
+    if t_static.len() != b_static.len() {
+        bail!(
+            "{}: static tail has {} params, staged graph {} has {}",
+            target.name,
+            t_static.len(),
+            base.info.name,
+            b_static.len()
+        );
+    }
+    for (t, b) in t_static.iter().zip(b_static.iter()) {
+        if t.name != b.name || t.shape != b.shape || t.dtype != b.dtype {
+            bail!(
+                "{}: static param '{}' ({:?} {:?}) does not match staged \
+                 graph {}'s '{}' ({:?} {:?})",
+                target.name,
+                t.name,
+                t.dtype,
+                t.shape,
+                base.info.name,
+                b.name,
+                b.dtype,
+                b.shape
+            );
+        }
+    }
+    Ok(n_dynamic)
+}
+
+/// Total payload bytes of a value list (staging accounting).
+fn payload_bytes<'a, I: IntoIterator<Item = &'a Value>>(vals: I) -> usize {
+    vals.into_iter()
+        .map(|v| v.numel() * v.dtype().size())
+        .sum()
+}
+
 /// A graph execution engine.  Backends are driven exclusively through
 /// the [`Runtime`] facade: `prepare` is called once per graph before the
 /// first `execute` (compile-and-cache for PJRT, validate for native).
+///
+/// The execution lifecycle for a serving graph is:
+///
+/// ```text
+/// prepare(graph)                       once (compile / validate)
+/// stage(graph, static weights)         once -> StagedGraph
+/// execute_staged(staged, dynamic args) per step (hot loop)
+/// ```
+///
+/// `execute` remains as the unstaged escape hatch (and the baseline the
+/// parity tests pin `execute_staged` against, bit for bit).
 pub trait ExecBackend {
     /// Short identifier ("native" / "pjrt") for logs and stats.
     fn name(&self) -> &'static str;
@@ -340,6 +570,39 @@ pub trait ExecBackend {
         info: &GraphInfo,
         args: &[&Value],
     ) -> Result<Vec<Value>>;
+
+    /// Materialize the static weight tail ONCE into backend-owned
+    /// handles.  `weights` must be the graph's static params in
+    /// canonical (manifest) order as `(name, value)` pairs.
+    fn stage(
+        &mut self,
+        manifest: &Manifest,
+        info: &GraphInfo,
+        weights: &[(&str, &Value)],
+    ) -> Result<StagedGraph>;
+
+    /// Stage another graph over an ALREADY-staged weight set without
+    /// re-materializing anything: the target's static tail must be
+    /// spec-identical to `base`'s (e.g. the prefill and decode graphs
+    /// of one model/variant), and the backend shares the same handles.
+    fn stage_shared(
+        &mut self,
+        manifest: &Manifest,
+        info: &GraphInfo,
+        base: &StagedGraph,
+    ) -> Result<StagedGraph>;
+
+    /// Run one step from the dynamic arguments alone, reusing the
+    /// staged weight handles.  Output is bit-identical to `execute`
+    /// with the full argument list.
+    fn execute_staged(
+        &mut self,
+        staged: &StagedGraph,
+        dynamic_args: &[&Value],
+    ) -> Result<Vec<Value>>;
+
+    /// Staging counters (see [`StagingStats`]).
+    fn staging_stats(&self) -> StagingStats;
 }
 
 /// Which [`ExecBackend`] to construct.
@@ -483,10 +746,11 @@ impl Runtime {
         self.run_literal_refs(name, &refs)
     }
 
-    /// Execute with BORROWED values — the hot-loop path: the facade
-    /// passes weight values by reference each step without cloning.
-    /// (Backends may still copy internally; see the ROADMAP item on
-    /// backend-level weight staging.)
+    /// Execute with BORROWED values, passing the FULL argument list
+    /// (dynamic head + weight tail) each call.  Backends re-materialize
+    /// the weight tail internally, so this is the unstaged escape hatch;
+    /// the hot loop should [`Self::stage`] once and use
+    /// [`Self::run_staged`] instead.
     pub fn run_literal_refs(
         &mut self,
         name: &str,
@@ -506,9 +770,88 @@ impl Runtime {
         backend.execute(manifest, info, args)
     }
 
+    /// Stage the named graph's static weight tail once.  `weights` are
+    /// `(canonical name, value)` pairs in manifest order — for serving
+    /// graphs that is exactly `model::payload_names` zipped with the
+    /// quantized payload values.
+    pub fn stage(
+        &mut self,
+        name: &str,
+        weights: &[(&str, &Value)],
+    ) -> Result<StagedGraph> {
+        self.executable(name)?;
+        let Runtime { manifest, backend, .. } = self;
+        let info = manifest.graph(name)?;
+        backend.stage(manifest, info, weights)
+    }
+
+    /// Stage `name` by SHARING an existing staged weight set (static
+    /// tails must be spec-identical): nothing is re-materialized, so
+    /// e.g. the prefill and decode graphs of one model/variant hold one
+    /// parsed weight copy between them.
+    pub fn stage_shared(
+        &mut self,
+        name: &str,
+        base: &StagedGraph,
+    ) -> Result<StagedGraph> {
+        if base.backend() != self.backend.name() {
+            bail!(
+                "staged graph {} belongs to backend '{}', runtime is '{}'",
+                base.graph(),
+                base.backend(),
+                self.backend.name()
+            );
+        }
+        self.executable(name)?;
+        let Runtime { manifest, backend, .. } = self;
+        let info = manifest.graph(name)?;
+        backend.stage_shared(manifest, info, base)
+    }
+
+    /// Run one step of a staged graph from its dynamic arguments alone
+    /// (the hot-loop path: no weight bytes move).
+    pub fn run_staged(
+        &mut self,
+        staged: &StagedGraph,
+        dynamic_args: &[&Value],
+    ) -> Result<Vec<Value>> {
+        if staged.backend() != self.backend.name() {
+            bail!(
+                "staged graph {} belongs to backend '{}', runtime is '{}'",
+                staged.graph(),
+                staged.backend(),
+                self.backend.name()
+            );
+        }
+        if dynamic_args.len() != staged.n_dynamic() {
+            bail!(
+                "{}: expected {} dynamic args, got {}",
+                staged.graph(),
+                staged.n_dynamic(),
+                dynamic_args.len()
+            );
+        }
+        self.backend.execute_staged(staged, dynamic_args)
+    }
+
+    /// Staging counters from the active backend.
+    pub fn staging_stats(&self) -> StagingStats {
+        self.backend.staging_stats()
+    }
+
     pub fn loaded_graphs(&self) -> usize {
         self.prepared.len()
     }
+}
+
+/// `ODYSSEY_NO_STAGING=1` (or `true`) disables prepare-once weight
+/// staging — the escape hatch the staged/unstaged parity tests compare
+/// against.  Anything else (including unset) leaves staging on.
+pub fn staging_enabled_from_env() -> bool {
+    !matches!(
+        std::env::var("ODYSSEY_NO_STAGING").as_deref(),
+        Ok("1") | Ok("true")
+    )
 }
 
 #[cfg(test)]

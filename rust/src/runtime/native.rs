@@ -13,8 +13,13 @@
 //!   `gemm_w8a8(xq, s_a, unpack_x16(pack(q)), s_w/16)` — the x16 trick.
 //! * activations are quantized per token ONCE per linear group (q/k/v
 //!   share one input, gate/up share one input), like the serving engine.
+//! * staged execution (`stage` + `execute_staged`) is bit-exact against
+//!   unstaged `execute`: staging only moves the weight parse (including
+//!   the SINT4toS8 x16 unpack) out of the per-step path, it never
+//!   changes the float-op sequence.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -22,7 +27,7 @@ use crate::formats::config::{GraphInfo, GraphKind, Manifest, ModelInfo};
 use crate::quant::{pack, scale, WeightFormat};
 use crate::tensor::{matmul_f32, Tensor};
 
-use super::{ExecBackend, Value};
+use super::{ExecBackend, StagedGraph, StagedHandle, StagingStats, Value};
 
 /// `configs.py::ModelConfig` defaults (the manifest does not carry them;
 /// both tiny models use the defaults).
@@ -89,8 +94,21 @@ pub fn gemm_w4a8_fast(
     s_w: &[f32],
 ) -> Tensor<f32> {
     let w16 = pack::unpack_x16(wp);
+    gemm_w4a8_fast_pre(xq, s_a, &w16, s_w)
+}
+
+/// FastGEMM inner kernel on an ALREADY x16-unpacked weight buffer —
+/// the staged path (`ExecBackend::stage` runs the SINT4toS8 unpack
+/// once).  Same float-op sequence as [`gemm_w4a8_fast`], so staged and
+/// unstaged execution are bit-identical.
+pub fn gemm_w4a8_fast_pre(
+    xq: &Tensor<i8>,
+    s_a: &[f32],
+    w16: &Tensor<i8>,
+    s_w: &[f32],
+) -> Tensor<f32> {
     let (m, n) = (xq.rows(), w16.cols());
-    let acc = idot(xq, &w16);
+    let acc = idot(xq, w16);
     let mut out = vec![0f32; m * n];
     for i in 0..m {
         for j in 0..n {
@@ -221,7 +239,14 @@ fn vec_f32(v: &Value) -> Result<Vec<f32>> {
 enum Mat {
     Fp(Tensor<f32>),
     W8 { wq: Tensor<i8>, s_w: Vec<f32> },
-    W4Fast { wp: Tensor<u8>, s_w: Vec<f32> },
+    /// FastGEMM weights with the SINT4toS8 x16 unpack already applied
+    /// (done at parse time — once, when staged).  The /16 epilogue
+    /// stays in the kernel, so the math matches the packed route
+    /// bit for bit.  Trade-off: the resident copy is 2x the packed
+    /// bytes, but the interpreter's inner GEMM streams the full w16
+    /// buffer either way — hoisting the unpack only removes work from
+    /// the serving hot loop, it does not add per-step traffic.
+    W4Fast { w16: Tensor<i8>, s_w: Vec<f32> },
     W4Grouped { wq: Tensor<i8>, s_g: Tensor<f32> },
     W4Asym { wu: Tensor<u8>, s_w: Vec<f32>, z: Vec<i32> },
 }
@@ -243,11 +268,11 @@ impl Mat {
                 })?;
                 gemm_w8a8(q, s_a, wq, s_w)
             }
-            Mat::W4Fast { wp, s_w } => {
+            Mat::W4Fast { w16, s_w } => {
                 let (q, s_a) = xq.ok_or_else(|| {
                     anyhow!("fastgemm matrix needs quantized activations")
                 })?;
-                gemm_w4a8_fast(q, s_a, wp, s_w)
+                gemm_w4a8_fast_pre(q, s_a, w16, s_w)
             }
             Mat::W4Grouped { wq, s_g } => match xq {
                 // w4a8_group: int path
@@ -295,7 +320,9 @@ struct LayerW {
     w_down: Mat,
 }
 
-struct Weights {
+/// Fully parsed model weights — what `stage()` materializes once and
+/// every staged step reuses (Arc-shared from [`NativeStaged`]).
+pub(crate) struct Weights {
     layers: Vec<LayerW>,
     norm_f: Vec<f32>,
     embed: Tensor<f32>,
@@ -326,7 +353,9 @@ impl<'a, 'b> Cursor<'a, 'b> {
                 s_w: vec_f32(self.take()?)?,
             },
             WeightFormat::W4Packed => Mat::W4Fast {
-                wp: t2::<u8>(self.take()?)?,
+                // SINT4toS8 x16 unpack happens HERE, at parse time:
+                // staged graphs pay it once, not per token
+                w16: pack::unpack_x16(&t2::<u8>(self.take()?)?),
                 s_w: vec_f32(self.take()?)?,
             },
             WeightFormat::W4Grouped => Mat::W4Grouped {
@@ -535,6 +564,10 @@ impl TapSink {
 /// Prefill: tokens i32[B,S], length i32[B], flat weights.
 /// Returns [logits f32[B,S,V], k_cache.0.. , v_cache.0..] with caches
 /// padded to [B,H,max_seq,Dh].
+///
+/// Unstaged entry point: parses the weight tail from `args` on every
+/// call, then runs [`prefill_core`].  Staged execution parses once and
+/// calls the core directly.
 pub fn forward_prefill(
     info: &ModelInfo,
     variant: &str,
@@ -542,14 +575,31 @@ pub fn forward_prefill(
     b: usize,
     s: usize,
     args: &[&Value],
-    mut taps: Option<&mut TapSink>,
+    taps: Option<&mut TapSink>,
 ) -> Result<Vec<Value>> {
-    let quant_act = variant_quant_act(variant)?;
     if args.len() < 2 {
         bail!("prefill needs tokens + length arguments");
     }
     let tokens = args[0].as_slice::<i32>()?;
     let lengths = args[1].as_slice::<i32>()?;
+    let w = parse_weights(&args[2..], info, variant)?;
+    prefill_core(info, variant, group, b, s, tokens, lengths, &w, taps)
+}
+
+/// Prefill on pre-parsed weights (the staged hot path).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn prefill_core(
+    info: &ModelInfo,
+    variant: &str,
+    group: usize,
+    b: usize,
+    s: usize,
+    tokens: &[i32],
+    lengths: &[i32],
+    w: &Weights,
+    mut taps: Option<&mut TapSink>,
+) -> Result<Vec<Value>> {
+    let quant_act = variant_quant_act(variant)?;
     if tokens.len() != b * s || lengths.len() != b {
         bail!(
             "prefill wants tokens[{b},{s}] + length[{b}], got {} / {}",
@@ -557,7 +607,6 @@ pub fn forward_prefill(
             lengths.len()
         );
     }
-    let w = parse_weights(&args[2..], info, variant)?;
     let (d, nh, dh) = (info.d_model, info.n_heads, info.head_dim);
     let (v, smax) = (info.vocab, info.max_seq);
     let half = dh / 2;
@@ -730,34 +779,18 @@ pub fn forward_prefill(
     Ok(outs)
 }
 
-/// Decode: token i32[B], pos i32[B], 2*L caches f32[B,H,Smax,Dh], flat
-/// weights.  Returns [logits f32[B,V], updated k caches, v caches].
-pub fn forward_decode(
-    info: &ModelInfo,
-    variant: &str,
-    group: usize,
-    b: usize,
-    args: &[&Value],
-) -> Result<Vec<Value>> {
-    let quant_act = variant_quant_act(variant)?;
-    let nl = info.n_layers;
-    if args.len() < 2 + 2 * nl {
-        bail!("decode needs token + pos + {} cache arguments", 2 * nl);
-    }
-    let token = args[0].as_slice::<i32>()?;
-    let pos = args[1].as_slice::<i32>()?;
-    if token.len() != b || pos.len() != b {
-        bail!("decode wants token[{b}] + pos[{b}]");
-    }
-    let (d, nh, dh) = (info.d_model, info.n_heads, info.head_dim);
-    let (v, smax) = (info.vocab, info.max_seq);
-    let half = dh / 2;
-    let cache_len = b * nh * smax * dh;
+/// Parse the dynamic KV-cache head of a decode argument list into
+/// per-layer host arrays (shared by the staged and unstaged paths).
+fn parse_decode_caches(
+    cache_args: &[&Value],
+    nl: usize,
+    cache_len: usize,
+) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
     let mut k_caches: Vec<Vec<f32>> = Vec::with_capacity(nl);
     let mut v_caches: Vec<Vec<f32>> = Vec::with_capacity(nl);
     for l in 0..nl {
-        let kc = args[2 + l].to_vec::<f32>()?;
-        let vc = args[2 + nl + l].to_vec::<f32>()?;
+        let kc = cache_args[l].to_vec::<f32>()?;
+        let vc = cache_args[nl + l].to_vec::<f32>()?;
         if kc.len() != cache_len || vc.len() != cache_len {
             bail!(
                 "decode cache {l}: expected {cache_len} f32s, got {} / {}",
@@ -768,7 +801,66 @@ pub fn forward_decode(
         k_caches.push(kc);
         v_caches.push(vc);
     }
+    Ok((k_caches, v_caches))
+}
+
+/// Decode: token i32[B], pos i32[B], 2*L caches f32[B,H,Smax,Dh], flat
+/// weights.  Returns [logits f32[B,V], updated k caches, v caches].
+///
+/// Unstaged entry point: parses the weight tail from `args` on every
+/// call, then runs [`decode_core`].  Staged execution parses once and
+/// calls the core directly.
+pub fn forward_decode(
+    info: &ModelInfo,
+    variant: &str,
+    group: usize,
+    b: usize,
+    args: &[&Value],
+) -> Result<Vec<Value>> {
+    let nl = info.n_layers;
+    if args.len() < 2 + 2 * nl {
+        bail!("decode needs token + pos + {} cache arguments", 2 * nl);
+    }
+    let token = args[0].as_slice::<i32>()?;
+    let pos = args[1].as_slice::<i32>()?;
+    let cache_len = b * info.n_heads * info.max_seq * info.head_dim;
+    let (k_caches, v_caches) =
+        parse_decode_caches(&args[2..2 + 2 * nl], nl, cache_len)?;
     let w = parse_weights(&args[2 + 2 * nl..], info, variant)?;
+    decode_core(info, variant, group, b, token, pos, k_caches, v_caches, &w)
+}
+
+/// Decode on pre-parsed weights (the staged hot path).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn decode_core(
+    info: &ModelInfo,
+    variant: &str,
+    group: usize,
+    b: usize,
+    token: &[i32],
+    pos: &[i32],
+    mut k_caches: Vec<Vec<f32>>,
+    mut v_caches: Vec<Vec<f32>>,
+    w: &Weights,
+) -> Result<Vec<Value>> {
+    let quant_act = variant_quant_act(variant)?;
+    let nl = info.n_layers;
+    if token.len() != b || pos.len() != b {
+        bail!("decode wants token[{b}] + pos[{b}]");
+    }
+    let (d, nh, dh) = (info.d_model, info.n_heads, info.head_dim);
+    let (v, smax) = (info.vocab, info.max_seq);
+    let half = dh / 2;
+    let cache_len = b * nh * smax * dh;
+    if k_caches.len() != nl || v_caches.len() != nl {
+        bail!("decode wants {nl} k + {nl} v caches");
+    }
+    for l in 0..nl {
+        if k_caches[l].len() != cache_len || v_caches[l].len() != cache_len
+        {
+            bail!("decode cache {l}: expected {cache_len} f32s");
+        }
+    }
     for &p in pos {
         if p < 0 || p as usize >= smax {
             bail!("decode pos {p} out of cache range 0..{smax}");
@@ -905,66 +997,164 @@ pub fn forward_decode(
     Ok(outs)
 }
 
-/// Standalone GEMM graphs (the measured kernel benches).
+/// Standalone GEMM graphs (the measured kernel benches).  Unstaged
+/// execution is parse-then-run of the EXACT staged dispatch
+/// (`parse_gemm_weights` + `run_gemm_staged`), so staged/unstaged
+/// bit-exactness holds by construction — there is one kernel table.
 fn run_gemm(gi: &GraphInfo, args: &[&Value]) -> Result<Vec<Value>> {
-    let out = match gi.variant.as_str() {
-        "fp" => gemm_fp(&t2::<f32>(args[0])?, &t2::<f32>(args[1])?),
-        "w8a8" => gemm_w8a8(
-            &t2::<i8>(args[0])?,
-            &vec_f32(args[1])?,
-            &t2::<i8>(args[2])?,
-            &vec_f32(args[3])?,
-        ),
-        "w4a8_fast" => gemm_w4a8_fast(
-            &t2::<i8>(args[0])?,
-            &vec_f32(args[1])?,
-            &t2::<u8>(args[2])?,
-            &vec_f32(args[3])?,
-        ),
-        "w4a8_unfused" => gemm_w4a8_unfused(
-            &t2::<i8>(args[0])?,
-            &vec_f32(args[1])?,
-            &t2::<u8>(args[2])?,
-            &vec_f32(args[3])?,
-        ),
-        "w4a8_group" => gemm_w4a8_grouped(
-            &t2::<i8>(args[0])?,
-            &vec_f32(args[1])?,
-            &t2::<i8>(args[2])?,
-            &t2::<f32>(args[3])?,
-            gi.group,
-        ),
-        "w4a8_asym" => gemm_w4a8_asym(
-            &t2::<i8>(args[0])?,
-            &vec_f32(args[1])?,
-            &t2::<u8>(args[2])?,
-            &vec_f32(args[3])?,
-            &args[4].to_vec::<i32>()?,
-        ),
-        "w4a16" => gemm_w4a16(
-            &t2::<f32>(args[0])?,
-            &t2::<i8>(args[1])?,
-            &t2::<f32>(args[2])?,
-            gi.group,
-        ),
-        other => bail!("gemm graph {}: unknown variant {other}", gi.name),
-    };
-    let (m, n) = (out.rows(), out.cols());
-    Ok(vec![Value::f32(&[m, n], out.into_vec())])
+    let n_dyn = crate::formats::config::gemm_dynamic_args(&gi.variant);
+    if args.len() < n_dyn {
+        bail!("gemm graph {}: expected at least {n_dyn} args", gi.name);
+    }
+    let w = parse_gemm_weights(gi, &args[n_dyn..])?;
+    run_gemm_staged(gi, &w, &args[..n_dyn])
 }
 
 // ---------------------------------------------------------------------
 // the backend
 // ---------------------------------------------------------------------
 
-/// Pure-Rust CPU backend (the default).  Stateless between calls; graph
-/// "preparation" validates the graph against the manifest.
+/// Staged weight handles owned by the native backend, always in
+/// kernel-ready form behind an `Arc`: model graphs hold fully parsed
+/// [`Weights`], GEMM graphs a [`GemmW`].  Staged steps parse only their
+/// dynamic activation head — zero weight bytes move per call.
+pub(crate) enum NativeStaged {
+    Model {
+        minfo: ModelInfo,
+        /// quantization group size (manifest-level; serving GraphInfo
+        /// carries 0, so it is captured here at stage time)
+        group: usize,
+        weights: Arc<Weights>,
+    },
+    Gemm {
+        weights: Arc<GemmW>,
+    },
+}
+
+/// Pre-parsed GEMM weight tail.  Unlike the serving path ([`Mat`]),
+/// the int4 variants keep their PACKED payloads: these graphs are the
+/// measured kernel ablations, and the in-kernel conversion (FastGEMM's
+/// fused x16 unpack vs the unfused baseline's value recovery) is
+/// exactly the cost they exist to compare — staging removes only the
+/// per-call Value-to-tensor weight copies, never the kernel's own work.
+pub(crate) enum GemmW {
+    Fp { w: Tensor<f32> },
+    W8 { wq: Tensor<i8>, s_w: Vec<f32> },
+    W4Fast { wp: Tensor<u8>, s_w: Vec<f32> },
+    W4Unfused { wp: Tensor<u8>, s_w: Vec<f32> },
+    W4Grouped { wq: Tensor<i8>, s_g: Tensor<f32> },
+    W4Asym { wu: Tensor<u8>, s_w: Vec<f32>, z: Vec<i32> },
+}
+
+/// Positional fetch from a borrowed value list with a graph-aware error
+/// (used by the staged GEMM paths below).
+fn nth<'b>(
+    vals: &[&'b Value],
+    i: usize,
+    gname: &str,
+    what: &str,
+) -> Result<&'b Value> {
+    vals.get(i)
+        .copied()
+        .ok_or_else(|| anyhow!("gemm graph {gname}: {what} list too short"))
+}
+
+/// Parse a GEMM graph's static weight values into kernel-ready form
+/// (counts already validated against the manifest by the caller).
+fn parse_gemm_weights(gi: &GraphInfo, vals: &[&Value]) -> Result<GemmW> {
+    let take = |i: usize| nth(vals, i, &gi.name, "weight");
+    Ok(match gi.variant.as_str() {
+        "fp" => GemmW::Fp { w: t2::<f32>(take(0)?)? },
+        "w8a8" => GemmW::W8 {
+            wq: t2::<i8>(take(0)?)?,
+            s_w: vec_f32(take(1)?)?,
+        },
+        "w4a8_fast" => GemmW::W4Fast {
+            wp: t2::<u8>(take(0)?)?,
+            s_w: vec_f32(take(1)?)?,
+        },
+        "w4a8_unfused" => GemmW::W4Unfused {
+            wp: t2::<u8>(take(0)?)?,
+            s_w: vec_f32(take(1)?)?,
+        },
+        "w4a8_group" | "w4a16" => GemmW::W4Grouped {
+            wq: t2::<i8>(take(0)?)?,
+            s_g: t2::<f32>(take(1)?)?,
+        },
+        "w4a8_asym" => GemmW::W4Asym {
+            wu: t2::<u8>(take(0)?)?,
+            s_w: vec_f32(take(1)?)?,
+            z: take(2)?.to_vec::<i32>()?,
+        },
+        other => bail!("gemm graph {}: unknown variant {other}", gi.name),
+    })
+}
+
+/// Run a staged GEMM step: parse only the dynamic activation head and
+/// apply the pre-parsed weights.  Kernel-for-kernel identical to
+/// [`run_gemm`], so staged output is bit-exact against unstaged.
+fn run_gemm_staged(
+    gi: &GraphInfo,
+    w: &GemmW,
+    dynamic: &[&Value],
+) -> Result<Vec<Value>> {
+    let take = |i: usize| nth(dynamic, i, &gi.name, "dynamic-arg");
+    let out = match w {
+        GemmW::Fp { w } => gemm_fp(&t2::<f32>(take(0)?)?, w),
+        GemmW::W8 { wq, s_w } => gemm_w8a8(
+            &t2::<i8>(take(0)?)?,
+            &vec_f32(take(1)?)?,
+            wq,
+            s_w,
+        ),
+        GemmW::W4Fast { wp, s_w } => gemm_w4a8_fast(
+            &t2::<i8>(take(0)?)?,
+            &vec_f32(take(1)?)?,
+            wp,
+            s_w,
+        ),
+        GemmW::W4Unfused { wp, s_w } => gemm_w4a8_unfused(
+            &t2::<i8>(take(0)?)?,
+            &vec_f32(take(1)?)?,
+            wp,
+            s_w,
+        ),
+        GemmW::W4Grouped { wq, s_g } => {
+            if gi.variant == "w4a16" {
+                gemm_w4a16(&t2::<f32>(take(0)?)?, wq, s_g, gi.group)
+            } else {
+                gemm_w4a8_grouped(
+                    &t2::<i8>(take(0)?)?,
+                    &vec_f32(take(1)?)?,
+                    wq,
+                    s_g,
+                    gi.group,
+                )
+            }
+        }
+        GemmW::W4Asym { wu, s_w, z } => gemm_w4a8_asym(
+            &t2::<i8>(take(0)?)?,
+            &vec_f32(take(1)?)?,
+            wu,
+            s_w,
+            z,
+        ),
+    };
+    let (m, n) = (out.rows(), out.cols());
+    Ok(vec![Value::f32(&[m, n], out.into_vec())])
+}
+
+/// Pure-Rust CPU backend (the default).  Graph "preparation" validates
+/// the graph against the manifest; `stage` parses weight payloads once
+/// into [`NativeStaged`] handles.
 #[derive(Default)]
-pub struct NativeBackend {}
+pub struct NativeBackend {
+    stats: StagingStats,
+}
 
 impl NativeBackend {
     pub fn new() -> Self {
-        NativeBackend {}
+        NativeBackend::default()
     }
 
     fn model_of<'m>(
@@ -1024,6 +1214,16 @@ impl ExecBackend for NativeBackend {
         info: &GraphInfo,
         args: &[&Value],
     ) -> Result<Vec<Value>> {
+        // staging accounting: every unstaged call re-materializes the
+        // static weight tail (parse_weights copies each payload)
+        self.stats.unstaged_execs += 1;
+        if let Ok(n_dyn) = info.dynamic_param_count(manifest) {
+            if n_dyn <= args.len() {
+                self.stats.weight_bytes_rematerialized +=
+                    super::payload_bytes(args[n_dyn..].iter().copied())
+                        as u64;
+            }
+        }
         match info.kind {
             GraphKind::Gemm => run_gemm(info, args),
             GraphKind::Prefill => {
@@ -1049,6 +1249,185 @@ impl ExecBackend for NativeBackend {
                 )
             }
         }
+    }
+
+    fn stage(
+        &mut self,
+        manifest: &Manifest,
+        info: &GraphInfo,
+        weights: &[(&str, &Value)],
+    ) -> Result<StagedGraph> {
+        self.prepare(manifest, info)?;
+        let n_dynamic = super::check_staged_weights(manifest, info, weights)?;
+        let handle = match info.kind {
+            GraphKind::Gemm => {
+                let vals: Vec<&Value> =
+                    weights.iter().map(|(_, v)| *v).collect();
+                NativeStaged::Gemm {
+                    weights: Arc::new(parse_gemm_weights(info, &vals)?),
+                }
+            }
+            GraphKind::Prefill | GraphKind::Decode => {
+                let minfo = Self::model_of(manifest, info)?.clone();
+                let vals: Vec<&Value> =
+                    weights.iter().map(|(_, v)| *v).collect();
+                let parsed = parse_weights(&vals, &minfo, &info.variant)?;
+                NativeStaged::Model {
+                    minfo,
+                    group: manifest.group_size,
+                    weights: Arc::new(parsed),
+                }
+            }
+        };
+        let weight_bytes =
+            super::payload_bytes(weights.iter().map(|(_, v)| *v));
+        self.stats.stage_calls += 1;
+        self.stats.weight_bytes_staged += weight_bytes as u64;
+        Ok(StagedGraph {
+            info: info.clone(),
+            backend: "native",
+            n_dynamic,
+            weight_bytes,
+            handle: StagedHandle::Native(handle),
+        })
+    }
+
+    fn stage_shared(
+        &mut self,
+        manifest: &Manifest,
+        info: &GraphInfo,
+        base: &StagedGraph,
+    ) -> Result<StagedGraph> {
+        self.prepare(manifest, info)?;
+        let n_dynamic =
+            super::check_shared_staging(manifest, info, base)?;
+        // without the pjrt feature StagedHandle has a single variant and
+        // this destructuring is infallible; with it, reject foreign handles
+        #[allow(clippy::infallible_destructuring_match)]
+        let base_handle = match &base.handle {
+            StagedHandle::Native(h) => h,
+            #[cfg(feature = "pjrt")]
+            _ => bail!(
+                "staged graph {} was staged by another backend",
+                base.info.name
+            ),
+        };
+        let handle = match (info.kind, base_handle) {
+            (
+                GraphKind::Prefill | GraphKind::Decode,
+                NativeStaged::Model { minfo, group, weights },
+            ) => NativeStaged::Model {
+                minfo: minfo.clone(),
+                group: *group,
+                // the whole point: one parsed weight copy, shared
+                weights: Arc::clone(weights),
+            },
+            (GraphKind::Gemm, NativeStaged::Gemm { weights }) => {
+                NativeStaged::Gemm { weights: Arc::clone(weights) }
+            }
+            _ => bail!(
+                "{}: graph kind {:?} cannot share weights staged for {}",
+                info.name,
+                info.kind,
+                base.info.name
+            ),
+        };
+        // nothing was materialized — stage_calls / byte counters untouched
+        Ok(StagedGraph {
+            info: info.clone(),
+            backend: "native",
+            n_dynamic,
+            weight_bytes: base.weight_bytes,
+            handle: StagedHandle::Native(handle),
+        })
+    }
+
+    fn execute_staged(
+        &mut self,
+        staged: &StagedGraph,
+        dynamic_args: &[&Value],
+    ) -> Result<Vec<Value>> {
+        // without the pjrt feature StagedHandle has a single variant and
+        // this destructuring is infallible; with it, reject foreign handles
+        #[allow(clippy::infallible_destructuring_match)]
+        let handle = match &staged.handle {
+            StagedHandle::Native(h) => h,
+            #[cfg(feature = "pjrt")]
+            _ => bail!(
+                "staged graph {} was staged by another backend",
+                staged.info.name
+            ),
+        };
+        self.stats.staged_execs += 1;
+        let info = &staged.info;
+        match (info.kind, handle) {
+            (GraphKind::Gemm, NativeStaged::Gemm { weights }) => {
+                run_gemm_staged(info, weights, dynamic_args)
+            }
+            (
+                GraphKind::Prefill,
+                NativeStaged::Model { minfo, group, weights },
+            ) => {
+                if dynamic_args.len() != 2 {
+                    bail!("staged prefill wants [tokens, length]");
+                }
+                let tokens = dynamic_args[0].as_slice::<i32>()?;
+                let lengths = dynamic_args[1].as_slice::<i32>()?;
+                prefill_core(
+                    minfo,
+                    &info.variant,
+                    *group,
+                    info.batch,
+                    info.seq,
+                    tokens,
+                    lengths,
+                    weights,
+                    None,
+                )
+            }
+            (
+                GraphKind::Decode,
+                NativeStaged::Model { minfo, group, weights },
+            ) => {
+                let nl = minfo.n_layers;
+                if dynamic_args.len() != 2 + 2 * nl {
+                    bail!(
+                        "staged decode wants [token, pos, {} caches]",
+                        2 * nl
+                    );
+                }
+                let token = dynamic_args[0].as_slice::<i32>()?;
+                let pos = dynamic_args[1].as_slice::<i32>()?;
+                let b = info.batch;
+                let cache_len =
+                    b * minfo.n_heads * minfo.max_seq * minfo.head_dim;
+                let (k_caches, v_caches) = parse_decode_caches(
+                    &dynamic_args[2..2 + 2 * nl],
+                    nl,
+                    cache_len,
+                )?;
+                decode_core(
+                    minfo,
+                    &info.variant,
+                    *group,
+                    b,
+                    token,
+                    pos,
+                    k_caches,
+                    v_caches,
+                    weights,
+                )
+            }
+            _ => bail!(
+                "staged handle kind does not match graph {} ({:?})",
+                info.name,
+                info.kind
+            ),
+        }
+    }
+
+    fn staging_stats(&self) -> StagingStats {
+        self.stats
     }
 }
 

@@ -7,14 +7,23 @@
 //! The default build links the offline `xla` stub (see
 //! `third_party/xla-stub`), which type-checks this backend but errors at
 //! execute time; swap in the real `xla` crate to run artifacts.
+//!
+//! Weight staging restores the original `stage`/`execute_b` PJRT flow:
+//! `stage` serializes the static weight tail to literals once and parks
+//! them as device buffers; `execute_staged` then uploads only the
+//! dynamic head per step and runs over buffer references.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::formats::config::{Dtype, GraphInfo, Manifest, ParamSpec};
 
-use super::{ExecBackend, ElementType, Value};
+use super::{
+    ExecBackend, ElementType, StagedGraph, StagedHandle, StagingStats,
+    Value,
+};
 
 fn xla_elem(ty: ElementType) -> xla::ElementType {
     match ty {
@@ -90,17 +99,56 @@ fn value_of(lit: &xla::Literal, spec: &ParamSpec) -> Result<Value> {
     })
 }
 
+/// Staged weights on the PJRT backend: the static tail pre-serialized
+/// into DEVICE buffers once, so per-step execution only uploads the
+/// dynamic head instead of re-serializing every weight Value to a
+/// literal (the old per-token cost this API removes).
+pub(crate) struct PjrtStaged {
+    bufs: Arc<Vec<xla::PjRtBuffer>>,
+}
+
 /// PJRT client + compiled-executable cache.
 pub struct PjrtBackend {
     client: xla::PjRtClient,
     executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    stats: StagingStats,
 }
 
 impl PjrtBackend {
     pub fn new() -> Result<Self> {
         let client =
             xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
-        Ok(PjrtBackend { client, executables: BTreeMap::new() })
+        Ok(PjrtBackend {
+            client,
+            executables: BTreeMap::new(),
+            stats: StagingStats::default(),
+        })
+    }
+
+    /// Fetch + untuple an execution result against the manifest specs.
+    fn fetch_outputs(
+        out: Vec<Vec<xla::PjRtBuffer>>,
+        info: &GraphInfo,
+    ) -> Result<Vec<Value>> {
+        let result = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e:?}", info.name))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {}: {e:?}", info.name))?;
+        if parts.len() != info.outputs.len() {
+            return Err(anyhow!(
+                "{}: graph returned {} outputs, manifest lists {}",
+                info.name,
+                parts.len(),
+                info.outputs.len()
+            ));
+        }
+        parts
+            .iter()
+            .zip(info.outputs.iter())
+            .map(|(lit, spec)| value_of(lit, spec))
+            .collect()
     }
 }
 
@@ -133,10 +181,20 @@ impl ExecBackend for PjrtBackend {
 
     fn execute(
         &mut self,
-        _manifest: &Manifest,
+        manifest: &Manifest,
         info: &GraphInfo,
         args: &[&Value],
     ) -> Result<Vec<Value>> {
+        // staging accounting: the whole arg list (weights included) is
+        // re-serialized to literals on every unstaged call
+        self.stats.unstaged_execs += 1;
+        if let Ok(n_dyn) = info.dynamic_param_count(manifest) {
+            if n_dyn <= args.len() {
+                self.stats.weight_bytes_rematerialized +=
+                    super::payload_bytes(args[n_dyn..].iter().copied())
+                        as u64;
+            }
+        }
         let exe = self
             .executables
             .get(&info.name)
@@ -149,24 +207,107 @@ impl ExecBackend for PjrtBackend {
         let out = exe
             .execute::<&xla::Literal>(&refs)
             .map_err(|e| anyhow!("execute {}: {e:?}", info.name))?;
-        let result = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {}: {e:?}", info.name))?;
-        let parts = result
-            .to_tuple()
-            .map_err(|e| anyhow!("untuple {}: {e:?}", info.name))?;
-        if parts.len() != info.outputs.len() {
-            return Err(anyhow!(
-                "{}: graph returned {} outputs, manifest lists {}",
-                info.name,
-                parts.len(),
-                info.outputs.len()
-            ));
-        }
-        parts
+        Self::fetch_outputs(out, info)
+    }
+
+    fn stage(
+        &mut self,
+        manifest: &Manifest,
+        info: &GraphInfo,
+        weights: &[(&str, &Value)],
+    ) -> Result<StagedGraph> {
+        self.prepare(manifest, info)?;
+        let n_dynamic = super::check_staged_weights(manifest, info, weights)?;
+        // serialize each weight Value once, then park it on the device
+        let bufs = weights
             .iter()
-            .zip(info.outputs.iter())
-            .map(|(lit, spec)| value_of(lit, spec))
-            .collect()
+            .map(|(name, v)| {
+                let lit = literal_of(v)?;
+                self.client
+                    .buffer_from_host_literal(None, &lit)
+                    .map_err(|e| anyhow!("staging {name}: {e:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let weight_bytes =
+            super::payload_bytes(weights.iter().map(|(_, v)| *v));
+        self.stats.stage_calls += 1;
+        self.stats.weight_bytes_staged += weight_bytes as u64;
+        Ok(StagedGraph {
+            info: info.clone(),
+            backend: "pjrt",
+            n_dynamic,
+            weight_bytes,
+            handle: StagedHandle::Pjrt(PjrtStaged { bufs: Arc::new(bufs) }),
+        })
+    }
+
+    fn stage_shared(
+        &mut self,
+        manifest: &Manifest,
+        info: &GraphInfo,
+        base: &StagedGraph,
+    ) -> Result<StagedGraph> {
+        self.prepare(manifest, info)?;
+        let n_dynamic =
+            super::check_shared_staging(manifest, info, base)?;
+        let handle = match &base.handle {
+            // share the same device buffers — nothing re-serialized
+            StagedHandle::Pjrt(h) => {
+                PjrtStaged { bufs: Arc::clone(&h.bufs) }
+            }
+            _ => bail!(
+                "staged graph {} was staged by another backend",
+                base.info.name
+            ),
+        };
+        Ok(StagedGraph {
+            info: info.clone(),
+            backend: "pjrt",
+            n_dynamic,
+            weight_bytes: base.weight_bytes,
+            handle: StagedHandle::Pjrt(handle),
+        })
+    }
+
+    fn execute_staged(
+        &mut self,
+        staged: &StagedGraph,
+        dynamic_args: &[&Value],
+    ) -> Result<Vec<Value>> {
+        let handle = match &staged.handle {
+            StagedHandle::Pjrt(h) => h,
+            _ => bail!(
+                "staged graph {} was staged by another backend",
+                staged.info.name
+            ),
+        };
+        let info = &staged.info;
+        let exe = self
+            .executables
+            .get(&info.name)
+            .ok_or_else(|| anyhow!("{} not prepared", info.name))?;
+        // only the dynamic head crosses the host/device boundary
+        let dyn_bufs = dynamic_args
+            .iter()
+            .map(|v| {
+                let lit = literal_of(v)?;
+                self.client
+                    .buffer_from_host_literal(None, &lit)
+                    .map_err(|e| anyhow!("upload {}: {e:?}", info.name))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut refs: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(dyn_bufs.len() + handle.bufs.len());
+        refs.extend(dyn_bufs.iter());
+        refs.extend(handle.bufs.iter());
+        self.stats.staged_execs += 1;
+        let out = exe
+            .execute_b::<&xla::PjRtBuffer>(&refs)
+            .map_err(|e| anyhow!("execute_b {}: {e:?}", info.name))?;
+        Self::fetch_outputs(out, info)
+    }
+
+    fn staging_stats(&self) -> StagingStats {
+        self.stats
     }
 }

@@ -215,6 +215,99 @@ fn service_handles_concurrent_callers() {
     });
 }
 
+#[test]
+fn staged_and_unstaged_engines_produce_identical_streams() {
+    // full engine run (prefill + >=8 decode steps) with prepare-once
+    // weight staging on vs the ODYSSEY_NO_STAGING escape-hatch path:
+    // the token streams must match exactly, and the staging-hit
+    // counters must show the staged handles were REUSED — zero weight
+    // re-materializations after engine construction.
+    with_engine(|_shared| {
+        let run = |staging: bool| {
+            let mut o = opts("w4a8_fast");
+            o.staging = staging; // what ODYSSEY_NO_STAGING=1 flips off
+            let mut engine = Engine::new(o).unwrap();
+            for i in 0..3u64 {
+                engine.submit(Request::new(
+                    i,
+                    prompt(i as i32 * 5 + 2, 12),
+                    GenParams {
+                        max_new_tokens: 10,
+                        eos: None,
+                        ..Default::default()
+                    },
+                ));
+            }
+            let mut results = engine.run_until_idle().unwrap();
+            results.sort_by_key(|r| r.id);
+            let tokens: Vec<Vec<i32>> =
+                results.into_iter().map(|r| r.tokens).collect();
+            (tokens, engine.staging_stats(), engine.metrics.decode_steps)
+        };
+
+        let (staged_tokens, s_stats, decode_steps) = run(true);
+        let (unstaged_tokens, u_stats, _) = run(false);
+
+        // bit-identical serving: same logits -> same sampled streams
+        assert_eq!(staged_tokens, unstaged_tokens);
+        assert_eq!(staged_tokens.len(), 3);
+        assert!(staged_tokens.iter().all(|t| t.len() == 10));
+
+        // staged engine: weights materialized exactly ONCE — the decode
+        // graph staged them and the prefill graph shares the handles
+        // (stage_shared) — then every step reused them
+        assert!(decode_steps >= 8, "want >=8 decode steps, got {decode_steps}");
+        assert_eq!(
+            s_stats.stage_calls, 1,
+            "one weight materialization shared by both serving graphs"
+        );
+        assert!(
+            s_stats.staged_execs >= 1 + decode_steps,
+            "every prefill/decode step must hit the staged handles \
+             (staged_execs={}, decode_steps={decode_steps})",
+            s_stats.staged_execs
+        );
+        assert_eq!(
+            s_stats.unstaged_execs, 0,
+            "staged engine must never take the legacy execute path"
+        );
+        assert_eq!(
+            s_stats.weight_bytes_rematerialized, 0,
+            "decode steps must not copy weight payloads"
+        );
+        assert!(s_stats.weight_bytes_staged > 0);
+
+        // escape hatch: no staging, every step re-materializes
+        assert_eq!(u_stats.stage_calls, 0);
+        assert_eq!(u_stats.staged_execs, 0);
+        assert!(u_stats.unstaged_execs >= 1 + decode_steps);
+        assert!(u_stats.weight_bytes_rematerialized > 0);
+    });
+}
+
+#[test]
+fn no_staging_env_var_flips_the_default() {
+    // serialized via with_engine so the env flip cannot race another
+    // engine construction in this binary; the caller's own value of the
+    // variable is snapshotted and restored so running the whole suite
+    // under ODYSSEY_NO_STAGING=1 stays green
+    with_engine(|_shared| {
+        let saved = std::env::var("ODYSSEY_NO_STAGING").ok();
+        std::env::remove_var("ODYSSEY_NO_STAGING");
+        let on_by_default = odyssey::runtime::staging_enabled_from_env();
+        std::env::set_var("ODYSSEY_NO_STAGING", "1");
+        let off = odyssey::runtime::staging_enabled_from_env();
+        let opts_off = EngineOptions::default().staging;
+        match saved {
+            Some(v) => std::env::set_var("ODYSSEY_NO_STAGING", v),
+            None => std::env::remove_var("ODYSSEY_NO_STAGING"),
+        }
+        assert!(on_by_default, "staging must default on when env unset");
+        assert!(!off, "ODYSSEY_NO_STAGING=1 must disable staging");
+        assert!(!opts_off, "EngineOptions::default must honor the env");
+    });
+}
+
 /// Logits at the last prompt position from the b=4 prefill graph
 /// (row 0 carries the prompt; the other rows are padding).
 fn last_pos_logits(engine: &mut Engine, prompt: &[i32]) -> Vec<f32> {

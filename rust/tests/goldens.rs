@@ -11,16 +11,25 @@
 //! native backend with synthetic artifacts — every test here SKIPS
 //! rather than fails.  Run `python -m compile.aot` to enable them.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use odyssey::formats::safetensors::SafeTensors;
 use odyssey::quant::{awq, gptq, lwc, pack, rtn, scale, smoothquant,
                      GptqConfig};
 use odyssey::tensor::Tensor;
 
+/// Running count of tests skipped for missing goldens, so a CI log
+/// shows "skipped: ..." lines with an explicit tally instead of the
+/// suite silently reading as all-passed.
+static SKIPPED: AtomicUsize = AtomicUsize::new(0);
+
 fn goldens() -> Option<SafeTensors> {
     if !std::path::Path::new("artifacts/goldens.safetensors").exists() {
+        let n = SKIPPED.fetch_add(1, Ordering::SeqCst) + 1;
         eprintln!(
-            "skipping golden test: artifacts/goldens.safetensors absent \
-             (python AOT pass not run)"
+            "skipped: artifacts/goldens.safetensors absent (python AOT \
+             pass not run; `python -m compile.aot` emits it) — golden \
+             test skip #{n} in this run"
         );
         return None;
     }
@@ -30,7 +39,8 @@ fn goldens() -> Option<SafeTensors> {
     )
 }
 
-/// Fetch the goldens or skip the calling test.
+/// Fetch the goldens or skip the calling test (with an explicit
+/// `skipped: <reason>` line on stderr — a skip must never be silent).
 macro_rules! goldens_or_skip {
     () => {
         match goldens() {

@@ -1,12 +1,17 @@
 //! Cross-module property tests (mini-propcheck harness; seeds reported
-//! on failure).  Pure CPU — no artifacts needed.
+//! on failure).  Pure CPU; the staged-execution parity section
+//! synthesizes the tiny3m artifact set on first use.
 
 use odyssey::coordinator::kv::KvState;
 use odyssey::coordinator::queue::{Admit, RequestQueue};
 use odyssey::coordinator::request::{GenParams, Request};
+use odyssey::exp::latency::random_gemm_args_with;
+use odyssey::formats::config::ModelInfo;
 use odyssey::formats::json::Json;
 use odyssey::formats::safetensors::{SafeTensors, StTensor};
-use odyssey::quant::{gptq, lwc, pack, rtn, scale, GptqConfig};
+use odyssey::model::{self, Checkpoint};
+use odyssey::quant::{gptq, lwc, pack, rtn, scale, GptqConfig, QuantRecipe};
+use odyssey::runtime::{self, synth, BackendKind, Runtime};
 use odyssey::tensor::Tensor;
 use odyssey::util::propcheck::Prop;
 use odyssey::util::XorShift;
@@ -279,6 +284,176 @@ fn corrupted_json_rejected_not_panicking() {
         }
         if let Ok(text) = std::str::from_utf8(&bytes) {
             let _ = Json::parse(text); // must not panic
+        }
+    });
+}
+
+// ------------------------------------- staged execution parity (tentpole)
+
+/// Random tiny3m-shaped checkpoint (weights drawn fresh per case, so
+/// the parity property ranges over graphs, not one fixed weight set).
+fn random_checkpoint(info: &ModelInfo, rng: &mut XorShift) -> Checkpoint {
+    let (d, f, v) = (info.d_model, info.d_ff, info.vocab);
+    let mut tensors = std::collections::BTreeMap::new();
+    for name in model::weight_names(info) {
+        let leaf = name.rsplit('.').next().unwrap();
+        let t = match leaf {
+            "attn_norm" | "mlp_norm" | "norm_f" => {
+                Tensor::randn(&[d], rng.next_u64()).map(|x| 1.0 + 0.05 * x)
+            }
+            "wq" | "wk" | "wv" | "wo" => Tensor::randn(&[d, d], rng.next_u64())
+                .map(|x| x / (d as f32).sqrt()),
+            "w_gate" | "w_up" => Tensor::randn(&[d, f], rng.next_u64())
+                .map(|x| x / (d as f32).sqrt()),
+            "w_down" => Tensor::randn(&[f, d], rng.next_u64())
+                .map(|x| x / (f as f32).sqrt()),
+            "embed" => {
+                Tensor::randn(&[v, d], rng.next_u64()).map(|x| 0.02 * x)
+            }
+            "lm_head" => Tensor::randn(&[d, v], rng.next_u64())
+                .map(|x| x / (d as f32).sqrt()),
+            other => panic!("unexpected weight leaf {other}"),
+        };
+        tensors.insert(name, t);
+    }
+    Checkpoint { info: info.clone(), tensors }
+}
+
+/// `execute_staged` must be BIT-IDENTICAL to `execute` on the serving
+/// graphs for the fp-sim, W8A8, and W4A8-fast paths — staging moves the
+/// weight parse (including the SINT4toS8 x16 unpack) out of the step,
+/// it must not change a single output bit.
+#[test]
+fn prop_staged_serving_graphs_bit_identical_to_unstaged() {
+    synth::ensure_artifacts("artifacts").expect("synthesize artifacts");
+    Prop::new("staged == unstaged (serving)").cases(2).check(|rng| {
+        let mut rt =
+            Runtime::with_backend("artifacts", BackendKind::Native).unwrap();
+        let info = rt.manifest.model("tiny3m").unwrap().clone();
+        let group = rt.manifest.group_size;
+        for variant in ["fp", "w8a8", "w4a8_fast"] {
+            let ckpt = random_checkpoint(&info, rng);
+            let qw = model::quantize_checkpoint(
+                &ckpt,
+                None,
+                &QuantRecipe::vanilla_w4(),
+                variant,
+                group,
+            )
+            .unwrap();
+            let weights: Vec<runtime::Literal> = qw
+                .tensors
+                .iter()
+                .map(|t| runtime::literal_from_st(t).unwrap())
+                .collect();
+            let pairs: Vec<(&str, &runtime::Literal)> = qw
+                .names
+                .iter()
+                .map(String::as_str)
+                .zip(weights.iter())
+                .collect();
+
+            // ---- prefill b=1: random prompt
+            let graph = format!("tiny3m_{variant}_prefill_b1");
+            let gi = rt.manifest.graph(&graph).unwrap().clone();
+            let (b, s) = (gi.batch, gi.seq);
+            let plen = 4 + (rng.next_u64() % 8) as usize;
+            let mut tokens = vec![0i32; b * s];
+            for t in tokens.iter_mut().take(plen) {
+                *t = rng.range(3, info.vocab as i64 - 1) as i32;
+            }
+            let tok = runtime::literal_i32(&[b, s], &tokens).unwrap();
+            let len =
+                runtime::literal_i32(&[b], &[plen as i32]).unwrap();
+            let mut full: Vec<&runtime::Literal> = vec![&tok, &len];
+            full.extend(weights.iter());
+            let unstaged = rt.run_literal_refs(&graph, &full).unwrap();
+            let staged_g = rt.stage(&graph, &pairs).unwrap();
+            assert_eq!(staged_g.n_dynamic(), 2);
+            assert_eq!(staged_g.n_static(), weights.len());
+            let staged = rt.run_staged(&staged_g, &[&tok, &len]).unwrap();
+            assert!(
+                unstaged == staged,
+                "{variant} prefill: staged output differs from unstaged"
+            );
+
+            // ---- decode b=4: random token/pos/caches
+            let graph = format!("tiny3m_{variant}_decode_b4");
+            let b = 4usize;
+            let kv_shape =
+                [b, info.n_heads, info.max_seq, info.head_dim];
+            let cache_len: usize = kv_shape.iter().product();
+            let token: Vec<i32> = (0..b)
+                .map(|_| rng.range(3, info.vocab as i64 - 1) as i32)
+                .collect();
+            let pos: Vec<i32> =
+                (0..b).map(|_| rng.range(1, 12) as i32).collect();
+            let tok = runtime::literal_i32(&[b], &token).unwrap();
+            let pos_l = runtime::literal_i32(&[b], &pos).unwrap();
+            let caches: Vec<runtime::Literal> = (0..2 * info.n_layers)
+                .map(|_| {
+                    let data: Vec<f32> = (0..cache_len)
+                        .map(|_| rng.normal_f32() * 0.1)
+                        .collect();
+                    runtime::literal_f32(&kv_shape, &data).unwrap()
+                })
+                .collect();
+            let mut full: Vec<&runtime::Literal> = vec![&tok, &pos_l];
+            full.extend(caches.iter());
+            full.extend(weights.iter());
+            let unstaged = rt.run_literal_refs(&graph, &full).unwrap();
+            let staged_g = rt.stage(&graph, &pairs).unwrap();
+            let mut dynamic: Vec<&runtime::Literal> = vec![&tok, &pos_l];
+            dynamic.extend(caches.iter());
+            let staged = rt.run_staged(&staged_g, &dynamic).unwrap();
+            assert!(
+                unstaged == staged,
+                "{variant} decode: staged output differs from unstaged"
+            );
+        }
+    });
+}
+
+/// Staged GEMM graphs (packed int4 payloads staged once, conversion
+/// still fused in-kernel) must also match unstaged execution bit for
+/// bit, across fp, W8A8, and the FastGEMM path.
+#[test]
+fn prop_staged_gemm_graphs_bit_identical_to_unstaged() {
+    synth::ensure_artifacts("artifacts").expect("synthesize artifacts");
+    Prop::new("staged == unstaged (gemm)").cases(3).check(|rng| {
+        let mut rt =
+            Runtime::with_backend("artifacts", BackendKind::Native).unwrap();
+        let graphs: Vec<_> = rt
+            .manifest
+            .gemm_graphs("cpu")
+            .into_iter()
+            .filter(|g| {
+                g.m == 1
+                    && ["fp", "w8a8", "w4a8_fast"]
+                        .contains(&g.variant.as_str())
+            })
+            .cloned()
+            .collect();
+        assert!(!graphs.is_empty(), "cpu gemm shape set missing");
+        for gi in &graphs {
+            let args = random_gemm_args_with(&gi.params, rng).unwrap();
+            let n_dyn = gi.dynamic_param_count(&rt.manifest).unwrap();
+            let full: Vec<&runtime::Literal> = args.iter().collect();
+            let unstaged = rt.run_literal_refs(&gi.name, &full).unwrap();
+            let pairs: Vec<(&str, &runtime::Literal)> = gi.params[n_dyn..]
+                .iter()
+                .map(|p| p.name.as_str())
+                .zip(args[n_dyn..].iter())
+                .collect();
+            let staged_g = rt.stage(&gi.name, &pairs).unwrap();
+            let dynamic: Vec<&runtime::Literal> =
+                args[..n_dyn].iter().collect();
+            let staged = rt.run_staged(&staged_g, &dynamic).unwrap();
+            assert!(
+                unstaged == staged,
+                "{}: staged gemm output differs from unstaged",
+                gi.name
+            );
         }
     });
 }
