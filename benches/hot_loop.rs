@@ -1,5 +1,5 @@
 //! `cargo bench --bench hot_loop` — the L3 §Perf ablation: decode-step
-//! cost under three argument disciplines:
+//! cost under four argument disciplines:
 //!
 //! 1. legacy — clone every weight literal + rebuild KV from host arrays
 //!    + parse the full output tuple;
@@ -7,23 +7,37 @@
 //!    logits-only parse (weights still re-materialized inside the
 //!    backend every step);
 //! 3. staged — `Runtime::stage` materializes the weight tail ONCE, each
-//!    step passes only `[token, pos, KV...]` (`Runtime::run_staged`).
+//!    step passes only `[token, pos, KV...]` (`Runtime::run_staged`);
+//! 4. paged — staged weights AND paged KV: history is read through
+//!    block tables and the new token's K/V lands in the pool in place
+//!    (`Runtime::run_decode_paged`), so the full `[B, H, max_seq, Dh]`
+//!    caches stop crossing the execution boundary entirely.
 //!
-//! Besides timings, the staging counters report the number of weight
-//! bytes each discipline copies per decode step — the regression signal
-//! for the prepare-once API — and a machine-readable `BENCH {...}` json
-//! line per variant feeds the trajectory file.
+//! Besides timings, the staging counters report the weight bytes AND
+//! the KV-cache bytes each discipline moves per decode step — the
+//! regression signals for the prepare-once API and the paged pool —
+//! and a machine-readable `BENCH {...}` json line per variant feeds
+//! the trajectory file (CI uploads it as an artifact).
+//!
+//! `ODYSSEY_BENCH_SMOKE=1` shrinks budgets/iterations for CI smoke
+//! runs; the counters and regression guards still apply.
 
 use odyssey::formats::json::Json;
 use odyssey::model::{self, Checkpoint};
 use odyssey::quant::QuantRecipe;
-use odyssey::runtime::{self, Literal, Runtime};
+use odyssey::runtime::{self, KvBlockPool, Literal, Runtime};
 use odyssey::util::Bencher;
 
 fn main() {
     odyssey::util::log::init_from_env();
     let artifacts = "artifacts";
     odyssey::runtime::synth::ensure_artifacts(artifacts).expect("artifacts");
+    let smoke = matches!(
+        std::env::var("ODYSSEY_BENCH_SMOKE").as_deref(),
+        Ok("1") | Ok("true")
+    );
+    let budget = if smoke { 0.25 } else { 4.0 };
+    let (it_min, it_max) = if smoke { (2, 4) } else { (4, 30) };
     for variant in ["w4a8_fast", "fp"] {
         let mut rt = Runtime::new(artifacts).expect("make artifacts first");
         let info = rt.manifest.model("tiny3m").unwrap().clone();
@@ -56,8 +70,8 @@ fn main() {
         // ---- legacy path: clones + host KV rebuild + full parse
         let stats0 = rt.staging_stats();
         let legacy = Bencher::new(&format!("{variant} legacy decode step"))
-            .with_budget(4.0)
-            .with_iters(4, 30)
+            .with_budget(budget)
+            .with_iters(it_min, it_max)
             .run(|| {
                 let mut args =
                     Vec::with_capacity(2 + kv_host.len() + weights.len());
@@ -88,8 +102,8 @@ fn main() {
             .collect();
         let optimized =
             Bencher::new(&format!("{variant} optimized decode step"))
-                .with_budget(4.0)
-                .with_iters(4, 30)
+                .with_budget(budget)
+                .with_iters(it_min, it_max)
                 .run(|| {
                     let mut args: Vec<&Literal> = Vec::with_capacity(
                         2 + kv_lits.len() + weights.len(),
@@ -120,8 +134,8 @@ fn main() {
         let stats2 = rt.staging_stats();
         let staged_res =
             Bencher::new(&format!("{variant} staged decode step"))
-                .with_budget(4.0)
-                .with_iters(4, 30)
+                .with_budget(budget)
+                .with_iters(it_min, it_max)
                 .run(|| {
                     let mut dynamic: Vec<&Literal> =
                         Vec::with_capacity(2 + kv_staged.len());
@@ -146,14 +160,68 @@ fn main() {
             stats2.stage_calls,
             "staged decode steps re-staged weights"
         );
+        // contiguous decode still hauls the full caches both ways
+        let kv_bytes_contiguous = (stats3.kv_bytes_moved
+            - stats2.kv_bytes_moved)
+            / (stats3.staged_execs - stats2.staged_execs).max(1);
+
+        // ---- paged path: block tables + in-place pool writes.  The
+        // serving win scenario: sequences at prompt_len ≪ max_seq.
+        let prompt_len = 16usize;
+        let bs_kv = 16usize;
+        let n_blocks = b * info.max_seq.div_ceil(bs_kv);
+        let blocks_per_row = n_blocks / b;
+        let mut pool =
+            KvBlockPool::new(n_blocks, bs_kv, info.n_layers, h, d);
+        // each row owns a fixed stripe of blocks covering max_seq
+        let tables: Vec<Vec<u32>> = (0..b)
+            .map(|bi| {
+                ((bi * blocks_per_row) as u32
+                    ..((bi + 1) * blocks_per_row) as u32)
+                    .collect()
+            })
+            .collect();
+        let token_p = [5i32, 6, 7, 8];
+        let pos_p = [prompt_len as i32; 4];
+        let stats4 = rt.staging_stats();
+        let paged_res =
+            Bencher::new(&format!("{variant} paged decode step"))
+                .with_budget(budget)
+                .with_iters(it_min, it_max)
+                .run(|| {
+                    let tbl: Vec<&[u32]> =
+                        tables.iter().map(|t| t.as_slice()).collect();
+                    let out = rt
+                        .run_decode_paged(
+                            &staged, &token_p, &pos_p, &mut pool, &tbl,
+                        )
+                        .unwrap();
+                    let _ = out.to_vec::<f32>().unwrap(); // logits only
+                });
+        println!("{paged_res}");
+        let stats5 = rt.staging_stats();
+        let paged_steps =
+            (stats5.paged_decode_steps - stats4.paged_decode_steps).max(1);
+        let kv_bytes_paged =
+            (stats5.kv_bytes_moved - stats4.kv_bytes_moved) / paged_steps;
+        // acceptance guard: at prompt_len ≪ max_seq the paged path must
+        // move far fewer KV bytes per decode step than the contiguous
+        // path (it only writes the new token's rows)
+        assert!(
+            kv_bytes_paged < kv_bytes_contiguous,
+            "paged decode moved {kv_bytes_paged} KV bytes/step, \
+             contiguous {kv_bytes_contiguous}"
+        );
 
         println!(
             "{variant}: staged speedup vs legacy {:.2}x, vs optimized {:.2}x \
              (weight bytes/step: {unstaged_bytes_per_step} -> 0; staged \
-             once: {} bytes)\n",
+             once: {} bytes; KV bytes/step: {kv_bytes_contiguous} \
+             contiguous -> {kv_bytes_paged} paged, {:.0}x less)\n",
             legacy.mean_s / staged_res.mean_s,
             optimized.mean_s / staged_res.mean_s,
             staged.weight_bytes(),
+            kv_bytes_contiguous as f64 / kv_bytes_paged.max(1) as f64,
         );
 
         let bench = Json::obj(vec![
@@ -162,6 +230,7 @@ fn main() {
             ("legacy_ms", Json::Num(legacy.mean_s * 1e3)),
             ("optimized_ms", Json::Num(optimized.mean_s * 1e3)),
             ("staged_ms", Json::Num(staged_res.mean_s * 1e3)),
+            ("paged_ms", Json::Num(paged_res.mean_s * 1e3)),
             (
                 "weight_bytes_per_step_unstaged",
                 Json::Num(unstaged_bytes_per_step as f64),
@@ -170,6 +239,14 @@ fn main() {
             (
                 "staged_weight_bytes",
                 Json::Num(staged.weight_bytes() as f64),
+            ),
+            (
+                "kv_bytes_per_step_contiguous",
+                Json::Num(kv_bytes_contiguous as f64),
+            ),
+            (
+                "kv_bytes_per_step_paged",
+                Json::Num(kv_bytes_paged as f64),
             ),
             (
                 "speedup_vs_legacy",

@@ -91,7 +91,36 @@ GLOBAL FLAGS:
   --backend native|pjrt        execution backend (default: native CPU;
                                env ODYSSEY_BACKEND also honored; pjrt
                                needs --features pjrt + AOT HLO)
+
+SERVING FLAGS (generate / serve):
+  --no-paging                  contiguous KV escape hatch (default is
+                               the paged block pool; env
+                               ODYSSEY_NO_PAGING=1 also honored)
+  --kv-block-size N            positions per KV block (default 16)
+  --kv-blocks N                total blocks in the pool (default:
+                               decode_batch * ceil(max_seq/block) —
+                               the no-preemption worst case; smaller
+                               caps KV memory, preemption absorbs it)
 ";
+
+/// Paged-KV engine options shared by `generate` and `serve`.
+pub fn parse_kv_flags(
+    args: &Args,
+    opts: &mut crate::coordinator::EngineOptions,
+) -> Result<()> {
+    if args.has("no-paging") {
+        opts.paged = false;
+    }
+    opts.kv_block_size =
+        args.get_usize("kv-block-size", opts.kv_block_size)?;
+    if let Some(n) = args.get("kv-blocks") {
+        let n: usize = n
+            .parse()
+            .map_err(|_| anyhow!("--kv-blocks expects an integer"))?;
+        opts.kv_blocks = Some(n);
+    }
+    Ok(())
+}
 
 /// Backend names accepted by --backend (defaults to the native CPU
 /// interpreter).

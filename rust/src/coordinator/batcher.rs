@@ -3,9 +3,17 @@
 //! The paper's engine (like vLLM/Orca) interleaves two kinds of work:
 //! *prefill* (compute-bound, batch of new prompts) and *self-decode*
 //! (memory-bound, one token for every active sequence).  The batcher
-//! decides each engine iteration: admit new requests into free KV slots
-//! via a prefill step, then run one decode step over the active slots.
+//! decides each engine iteration: admit new requests via a prefill
+//! step, then run one decode step over the active slots.
 //! Prefill-priority keeps TTFT low; decode keeps all slots moving.
+//!
+//! Admission is capacity-driven through the `admit` callback: the KV
+//! manager decides per request whether it has a slot AND (under paging)
+//! enough free blocks for the prompt.  A request that cannot be placed
+//! *right now* but will fit once capacity frees ([`Admission::Retry`])
+//! goes back to the queue FRONT — it keeps its arrival order and is
+//! never shed; only requests that can NEVER fit ([`Admission::Reject`])
+//! are bounced to the caller.
 
 use super::queue::RequestQueue;
 use super::request::Request;
@@ -19,6 +27,20 @@ pub enum Step {
     Decode,
     /// Nothing to do.
     Idle,
+}
+
+/// Per-request admission verdict from the KV manager.
+#[derive(Debug)]
+pub enum Admission {
+    /// Admitted into this decode slot.
+    Slot(usize),
+    /// No capacity right now; requeue front and retry when sequences
+    /// finish.  The caller must guarantee progress is possible (some
+    /// sequence is active, or another request was admitted this step) —
+    /// with an idle pool the verdict must be `Slot` or `Reject`.
+    Retry,
+    /// Can never fit (e.g. prompt needs more blocks than the pool has).
+    Reject,
 }
 
 /// Batching policy knobs.
@@ -38,38 +60,44 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Decide the next step.  `free_slots` comes from the KV manager,
-/// `active` is the number of occupied slots, `alloc` claims slots.
+/// Decide the next step.  `can_admit` is the KV manager's cheap
+/// capacity hint (a free slot and at least one free block); `admit`
+/// gives the per-request verdict and claims capacity on success.
 pub fn next_step(
     policy: &BatchPolicy,
     queue: &mut RequestQueue,
-    free_slots: usize,
+    can_admit: bool,
     active: usize,
-    mut alloc: impl FnMut(u64) -> Option<usize>,
+    mut admit: impl FnMut(&Request) -> Admission,
 ) -> (Step, Vec<Request>) {
     let want_prefill = !queue.is_empty()
-        && free_slots > 0
+        && can_admit
         && (policy.prefill_priority || active == 0);
     if want_prefill {
-        let n = policy.prefill_batch.min(free_slots);
-        let (batch, rejected) = queue.pop_batch(n, policy.max_prompt);
+        let (batch, mut rejected) =
+            queue.pop_batch(policy.prefill_batch, policy.max_prompt);
         if !batch.is_empty() {
             let mut assigned = Vec::new();
-            let mut overflow = Vec::new();
+            let mut retry = Vec::new();
             for r in batch {
-                match alloc(r.id) {
-                    Some(slot) => assigned.push((r, slot)),
-                    None => overflow.push(r),
+                match admit(&r) {
+                    Admission::Slot(slot) => assigned.push((r, slot)),
+                    Admission::Retry => retry.push(r),
+                    Admission::Reject => rejected.push(r),
                 }
             }
-            // overflow shouldn't happen (we checked free_slots) but keep
-            // requests safe by treating them as rejected-for-retry
-            let mut rej = rejected;
-            rej.extend(overflow);
-            if !assigned.is_empty() {
-                return (Step::Prefill(assigned), rej);
+            // transient shortage: capacity frees as active sequences
+            // finish — back to the queue front in arrival order
+            for r in retry.into_iter().rev() {
+                queue.requeue_front(r);
             }
-            return (Step::Idle, rej);
+            if !assigned.is_empty() {
+                return (Step::Prefill(assigned), rejected);
+            }
+            if active > 0 {
+                return (Step::Decode, rejected);
+            }
+            return (Step::Idle, rejected);
         }
         if active > 0 {
             return (Step::Decode, rejected);
@@ -92,12 +120,12 @@ mod tests {
         Request::new(id, vec![1; len], GenParams::default())
     }
 
-    fn seq_alloc() -> impl FnMut(u64) -> Option<usize> {
+    fn seq_admit() -> impl FnMut(&Request) -> Admission {
         let mut next = 0usize;
         move |_| {
             let s = next;
             next += 1;
-            Some(s)
+            Admission::Slot(s)
         }
     }
 
@@ -107,7 +135,7 @@ mod tests {
         q.push(req(1, 4));
         q.push(req(2, 4));
         let (step, rej) =
-            next_step(&BatchPolicy::default(), &mut q, 4, 2, seq_alloc());
+            next_step(&BatchPolicy::default(), &mut q, true, 2, seq_admit());
         assert!(rej.is_empty());
         match step {
             Step::Prefill(batch) => {
@@ -123,7 +151,7 @@ mod tests {
     fn decode_when_queue_empty() {
         let mut q = RequestQueue::new(8);
         let (step, _) =
-            next_step(&BatchPolicy::default(), &mut q, 2, 3, seq_alloc());
+            next_step(&BatchPolicy::default(), &mut q, true, 3, seq_admit());
         assert!(matches!(step, Step::Decode));
     }
 
@@ -131,16 +159,16 @@ mod tests {
     fn idle_when_nothing() {
         let mut q = RequestQueue::new(8);
         let (step, _) =
-            next_step(&BatchPolicy::default(), &mut q, 4, 0, seq_alloc());
+            next_step(&BatchPolicy::default(), &mut q, true, 0, seq_admit());
         assert!(matches!(step, Step::Idle));
     }
 
     #[test]
-    fn no_slots_forces_decode() {
+    fn no_capacity_forces_decode() {
         let mut q = RequestQueue::new(8);
         q.push(req(1, 4));
         let (step, _) =
-            next_step(&BatchPolicy::default(), &mut q, 0, 4, seq_alloc());
+            next_step(&BatchPolicy::default(), &mut q, false, 4, seq_admit());
         assert!(matches!(step, Step::Decode));
         assert_eq!(q.len(), 1, "request stays queued");
     }
@@ -151,7 +179,7 @@ mod tests {
         q.push(req(1, 4096));
         q.push(req(2, 4));
         let (step, rej) =
-            next_step(&BatchPolicy::default(), &mut q, 4, 0, seq_alloc());
+            next_step(&BatchPolicy::default(), &mut q, true, 0, seq_admit());
         assert_eq!(rej.len(), 1);
         match step {
             Step::Prefill(batch) => assert_eq!(batch[0].0.id, 2),
@@ -166,11 +194,66 @@ mod tests {
             q.push(req(i, 4));
         }
         let policy = BatchPolicy { prefill_batch: 4, ..Default::default() };
-        let (step, _) = next_step(&policy, &mut q, 8, 0, seq_alloc());
+        let (step, _) = next_step(&policy, &mut q, true, 0, seq_admit());
         match step {
             Step::Prefill(batch) => assert_eq!(batch.len(), 4),
             other => panic!("{other:?}"),
         }
         assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn retry_requeues_front_in_arrival_order() {
+        let mut q = RequestQueue::new(8);
+        for i in 0..3 {
+            q.push(req(i, 4));
+        }
+        // only the first request fits; the rest must come back in order
+        let mut admitted = false;
+        let (step, rej) = next_step(
+            &BatchPolicy::default(),
+            &mut q,
+            true,
+            0,
+            |_| {
+                if admitted {
+                    Admission::Retry
+                } else {
+                    admitted = true;
+                    Admission::Slot(0)
+                }
+            },
+        );
+        assert!(rej.is_empty(), "retry is not rejection");
+        match step {
+            Step::Prefill(batch) => {
+                assert_eq!(batch.len(), 1);
+                assert_eq!(batch[0].0.id, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+        let (batch, _) = q.pop_batch(4, 128);
+        assert_eq!(
+            batch.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![1, 2],
+            "retried requests keep arrival order at the queue front"
+        );
+    }
+
+    #[test]
+    fn reject_verdict_bounces_request() {
+        let mut q = RequestQueue::new(8);
+        q.push(req(7, 4));
+        let (step, rej) = next_step(
+            &BatchPolicy::default(),
+            &mut q,
+            true,
+            2,
+            |_| Admission::Reject,
+        );
+        assert_eq!(rej.len(), 1);
+        assert_eq!(rej[0].id, 7);
+        assert!(matches!(step, Step::Decode), "decode continues");
+        assert_eq!(q.len(), 0);
     }
 }

@@ -9,10 +9,12 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::batcher::{next_step, BatchPolicy, Step};
-use crate::coordinator::kv::KvState;
+use crate::coordinator::batcher::{
+    next_step, Admission, BatchPolicy, Step,
+};
+use crate::coordinator::kv::{KvState, PagedKv};
 use crate::coordinator::metrics::EngineMetrics;
 use crate::coordinator::queue::{Admit, RequestQueue};
 use crate::coordinator::request::{
@@ -46,6 +48,19 @@ pub struct EngineOptions {
     /// flips the default off — the per-step escape hatch the parity
     /// tests compare against)
     pub staging: bool,
+    /// serve decode from the paged KV block pool (default;
+    /// `ODYSSEY_NO_PAGING=1` flips the default off — the contiguous
+    /// escape hatch the paged parity tests compare against).  Paging
+    /// rides on staged weights: with `staging` off the engine falls
+    /// back to the contiguous path.
+    pub paged: bool,
+    /// positions per KV block on the paged path
+    pub kv_block_size: usize,
+    /// total blocks in the pool; None sizes it for the contiguous
+    /// worst case (`decode_batch * ceil(max_seq / block_size)`), so
+    /// default serving can never be starved into preemption.  Set it
+    /// smaller to cap KV memory and let preemption absorb overload.
+    pub kv_blocks: Option<usize>,
 }
 
 impl Default for EngineOptions {
@@ -63,6 +78,9 @@ impl Default for EngineOptions {
             // points (benches, examples, EngineService) follow it too
             backend: BackendKind::from_env(),
             staging: runtime::staging_enabled_from_env(),
+            paged: runtime::paging_enabled_from_env(),
+            kv_block_size: 16,
+            kv_blocks: None,
         }
     }
 }
@@ -74,6 +92,45 @@ struct ActiveSeq {
     last_token: i32,
     ttft_s: f64,
     rng: XorShift,
+    /// admission order stamp — preemption evicts the YOUNGEST (largest)
+    admit_seq: u64,
+}
+
+/// The engine's KV state: paged block tables (default) or the
+/// contiguous per-slot mirror (`ODYSSEY_NO_PAGING=1`).
+enum KvBacking {
+    Contiguous(KvState),
+    Paged(PagedKv),
+}
+
+impl KvBacking {
+    fn pos(&self, slot: usize) -> usize {
+        match self {
+            KvBacking::Contiguous(s) => s.pos[slot],
+            KvBacking::Paged(p) => p.pos(slot),
+        }
+    }
+
+    fn advance(&mut self, slot: usize) -> Result<()> {
+        match self {
+            KvBacking::Contiguous(s) => s.advance(slot),
+            KvBacking::Paged(p) => p.advance(slot),
+        }
+    }
+
+    fn headroom(&self, slot: usize) -> usize {
+        match self {
+            KvBacking::Contiguous(s) => s.headroom(slot),
+            KvBacking::Paged(p) => p.headroom(slot),
+        }
+    }
+
+    fn free(&mut self, slot: usize) {
+        match self {
+            KvBacking::Contiguous(s) => s.free(slot),
+            KvBacking::Paged(p) => p.free_seq(slot),
+        }
+    }
 }
 
 /// The engine.  Single-threaded by design (PJRT handles intra-op
@@ -90,7 +147,7 @@ pub struct Engine {
     /// `opts.staging` is off): decode steps pass only dynamic args
     staged_prefill: Option<StagedGraph>,
     staged_decode: Option<StagedGraph>,
-    kv: KvState,
+    kv: KvBacking,
     /// Device-format KV from the last decode step (k literals then v
     /// literals).  When `Some`, these are authoritative and the host
     /// arrays in `kv` are stale; prefill slot-splices sync back first.
@@ -100,6 +157,8 @@ pub struct Engine {
     queue: RequestQueue,
     policy: BatchPolicy,
     active: BTreeMap<u64, ActiveSeq>,
+    /// monotonically increasing admission stamp (preemption order)
+    admit_counter: u64,
     pub metrics: EngineMetrics,
     prefill_graph: String,
     decode_graph: String,
@@ -199,19 +258,54 @@ impl Engine {
 
         let prefill_seq =
             rt.manifest.graph(&prefill_graph)?.seq;
-        let kv = KvState::new(
-            opts.decode_batch,
-            info.n_layers,
-            info.n_heads,
-            info.max_seq,
-            info.head_dim,
-        );
+        // KV backing: paged block tables by default; paging rides on
+        // the staged decode graph, so the contiguous mirror also covers
+        // the ODYSSEY_NO_STAGING configuration
+        if opts.paged && staged_decode.is_none() {
+            crate::util::log::info(
+                "paged KV needs staged weights; using the contiguous \
+                 KV path",
+            );
+        }
+        let kv = if opts.paged && staged_decode.is_some() {
+            let bs = opts.kv_block_size.max(1);
+            let blocks = opts
+                .kv_blocks
+                .unwrap_or_else(|| {
+                    opts.decode_batch * info.max_seq.div_ceil(bs)
+                })
+                .max(1);
+            KvBacking::Paged(PagedKv::new(
+                opts.decode_batch,
+                info.n_layers,
+                info.n_heads,
+                info.max_seq,
+                info.head_dim,
+                bs,
+                blocks,
+            ))
+        } else {
+            KvBacking::Contiguous(KvState::new(
+                opts.decode_batch,
+                info.n_layers,
+                info.n_heads,
+                info.max_seq,
+                info.head_dim,
+            ))
+        };
         crate::util::log::info(&format!(
-            "engine up: model={} variant={} backend={} staging={} params={:.1}M graphs=({}, {}) in {:.2}s",
+            "engine up: model={} variant={} backend={} staging={} paging={} params={:.1}M graphs=({}, {}) in {:.2}s",
             opts.model,
             opts.variant,
             rt.backend_name(),
             if staged_decode.is_some() { "on" } else { "off" },
+            match &kv {
+                KvBacking::Paged(p) => format!(
+                    "on({}x{})",
+                    p.pool.n_blocks, p.pool.block_size
+                ),
+                KvBacking::Contiguous(_) => "off".into(),
+            },
             info.n_params as f64 / 1e6,
             prefill_graph,
             decode_graph,
@@ -232,6 +326,7 @@ impl Engine {
                 prefill_priority: true,
             },
             active: BTreeMap::new(),
+            admit_counter: 0,
             metrics: EngineMetrics::default(),
             prefill_graph,
             decode_graph,
@@ -292,16 +387,60 @@ impl Engine {
 
     /// One engine iteration.  Returns false when idle.
     pub fn step(&mut self) -> Result<bool> {
-        let free = self.kv.free_slots();
         let active = self.active.len();
-        let kvref = &mut self.kv;
-        let (step, rejected) = next_step(
-            &self.policy,
-            &mut self.queue,
-            free,
-            active,
-            |rid| kvref.alloc(rid).ok(),
-        );
+        let Engine { kv, queue, policy, .. } = self;
+        let (step, rejected) = match kv {
+            KvBacking::Contiguous(state) => next_step(
+                policy,
+                queue,
+                state.free_slots() > 0,
+                active,
+                |r| match state.alloc(r.id) {
+                    Ok(slot) => Admission::Slot(slot),
+                    // free slots were checked but a large pop can
+                    // outrun them; wait for a sequence to finish
+                    Err(_) => Admission::Retry,
+                },
+            ),
+            KvBacking::Paged(paged) => {
+                // admission watermark: keep one growth block in
+                // reserve per resident sequence, so a preempted
+                // request cannot immediately re-claim the blocks its
+                // own eviction just freed and thrash between
+                // re-prefill and re-eviction.  With nothing resident
+                // the reserve is zero, so progress is always possible.
+                let mut resident = active;
+                next_step(
+                    policy,
+                    queue,
+                    paged.free_slots() > 0 && paged.free_blocks() > 0,
+                    active,
+                    |r| {
+                        if !paged.fits_pool(r.prompt.len()) {
+                            // needs more blocks than the pool HAS: no
+                            // amount of waiting admits it
+                            return Admission::Reject;
+                        }
+                        let needed =
+                            paged.blocks_for(r.prompt.len()) + resident;
+                        if paged.free_blocks() < needed {
+                            return Admission::Retry;
+                        }
+                        match paged.alloc_seq(r.id, r.prompt.len()) {
+                            Some(slot) => {
+                                resident += 1;
+                                Admission::Slot(slot)
+                            }
+                            None => Admission::Retry,
+                        }
+                    },
+                )
+            }
+        };
+        // shedding requests IS progress: report Idle as busy when a
+        // batch was drained into rejections so the caller loops again
+        // and the rest of the queue gets its turn
+        let shed = !rejected.is_empty();
         for r in rejected {
             self.finished.push(GenResult {
                 id: r.id,
@@ -314,7 +453,7 @@ impl Engine {
             self.metrics.rejected += 1;
         }
         match step {
-            Step::Idle => Ok(false),
+            Step::Idle => Ok(shed),
             Step::Prefill(batch) => {
                 self.do_prefill(batch)?;
                 Ok(true)
@@ -380,14 +519,23 @@ impl Engine {
         self.metrics.prefill_time_s += dt;
         let n_reqs = batch.len();
 
-        // the slot splice below edits the HOST arrays: fold any newer
-        // device-format KV back first
-        self.sync_kv_to_host()?;
+        // the contiguous slot splice edits the HOST arrays: fold any
+        // newer device-format KV back first (paged installs write the
+        // block pool directly — there are no KV literals to sync)
+        if matches!(self.kv, KvBacking::Contiguous(_)) {
+            self.sync_kv_to_host()?;
+        }
         for (row, (req, slot)) in batch.into_iter().enumerate() {
             let plen = req.prompt.len();
-            self.kv.install_from_prefill(
-                slot, &layer_k, &layer_v, row, b, plen,
-            )?;
+            match &mut self.kv {
+                KvBacking::Contiguous(state) => state
+                    .install_from_prefill(
+                        slot, &layer_k, &layer_v, row, b, plen,
+                    )?,
+                KvBacking::Paged(paged) => paged.install_from_prefill(
+                    slot, &layer_k, &layer_v, row, b, plen,
+                )?,
+            }
             // sample the first generated token from the last prompt logit
             let off = (row * s + (plen - 1)) * v;
             let mut rng = XorShift::new(req.params.seed ^ req.id);
@@ -395,6 +543,8 @@ impl Engine {
                              req.params.top_k, &mut rng);
             let ttft = req.arrived.elapsed().as_secs_f64();
             self.metrics.prefill_tokens += plen as u64;
+            self.metrics.admitted += 1;
+            self.admit_counter += 1;
             self.active.insert(
                 req.id,
                 ActiveSeq {
@@ -404,6 +554,7 @@ impl Engine {
                     ttft_s: ttft,
                     rng,
                     req,
+                    admit_seq: self.admit_counter,
                 },
             );
         }
@@ -418,6 +569,14 @@ impl Engine {
     // decode
     // ------------------------------------------------------------------
     fn do_decode(&mut self) -> Result<()> {
+        // paged: every active sequence needs a page backing its write
+        // position BEFORE the step; preemption may empty the batch
+        if matches!(self.kv, KvBacking::Paged(_)) {
+            self.ensure_decode_capacity()?;
+            if self.active.is_empty() {
+                return Ok(());
+            }
+        }
         let t0 = Instant::now();
         let b = self.opts.decode_batch;
         let v = self.info.vocab;
@@ -427,60 +586,85 @@ impl Engine {
         let mut pos = vec![0i32; b];
         for seq in self.active.values() {
             token[seq.slot] = seq.last_token;
-            pos[seq.slot] = self.kv.pos[seq.slot] as i32;
+            pos[seq.slot] = self.kv.pos(seq.slot) as i32;
         }
 
-        let tok_l = runtime::literal_i32(&[b], &token)?;
-        let pos_l = runtime::literal_i32(&[b], &pos)?;
-        let kv_shape = [
-            b,
-            self.info.n_heads,
-            self.info.max_seq,
-            self.info.head_dim,
-        ];
-        // KV: reuse last step's output literals verbatim; rebuild from
-        // the host arrays only after a prefill changed slot contents.
-        let kv_local: Vec<Literal>;
-        let kv_refs: Vec<&Literal> = match &self.kv_lits {
-            Some(lits) => lits.iter().collect(),
-            None => {
-                let mut lits = Vec::with_capacity(2 * n_layers);
-                for l in 0..n_layers {
-                    lits.push(runtime::literal_f32(&kv_shape,
-                                                   &self.kv.k[l])?);
+        let logits = match &mut self.kv {
+            KvBacking::Paged(paged) => {
+                // block-table decode: KV history is read through the
+                // tables and the new token's K/V lands in the pool in
+                // place — nothing to adopt, logits are the only output
+                let staged = self.staged_decode.as_ref().ok_or_else(
+                    || anyhow!("paged decode without staging"),
+                )?;
+                let (tables, pool) = paged.decode_view();
+                let out = self.rt.run_decode_paged(
+                    staged, &token, &pos, pool, &tables,
+                )?;
+                runtime::literal_to_f32(&out, b * v)?
+            }
+            KvBacking::Contiguous(state) => {
+                let tok_l = runtime::literal_i32(&[b], &token)?;
+                let pos_l = runtime::literal_i32(&[b], &pos)?;
+                let kv_shape = [
+                    b,
+                    self.info.n_heads,
+                    self.info.max_seq,
+                    self.info.head_dim,
+                ];
+                // KV: reuse last step's output literals verbatim;
+                // rebuild from the host arrays only after a prefill
+                // changed slot contents.
+                let kv_local: Vec<Literal>;
+                let kv_refs: Vec<&Literal> = match &self.kv_lits {
+                    Some(lits) => lits.iter().collect(),
+                    None => {
+                        let mut lits = Vec::with_capacity(2 * n_layers);
+                        for l in 0..n_layers {
+                            lits.push(runtime::literal_f32(
+                                &kv_shape, &state.k[l],
+                            )?);
+                        }
+                        for l in 0..n_layers {
+                            lits.push(runtime::literal_f32(
+                                &kv_shape, &state.v[l],
+                            )?);
+                        }
+                        kv_local = lits;
+                        kv_local.iter().collect()
+                    }
+                };
+                // staged: dynamic head only (token, pos, KV) — no
+                // weight payloads move per token.  Unstaged: legacy
+                // full-argument path.
+                let mut outs = if let Some(staged) = &self.staged_decode
+                {
+                    let mut dynamic: Vec<&Literal> =
+                        Vec::with_capacity(2 + 2 * n_layers);
+                    dynamic.push(&tok_l);
+                    dynamic.push(&pos_l);
+                    dynamic.extend(kv_refs);
+                    self.rt.run_staged(staged, &dynamic)?
+                } else {
+                    let mut args: Vec<&Literal> = Vec::with_capacity(
+                        2 + 2 * n_layers + self.weight_args.len(),
+                    );
+                    args.push(&tok_l);
+                    args.push(&pos_l);
+                    args.extend(kv_refs);
+                    args.extend(self.weight_args.iter());
+                    self.rt.run_literal_refs(&self.decode_graph, &args)?
+                };
+                if outs.len() != 1 + 2 * n_layers {
+                    bail!("decode returned {} outputs", outs.len());
                 }
-                for l in 0..n_layers {
-                    lits.push(runtime::literal_f32(&kv_shape,
-                                                   &self.kv.v[l])?);
-                }
-                kv_local = lits;
-                kv_local.iter().collect()
+                let logits = runtime::literal_to_f32(&outs[0], b * v)?;
+                // keep the updated KV in device format (no f32
+                // parse/rebuild)
+                self.kv_lits = Some(outs.split_off(1));
+                logits
             }
         };
-        // staged: dynamic head only (token, pos, KV) — no weight
-        // payloads move per token.  Unstaged: legacy full-argument path.
-        let mut outs = if let Some(staged) = &self.staged_decode {
-            let mut dynamic: Vec<&Literal> =
-                Vec::with_capacity(2 + 2 * n_layers);
-            dynamic.push(&tok_l);
-            dynamic.push(&pos_l);
-            dynamic.extend(kv_refs);
-            self.rt.run_staged(staged, &dynamic)?
-        } else {
-            let mut args: Vec<&Literal> = Vec::with_capacity(
-                2 + 2 * n_layers + self.weight_args.len());
-            args.push(&tok_l);
-            args.push(&pos_l);
-            args.extend(kv_refs);
-            args.extend(self.weight_args.iter());
-            self.rt.run_literal_refs(&self.decode_graph, &args)?
-        };
-        if outs.len() != 1 + 2 * n_layers {
-            bail!("decode returned {} outputs", outs.len());
-        }
-        let logits = runtime::literal_to_f32(&outs[0], b * v)?;
-        // keep the updated KV in device format (no f32 parse/rebuild)
-        self.kv_lits = Some(outs.split_off(1));
 
         let dt = t0.elapsed().as_secs_f64();
         self.metrics.decode_steps += 1;
@@ -511,6 +695,10 @@ impl Engine {
         for id in done {
             let seq = self.active.remove(&id).unwrap();
             self.kv.free(seq.slot);
+            #[cfg(debug_assertions)]
+            if let KvBacking::Paged(p) = &self.kv {
+                p.check_conservation().expect("block conservation");
+            }
             let finish = if seq.req.params.eos == Some(seq.last_token) {
                 FinishReason::Eos
             } else {
@@ -534,11 +722,19 @@ impl Engine {
         Ok(())
     }
 
-    /// Fold device-format KV literals back into the host arrays (needed
-    /// before a prefill splices new sequences into slots).
+    /// Fold device-format KV literals back into the contiguous host
+    /// arrays (needed before a prefill splices new sequences into
+    /// slots).  The paged path never produces KV literals — decode
+    /// writes the block pool in place.
     fn sync_kv_to_host(&mut self) -> Result<()> {
         let n_layers = self.info.n_layers;
         if let Some(lits) = self.kv_lits.take() {
+            let state = match &mut self.kv {
+                KvBacking::Contiguous(s) => s,
+                KvBacking::Paged(_) => {
+                    bail!("device KV literals on the paged path")
+                }
+            };
             let cache_len = self.opts.decode_batch
                 * self.info.n_heads
                 * self.info.max_seq
@@ -553,9 +749,117 @@ impl Engine {
                     layer_v.push(data);
                 }
             }
-            self.kv.adopt_decode_output(layer_k, layer_v)?;
+            state.adopt_decode_output(layer_k, layer_v)?;
         }
         Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // paged-KV capacity management
+    // ------------------------------------------------------------------
+
+    /// Make sure every active sequence owns a page for its next write
+    /// position, growing tables on demand.  When the pool runs dry the
+    /// YOUNGEST active sequence is preempted: its blocks return to the
+    /// pool and its request re-enters the queue front for re-prefill
+    /// (generation is seed-deterministic, so the re-run reproduces the
+    /// same tokens).  A sequence that exhausts the pool all by itself
+    /// finishes at capacity instead of thrashing.
+    fn ensure_decode_capacity(&mut self) -> Result<()> {
+        let mut order: Vec<(u64, u64)> = self
+            .active
+            .values()
+            .map(|s| (s.admit_seq, s.req.id))
+            .collect();
+        order.sort_unstable(); // oldest admission first
+        for (_, id) in order {
+            while self.active.contains_key(&id) {
+                let slot = self.active[&id].slot;
+                let paged = match &mut self.kv {
+                    KvBacking::Paged(p) => p,
+                    KvBacking::Contiguous(_) => return Ok(()),
+                };
+                if paged.ensure_write_capacity(slot) {
+                    break;
+                }
+                if self.active.len() == 1 {
+                    // sole block holder: preempting itself would just
+                    // re-prefill into the same wall — finish here
+                    self.finish_at_capacity(id);
+                    break;
+                }
+                // evict the youngest sequence (largest admission stamp)
+                let victim = self
+                    .active
+                    .values()
+                    .max_by_key(|s| s.admit_seq)
+                    .map(|s| s.req.id)
+                    .expect("active is non-empty");
+                self.preempt(victim);
+                if victim == id {
+                    break; // it evicted itself; nothing left to back
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Evict one active sequence: blocks back to the pool, generated
+    /// tokens discarded, request re-queued FRONT for re-prefill.
+    fn preempt(&mut self, id: u64) {
+        let seq = self.active.remove(&id).expect("preempt target active");
+        self.kv.free(seq.slot);
+        crate::util::log::debug(&format!(
+            "preempt: request {id} re-queued after {} generated tokens \
+             (pool dry)",
+            seq.generated.len()
+        ));
+        self.queue.requeue_front(seq.req);
+        self.metrics.preempted += 1;
+    }
+
+    /// Finish a sequence that ran the pool dry with no other sequence
+    /// to evict (pool-capacity analogue of the `max_seq` cap).
+    fn finish_at_capacity(&mut self, id: u64) {
+        let seq = self.active.remove(&id).expect("finish target active");
+        self.kv.free(seq.slot);
+        let total = seq.req.arrived.elapsed().as_secs_f64();
+        self.metrics.record_completion(
+            seq.ttft_s,
+            total,
+            seq.generated.len(),
+        );
+        self.finished.push(GenResult {
+            id,
+            prompt_len: seq.req.prompt.len(),
+            tokens: seq.generated,
+            finish: FinishReason::MaxTokens,
+            ttft_s: seq.ttft_s,
+            total_s: total,
+        });
+    }
+
+    /// Is the engine serving from the paged KV pool?
+    pub fn paging_active(&self) -> bool {
+        matches!(self.kv, KvBacking::Paged(_))
+    }
+
+    /// Blocks currently held by active sequences (0 on the contiguous
+    /// path and whenever the engine is idle).
+    pub fn kv_blocks_in_use(&self) -> usize {
+        match &self.kv {
+            KvBacking::Paged(p) => p.blocks_in_use(),
+            KvBacking::Contiguous(_) => 0,
+        }
+    }
+
+    /// Paged-pool utilization `(positions held, capacity of held
+    /// blocks)`; `(0, 0)` on the contiguous path.
+    pub fn kv_utilization(&self) -> (usize, usize) {
+        match &self.kv {
+            KvBacking::Paged(p) => p.utilization(),
+            KvBacking::Contiguous(_) => (0, 0),
+        }
     }
 
     // ------------------------------------------------------------------

@@ -152,7 +152,18 @@ fn engine_thread(
                     }
                 }
                 Some(Cmd::Stats(tx)) => {
-                    let _ = tx.send(engine.metrics.report());
+                    let mut s = engine.metrics.report();
+                    if engine.paging_active() {
+                        let (held, cap) = engine.kv_utilization();
+                        s.push_str(&format!(
+                            "\nkv     : paged, {} blocks in use \
+                             ({held}/{cap} positions)",
+                            engine.kv_blocks_in_use()
+                        ));
+                    } else {
+                        s.push_str("\nkv     : contiguous");
+                    }
+                    let _ = tx.send(s);
                 }
                 Some(Cmd::Shutdown) => break 'outer,
                 None => break,

@@ -1,15 +1,40 @@
-//! KV-cache slot manager.
+//! KV-cache management: the paged block-table manager (default) and the
+//! contiguous slot manager (escape hatch).
 //!
-//! The AOT decode graph has a FIXED batch dimension B; its per-layer cache
-//! tensors are `[B, H, max_seq, head_dim]`.  The manager owns the host
-//! mirror of those tensors and a slot map: each active request occupies
-//! one batch slot, with its own write position.  Freed slots are recycled
-//! (continuous batching).  Idle slots decode garbage that is simply
-//! ignored — the masks in the graph make them numerically safe.
+//! # Paged KV ([`PagedKv`], the default)
+//!
+//! KV lives in a fixed [`KvBlockPool`] of `[block_size, H, Dh]` blocks.
+//! Each active request occupies one decode-batch *slot* (the decode
+//! graph's batch dimension is still fixed) and owns a **block table**:
+//! an ordered list of block ids that grows on demand as its position
+//! advances — memory committed per sequence is proportional to tokens
+//! actually produced, not to `max_seq`.  The [`BlockAllocator`] hands
+//! out blocks from a free list and recycles them when sequences finish.
+//!
+//! **Admission** is gated on free *blocks* (enough for the prompt), not
+//! just free slots, so a prompt-heavy queue can keep more sequences
+//! resident than the contiguous layout ever could in the same memory.
+//! **Preemption**: when a decode step needs a new block and the pool is
+//! dry, the engine evicts the YOUNGEST active sequence (latest
+//! admission) — its blocks return to the pool and the request re-enters
+//! the queue FRONT for re-prefill from its original prompt.  Generation
+//! is deterministic per request (seeded sampling), so a preempted
+//! sequence reproduces the exact same token stream after re-admission.
+//!
+//! # Contiguous KV ([`KvState`], `ODYSSEY_NO_PAGING=1`)
+//!
+//! The pre-paging layout: a full `[B, H, max_seq, Dh]` host mirror per
+//! decode slot, adopted wholesale from the decode graph's cache
+//! outputs every step.  Kept alive behind `EngineOptions::paged =
+//! false` (env `ODYSSEY_NO_PAGING=1`) so the parity suite can pin the
+//! paged path bit-exact against it.  Idle slots decode garbage that is
+//! simply ignored — the masks in the graph make them numerically safe.
 
 use anyhow::{bail, Result};
 
-/// Host-side KV state for one decode bucket.
+use crate::runtime::KvBlockPool;
+
+/// Host-side KV state for one decode bucket (contiguous layout).
 pub struct KvState {
     pub batch: usize,
     pub n_layers: usize,
@@ -113,7 +138,9 @@ impl KvState {
     }
 
     /// Adopt the decode graph's updated caches wholesale (they return the
-    /// full `[B, ...]` tensors).
+    /// full `[B, ...]` tensors).  Every layer tensor must carry exactly
+    /// `B * H * max_seq * Dh` elements — a short tensor would silently
+    /// truncate cache state for the trailing slots.
     pub fn adopt_decode_output(
         &mut self,
         layer_k: Vec<Vec<f32>>,
@@ -121,6 +148,18 @@ impl KvState {
     ) -> Result<()> {
         if layer_k.len() != self.n_layers || layer_v.len() != self.n_layers {
             bail!("layer count mismatch");
+        }
+        let want = self.batch * self.slot_stride();
+        for (l, (kc, vc)) in layer_k.iter().zip(layer_v.iter()).enumerate()
+        {
+            if kc.len() != want || vc.len() != want {
+                bail!(
+                    "decode cache layer {l}: adopted k/v lengths {}/{} \
+                     != expected {want}",
+                    kc.len(),
+                    vc.len()
+                );
+            }
         }
         self.k = layer_k;
         self.v = layer_v;
@@ -139,6 +178,306 @@ impl KvState {
     /// Remaining capacity of a slot.
     pub fn headroom(&self, slot: usize) -> usize {
         self.max_seq - self.pos[slot]
+    }
+}
+
+// ---------------------------------------------------------------------
+// block allocation
+// ---------------------------------------------------------------------
+
+/// Free-list allocator over the block pool's `n_blocks` block ids.
+/// Double frees are rejected (not silently absorbed into the free
+/// list), and `free_blocks() + <blocks held by callers>` is always the
+/// pool size — the conservation invariant the property suite fuzzes.
+pub struct BlockAllocator {
+    free: Vec<u32>,
+    held: Vec<bool>,
+    n_blocks: usize,
+}
+
+impl BlockAllocator {
+    pub fn new(n_blocks: usize) -> Self {
+        BlockAllocator {
+            // pop() hands out low ids first (cosmetic, but deterministic)
+            free: (0..n_blocks as u32).rev().collect(),
+            held: vec![false; n_blocks],
+            n_blocks,
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.n_blocks - self.free.len()
+    }
+
+    /// Claim one block, or None when the pool is dry.
+    pub fn alloc(&mut self) -> Option<u32> {
+        let b = self.free.pop()?;
+        self.held[b as usize] = true;
+        Some(b)
+    }
+
+    /// Claim `n` blocks all-or-nothing (admission must not strand a
+    /// half-allocated prompt when the pool runs dry mid-claim).
+    pub fn alloc_n(&mut self, n: usize) -> Option<Vec<u32>> {
+        if self.free.len() < n {
+            return None;
+        }
+        Some((0..n).map(|_| self.alloc().unwrap()).collect())
+    }
+
+    /// Return a block to the free list; double frees and out-of-range
+    /// ids are errors.
+    pub fn free(&mut self, block: u32) -> Result<()> {
+        let i = block as usize;
+        if i >= self.n_blocks {
+            bail!("freeing block {block} outside pool of {}", self.n_blocks);
+        }
+        if !self.held[i] {
+            bail!("double free of block {block}");
+        }
+        self.held[i] = false;
+        self.free.push(block);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// the paged manager
+// ---------------------------------------------------------------------
+
+/// Paged KV manager: decode slots + per-slot block tables over a
+/// [`KvBlockPool`], with a [`BlockAllocator`] free list.  See the
+/// module docs for the admission/preemption policy.
+pub struct PagedKv {
+    pub batch: usize,
+    pub max_seq: usize,
+    pub pool: KvBlockPool,
+    alloc: BlockAllocator,
+    slots: Vec<Option<u64>>,
+    pos: Vec<usize>,
+    tables: Vec<Vec<u32>>,
+}
+
+impl PagedKv {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        batch: usize,
+        n_layers: usize,
+        n_heads: usize,
+        max_seq: usize,
+        head_dim: usize,
+        block_size: usize,
+        n_blocks: usize,
+    ) -> Self {
+        PagedKv {
+            batch,
+            max_seq,
+            pool: KvBlockPool::new(
+                n_blocks, block_size, n_layers, n_heads, head_dim,
+            ),
+            alloc: BlockAllocator::new(n_blocks),
+            slots: vec![None; batch],
+            pos: vec![0; batch],
+            tables: vec![Vec::new(); batch],
+        }
+    }
+
+    /// Blocks needed to hold `len` positions (at least one — a
+    /// sequence always owns a page to write its first token into).
+    pub fn blocks_for(&self, len: usize) -> usize {
+        len.div_ceil(self.pool.block_size).max(1)
+    }
+
+    /// Can a prompt of this length EVER be admitted (even into an idle
+    /// pool)?  False means the request must be rejected, not retried.
+    pub fn fits_pool(&self, prompt_len: usize) -> bool {
+        prompt_len < self.max_seq
+            && self.blocks_for(prompt_len) <= self.alloc.n_blocks()
+    }
+
+    /// Admit a request: claim a free slot plus enough blocks for its
+    /// prompt (all-or-nothing).  None = no capacity right now.
+    pub fn alloc_seq(
+        &mut self,
+        request_id: u64,
+        prompt_len: usize,
+    ) -> Option<usize> {
+        let slot =
+            (0..self.batch).find(|&i| self.slots[i].is_none())?;
+        let blocks = self.alloc.alloc_n(self.blocks_for(prompt_len))?;
+        self.slots[slot] = Some(request_id);
+        self.pos[slot] = 0;
+        self.tables[slot] = blocks;
+        Some(slot)
+    }
+
+    /// Release a sequence: blocks back to the free list, slot freed.
+    pub fn free_seq(&mut self, slot: usize) {
+        for b in self.tables[slot].drain(..) {
+            self.alloc
+                .free(b)
+                .expect("slot table held a block the allocator disowns");
+        }
+        self.slots[slot] = None;
+        self.pos[slot] = 0;
+    }
+
+    /// Grow `slot`'s table on demand so its next write position is
+    /// backed by a page.  False = pool dry (caller preempts).
+    pub fn ensure_write_capacity(&mut self, slot: usize) -> bool {
+        let bs = self.pool.block_size;
+        if self.pos[slot] / bs < self.tables[slot].len() {
+            return true;
+        }
+        match self.alloc.alloc() {
+            Some(b) => {
+                self.tables[slot].push(b);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Copy one request's prefill cache rows (`[H, max_seq, Dh]` within
+    /// a prefill output of batch `src_batch`, row `src_row`) into the
+    /// sequence's pages.
+    pub fn install_from_prefill(
+        &mut self,
+        slot: usize,
+        layer_k: &[Vec<f32>],
+        layer_v: &[Vec<f32>],
+        src_row: usize,
+        src_batch: usize,
+        prompt_len: usize,
+    ) -> Result<()> {
+        let nl = self.pool.n_layers;
+        if layer_k.len() != nl || layer_v.len() != nl {
+            bail!("layer count mismatch");
+        }
+        let stride =
+            self.pool.n_heads * self.max_seq * self.pool.head_dim;
+        if self.blocks_for(prompt_len) > self.tables[slot].len() {
+            bail!(
+                "slot {slot}: table has {} blocks, prompt of {prompt_len} \
+                 needs {}",
+                self.tables[slot].len(),
+                self.blocks_for(prompt_len)
+            );
+        }
+        for l in 0..nl {
+            if layer_k[l].len() != src_batch * stride
+                || layer_v[l].len() != src_batch * stride
+            {
+                bail!(
+                    "prefill cache layer {l}: len {}/{} != {}",
+                    layer_k[l].len(),
+                    layer_v[l].len(),
+                    src_batch * stride
+                );
+            }
+            let k_row =
+                &layer_k[l][src_row * stride..(src_row + 1) * stride];
+            let v_row =
+                &layer_v[l][src_row * stride..(src_row + 1) * stride];
+            self.pool.scatter_row(
+                l,
+                &self.tables[slot],
+                prompt_len,
+                self.max_seq,
+                k_row,
+                v_row,
+            )?;
+        }
+        self.pos[slot] = prompt_len;
+        Ok(())
+    }
+
+    /// Advance a slot's position after a decode step.
+    pub fn advance(&mut self, slot: usize) -> Result<()> {
+        if self.pos[slot] + 1 >= self.max_seq {
+            bail!("slot {slot} overflowed max_seq={}", self.max_seq);
+        }
+        self.pos[slot] += 1;
+        Ok(())
+    }
+
+    /// Remaining `max_seq` capacity of a slot (the pool may run dry
+    /// earlier — that is what preemption handles).
+    pub fn headroom(&self, slot: usize) -> usize {
+        self.max_seq - self.pos[slot]
+    }
+
+    pub fn pos(&self, slot: usize) -> usize {
+        self.pos[slot]
+    }
+
+    /// Split borrow for the decode step: per-slot block tables (empty
+    /// table = idle slot) alongside the mutable pool they index.
+    pub fn decode_view(&mut self) -> (Vec<&[u32]>, &mut KvBlockPool) {
+        let tables: Vec<&[u32]> =
+            self.tables.iter().map(Vec::as_slice).collect();
+        (tables, &mut self.pool)
+    }
+
+    pub fn table(&self, slot: usize) -> &[u32] {
+        &self.tables[slot]
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_none()).count()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.alloc.free_blocks()
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.alloc.used_blocks()
+    }
+
+    /// Fragmentation accounting: `(positions held, position capacity of
+    /// the held blocks)`.  The gap between the two is block-granularity
+    /// slack — at most `block_size - 1` positions per active sequence,
+    /// which is the defrag story: blocks recycle whole, so the pool
+    /// never fragments beyond that per-sequence tail slack.
+    pub fn utilization(&self) -> (usize, usize) {
+        let held: usize = (0..self.batch)
+            .filter(|&i| self.slots[i].is_some())
+            .map(|i| self.pos[i])
+            .sum();
+        (held, self.blocks_in_use() * self.pool.block_size)
+    }
+
+    /// Conservation invariant (fuzzed by the property suite): every
+    /// block is either on the free list or in exactly one table.
+    pub fn check_conservation(&self) -> Result<()> {
+        let in_tables: usize =
+            self.tables.iter().map(Vec::len).sum();
+        if in_tables != self.blocks_in_use() {
+            bail!(
+                "{} blocks in tables but allocator says {} in use",
+                in_tables,
+                self.blocks_in_use()
+            );
+        }
+        let mut seen = vec![false; self.alloc.n_blocks()];
+        for t in &self.tables {
+            for &b in t {
+                if seen[b as usize] {
+                    bail!("block {b} appears in two tables");
+                }
+                seen[b as usize] = true;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -199,5 +538,102 @@ mod tests {
         assert!(s
             .install_from_prefill(slot, &bad, &bad, 0, 1, 1)
             .is_err());
+    }
+
+    #[test]
+    fn adopt_rejects_short_layer_tensors() {
+        // regression: adopt used to validate layer COUNT only, so a
+        // short tensor silently truncated cache state
+        let mut s = kv();
+        let good = 2 * 2 * 8 * 4; // B * H * S * Dh
+        let ok_k = vec![vec![1f32; good], vec![1f32; good]];
+        let ok_v = ok_k.clone();
+        s.adopt_decode_output(ok_k, ok_v).unwrap();
+        assert!(s.k[0].iter().all(|&x| x == 1.0), "adopt took effect");
+        let short_k = vec![vec![2f32; good], vec![2f32; good - 1]];
+        let full_v = vec![vec![2f32; good], vec![2f32; good]];
+        assert!(
+            s.adopt_decode_output(short_k, full_v).is_err(),
+            "short k tensor must be rejected"
+        );
+        let full_k = vec![vec![3f32; good], vec![3f32; good]];
+        let short_v = vec![vec![3f32; good - 4], vec![3f32; good]];
+        assert!(
+            s.adopt_decode_output(full_k, short_v).is_err(),
+            "short v tensor must be rejected"
+        );
+        // failed adopts must not have clobbered the cache
+        assert!(s.k[0].iter().all(|&x| x == 1.0));
+    }
+
+    // ---------------------------------------------------- paged manager
+
+    fn paged() -> PagedKv {
+        // 2 slots, 2 layers, 2 heads, max_seq 32, dh 4, block 4, 6 blocks
+        PagedKv::new(2, 2, 2, 32, 4, 4, 6)
+    }
+
+    #[test]
+    fn admission_is_block_gated() {
+        let mut p = paged();
+        // prompt of 9 needs 3 of the 6 blocks
+        let a = p.alloc_seq(1, 9).unwrap();
+        assert_eq!(p.table(a).len(), 3);
+        assert_eq!(p.free_blocks(), 3);
+        // next prompt of 13 needs 4 > 3 free: no admission, and the
+        // failed all-or-nothing claim must not leak anything
+        assert!(p.alloc_seq(2, 13).is_none());
+        assert_eq!(p.free_blocks(), 3);
+        p.check_conservation().unwrap();
+        // a small prompt still fits
+        let b = p.alloc_seq(3, 4).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.free_blocks(), 2);
+        // pool-impossible prompt is permanently unfittable
+        assert!(!p.fits_pool(25), "needs 7 > 6 blocks");
+        assert!(p.fits_pool(9));
+    }
+
+    #[test]
+    fn tables_grow_on_demand_and_recycle() {
+        let mut p = paged();
+        let s = p.alloc_seq(1, 4).unwrap(); // one full block
+        p.pos[s] = 4; // as install_from_prefill would set
+        assert_eq!(p.table(s).len(), 1);
+        // writing position 4 needs a second block
+        assert!(p.ensure_write_capacity(s));
+        assert_eq!(p.table(s).len(), 2);
+        // position 5..7 fit in the same block: no growth
+        p.pos[s] = 5;
+        assert!(p.ensure_write_capacity(s));
+        assert_eq!(p.table(s).len(), 2);
+        p.check_conservation().unwrap();
+        p.free_seq(s);
+        assert_eq!(p.free_blocks(), 6, "all blocks recycled");
+        p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn pool_dry_reports_false() {
+        let mut p = paged();
+        let a = p.alloc_seq(1, 12).unwrap(); // 3 blocks
+        let b = p.alloc_seq(2, 12).unwrap(); // 3 blocks -> pool dry
+        p.pos[a] = 12;
+        p.pos[b] = 12;
+        assert!(!p.ensure_write_capacity(a), "pool is dry");
+        // freeing b rescues a
+        p.free_seq(b);
+        assert!(p.ensure_write_capacity(a));
+        p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn allocator_rejects_double_free() {
+        let mut a = BlockAllocator::new(4);
+        let b = a.alloc().unwrap();
+        a.free(b).unwrap();
+        assert!(a.free(b).is_err(), "double free must error");
+        assert!(a.free(99).is_err(), "out-of-range free must error");
+        assert_eq!(a.free_blocks(), 4);
     }
 }

@@ -13,6 +13,13 @@ pub struct EngineMetrics {
     pub decode_time_s: f64,
     pub completed: u64,
     pub rejected: u64,
+    /// sequences that entered a prefill step (re-admissions after a
+    /// preemption count again, so admitted == completed + preempted
+    /// once the engine drains with nothing rejected mid-flight)
+    pub admitted: u64,
+    /// paged KV: sequences evicted to recover blocks (re-queued for
+    /// re-prefill from their original prompt)
+    pub preempted: u64,
     pub ttft: Summary,
     pub total_latency: Summary,
     pub tokens_out: Summary,
@@ -52,13 +59,15 @@ impl EngineMetrics {
     /// Multi-line human report.
     pub fn report(&mut self) -> String {
         format!(
-            "completed={} rejected={}\n\
+            "completed={} rejected={} admitted={} preempted={}\n\
              prefill: {} steps, {} tokens, {:.1} tok/s ({:.3}s total)\n\
              decode : {} steps, {} tokens, {:.1} tok/s ({:.3}s total)\n\
              ttft   : {}\n\
              e2e    : {}",
             self.completed,
             self.rejected,
+            self.admitted,
+            self.preempted,
             self.prefill_steps,
             self.prefill_tokens,
             self.prefill_tps(),

@@ -4,11 +4,13 @@
 //!
 //! * [`request`] — request/response types and sampling parameters.
 //! * [`queue`]   — admission queue with backpressure.
-//! * [`kv`]      — KV-cache slot manager (fixed decode-batch slots over
-//!                 the AOT decode graph's cache tensors).
+//! * [`kv`]      — KV-cache management: paged block tables over a fixed
+//!                 block pool (default, vLLM-style) or the contiguous
+//!                 per-slot mirror (`ODYSSEY_NO_PAGING=1`).
 //! * [`batcher`] — continuous batching policy: drains the queue into
-//!                 prefill buckets and packs active slots into decode
-//!                 steps.
+//!                 prefill buckets (admission gated on KV capacity,
+//!                 with requeue-front on transient shortage) and packs
+//!                 active slots into decode steps.
 //! * [`engine`]  — the generation loop over the PJRT executables; owns
 //!                 the runtime, quantized weights, and KV state.
 //! * [`handle`]  — thread-safe front door (mpsc) for servers/examples.

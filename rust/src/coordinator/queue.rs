@@ -42,8 +42,9 @@ impl RequestQueue {
         Admit::Accepted
     }
 
-    /// Pop up to `n` requests whose prompts fit in `max_prompt` tokens;
-    /// over-long prompts are returned separately for rejection.
+    /// Pop up to `n` requests whose prompts fit in `1..=max_prompt`
+    /// tokens; over-long AND empty prompts are returned separately for
+    /// rejection (prefill needs at least one token to sample from).
     pub fn pop_batch(
         &mut self,
         n: usize,
@@ -54,11 +55,24 @@ impl RequestQueue {
         while batch.len() < n {
             match self.items.pop_front() {
                 None => break,
-                Some(r) if r.prompt.len() > max_prompt => rejected.push(r),
+                Some(r)
+                    if r.prompt.is_empty()
+                        || r.prompt.len() > max_prompt =>
+                {
+                    rejected.push(r)
+                }
                 Some(r) => batch.push(r),
             }
         }
         (batch, rejected)
+    }
+
+    /// Put a request back at the FRONT of the queue: preemption and
+    /// transient-capacity re-admission.  Deliberately NOT bounded by
+    /// `capacity` and not counted as a new acceptance — the request was
+    /// already admitted once and must never be shed on its way back in.
+    pub fn requeue_front(&mut self, r: Request) {
+        self.items.push_front(r);
     }
 
     pub fn len(&self) -> usize {
@@ -110,6 +124,32 @@ mod tests {
         let (batch, rej) = q.pop_batch(4, 128);
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
         assert_eq!(rej.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn empty_prompts_filtered() {
+        // regression: an empty prompt reaching prefill underflows the
+        // last-prompt-logit index — it must bounce at the queue
+        let mut q = RequestQueue::new(10);
+        q.push(req(0, 0));
+        q.push(req(1, 4));
+        let (batch, rej) = q.pop_batch(4, 128);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(rej.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+    }
+
+    #[test]
+    fn requeue_front_bypasses_capacity_and_pops_first() {
+        let mut q = RequestQueue::new(2);
+        q.push(req(0, 1));
+        q.push(req(1, 1));
+        q.requeue_front(req(9, 1)); // full queue must still take it back
+        assert_eq!(q.len(), 3);
+        let (batch, _) = q.pop_batch(3, 100);
+        assert_eq!(
+            batch.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![9, 0, 1]
+        );
     }
 
     #[test]

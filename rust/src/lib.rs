@@ -37,8 +37,8 @@
 //! | [`formats`]   | JSON + safetensors + manifest/config files (no serde) |
 //! | [`quant`]     | the paper's quantization recipe + all baselines |
 //! | [`model`]     | LLaMA checkpoint container + canonical naming |
-//! | [`runtime`]   | `ExecBackend` trait (prepare-once weight staging incl.), native CPU + pjrt backends, `Value` host tensors, synthetic artifacts |
-//! | [`coordinator`]| serving engine: router, batcher, scheduler, KV manager |
+//! | [`runtime`]   | `ExecBackend` trait (prepare-once weight staging + paged decode), native CPU + pjrt backends, `Value` host tensors, KV block pool, synthetic artifacts |
+//! | [`coordinator`]| serving engine: router, batcher, scheduler, paged/contiguous KV manager |
 //! | [`server`]    | std::net HTTP/1.1 front-end |
 //! | [`perfmodel`] | analytical A100 roofline + engine comparators |
 //! | [`exp`]       | one driver per paper table/figure |

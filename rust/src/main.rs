@@ -29,7 +29,7 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["force"])?;
+    let args = Args::parse(argv, &["force", "no-paging"])?;
     let cmd = args
         .positional
         .first()
@@ -162,7 +162,7 @@ fn generate(args: &Args, artifacts: &str) -> Result<()> {
         .map(|t| t.trim().parse::<i32>())
         .collect::<Result<Vec<_>, _>>()
         .map_err(|e| anyhow!("bad --prompt: {e}"))?;
-    let opts = EngineOptions {
+    let mut opts = EngineOptions {
         artifacts_dir: artifacts.to_string(),
         model: args.get_or("model", "tiny3m"),
         variant: args.get_or("variant", "w4a8_fast"),
@@ -170,6 +170,7 @@ fn generate(args: &Args, artifacts: &str) -> Result<()> {
         backend: cli::parse_backend(args)?,
         ..Default::default()
     };
+    cli::parse_kv_flags(args, &mut opts)?;
     let svc = EngineService::spawn(opts)?;
     let params = GenParams {
         max_new_tokens: args.get_usize("max-new-tokens", 16)?,
@@ -197,7 +198,7 @@ fn generate(args: &Args, artifacts: &str) -> Result<()> {
 fn serve(args: &Args, artifacts: &str) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:8080");
     let workers = args.get_usize("workers", 4)?;
-    let opts = EngineOptions {
+    let mut opts = EngineOptions {
         artifacts_dir: artifacts.to_string(),
         model: args.get_or("model", "tiny3m"),
         variant: args.get_or("variant", "w4a8_fast"),
@@ -205,6 +206,7 @@ fn serve(args: &Args, artifacts: &str) -> Result<()> {
         backend: cli::parse_backend(args)?,
         ..Default::default()
     };
+    cli::parse_kv_flags(args, &mut opts)?;
     let svc = EngineService::spawn(opts)?;
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     odyssey::server::serve(&addr, svc.handle.clone(), workers, stop)

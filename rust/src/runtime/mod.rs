@@ -38,6 +38,21 @@
 //! `ODYSSEY_NO_STAGING=1` to fall back to the per-step path.
 //! [`StagingStats`] counts materializations so tests and benches can
 //! assert that decode steps stop copying weight bytes.
+//!
+//! # Paged decode (block-table KV)
+//!
+//! Staging stopped weight bytes from moving per token; the KV caches
+//! were still round-tripped whole — `2·L` tensors of
+//! `[B, H, max_seq, Dh]` in and out of every decode step.  The paged
+//! decode graph variant removes that too:
+//! [`ExecBackend::execute_decode_paged`] runs a STAGED decode step with
+//! KV living in a [`KvBlockPool`] of `[block_size, H, Dh]` blocks,
+//! reads history through per-sequence block tables, writes the new
+//! token's K/V in place, and returns only the logits.  Active rows are
+//! bit-identical to `execute_staged` on equivalent contiguous caches;
+//! `StagingStats::kv_bytes_moved` exposes the per-step traffic both
+//! paths generate (`ODYSSEY_NO_PAGING=1` keeps the engine on the
+//! contiguous path the parity suite compares against).
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -47,9 +62,12 @@ use crate::formats::config::{Dtype, GraphInfo, Manifest, ParamSpec};
 use crate::formats::safetensors::{StDtype, StTensor};
 
 pub mod native;
+pub mod paged;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod synth;
+
+pub use paged::KvBlockPool;
 
 // ---------------------------------------------------------------------
 // host values
@@ -364,6 +382,16 @@ pub struct StagingStats {
     pub weight_bytes_staged: u64,
     /// Bytes of weight payload re-materialized by `execute` calls.
     pub weight_bytes_rematerialized: u64,
+    /// Decode steps served through the paged KV path
+    /// ([`ExecBackend::execute_decode_paged`]); also counted in
+    /// `staged_execs` — paged decode always runs on staged weights.
+    pub paged_decode_steps: u64,
+    /// KV-cache bytes that crossed the execution boundary on decode
+    /// steps: the contiguous path moves the full `[B, H, max_seq, Dh]`
+    /// caches in AND out every step, the paged path only writes the new
+    /// token's K/V rows into the block pool.  The per-step ratio of the
+    /// two is the headline number `benches/hot_loop.rs` reports.
+    pub kv_bytes_moved: u64,
 }
 
 /// Backend-specific staged-weight payload (private to the runtime).
@@ -601,6 +629,27 @@ pub trait ExecBackend {
         dynamic_args: &[&Value],
     ) -> Result<Vec<Value>>;
 
+    /// The paged decode graph variant: run one decode step of a STAGED
+    /// decode graph with the KV cache living in a block pool instead of
+    /// contiguous `[B, H, max_seq, Dh]` tensors.  `tables[bi]` is row
+    /// `bi`'s block table (empty = idle row: skipped, zero logits); the
+    /// backend reads history through the table and writes the new
+    /// token's K/V at `pos[bi]` IN PLACE.  Returns the logits value
+    /// `f32[B, V]` only — there are no cache outputs to adopt.
+    ///
+    /// Active rows are bit-identical to `execute_staged` on the same
+    /// graph with the equivalent contiguous caches (pinned by
+    /// `tests/properties.rs`): paging changes where K/V rows live,
+    /// never the float-op sequence that consumes them.
+    fn execute_decode_paged(
+        &mut self,
+        staged: &StagedGraph,
+        token: &[i32],
+        pos: &[i32],
+        pool: &mut KvBlockPool,
+        tables: &[&[u32]],
+    ) -> Result<Value>;
+
     /// Staging counters (see [`StagingStats`]).
     fn staging_stats(&self) -> StagingStats;
 }
@@ -834,6 +883,47 @@ impl Runtime {
         self.backend.execute_staged(staged, dynamic_args)
     }
 
+    /// Run one PAGED decode step: KV history is read through per-row
+    /// block tables and the new token's K/V is written into `pool` in
+    /// place.  Returns the logits value `f32[B, V]` only.
+    pub fn run_decode_paged(
+        &mut self,
+        staged: &StagedGraph,
+        token: &[i32],
+        pos: &[i32],
+        pool: &mut KvBlockPool,
+        tables: &[&[u32]],
+    ) -> Result<Value> {
+        if staged.backend() != self.backend.name() {
+            bail!(
+                "staged graph {} belongs to backend '{}', runtime is '{}'",
+                staged.graph(),
+                staged.backend(),
+                self.backend.name()
+            );
+        }
+        if staged.info.kind != crate::formats::config::GraphKind::Decode {
+            bail!(
+                "{}: paged execution is decode-only (graph kind {:?})",
+                staged.graph(),
+                staged.info.kind
+            );
+        }
+        let b = staged.info.batch;
+        if token.len() != b || pos.len() != b || tables.len() != b {
+            bail!(
+                "{}: paged decode wants token/pos/tables of batch {b}, \
+                 got {}/{}/{}",
+                staged.graph(),
+                token.len(),
+                pos.len(),
+                tables.len()
+            );
+        }
+        self.backend
+            .execute_decode_paged(staged, token, pos, pool, tables)
+    }
+
     /// Staging counters from the active backend.
     pub fn staging_stats(&self) -> StagingStats {
         self.backend.staging_stats()
@@ -850,6 +940,16 @@ impl Runtime {
 pub fn staging_enabled_from_env() -> bool {
     !matches!(
         std::env::var("ODYSSEY_NO_STAGING").as_deref(),
+        Ok("1") | Ok("true")
+    )
+}
+
+/// `ODYSSEY_NO_PAGING=1` (or `true`) disables the paged KV cache — the
+/// escape hatch the paged/contiguous parity tests compare against.
+/// Anything else (including unset) leaves paging on.
+pub fn paging_enabled_from_env() -> bool {
+    !matches!(
+        std::env::var("ODYSSEY_NO_PAGING").as_deref(),
         Ok("1") | Ok("true")
     )
 }

@@ -997,6 +997,217 @@ pub(crate) fn decode_core(
     Ok(outs)
 }
 
+/// Paged decode on pre-parsed weights: K/V history is read through
+/// per-row block tables and the new token's K/V lands in the block
+/// pool IN PLACE — no cache tensors cross the execution boundary.
+///
+/// Bit-exactness contract with [`decode_core`]: for every ACTIVE row
+/// (non-empty table) the float-op sequence is identical — same qkv
+/// projections, same rope, same `smax`-length masked-softmax scores,
+/// same weighted-sum accumulation order — paging only changes WHERE
+/// the K/V rows live, so active-row logits and the written K/V rows
+/// match the contiguous path bit for bit (pinned by
+/// `tests/properties.rs`).  Idle rows are skipped entirely (their
+/// logits stay zero and the pool is never touched), where the
+/// contiguous graph decodes garbage for them; the engine never reads
+/// idle logits either way.
+///
+/// Returns `(logits f32[B, V], kv bytes written)`.
+#[allow(clippy::too_many_arguments)]
+fn decode_core_paged(
+    info: &ModelInfo,
+    variant: &str,
+    group: usize,
+    b: usize,
+    token: &[i32],
+    pos: &[i32],
+    pool: &mut super::KvBlockPool,
+    tables: &[&[u32]],
+    w: &Weights,
+) -> Result<(Value, u64)> {
+    let quant_act = variant_quant_act(variant)?;
+    let nl = info.n_layers;
+    if token.len() != b || pos.len() != b || tables.len() != b {
+        bail!("paged decode wants token[{b}] + pos[{b}] + tables[{b}]");
+    }
+    if pool.n_layers != nl
+        || pool.n_heads != info.n_heads
+        || pool.head_dim != info.head_dim
+    {
+        bail!(
+            "block pool geometry (L={}, H={}, Dh={}) does not match \
+             model (L={nl}, H={}, Dh={})",
+            pool.n_layers,
+            pool.n_heads,
+            pool.head_dim,
+            info.n_heads,
+            info.head_dim
+        );
+    }
+    let (d, nh, dh) = (info.d_model, info.n_heads, info.head_dim);
+    let (v, smax) = (info.vocab, info.max_seq);
+    let half = dh / 2;
+    let active: Vec<bool> = tables.iter().map(|t| !t.is_empty()).collect();
+    for bi in 0..b {
+        if !active[bi] {
+            continue;
+        }
+        let p = pos[bi];
+        if p < 0 || p as usize >= smax {
+            bail!("decode pos {p} out of cache range 0..{smax}");
+        }
+        if pool.locate(tables[bi], p as usize).is_none() {
+            bail!(
+                "row {bi}: block table ({} blocks of {}) has no page \
+                 for write position {p}",
+                tables[bi].len(),
+                pool.block_size
+            );
+        }
+        let t = token[bi];
+        if t < 0 || t as usize >= v {
+            bail!("token id {t} out of vocab range 0..{v}");
+        }
+    }
+
+    // embedding (idle rows stay zero — their logits are never read)
+    let mut x = vec![0f32; b * d];
+    for bi in 0..b {
+        if active[bi] {
+            x[bi * d..(bi + 1) * d]
+                .copy_from_slice(w.embed.row(token[bi] as usize));
+        }
+    }
+
+    // rope at each active row's sequence position
+    let mut cos = vec![0f32; b * half];
+    let mut sin = vec![0f32; b * half];
+    for bi in 0..b {
+        if active[bi] {
+            rope_row(
+                pos[bi] as f32,
+                dh,
+                &mut cos[bi * half..(bi + 1) * half],
+                &mut sin[bi * half..(bi + 1) * half],
+            );
+        }
+    }
+
+    let scale_inv = 1.0 / (dh as f32).sqrt();
+    let mut scores = vec![0f32; smax];
+    let bs = pool.block_size;
+    let row_stride = nh * dh;
+    let mut kv_bytes: u64 = 0;
+
+    for (li, lw) in w.layers.iter().enumerate() {
+        let h2 = rms_norm(&x, b, d, &lw.attn_norm);
+        let mut qkv = linear_group(
+            &h2,
+            &[&lw.wq, &lw.wk, &lw.wv],
+            quant_act,
+            group,
+        )?;
+        let vv = qkv.pop().unwrap();
+        let mut kk = qkv.pop().unwrap();
+        let mut qq = qkv.pop().unwrap();
+        for bi in 0..b {
+            if !active[bi] {
+                continue;
+            }
+            let c = &cos[bi * half..(bi + 1) * half];
+            let sn = &sin[bi * half..(bi + 1) * half];
+            apply_rope_row(qq.row_mut(bi), nh, dh, c, sn);
+            apply_rope_row(kk.row_mut(bi), nh, dh, c, sn);
+        }
+
+        // write k/v at pos through the table, then attend over the pages
+        let (kc, vc) = pool.layer_mut(li);
+        let mut o = Tensor::<f32>::zeros(&[b, d]);
+        for bi in 0..b {
+            if !active[bi] {
+                continue;
+            }
+            let table = tables[bi];
+            let p = pos[bi] as usize;
+            // page address of (position, head 0); validated above, so
+            // every `q <= p` resolves
+            let locate = |q: usize| -> usize {
+                (table[q / bs] as usize * bs + q % bs) * row_stride
+            };
+            let dst = locate(p);
+            for h in 0..nh {
+                kc[dst + h * dh..dst + (h + 1) * dh]
+                    .copy_from_slice(&kk.row(bi)[h * dh..(h + 1) * dh]);
+                vc[dst + h * dh..dst + (h + 1) * dh]
+                    .copy_from_slice(&vv.row(bi)[h * dh..(h + 1) * dh]);
+            }
+            kv_bytes += (2 * nh * dh * 4) as u64;
+            for h in 0..nh {
+                let qh = &qq.row(bi)[h * dh..(h + 1) * dh];
+                for (ki, sc) in scores.iter_mut().enumerate() {
+                    if ki <= p {
+                        let off = locate(ki) + h * dh;
+                        let kh = &kc[off..off + dh];
+                        let mut dot = 0f32;
+                        for t in 0..dh {
+                            dot += qh[t] * kh[t];
+                        }
+                        *sc = dot * scale_inv;
+                    } else {
+                        *sc = NEG_INF;
+                    }
+                }
+                softmax_inplace(&mut scores);
+                let orow = o.row_mut(bi);
+                let oh = &mut orow[h * dh..(h + 1) * dh];
+                for (ki, &att) in scores.iter().enumerate().take(p + 1) {
+                    if att == 0.0 {
+                        continue;
+                    }
+                    let off = locate(ki) + h * dh;
+                    let vh = &vc[off..off + dh];
+                    for t in 0..dh {
+                        oh[t] += att * vh[t];
+                    }
+                }
+            }
+        }
+        let o_proj =
+            linear_group(&o, &[&lw.wo], quant_act, group)?.remove(0);
+        for (xi, oi) in x.iter_mut().zip(o_proj.data().iter()) {
+            *xi += *oi;
+        }
+
+        let h2 = rms_norm(&x, b, d, &lw.mlp_norm);
+        let mut gu = linear_group(
+            &h2,
+            &[&lw.w_gate, &lw.w_up],
+            quant_act,
+            group,
+        )?;
+        let up = gu.pop().unwrap();
+        let gate = gu.pop().unwrap();
+        let ff = gate.cols();
+        let mut act = Tensor::<f32>::zeros(&[b, ff]);
+        for (a, (&g, &u)) in act
+            .data_mut()
+            .iter_mut()
+            .zip(gate.data().iter().zip(up.data().iter()))
+        {
+            *a = silu(g) * u;
+        }
+        let down =
+            linear_group(&act, &[&lw.w_down], quant_act, group)?.remove(0);
+        for (xi, di) in x.iter_mut().zip(down.data().iter()) {
+            *xi += *di;
+        }
+    }
+
+    let xf = rms_norm(&x, b, d, &w.norm_f);
+    let logits = gemm_fp(&xf, &w.lm_head);
+    Ok((Value::f32(&[b, v], logits.into_vec()), kv_bytes))
+}
+
 /// Standalone GEMM graphs (the measured kernel benches).  Unstaged
 /// execution is parse-then-run of the EXACT staged dispatch
 /// (`parse_gemm_weights` + `run_gemm_staged`), so staged/unstaged
@@ -1240,6 +1451,11 @@ impl ExecBackend for NativeBackend {
             }
             GraphKind::Decode => {
                 let mi = Self::model_of(manifest, info)?;
+                // contiguous decode moves the full caches in AND out
+                let cache_len =
+                    info.batch * mi.n_heads * mi.max_seq * mi.head_dim;
+                self.stats.kv_bytes_moved +=
+                    (4 * mi.n_layers * cache_len * 4) as u64;
                 forward_decode(
                     mi,
                     &info.variant,
@@ -1401,6 +1617,9 @@ impl ExecBackend for NativeBackend {
                 let b = info.batch;
                 let cache_len =
                     b * minfo.n_heads * minfo.max_seq * minfo.head_dim;
+                // contiguous decode moves the full caches in AND out
+                self.stats.kv_bytes_moved +=
+                    (4 * nl * cache_len * 4) as u64;
                 let (k_caches, v_caches) = parse_decode_caches(
                     &dynamic_args[2..2 + 2 * nl],
                     nl,
@@ -1424,6 +1643,54 @@ impl ExecBackend for NativeBackend {
                 info.kind
             ),
         }
+    }
+
+    fn execute_decode_paged(
+        &mut self,
+        staged: &StagedGraph,
+        token: &[i32],
+        pos: &[i32],
+        pool: &mut super::KvBlockPool,
+        tables: &[&[u32]],
+    ) -> Result<Value> {
+        // without the pjrt feature StagedHandle has a single variant and
+        // this destructuring is infallible; with it, reject foreign handles
+        #[allow(clippy::infallible_destructuring_match)]
+        let handle = match &staged.handle {
+            StagedHandle::Native(h) => h,
+            #[cfg(feature = "pjrt")]
+            _ => bail!(
+                "staged graph {} was staged by another backend",
+                staged.info.name
+            ),
+        };
+        let info = &staged.info;
+        let (minfo, group, weights) = match handle {
+            NativeStaged::Model { minfo, group, weights }
+                if info.kind == GraphKind::Decode =>
+            {
+                (minfo, *group, weights)
+            }
+            _ => bail!(
+                "{}: paged execution needs a staged decode graph",
+                info.name
+            ),
+        };
+        let (logits, kv_bytes) = decode_core_paged(
+            minfo,
+            &info.variant,
+            group,
+            info.batch,
+            token,
+            pos,
+            pool,
+            tables,
+            weights,
+        )?;
+        self.stats.staged_execs += 1;
+        self.stats.paged_decode_steps += 1;
+        self.stats.kv_bytes_moved += kv_bytes;
+        Ok(logits)
     }
 
     fn staging_stats(&self) -> StagingStats {

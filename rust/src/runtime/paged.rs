@@ -1,0 +1,218 @@
+//! Paged KV-cache block pool (vLLM-style).
+//!
+//! Instead of one contiguous `[B, H, max_seq, Dh]` mirror per decode
+//! slot, KV lives in a fixed arena of blocks of shape
+//! `[block_size, H, Dh]` (position-major within a block).  A sequence
+//! owns an ordered *block table* — a list of block ids — and position
+//! `p` resolves to block `table[p / block_size]`, in-block row
+//! `p % block_size`.  Memory committed to a sequence is proportional to
+//! the tokens it has actually produced, not to `max_seq`, and the
+//! decode step writes K/V for the new token IN PLACE instead of
+//! round-tripping the whole cache tensor through the execution
+//! boundary.
+//!
+//! The pool is pure storage + addressing: allocation policy (free
+//! lists, preemption) lives in [`crate::coordinator::kv`], and the
+//! attention gather that READS through a block table lives in the
+//! execution backends ([`super::ExecBackend::execute_decode_paged`]).
+
+use anyhow::{anyhow, bail, Result};
+
+/// Fixed arena of KV blocks for one model: per layer, a K arena and a V
+/// arena of `n_blocks * block_size * n_heads * head_dim` f32s.
+pub struct KvBlockPool {
+    pub n_blocks: usize,
+    pub block_size: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    /// per-layer arenas, each `[n_blocks, block_size, H, Dh]` flattened
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl KvBlockPool {
+    pub fn new(
+        n_blocks: usize,
+        block_size: usize,
+        n_layers: usize,
+        n_heads: usize,
+        head_dim: usize,
+    ) -> Self {
+        assert!(block_size > 0, "block_size must be positive");
+        assert!(n_blocks > 0, "pool needs at least one block");
+        let numel = n_blocks * block_size * n_heads * head_dim;
+        KvBlockPool {
+            n_blocks,
+            block_size,
+            n_layers,
+            n_heads,
+            head_dim,
+            k: (0..n_layers).map(|_| vec![0f32; numel]).collect(),
+            v: (0..n_layers).map(|_| vec![0f32; numel]).collect(),
+        }
+    }
+
+    /// f32 elements of one block across K+V and all layers.
+    pub fn block_numel(&self) -> usize {
+        self.block_size * self.n_heads * self.head_dim
+    }
+
+    /// Total arena bytes (K + V, all layers).
+    pub fn bytes(&self) -> usize {
+        2 * self.n_layers * self.n_blocks * self.block_numel() * 4
+    }
+
+    /// Flat arena offset of `(position, head 0)` resolved through a
+    /// block table, or `None` when the table has no block covering the
+    /// position.  Add `h * head_dim` for head `h`.
+    #[inline]
+    pub fn locate(&self, table: &[u32], pos: usize) -> Option<usize> {
+        let blk = *table.get(pos / self.block_size)? as usize;
+        debug_assert!(blk < self.n_blocks, "block id out of pool");
+        let row = blk * self.block_size + pos % self.block_size;
+        Some(row * self.n_heads * self.head_dim)
+    }
+
+    /// Borrow one layer's K and V arenas mutably (the decode write path).
+    pub fn layer_mut(&mut self, layer: usize) -> (&mut [f32], &mut [f32]) {
+        (&mut self.k[layer], &mut self.v[layer])
+    }
+
+    /// Borrow one layer's K and V arenas.
+    pub fn layer(&self, layer: usize) -> (&[f32], &[f32]) {
+        (&self.k[layer], &self.v[layer])
+    }
+
+    /// Scatter one sequence row from contiguous `[H, max_seq, Dh]`
+    /// cache layout (positions `0..len`) into the sequence's pages.
+    pub fn scatter_row(
+        &mut self,
+        layer: usize,
+        table: &[u32],
+        len: usize,
+        max_seq: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) -> Result<()> {
+        let (nh, dh) = (self.n_heads, self.head_dim);
+        if k_row.len() < nh * max_seq * dh || v_row.len() < nh * max_seq * dh
+        {
+            bail!("scatter_row: source rows shorter than [H, max_seq, Dh]");
+        }
+        for p in 0..len {
+            let dst = self.locate(table, p).ok_or_else(|| {
+                anyhow!("scatter_row: no block for position {p}")
+            })?;
+            for h in 0..nh {
+                let src = (h * max_seq + p) * dh;
+                self.k[layer][dst + h * dh..dst + (h + 1) * dh]
+                    .copy_from_slice(&k_row[src..src + dh]);
+                self.v[layer][dst + h * dh..dst + (h + 1) * dh]
+                    .copy_from_slice(&v_row[src..src + dh]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Gather one sequence's pages (positions `0..len`) back into
+    /// contiguous `[H, max_seq, Dh]` K and V rows, zero-padded past
+    /// `len` — the inverse of [`Self::scatter_row`], used by the pjrt
+    /// compatibility path and the parity tests.
+    pub fn gather_row(
+        &self,
+        layer: usize,
+        table: &[u32],
+        len: usize,
+        max_seq: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (nh, dh) = (self.n_heads, self.head_dim);
+        let mut k_row = vec![0f32; nh * max_seq * dh];
+        let mut v_row = vec![0f32; nh * max_seq * dh];
+        for p in 0..len {
+            let src = self.locate(table, p).ok_or_else(|| {
+                anyhow!("gather_row: no block for position {p}")
+            })?;
+            for h in 0..nh {
+                let dst = (h * max_seq + p) * dh;
+                k_row[dst..dst + dh].copy_from_slice(
+                    &self.k[layer][src + h * dh..src + (h + 1) * dh],
+                );
+                v_row[dst..dst + dh].copy_from_slice(
+                    &self.v[layer][src + h * dh..src + (h + 1) * dh],
+                );
+            }
+        }
+        Ok((k_row, v_row))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> KvBlockPool {
+        // 6 blocks of 4 positions, 2 layers, 2 heads, dh=4
+        KvBlockPool::new(6, 4, 2, 2, 4)
+    }
+
+    #[test]
+    fn locate_resolves_through_table() {
+        let p = pool();
+        // sequence owns blocks 5 then 1 (deliberately non-contiguous)
+        let table = [5u32, 1];
+        // position 0 -> block 5 row 0
+        assert_eq!(p.locate(&table, 0), Some(5 * 4 * (2 * 4)));
+        // position 5 -> block 1 row 1 -> arena row 4 + 1
+        assert_eq!(p.locate(&table, 5), Some((4 + 1) * (2 * 4)));
+        // position 8 -> third block, not in table
+        assert_eq!(p.locate(&table, 8), None);
+        assert_eq!(p.locate(&[], 0), None);
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip() {
+        let mut p = pool();
+        let max_seq = 16;
+        let (nh, dh) = (2, 4);
+        let len = 6; // spans two blocks
+        let table = [3u32, 0];
+        let k_row: Vec<f32> =
+            (0..nh * max_seq * dh).map(|i| i as f32).collect();
+        let v_row: Vec<f32> =
+            (0..nh * max_seq * dh).map(|i| -(i as f32)).collect();
+        for l in 0..2 {
+            p.scatter_row(l, &table, len, max_seq, &k_row, &v_row)
+                .unwrap();
+        }
+        let (gk, gv) = p.gather_row(1, &table, len, max_seq).unwrap();
+        for h in 0..nh {
+            for pos in 0..max_seq {
+                for t in 0..dh {
+                    let i = (h * max_seq + pos) * dh + t;
+                    if pos < len {
+                        assert_eq!(gk[i], k_row[i]);
+                        assert_eq!(gv[i], v_row[i]);
+                    } else {
+                        assert_eq!(gk[i], 0.0, "pad must stay zero");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_without_block_errors() {
+        let mut p = pool();
+        let row = vec![0f32; 2 * 16 * 4];
+        // len 5 needs two blocks, table has one
+        assert!(p.scatter_row(0, &[2], 5, 16, &row, &row).is_err());
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let p = pool();
+        // 2 layers * 2 (k+v) * 6 blocks * 4 pos * 2 heads * 4 dh * 4 B
+        assert_eq!(p.bytes(), 2 * 2 * 6 * 4 * 2 * 4 * 4);
+    }
+}

@@ -18,7 +18,9 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::formats::config::{Dtype, GraphInfo, Manifest, ParamSpec};
+use crate::formats::config::{
+    Dtype, GraphInfo, GraphKind, Manifest, ParamSpec,
+};
 
 use super::{
     ExecBackend, ElementType, StagedGraph, StagedHandle, StagingStats,
@@ -193,6 +195,12 @@ impl ExecBackend for PjrtBackend {
                 self.stats.weight_bytes_rematerialized +=
                     super::payload_bytes(args[n_dyn..].iter().copied())
                         as u64;
+                if info.kind == GraphKind::Decode && n_dyn > 2 {
+                    // contiguous decode moves the caches in AND out
+                    self.stats.kv_bytes_moved += 2 * super::payload_bytes(
+                        args[2..n_dyn].iter().copied(),
+                    ) as u64;
+                }
             }
         }
         let exe = self
@@ -286,6 +294,12 @@ impl ExecBackend for PjrtBackend {
             .executables
             .get(&info.name)
             .ok_or_else(|| anyhow!("{} not prepared", info.name))?;
+        if info.kind == GraphKind::Decode && dynamic_args.len() > 2 {
+            // contiguous decode moves the caches in AND out
+            self.stats.kv_bytes_moved += 2 * super::payload_bytes(
+                dynamic_args[2..].iter().copied(),
+            ) as u64;
+        }
         // only the dynamic head crosses the host/device boundary
         let dyn_bufs = dynamic_args
             .iter()
@@ -305,6 +319,106 @@ impl ExecBackend for PjrtBackend {
             .execute_b::<&xla::PjRtBuffer>(&refs)
             .map_err(|e| anyhow!("execute_b {}: {e:?}", info.name))?;
         Self::fetch_outputs(out, info)
+    }
+
+    /// Paged decode on PJRT, as a gather/execute/scatter compatibility
+    /// shim: the AOT decode artifact only understands contiguous
+    /// `[B, H, max_seq, Dh]` caches, so the pages are gathered into
+    /// contiguous tensors through the block tables, the staged graph
+    /// runs, and the updated rows (history + the new token) scatter
+    /// back into the pool.  Numerically identical to the native paged
+    /// path; a true paged-attention HLO artifact would replace the
+    /// gather/scatter with in-kernel table lookups.
+    fn execute_decode_paged(
+        &mut self,
+        staged: &StagedGraph,
+        token: &[i32],
+        pos: &[i32],
+        pool: &mut super::KvBlockPool,
+        tables: &[&[u32]],
+    ) -> Result<Value> {
+        let info = &staged.info;
+        if info.kind != GraphKind::Decode {
+            bail!("{}: paged execution is decode-only", info.name);
+        }
+        let b = info.batch;
+        if token.len() != b || pos.len() != b || tables.len() != b {
+            bail!(
+                "{}: paged decode wants token/pos/tables of batch {b}",
+                info.name
+            );
+        }
+        let nl = pool.n_layers;
+        let (nh, dh) = (pool.n_heads, pool.head_dim);
+        // max_seq from the first cache param spec ([B, H, max_seq, Dh])
+        let cache_spec = info.params.get(2).ok_or_else(|| {
+            anyhow!("{}: decode graph lists no cache params", info.name)
+        })?;
+        if cache_spec.shape.len() != 4 {
+            bail!(
+                "{}: cache param {} is not rank-4",
+                info.name,
+                cache_spec.name
+            );
+        }
+        let smax = cache_spec.shape[2];
+        let kv_shape = [b, nh, smax, dh];
+        let row_len = nh * smax * dh;
+
+        // gather pages -> contiguous caches (idle rows stay zero)
+        let mut k_vals: Vec<Value> = Vec::with_capacity(nl);
+        let mut v_vals: Vec<Value> = Vec::with_capacity(nl);
+        for l in 0..nl {
+            let mut kbuf = vec![0f32; b * row_len];
+            let mut vbuf = vec![0f32; b * row_len];
+            for bi in 0..b {
+                if tables[bi].is_empty() {
+                    continue;
+                }
+                let hist = pos[bi] as usize;
+                let (kr, vr) =
+                    pool.gather_row(l, tables[bi], hist, smax)?;
+                kbuf[bi * row_len..(bi + 1) * row_len]
+                    .copy_from_slice(&kr);
+                vbuf[bi * row_len..(bi + 1) * row_len]
+                    .copy_from_slice(&vr);
+            }
+            k_vals.push(Value::f32(&kv_shape, kbuf));
+            v_vals.push(Value::f32(&kv_shape, vbuf));
+        }
+        let tok_l = Value::i32(&[b], token.to_vec());
+        let pos_l = Value::i32(&[b], pos.to_vec());
+        let mut dynamic: Vec<&Value> = Vec::with_capacity(2 + 2 * nl);
+        dynamic.push(&tok_l);
+        dynamic.push(&pos_l);
+        dynamic.extend(k_vals.iter());
+        dynamic.extend(v_vals.iter());
+        let mut outs = self.execute_staged(staged, &dynamic)?;
+        if outs.len() != 1 + 2 * nl {
+            bail!("{}: decode returned {} outputs", info.name, outs.len());
+        }
+
+        // scatter the updated rows (history + the write at pos) back
+        for l in 0..nl {
+            let kc = outs[1 + l].as_slice::<f32>()?;
+            let vc = outs[1 + nl + l].as_slice::<f32>()?;
+            for bi in 0..b {
+                if tables[bi].is_empty() {
+                    continue;
+                }
+                let len = pos[bi] as usize + 1;
+                pool.scatter_row(
+                    l,
+                    tables[bi],
+                    len,
+                    smax,
+                    &kc[bi * row_len..(bi + 1) * row_len],
+                    &vc[bi * row_len..(bi + 1) * row_len],
+                )?;
+            }
+        }
+        self.stats.paged_decode_steps += 1;
+        Ok(outs.swap_remove(0))
     }
 
     fn staging_stats(&self) -> StagingStats {

@@ -286,6 +286,178 @@ fn staged_and_unstaged_engines_produce_identical_streams() {
 }
 
 #[test]
+fn paged_and_contiguous_engines_produce_identical_streams() {
+    // full engine run on the paged KV pool vs the ODYSSEY_NO_PAGING
+    // contiguous escape hatch: token streams must match exactly, every
+    // decode step must go through the block tables, and the paged path
+    // must stop hauling full caches across the execution boundary.
+    with_engine(|_shared| {
+        let run = |paged: bool| {
+            let mut o = opts("w4a8_fast");
+            o.paged = paged;
+            o.staging = true; // paging rides on staged weights
+            let mut engine = Engine::new(o).unwrap();
+            assert_eq!(engine.paging_active(), paged);
+            for i in 0..3u64 {
+                engine.submit(Request::new(
+                    i,
+                    prompt(i as i32 * 5 + 2, 12),
+                    GenParams {
+                        max_new_tokens: 10,
+                        eos: None,
+                        ..Default::default()
+                    },
+                ));
+            }
+            let mut results = engine.run_until_idle().unwrap();
+            results.sort_by_key(|r| r.id);
+            let tokens: Vec<Vec<i32>> =
+                results.into_iter().map(|r| r.tokens).collect();
+            let blocks_left = engine.kv_blocks_in_use();
+            (
+                tokens,
+                engine.staging_stats(),
+                engine.metrics.decode_steps,
+                blocks_left,
+            )
+        };
+
+        let (paged_tokens, p_stats, p_decode, blocks_left) = run(true);
+        let (contig_tokens, c_stats, _, _) = run(false);
+
+        assert_eq!(
+            paged_tokens, contig_tokens,
+            "paged serving must be bit-identical to contiguous"
+        );
+        assert_eq!(paged_tokens.len(), 3);
+        assert!(paged_tokens.iter().all(|t| t.len() == 10));
+
+        assert!(p_decode >= 8, "want >=8 decode steps, got {p_decode}");
+        assert_eq!(
+            p_stats.paged_decode_steps, p_decode,
+            "every decode step must run through the block tables"
+        );
+        assert_eq!(c_stats.paged_decode_steps, 0);
+        // the point of paging: decode stops moving O(max_seq) caches
+        assert!(p_stats.kv_bytes_moved > 0);
+        assert!(
+            p_stats.kv_bytes_moved * 10 < c_stats.kv_bytes_moved,
+            "paged path moved {} KV bytes, contiguous {}",
+            p_stats.kv_bytes_moved,
+            c_stats.kv_bytes_moved
+        );
+        assert_eq!(blocks_left, 0, "drained engine must hold no blocks");
+    });
+}
+
+#[test]
+fn paged_engine_preempts_and_completes_under_tiny_pool() {
+    // M=16 requests with mixed prompt/output lengths through 4 decode
+    // slots over a pool deliberately too small for four full-length
+    // sequences: every request must still complete (preempted ones are
+    // re-prefilled deterministically), at least one preemption must
+    // fire, and the admitted/preempted/rejected/blocks_in_use counters
+    // must reconcile at the end.
+    with_engine(|_shared| {
+        let submit_all = |engine: &mut Engine| {
+            for i in 0..16u64 {
+                let plen = 6 + (i as usize % 5);
+                let gen = 8 + (i as usize % 7);
+                engine.submit(Request::new(
+                    i,
+                    prompt(i as i32 + 2, plen),
+                    GenParams {
+                        max_new_tokens: gen,
+                        eos: None,
+                        ..Default::default()
+                    },
+                ));
+            }
+        };
+        // 12 blocks x 4 positions = 48 KV positions shared by 4 slots;
+        // sequences need up to ceil((10 + 14 - 1) / 4) = 6 blocks each,
+        // so a full decode batch MUST run the pool dry.
+        let mut o = opts("fp");
+        o.paged = true;
+        o.staging = true; // paging rides on staged weights
+        o.kv_block_size = 4;
+        o.kv_blocks = Some(12);
+        o.max_queue = 32;
+        let mut engine = Engine::new(o).unwrap();
+        submit_all(&mut engine);
+        let mut paged_res = engine.run_until_idle().unwrap();
+        paged_res.sort_by_key(|r| r.id);
+
+        assert_eq!(paged_res.len(), 16, "every request completes");
+        for r in &paged_res {
+            assert_eq!(r.finish, FinishReason::MaxTokens);
+            assert_eq!(
+                r.tokens.len(),
+                8 + (r.id as usize % 7),
+                "request {} got a truncated stream",
+                r.id
+            );
+        }
+        let m = &engine.metrics;
+        assert!(
+            m.preempted >= 1,
+            "a 12-block pool must force at least one preemption"
+        );
+        assert_eq!(m.rejected, 0);
+        assert_eq!(m.completed, 16);
+        assert_eq!(
+            m.admitted,
+            m.completed + m.preempted,
+            "every admission either completed or was preempted"
+        );
+        assert_eq!(
+            engine.kv_blocks_in_use(),
+            0,
+            "all blocks recycled after the drain"
+        );
+        assert_eq!(engine.kv_utilization(), (0, 0));
+
+        // determinism across preemption: the contiguous engine (which
+        // can never preempt) must produce the exact same streams
+        let mut o = opts("fp");
+        o.paged = false;
+        o.max_queue = 32;
+        let mut engine = Engine::new(o).unwrap();
+        submit_all(&mut engine);
+        let mut contig_res = engine.run_until_idle().unwrap();
+        contig_res.sort_by_key(|r| r.id);
+        let pt: Vec<&Vec<i32>> =
+            paged_res.iter().map(|r| &r.tokens).collect();
+        let ct: Vec<&Vec<i32>> =
+            contig_res.iter().map(|r| &r.tokens).collect();
+        assert_eq!(
+            pt, ct,
+            "preemption + re-prefill must reproduce identical streams"
+        );
+    });
+}
+
+#[test]
+fn no_paging_env_var_flips_the_default() {
+    // same serialization rationale as the staging twin below
+    with_engine(|_shared| {
+        let saved = std::env::var("ODYSSEY_NO_PAGING").ok();
+        std::env::remove_var("ODYSSEY_NO_PAGING");
+        let on_by_default = odyssey::runtime::paging_enabled_from_env();
+        std::env::set_var("ODYSSEY_NO_PAGING", "1");
+        let off = odyssey::runtime::paging_enabled_from_env();
+        let opts_off = EngineOptions::default().paged;
+        match saved {
+            Some(v) => std::env::set_var("ODYSSEY_NO_PAGING", v),
+            None => std::env::remove_var("ODYSSEY_NO_PAGING"),
+        }
+        assert!(on_by_default, "paging must default on when env unset");
+        assert!(!off, "ODYSSEY_NO_PAGING=1 must disable paging");
+        assert!(!opts_off, "EngineOptions::default must honor the env");
+    });
+}
+
+#[test]
 fn no_staging_env_var_flips_the_default() {
     // serialized via with_engine so the env flip cannot race another
     // engine construction in this binary; the caller's own value of the

@@ -2,7 +2,7 @@
 //! on failure).  Pure CPU; the staged-execution parity section
 //! synthesizes the tiny3m artifact set on first use.
 
-use odyssey::coordinator::kv::KvState;
+use odyssey::coordinator::kv::{BlockAllocator, KvState, PagedKv};
 use odyssey::coordinator::queue::{Admit, RequestQueue};
 use odyssey::coordinator::request::{GenParams, Request};
 use odyssey::exp::latency::random_gemm_args_with;
@@ -11,7 +11,7 @@ use odyssey::formats::json::Json;
 use odyssey::formats::safetensors::{SafeTensors, StTensor};
 use odyssey::model::{self, Checkpoint};
 use odyssey::quant::{gptq, lwc, pack, rtn, scale, GptqConfig, QuantRecipe};
-use odyssey::runtime::{self, synth, BackendKind, Runtime};
+use odyssey::runtime::{self, synth, BackendKind, KvBlockPool, Runtime};
 use odyssey::tensor::Tensor;
 use odyssey::util::propcheck::Prop;
 use odyssey::util::XorShift;
@@ -160,6 +160,144 @@ fn prop_queue_fifo_and_conservation() {
             assert!(q.len() <= cap);
         }
         assert_eq!(q.len(), expected.len());
+    });
+}
+
+// ------------------------------------------------------ paged KV blocks
+
+/// Random alloc / alloc_n / free interleavings: no double allocation,
+/// double frees rejected, `free + held == pool size` at every step, and
+/// freed blocks recycle.
+#[test]
+fn prop_block_allocator_conserves_and_recycles() {
+    Prop::new("block allocator conservation").cases(50).check(|rng| {
+        let n = 4 + (rng.next_u64() % 29) as usize;
+        let mut a = BlockAllocator::new(n);
+        let mut held: Vec<u32> = Vec::new();
+        for _ in 0..300 {
+            match rng.next_u64() % 4 {
+                0 | 1 => match a.alloc() {
+                    Some(b) => {
+                        assert!(
+                            !held.contains(&b),
+                            "block {b} double-allocated"
+                        );
+                        held.push(b);
+                    }
+                    None => assert_eq!(
+                        held.len(),
+                        n,
+                        "alloc refused with free blocks"
+                    ),
+                },
+                2 => {
+                    let want = 1 + (rng.next_u64() % 4) as usize;
+                    match a.alloc_n(want) {
+                        Some(bs) => {
+                            assert_eq!(bs.len(), want);
+                            for b in bs {
+                                assert!(!held.contains(&b));
+                                held.push(b);
+                            }
+                        }
+                        None => assert!(
+                            n - held.len() < want,
+                            "all-or-nothing refused with capacity"
+                        ),
+                    }
+                }
+                _ => {
+                    if !held.is_empty() {
+                        let i = (rng.next_u64() % held.len() as u64)
+                            as usize;
+                        let b = held.swap_remove(i);
+                        a.free(b).unwrap();
+                        assert!(
+                            a.free(b).is_err(),
+                            "double free of {b} must error"
+                        );
+                    }
+                }
+            }
+            assert_eq!(
+                a.free_blocks() + held.len(),
+                n,
+                "conservation violated"
+            );
+        }
+        for b in held.drain(..) {
+            a.free(b).unwrap();
+        }
+        let all = a.alloc_n(n).expect("freed blocks must recycle");
+        assert_eq!(all.len(), n);
+    });
+}
+
+/// Random admit / extend+advance / release interleavings on the paged
+/// manager: every block is on the free list or in exactly one table,
+/// extension only refuses when the pool is truly dry, and a drained
+/// manager returns every block.
+#[test]
+fn prop_paged_kv_lifecycle_never_leaks_blocks() {
+    Prop::new("paged kv lifecycle").cases(30).check(|rng| {
+        let blocks = 6 + (rng.next_u64() % 20) as usize;
+        let mut kv = PagedKv::new(4, 2, 2, 64, 4, 4, blocks);
+        let mut live: Vec<(usize, u64)> = Vec::new();
+        for step in 0..200u64 {
+            match rng.next_u64() % 3 {
+                0 => {
+                    let plen = 1 + (rng.next_u64() % 16) as usize;
+                    match kv.alloc_seq(step, plen) {
+                        Some(slot) => {
+                            assert!(
+                                live.iter().all(|&(s, _)| s != slot),
+                                "slot {slot} double-assigned"
+                            );
+                            live.push((slot, step));
+                        }
+                        None => assert!(
+                            kv.free_slots() == 0
+                                || kv.free_blocks()
+                                    < kv.blocks_for(plen),
+                            "admission refused with capacity"
+                        ),
+                    }
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let i = (rng.next_u64() % live.len() as u64)
+                            as usize;
+                        let (slot, _) = live[i];
+                        if kv.pos(slot) + 2 < 64 {
+                            if kv.ensure_write_capacity(slot) {
+                                kv.advance(slot).unwrap();
+                            } else {
+                                assert_eq!(
+                                    kv.free_blocks(),
+                                    0,
+                                    "extend refused with free blocks"
+                                );
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = (rng.next_u64() % live.len() as u64)
+                            as usize;
+                        let (slot, _) = live.swap_remove(i);
+                        kv.free_seq(slot);
+                    }
+                }
+            }
+            kv.check_conservation().unwrap();
+            assert_eq!(kv.free_blocks() + kv.blocks_in_use(), blocks);
+        }
+        for (slot, _) in live.drain(..) {
+            kv.free_seq(slot);
+        }
+        assert_eq!(kv.free_blocks(), blocks, "blocks leaked");
+        kv.check_conservation().unwrap();
     });
 }
 
@@ -410,6 +548,195 @@ fn prop_staged_serving_graphs_bit_identical_to_unstaged() {
                 unstaged == staged,
                 "{variant} decode: staged output differs from unstaged"
             );
+        }
+    });
+}
+
+/// The PR 3 tentpole pin: paged decode (block-table gather, in-place
+/// page writes) must be BIT-IDENTICAL to contiguous staged decode on
+/// the serving graphs for fp, W8A8, and W4A8-fast — same logits for
+/// every active row, and the K/V rows written through the block table
+/// equal the contiguous output caches position for position.  Block
+/// tables are deliberately shuffled (non-contiguous ids) and one batch
+/// row is left idle to exercise the masking.
+#[test]
+fn prop_paged_decode_bit_identical_to_contiguous() {
+    synth::ensure_artifacts("artifacts").expect("synthesize artifacts");
+    Prop::new("paged == contiguous (decode)").cases(2).check(|rng| {
+        let mut rt =
+            Runtime::with_backend("artifacts", BackendKind::Native).unwrap();
+        let info = rt.manifest.model("tiny3m").unwrap().clone();
+        let group = rt.manifest.group_size;
+        let (nl, nh, dh) = (info.n_layers, info.n_heads, info.head_dim);
+        let smax = info.max_seq;
+        for variant in ["fp", "w8a8", "w4a8_fast"] {
+            let ckpt = random_checkpoint(&info, rng);
+            let qw = model::quantize_checkpoint(
+                &ckpt,
+                None,
+                &QuantRecipe::vanilla_w4(),
+                variant,
+                group,
+            )
+            .unwrap();
+            let weights: Vec<runtime::Literal> = qw
+                .tensors
+                .iter()
+                .map(|t| runtime::literal_from_st(t).unwrap())
+                .collect();
+            let pairs: Vec<(&str, &runtime::Literal)> = qw
+                .names
+                .iter()
+                .map(String::as_str)
+                .zip(weights.iter())
+                .collect();
+            let graph = format!("tiny3m_{variant}_decode_b4");
+            let staged = rt.stage(&graph, &pairs).unwrap();
+
+            // batch of 4 with one idle row; random per-row history
+            let b = 4usize;
+            let idle = (rng.next_u64() % b as u64) as usize;
+            let mut lens = [0usize; 4];
+            let mut token = [0i32; 4];
+            for bi in 0..b {
+                if bi != idle {
+                    lens[bi] = 1 + (rng.next_u64() % 20) as usize;
+                    token[bi] =
+                        rng.range(3, info.vocab as i64 - 1) as i32;
+                }
+            }
+            let pos: Vec<i32> =
+                lens.iter().map(|&l| l as i32).collect();
+
+            // shuffled, non-contiguous block tables over a shared pool
+            let bs = 8usize;
+            let n_blocks = 64usize;
+            let mut ids: Vec<u32> = (0..n_blocks as u32).collect();
+            for i in (1..ids.len()).rev() {
+                let j =
+                    (rng.next_u64() % (i as u64 + 1)) as usize;
+                ids.swap(i, j);
+            }
+            let mut pool = KvBlockPool::new(n_blocks, bs, nl, nh, dh);
+            let mut tables: Vec<Vec<u32>> = vec![Vec::new(); b];
+            let mut cursor = 0usize;
+            for bi in 0..b {
+                if bi == idle {
+                    continue;
+                }
+                // room for history AND the write at pos
+                let need = (lens[bi] + 1).div_ceil(bs).max(1);
+                tables[bi] = ids[cursor..cursor + need].to_vec();
+                cursor += need;
+            }
+
+            // random history, laid out contiguously AND scattered into
+            // the pages (identical values, different homes)
+            let row_len = nh * smax * dh;
+            let mut k_host: Vec<Vec<f32>> =
+                (0..nl).map(|_| vec![0f32; b * row_len]).collect();
+            let mut v_host: Vec<Vec<f32>> =
+                (0..nl).map(|_| vec![0f32; b * row_len]).collect();
+            for l in 0..nl {
+                for bi in 0..b {
+                    for h in 0..nh {
+                        for p in 0..lens[bi] {
+                            let off = bi * row_len
+                                + (h * smax + p) * dh;
+                            for t in 0..dh {
+                                k_host[l][off + t] =
+                                    rng.normal_f32() * 0.1;
+                                v_host[l][off + t] =
+                                    rng.normal_f32() * 0.1;
+                            }
+                        }
+                    }
+                }
+                for bi in 0..b {
+                    if bi == idle {
+                        continue;
+                    }
+                    pool.scatter_row(
+                        l,
+                        &tables[bi],
+                        lens[bi],
+                        smax,
+                        &k_host[l][bi * row_len..(bi + 1) * row_len],
+                        &v_host[l][bi * row_len..(bi + 1) * row_len],
+                    )
+                    .unwrap();
+                }
+            }
+
+            // contiguous reference: staged decode on the full caches
+            let kv_shape = [b, nh, smax, dh];
+            let tok_l = runtime::literal_i32(&[b], &token).unwrap();
+            let pos_l = runtime::literal_i32(&[b], &pos).unwrap();
+            let mut caches: Vec<runtime::Literal> = Vec::new();
+            for l in 0..nl {
+                caches.push(
+                    runtime::literal_f32(&kv_shape, &k_host[l]).unwrap(),
+                );
+            }
+            for l in 0..nl {
+                caches.push(
+                    runtime::literal_f32(&kv_shape, &v_host[l]).unwrap(),
+                );
+            }
+            let mut dynamic: Vec<&runtime::Literal> = vec![&tok_l, &pos_l];
+            dynamic.extend(caches.iter());
+            let contig = rt.run_staged(&staged, &dynamic).unwrap();
+            let contig_logits = contig[0].to_vec::<f32>().unwrap();
+
+            // paged run on the same staged weights
+            let tbl: Vec<&[u32]> =
+                tables.iter().map(|t| t.as_slice()).collect();
+            let paged_out = rt
+                .run_decode_paged(&staged, &token, &pos, &mut pool, &tbl)
+                .unwrap();
+            let paged_logits = paged_out.to_vec::<f32>().unwrap();
+
+            let v = info.vocab;
+            for bi in 0..b {
+                if bi == idle {
+                    continue;
+                }
+                assert!(
+                    contig_logits[bi * v..(bi + 1) * v]
+                        == paged_logits[bi * v..(bi + 1) * v],
+                    "{variant} row {bi}: paged logits differ from \
+                     contiguous"
+                );
+            }
+
+            // the K/V rows written through the table must equal the
+            // contiguous output caches at positions 0..=pos
+            for l in 0..nl {
+                let kc = contig[1 + l].as_slice::<f32>().unwrap();
+                let vc = contig[1 + nl + l].as_slice::<f32>().unwrap();
+                for bi in 0..b {
+                    if bi == idle {
+                        continue;
+                    }
+                    let (gk, gv) = pool
+                        .gather_row(l, &tables[bi], lens[bi] + 1, smax)
+                        .unwrap();
+                    for h in 0..nh {
+                        for p in 0..=lens[bi] {
+                            for t in 0..dh {
+                                let gi = (h * smax + p) * dh + t;
+                                let ci = bi * row_len + gi;
+                                assert!(
+                                    gk[gi] == kc[ci]
+                                        && gv[gi] == vc[ci],
+                                    "{variant} layer {l} row {bi} \
+                                     pos {p}: paged K/V differs"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
         }
     });
 }
