@@ -22,6 +22,7 @@
 //! `ODYSSEY_BENCH_SMOKE=1` shrinks budgets/iterations for CI smoke
 //! runs; the counters and regression guards still apply.
 
+use odyssey::coordinator::{Engine, EngineOptions, GenParams, Request};
 use odyssey::formats::json::Json;
 use odyssey::model::{self, Checkpoint};
 use odyssey::quant::QuantRecipe;
@@ -255,4 +256,109 @@ fn main() {
         ]);
         println!("BENCH {}", bench.emit());
     }
+
+    // ---- prefix cache: engine-level shared-prompt scenario.  Six
+    // requests share one prompt; the cache-on run must skip >= 50% of
+    // the batch's prefill tokens and allocate strictly fewer KV
+    // blocks than cache-off, with bit-identical token streams — the
+    // serving-layer half of the speed story (shared prefixes cut
+    // prefill work, W4A8 cuts per-token cost).
+    let shared_prompt: Vec<i32> =
+        (0..16).map(|i| 3 + (i * 7) % 500).collect();
+    let run_engine = |prefix: bool| {
+        let mut o = EngineOptions {
+            variant: "fp".into(),
+            recipe: QuantRecipe::vanilla_w4(),
+            prefill_batch: 1,
+            max_queue: 16,
+            ..Default::default()
+        };
+        o.paged = true;
+        o.staging = true;
+        o.prefix_cache = prefix;
+        o.kv_block_size = 4;
+        o.kv_blocks = Some(28);
+        let mut engine = Engine::new(o).expect("engine");
+        for i in 0..6u64 {
+            engine.submit(Request::new(
+                i,
+                shared_prompt.clone(),
+                GenParams {
+                    max_new_tokens: 4,
+                    eos: None,
+                    ..Default::default()
+                },
+            ));
+        }
+        let t0 = std::time::Instant::now();
+        let mut results = engine.run_until_idle().expect("drain");
+        let dt = t0.elapsed().as_secs_f64();
+        results.sort_by_key(|r| r.id);
+        let tokens: Vec<Vec<i32>> =
+            results.into_iter().map(|r| r.tokens).collect();
+        (tokens, engine, dt)
+    };
+    let (on_tokens, on, on_s) = run_engine(true);
+    let (off_tokens, off, off_s) = run_engine(false);
+    assert_eq!(
+        on_tokens, off_tokens,
+        "prefix cache must not change token streams"
+    );
+    let (m_on, m_off) = (&on.metrics, &off.metrics);
+    // acceptance guards (also pinned by tests/engine_integration.rs)
+    assert!(
+        m_on.prefill_tokens_skipped * 2 >= m_on.prefill_tokens,
+        "prefix cache skipped {}/{} prefill tokens (< 50%)",
+        m_on.prefill_tokens_skipped,
+        m_on.prefill_tokens
+    );
+    assert!(
+        m_on.kv_blocks_allocated < m_off.kv_blocks_allocated,
+        "cache on allocated {} blocks, cache off {}",
+        m_on.kv_blocks_allocated,
+        m_off.kv_blocks_allocated
+    );
+    println!(
+        "prefix cache: {} hits, {}/{} prefill tokens skipped, {} cow \
+         forks, {} shared blocks (peak), blocks allocated {} -> {} \
+         (drain {:.3}s -> {:.3}s)\n",
+        m_on.prefix_hits,
+        m_on.prefill_tokens_skipped,
+        m_on.prefill_tokens,
+        m_on.cow_forks,
+        m_on.shared_blocks,
+        m_off.kv_blocks_allocated,
+        m_on.kv_blocks_allocated,
+        off_s,
+        on_s,
+    );
+    let bench = Json::obj(vec![
+        ("bench", Json::Str("prefix_cache".into())),
+        ("variant", Json::Str("fp".into())),
+        ("prefix_hits", Json::Num(m_on.prefix_hits as f64)),
+        (
+            "prefill_tokens_skipped",
+            Json::Num(m_on.prefill_tokens_skipped as f64),
+        ),
+        (
+            "prefill_tokens",
+            Json::Num(m_on.prefill_tokens as f64),
+        ),
+        ("cow_forks", Json::Num(m_on.cow_forks as f64)),
+        (
+            "shared_blocks_peak",
+            Json::Num(m_on.shared_blocks as f64),
+        ),
+        (
+            "kv_blocks_allocated_cache",
+            Json::Num(m_on.kv_blocks_allocated as f64),
+        ),
+        (
+            "kv_blocks_allocated_nocache",
+            Json::Num(m_off.kv_blocks_allocated as f64),
+        ),
+        ("drain_s_cache", Json::Num(on_s)),
+        ("drain_s_nocache", Json::Num(off_s)),
+    ]);
+    println!("BENCH {}", bench.emit());
 }

@@ -101,6 +101,11 @@ SERVING FLAGS (generate / serve):
                                decode_batch * ceil(max_seq/block) —
                                the no-preemption worst case; smaller
                                caps KV memory, preemption absorbs it)
+  --no-prefix-cache            disable cross-request prefix sharing on
+                               the paged pool (default on; env
+                               ODYSSEY_NO_PREFIX_CACHE=1 also honored)
+  --prefix-cache-cap N         LRU cap on prefix-index entries
+                               (default: the pool size)
 ";
 
 /// Paged-KV engine options shared by `generate` and `serve`.
@@ -118,6 +123,15 @@ pub fn parse_kv_flags(
             .parse()
             .map_err(|_| anyhow!("--kv-blocks expects an integer"))?;
         opts.kv_blocks = Some(n);
+    }
+    if args.has("no-prefix-cache") {
+        opts.prefix_cache = false;
+    }
+    if let Some(n) = args.get("prefix-cache-cap") {
+        let n: usize = n.parse().map_err(|_| {
+            anyhow!("--prefix-cache-cap expects an integer")
+        })?;
+        opts.prefix_cache_cap = Some(n);
     }
     Ok(())
 }
@@ -186,6 +200,27 @@ mod tests {
         assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
         let b = Args::parse(&sv(&["--n", "xy"]), &[]).unwrap();
         assert!(b.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn kv_flags_parse() {
+        let mut opts = crate::coordinator::EngineOptions::default();
+        let a = Args::parse(
+            &sv(&[
+                "--no-prefix-cache",
+                "--prefix-cache-cap",
+                "7",
+                "--kv-blocks",
+                "9",
+            ]),
+            &["no-paging", "no-prefix-cache"],
+        )
+        .unwrap();
+        parse_kv_flags(&a, &mut opts).unwrap();
+        assert!(!opts.prefix_cache);
+        assert_eq!(opts.prefix_cache_cap, Some(7));
+        assert_eq!(opts.kv_blocks, Some(9));
+        assert!(opts.paged, "--no-paging was not passed");
     }
 
     #[test]

@@ -9,11 +9,14 @@
 //!
 //! Admission is capacity-driven through the `admit` callback: the KV
 //! manager decides per request whether it has a slot AND (under paging)
-//! enough free blocks for the prompt.  A request that cannot be placed
-//! *right now* but will fit once capacity frees ([`Admission::Retry`])
-//! goes back to the queue FRONT — it keeps its arrival order and is
-//! never shed; only requests that can NEVER fit ([`Admission::Reject`])
-//! are bounced to the caller.
+//! enough free blocks for the prompt — with the prefix cache on, the
+//! demand is the FRESH blocks only (cached prefix blocks are shared by
+//! refcount, and index-only blocks count as available because they
+//! reclaim on demand).  A request that cannot be placed *right now*
+//! but will fit once capacity frees ([`Admission::Retry`]) goes back
+//! to the queue FRONT — it keeps its arrival order and is never shed;
+//! only requests that can NEVER fit ([`Admission::Reject`]) are
+//! bounced to the caller.
 
 use super::queue::RequestQueue;
 use super::request::Request;

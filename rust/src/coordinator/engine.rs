@@ -61,6 +61,13 @@ pub struct EngineOptions {
     /// default serving can never be starved into preemption.  Set it
     /// smaller to cap KV memory and let preemption absorb overload.
     pub kv_blocks: Option<usize>,
+    /// share cached prompt prefixes across requests on the paged path
+    /// (default; `ODYSSEY_NO_PREFIX_CACHE=1` / `--no-prefix-cache`
+    /// flips the default off — the escape hatch the prefix parity
+    /// tests compare against).  No effect on the contiguous path.
+    pub prefix_cache: bool,
+    /// LRU cap on prefix-index entries; None = the pool size
+    pub prefix_cache_cap: Option<usize>,
 }
 
 impl Default for EngineOptions {
@@ -81,6 +88,8 @@ impl Default for EngineOptions {
             paged: runtime::paging_enabled_from_env(),
             kv_block_size: 16,
             kv_blocks: None,
+            prefix_cache: runtime::prefix_cache_enabled_from_env(),
+            prefix_cache_cap: None,
         }
     }
 }
@@ -275,15 +284,21 @@ impl Engine {
                     opts.decode_batch * info.max_seq.div_ceil(bs)
                 })
                 .max(1);
-            KvBacking::Paged(PagedKv::new(
-                opts.decode_batch,
-                info.n_layers,
-                info.n_heads,
-                info.max_seq,
-                info.head_dim,
-                bs,
-                blocks,
-            ))
+            KvBacking::Paged(
+                PagedKv::new(
+                    opts.decode_batch,
+                    info.n_layers,
+                    info.n_heads,
+                    info.max_seq,
+                    info.head_dim,
+                    bs,
+                    blocks,
+                )
+                .with_prefix_cache(opts.prefix_cache)
+                .with_prefix_cap(
+                    opts.prefix_cache_cap.unwrap_or(blocks),
+                ),
+            )
         } else {
             KvBacking::Contiguous(KvState::new(
                 opts.decode_batch,
@@ -301,8 +316,14 @@ impl Engine {
             if staged_decode.is_some() { "on" } else { "off" },
             match &kv {
                 KvBacking::Paged(p) => format!(
-                    "on({}x{})",
-                    p.pool.n_blocks, p.pool.block_size
+                    "on({}x{}{})",
+                    p.pool.n_blocks,
+                    p.pool.block_size,
+                    if p.prefix_cache_enabled() {
+                        ",prefix-cache"
+                    } else {
+                        ""
+                    }
                 ),
                 KvBacking::Contiguous(_) => "off".into(),
             },
@@ -413,7 +434,8 @@ impl Engine {
                 next_step(
                     policy,
                     queue,
-                    paged.free_slots() > 0 && paged.free_blocks() > 0,
+                    paged.free_slots() > 0
+                        && paged.available_blocks() > 0,
                     active,
                     |r| {
                         if !paged.fits_pool(r.prompt.len()) {
@@ -421,15 +443,20 @@ impl Engine {
                             // amount of waiting admits it
                             return Admission::Reject;
                         }
-                        let needed =
-                            paged.blocks_for(r.prompt.len()) + resident;
-                        if paged.free_blocks() < needed {
+                        // exact feasibility (fresh-block demand with
+                        // prefix hits subtracted, reclaimable
+                        // index-only blocks counted, the prompt's own
+                        // matched blocks excluded) plus the resident
+                        // growth reserve
+                        if !paged
+                            .admission_feasible(&r.prompt, resident)
+                        {
                             return Admission::Retry;
                         }
-                        match paged.alloc_seq(r.id, r.prompt.len()) {
-                            Some(slot) => {
+                        match paged.alloc_seq(r.id, &r.prompt) {
+                            Some(a) => {
                                 resident += 1;
-                                Admission::Slot(slot)
+                                Admission::Slot(a.slot)
                             }
                             None => Admission::Retry,
                         }
@@ -469,6 +496,9 @@ impl Engine {
     // prefill
     // ------------------------------------------------------------------
     fn do_prefill(&mut self, batch: Vec<(Request, usize)>) -> Result<()> {
+        if matches!(self.kv, KvBacking::Paged(_)) {
+            return self.do_prefill_paged(batch);
+        }
         let t0 = Instant::now();
         let b = self.opts.prefill_batch;
         let s = self.policy.max_prompt;
@@ -520,11 +550,8 @@ impl Engine {
         let n_reqs = batch.len();
 
         // the contiguous slot splice edits the HOST arrays: fold any
-        // newer device-format KV back first (paged installs write the
-        // block pool directly — there are no KV literals to sync)
-        if matches!(self.kv, KvBacking::Contiguous(_)) {
-            self.sync_kv_to_host()?;
-        }
+        // newer device-format KV back first
+        self.sync_kv_to_host()?;
         for (row, (req, slot)) in batch.into_iter().enumerate() {
             let plen = req.prompt.len();
             match &mut self.kv {
@@ -532,9 +559,9 @@ impl Engine {
                     .install_from_prefill(
                         slot, &layer_k, &layer_v, row, b, plen,
                     )?,
-                KvBacking::Paged(paged) => paged.install_from_prefill(
-                    slot, &layer_k, &layer_v, row, b, plen,
-                )?,
+                KvBacking::Paged(_) => {
+                    bail!("paged prefill must take the paged path")
+                }
             }
             // sample the first generated token from the last prompt logit
             let off = (row * s + (plen - 1)) * v;
@@ -563,6 +590,134 @@ impl Engine {
             dt * 1e3
         ));
         Ok(())
+    }
+
+    /// Paged prefill: K/V is written straight through the block tables
+    /// (no install copy), and each row computes only the UNCACHED
+    /// suffix of its prompt — `PagedKv::alloc_seq` retained the cached
+    /// prefix blocks at admission and recorded the suffix start.
+    /// After the step, every sequence donates its full prompt blocks
+    /// to the prefix index so later identical prompts hit.
+    fn do_prefill_paged(
+        &mut self,
+        batch: Vec<(Request, usize)>,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        let b = self.opts.prefill_batch;
+        let s = self.policy.max_prompt;
+        let v = self.info.vocab;
+
+        let mut tokens = vec![0i32; b * s];
+        let mut lengths = vec![0i32; b];
+        let mut starts = vec![0i32; b];
+        let mut slots: Vec<usize> = Vec::with_capacity(batch.len());
+        {
+            let paged = match &self.kv {
+                KvBacking::Paged(p) => p,
+                KvBacking::Contiguous(_) => {
+                    bail!("paged prefill on contiguous KV")
+                }
+            };
+            for (row, (req, slot)) in batch.iter().enumerate() {
+                lengths[row] = req.prompt.len() as i32;
+                tokens[row * s..row * s + req.prompt.len()]
+                    .copy_from_slice(&req.prompt);
+                starts[row] = paged.suffix_start(*slot) as i32;
+                slots.push(*slot);
+            }
+        }
+
+        let logits = {
+            let Engine { kv, rt, staged_prefill, .. } = self;
+            let paged = match kv {
+                KvBacking::Paged(p) => p,
+                KvBacking::Contiguous(_) => unreachable!("checked above"),
+            };
+            let staged = staged_prefill.as_ref().ok_or_else(|| {
+                anyhow!("paged prefill without staged weights")
+            })?;
+            let (slot_tables, pool) = paged.decode_view();
+            // rows map to THIS batch's slots; rows past it stay idle
+            let mut row_tables: Vec<&[u32]> = vec![&[]; b];
+            for (row, &slot) in slots.iter().enumerate() {
+                row_tables[row] = slot_tables[slot];
+            }
+            let out = rt.run_prefill_paged(
+                staged, &tokens, &lengths, &starts, pool, &row_tables,
+            )?;
+            runtime::literal_to_f32(&out, b * s * v)?
+        };
+
+        let dt = t0.elapsed().as_secs_f64();
+        self.metrics.prefill_steps += 1;
+        self.metrics.prefill_time_s += dt;
+        let n_reqs = batch.len();
+        let mut skipped_now = 0u64;
+
+        for (row, (req, slot)) in batch.into_iter().enumerate() {
+            let plen = req.prompt.len();
+            let start = starts[row] as u64;
+            {
+                let paged = match &mut self.kv {
+                    KvBacking::Paged(p) => p,
+                    KvBacking::Contiguous(_) => {
+                        unreachable!("checked above")
+                    }
+                };
+                paged.finish_prefill(slot, plen)?;
+                paged.donate_prefix(slot, &req.prompt);
+            }
+            if start > 0 {
+                self.metrics.prefix_hits += 1;
+                self.metrics.prefill_tokens_skipped += start;
+                skipped_now += start;
+            }
+            // sample the first generated token from the last prompt logit
+            let off = (row * s + (plen - 1)) * v;
+            let mut rng = XorShift::new(req.params.seed ^ req.id);
+            let tok = sample(
+                &logits[off..off + v],
+                &req.params.temperature,
+                req.params.top_k,
+                &mut rng,
+            );
+            let ttft = req.arrived.elapsed().as_secs_f64();
+            self.metrics.prefill_tokens += plen as u64;
+            self.metrics.admitted += 1;
+            self.admit_counter += 1;
+            self.active.insert(
+                req.id,
+                ActiveSeq {
+                    slot,
+                    generated: vec![tok],
+                    last_token: tok,
+                    ttft_s: ttft,
+                    rng,
+                    req,
+                    admit_seq: self.admit_counter,
+                },
+            );
+        }
+        self.sync_kv_gauges();
+        crate::util::log::debug(&format!(
+            "prefill: {n_reqs} reqs ({skipped_now} cached positions \
+             skipped) in {:.1}ms",
+            dt * 1e3
+        ));
+        Ok(())
+    }
+
+    /// Mirror the paged manager's prefix/allocation gauges into the
+    /// engine metrics (`shared_blocks` keeps its peak).
+    fn sync_kv_gauges(&mut self) {
+        if let KvBacking::Paged(p) = &self.kv {
+            self.metrics.cow_forks = p.cow_forks();
+            self.metrics.kv_blocks_allocated = p.blocks_allocated();
+            self.metrics.shared_blocks = self
+                .metrics
+                .shared_blocks
+                .max(p.shared_blocks() as u64);
+        }
     }
 
     // ------------------------------------------------------------------
@@ -719,6 +874,7 @@ impl Engine {
                 total_s: total,
             });
         }
+        self.sync_kv_gauges();
         Ok(())
     }
 
@@ -859,6 +1015,33 @@ impl Engine {
         match &self.kv {
             KvBacking::Paged(p) => p.utilization(),
             KvBacking::Contiguous(_) => (0, 0),
+        }
+    }
+
+    /// Is cross-request prefix sharing active?
+    pub fn prefix_cache_active(&self) -> bool {
+        match &self.kv {
+            KvBacking::Paged(p) => p.prefix_cache_enabled(),
+            KvBacking::Contiguous(_) => false,
+        }
+    }
+
+    /// Blocks currently parked in the prefix index (0 on the
+    /// contiguous path).  At drain, `kv_blocks_in_use()` equals
+    /// exactly this number — anything beyond it is a leak.
+    pub fn kv_prefix_index_blocks(&self) -> usize {
+        match &self.kv {
+            KvBacking::Paged(p) => p.prefix_index_blocks(),
+            KvBacking::Contiguous(_) => 0,
+        }
+    }
+
+    /// Release every prefix-index hold (ops/test hygiene: afterwards a
+    /// drained engine holds 0 blocks).  Subsequent admissions miss
+    /// until new prefixes are donated.
+    pub fn flush_prefix_cache(&mut self) {
+        if let KvBacking::Paged(p) = &mut self.kv {
+            p.flush_prefix_index();
         }
     }
 

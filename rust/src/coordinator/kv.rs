@@ -21,6 +21,46 @@
 //! is deterministic per request (seeded sampling), so a preempted
 //! sequence reproduces the exact same token stream after re-admission.
 //!
+//! # Prefix cache (refcounted copy-on-write block sharing)
+//!
+//! Blocks are **refcounted** ([`BlockAllocator::retain`] /
+//! [`BlockAllocator::release`]; a block returns to the free list only
+//! at refcount 0), which lets logically identical KV content live in
+//! ONE physical block shared by many readers:
+//!
+//! * **Hash-chain prefix index** ([`PrefixIndex`]): every FULL
+//!   block-sized chunk of a prompt hashes as
+//!   `h_i = H(h_{i-1}, chunk_tokens)`, so a chain of hashes names the
+//!   chunk's entire token history regardless of which physical blocks
+//!   hold it.  Entries map `h_i -> block id` and store
+//!   `(parent, chunk tokens)` for exact verification — a 64-bit hash
+//!   collision can therefore never alias two different prefixes.
+//! * **Admission** ([`PagedKv::alloc_seq`]) looks up the longest cached
+//!   chain for the incoming prompt, retains the matched blocks into
+//!   the new table, and allocates fresh blocks only for the uncached
+//!   suffix — the engine then prefills just that suffix (at least ONE
+//!   prompt position is always recomputed so the last-token logits
+//!   exist; a fully cached, block-aligned prompt CoW-forks its tail
+//!   block at admission and recomputes the final position into it).
+//! * **Copy-on-write** ([`PagedKv::ensure_write_capacity`],
+//!   [`PagedKv::fork_seq`]): before the write path hands out a tail
+//!   block, a block with refcount > 1 is forked — copied into a fresh
+//!   block, old released / new owned — so sharers never observe each
+//!   other's writes.  `fork_seq` clones a live sequence's whole table
+//!   by retaining (the parallel-sampling foundation); the twins then
+//!   CoW-split on their first diverging write.
+//! * **Donation + LRU eviction**: after prefill, a sequence's full
+//!   prompt blocks are donated to the index ([`PagedKv::donate_prefix`]
+//!   retains them), surviving `free_seq`.  The index holds at most
+//!   `cap` entries (LRU evicted beyond that), and allocation pressure
+//!   reclaims LRU **refcount-1, index-only** blocks on demand — blocks
+//!   still retained by live sequences are never reclaimed.
+//!
+//! `ODYSSEY_NO_PREFIX_CACHE=1` / `--no-prefix-cache` /
+//! `EngineOptions::prefix_cache = false` disables the index (every
+//! admission is a miss); the engine parity suite pins cache-on token
+//! streams bit-identical to cache-off.
+//!
 //! # Contiguous KV ([`KvState`], `ODYSSEY_NO_PAGING=1`)
 //!
 //! The pre-paging layout: a full `[B, H, max_seq, Dh]` host mirror per
@@ -29,6 +69,8 @@
 //! false` (env `ODYSSEY_NO_PAGING=1`) so the parity suite can pin the
 //! paged path bit-exact against it.  Idle slots decode garbage that is
 //! simply ignored — the masks in the graph make them numerically safe.
+
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{bail, Result};
 
@@ -185,14 +227,21 @@ impl KvState {
 // block allocation
 // ---------------------------------------------------------------------
 
-/// Free-list allocator over the block pool's `n_blocks` block ids.
-/// Double frees are rejected (not silently absorbed into the free
-/// list), and `free_blocks() + <blocks held by callers>` is always the
-/// pool size — the conservation invariant the property suite fuzzes.
+/// Refcounted free-list allocator over the block pool's `n_blocks`
+/// block ids.  `alloc` hands a block out at refcount 1; `retain` adds
+/// a holder; `release` drops one and returns the block to the free
+/// list only at refcount 0.  Releasing a free block (double free) is
+/// rejected, not silently absorbed, and
+/// `free_blocks() + <unique blocks held>` is always the pool size —
+/// the conservation invariant the property suite fuzzes.
 pub struct BlockAllocator {
     free: Vec<u32>,
-    held: Vec<bool>,
+    /// per-block holder count; 0 = on the free list
+    refs: Vec<u32>,
     n_blocks: usize,
+    /// cumulative fresh allocations (metrics: the prefix cache's win is
+    /// this number growing SLOWER than the cache-off baseline)
+    allocated_total: u64,
 }
 
 impl BlockAllocator {
@@ -200,8 +249,9 @@ impl BlockAllocator {
         BlockAllocator {
             // pop() hands out low ids first (cosmetic, but deterministic)
             free: (0..n_blocks as u32).rev().collect(),
-            held: vec![false; n_blocks],
+            refs: vec![0; n_blocks],
             n_blocks,
+            allocated_total: 0,
         }
     }
 
@@ -217,35 +267,195 @@ impl BlockAllocator {
         self.n_blocks - self.free.len()
     }
 
-    /// Claim one block, or None when the pool is dry.
+    /// Holder count of a block (0 = free).
+    pub fn ref_count(&self, block: u32) -> u32 {
+        self.refs[block as usize]
+    }
+
+    /// Unique held blocks with more than one holder.
+    pub fn shared_blocks(&self) -> usize {
+        self.refs.iter().filter(|&&r| r > 1).count()
+    }
+
+    /// Cumulative fresh allocations since construction.
+    pub fn allocated_total(&self) -> u64 {
+        self.allocated_total
+    }
+
+    /// Claim one block at refcount 1, or None when the pool is dry.
     pub fn alloc(&mut self) -> Option<u32> {
         let b = self.free.pop()?;
-        self.held[b as usize] = true;
+        self.refs[b as usize] = 1;
+        self.allocated_total += 1;
         Some(b)
     }
 
-    /// Claim `n` blocks all-or-nothing (admission must not strand a
-    /// half-allocated prompt when the pool runs dry mid-claim).
+    /// Claim `n` blocks all-or-nothing.  Implemented as claim-then-
+    /// rollback rather than an up-front free-list length check: the
+    /// reclaiming callers (index eviction feeding the free list mid-
+    /// claim) make the length check unsound, so a mid-claim failure
+    /// MUST restore every block already taken — the free list ends up
+    /// with the same block set (order may differ), which the
+    /// regression test pins.
     pub fn alloc_n(&mut self, n: usize) -> Option<Vec<u32>> {
-        if self.free.len() < n {
-            return None;
+        let mut got: Vec<u32> = Vec::with_capacity(n);
+        for _ in 0..n {
+            match self.alloc() {
+                Some(b) => got.push(b),
+                None => {
+                    // partial failure: restore the free list in full
+                    self.rollback(got);
+                    return None;
+                }
+            }
         }
-        Some((0..n).map(|_| self.alloc().unwrap()).collect())
+        Some(got)
     }
 
-    /// Return a block to the free list; double frees and out-of-range
-    /// ids are errors.
-    pub fn free(&mut self, block: u32) -> Result<()> {
+    /// Undo a partial claim: every block returns to the free list and
+    /// the rolled-back claims do not count as allocations.
+    pub(crate) fn rollback(&mut self, claimed: Vec<u32>) {
+        for b in claimed {
+            self.release(b)
+                .expect("rolling back a block just claimed");
+            self.allocated_total -= 1;
+        }
+    }
+
+    /// Add a holder to an already-held block (prefix sharing / index
+    /// donation); retaining a free block is an error.
+    pub fn retain(&mut self, block: u32) -> Result<()> {
+        let i = block as usize;
+        if i >= self.n_blocks {
+            bail!("retaining block {block} outside pool of {}",
+                  self.n_blocks);
+        }
+        if self.refs[i] == 0 {
+            bail!("retaining free block {block}");
+        }
+        self.refs[i] += 1;
+        Ok(())
+    }
+
+    /// Drop one holder; the block returns to the free list only when
+    /// the LAST holder releases (returns true then).  Double frees and
+    /// out-of-range ids are errors.
+    pub fn release(&mut self, block: u32) -> Result<bool> {
         let i = block as usize;
         if i >= self.n_blocks {
             bail!("freeing block {block} outside pool of {}", self.n_blocks);
         }
-        if !self.held[i] {
+        if self.refs[i] == 0 {
             bail!("double free of block {block}");
         }
-        self.held[i] = false;
-        self.free.push(block);
-        Ok(())
+        self.refs[i] -= 1;
+        if self.refs[i] == 0 {
+            self.free.push(block);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Single-holder free (kept for call sites predating refcounts):
+    /// releases one hold; errors on double free.
+    pub fn free(&mut self, block: u32) -> Result<()> {
+        self.release(block).map(|_| ())
+    }
+}
+
+// ---------------------------------------------------------------------
+// content-addressed prefix index
+// ---------------------------------------------------------------------
+
+/// Hash-chain seed: the hash of the empty prefix (FNV offset basis).
+const CHAIN_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// FNV-1a over the parent hash plus one block-sized chunk of token
+/// ids.  A chain of these hashes names the chunk's entire token
+/// HISTORY, so logically identical prefixes collide on purpose no
+/// matter which physical blocks hold them.
+fn chunk_hash(parent: u64, tokens: &[i32]) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = CHAIN_SEED;
+    for b in parent.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    for t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
+struct IndexEntry {
+    block: u32,
+    parent: u64,
+    /// the chunk's tokens, verified on lookup — a 64-bit collision can
+    /// therefore never alias two different prefixes
+    tokens: Vec<i32>,
+    last_use: u64,
+}
+
+/// Content-addressed map from chunk-hash chains to pool blocks.  Each
+/// entry holds ONE refcount on its block (taken at donation, dropped
+/// at eviction), so indexed prefixes outlive their donor sequences.
+/// Holds at most `cap` entries; beyond that the LRU entry is evicted,
+/// and allocation pressure reclaims LRU refcount-1 (index-only)
+/// entries on demand — leaves first, so chains shrink from the tail.
+pub struct PrefixIndex {
+    map: BTreeMap<u64, IndexEntry>,
+    cap: usize,
+    clock: u64,
+}
+
+impl PrefixIndex {
+    fn new(cap: usize) -> Self {
+        PrefixIndex { map: BTreeMap::new(), cap: cap.max(1), clock: 0 }
+    }
+
+    /// LRU entry whose block has no holder besides the index itself;
+    /// leaf entries (no other entry chains from them) are preferred so
+    /// eviction never strands a reachable child behind a missing
+    /// parent link.
+    ///
+    /// O(entries) per call (parent set rebuild + full scan).  Callers
+    /// invoke it once per reclaimed block; at serving scale an
+    /// incrementally maintained child-count / LRU ordering would
+    /// amortize this — fine at current pool sizes.
+    fn pick_victim(&self, alloc: &BlockAllocator) -> Option<u64> {
+        let parents: BTreeSet<u64> =
+            self.map.values().map(|e| e.parent).collect();
+        let mut best: Option<(u64, u64)> = None;
+        let mut best_leaf: Option<(u64, u64)> = None;
+        for (&h, e) in &self.map {
+            if alloc.ref_count(e.block) != 1 {
+                continue;
+            }
+            let cand = (e.last_use, h);
+            if best.is_none() || Some(cand) < best {
+                best = Some(cand);
+            }
+            if !parents.contains(&h)
+                && (best_leaf.is_none() || Some(cand) < best_leaf)
+            {
+                best_leaf = Some(cand);
+            }
+        }
+        best_leaf.or(best).map(|(_, h)| h)
+    }
+
+    /// LRU entry regardless of sharing (cap enforcement: releasing the
+    /// index hold on a still-shared block frees nothing but keeps the
+    /// entry count bounded).
+    fn lru_any(&self) -> Option<u64> {
+        self.map
+            .iter()
+            .map(|(&h, e)| (e.last_use, h))
+            .min()
+            .map(|(_, h)| h)
     }
 }
 
@@ -253,9 +463,20 @@ impl BlockAllocator {
 // the paged manager
 // ---------------------------------------------------------------------
 
+/// A successful [`PagedKv::alloc_seq`] admission: the decode slot plus
+/// the cached-history length — prefill only computes positions
+/// `start..prompt_len` (start is 0 on a cache miss).
+#[derive(Clone, Copy, Debug)]
+pub struct Admitted {
+    pub slot: usize,
+    pub start: usize,
+}
+
 /// Paged KV manager: decode slots + per-slot block tables over a
-/// [`KvBlockPool`], with a [`BlockAllocator`] free list.  See the
-/// module docs for the admission/preemption policy.
+/// [`KvBlockPool`], with a refcounted [`BlockAllocator`] free list and
+/// a content-addressed [`PrefixIndex`] for cross-request prefix
+/// sharing.  See the module docs for the admission/preemption/CoW
+/// policy.
 pub struct PagedKv {
     pub batch: usize,
     pub max_seq: usize,
@@ -264,6 +485,11 @@ pub struct PagedKv {
     slots: Vec<Option<u64>>,
     pos: Vec<usize>,
     tables: Vec<Vec<u32>>,
+    /// per-slot cached-history length set at admission (reset on free)
+    suffix_start: Vec<usize>,
+    /// None = prefix cache disabled (every admission is a miss)
+    prefix: Option<PrefixIndex>,
+    cow_forks: u64,
 }
 
 impl PagedKv {
@@ -287,7 +513,31 @@ impl PagedKv {
             slots: vec![None; batch],
             pos: vec![0; batch],
             tables: vec![Vec::new(); batch],
+            suffix_start: vec![0; batch],
+            prefix: Some(PrefixIndex::new(n_blocks)),
+            cow_forks: 0,
         }
+    }
+
+    /// Toggle the prefix cache (builder style, construction time only:
+    /// disabling after donations would strand the index holds).
+    /// Enabled by default with an LRU cap of the pool size.
+    pub fn with_prefix_cache(mut self, enabled: bool) -> Self {
+        if !enabled {
+            self.prefix = None;
+        } else if self.prefix.is_none() {
+            self.prefix =
+                Some(PrefixIndex::new(self.alloc.n_blocks()));
+        }
+        self
+    }
+
+    /// Cap the prefix index at `cap` entries (LRU beyond that).
+    pub fn with_prefix_cap(mut self, cap: usize) -> Self {
+        if let Some(idx) = &mut self.prefix {
+            idx.cap = cap.max(1);
+        }
+        self
     }
 
     /// Blocks needed to hold `len` positions (at least one — a
@@ -303,47 +553,470 @@ impl PagedKv {
             && self.blocks_for(prompt_len) <= self.alloc.n_blocks()
     }
 
-    /// Admit a request: claim a free slot plus enough blocks for its
-    /// prompt (all-or-nothing).  None = no capacity right now.
+    /// Admit a request, sharing the longest cached prefix of its
+    /// prompt: matched index blocks are RETAINED into the new table
+    /// and only the uncached suffix gets fresh blocks (all-or-nothing;
+    /// index-only blocks are reclaimed on demand).  At least one
+    /// prompt position is always left for prefill to recompute — a
+    /// fully cached block-aligned prompt CoW-forks its tail block and
+    /// recomputes the final position into the private copy.  None = no
+    /// capacity right now (nothing retained, nothing claimed).
     pub fn alloc_seq(
+        &mut self,
+        request_id: u64,
+        prompt: &[i32],
+    ) -> Option<Admitted> {
+        if self.prefix.is_none() {
+            return self
+                .alloc_seq_uncached(request_id, prompt.len())
+                .map(|slot| Admitted { slot, start: 0 });
+        }
+        // exact feasibility pre-check BEFORE touching anything: a
+        // failed claim can roll back the blocks it took, but index
+        // entries evicted by mid-claim reclaim are gone for good —
+        // never start a claim that cannot complete
+        if !self.admission_feasible(prompt, 0) {
+            return None;
+        }
+        let slot =
+            (0..self.batch).find(|&i| self.slots[i].is_none())?;
+        let l = prompt.len();
+        let bs = self.pool.block_size;
+        let need_total = self.blocks_for(l);
+        let matched = Self::longest_chain(
+            self.prefix.as_mut().expect("checked above"),
+            prompt,
+            bs,
+        );
+        // chunks are full blocks of the prompt, so the chain can never
+        // outrun the table
+        debug_assert!(matched.len() <= need_total);
+        let full_hit = l > 0 && matched.len() * bs >= l;
+        // retain every matched block except (on a full hit) the tail,
+        // which becomes the CoW-fork source instead
+        let retained: Vec<u32> = if full_hit {
+            matched[..matched.len() - 1].to_vec()
+        } else {
+            matched.clone()
+        };
+        for &b in &retained {
+            self.alloc
+                .retain(b)
+                .expect("index entry holds a live block");
+        }
+        let fresh = match self
+            .alloc_n_reclaiming(need_total - retained.len())
+        {
+            Some(f) => f,
+            None => {
+                for &b in &retained {
+                    self.alloc
+                        .release(b)
+                        .expect("releasing a just-retained block");
+                }
+                return None;
+            }
+        };
+        if full_hit {
+            // fork the shared tail: the final prompt position is
+            // recomputed into a private copy, so the index's block
+            // never sees the write
+            self.pool.copy_block(matched[matched.len() - 1], fresh[0]);
+            self.cow_forks += 1;
+        }
+        let start =
+            if full_hit { l - 1 } else { matched.len() * bs };
+        let mut table = retained;
+        table.extend(fresh);
+        self.slots[slot] = Some(request_id);
+        self.pos[slot] = 0;
+        self.suffix_start[slot] = start;
+        self.tables[slot] = table;
+        Some(Admitted { slot, start })
+    }
+
+    /// Admit with no prefix lookup (the `--no-prefix-cache` path and
+    /// length-only tests): a free slot plus fresh blocks for the whole
+    /// prompt, all-or-nothing.
+    pub fn alloc_seq_uncached(
         &mut self,
         request_id: u64,
         prompt_len: usize,
     ) -> Option<usize> {
         let slot =
             (0..self.batch).find(|&i| self.slots[i].is_none())?;
-        let blocks = self.alloc.alloc_n(self.blocks_for(prompt_len))?;
+        // nothing is retained on this path, so the plain availability
+        // count is exact — never start a claim that cannot complete
+        // (mid-claim reclaim evictions would not be restorable)
+        if self.available_blocks() < self.blocks_for(prompt_len) {
+            return None;
+        }
+        let blocks =
+            self.alloc_n_reclaiming(self.blocks_for(prompt_len))?;
         self.slots[slot] = Some(request_id);
         self.pos[slot] = 0;
+        self.suffix_start[slot] = 0;
         self.tables[slot] = blocks;
         Some(slot)
     }
 
-    /// Release a sequence: blocks back to the free list, slot freed.
+    /// Walk the hash chain over full prompt chunks, touching LRU
+    /// stamps, and return the matched blocks in chain order.
+    fn longest_chain(
+        idx: &mut PrefixIndex,
+        prompt: &[i32],
+        bs: usize,
+    ) -> Vec<u32> {
+        let mut parent = CHAIN_SEED;
+        let mut out = Vec::new();
+        for chunk in prompt.chunks_exact(bs) {
+            let h = chunk_hash(parent, chunk);
+            idx.clock += 1;
+            let now = idx.clock;
+            match idx.map.get_mut(&h) {
+                Some(e) if e.parent == parent && e.tokens == chunk => {
+                    e.last_use = now;
+                    out.push(e.block);
+                }
+                _ => break,
+            }
+            parent = h;
+        }
+        out
+    }
+
+    /// Blocks a prompt would match in the index right now (no LRU
+    /// touch — the admission watermark's read-only probe).
+    pub fn probe_cached_blocks(&self, prompt: &[i32]) -> usize {
+        let Some(idx) = &self.prefix else { return 0 };
+        let bs = self.pool.block_size;
+        let mut parent = CHAIN_SEED;
+        let mut n = 0usize;
+        for chunk in prompt.chunks_exact(bs) {
+            let h = chunk_hash(parent, chunk);
+            match idx.map.get(&h) {
+                Some(e) if e.parent == parent && e.tokens == chunk => {
+                    n += 1
+                }
+                _ => break,
+            }
+            parent = h;
+        }
+        n
+    }
+
+    /// Would [`Self::alloc_seq`] succeed right now, with `reserve`
+    /// blocks kept back (the engine's per-resident growth watermark)?
+    /// EXACT, not a plain `available_blocks()` comparison: the
+    /// prompt's own to-be-retained prefix blocks are excluded from the
+    /// reclaimable count — retaining them makes them non-evictable
+    /// for the very claim that needs the space — so a true verdict
+    /// guarantees the claim completes and no index entry is ever
+    /// evicted for a claim that then fails.
+    pub fn admission_feasible(
+        &self,
+        prompt: &[i32],
+        reserve: usize,
+    ) -> bool {
+        if !self.slots.iter().any(Option::is_none) {
+            return false;
+        }
+        let l = prompt.len();
+        let bs = self.pool.block_size;
+        let total = self.blocks_for(l);
+        // non-mutating chain walk collecting the matched blocks
+        let mut matched: Vec<u32> = Vec::new();
+        if let Some(idx) = &self.prefix {
+            let mut parent = CHAIN_SEED;
+            for chunk in prompt.chunks_exact(bs) {
+                let h = chunk_hash(parent, chunk);
+                match idx.map.get(&h) {
+                    Some(e)
+                        if e.parent == parent && e.tokens == chunk =>
+                    {
+                        matched.push(e.block)
+                    }
+                    _ => break,
+                }
+                parent = h;
+            }
+        }
+        let full_hit = l > 0 && matched.len() * bs >= l;
+        let retained_n = if full_hit {
+            matched.len() - 1
+        } else {
+            matched.len()
+        };
+        let retained: BTreeSet<u32> =
+            matched[..retained_n].iter().copied().collect();
+        let fresh = total - retained_n;
+        let evictable = self.prefix.as_ref().map_or(0, |idx| {
+            idx.map
+                .values()
+                .filter(|e| {
+                    self.alloc.ref_count(e.block) == 1
+                        && !retained.contains(&e.block)
+                })
+                .count()
+        });
+        self.alloc.free_blocks() + evictable >= fresh + reserve
+    }
+
+    /// Donate a prefilled sequence's full prompt blocks to the index:
+    /// each newly indexed block gains an index refcount and so
+    /// outlives the sequence.  Chunks whose content chain is already
+    /// indexed are skipped (the index keeps its original physical
+    /// block).
+    pub fn donate_prefix(&mut self, slot: usize, prompt: &[i32]) {
+        if self.prefix.is_none() {
+            return;
+        }
+        let bs = self.pool.block_size;
+        let mut parent = CHAIN_SEED;
+        for (i, chunk) in prompt.chunks_exact(bs).enumerate() {
+            let h = chunk_hash(parent, chunk);
+            enum Verdict {
+                Touched,
+                Collision,
+                Insert,
+            }
+            let verdict = {
+                let idx =
+                    self.prefix.as_mut().expect("checked above");
+                idx.clock += 1;
+                let now = idx.clock;
+                match idx.map.get_mut(&h) {
+                    Some(e)
+                        if e.parent == parent
+                            && e.tokens == chunk =>
+                    {
+                        e.last_use = now;
+                        Verdict::Touched
+                    }
+                    // 64-bit collision with different content: keep
+                    // the existing entry, stop this chain (a child
+                    // would be unreachable behind it anyway)
+                    Some(_) => Verdict::Collision,
+                    None => Verdict::Insert,
+                }
+            };
+            match verdict {
+                Verdict::Collision => return,
+                Verdict::Touched => {}
+                Verdict::Insert => {
+                    let block = self.tables[slot][i];
+                    self.alloc
+                        .retain(block)
+                        .expect("donating a held block");
+                    let idx =
+                        self.prefix.as_mut().expect("checked above");
+                    idx.clock += 1;
+                    let last_use = idx.clock;
+                    idx.map.insert(
+                        h,
+                        IndexEntry {
+                            block,
+                            parent,
+                            tokens: chunk.to_vec(),
+                            last_use,
+                        },
+                    );
+                    self.enforce_cap();
+                }
+            }
+            parent = h;
+        }
+    }
+
+    /// Evict index entries until the LRU cap holds (refcount-1 blocks
+    /// preferred — they actually free memory; falling back to merely
+    /// dropping the LRU entry's hold keeps the entry count bounded).
+    fn enforce_cap(&mut self) {
+        loop {
+            let victim = match &self.prefix {
+                Some(idx) if idx.map.len() > idx.cap => idx
+                    .pick_victim(&self.alloc)
+                    .or_else(|| idx.lru_any()),
+                _ => return,
+            };
+            let Some(h) = victim else { return };
+            let e = self
+                .prefix
+                .as_mut()
+                .expect("checked above")
+                .map
+                .remove(&h)
+                .expect("victim exists");
+            self.alloc
+                .release(e.block)
+                .expect("index held this block");
+        }
+    }
+
+    /// Drop the LRU index-only (refcount-1) entry, returning its block
+    /// to the free list.  False = nothing reclaimable.
+    pub fn reclaim_index_lru(&mut self) -> bool {
+        let victim = match &self.prefix {
+            Some(idx) => idx.pick_victim(&self.alloc),
+            None => None,
+        };
+        let Some(h) = victim else { return false };
+        let e = self
+            .prefix
+            .as_mut()
+            .expect("victim implies index")
+            .map
+            .remove(&h)
+            .expect("victim exists");
+        let freed = self
+            .alloc
+            .release(e.block)
+            .expect("index held this block");
+        debug_assert!(freed, "victim had refcount 1");
+        true
+    }
+
+    /// Release every index hold (test/drain hygiene): afterwards
+    /// `blocks_in_use()` counts live sequences only.
+    pub fn flush_prefix_index(&mut self) {
+        let entries = match &mut self.prefix {
+            Some(idx) => std::mem::take(&mut idx.map),
+            None => return,
+        };
+        for e in entries.into_values() {
+            self.alloc
+                .release(e.block)
+                .expect("index held this block");
+        }
+    }
+
+    /// One block, reclaiming LRU index-only entries when the free list
+    /// is dry.
+    fn alloc_reclaiming(&mut self) -> Option<u32> {
+        loop {
+            if let Some(b) = self.alloc.alloc() {
+                return Some(b);
+            }
+            if !self.reclaim_index_lru() {
+                return None;
+            }
+        }
+    }
+
+    /// All-or-nothing claim over [`Self::alloc_reclaiming`]; a
+    /// mid-claim failure rolls every claimed block back.
+    fn alloc_n_reclaiming(&mut self, n: usize) -> Option<Vec<u32>> {
+        let mut got: Vec<u32> = Vec::with_capacity(n);
+        for _ in 0..n {
+            match self.alloc_reclaiming() {
+                Some(b) => got.push(b),
+                None => {
+                    self.alloc.rollback(got);
+                    return None;
+                }
+            }
+        }
+        Some(got)
+    }
+
+    /// Release a sequence: one hold dropped per table block (a block
+    /// still retained by the prefix index or a live sharer survives;
+    /// only the private tail actually returns to the free list).
     pub fn free_seq(&mut self, slot: usize) {
         for b in self.tables[slot].drain(..) {
             self.alloc
-                .free(b)
+                .release(b)
                 .expect("slot table held a block the allocator disowns");
         }
         self.slots[slot] = None;
         self.pos[slot] = 0;
+        self.suffix_start[slot] = 0;
+    }
+
+    /// Clone a live sequence's table into a fresh slot by RETAINING
+    /// every block (no data copies) — the parallel-sampling
+    /// foundation: twins share all pages until their first diverging
+    /// write CoW-splits the tail.  None = no free slot / src idle.
+    pub fn fork_seq(
+        &mut self,
+        src_slot: usize,
+        request_id: u64,
+    ) -> Option<usize> {
+        self.slots[src_slot]?;
+        let slot =
+            (0..self.batch).find(|&i| self.slots[i].is_none())?;
+        let table = self.tables[src_slot].clone();
+        for &b in &table {
+            self.alloc.retain(b).expect("forking a live table");
+        }
+        self.slots[slot] = Some(request_id);
+        self.pos[slot] = self.pos[src_slot];
+        self.suffix_start[slot] = self.suffix_start[src_slot];
+        self.tables[slot] = table;
+        Some(slot)
     }
 
     /// Grow `slot`'s table on demand so its next write position is
-    /// backed by a page.  False = pool dry (caller preempts).
+    /// backed by a PRIVATE page: a missing tail block is allocated
+    /// (reclaiming index-only blocks if needed), and a shared tail
+    /// (refcount > 1) is copy-on-write forked first so other holders
+    /// never observe the write.  False = pool dry (caller preempts).
     pub fn ensure_write_capacity(&mut self, slot: usize) -> bool {
         let bs = self.pool.block_size;
-        if self.pos[slot] / bs < self.tables[slot].len() {
-            return true;
-        }
-        match self.alloc.alloc() {
-            Some(b) => {
-                self.tables[slot].push(b);
-                true
+        let idx = self.pos[slot] / bs;
+        if idx < self.tables[slot].len() {
+            let b = self.tables[slot][idx];
+            if self.alloc.ref_count(b) <= 1 {
+                return true;
             }
-            None => false,
+            // copy-on-write fork of the shared tail
+            match self.alloc_reclaiming() {
+                Some(nb) => {
+                    self.pool.copy_block(b, nb);
+                    self.alloc
+                        .release(b)
+                        .expect("forking a held block");
+                    self.tables[slot][idx] = nb;
+                    self.cow_forks += 1;
+                    true
+                }
+                None => false,
+            }
+        } else {
+            match self.alloc_reclaiming() {
+                Some(b) => {
+                    self.tables[slot].push(b);
+                    true
+                }
+                None => false,
+            }
         }
+    }
+
+    /// Mark a sequence prefilled through the paged prefill path (K/V
+    /// already written through the table in place — nothing to
+    /// install).
+    pub fn finish_prefill(
+        &mut self,
+        slot: usize,
+        prompt_len: usize,
+    ) -> Result<()> {
+        if self.blocks_for(prompt_len) > self.tables[slot].len() {
+            bail!(
+                "slot {slot}: table has {} blocks, prompt of \
+                 {prompt_len} needs {}",
+                self.tables[slot].len(),
+                self.blocks_for(prompt_len)
+            );
+        }
+        self.pos[slot] = prompt_len;
+        Ok(())
+    }
+
+    /// Cached-history length of a slot, set at admission: prefill
+    /// computes positions `suffix_start..prompt_len` only.
+    pub fn suffix_start(&self, slot: usize) -> usize {
+        self.suffix_start[slot]
     }
 
     /// Copy one request's prefill cache rows (`[H, max_seq, Dh]` within
@@ -371,6 +1044,17 @@ impl PagedKv {
                 self.tables[slot].len(),
                 self.blocks_for(prompt_len)
             );
+        }
+        // this path rewrites positions 0..prompt_len wholesale; a
+        // shared block in that range would clobber other holders — the
+        // partial-prefill path (scatter_row_from + CoW) must be used
+        for &b in &self.tables[slot][..self.blocks_for(prompt_len)] {
+            if self.alloc.ref_count(b) > 1 {
+                bail!(
+                    "install_from_prefill would overwrite shared \
+                     block {b}; use the partial-prefill path"
+                );
+            }
         }
         for l in 0..nl {
             if layer_k[l].len() != src_batch * stride
@@ -439,43 +1123,127 @@ impl PagedKv {
         self.alloc.free_blocks()
     }
 
+    /// Free blocks plus index-only blocks reclaimable on demand — the
+    /// capacity admission and the write path can actually count on.
+    pub fn available_blocks(&self) -> usize {
+        let evictable = self.prefix.as_ref().map_or(0, |idx| {
+            idx.map
+                .values()
+                .filter(|e| self.alloc.ref_count(e.block) == 1)
+                .count()
+        });
+        self.alloc.free_blocks() + evictable
+    }
+
     pub fn blocks_in_use(&self) -> usize {
         self.alloc.used_blocks()
     }
 
-    /// Fragmentation accounting: `(positions held, position capacity of
-    /// the held blocks)`.  The gap between the two is block-granularity
-    /// slack — at most `block_size - 1` positions per active sequence,
-    /// which is the defrag story: blocks recycle whole, so the pool
-    /// never fragments beyond that per-sequence tail slack.
+    /// Holder count of one block (0 = free).
+    pub fn ref_count(&self, block: u32) -> u32 {
+        self.alloc.ref_count(block)
+    }
+
+    /// Copy-on-write forks performed so far (admission tail forks and
+    /// write-path forks).
+    pub fn cow_forks(&self) -> u64 {
+        self.cow_forks
+    }
+
+    /// Blocks currently held by more than one holder.
+    pub fn shared_blocks(&self) -> usize {
+        self.alloc.shared_blocks()
+    }
+
+    /// Cumulative fresh block allocations (the prefix cache's win is
+    /// this growing slower than a cache-off run).
+    pub fn blocks_allocated(&self) -> u64 {
+        self.alloc.allocated_total()
+    }
+
+    /// Entries currently in the prefix index.
+    pub fn prefix_index_blocks(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |idx| idx.map.len())
+    }
+
+    /// Is the prefix cache active?
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Fragmentation accounting: `(positions held, position capacity
+    /// of the blocks backing live sequences)`.  Index-ONLY blocks
+    /// (cached prefixes no sequence currently uses) are excluded from
+    /// the capacity term — they are reclaimable cache, not
+    /// fragmentation.  Without sharing, the gap between the two is
+    /// block-granularity slack — at most `block_size - 1` positions
+    /// per active sequence; with prefix sharing, `held` can EXCEED the
+    /// capacity term (several sequences' positions backed by one
+    /// physical block) — that overshoot is the dedup win, not a leak.
     pub fn utilization(&self) -> (usize, usize) {
         let held: usize = (0..self.batch)
             .filter(|&i| self.slots[i].is_some())
             .map(|i| self.pos[i])
             .sum();
-        (held, self.blocks_in_use() * self.pool.block_size)
+        let index_only = self.prefix.as_ref().map_or(0, |idx| {
+            idx.map
+                .values()
+                .filter(|e| self.alloc.ref_count(e.block) == 1)
+                .count()
+        });
+        (
+            held,
+            (self.blocks_in_use() - index_only)
+                * self.pool.block_size,
+        )
     }
 
     /// Conservation invariant (fuzzed by the property suite): every
-    /// block is either on the free list or in exactly one table.
+    /// block is free (refcount 0) or held, each held block's refcount
+    /// equals exactly its table occurrences plus its index hold, and
+    /// `free + Σ unique held == pool size` — so nothing leaks, nothing
+    /// double-frees, and no table can reach a block the allocator
+    /// disowns.
     pub fn check_conservation(&self) -> Result<()> {
-        let in_tables: usize =
-            self.tables.iter().map(Vec::len).sum();
-        if in_tables != self.blocks_in_use() {
-            bail!(
-                "{} blocks in tables but allocator says {} in use",
-                in_tables,
-                self.blocks_in_use()
-            );
-        }
-        let mut seen = vec![false; self.alloc.n_blocks()];
+        let n = self.alloc.n_blocks();
+        let mut expect = vec![0u32; n];
         for t in &self.tables {
             for &b in t {
-                if seen[b as usize] {
-                    bail!("block {b} appears in two tables");
+                if b as usize >= n {
+                    bail!("table holds block {b} outside pool of {n}");
                 }
-                seen[b as usize] = true;
+                expect[b as usize] += 1;
             }
+        }
+        if let Some(idx) = &self.prefix {
+            for e in idx.map.values() {
+                if e.block as usize >= n {
+                    bail!(
+                        "index holds block {} outside pool of {n}",
+                        e.block
+                    );
+                }
+                expect[e.block as usize] += 1;
+            }
+        }
+        let mut held_unique = 0usize;
+        for (b, &want) in expect.iter().enumerate() {
+            let have = self.alloc.ref_count(b as u32);
+            if have != want {
+                bail!(
+                    "block {b}: refcount {have} but {want} reachable \
+                     holds (tables + index)"
+                );
+            }
+            if have > 0 {
+                held_unique += 1;
+            }
+        }
+        if self.alloc.free_blocks() + held_unique != n {
+            bail!(
+                "{} free + {held_unique} uniquely held != pool of {n}",
+                self.alloc.free_blocks()
+            );
         }
         Ok(())
     }
@@ -573,20 +1341,25 @@ mod tests {
         PagedKv::new(2, 2, 2, 32, 4, 4, 6)
     }
 
+    /// Distinct per-id prompts so length-driven tests never share.
+    fn uniq(id: i32, len: usize) -> Vec<i32> {
+        (0..len as i32).map(|i| 1000 * id + i).collect()
+    }
+
     #[test]
     fn admission_is_block_gated() {
         let mut p = paged();
         // prompt of 9 needs 3 of the 6 blocks
-        let a = p.alloc_seq(1, 9).unwrap();
+        let a = p.alloc_seq(1, &uniq(1, 9)).unwrap().slot;
         assert_eq!(p.table(a).len(), 3);
         assert_eq!(p.free_blocks(), 3);
         // next prompt of 13 needs 4 > 3 free: no admission, and the
         // failed all-or-nothing claim must not leak anything
-        assert!(p.alloc_seq(2, 13).is_none());
+        assert!(p.alloc_seq(2, &uniq(2, 13)).is_none());
         assert_eq!(p.free_blocks(), 3);
         p.check_conservation().unwrap();
         // a small prompt still fits
-        let b = p.alloc_seq(3, 4).unwrap();
+        let b = p.alloc_seq(3, &uniq(3, 4)).unwrap().slot;
         assert_ne!(a, b);
         assert_eq!(p.free_blocks(), 2);
         // pool-impossible prompt is permanently unfittable
@@ -597,8 +1370,8 @@ mod tests {
     #[test]
     fn tables_grow_on_demand_and_recycle() {
         let mut p = paged();
-        let s = p.alloc_seq(1, 4).unwrap(); // one full block
-        p.pos[s] = 4; // as install_from_prefill would set
+        let s = p.alloc_seq(1, &uniq(1, 4)).unwrap().slot;
+        p.pos[s] = 4; // as finish_prefill would set
         assert_eq!(p.table(s).len(), 1);
         // writing position 4 needs a second block
         assert!(p.ensure_write_capacity(s));
@@ -616,8 +1389,8 @@ mod tests {
     #[test]
     fn pool_dry_reports_false() {
         let mut p = paged();
-        let a = p.alloc_seq(1, 12).unwrap(); // 3 blocks
-        let b = p.alloc_seq(2, 12).unwrap(); // 3 blocks -> pool dry
+        let a = p.alloc_seq(1, &uniq(1, 12)).unwrap().slot;
+        let b = p.alloc_seq(2, &uniq(2, 12)).unwrap().slot;
         p.pos[a] = 12;
         p.pos[b] = 12;
         assert!(!p.ensure_write_capacity(a), "pool is dry");
@@ -635,5 +1408,220 @@ mod tests {
         assert!(a.free(b).is_err(), "double free must error");
         assert!(a.free(99).is_err(), "out-of-range free must error");
         assert_eq!(a.free_blocks(), 4);
+    }
+
+    #[test]
+    fn allocator_refcounts_share_and_release() {
+        let mut a = BlockAllocator::new(3);
+        let b = a.alloc().unwrap();
+        a.retain(b).unwrap();
+        a.retain(b).unwrap();
+        assert_eq!(a.ref_count(b), 3);
+        assert_eq!(a.shared_blocks(), 1);
+        assert!(!a.release(b).unwrap(), "still held");
+        assert!(!a.release(b).unwrap(), "still held");
+        assert_eq!(a.free_blocks(), 2, "not freed until last release");
+        assert!(a.release(b).unwrap(), "last holder frees");
+        assert_eq!(a.free_blocks(), 3);
+        assert!(a.release(b).is_err(), "double free must error");
+        assert!(a.retain(b).is_err(), "retaining a free block errors");
+    }
+
+    #[test]
+    fn alloc_n_partial_failure_restores_free_list() {
+        // regression: the all-or-nothing claim used to rely on an
+        // up-front free-list length check, which the reclaiming path
+        // (index eviction feeding the free list mid-claim) invalidates
+        // — a mid-claim failure must restore the free list in full,
+        // order-insensitively, with conservation still balancing.
+        let mut a = BlockAllocator::new(6);
+        let held = a.alloc_n(2).unwrap();
+        let mut before: Vec<u32> = a.free.clone();
+        before.sort_unstable();
+        let n_alloc = a.allocated_total();
+        // 5 > 4 free: fails midway through the claim loop
+        assert!(a.alloc_n(5).is_none());
+        let mut after: Vec<u32> = a.free.clone();
+        after.sort_unstable();
+        assert_eq!(before, after, "free SET must be fully restored");
+        assert_eq!(
+            a.allocated_total(),
+            n_alloc,
+            "rolled-back claims must not count as allocations"
+        );
+        assert_eq!(a.free_blocks() + held.len(), 6, "conservation");
+        for b in held {
+            assert_eq!(a.ref_count(b), 1, "held blocks untouched");
+        }
+    }
+
+    #[test]
+    fn prefix_sharing_retains_and_cow_forks() {
+        // 4 slots, block 4, 12 blocks
+        let mut p = PagedKv::new(4, 2, 2, 64, 4, 4, 12);
+        let prompt = uniq(7, 12); // 3 full blocks
+        let a = p.alloc_seq(1, &prompt).unwrap();
+        assert_eq!(a.start, 0, "cold cache: full prefill");
+        p.finish_prefill(a.slot, 12).unwrap();
+        p.donate_prefix(a.slot, &prompt);
+        assert_eq!(p.prefix_index_blocks(), 3);
+        p.check_conservation().unwrap();
+
+        // identical prompt: full hit -> 2 retained + 1 CoW tail fork,
+        // only the final position recomputed
+        let allocated_before = p.blocks_allocated();
+        let b = p.alloc_seq(2, &prompt).unwrap();
+        assert_eq!(b.start, 11, "full hit recomputes the last position");
+        assert_eq!(p.table(b.slot).len(), 3);
+        assert_eq!(p.cow_forks(), 1);
+        assert_eq!(
+            p.blocks_allocated() - allocated_before,
+            1,
+            "full hit claims exactly the forked tail"
+        );
+        assert_eq!(
+            p.table(b.slot)[..2],
+            p.table(a.slot)[..2],
+            "prefix blocks are physically shared"
+        );
+        assert_ne!(
+            p.table(b.slot)[2],
+            p.table(a.slot)[2],
+            "tail was forked"
+        );
+        assert!(p.shared_blocks() >= 2);
+        p.check_conservation().unwrap();
+
+        // longer prompt sharing the 12-token prefix: partial hit
+        let mut longer = prompt.clone();
+        longer.extend([9001, 9002, 9003]);
+        let c = p.alloc_seq(3, &longer).unwrap();
+        assert_eq!(c.start, 12, "three cached blocks skipped");
+        assert_eq!(p.table(c.slot).len(), 4);
+        p.check_conservation().unwrap();
+
+        // different prompt: miss
+        let d = p.alloc_seq(4, &uniq(8, 12)).unwrap();
+        assert_eq!(d.start, 0);
+        p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn preempting_a_sharer_releases_only_its_private_tail() {
+        // the preemption-safety satellite: evicting a sequence that
+        // holds shared blocks must never free blocks still retained by
+        // the prefix index or by live sharers
+        let mut p = PagedKv::new(4, 2, 2, 64, 4, 4, 16);
+        let prompt = uniq(3, 12); // 3 full blocks
+        let a = p.alloc_seq(1, &prompt).unwrap();
+        p.finish_prefill(a.slot, 12).unwrap();
+        p.donate_prefix(a.slot, &prompt);
+        let b = p.alloc_seq(2, &prompt).unwrap();
+        p.finish_prefill(b.slot, 12).unwrap();
+        // b grows a private decode block
+        p.pos[b.slot] = 12;
+        assert!(p.ensure_write_capacity(b.slot));
+        let b_table = p.table(b.slot).to_vec();
+        let shared: Vec<u32> = b_table[..2].to_vec();
+        let in_use = p.blocks_in_use();
+        // preempt b (what the engine's evict-youngest does)
+        p.free_seq(b.slot);
+        p.check_conservation().unwrap();
+        for &blk in &shared {
+            assert!(
+                p.ref_count(blk) >= 2,
+                "shared block {blk} must survive (index + sharer a)"
+            );
+        }
+        // a's table is untouched and fully held
+        for &blk in p.table(a.slot) {
+            assert!(p.ref_count(blk) >= 1);
+        }
+        // only b's private tail (fork + growth block) went back
+        assert_eq!(p.blocks_in_use(), in_use - 2);
+        assert_eq!(p.prefix_index_blocks(), 3, "index intact");
+    }
+
+    #[test]
+    fn fork_seq_shares_then_cow_splits_on_write() {
+        let mut p = PagedKv::new(3, 2, 2, 64, 4, 4, 12);
+        let a = p.alloc_seq(1, &uniq(5, 6)).unwrap().slot; // 2 blocks
+        p.finish_prefill(a, 6).unwrap();
+        let t = p.fork_seq(a, 2).unwrap();
+        assert_eq!(p.table(t), p.table(a), "twins share every block");
+        assert_eq!(p.shared_blocks(), 2);
+        p.check_conservation().unwrap();
+        // twin writes at pos 6 -> tail block (idx 1) is shared -> CoW
+        p.pos[t] = 6;
+        let forks = p.cow_forks();
+        assert!(p.ensure_write_capacity(t));
+        assert_eq!(p.cow_forks(), forks + 1);
+        assert_ne!(p.table(t)[1], p.table(a)[1], "tail split");
+        assert_eq!(p.table(t)[0], p.table(a)[0], "head still shared");
+        assert_eq!(
+            p.ref_count(p.table(t)[1]),
+            1,
+            "a forked write target is private to one table"
+        );
+        p.check_conservation().unwrap();
+        p.free_seq(t);
+        p.free_seq(a);
+        assert_eq!(p.free_blocks(), 12);
+        p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn index_pressure_reclaims_lru_and_cap_holds() {
+        // 1 slot, block 4, 6 blocks, index capped at 2 entries
+        let mut p = PagedKv::new(1, 2, 2, 64, 4, 4, 6)
+            .with_prefix_cap(2);
+        let p1 = uniq(1, 8); // 2 full blocks
+        let a = p.alloc_seq(1, &p1).unwrap();
+        p.finish_prefill(a.slot, 8).unwrap();
+        p.donate_prefix(a.slot, &p1);
+        assert_eq!(p.prefix_index_blocks(), 2);
+        p.free_seq(a.slot);
+        p.check_conservation().unwrap();
+        assert_eq!(p.blocks_in_use(), 2, "index keeps its blocks");
+        assert_eq!(p.available_blocks(), 6, "but they are reclaimable");
+
+        // a second donation overflows the cap: LRU entries evicted
+        let p2 = uniq(2, 8);
+        let b = p.alloc_seq(2, &p2).unwrap();
+        p.finish_prefill(b.slot, 8).unwrap();
+        p.donate_prefix(b.slot, &p2);
+        assert_eq!(p.prefix_index_blocks(), 2, "cap enforced");
+        p.check_conservation().unwrap();
+        // p1's chain was LRU -> evicted -> p1 no longer matches
+        assert_eq!(p.probe_cached_blocks(&p1), 0);
+        assert!(p.probe_cached_blocks(&p2) >= 1);
+        p.free_seq(b.slot);
+
+        // allocation pressure reclaims index-only blocks on demand:
+        // a 23-token prompt needs all 6 blocks
+        let c = p.alloc_seq(3, &uniq(3, 23)).unwrap();
+        assert_eq!(p.table(c.slot).len(), 6);
+        p.check_conservation().unwrap();
+        p.free_seq(c.slot);
+        p.flush_prefix_index();
+        assert_eq!(p.free_blocks(), 6, "nothing leaked");
+        p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn install_from_prefill_refuses_shared_blocks() {
+        let mut p = PagedKv::new(2, 2, 2, 32, 4, 4, 6);
+        let prompt = uniq(1, 8);
+        let a = p.alloc_seq(1, &prompt).unwrap();
+        p.finish_prefill(a.slot, 8).unwrap();
+        p.donate_prefix(a.slot, &prompt);
+        let stride = 2 * 32 * 4;
+        let zeros = vec![0f32; stride];
+        let lk = vec![zeros.clone(), zeros.clone()];
+        let lv = lk.clone();
+        assert!(
+            p.install_from_prefill(a.slot, &lk, &lv, 0, 1, 8).is_err(),
+            "wholesale install over index-shared blocks must refuse"
+        );
     }
 }

@@ -20,6 +20,22 @@ pub struct EngineMetrics {
     /// paged KV: sequences evicted to recover blocks (re-queued for
     /// re-prefill from their original prompt)
     pub preempted: u64,
+    /// admissions that matched a cached prefix (prefill skipped the
+    /// matched history)
+    pub prefix_hits: u64,
+    /// prompt positions served from the prefix cache instead of being
+    /// recomputed — reconciles as Σ per-admission `start`, each at
+    /// most that admission's `prompt_len - 1`
+    pub prefill_tokens_skipped: u64,
+    /// copy-on-write block forks (admission tail forks + write-path
+    /// forks), mirrored from the paged KV manager
+    pub cow_forks: u64,
+    /// PEAK count of pool blocks held by more than one holder
+    pub shared_blocks: u64,
+    /// cumulative fresh block allocations, mirrored from the paged KV
+    /// manager — the prefix cache's win is this growing slower than a
+    /// cache-off run
+    pub kv_blocks_allocated: u64,
     pub ttft: Summary,
     pub total_latency: Summary,
     pub tokens_out: Summary,
@@ -60,6 +76,8 @@ impl EngineMetrics {
     pub fn report(&mut self) -> String {
         format!(
             "completed={} rejected={} admitted={} preempted={}\n\
+             prefix : {} hits, {} prompt tokens skipped, {} cow forks, \
+             {} shared blocks (peak), {} blocks allocated\n\
              prefill: {} steps, {} tokens, {:.1} tok/s ({:.3}s total)\n\
              decode : {} steps, {} tokens, {:.1} tok/s ({:.3}s total)\n\
              ttft   : {}\n\
@@ -68,6 +86,11 @@ impl EngineMetrics {
             self.rejected,
             self.admitted,
             self.preempted,
+            self.prefix_hits,
+            self.prefill_tokens_skipped,
+            self.cow_forks,
+            self.shared_blocks,
+            self.kv_blocks_allocated,
             self.prefill_steps,
             self.prefill_tokens,
             self.prefill_tps(),

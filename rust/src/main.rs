@@ -29,7 +29,8 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["force", "no-paging"])?;
+    let args =
+        Args::parse(argv, &["force", "no-paging", "no-prefix-cache"])?;
     let cmd = args
         .positional
         .first()

@@ -53,6 +53,24 @@
 //! `StagingStats::kv_bytes_moved` exposes the per-step traffic both
 //! paths generate (`ODYSSEY_NO_PAGING=1` keeps the engine on the
 //! contiguous path the parity suite compares against).
+//!
+//! # Partial prefill (prefix-cache suffix computation)
+//!
+//! With the paged pool refcounted into a prefix cache
+//! ([`crate::coordinator::kv::PagedKv`]), an admitted prompt may find
+//! its leading blocks already resident.
+//! [`ExecBackend::execute_prefill_paged`] runs a STAGED prefill that
+//! takes a per-row `start`: positions `0..start` are READ from the
+//! block pool through the row's table (cached history another request
+//! computed), and only positions `start..len` are computed — their
+//! K/V written through the table in place, logits returned for the
+//! whole bucket.  With `start == 0` it is a full prefill writing the
+//! pool directly (the cache-off paged path).  Per-row float ops are
+//! independent of which other rows/positions are computed, so a
+//! partial prefill is bit-identical to the full prefill at every
+//! computed position — the prefix-cache parity suite pins cache-on
+//! token streams equal to cache-off
+//! (`ODYSSEY_NO_PREFIX_CACHE=1` is the escape hatch).
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -386,6 +404,10 @@ pub struct StagingStats {
     /// ([`ExecBackend::execute_decode_paged`]); also counted in
     /// `staged_execs` — paged decode always runs on staged weights.
     pub paged_decode_steps: u64,
+    /// Prefill steps served through the paged/partial path
+    /// ([`ExecBackend::execute_prefill_paged`]); also counted in
+    /// `staged_execs`.
+    pub paged_prefill_steps: u64,
     /// KV-cache bytes that crossed the execution boundary on decode
     /// steps: the contiguous path moves the full `[B, H, max_seq, Dh]`
     /// caches in AND out every step, the paged path only writes the new
@@ -646,6 +668,32 @@ pub trait ExecBackend {
         staged: &StagedGraph,
         token: &[i32],
         pos: &[i32],
+        pool: &mut KvBlockPool,
+        tables: &[&[u32]],
+    ) -> Result<Value>;
+
+    /// The paged/partial prefill variant: run one prefill step of a
+    /// STAGED prefill graph with K/V landing in the block pool.
+    /// `tokens` is the full `[B, S]` bucket, `lengths[bi]` the prompt
+    /// length, `starts[bi]` the cached-history length: positions
+    /// `0..starts[bi]` are READ from the pool through `tables[bi]`
+    /// (they were written by an earlier, logically identical prefix),
+    /// positions `starts[bi]..lengths[bi]` are computed and their K/V
+    /// written through the table IN PLACE.  Rows with an empty table
+    /// are idle (skipped, zero logits).  Returns the logits value
+    /// `f32[B, S, V]` only — there are no cache outputs to install.
+    ///
+    /// Computed positions are bit-identical to a full
+    /// `execute_staged` prefill of the same prompts (pinned by
+    /// `tests/properties.rs`): sharing changes where history K/V
+    /// comes from, never the float-op sequence that consumes it.
+    #[allow(clippy::too_many_arguments)]
+    fn execute_prefill_paged(
+        &mut self,
+        staged: &StagedGraph,
+        tokens: &[i32],
+        lengths: &[i32],
+        starts: &[i32],
         pool: &mut KvBlockPool,
         tables: &[&[u32]],
     ) -> Result<Value>;
@@ -924,6 +972,67 @@ impl Runtime {
             .execute_decode_paged(staged, token, pos, pool, tables)
     }
 
+    /// Run one PAGED (and possibly partial) prefill step: cached
+    /// history `0..starts[bi]` is read from `pool` through the block
+    /// tables, the uncached suffix is computed and written in place.
+    /// Returns the logits value `f32[B, S, V]` only.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_prefill_paged(
+        &mut self,
+        staged: &StagedGraph,
+        tokens: &[i32],
+        lengths: &[i32],
+        starts: &[i32],
+        pool: &mut KvBlockPool,
+        tables: &[&[u32]],
+    ) -> Result<Value> {
+        if staged.backend() != self.backend.name() {
+            bail!(
+                "staged graph {} belongs to backend '{}', runtime is '{}'",
+                staged.graph(),
+                staged.backend(),
+                self.backend.name()
+            );
+        }
+        if staged.info.kind != crate::formats::config::GraphKind::Prefill
+        {
+            bail!(
+                "{}: paged prefill needs a prefill graph (kind {:?})",
+                staged.graph(),
+                staged.info.kind
+            );
+        }
+        let (b, s) = (staged.info.batch, staged.info.seq);
+        if tokens.len() != b * s
+            || lengths.len() != b
+            || starts.len() != b
+            || tables.len() != b
+        {
+            bail!(
+                "{}: paged prefill wants tokens[{b},{s}] + \
+                 lengths/starts/tables of batch {b}, got {}/{}/{}/{}",
+                staged.graph(),
+                tokens.len(),
+                lengths.len(),
+                starts.len(),
+                tables.len()
+            );
+        }
+        for bi in 0..b {
+            if starts[bi] > lengths[bi] {
+                bail!(
+                    "{}: row {bi} start {} exceeds length {}",
+                    staged.graph(),
+                    starts[bi],
+                    lengths[bi]
+                );
+            }
+        }
+        self.backend.execute_prefill_paged(
+            staged, tokens, lengths, starts, pool, tables,
+        )
+    }
+
     /// Staging counters from the active backend.
     pub fn staging_stats(&self) -> StagingStats {
         self.backend.staging_stats()
@@ -950,6 +1059,17 @@ pub fn staging_enabled_from_env() -> bool {
 pub fn paging_enabled_from_env() -> bool {
     !matches!(
         std::env::var("ODYSSEY_NO_PAGING").as_deref(),
+        Ok("1") | Ok("true")
+    )
+}
+
+/// `ODYSSEY_NO_PREFIX_CACHE=1` (or `true`) disables cross-request
+/// prefix sharing on the paged KV pool — the escape hatch the
+/// prefix-cache parity tests compare against.  Anything else
+/// (including unset) leaves the prefix cache on.
+pub fn prefix_cache_enabled_from_env() -> bool {
+    !matches!(
+        std::env::var("ODYSSEY_NO_PREFIX_CACHE").as_deref(),
         Ok("1") | Ok("true")
     )
 }

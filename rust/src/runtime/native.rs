@@ -1208,6 +1208,282 @@ fn decode_core_paged(
     Ok((Value::f32(&[b, v], logits.into_vec()), kv_bytes))
 }
 
+/// Paged (and possibly partial) prefill on pre-parsed weights: row
+/// `bi` computes positions `starts[bi]..lengths[bi]` only — K/V for
+/// the cached history `0..starts[bi]` is READ from the block pool
+/// through the row's table (written earlier by a logically identical
+/// prefix), and the computed suffix K/V is written through the table
+/// IN PLACE.  With `start == 0` this is a full prefill that writes
+/// the pool directly (the cache-off paged path).
+///
+/// Bit-exactness contract with [`prefill_core`]: every float op
+/// applied to a computed row is row-local (embedding, rms_norm,
+/// per-token activation quant, GEMM rows, rope) or reads K/V values
+/// that are bit-identical wherever they live (cached history equals
+/// what a full prefill would have computed, by induction over
+/// layers), in the same order — the `s`-length masked-score buffer,
+/// softmax, and weighted-sum loops are copied from `prefill_core`
+/// verbatim.  So partial-prefill logits and written K/V rows equal
+/// the full prefill's at every computed position (pinned by
+/// `tests/properties.rs`).  Idle rows (empty table) are skipped;
+/// their logits stay zero.
+///
+/// NOTE on cost: the batched linear/MLP GEMMs still run over the full
+/// `[B*S, d]` bucket (they always have — padding rows included), so a
+/// prefix hit skips the attention/rope/KV work of the cached
+/// positions but not the GEMM FLOPs; `prefill_tokens_skipped` counts
+/// positions not recomputed, not wall-clock.  Compacting the computed
+/// rows into a dense matrix before the GEMMs would stay bit-exact
+/// (every op is row-local) and is the natural next optimization (see
+/// ROADMAP).
+///
+/// Returns `(logits f32[B, S, V], kv bytes written)`.
+#[allow(clippy::too_many_arguments)]
+fn prefill_core_paged(
+    info: &ModelInfo,
+    variant: &str,
+    group: usize,
+    b: usize,
+    s: usize,
+    tokens: &[i32],
+    lengths: &[i32],
+    starts: &[i32],
+    pool: &mut super::KvBlockPool,
+    tables: &[&[u32]],
+    w: &Weights,
+) -> Result<(Value, u64)> {
+    let quant_act = variant_quant_act(variant)?;
+    let nl = info.n_layers;
+    if tokens.len() != b * s
+        || lengths.len() != b
+        || starts.len() != b
+        || tables.len() != b
+    {
+        bail!(
+            "paged prefill wants tokens[{b},{s}] + \
+             lengths/starts/tables[{b}]"
+        );
+    }
+    if pool.n_layers != nl
+        || pool.n_heads != info.n_heads
+        || pool.head_dim != info.head_dim
+    {
+        bail!(
+            "block pool geometry (L={}, H={}, Dh={}) does not match \
+             model (L={nl}, H={}, Dh={})",
+            pool.n_layers,
+            pool.n_heads,
+            pool.head_dim,
+            info.n_heads,
+            info.head_dim
+        );
+    }
+    let (d, nh, dh) = (info.d_model, info.n_heads, info.head_dim);
+    let v = info.vocab;
+    let half = dh / 2;
+    let rows = b * s;
+    let active: Vec<bool> =
+        tables.iter().map(|t| !t.is_empty()).collect();
+    for bi in 0..b {
+        if !active[bi] {
+            continue;
+        }
+        let (len, start) = (lengths[bi], starts[bi]);
+        if len <= 0 || len as usize > s {
+            bail!("row {bi}: prompt length {len} outside 1..={s}");
+        }
+        if start < 0 || start >= len {
+            bail!(
+                "row {bi}: start {start} leaves no position to \
+                 compute for length {len}"
+            );
+        }
+        let (len, start) = (len as usize, start as usize);
+        for p in 0..len {
+            if pool.locate(tables[bi], p).is_none() {
+                bail!(
+                    "row {bi}: block table ({} blocks of {}) has no \
+                     page for position {p}",
+                    tables[bi].len(),
+                    pool.block_size
+                );
+            }
+        }
+        for p in start..len {
+            let t = tokens[bi * s + p];
+            if t < 0 || t as usize >= v {
+                bail!("token id {t} out of vocab range 0..{v}");
+            }
+        }
+    }
+
+    // embedding for the computed suffix rows only (other rows stay
+    // zero: no computed row ever reads them)
+    let mut x = vec![0f32; rows * d];
+    for bi in 0..b {
+        if !active[bi] {
+            continue;
+        }
+        for p in starts[bi] as usize..lengths[bi] as usize {
+            let r = bi * s + p;
+            x[r * d..(r + 1) * d]
+                .copy_from_slice(w.embed.row(tokens[r] as usize));
+        }
+    }
+
+    // rope tables per in-bucket position (== global position: every
+    // prompt starts at 0), identical to prefill_core's
+    let mut cos = vec![0f32; s * half];
+    let mut sin = vec![0f32; s * half];
+    for p in 0..s {
+        rope_row(
+            p as f32,
+            dh,
+            &mut cos[p * half..(p + 1) * half],
+            &mut sin[p * half..(p + 1) * half],
+        );
+    }
+
+    let scale_inv = 1.0 / (dh as f32).sqrt();
+    let bs = pool.block_size;
+    let row_stride = nh * dh;
+    let mut kv_bytes: u64 = 0;
+
+    for (li, lw) in w.layers.iter().enumerate() {
+        // ---- attention
+        let h2 = rms_norm(&x, rows, d, &lw.attn_norm);
+        let mut qkv = linear_group(
+            &h2,
+            &[&lw.wq, &lw.wk, &lw.wv],
+            quant_act,
+            group,
+        )?;
+        let vv = qkv.pop().unwrap();
+        let mut kk = qkv.pop().unwrap();
+        let mut qq = qkv.pop().unwrap();
+        for bi in 0..b {
+            if !active[bi] {
+                continue;
+            }
+            for p in starts[bi] as usize..lengths[bi] as usize {
+                let r = bi * s + p;
+                let c = &cos[p * half..(p + 1) * half];
+                let sn = &sin[p * half..(p + 1) * half];
+                apply_rope_row(qq.row_mut(r), nh, dh, c, sn);
+                apply_rope_row(kk.row_mut(r), nh, dh, c, sn);
+            }
+        }
+
+        // write the suffix K/V through the tables, then attend: the
+        // history 0..start is read from the pool, the suffix from the
+        // freshly computed rows — identical values either way
+        let (kc, vc) = pool.layer_mut(li);
+        let mut o2 = Tensor::<f32>::zeros(&[rows, d]);
+        let mut scores = vec![0f32; s];
+        for bi in 0..b {
+            if !active[bi] {
+                continue;
+            }
+            let table = tables[bi];
+            let (len_b, start) =
+                (lengths[bi] as usize, starts[bi] as usize);
+            // page address of (position, head 0); validated above
+            let locate = |q: usize| -> usize {
+                (table[q / bs] as usize * bs + q % bs) * row_stride
+            };
+            for p in start..len_b {
+                let dst = locate(p);
+                let r = bi * s + p;
+                for h in 0..nh {
+                    kc[dst + h * dh..dst + (h + 1) * dh].copy_from_slice(
+                        &kk.row(r)[h * dh..(h + 1) * dh],
+                    );
+                    vc[dst + h * dh..dst + (h + 1) * dh].copy_from_slice(
+                        &vv.row(r)[h * dh..(h + 1) * dh],
+                    );
+                }
+                kv_bytes += (2 * nh * dh * 4) as u64;
+            }
+            for qi in start..len_b {
+                let qr = bi * s + qi;
+                for h in 0..nh {
+                    let qh = &qq.row(qr)[h * dh..(h + 1) * dh];
+                    for (ki, sc) in scores.iter_mut().enumerate() {
+                        if ki <= qi && ki < len_b {
+                            let kh: &[f32] = if ki < start {
+                                let off = locate(ki) + h * dh;
+                                &kc[off..off + dh]
+                            } else {
+                                &kk.row(bi * s + ki)
+                                    [h * dh..(h + 1) * dh]
+                            };
+                            let mut dot = 0f32;
+                            for t in 0..dh {
+                                dot += qh[t] * kh[t];
+                            }
+                            *sc = dot * scale_inv;
+                        } else {
+                            *sc = NEG_INF;
+                        }
+                    }
+                    softmax_inplace(&mut scores);
+                    let orow = o2.row_mut(qr);
+                    let oh = &mut orow[h * dh..(h + 1) * dh];
+                    for (ki, &att) in scores.iter().enumerate() {
+                        if att == 0.0 {
+                            continue;
+                        }
+                        let vh: &[f32] = if ki < start {
+                            let off = locate(ki) + h * dh;
+                            &vc[off..off + dh]
+                        } else {
+                            &vv.row(bi * s + ki)[h * dh..(h + 1) * dh]
+                        };
+                        for t in 0..dh {
+                            oh[t] += att * vh[t];
+                        }
+                    }
+                }
+            }
+        }
+        let o_proj =
+            linear_group(&o2, &[&lw.wo], quant_act, group)?.remove(0);
+        for (xi, oi) in x.iter_mut().zip(o_proj.data().iter()) {
+            *xi += *oi;
+        }
+
+        // ---- MLP
+        let h2 = rms_norm(&x, rows, d, &lw.mlp_norm);
+        let mut gu = linear_group(
+            &h2,
+            &[&lw.w_gate, &lw.w_up],
+            quant_act,
+            group,
+        )?;
+        let up = gu.pop().unwrap();
+        let gate = gu.pop().unwrap();
+        let ff = gate.cols();
+        let mut act = Tensor::<f32>::zeros(&[rows, ff]);
+        for (a, (&g, &u)) in act
+            .data_mut()
+            .iter_mut()
+            .zip(gate.data().iter().zip(up.data().iter()))
+        {
+            *a = silu(g) * u;
+        }
+        let down =
+            linear_group(&act, &[&lw.w_down], quant_act, group)?.remove(0);
+        for (xi, di) in x.iter_mut().zip(down.data().iter()) {
+            *xi += *di;
+        }
+    }
+
+    // ---- head
+    let xf = rms_norm(&x, rows, d, &w.norm_f);
+    let logits = gemm_fp(&xf, &w.lm_head);
+    Ok((Value::f32(&[b, s, v], logits.into_vec()), kv_bytes))
+}
+
 /// Standalone GEMM graphs (the measured kernel benches).  Unstaged
 /// execution is parse-then-run of the EXACT staged dispatch
 /// (`parse_gemm_weights` + `run_gemm_staged`), so staged/unstaged
@@ -1690,6 +1966,59 @@ impl ExecBackend for NativeBackend {
         self.stats.staged_execs += 1;
         self.stats.paged_decode_steps += 1;
         self.stats.kv_bytes_moved += kv_bytes;
+        Ok(logits)
+    }
+
+    fn execute_prefill_paged(
+        &mut self,
+        staged: &StagedGraph,
+        tokens: &[i32],
+        lengths: &[i32],
+        starts: &[i32],
+        pool: &mut super::KvBlockPool,
+        tables: &[&[u32]],
+    ) -> Result<Value> {
+        // without the pjrt feature StagedHandle has a single variant and
+        // this destructuring is infallible; with it, reject foreign handles
+        #[allow(clippy::infallible_destructuring_match)]
+        let handle = match &staged.handle {
+            StagedHandle::Native(h) => h,
+            #[cfg(feature = "pjrt")]
+            _ => bail!(
+                "staged graph {} was staged by another backend",
+                staged.info.name
+            ),
+        };
+        let info = &staged.info;
+        let (minfo, group, weights) = match handle {
+            NativeStaged::Model { minfo, group, weights }
+                if info.kind == GraphKind::Prefill =>
+            {
+                (minfo, *group, weights)
+            }
+            _ => bail!(
+                "{}: paged execution needs a staged prefill graph",
+                info.name
+            ),
+        };
+        let (logits, _kv_bytes) = prefill_core_paged(
+            minfo,
+            &info.variant,
+            group,
+            info.batch,
+            info.seq,
+            tokens,
+            lengths,
+            starts,
+            pool,
+            tables,
+            weights,
+        )?;
+        self.stats.staged_execs += 1;
+        self.stats.paged_prefill_steps += 1;
+        // NOTE: kv_bytes_moved stays a DECODE-boundary metric (the
+        // contiguous baseline never counted prefill traffic), so the
+        // paged/contiguous per-step comparisons keep their meaning.
         Ok(logits)
     }
 

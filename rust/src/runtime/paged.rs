@@ -12,9 +12,17 @@
 //! boundary.
 //!
 //! The pool is pure storage + addressing: allocation policy (free
-//! lists, preemption) lives in [`crate::coordinator::kv`], and the
-//! attention gather that READS through a block table lives in the
-//! execution backends ([`super::ExecBackend::execute_decode_paged`]).
+//! lists, refcounts, the prefix index, preemption) lives in
+//! [`crate::coordinator::kv`], and the attention gather that READS
+//! through a block table lives in the execution backends
+//! ([`super::ExecBackend::execute_decode_paged`],
+//! [`super::ExecBackend::execute_prefill_paged`]).  Because a block
+//! can be SHARED by several tables (refcounted prefix cache), the
+//! pool also provides the copy-on-write primitive
+//! ([`KvBlockPool::copy_block`]) and a range-restricted scatter
+//! ([`KvBlockPool::scatter_row_from`]) so a partial prefill can
+//! install its computed suffix without touching the shared history
+//! blocks before it.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -84,6 +92,24 @@ impl KvBlockPool {
         (&self.k[layer], &self.v[layer])
     }
 
+    /// Copy every layer's K and V rows of block `src` into block `dst`
+    /// — the copy-on-write fork primitive: a sharer about to write into
+    /// a shared block clones it first so the other holders never
+    /// observe the write.
+    pub fn copy_block(&mut self, src: u32, dst: u32) {
+        let n = self.block_numel();
+        let (s, d) = (src as usize * n, dst as usize * n);
+        assert!(
+            (src as usize) < self.n_blocks
+                && (dst as usize) < self.n_blocks,
+            "copy_block outside pool"
+        );
+        for l in 0..self.n_layers {
+            self.k[l].copy_within(s..s + n, d);
+            self.v[l].copy_within(s..s + n, d);
+        }
+    }
+
     /// Scatter one sequence row from contiguous `[H, max_seq, Dh]`
     /// cache layout (positions `0..len`) into the sequence's pages.
     pub fn scatter_row(
@@ -95,12 +121,29 @@ impl KvBlockPool {
         k_row: &[f32],
         v_row: &[f32],
     ) -> Result<()> {
+        self.scatter_row_from(layer, table, 0, len, max_seq, k_row, v_row)
+    }
+
+    /// Scatter positions `from..len` only (the partial-prefill install:
+    /// positions before `from` belong to a cached — possibly shared —
+    /// prefix that must not be rewritten).
+    #[allow(clippy::too_many_arguments)]
+    pub fn scatter_row_from(
+        &mut self,
+        layer: usize,
+        table: &[u32],
+        from: usize,
+        len: usize,
+        max_seq: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) -> Result<()> {
         let (nh, dh) = (self.n_heads, self.head_dim);
         if k_row.len() < nh * max_seq * dh || v_row.len() < nh * max_seq * dh
         {
             bail!("scatter_row: source rows shorter than [H, max_seq, Dh]");
         }
-        for p in 0..len {
+        for p in from..len {
             let dst = self.locate(table, p).ok_or_else(|| {
                 anyhow!("scatter_row: no block for position {p}")
             })?;
@@ -207,6 +250,48 @@ mod tests {
         let row = vec![0f32; 2 * 16 * 4];
         // len 5 needs two blocks, table has one
         assert!(p.scatter_row(0, &[2], 5, 16, &row, &row).is_err());
+    }
+
+    #[test]
+    fn copy_block_clones_all_layers() {
+        let mut p = pool();
+        let max_seq = 16;
+        let n = 2 * max_seq * 4;
+        let k_row: Vec<f32> = (0..n).map(|i| i as f32 + 1.0).collect();
+        let v_row: Vec<f32> = (0..n).map(|i| -(i as f32) - 1.0).collect();
+        for l in 0..2 {
+            p.scatter_row(l, &[2], 4, max_seq, &k_row, &v_row).unwrap();
+        }
+        p.copy_block(2, 5);
+        for l in 0..2 {
+            let (gk, gv) = p.gather_row(l, &[5], 4, max_seq).unwrap();
+            let (ok, ov) = p.gather_row(l, &[2], 4, max_seq).unwrap();
+            assert_eq!(gk, ok, "layer {l} K clone");
+            assert_eq!(gv, ov, "layer {l} V clone");
+        }
+    }
+
+    #[test]
+    fn scatter_from_preserves_prefix() {
+        let mut p = pool();
+        let max_seq = 16;
+        let n = 2 * max_seq * 4;
+        let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..n).map(|i| 1000.0 + i as f32).collect();
+        let table = [1u32, 4];
+        // full write of a, then a partial overwrite of b from pos 5
+        p.scatter_row(0, &table, 7, max_seq, &a, &a).unwrap();
+        p.scatter_row_from(0, &table, 5, 7, max_seq, &b, &b).unwrap();
+        let (gk, _) = p.gather_row(0, &table, 7, max_seq).unwrap();
+        for h in 0..2 {
+            for pos in 0..7 {
+                for t in 0..4 {
+                    let i = (h * max_seq + pos) * 4 + t;
+                    let want = if pos < 5 { a[i] } else { b[i] };
+                    assert_eq!(gk[i], want, "h{h} pos{pos}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -421,6 +421,88 @@ impl ExecBackend for PjrtBackend {
         Ok(outs.swap_remove(0))
     }
 
+    /// Paged/partial prefill on PJRT, as a compatibility shim: the AOT
+    /// prefill artifact computes every prompt position from the tokens
+    /// alone (it has no history input), so the staged graph runs in
+    /// full and only the suffix rows `starts[bi]..lengths[bi]` scatter
+    /// back into the pool — the cached history positions are left
+    /// untouched (they may live in SHARED blocks), and the recomputed
+    /// values are bit-identical to what already sits there.  No
+    /// prefill FLOPs are saved on this backend; a true partial-prefill
+    /// HLO artifact would take a start offset + gathered history.
+    fn execute_prefill_paged(
+        &mut self,
+        staged: &StagedGraph,
+        tokens: &[i32],
+        lengths: &[i32],
+        starts: &[i32],
+        pool: &mut super::KvBlockPool,
+        tables: &[&[u32]],
+    ) -> Result<Value> {
+        let info = &staged.info;
+        if info.kind != GraphKind::Prefill {
+            bail!("{}: paged prefill needs a prefill graph", info.name);
+        }
+        let (b, s) = (info.batch, info.seq);
+        if tokens.len() != b * s
+            || lengths.len() != b
+            || starts.len() != b
+            || tables.len() != b
+        {
+            bail!(
+                "{}: paged prefill wants tokens[{b},{s}] + \
+                 lengths/starts/tables of batch {b}",
+                info.name
+            );
+        }
+        let nl = pool.n_layers;
+        // cache geometry from the first cache OUTPUT spec [B,H,Smax,Dh]
+        let cache_spec = info.outputs.get(1).ok_or_else(|| {
+            anyhow!("{}: prefill graph lists no cache outputs", info.name)
+        })?;
+        if cache_spec.shape.len() != 4 {
+            bail!(
+                "{}: cache output {} is not rank-4",
+                info.name,
+                cache_spec.name
+            );
+        }
+        let smax = cache_spec.shape[2];
+        let row_len = pool.n_heads * smax * pool.head_dim;
+
+        let tok_l = Value::i32(&[b, s], tokens.to_vec());
+        let len_l = Value::i32(&[b], lengths.to_vec());
+        let outs = self.execute_staged(staged, &[&tok_l, &len_l])?;
+        if outs.len() != 1 + 2 * nl {
+            bail!("{}: prefill returned {} outputs", info.name, outs.len());
+        }
+
+        // scatter ONLY the computed suffix back; history stays put
+        for l in 0..nl {
+            let kc = outs[1 + l].as_slice::<f32>()?;
+            let vc = outs[1 + nl + l].as_slice::<f32>()?;
+            for bi in 0..b {
+                if tables[bi].is_empty() {
+                    continue;
+                }
+                let (len, start) =
+                    (lengths[bi] as usize, starts[bi] as usize);
+                pool.scatter_row_from(
+                    l,
+                    tables[bi],
+                    start,
+                    len,
+                    smax,
+                    &kc[bi * row_len..(bi + 1) * row_len],
+                    &vc[bi * row_len..(bi + 1) * row_len],
+                )?;
+            }
+        }
+        self.stats.paged_prefill_steps += 1;
+        let mut outs = outs;
+        Ok(outs.swap_remove(0))
+    }
+
     fn staging_stats(&self) -> StagingStats {
         self.stats
     }

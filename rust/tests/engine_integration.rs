@@ -410,6 +410,14 @@ fn paged_engine_preempts_and_completes_under_tiny_pool() {
             m.completed + m.preempted,
             "every admission either completed or was preempted"
         );
+        // donated prompt prefixes stay parked in the prefix index at
+        // drain; beyond those, nothing may be held
+        assert_eq!(
+            engine.kv_blocks_in_use(),
+            engine.kv_prefix_index_blocks(),
+            "drained engine may hold index blocks only"
+        );
+        engine.flush_prefix_cache();
         assert_eq!(
             engine.kv_blocks_in_use(),
             0,
@@ -434,6 +442,198 @@ fn paged_engine_preempts_and_completes_under_tiny_pool() {
             pt, ct,
             "preemption + re-prefill must reproduce identical streams"
         );
+    });
+}
+
+#[test]
+fn prefix_cache_engine_bit_identical_with_fewer_blocks() {
+    // the PR 4 acceptance run: 8 requests sharing one long prompt
+    // (prefill bucket of 1, so request 0 prefills cold and donates;
+    // requests 1..8 hit the index).  With the cache on, token streams
+    // must be bit-identical to ODYSSEY_NO_PREFIX_CACHE=1, while
+    // allocating strictly fewer KV blocks and skipping >= 50% of the
+    // batch's prefill tokens; at drain the only blocks still held are
+    // the index's, and flushing it releases every one.
+    with_engine(|_shared| {
+        let shared_prompt = prompt(11, 16); // 4 full 4-token blocks
+        let run = |prefix: bool| {
+            let mut o = opts("fp");
+            o.paged = true; // explicit: survives the NO_PAGING CI leg
+            o.staging = true;
+            o.prefix_cache = prefix;
+            o.prefill_batch = 1;
+            o.kv_block_size = 4;
+            o.kv_blocks = Some(28);
+            o.max_queue = 16;
+            let mut engine = Engine::new(o).unwrap();
+            assert_eq!(engine.prefix_cache_active(), prefix);
+            for i in 0..8u64 {
+                engine.submit(Request::new(
+                    i,
+                    shared_prompt.clone(),
+                    GenParams {
+                        max_new_tokens: 6,
+                        eos: None,
+                        ..Default::default()
+                    },
+                ));
+            }
+            let mut results = engine.run_until_idle().unwrap();
+            results.sort_by_key(|r| r.id);
+            let tokens: Vec<Vec<i32>> =
+                results.into_iter().map(|r| r.tokens).collect();
+            (tokens, engine)
+        };
+
+        let (on_tokens, mut on) = run(true);
+        let (off_tokens, off) = run(false);
+
+        assert_eq!(
+            on_tokens, off_tokens,
+            "prefix-cache serving must be bit-identical to cache-off"
+        );
+        assert_eq!(on_tokens.len(), 8);
+        assert!(on_tokens.iter().all(|t| t.len() == 6));
+
+        // no preemption at this pool size: the counters reconcile
+        // exactly against the prompt lengths
+        let m = &on.metrics;
+        assert_eq!(m.preempted, 0, "pool sized to avoid preemption");
+        assert_eq!(m.prefix_hits, 7, "requests 1..8 hit");
+        assert_eq!(
+            m.prefill_tokens_skipped,
+            7 * 15,
+            "each full hit skips prompt_len - 1 positions"
+        );
+        assert_eq!(m.prefill_tokens, 8 * 16);
+        assert!(
+            m.prefill_tokens_skipped * 2 >= m.prefill_tokens,
+            ">= 50% of the repeated-prompt batch's prefill skipped"
+        );
+        assert!(m.cow_forks >= 7, "every full hit forks the tail");
+        assert!(m.shared_blocks >= 2, "prefix blocks were shared");
+        let off_m = &off.metrics;
+        assert_eq!(off_m.prefix_hits, 0);
+        assert_eq!(off_m.prefill_tokens_skipped, 0);
+        assert!(
+            m.kv_blocks_allocated < off_m.kv_blocks_allocated,
+            "cache on allocated {} blocks, cache off {} — sharing \
+             must allocate strictly fewer",
+            m.kv_blocks_allocated,
+            off_m.kv_blocks_allocated
+        );
+
+        // every prefill ran through the paged/partial entry point
+        let stats = on.staging_stats();
+        assert_eq!(
+            stats.paged_prefill_steps,
+            on.metrics.prefill_steps
+        );
+
+        // drain accounting: only the index still holds blocks; the
+        // flush releases every one (0 leaked)
+        assert_eq!(
+            on.kv_blocks_in_use(),
+            on.kv_prefix_index_blocks(),
+            "drained engine may hold index blocks only"
+        );
+        on.flush_prefix_cache();
+        assert_eq!(on.kv_blocks_in_use(), 0, "0 blocks leaked");
+        assert_eq!(off.kv_blocks_in_use(), 0);
+    });
+}
+
+#[test]
+fn prefix_cache_survives_preemption_of_sharers() {
+    // shared-prefix requests over a pool too small for four full
+    // sequences: preemption must fire, evicted sharers must release
+    // only their private tails (the index and live sharers keep the
+    // prefix blocks), and the streams must STILL be bit-identical to
+    // the cache-off run on the same tiny pool.
+    with_engine(|_shared| {
+        let shared_prompt = prompt(23, 16);
+        let run = |prefix: bool| {
+            let mut o = opts("fp");
+            o.paged = true;
+            o.staging = true;
+            o.prefix_cache = prefix;
+            o.prefill_batch = 1;
+            o.kv_block_size = 4;
+            o.kv_blocks = Some(12);
+            o.max_queue = 16;
+            let mut engine = Engine::new(o).unwrap();
+            for i in 0..8u64 {
+                engine.submit(Request::new(
+                    i,
+                    shared_prompt.clone(),
+                    GenParams {
+                        max_new_tokens: 6,
+                        eos: None,
+                        ..Default::default()
+                    },
+                ));
+            }
+            let mut results = engine.run_until_idle().unwrap();
+            results.sort_by_key(|r| r.id);
+            let tokens: Vec<Vec<i32>> =
+                results.into_iter().map(|r| r.tokens).collect();
+            (tokens, engine)
+        };
+
+        let (on_tokens, mut on) = run(true);
+        let (off_tokens, _off) = run(false);
+
+        assert_eq!(
+            on_tokens, off_tokens,
+            "preemption + re-prefill over shared prefixes must \
+             reproduce identical streams"
+        );
+        assert_eq!(on_tokens.len(), 8, "every request completes");
+        assert!(on_tokens.iter().all(|t| t.len() == 6));
+
+        let m = &on.metrics;
+        assert!(
+            m.preempted >= 1,
+            "a 12-block pool must force at least one preemption"
+        );
+        assert_eq!(m.rejected, 0);
+        assert_eq!(m.completed, 8);
+        assert_eq!(
+            m.admitted,
+            m.completed + m.preempted,
+            "every admission either completed or was preempted"
+        );
+        assert!(m.prefix_hits >= 7, "sharers kept hitting the index");
+
+        // eviction released only private tails: the index blocks all
+        // survived to the drain, and nothing beyond them is held
+        assert_eq!(
+            on.kv_blocks_in_use(),
+            on.kv_prefix_index_blocks()
+        );
+        on.flush_prefix_cache();
+        assert_eq!(on.kv_blocks_in_use(), 0, "0 blocks leaked");
+    });
+}
+
+#[test]
+fn no_prefix_cache_env_var_flips_the_default() {
+    // same serialization rationale as the staging/paging twins below
+    with_engine(|_shared| {
+        let saved = std::env::var("ODYSSEY_NO_PREFIX_CACHE").ok();
+        std::env::remove_var("ODYSSEY_NO_PREFIX_CACHE");
+        let on_by_default =
+            odyssey::runtime::prefix_cache_enabled_from_env();
+        std::env::set_var("ODYSSEY_NO_PREFIX_CACHE", "1");
+        let off = odyssey::runtime::prefix_cache_enabled_from_env();
+        let opts_off = EngineOptions::default().prefix_cache;
+        match saved {
+            Some(v) => std::env::set_var("ODYSSEY_NO_PREFIX_CACHE", v),
+            None => std::env::remove_var("ODYSSEY_NO_PREFIX_CACHE"),
+        }
+        assert!(on_by_default, "prefix cache must default on");
+        assert!(!off, "ODYSSEY_NO_PREFIX_CACHE=1 must disable it");
+        assert!(!opts_off, "EngineOptions::default must honor the env");
     });
 }
 

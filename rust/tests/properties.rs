@@ -234,9 +234,10 @@ fn prop_block_allocator_conserves_and_recycles() {
 }
 
 /// Random admit / extend+advance / release interleavings on the paged
-/// manager: every block is on the free list or in exactly one table,
-/// extension only refuses when the pool is truly dry, and a drained
-/// manager returns every block.
+/// manager (unique prompts — no sharing here; the prefix-cache fuzz
+/// below covers that): every block is on the free list or in exactly
+/// one table, extension only refuses when the pool is truly dry, and a
+/// drained manager returns every block.
 #[test]
 fn prop_paged_kv_lifecycle_never_leaks_blocks() {
     Prop::new("paged kv lifecycle").cases(30).check(|rng| {
@@ -247,17 +248,24 @@ fn prop_paged_kv_lifecycle_never_leaks_blocks() {
             match rng.next_u64() % 3 {
                 0 => {
                     let plen = 1 + (rng.next_u64() % 16) as usize;
-                    match kv.alloc_seq(step, plen) {
-                        Some(slot) => {
+                    // unique tokens per admission -> index never hits
+                    let prompt: Vec<i32> = (0..plen as i32)
+                        .map(|i| 1000 * (step as i32 + 1) + i)
+                        .collect();
+                    match kv.alloc_seq(step, &prompt) {
+                        Some(a) => {
+                            assert_eq!(a.start, 0, "unique prompts miss");
+                            let slot = a.slot;
                             assert!(
                                 live.iter().all(|&(s, _)| s != slot),
                                 "slot {slot} double-assigned"
                             );
+                            kv.finish_prefill(slot, plen).unwrap();
                             live.push((slot, step));
                         }
                         None => assert!(
                             kv.free_slots() == 0
-                                || kv.free_blocks()
+                                || kv.available_blocks()
                                     < kv.blocks_for(plen),
                             "admission refused with capacity"
                         ),
@@ -298,6 +306,308 @@ fn prop_paged_kv_lifecycle_never_leaks_blocks() {
         }
         assert_eq!(kv.free_blocks(), blocks, "blocks leaked");
         kv.check_conservation().unwrap();
+    });
+}
+
+/// The PR 4 tentpole fuzz: random interleavings of
+/// admit-with-shared-prefix / decode-with-CoW-fork / fork_seq / free /
+/// index-evict on the refcounted prefix cache.  After EVERY op,
+/// `check_conservation` proves `free + Σ refcounted-unique == pool
+/// size` with each block's refcount equal to its reachable holds
+/// (tables + index) — no leak, no double free — and every write
+/// target is PRIVATE (refcount 1) after the write path runs, so no
+/// block is reachable from two tables once a fork writes.
+#[test]
+fn prop_prefix_cache_refcount_conservation() {
+    Prop::new("prefix cache refcount conservation").cases(25).check(
+        |rng| {
+            let blocks = 10 + (rng.next_u64() % 22) as usize;
+            let bs = 4usize;
+            let max_seq = 64usize;
+            let cap = 4 + (rng.next_u64() % 16) as usize;
+            let mut kv = PagedKv::new(4, 2, 2, max_seq, 4, bs, blocks)
+                .with_prefix_cap(cap);
+            // prompt family: 3 stems; admissions take a stem prefix
+            // (shared) plus an optional private tail token
+            let stems: Vec<Vec<i32>> = (0..3i32)
+                .map(|s| (0..24).map(|i| 100 * (s + 1) + i).collect())
+                .collect();
+            let mut live: Vec<(usize, u64)> = Vec::new();
+            for step in 0..300u64 {
+                match rng.next_u64() % 8 {
+                    // admit with a (likely shared) prefix, then do what
+                    // the engine does: prefill + donate
+                    0 | 1 | 2 => {
+                        let stem =
+                            &stems[(rng.next_u64() % 3) as usize];
+                        let take =
+                            4 + (rng.next_u64() % 21) as usize;
+                        let mut prompt: Vec<i32> =
+                            stem[..take.min(stem.len())].to_vec();
+                        if rng.next_f64() < 0.3 {
+                            prompt.push(-(step as i32) - 1);
+                        }
+                        let plen = prompt.len();
+                        match kv.alloc_seq(step, &prompt) {
+                            Some(a) => {
+                                assert!(
+                                    a.start < plen,
+                                    "one position is always recomputed"
+                                );
+                                assert!(live
+                                    .iter()
+                                    .all(|&(s, _)| s != a.slot));
+                                // prefill writes start..plen through
+                                // the table: every touched block must
+                                // be private after admission
+                                for idx in (a.start / bs)
+                                    ..kv.blocks_for(plen)
+                                {
+                                    let b = kv.table(a.slot)[idx];
+                                    assert_eq!(
+                                        kv.ref_count(b),
+                                        1,
+                                        "prefill write range must be \
+                                         private (block {b})"
+                                    );
+                                }
+                                kv.finish_prefill(a.slot, plen)
+                                    .unwrap();
+                                kv.donate_prefix(a.slot, &prompt);
+                                live.push((a.slot, step));
+                            }
+                            None => assert!(
+                                !kv.admission_feasible(&prompt, 0),
+                                "admission refused although feasible \
+                                 (feasible <=> success is exact)"
+                            ),
+                        }
+                    }
+                    // decode write: growth + CoW forks of shared tails
+                    3 | 4 => {
+                        if !live.is_empty() {
+                            let i = (rng.next_u64()
+                                % live.len() as u64)
+                                as usize;
+                            let (slot, _) = live[i];
+                            if kv.pos(slot) + 2 < max_seq {
+                                if kv.ensure_write_capacity(slot) {
+                                    let b = kv.table(slot)
+                                        [kv.pos(slot) / bs];
+                                    assert_eq!(
+                                        kv.ref_count(b),
+                                        1,
+                                        "write target must be private \
+                                         after the CoW path"
+                                    );
+                                    kv.advance(slot).unwrap();
+                                } else {
+                                    assert_eq!(
+                                        kv.available_blocks(),
+                                        0,
+                                        "write refused with \
+                                         reclaimable capacity"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                    // fork a live sequence (parallel-sampling shape):
+                    // twins share every block until a write splits them
+                    5 => {
+                        if !live.is_empty() {
+                            let i = (rng.next_u64()
+                                % live.len() as u64)
+                                as usize;
+                            let (slot, _) = live[i];
+                            if let Some(twin) =
+                                kv.fork_seq(slot, 100_000 + step)
+                            {
+                                assert_eq!(
+                                    kv.table(twin),
+                                    kv.table(slot),
+                                    "twins share every block"
+                                );
+                                live.push((twin, 100_000 + step));
+                            }
+                        }
+                    }
+                    // free (completion / preemption): releases only
+                    // this sequence's holds
+                    6 => {
+                        if !live.is_empty() {
+                            let i = (rng.next_u64()
+                                % live.len() as u64)
+                                as usize;
+                            let (slot, _) = live.swap_remove(i);
+                            kv.free_seq(slot);
+                        }
+                    }
+                    // explicit index eviction
+                    _ => {
+                        let _ = kv.reclaim_index_lru();
+                    }
+                }
+                kv.check_conservation().unwrap_or_else(|e| {
+                    panic!("conservation broke at step {step}: {e}")
+                });
+                assert!(
+                    kv.prefix_index_blocks() <= cap,
+                    "index cap violated"
+                );
+            }
+            // drain: free everything and flush the index — the pool
+            // must come back whole
+            for (slot, _) in live.drain(..) {
+                kv.free_seq(slot);
+            }
+            kv.flush_prefix_index();
+            assert_eq!(kv.free_blocks(), blocks, "blocks leaked");
+            kv.check_conservation().unwrap();
+        },
+    );
+}
+
+/// Partial prefill (prefix-cache suffix computation) must be
+/// BIT-IDENTICAL to the full staged prefill: run a full paged prefill
+/// of a prompt, donate nothing — instead re-run the SAME prompt as a
+/// partial prefill over a second table whose prefix blocks are the
+/// first run's, for every variant.  Logits at every computed position
+/// and the K/V written through the tables must match exactly.
+#[test]
+fn prop_partial_prefill_bit_identical_to_full() {
+    synth::ensure_artifacts("artifacts").expect("synthesize artifacts");
+    Prop::new("partial == full (prefill)").cases(2).check(|rng| {
+        let mut rt =
+            Runtime::with_backend("artifacts", BackendKind::Native)
+                .unwrap();
+        let info = rt.manifest.model("tiny3m").unwrap().clone();
+        let group = rt.manifest.group_size;
+        let (nl, nh, dh) = (info.n_layers, info.n_heads, info.head_dim);
+        let smax = info.max_seq;
+        for variant in ["fp", "w8a8", "w4a8_fast"] {
+            let ckpt = random_checkpoint(&info, rng);
+            let qw = model::quantize_checkpoint(
+                &ckpt,
+                None,
+                &QuantRecipe::vanilla_w4(),
+                variant,
+                group,
+            )
+            .unwrap();
+            let weights: Vec<runtime::Literal> = qw
+                .tensors
+                .iter()
+                .map(|t| runtime::literal_from_st(t).unwrap())
+                .collect();
+            let pairs: Vec<(&str, &runtime::Literal)> = qw
+                .names
+                .iter()
+                .map(String::as_str)
+                .zip(weights.iter())
+                .collect();
+            let graph = format!("tiny3m_{variant}_prefill_b1");
+            let gi = rt.manifest.graph(&graph).unwrap().clone();
+            let (b, s) = (gi.batch, gi.seq);
+            assert_eq!(b, 1);
+            let staged = rt.stage(&graph, &pairs).unwrap();
+
+            // random prompt spanning >= 2 blocks; random block-aligned
+            // split point for the partial run (capped to plen-1, so an
+            // aligned full hit exercises the recompute-last-position
+            // shape the engine's CoW tail fork produces)
+            let bs_kv = 4usize;
+            let plen = 9 + (rng.next_u64() % 10) as usize; // 9..=18
+            let n_full = plen / bs_kv;
+            let start = bs_kv
+                * (1 + (rng.next_u64() % n_full.max(1) as u64)
+                    as usize)
+                .min(n_full);
+            // keep at least one computed position
+            let start = start.min(plen - 1);
+            let mut tokens = vec![0i32; b * s];
+            for t in tokens.iter_mut().take(plen) {
+                *t = rng.range(3, info.vocab as i64 - 1) as i32;
+            }
+            let lengths = [plen as i32];
+
+            // FULL paged prefill into pool A (reference)
+            let n_blocks = 16usize;
+            let need = plen.div_ceil(bs_kv);
+            let table_a: Vec<u32> = (0..need as u32).collect();
+            let mut pool_a =
+                KvBlockPool::new(n_blocks, bs_kv, nl, nh, dh);
+            let full_logits = rt
+                .run_prefill_paged(
+                    &staged,
+                    &tokens,
+                    &lengths,
+                    &[0],
+                    &mut pool_a,
+                    &[&table_a],
+                )
+                .unwrap()
+                .to_vec::<f32>()
+                .unwrap();
+
+            // PARTIAL prefill into pool B: history blocks share pool
+            // A's content (scattered over shuffled ids), suffix
+            // computed fresh
+            let mut ids: Vec<u32> = (0..n_blocks as u32).collect();
+            for i in (1..ids.len()).rev() {
+                let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+                ids.swap(i, j);
+            }
+            let table_b: Vec<u32> = ids[..need].to_vec();
+            let mut pool_b =
+                KvBlockPool::new(n_blocks, bs_kv, nl, nh, dh);
+            for l in 0..nl {
+                let (kr, vr) = pool_a
+                    .gather_row(l, &table_a, start, smax)
+                    .unwrap();
+                pool_b
+                    .scatter_row(l, &table_b, start, smax, &kr, &vr)
+                    .unwrap();
+            }
+            let partial_logits = rt
+                .run_prefill_paged(
+                    &staged,
+                    &tokens,
+                    &lengths,
+                    &[start as i32],
+                    &mut pool_b,
+                    &[&table_b],
+                )
+                .unwrap()
+                .to_vec::<f32>()
+                .unwrap();
+
+            // logits at every COMPUTED position must match bit for bit
+            let v = info.vocab;
+            for p in start..plen {
+                assert!(
+                    full_logits[p * v..(p + 1) * v]
+                        == partial_logits[p * v..(p + 1) * v],
+                    "{variant} pos {p}: partial-prefill logits differ \
+                     (start={start}, plen={plen})"
+                );
+            }
+            // the K/V written through both tables must agree at every
+            // prompt position
+            for l in 0..nl {
+                let (ka, va) = pool_a
+                    .gather_row(l, &table_a, plen, smax)
+                    .unwrap();
+                let (kb, vb) = pool_b
+                    .gather_row(l, &table_b, plen, smax)
+                    .unwrap();
+                assert!(
+                    ka == kb && va == vb,
+                    "{variant} layer {l}: partial-prefill K/V differs \
+                     (start={start}, plen={plen})"
+                );
+            }
+        }
     });
 }
 
