@@ -332,6 +332,128 @@ fn main() {
         off_s,
         on_s,
     );
+    // ---- iteration-level scheduler: long prompt + active decodes.
+    // Three short requests decode while a long prompt arrives; with
+    // chunking the prompt advances chunk-by-chunk under the step
+    // token budget and NO decode slot ever stalls, while the legacy
+    // two-phase loop stalls every active behind the whole-prompt
+    // prefill.  Streams must be bit-identical; the TTFT/ITL
+    // percentiles (in engine steps) and the worst decode stall land
+    // in the BENCH json so the chunking tradeoff is visible in the
+    // perf trajectory.  ODYSSEY_STEP_TOKEN_BUDGET sweeps the budget
+    // (CI runs a small and a large leg).
+    let budget_tokens = odyssey::runtime::step_token_budget_from_env()
+        .unwrap_or(16);
+    let long_prompt: Vec<i32> =
+        (0..96).map(|i| 3 + (i * 11) % 500).collect();
+    let run_sched = |chunking: bool| {
+        let mut o = EngineOptions {
+            variant: "fp".into(),
+            recipe: QuantRecipe::vanilla_w4(),
+            max_queue: 16,
+            ..Default::default()
+        };
+        o.paged = true;
+        o.staging = true;
+        o.chunking = chunking;
+        o.step_token_budget = budget_tokens;
+        o.kv_block_size = 4;
+        let mut engine = Engine::new(o).expect("engine");
+        for i in 0..3u64 {
+            engine.submit(Request::new(
+                i,
+                (0..8).map(|j| 3 + (i as i32 * 7 + j) % 500).collect(),
+                GenParams {
+                    max_new_tokens: 24,
+                    eos: None,
+                    ..Default::default()
+                },
+            ));
+        }
+        engine.step().expect("warmup step");
+        engine.step().expect("warmup step");
+        engine.submit(Request::new(
+            10,
+            long_prompt.clone(),
+            GenParams { max_new_tokens: 4, eos: None, ..Default::default() },
+        ));
+        let t0 = std::time::Instant::now();
+        let mut results = engine.run_until_idle().expect("drain");
+        let dt = t0.elapsed().as_secs_f64();
+        results.sort_by_key(|r| r.id);
+        let tokens: Vec<Vec<i32>> =
+            results.iter().map(|r| r.tokens.clone()).collect();
+        (tokens, engine, dt)
+    };
+    let (sched_on_tokens, mut sched_on, sched_on_s) = run_sched(true);
+    let (sched_off_tokens, mut sched_off, sched_off_s) = run_sched(false);
+    assert_eq!(
+        sched_on_tokens, sched_off_tokens,
+        "chunked scheduling must not change token streams"
+    );
+    assert!(
+        sched_on.metrics.max_decode_stall_steps
+            < sched_off.metrics.max_decode_stall_steps.max(1),
+        "chunking must improve the worst decode stall \
+         ({} vs {} steps)",
+        sched_on.metrics.max_decode_stall_steps,
+        sched_off.metrics.max_decode_stall_steps
+    );
+    let (on_ttft_p50, on_ttft_p95) = sched_on.metrics.ttft_steps_pcts();
+    let (on_itl_p50, on_itl_p95) = sched_on.metrics.itl_steps_pcts();
+    let (off_ttft_p50, off_ttft_p95) =
+        sched_off.metrics.ttft_steps_pcts();
+    let (off_itl_p50, off_itl_p95) = sched_off.metrics.itl_steps_pcts();
+    println!(
+        "chunked sched (budget {budget_tokens}): stall {} -> {} steps, \
+         ttft p50/p95 {:.1}/{:.1} -> {:.1}/{:.1} steps, itl p50/p95 \
+         {:.1}/{:.1} -> {:.1}/{:.1} steps (drain {:.3}s -> {:.3}s)\n",
+        sched_off.metrics.max_decode_stall_steps,
+        sched_on.metrics.max_decode_stall_steps,
+        off_ttft_p50,
+        off_ttft_p95,
+        on_ttft_p50,
+        on_ttft_p95,
+        off_itl_p50,
+        off_itl_p95,
+        on_itl_p50,
+        on_itl_p95,
+        sched_off_s,
+        sched_on_s,
+    );
+    let bench = Json::obj(vec![
+        ("bench", Json::Str("chunked_sched".into())),
+        ("variant", Json::Str("fp".into())),
+        ("step_token_budget", Json::Num(budget_tokens as f64)),
+        (
+            "max_decode_stall_steps_chunked",
+            Json::Num(sched_on.metrics.max_decode_stall_steps as f64),
+        ),
+        (
+            "max_decode_stall_steps_legacy",
+            Json::Num(sched_off.metrics.max_decode_stall_steps as f64),
+        ),
+        ("ttft_steps_p50_chunked", Json::Num(on_ttft_p50)),
+        ("ttft_steps_p95_chunked", Json::Num(on_ttft_p95)),
+        ("ttft_steps_p50_legacy", Json::Num(off_ttft_p50)),
+        ("ttft_steps_p95_legacy", Json::Num(off_ttft_p95)),
+        ("itl_steps_p50_chunked", Json::Num(on_itl_p50)),
+        ("itl_steps_p95_chunked", Json::Num(on_itl_p95)),
+        ("itl_steps_p50_legacy", Json::Num(off_itl_p50)),
+        ("itl_steps_p95_legacy", Json::Num(off_itl_p95)),
+        (
+            "engine_steps_chunked",
+            Json::Num(sched_on.metrics.engine_steps as f64),
+        ),
+        (
+            "engine_steps_legacy",
+            Json::Num(sched_off.metrics.engine_steps as f64),
+        ),
+        ("drain_s_chunked", Json::Num(sched_on_s)),
+        ("drain_s_legacy", Json::Num(sched_off_s)),
+    ]);
+    println!("BENCH {}", bench.emit());
+
     let bench = Json::obj(vec![
         ("bench", Json::Str("prefix_cache".into())),
         ("variant", Json::Str("fp".into())),

@@ -106,6 +106,18 @@ SERVING FLAGS (generate / serve):
                                ODYSSEY_NO_PREFIX_CACHE=1 also honored)
   --prefix-cache-cap N         LRU cap on prefix-index entries
                                (default: the pool size)
+  --no-chunking                legacy two-phase loop escape hatch
+                               (default is the iteration-level
+                               scheduler with chunked prefill; env
+                               ODYSSEY_NO_CHUNKING=1 also honored)
+  --step-token-budget N        tokens per fused engine iteration: one
+                               decode token per active sequence first,
+                               the rest feeds block-aligned prefill
+                               chunks (default 64; env
+                               ODYSSEY_STEP_TOKEN_BUDGET also honored)
+  --max-prompt N               admitted-prompt cap (default: the
+                               prefill graph's seq bucket; validated
+                               against it at engine construction)
 ";
 
 /// Paged-KV engine options shared by `generate` and `serve`.
@@ -132,6 +144,20 @@ pub fn parse_kv_flags(
             anyhow!("--prefix-cache-cap expects an integer")
         })?;
         opts.prefix_cache_cap = Some(n);
+    }
+    if args.has("no-chunking") {
+        opts.chunking = false;
+    }
+    opts.step_token_budget =
+        args.get_usize("step-token-budget", opts.step_token_budget)?;
+    if opts.step_token_budget == 0 {
+        return Err(anyhow!("--step-token-budget must be at least 1"));
+    }
+    if let Some(n) = args.get("max-prompt") {
+        let n: usize = n
+            .parse()
+            .map_err(|_| anyhow!("--max-prompt expects an integer"))?;
+        opts.max_prompt = Some(n);
     }
     Ok(())
 }
@@ -212,8 +238,12 @@ mod tests {
                 "7",
                 "--kv-blocks",
                 "9",
+                "--step-token-budget",
+                "32",
+                "--max-prompt",
+                "48",
             ]),
-            &["no-paging", "no-prefix-cache"],
+            &["no-paging", "no-prefix-cache", "no-chunking"],
         )
         .unwrap();
         parse_kv_flags(&a, &mut opts).unwrap();
@@ -221,6 +251,29 @@ mod tests {
         assert_eq!(opts.prefix_cache_cap, Some(7));
         assert_eq!(opts.kv_blocks, Some(9));
         assert!(opts.paged, "--no-paging was not passed");
+        assert!(opts.chunking, "--no-chunking was not passed");
+        assert_eq!(opts.step_token_budget, 32);
+        assert_eq!(opts.max_prompt, Some(48));
+    }
+
+    #[test]
+    fn sched_flags_parse() {
+        let mut opts = crate::coordinator::EngineOptions::default();
+        let a = Args::parse(
+            &sv(&["--no-chunking"]),
+            &["no-paging", "no-prefix-cache", "no-chunking"],
+        )
+        .unwrap();
+        parse_kv_flags(&a, &mut opts).unwrap();
+        assert!(!opts.chunking);
+        // zero budget is rejected at parse time
+        let mut opts = crate::coordinator::EngineOptions::default();
+        let bad = Args::parse(
+            &sv(&["--step-token-budget", "0"]),
+            &["no-chunking"],
+        )
+        .unwrap();
+        assert!(parse_kv_flags(&bad, &mut opts).is_err());
     }
 
     #[test]

@@ -1,27 +1,49 @@
-//! Continuous batching policy.
+//! Iteration-level scheduling policy (chunked prefill fused with
+//! decode), plus the legacy two-phase policy behind the
+//! `ODYSSEY_NO_CHUNKING` escape hatch.
 //!
-//! The paper's engine (like vLLM/Orca) interleaves two kinds of work:
-//! *prefill* (compute-bound, batch of new prompts) and *self-decode*
-//! (memory-bound, one token for every active sequence).  The batcher
-//! decides each engine iteration: admit new requests via a prefill
-//! step, then run one decode step over the active slots.
-//! Prefill-priority keeps TTFT low; decode keeps all slots moving.
+//! The engine interleaves two kinds of work: *prefill* (compute-bound,
+//! prompt positions) and *self-decode* (memory-bound, one token per
+//! active sequence).  The old vLLM/Orca-style loop ([`next_step`]) ran
+//! them in PHASES — a whole-prompt prefill step stalled every active
+//! decode behind it.  The iteration-level scheduler ([`plan_step`])
+//! fuses them instead: every engine step assembles ONE work set under
+//! a token budget containing
+//!
+//! * one decode token for every active sequence (decode is budgeted
+//!   first and never withheld — the budget throttles prefill, never
+//!   decode liveness), and
+//! * block-aligned prefill CHUNKS of admitted prompts (oldest first,
+//!   at most `prefill_batch` rows), sized by what remains of the
+//!   budget ([`super::sched::chunk_end`]).
+//!
+//! A long prompt therefore advances chunk-by-chunk across iterations
+//! while every decode slot keeps producing a token every step —
+//! removing the head-of-line blocking the ROADMAP flagged.  With
+//! chunking off a "chunk" is the whole remaining prompt, which is the
+//! legacy one-shot prefill shape.
 //!
 //! Admission is capacity-driven through the `admit` callback: the KV
 //! manager decides per request whether it has a slot AND (under paging)
-//! enough free blocks for the prompt — with the prefix cache on, the
-//! demand is the FRESH blocks only (cached prefix blocks are shared by
-//! refcount, and index-only blocks count as available because they
-//! reclaim on demand).  A request that cannot be placed *right now*
-//! but will fit once capacity frees ([`Admission::Retry`]) goes back
-//! to the queue FRONT — it keeps its arrival order and is never shed;
-//! only requests that can NEVER fit ([`Admission::Reject`]) are
-//! bounced to the caller.
+//! enough free blocks — with the prefix cache on, the demand is the
+//! FRESH blocks only (cached prefix blocks are shared by refcount, and
+//! index-only blocks count as available because they reclaim on
+//! demand); under chunked admission the demand is further reduced to
+//! the FIRST chunk's blocks (later chunks page in on use).  A request
+//! that cannot be placed *right now* but will fit once capacity frees
+//! ([`Admission::Retry`]) goes back to the queue FRONT — it keeps its
+//! arrival order and is never shed; only requests that can NEVER fit
+//! ([`Admission::Reject`]: oversized for the prompt bucket, no decode
+//! headroom under `max_seq`, or more blocks than the pool has) are
+//! bounced to the caller, up front, before any runtime work.
 
 use super::queue::RequestQueue;
 use super::request::Request;
+use super::sched::{chunk_end, ChunkPlan, PrefillEntry, PrefillSched, StepPlan};
 
-/// What the engine should do next.
+/// What the engine should do next (legacy two-phase loop — the
+/// `ODYSSEY_NO_CHUNKING` / contiguous-KV escape hatch; the default
+/// engine path plans fused steps via [`plan_step`]).
 #[derive(Debug)]
 pub enum Step {
     /// Run a prefill over these requests (assigned to the given KV slots).
@@ -35,14 +57,16 @@ pub enum Step {
 /// Per-request admission verdict from the KV manager.
 #[derive(Debug)]
 pub enum Admission {
-    /// Admitted into this decode slot.
-    Slot(usize),
+    /// Admitted into this decode slot; prefill computes positions
+    /// `start..prompt_len` (`start` > 0 on a prefix-cache hit).
+    Slot { slot: usize, start: usize },
     /// No capacity right now; requeue front and retry when sequences
     /// finish.  The caller must guarantee progress is possible (some
     /// sequence is active, or another request was admitted this step) —
     /// with an idle pool the verdict must be `Slot` or `Reject`.
     Retry,
-    /// Can never fit (e.g. prompt needs more blocks than the pool has).
+    /// Can never fit (e.g. prompt needs more blocks than the pool has,
+    /// or leaves no decode headroom under `max_seq`).
     Reject,
 }
 
@@ -63,9 +87,108 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Decide the next step.  `can_admit` is the KV manager's cheap
-/// capacity hint (a free slot and at least one free block); `admit`
-/// gives the per-request verdict and claims capacity on success.
+/// Assemble one fused engine iteration under `budget` tokens: one
+/// decode token per active sequence (never withheld), then prefill
+/// chunks for in-flight prompts (oldest first), then admissions from
+/// the queue — each new admission gets its first chunk in the same
+/// step.  `admit` claims capacity (slot + first-chunk blocks) and
+/// reports the prefix-cache suffix start; `admit_counter` stamps
+/// admission order (shared with the engine's decode-side stamps so
+/// preemption can order mid-prefill and decoding sequences together).
+/// Returns the plan plus the requests rejected up front (oversized /
+/// empty prompts from the queue and `Admission::Reject` verdicts).
+#[allow(clippy::too_many_arguments)]
+pub fn plan_step(
+    policy: &BatchPolicy,
+    queue: &mut RequestQueue,
+    sched: &mut PrefillSched,
+    active: usize,
+    budget: usize,
+    chunking: bool,
+    block_size: usize,
+    can_admit: bool,
+    admit_counter: &mut u64,
+    mut admit: impl FnMut(&Request) -> Admission,
+) -> (StepPlan, Vec<Request>) {
+    let mut plan = StepPlan { decode: active > 0, chunks: Vec::new() };
+    let mut rejected = Vec::new();
+    // decode tokens are budgeted first; what remains feeds prefill
+    let mut remaining = budget.saturating_sub(active);
+
+    // 1) advance in-flight prefills, oldest first
+    for e in sched.iter() {
+        if plan.chunks.len() >= policy.prefill_batch || remaining == 0 {
+            break;
+        }
+        let plen = e.req.prompt.len();
+        let end = chunk_end(e.done, plen, remaining, block_size, chunking);
+        if end == e.done {
+            continue; // budget exhausted for this entry
+        }
+        // a whole-prompt "chunk" (chunking off) may exceed the budget
+        remaining = remaining.saturating_sub(end - e.done);
+        plan.chunks.push(ChunkPlan {
+            id: e.req.id,
+            slot: e.slot,
+            start: e.done,
+            end,
+            last: end == plen,
+        });
+    }
+
+    // 2) admit new prompts while budget and prefill rows remain; each
+    // admission schedules its first chunk immediately
+    while can_admit
+        && plan.chunks.len() < policy.prefill_batch
+        && remaining > 0
+        && !queue.is_empty()
+    {
+        let (batch, overs) = queue.pop_batch(1, policy.max_prompt);
+        rejected.extend(overs);
+        let Some(r) = batch.into_iter().next() else { continue };
+        match admit(&r) {
+            Admission::Slot { slot, start } => {
+                *admit_counter += 1;
+                let plen = r.prompt.len();
+                let end =
+                    chunk_end(start, plen, remaining, block_size, chunking);
+                let entry = PrefillEntry {
+                    req: r,
+                    slot,
+                    done: start,
+                    start0: start,
+                    admit_seq: *admit_counter,
+                };
+                if end > start {
+                    remaining = remaining.saturating_sub(end - start);
+                    plan.chunks.push(ChunkPlan {
+                        id: entry.req.id,
+                        slot,
+                        start,
+                        end,
+                        last: end == plen,
+                    });
+                }
+                sched.push(entry);
+            }
+            Admission::Retry => {
+                // transient shortage: head of the line waits at the
+                // queue FRONT in arrival order; nothing admits past it
+                queue.requeue_front(r);
+                break;
+            }
+            Admission::Reject => rejected.push(r),
+        }
+    }
+    (plan, rejected)
+}
+
+/// Decide the next step (LEGACY two-phase loop, kept as the
+/// `ODYSSEY_NO_CHUNKING` / contiguous-KV escape hatch the fused
+/// scheduler's parity tests compare against).  `can_admit` is the KV
+/// manager's cheap capacity hint (a free slot and at least one free
+/// block); `admit` gives the per-request verdict and claims capacity
+/// on success.
 pub fn next_step(
     policy: &BatchPolicy,
     queue: &mut RequestQueue,
@@ -84,7 +207,9 @@ pub fn next_step(
             let mut retry = Vec::new();
             for r in batch {
                 match admit(&r) {
-                    Admission::Slot(slot) => assigned.push((r, slot)),
+                    Admission::Slot { slot, .. } => {
+                        assigned.push((r, slot))
+                    }
                     Admission::Retry => retry.push(r),
                     Admission::Reject => rejected.push(r),
                 }
@@ -128,7 +253,7 @@ mod tests {
         move |_| {
             let s = next;
             next += 1;
-            Admission::Slot(s)
+            Admission::Slot { slot: s, start: 0 }
         }
     }
 
@@ -223,7 +348,7 @@ mod tests {
                     Admission::Retry
                 } else {
                     admitted = true;
-                    Admission::Slot(0)
+                    Admission::Slot { slot: 0, start: 0 }
                 }
             },
         );
@@ -258,5 +383,217 @@ mod tests {
         assert_eq!(rej[0].id, 7);
         assert!(matches!(step, Step::Decode), "decode continues");
         assert_eq!(q.len(), 0);
+    }
+
+    // ------------------------------------------ fused plan_step tests
+
+    #[test]
+    fn plan_fuses_decode_with_chunks_under_budget() {
+        // 3 actives + a queued 20-token prompt under a budget of 11:
+        // decode takes 3, the first chunk gets 8 (block-aligned at 4)
+        let mut q = RequestQueue::new(8);
+        q.push(req(1, 20));
+        let mut sched = PrefillSched::new();
+        let mut stamp = 0u64;
+        let (plan, rej) = plan_step(
+            &BatchPolicy::default(),
+            &mut q,
+            &mut sched,
+            3,
+            11,
+            true,
+            4,
+            true,
+            &mut stamp,
+            |_| Admission::Slot { slot: 3, start: 0 },
+        );
+        assert!(rej.is_empty());
+        assert!(plan.decode, "decode is never withheld");
+        assert_eq!(plan.chunks.len(), 1);
+        let c = &plan.chunks[0];
+        assert_eq!((c.start, c.end), (0, 8), "11 - 3 = 8, aligned");
+        assert!(!c.last);
+        assert_eq!(sched.get(1).unwrap().done, 0, "engine advances done");
+        assert_eq!(stamp, 1, "admission stamped");
+    }
+
+    #[test]
+    fn plan_advances_inflight_before_admitting() {
+        let mut q = RequestQueue::new(8);
+        q.push(req(5, 12));
+        let mut sched = PrefillSched::new();
+        sched.push(PrefillEntry {
+            req: req(4, 16),
+            slot: 0,
+            done: 8,
+            start0: 0,
+            admit_seq: 1,
+        });
+        let mut stamp = 1u64;
+        let (plan, _) = plan_step(
+            &BatchPolicy::default(),
+            &mut q,
+            &mut sched,
+            0,
+            10,
+            true,
+            4,
+            true,
+            &mut stamp,
+            |_| Admission::Slot { slot: 1, start: 0 },
+        );
+        // in-flight entry 4 finishes (8 tokens), leaving 2 for the
+        // new admission's first (unaligned) chunk
+        assert_eq!(plan.chunks.len(), 2);
+        assert_eq!(plan.chunks[0].id, 4);
+        assert_eq!((plan.chunks[0].start, plan.chunks[0].end), (8, 16));
+        assert!(plan.chunks[0].last);
+        assert_eq!(plan.chunks[1].id, 5);
+        assert_eq!((plan.chunks[1].start, plan.chunks[1].end), (0, 2));
+        assert!(!plan.decode);
+    }
+
+    #[test]
+    fn plan_budget_exhausted_by_decode_defers_prefill() {
+        let mut q = RequestQueue::new(8);
+        q.push(req(1, 8));
+        let mut sched = PrefillSched::new();
+        let mut stamp = 0u64;
+        let (plan, _) = plan_step(
+            &BatchPolicy::default(),
+            &mut q,
+            &mut sched,
+            4,
+            4, // budget == actives: nothing left for prefill
+            true,
+            4,
+            true,
+            &mut stamp,
+            |_| panic!("must not admit with an exhausted budget"),
+        );
+        assert!(plan.decode);
+        assert!(plan.chunks.is_empty());
+        assert_eq!(q.len(), 1, "request stays queued");
+        assert!(sched.is_empty());
+    }
+
+    #[test]
+    fn plan_rejects_oversize_and_respects_retry_order() {
+        let mut q = RequestQueue::new(8);
+        q.push(req(1, 4096)); // oversize: rejected up front
+        q.push(req(2, 4));
+        q.push(req(3, 4));
+        let mut sched = PrefillSched::new();
+        let mut stamp = 0u64;
+        let mut admitted = false;
+        let (plan, rej) = plan_step(
+            &BatchPolicy::default(),
+            &mut q,
+            &mut sched,
+            0,
+            64,
+            true,
+            4,
+            true,
+            &mut stamp,
+            |_| {
+                if admitted {
+                    Admission::Retry
+                } else {
+                    admitted = true;
+                    Admission::Slot { slot: 0, start: 0 }
+                }
+            },
+        );
+        assert_eq!(rej.len(), 1);
+        assert_eq!(rej[0].id, 1);
+        assert_eq!(plan.chunks.len(), 1);
+        assert_eq!(plan.chunks[0].id, 2);
+        // the retried request holds the queue FRONT; no admission
+        // reordered past it
+        let (batch, _) = q.pop_batch(4, 128);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3]);
+    }
+
+    #[test]
+    fn plan_unchunked_takes_whole_prompts() {
+        let mut q = RequestQueue::new(8);
+        q.push(req(1, 100));
+        let mut sched = PrefillSched::new();
+        let mut stamp = 0u64;
+        let (plan, _) = plan_step(
+            &BatchPolicy::default(),
+            &mut q,
+            &mut sched,
+            2,
+            8, // budget far below the prompt: irrelevant when off
+            false,
+            4,
+            true,
+            &mut stamp,
+            |_| Admission::Slot { slot: 2, start: 0 },
+        );
+        assert_eq!(plan.chunks.len(), 1);
+        assert_eq!((plan.chunks[0].start, plan.chunks[0].end), (0, 100));
+        assert!(plan.chunks[0].last);
+    }
+
+    #[test]
+    fn plan_prefix_hit_starts_at_first_uncached_token() {
+        let mut q = RequestQueue::new(8);
+        q.push(req(1, 20));
+        let mut sched = PrefillSched::new();
+        let mut stamp = 0u64;
+        let (plan, _) = plan_step(
+            &BatchPolicy::default(),
+            &mut q,
+            &mut sched,
+            0,
+            6,
+            true,
+            4,
+            true,
+            &mut stamp,
+            // 12 cached positions: chunking composes with the cache
+            |_| Admission::Slot { slot: 0, start: 12 },
+        );
+        assert_eq!(plan.chunks.len(), 1);
+        assert_eq!(
+            (plan.chunks[0].start, plan.chunks[0].end),
+            (12, 16),
+            "chunking starts at the first uncached token"
+        );
+    }
+
+    #[test]
+    fn plan_caps_rows_at_prefill_batch() {
+        let mut q = RequestQueue::new(16);
+        for i in 0..6 {
+            q.push(req(i, 4));
+        }
+        let mut sched = PrefillSched::new();
+        let mut stamp = 0u64;
+        let mut next = 0usize;
+        let policy =
+            BatchPolicy { prefill_batch: 4, ..Default::default() };
+        let (plan, _) = plan_step(
+            &policy,
+            &mut q,
+            &mut sched,
+            0,
+            1024,
+            true,
+            4,
+            true,
+            &mut stamp,
+            |_| {
+                let s = next;
+                next += 1;
+                Admission::Slot { slot: s, start: 0 }
+            },
+        );
+        assert_eq!(plan.chunks.len(), 4, "prefill graph bucket cap");
+        assert_eq!(q.len(), 2);
+        assert_eq!(sched.len(), 4);
     }
 }

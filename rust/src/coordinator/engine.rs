@@ -1,6 +1,29 @@
 //! The generation engine: owns the execution runtime (native CPU
 //! interpreter or PJRT), the quantized weights, and the KV state;
-//! executes the continuous-batching loop over the prefill/decode graphs.
+//! executes the iteration-level serving loop over the prefill/decode
+//! graphs.
+//!
+//! # The fused iteration (default)
+//!
+//! Each [`Engine::step`] assembles ONE work set under
+//! [`EngineOptions::step_token_budget`]: one decode token for every
+//! active sequence (decode is never withheld) plus block-aligned
+//! prefill CHUNKS of admitted prompts
+//! (`batcher::plan_step` + `sched::PrefillSched`).  A long prompt
+//! advances chunk-by-chunk across iterations — emitting its first
+//! token when the last chunk lands — instead of stalling the whole
+//! decode batch behind a monolithic prefill step.  Chunked admission
+//! backs only the cached prefix plus the first chunk's blocks; later
+//! chunks page their blocks in on use, and a mid-prefill sequence is
+//! preempted (blocks freed, request requeued FRONT) exactly like a
+//! decoding one when the pool runs dry.  Chunked-on token streams are
+//! bit-identical to chunking-off: per-row float ops are independent
+//! of the chunk schedule (pinned by `tests/properties.rs` and the
+//! escape-hatch matrix in `tests/engine_integration.rs`).
+//!
+//! `ODYSSEY_NO_CHUNKING=1` / `--no-chunking` fall back to the legacy
+//! two-phase loop (whole-prompt `Step::Prefill` | `Step::Decode`),
+//! which also serves the contiguous-KV and unstaged configurations.
 //!
 //! Python is long gone by the time this runs — graph math comes from the
 //! selected [`crate::runtime::ExecBackend`] and the weights from the
@@ -12,7 +35,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::batcher::{
-    next_step, Admission, BatchPolicy, Step,
+    next_step, plan_step, Admission, BatchPolicy, Step,
 };
 use crate::coordinator::kv::{KvState, PagedKv};
 use crate::coordinator::metrics::EngineMetrics;
@@ -20,6 +43,7 @@ use crate::coordinator::queue::{Admit, RequestQueue};
 use crate::coordinator::request::{
     FinishReason, GenResult, Request,
 };
+use crate::coordinator::sched::{ChunkPlan, PrefillSched};
 use crate::formats::config::GraphKind;
 use crate::model::{self, Calibration, Checkpoint};
 use crate::quant::QuantRecipe;
@@ -68,6 +92,26 @@ pub struct EngineOptions {
     pub prefix_cache: bool,
     /// LRU cap on prefix-index entries; None = the pool size
     pub prefix_cache_cap: Option<usize>,
+    /// iteration-level scheduling with chunked prefill (default;
+    /// `ODYSSEY_NO_CHUNKING=1` / `--no-chunking` flips the default
+    /// off — the legacy two-phase escape hatch the chunked parity
+    /// tests compare against).  Rides on the paged KV pool: with
+    /// paging (or staging) off the engine is on the legacy loop
+    /// regardless.
+    pub chunking: bool,
+    /// token budget per fused engine iteration: one decode token per
+    /// active sequence is budgeted first (and never withheld), the
+    /// remainder feeds block-aligned prefill chunks.  Larger = closer
+    /// to whole-prompt prefill (better prefill throughput/TTFT for
+    /// lone prompts); smaller = tighter inter-token latency for
+    /// active decodes.  CLI `--step-token-budget`, env
+    /// `ODYSSEY_STEP_TOKEN_BUDGET`.
+    pub step_token_budget: usize,
+    /// cap on admitted prompt length; None = the prefill graph's seq
+    /// bucket.  Validated at construction against the bucket (a cap
+    /// the graph cannot serve is a config error, caught up front
+    /// rather than deep in the runtime).
+    pub max_prompt: Option<usize>,
 }
 
 impl Default for EngineOptions {
@@ -90,6 +134,10 @@ impl Default for EngineOptions {
             kv_blocks: None,
             prefix_cache: runtime::prefix_cache_enabled_from_env(),
             prefix_cache_cap: None,
+            chunking: runtime::chunking_enabled_from_env(),
+            step_token_budget: runtime::step_token_budget_from_env()
+                .unwrap_or(64),
+            max_prompt: None,
         }
     }
 }
@@ -100,6 +148,11 @@ struct ActiveSeq {
     generated: Vec<i32>,
     last_token: i32,
     ttft_s: f64,
+    /// submit -> first token, in engine steps
+    ttft_steps: u64,
+    /// engine step that produced this sequence's latest token (ITL
+    /// gaps are measured against it)
+    last_token_step: u64,
     rng: XorShift,
     /// admission order stamp — preemption evicts the YOUNGEST (largest)
     admit_seq: u64,
@@ -166,11 +219,26 @@ pub struct Engine {
     queue: RequestQueue,
     policy: BatchPolicy,
     active: BTreeMap<u64, ActiveSeq>,
-    /// monotonically increasing admission stamp (preemption order)
+    /// mid-prefill sequences (fused scheduler): admitted, advancing
+    /// chunk by chunk, not yet producing tokens
+    sched: PrefillSched,
+    /// monotonically increasing admission stamp (preemption order,
+    /// shared by decoding and mid-prefill sequences)
     admit_counter: u64,
+    /// engine iterations run — the clock behind the step-count
+    /// latency metrics (TTFT/ITL in steps)
+    step_counter: u64,
+    /// consecutive iterations in which resident actives got no decode
+    /// token (legacy prefill steps); feeds max_decode_stall_steps
+    stall_streak: u64,
     pub metrics: EngineMetrics,
     prefill_graph: String,
     decode_graph: String,
+    /// the prefill graph's seq bucket — the `[B, S]` token-buffer
+    /// width every prefill call pads to.  `policy.max_prompt` is the
+    /// ADMISSION cap (≤ this; may be smaller via
+    /// `EngineOptions::max_prompt` or the max_seq headroom clamp).
+    prefill_seq: usize,
     finished: Vec<GenResult>,
 }
 
@@ -267,6 +335,34 @@ impl Engine {
 
         let prefill_seq =
             rt.manifest.graph(&prefill_graph)?.seq;
+        // ---- construction-time scheduling validation: a prompt cap
+        // the prefill graph cannot serve, or a zero budget, is a
+        // config error caught HERE — not deep in the runtime
+        if let Some(mp) = opts.max_prompt {
+            if mp == 0 {
+                bail!("max_prompt must be at least 1");
+            }
+            if mp > prefill_seq {
+                bail!(
+                    "max_prompt {mp} exceeds the prefill graph's seq \
+                     bucket {prefill_seq} ({prefill_graph})"
+                );
+            }
+        }
+        if opts.step_token_budget == 0 {
+            bail!("step_token_budget must be at least 1");
+        }
+        let mut max_prompt = opts.max_prompt.unwrap_or(prefill_seq);
+        if max_prompt >= info.max_seq {
+            // a prompt of max_seq leaves no decode headroom: cap the
+            // bucket so such prompts reject up front at admission
+            crate::util::log::info(&format!(
+                "capping max_prompt {max_prompt} to max_seq - 1 = {} \
+                 (decode headroom)",
+                info.max_seq - 1
+            ));
+            max_prompt = info.max_seq - 1;
+        }
         // KV backing: paged block tables by default; paging rides on
         // the staged decode graph, so the contiguous mirror also covers
         // the ODYSSEY_NO_STAGING configuration
@@ -309,7 +405,7 @@ impl Engine {
             ))
         };
         crate::util::log::info(&format!(
-            "engine up: model={} variant={} backend={} staging={} paging={} params={:.1}M graphs=({}, {}) in {:.2}s",
+            "engine up: model={} variant={} backend={} staging={} paging={} sched={} params={:.1}M graphs=({}, {}) in {:.2}s",
             opts.model,
             opts.variant,
             rt.backend_name(),
@@ -327,6 +423,11 @@ impl Engine {
                 ),
                 KvBacking::Contiguous(_) => "off".into(),
             },
+            if opts.chunking && matches!(kv, KvBacking::Paged(_)) {
+                format!("chunked(budget={})", opts.step_token_budget)
+            } else {
+                "two-phase".into()
+            },
             info.n_params as f64 / 1e6,
             prefill_graph,
             decode_graph,
@@ -343,14 +444,18 @@ impl Engine {
             queue: RequestQueue::new(opts.max_queue),
             policy: BatchPolicy {
                 prefill_batch: opts.prefill_batch,
-                max_prompt: prefill_seq,
+                max_prompt,
                 prefill_priority: true,
             },
             active: BTreeMap::new(),
+            sched: PrefillSched::new(),
             admit_counter: 0,
+            step_counter: 0,
+            stall_streak: 0,
             metrics: EngineMetrics::default(),
             prefill_graph,
             decode_graph,
+            prefill_seq,
             finished: Vec::new(),
             opts,
         })
@@ -384,15 +489,18 @@ impl Engine {
     /// Reset metrics counters (test/bench hygiene when reusing an engine).
     pub fn reset_metrics(&mut self) {
         self.metrics = EngineMetrics::default();
+        self.stall_streak = 0;
     }
 
     /// Submit a request; `false` means shed (queue full).
-    pub fn submit(&mut self, req: Request) -> bool {
+    pub fn submit(&mut self, mut req: Request) -> bool {
+        // stamp the step clock so TTFT-in-steps measures from submit
+        req.queued_step = self.step_counter;
         matches!(self.queue.push(req), Admit::Accepted)
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len() + self.active.len()
+        self.queue.len() + self.active.len() + self.sched.len()
     }
 
     /// Drain finished results accumulated since the last call.
@@ -407,7 +515,116 @@ impl Engine {
     }
 
     /// One engine iteration.  Returns false when idle.
+    ///
+    /// Default: the FUSED iteration-level schedule (`plan_step`) —
+    /// every active sequence decodes one token AND admitted prompts
+    /// advance by block-aligned prefill chunks, all under the step
+    /// token budget.  `ODYSSEY_NO_CHUNKING=1` (and the contiguous /
+    /// unstaged configurations) run the legacy two-phase loop.
     pub fn step(&mut self) -> Result<bool> {
+        self.step_counter += 1;
+        self.metrics.engine_steps += 1;
+        if self.chunking_active() {
+            self.step_fused()
+        } else {
+            self.step_legacy()
+        }
+    }
+
+    /// The fused iteration: plan one budgeted work set, run the
+    /// prefill chunk batch (a final chunk's sequence starts decoding
+    /// this same step), then one decode token for every active.
+    fn step_fused(&mut self) -> Result<bool> {
+        let active_n = self.active.len();
+        let budget = self.opts.step_token_budget;
+        let (plan, rejected) = {
+            let Engine {
+                kv,
+                queue,
+                policy,
+                sched,
+                metrics,
+                admit_counter,
+                ..
+            } = self;
+            let paged = match kv {
+                KvBacking::Paged(p) => p,
+                KvBacking::Contiguous(_) => {
+                    bail!("fused step on contiguous KV")
+                }
+            };
+            let block_size = paged.pool.block_size;
+            // admission watermark: one growth block reserved per
+            // resident sequence (decoding AND mid-prefill), so a
+            // preempted request cannot thrash between re-admission
+            // and re-eviction
+            let mut resident = active_n + sched.len();
+            plan_step(
+                policy,
+                queue,
+                sched,
+                active_n,
+                budget,
+                true,
+                block_size,
+                paged.free_slots() > 0 && paged.available_blocks() > 0,
+                admit_counter,
+                |r| {
+                    if !paged.fits_pool(r.prompt.len()) {
+                        // needs more blocks than the pool HAS: no
+                        // amount of waiting admits it
+                        return Admission::Reject;
+                    }
+                    // chunked admission backs the cached prefix plus
+                    // ONE computable position; later chunks page
+                    // their blocks in on use
+                    if !paged.admission_feasible_backed(
+                        &r.prompt, 1, resident,
+                    ) {
+                        return Admission::Retry;
+                    }
+                    match paged.alloc_seq_backed(r.id, &r.prompt, 1) {
+                        Some(a) => {
+                            resident += 1;
+                            metrics.admitted += 1;
+                            Admission::Slot {
+                                slot: a.slot,
+                                start: a.start,
+                            }
+                        }
+                        None => Admission::Retry,
+                    }
+                },
+            )
+        };
+        let shed = !rejected.is_empty();
+        for r in rejected {
+            self.finish_rejected(r);
+        }
+        if plan.is_idle() {
+            debug_assert!(
+                self.sched.is_empty(),
+                "an idle plan must not strand in-flight prefills"
+            );
+            self.note_decode_stall(active_n, false);
+            return Ok(shed);
+        }
+        if !plan.chunks.is_empty() {
+            self.run_chunks(plan.chunks)?;
+        }
+        let decoded = !self.active.is_empty();
+        if decoded {
+            self.do_decode()?;
+        }
+        self.note_decode_stall(active_n, decoded);
+        Ok(true)
+    }
+
+    /// The legacy two-phase loop (`ODYSSEY_NO_CHUNKING=1`, contiguous
+    /// KV, or unstaged weights): whole-prompt prefill steps stall the
+    /// decode batch — exactly what the fused scheduler removes, kept
+    /// bit-exact as the parity baseline.
+    fn step_legacy(&mut self) -> Result<bool> {
         let active = self.active.len();
         let Engine { kv, queue, policy, .. } = self;
         let (step, rejected) = match kv {
@@ -416,11 +633,19 @@ impl Engine {
                 queue,
                 state.free_slots() > 0,
                 active,
-                |r| match state.alloc(r.id) {
-                    Ok(slot) => Admission::Slot(slot),
-                    // free slots were checked but a large pop can
-                    // outrun them; wait for a sequence to finish
-                    Err(_) => Admission::Retry,
+                |r| {
+                    if r.prompt.len() >= state.max_seq {
+                        // no decode headroom under max_seq: reject up
+                        // front instead of overflowing deep in the
+                        // runtime (the paged twin is fits_pool)
+                        return Admission::Reject;
+                    }
+                    match state.alloc(r.id) {
+                        Ok(slot) => Admission::Slot { slot, start: 0 },
+                        // free slots were checked but a large pop can
+                        // outrun them; wait for a sequence to finish
+                        Err(_) => Admission::Retry,
+                    }
                 },
             ),
             KvBacking::Paged(paged) => {
@@ -456,7 +681,10 @@ impl Engine {
                         match paged.alloc_seq(r.id, &r.prompt) {
                             Some(a) => {
                                 resident += 1;
-                                Admission::Slot(a.slot)
+                                Admission::Slot {
+                                    slot: a.slot,
+                                    start: a.start,
+                                }
                             }
                             None => Admission::Retry,
                         }
@@ -469,26 +697,249 @@ impl Engine {
         // and the rest of the queue gets its turn
         let shed = !rejected.is_empty();
         for r in rejected {
-            self.finished.push(GenResult {
-                id: r.id,
-                prompt_len: r.prompt.len(),
-                tokens: Vec::new(),
-                finish: FinishReason::Rejected,
-                ttft_s: 0.0,
-                total_s: r.arrived.elapsed().as_secs_f64(),
-            });
-            self.metrics.rejected += 1;
+            self.finish_rejected(r);
         }
         match step {
-            Step::Idle => Ok(shed),
+            Step::Idle => {
+                self.note_decode_stall(active, false);
+                Ok(shed)
+            }
             Step::Prefill(batch) => {
                 self.do_prefill(batch)?;
+                // the two-phase stall the fused scheduler removes: a
+                // whole-prompt prefill ran, resident actives got no
+                // decode token this iteration
+                self.note_decode_stall(active, false);
                 Ok(true)
             }
             Step::Decode => {
                 self.do_decode()?;
+                self.note_decode_stall(active, true);
                 Ok(true)
             }
+        }
+    }
+
+    /// Is the engine on the fused iteration-level scheduler?  Chunking
+    /// rides on the paged KV pool (which itself rides on staged
+    /// weights).
+    pub fn chunking_active(&self) -> bool {
+        self.opts.chunking && matches!(self.kv, KvBacking::Paged(_))
+    }
+
+    /// Track the worst streak of iterations in which resident actives
+    /// received no decode token (head-of-line blocking).
+    fn note_decode_stall(&mut self, active_before: usize, decoded: bool) {
+        if active_before == 0 || decoded {
+            self.stall_streak = 0;
+        } else {
+            self.stall_streak += 1;
+            self.metrics.max_decode_stall_steps = self
+                .metrics
+                .max_decode_stall_steps
+                .max(self.stall_streak);
+        }
+    }
+
+    /// Bounce a request that can never be served (oversized / empty
+    /// prompt, or more blocks than the pool has).
+    fn finish_rejected(&mut self, r: Request) {
+        self.finished.push(GenResult {
+            id: r.id,
+            prompt_len: r.prompt.len(),
+            tokens: Vec::new(),
+            finish: FinishReason::Rejected,
+            ttft_s: 0.0,
+            ttft_steps: 0,
+            total_s: r.arrived.elapsed().as_secs_f64(),
+        });
+        self.metrics.rejected += 1;
+    }
+
+    /// Execute one iteration's prefill chunk batch: page each chunk's
+    /// blocks in (preempting the youngest resident when the pool runs
+    /// dry), run the chunk windows through the prefill graph in one
+    /// call, then advance progress — a sequence whose FINAL chunk
+    /// landed samples its first token and joins the decode batch this
+    /// same step.
+    fn run_chunks(&mut self, mut chunks: Vec<ChunkPlan>) -> Result<()> {
+        // capacity: later chunks page in their own blocks before the
+        // batch runs; a dry pool preempts the youngest resident (which
+        // may be this chunk's own sequence, or another chunk's — both
+        // are dropped from the batch)
+        let mut i = 0;
+        while i < chunks.len() {
+            let (id, slot, end) =
+                (chunks[i].id, chunks[i].slot, chunks[i].end);
+            if !self.sched.contains(id) {
+                chunks.remove(i);
+                continue;
+            }
+            loop {
+                let paged = match &mut self.kv {
+                    KvBacking::Paged(p) => p,
+                    KvBacking::Contiguous(_) => {
+                        bail!("chunked prefill on contiguous KV")
+                    }
+                };
+                if paged.ensure_prefill_capacity(slot, end) {
+                    break;
+                }
+                if self.resident_count() <= 1 {
+                    // unreachable by construction: fits_pool admitted
+                    // the prompt, and a sole resident can always
+                    // reclaim index-only blocks up to the pool size
+                    bail!(
+                        "prefill capacity underflow for sole resident \
+                         request {id}"
+                    );
+                }
+                let victim =
+                    self.youngest_resident().expect("residents exist");
+                self.preempt(victim);
+                if victim == id {
+                    break;
+                }
+            }
+            if self.sched.contains(id) {
+                i += 1;
+            } else {
+                chunks.remove(i);
+            }
+        }
+        if chunks.is_empty() {
+            return Ok(());
+        }
+
+        let t0 = Instant::now();
+        let b = self.opts.prefill_batch;
+        let s = self.prefill_seq;
+        let v = self.info.vocab;
+        let mut tokens = vec![0i32; b * s];
+        let mut lengths = vec![0i32; b];
+        let mut starts = vec![0i32; b];
+        let mut ends = vec![0i32; b];
+        for (row, c) in chunks.iter().enumerate() {
+            let e = self.sched.get(c.id).expect("chunk entry survived");
+            let plen = e.req.prompt.len();
+            tokens[row * s..row * s + plen]
+                .copy_from_slice(&e.req.prompt);
+            lengths[row] = plen as i32;
+            starts[row] = c.start as i32;
+            ends[row] = c.end as i32;
+        }
+
+        let logits = {
+            let Engine { kv, rt, staged_prefill, .. } = self;
+            let paged = match kv {
+                KvBacking::Paged(p) => p,
+                KvBacking::Contiguous(_) => unreachable!("checked above"),
+            };
+            let staged = staged_prefill.as_ref().ok_or_else(|| {
+                anyhow!("chunked prefill without staged weights")
+            })?;
+            let (slot_tables, pool) = paged.decode_view();
+            // rows map to THIS batch's chunk slots; rows past it idle
+            let mut row_tables: Vec<&[u32]> = vec![&[]; b];
+            for (row, c) in chunks.iter().enumerate() {
+                row_tables[row] = slot_tables[c.slot];
+            }
+            let out = rt.run_prefill_paged(
+                staged, &tokens, &lengths, &starts, &ends, pool,
+                &row_tables,
+            )?;
+            runtime::literal_to_f32(&out, b * s * v)?
+        };
+
+        let dt = t0.elapsed().as_secs_f64();
+        self.metrics.prefill_steps += 1;
+        self.metrics.prefill_time_s += dt;
+        let n_chunks = chunks.len();
+        let mut chunk_tokens = 0u64;
+
+        for (row, c) in chunks.iter().enumerate() {
+            chunk_tokens += (c.end - c.start) as u64;
+            if !c.last {
+                self.sched
+                    .get_mut(c.id)
+                    .expect("chunk entry survived")
+                    .done = c.end;
+                continue;
+            }
+            // final chunk: the sequence is fully prefilled — emit its
+            // first token and move it to the decode batch
+            let e = self.sched.remove(c.id).expect("chunk entry survived");
+            let plen = e.req.prompt.len();
+            {
+                let paged = match &mut self.kv {
+                    KvBacking::Paged(p) => p,
+                    KvBacking::Contiguous(_) => {
+                        unreachable!("checked above")
+                    }
+                };
+                paged.finish_prefill(e.slot, plen)?;
+                paged.donate_prefix(e.slot, &e.req.prompt);
+            }
+            if e.start0 > 0 {
+                self.metrics.prefix_hits += 1;
+                self.metrics.prefill_tokens_skipped += e.start0 as u64;
+            }
+            self.metrics.prefill_tokens += plen as u64;
+            let off = (row * s + (plen - 1)) * v;
+            let mut rng = XorShift::new(e.req.params.seed ^ e.req.id);
+            let tok = sample(
+                &logits[off..off + v],
+                &e.req.params.temperature,
+                e.req.params.top_k,
+                &mut rng,
+            );
+            let ttft = e.req.arrived.elapsed().as_secs_f64();
+            let ttft_steps =
+                self.step_counter.saturating_sub(e.req.queued_step);
+            self.active.insert(
+                e.req.id,
+                ActiveSeq {
+                    slot: e.slot,
+                    generated: vec![tok],
+                    last_token: tok,
+                    ttft_s: ttft,
+                    ttft_steps,
+                    last_token_step: self.step_counter,
+                    rng,
+                    req: e.req,
+                    admit_seq: e.admit_seq,
+                },
+            );
+        }
+        self.sync_kv_gauges();
+        crate::util::log::debug(&format!(
+            "chunks: {n_chunks} rows, {chunk_tokens} positions in \
+             {:.1}ms",
+            dt * 1e3
+        ));
+        Ok(())
+    }
+
+    /// Sequences holding KV blocks: decoding actives plus mid-prefill
+    /// entries.
+    fn resident_count(&self) -> usize {
+        self.active.len() + self.sched.len()
+    }
+
+    /// The youngest resident (largest admission stamp) across actives
+    /// and mid-prefill sequences — the preemption victim.
+    fn youngest_resident(&self) -> Option<u64> {
+        let a = self
+            .active
+            .values()
+            .map(|s| (s.admit_seq, s.req.id))
+            .max();
+        let b = self.sched.youngest();
+        match (a, b) {
+            (Some(x), Some(y)) => Some(if x >= y { x.1 } else { y.1 }),
+            (Some(x), None) => Some(x.1),
+            (None, Some(y)) => Some(y.1),
+            (None, None) => None,
         }
     }
 
@@ -501,7 +952,7 @@ impl Engine {
         }
         let t0 = Instant::now();
         let b = self.opts.prefill_batch;
-        let s = self.policy.max_prompt;
+        let s = self.prefill_seq;
         let v = self.info.vocab;
         let n_layers = self.info.n_layers;
 
@@ -569,6 +1020,8 @@ impl Engine {
             let tok = sample(&logits[off..off + v], &req.params.temperature,
                              req.params.top_k, &mut rng);
             let ttft = req.arrived.elapsed().as_secs_f64();
+            let ttft_steps =
+                self.step_counter.saturating_sub(req.queued_step);
             self.metrics.prefill_tokens += plen as u64;
             self.metrics.admitted += 1;
             self.admit_counter += 1;
@@ -579,6 +1032,8 @@ impl Engine {
                     generated: vec![tok],
                     last_token: tok,
                     ttft_s: ttft,
+                    ttft_steps,
+                    last_token_step: self.step_counter,
                     rng,
                     req,
                     admit_seq: self.admit_counter,
@@ -604,7 +1059,7 @@ impl Engine {
     ) -> Result<()> {
         let t0 = Instant::now();
         let b = self.opts.prefill_batch;
-        let s = self.policy.max_prompt;
+        let s = self.prefill_seq;
         let v = self.info.vocab;
 
         let mut tokens = vec![0i32; b * s];
@@ -642,8 +1097,12 @@ impl Engine {
             for (row, &slot) in slots.iter().enumerate() {
                 row_tables[row] = slot_tables[slot];
             }
+            // legacy one-shot shape: the chunk window is the whole
+            // uncached suffix [start, len)
+            let ends = lengths.clone();
             let out = rt.run_prefill_paged(
-                staged, &tokens, &lengths, &starts, pool, &row_tables,
+                staged, &tokens, &lengths, &starts, &ends, pool,
+                &row_tables,
             )?;
             runtime::literal_to_f32(&out, b * s * v)?
         };
@@ -682,6 +1141,8 @@ impl Engine {
                 &mut rng,
             );
             let ttft = req.arrived.elapsed().as_secs_f64();
+            let ttft_steps =
+                self.step_counter.saturating_sub(req.queued_step);
             self.metrics.prefill_tokens += plen as u64;
             self.metrics.admitted += 1;
             self.admit_counter += 1;
@@ -692,6 +1153,8 @@ impl Engine {
                     generated: vec![tok],
                     last_token: tok,
                     ttft_s: ttft,
+                    ttft_steps,
+                    last_token_step: self.step_counter,
                     rng,
                     req,
                     admit_seq: self.admit_counter,
@@ -752,7 +1215,16 @@ impl Engine {
                 let staged = self.staged_decode.as_ref().ok_or_else(
                     || anyhow!("paged decode without staging"),
                 )?;
-                let (tables, pool) = paged.decode_view();
+                let (slot_tables, pool) = paged.decode_view();
+                // mask to DECODING sequences: a mid-prefill slot owns
+                // a (growing) table too, but must not decode — its
+                // row stays idle (empty table) so the backend never
+                // writes a bogus token into its pages
+                let mut tables: Vec<&[u32]> =
+                    vec![&[]; slot_tables.len()];
+                for seq in self.active.values() {
+                    tables[seq.slot] = slot_tables[seq.slot];
+                }
                 let out = self.rt.run_decode_paged(
                     staged, &token, &pos, pool, &tables,
                 )?;
@@ -830,6 +1302,13 @@ impl Engine {
         for (id, seq) in self.active.iter_mut() {
             self.kv.advance(seq.slot)?;
             self.metrics.decode_tokens += 1;
+            // inter-token latency in engine steps (1.0 = a token
+            // every iteration, the fused scheduler's steady state)
+            self.metrics.itl_steps.add(
+                self.step_counter.saturating_sub(seq.last_token_step)
+                    as f64,
+            );
+            seq.last_token_step = self.step_counter;
             let off = seq.slot * v;
             let tok = sample(
                 &logits[off..off + v],
@@ -862,6 +1341,7 @@ impl Engine {
             let total = seq.req.arrived.elapsed().as_secs_f64();
             self.metrics.record_completion(
                 seq.ttft_s,
+                seq.ttft_steps,
                 total,
                 seq.generated.len(),
             );
@@ -871,6 +1351,7 @@ impl Engine {
                 tokens: seq.generated,
                 finish,
                 ttft_s: seq.ttft_s,
+                ttft_steps: seq.ttft_steps,
                 total_s: total,
             });
         }
@@ -916,11 +1397,12 @@ impl Engine {
 
     /// Make sure every active sequence owns a page for its next write
     /// position, growing tables on demand.  When the pool runs dry the
-    /// YOUNGEST active sequence is preempted: its blocks return to the
-    /// pool and its request re-enters the queue front for re-prefill
-    /// (generation is seed-deterministic, so the re-run reproduces the
-    /// same tokens).  A sequence that exhausts the pool all by itself
-    /// finishes at capacity instead of thrashing.
+    /// YOUNGEST resident sequence — decoding OR mid-prefill — is
+    /// preempted: its blocks return to the pool and its request
+    /// re-enters the queue front for re-prefill (generation is
+    /// seed-deterministic, so the re-run reproduces the same tokens).
+    /// A sequence that exhausts the pool all by itself finishes at
+    /// capacity instead of thrashing.
     fn ensure_decode_capacity(&mut self) -> Result<()> {
         let mut order: Vec<(u64, u64)> = self
             .active
@@ -938,19 +1420,17 @@ impl Engine {
                 if paged.ensure_write_capacity(slot) {
                     break;
                 }
-                if self.active.len() == 1 {
+                if self.resident_count() == 1 {
                     // sole block holder: preempting itself would just
                     // re-prefill into the same wall — finish here
                     self.finish_at_capacity(id);
                     break;
                 }
-                // evict the youngest sequence (largest admission stamp)
+                // evict the youngest resident (largest admission
+                // stamp), mid-prefill sequences included
                 let victim = self
-                    .active
-                    .values()
-                    .max_by_key(|s| s.admit_seq)
-                    .map(|s| s.req.id)
-                    .expect("active is non-empty");
+                    .youngest_resident()
+                    .expect("residents exist");
                 self.preempt(victim);
                 if victim == id {
                     break; // it evicted itself; nothing left to back
@@ -960,17 +1440,30 @@ impl Engine {
         Ok(())
     }
 
-    /// Evict one active sequence: blocks back to the pool, generated
-    /// tokens discarded, request re-queued FRONT for re-prefill.
+    /// Evict one resident sequence — decoding (generated tokens
+    /// discarded) or mid-prefill (chunk progress discarded): blocks
+    /// back to the pool, request re-queued FRONT for re-prefill.
     fn preempt(&mut self, id: u64) {
-        let seq = self.active.remove(&id).expect("preempt target active");
-        self.kv.free(seq.slot);
-        crate::util::log::debug(&format!(
-            "preempt: request {id} re-queued after {} generated tokens \
-             (pool dry)",
-            seq.generated.len()
-        ));
-        self.queue.requeue_front(seq.req);
+        if let Some(seq) = self.active.remove(&id) {
+            self.kv.free(seq.slot);
+            crate::util::log::debug(&format!(
+                "preempt: request {id} re-queued after {} generated \
+                 tokens (pool dry)",
+                seq.generated.len()
+            ));
+            self.queue.requeue_front(seq.req);
+        } else if let Some(e) = self.sched.remove(id) {
+            self.kv.free(e.slot);
+            crate::util::log::debug(&format!(
+                "preempt: mid-prefill request {id} re-queued at \
+                 position {}/{} (pool dry)",
+                e.done,
+                e.req.prompt.len()
+            ));
+            self.queue.requeue_front(e.req);
+        } else {
+            unreachable!("preempt target {id} is not resident");
+        }
         self.metrics.preempted += 1;
     }
 
@@ -982,6 +1475,7 @@ impl Engine {
         let total = seq.req.arrived.elapsed().as_secs_f64();
         self.metrics.record_completion(
             seq.ttft_s,
+            seq.ttft_steps,
             total,
             seq.generated.len(),
         );
@@ -991,6 +1485,7 @@ impl Engine {
             tokens: seq.generated,
             finish: FinishReason::MaxTokens,
             ttft_s: seq.ttft_s,
+            ttft_steps: seq.ttft_steps,
             total_s: total,
         });
     }
@@ -1056,7 +1551,7 @@ impl Engine {
         lengths: &[i32],
     ) -> Result<Vec<f32>> {
         let b = self.opts.prefill_batch;
-        let s = self.policy.max_prompt;
+        let s = self.prefill_seq;
         if tokens.len() != b * s || lengths.len() != b {
             bail!(
                 "prefill_logits wants [{b},{s}] tokens (+{b} lengths), got {}",
@@ -1080,7 +1575,7 @@ impl Engine {
 
     /// (batch, seq, vocab) of the serving prefill bucket.
     pub fn prefill_dims(&self) -> (usize, usize, usize) {
-        (self.opts.prefill_batch, self.policy.max_prompt, self.info.vocab)
+        (self.opts.prefill_batch, self.prefill_seq, self.info.vocab)
     }
 
     /// Swap in a different quantized weight set (same variant/layout).

@@ -147,6 +147,7 @@ fn engine_thread(
                             finish:
                                 super::request::FinishReason::Rejected,
                             ttft_s: 0.0,
+                            ttft_steps: 0,
                             total_s: 0.0,
                         });
                     }

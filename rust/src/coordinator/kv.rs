@@ -11,9 +11,15 @@
 //! actually produced, not to `max_seq`.  The [`BlockAllocator`] hands
 //! out blocks from a free list and recycles them when sequences finish.
 //!
-//! **Admission** is gated on free *blocks* (enough for the prompt), not
-//! just free slots, so a prompt-heavy queue can keep more sequences
-//! resident than the contiguous layout ever could in the same memory.
+//! **Admission** is gated on free *blocks*, not just free slots, so a
+//! prompt-heavy queue can keep more sequences resident than the
+//! contiguous layout ever could in the same memory.  Under the
+//! iteration-level scheduler the demand shrinks further: a
+//! chunk-backed admission ([`PagedKv::alloc_seq_backed`]) claims only
+//! the cached prefix plus the FIRST chunk's blocks, and each later
+//! chunk pages its own blocks in on use
+//! ([`PagedKv::ensure_prefill_capacity`]) — a long prompt never pins
+//! its full block demand while trickling through the token budget.
 //! **Preemption**: when a decode step needs a new block and the pool is
 //! dry, the engine evicts the YOUNGEST active sequence (latest
 //! admission) — its blocks return to the pool and the request re-enters
@@ -472,6 +478,28 @@ pub struct Admitted {
     pub start: usize,
 }
 
+/// Shared chunk-backed admission arithmetic, derived from the length
+/// of the matched prefix chain: `(full_hit, retained_n, start,
+/// cover)`.  Used by BOTH the feasibility pre-check
+/// ([`PagedKv::admission_feasible_backed`]) and the claim
+/// ([`PagedKv::alloc_seq_backed`]) so the two can never drift — a
+/// pre-check more optimistic than the claim would let a failed claim
+/// destroy prefix-index entries via mid-claim reclaim.
+fn admission_shape(
+    matched_len: usize,
+    prompt_len: usize,
+    block_size: usize,
+    backed_suffix: usize,
+) -> (bool, usize, usize, usize) {
+    let l = prompt_len;
+    let full_hit = l > 0 && matched_len * block_size >= l;
+    let retained_n =
+        if full_hit { matched_len - 1 } else { matched_len };
+    let start = if full_hit { l - 1 } else { matched_len * block_size };
+    let cover = (start + backed_suffix.max(1)).min(l.max(1));
+    (full_hit, retained_n, start, cover)
+}
+
 /// Paged KV manager: decode slots + per-slot block tables over a
 /// [`KvBlockPool`], with a refcounted [`BlockAllocator`] free list and
 /// a content-addressed [`PrefixIndex`] for cross-request prefix
@@ -561,37 +589,71 @@ impl PagedKv {
     /// fully cached block-aligned prompt CoW-forks its tail block and
     /// recomputes the final position into the private copy.  None = no
     /// capacity right now (nothing retained, nothing claimed).
+    ///
+    /// Backs the WHOLE prompt up front; the chunked scheduler admits
+    /// via [`Self::alloc_seq_backed`] instead, claiming fresh blocks
+    /// only for the first chunk and growing per chunk
+    /// ([`Self::ensure_prefill_capacity`]).
     pub fn alloc_seq(
         &mut self,
         request_id: u64,
         prompt: &[i32],
     ) -> Option<Admitted> {
+        self.alloc_seq_backed(request_id, prompt, prompt.len())
+    }
+
+    /// Admit like [`Self::alloc_seq`], but claim fresh blocks only to
+    /// back `backed_suffix` positions past the cached prefix (clamped
+    /// to the prompt; a full cache hit behaves exactly like
+    /// `alloc_seq`).  The chunked scheduler admits with
+    /// `backed_suffix == 1` — one block backs the first computed
+    /// position — and pages the rest in chunk by chunk, so a long
+    /// prompt no longer pins `blocks_for(prompt)` blocks while it
+    /// trickles through the token budget.
+    pub fn alloc_seq_backed(
+        &mut self,
+        request_id: u64,
+        prompt: &[i32],
+        backed_suffix: usize,
+    ) -> Option<Admitted> {
         if self.prefix.is_none() {
+            let cover = backed_suffix.min(prompt.len()).max(1);
             return self
-                .alloc_seq_uncached(request_id, prompt.len())
+                .alloc_seq_uncached_covering(request_id, cover)
                 .map(|slot| Admitted { slot, start: 0 });
         }
         // exact feasibility pre-check BEFORE touching anything: a
         // failed claim can roll back the blocks it took, but index
         // entries evicted by mid-claim reclaim are gone for good —
         // never start a claim that cannot complete
-        if !self.admission_feasible(prompt, 0) {
+        if !self.admission_feasible_backed(prompt, backed_suffix, 0) {
             return None;
         }
         let slot =
             (0..self.batch).find(|&i| self.slots[i].is_none())?;
         let l = prompt.len();
         let bs = self.pool.block_size;
-        let need_total = self.blocks_for(l);
         let matched = Self::longest_chain(
             self.prefix.as_mut().expect("checked above"),
             prompt,
             bs,
         );
+        // positions to back now: the cached prefix plus `backed_suffix`
+        // computable positions (the prefill always recomputes at least
+        // one position, so at least one backed position past `start`)
+        let (full_hit, _, start_probe, cover) =
+            admission_shape(matched.len(), l, bs, backed_suffix);
+        let need_total = self.blocks_for(cover);
         // chunks are full blocks of the prompt, so the chain can never
-        // outrun the table
-        debug_assert!(matched.len() <= need_total);
-        let full_hit = l > 0 && matched.len() * bs >= l;
+        // outrun the covered table
+        debug_assert!(
+            if full_hit {
+                matched.len() >= need_total
+            } else {
+                matched.len() < need_total
+            },
+            "chain/coverage accounting broke"
+        );
         // retain every matched block except (on a full hit) the tail,
         // which becomes the CoW-fork source instead
         let retained: Vec<u32> = if full_hit {
@@ -624,8 +686,7 @@ impl PagedKv {
             self.pool.copy_block(matched[matched.len() - 1], fresh[0]);
             self.cow_forks += 1;
         }
-        let start =
-            if full_hit { l - 1 } else { matched.len() * bs };
+        let start = start_probe;
         let mut table = retained;
         table.extend(fresh);
         self.slots[slot] = Some(request_id);
@@ -643,16 +704,27 @@ impl PagedKv {
         request_id: u64,
         prompt_len: usize,
     ) -> Option<usize> {
+        self.alloc_seq_uncached_covering(request_id, prompt_len)
+    }
+
+    /// Uncached admission backing only positions `0..cover` (the
+    /// chunked scheduler's prefix-cache-off path; later chunks page
+    /// the rest in via [`Self::ensure_prefill_capacity`]).
+    fn alloc_seq_uncached_covering(
+        &mut self,
+        request_id: u64,
+        cover: usize,
+    ) -> Option<usize> {
         let slot =
             (0..self.batch).find(|&i| self.slots[i].is_none())?;
         // nothing is retained on this path, so the plain availability
         // count is exact — never start a claim that cannot complete
         // (mid-claim reclaim evictions would not be restorable)
-        if self.available_blocks() < self.blocks_for(prompt_len) {
+        if self.available_blocks() < self.blocks_for(cover) {
             return None;
         }
         let blocks =
-            self.alloc_n_reclaiming(self.blocks_for(prompt_len))?;
+            self.alloc_n_reclaiming(self.blocks_for(cover))?;
         self.slots[slot] = Some(request_id);
         self.pos[slot] = 0;
         self.suffix_start[slot] = 0;
@@ -718,12 +790,24 @@ impl PagedKv {
         prompt: &[i32],
         reserve: usize,
     ) -> bool {
+        self.admission_feasible_backed(prompt, prompt.len(), reserve)
+    }
+
+    /// [`Self::admission_feasible`] for a chunk-backed admission
+    /// ([`Self::alloc_seq_backed`]): the demand is the blocks backing
+    /// the cached prefix plus `backed_suffix` computable positions,
+    /// not the whole prompt.
+    pub fn admission_feasible_backed(
+        &self,
+        prompt: &[i32],
+        backed_suffix: usize,
+        reserve: usize,
+    ) -> bool {
         if !self.slots.iter().any(Option::is_none) {
             return false;
         }
         let l = prompt.len();
         let bs = self.pool.block_size;
-        let total = self.blocks_for(l);
         // non-mutating chain walk collecting the matched blocks
         let mut matched: Vec<u32> = Vec::new();
         if let Some(idx) = &self.prefix {
@@ -741,12 +825,9 @@ impl PagedKv {
                 parent = h;
             }
         }
-        let full_hit = l > 0 && matched.len() * bs >= l;
-        let retained_n = if full_hit {
-            matched.len() - 1
-        } else {
-            matched.len()
-        };
+        let (_, retained_n, _, cover) =
+            admission_shape(matched.len(), l, bs, backed_suffix);
+        let total = self.blocks_for(cover);
         let retained: BTreeSet<u32> =
             matched[..retained_n].iter().copied().collect();
         let fresh = total - retained_n;
@@ -991,6 +1072,28 @@ impl PagedKv {
                 None => false,
             }
         }
+    }
+
+    /// Grow `slot`'s table until it backs positions `0..upto` (the
+    /// chunked scheduler pages a prompt in chunk by chunk: admission
+    /// claimed the cached prefix plus the first chunk's block, each
+    /// later chunk claims its own blocks here before it runs).
+    /// Reclaims index-only blocks under pressure.  False = pool dry
+    /// (caller preempts); a partial grow keeps its blocks — they are
+    /// in the table, so preemption/free returns every one.
+    pub fn ensure_prefill_capacity(
+        &mut self,
+        slot: usize,
+        upto: usize,
+    ) -> bool {
+        let need = self.blocks_for(upto);
+        while self.tables[slot].len() < need {
+            match self.alloc_reclaiming() {
+                Some(b) => self.tables[slot].push(b),
+                None => return false,
+            }
+        }
+        true
     }
 
     /// Mark a sequence prefilled through the paged prefill path (K/V
@@ -1453,6 +1556,86 @@ mod tests {
         for b in held {
             assert_eq!(a.ref_count(b), 1, "held blocks untouched");
         }
+    }
+
+    #[test]
+    fn chunked_admission_backs_first_chunk_and_grows() {
+        let mut p = paged(); // 2 slots, block 4, 6 blocks
+        let a = p.alloc_seq_backed(1, &uniq(1, 14), 1).unwrap();
+        assert_eq!(a.start, 0);
+        assert_eq!(
+            p.table(a.slot).len(),
+            1,
+            "only the first chunk is backed at admission"
+        );
+        assert_eq!(p.free_blocks(), 5);
+        // second chunk covers positions 0..8 -> two blocks
+        assert!(p.ensure_prefill_capacity(a.slot, 8));
+        assert_eq!(p.table(a.slot).len(), 2);
+        // idempotent when already covered
+        assert!(p.ensure_prefill_capacity(a.slot, 7));
+        assert_eq!(p.table(a.slot).len(), 2);
+        // growth to the full prompt
+        assert!(p.ensure_prefill_capacity(a.slot, 14));
+        assert_eq!(p.table(a.slot).len(), 4);
+        p.finish_prefill(a.slot, 14).unwrap();
+        p.check_conservation().unwrap();
+        p.free_seq(a.slot);
+        assert_eq!(p.free_blocks(), 6, "all growth blocks recycled");
+        p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn prefill_growth_reports_dry_pool() {
+        let mut p = paged(); // 6 blocks
+        let a = p.alloc_seq_backed(1, &uniq(1, 20), 1).unwrap();
+        let b = p.alloc_seq_backed(2, &uniq(2, 20), 1).unwrap();
+        assert!(p.ensure_prefill_capacity(a.slot, 16)); // 4 blocks
+        assert!(
+            !p.ensure_prefill_capacity(b.slot, 20),
+            "pool must report dry (preemption territory)"
+        );
+        p.check_conservation().unwrap();
+        // freeing a rescues b (partial growth kept its blocks)
+        p.free_seq(a.slot);
+        assert!(p.ensure_prefill_capacity(b.slot, 20));
+        assert_eq!(p.table(b.slot).len(), 5);
+        p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn chunked_admission_composes_with_prefix_cache() {
+        let mut p = PagedKv::new(4, 2, 2, 64, 4, 4, 12);
+        let prompt = uniq(7, 12); // 3 full blocks
+        let a = p.alloc_seq(1, &prompt).unwrap();
+        p.finish_prefill(a.slot, 12).unwrap();
+        p.donate_prefix(a.slot, &prompt);
+        // longer prompt sharing the prefix, chunk-backed: retains the
+        // 3 cached blocks, claims ONE fresh block for the first chunk
+        let mut longer = prompt.clone();
+        longer.extend([9001, 9002, 9003, 9004, 9005]);
+        let before = p.blocks_allocated();
+        let b = p.alloc_seq_backed(2, &longer, 1).unwrap();
+        assert_eq!(
+            b.start, 12,
+            "chunking starts at the first uncached token"
+        );
+        assert_eq!(p.table(b.slot).len(), 4);
+        assert_eq!(
+            p.blocks_allocated() - before,
+            1,
+            "one fresh block for the first chunk"
+        );
+        assert!(p.ensure_prefill_capacity(b.slot, 17));
+        assert_eq!(p.table(b.slot).len(), 5);
+        p.finish_prefill(b.slot, 17).unwrap();
+        p.check_conservation().unwrap();
+        // a fully cached prompt behaves exactly like alloc_seq: CoW
+        // tail fork, last position recomputed
+        let c = p.alloc_seq_backed(3, &prompt, 1).unwrap();
+        assert_eq!(c.start, 11, "full hit recomputes the last position");
+        assert_eq!(p.table(c.slot).len(), 3);
+        p.check_conservation().unwrap();
     }
 
     #[test]

@@ -36,20 +36,44 @@ pub struct EngineMetrics {
     /// manager — the prefix cache's win is this growing slower than a
     /// cache-off run
     pub kv_blocks_allocated: u64,
+    /// engine iterations run (the clock the step-count latencies tick
+    /// against)
+    pub engine_steps: u64,
+    /// worst streak of consecutive engine iterations in which an
+    /// ACTIVE sequence received no decode token (head-of-line
+    /// blocking: a whole-prompt prefill stalling the decode batch).
+    /// The fused scheduler decodes every iteration, so chunking-on
+    /// pins this at 0; the legacy two-phase loop accrues one stall
+    /// per prefill step that runs with actives resident.
+    pub max_decode_stall_steps: u64,
     pub ttft: Summary,
     pub total_latency: Summary,
     pub tokens_out: Summary,
+    /// per-request time-to-first-token measured in ENGINE STEPS
+    /// (submit -> first token), recorded once per completed request —
+    /// wall-clock-free, so the chunking TTFT/ITL tradeoff is visible
+    /// in CI where timings are noisy
+    pub ttft_steps: Summary,
+    /// per-token inter-token latency in ENGINE STEPS (gap between
+    /// consecutive tokens of one sequence; 1.0 = a token every
+    /// iteration, the fused scheduler's steady state)
+    pub itl_steps: Summary,
 }
 
 impl EngineMetrics {
+    /// Record one COMPLETED request (preempted-and-readmitted requests
+    /// therefore contribute exactly one TTFT sample, wall-clock and
+    /// step-count alike).
     pub fn record_completion(
         &mut self,
         ttft_s: f64,
+        ttft_steps: u64,
         total_s: f64,
         n_tokens: usize,
     ) {
         self.completed += 1;
         self.ttft.add(ttft_s);
+        self.ttft_steps.add(ttft_steps as f64);
         self.total_latency.add(total_s);
         self.tokens_out.add(n_tokens as f64);
     }
@@ -72,6 +96,16 @@ impl EngineMetrics {
         }
     }
 
+    /// `(p50, p95)` of per-request TTFT in engine steps.
+    pub fn ttft_steps_pcts(&mut self) -> (f64, f64) {
+        (self.ttft_steps.p50(), self.ttft_steps.p95())
+    }
+
+    /// `(p50, p95)` of inter-token latency in engine steps.
+    pub fn itl_steps_pcts(&mut self) -> (f64, f64) {
+        (self.itl_steps.p50(), self.itl_steps.p95())
+    }
+
     /// Multi-line human report.
     pub fn report(&mut self) -> String {
         format!(
@@ -80,6 +114,9 @@ impl EngineMetrics {
              {} shared blocks (peak), {} blocks allocated\n\
              prefill: {} steps, {} tokens, {:.1} tok/s ({:.3}s total)\n\
              decode : {} steps, {} tokens, {:.1} tok/s ({:.3}s total)\n\
+             sched  : {} engine steps, max decode stall {} steps, \
+             ttft p50/p95 {:.1}/{:.1} steps, itl p50/p95 {:.1}/{:.1} \
+             steps\n\
              ttft   : {}\n\
              e2e    : {}",
             self.completed,
@@ -99,6 +136,12 @@ impl EngineMetrics {
             self.decode_tokens,
             self.decode_tps(),
             self.decode_time_s,
+            self.engine_steps,
+            self.max_decode_stall_steps,
+            self.ttft_steps.p50(),
+            self.ttft_steps.p95(),
+            self.itl_steps.p50(),
+            self.itl_steps.p95(),
             self.ttft.report_ms(),
             self.total_latency.report_ms(),
         )
@@ -115,7 +158,7 @@ mod tests {
         m.decode_tokens = 100;
         m.decode_time_s = 2.0;
         assert!((m.decode_tps() - 50.0).abs() < 1e-9);
-        m.record_completion(0.1, 1.0, 16);
+        m.record_completion(0.1, 3, 1.0, 16);
         assert_eq!(m.completed, 1);
         assert!(m.report().contains("completed=1"));
     }

@@ -7,12 +7,16 @@
 //! * [`kv`]      — KV-cache management: paged block tables over a fixed
 //!                 block pool (default, vLLM-style) or the contiguous
 //!                 per-slot mirror (`ODYSSEY_NO_PAGING=1`).
-//! * [`batcher`] — continuous batching policy: drains the queue into
-//!                 prefill buckets (admission gated on KV capacity,
-//!                 with requeue-front on transient shortage) and packs
-//!                 active slots into decode steps.
-//! * [`engine`]  — the generation loop over the PJRT executables; owns
-//!                 the runtime, quantized weights, and KV state.
+//! * [`batcher`] — iteration-level scheduling policy: assembles each
+//!                 engine step's fused work set (one decode token per
+//!                 active sequence + block-aligned prefill chunks)
+//!                 under a token budget, with admission gated on KV
+//!                 capacity and requeue-front on transient shortage.
+//! * [`sched`]   — per-request prefill progress for the chunked
+//!                 scheduler: which prompts are mid-prefill and how
+//!                 far each has advanced.
+//! * [`engine`]  — the generation loop over the execution backend;
+//!                 owns the runtime, quantized weights, and KV state.
 //! * [`handle`]  — thread-safe front door (mpsc) for servers/examples.
 //! * [`metrics`] — throughput/latency accounting.
 
@@ -23,6 +27,7 @@ pub mod kv;
 pub mod metrics;
 pub mod queue;
 pub mod request;
+pub mod sched;
 
 pub use engine::{Engine, EngineOptions};
 pub use handle::EngineHandle;

@@ -33,11 +33,21 @@ pub struct Request {
     pub prompt: Vec<i32>,
     pub params: GenParams,
     pub arrived: Instant,
+    /// engine step counter at submission (stamped by `Engine::submit`;
+    /// 0 until then).  Survives preemption requeues, so step-count
+    /// TTFT always measures from the ORIGINAL submission.
+    pub queued_step: u64,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<i32>, params: GenParams) -> Self {
-        Request { id, prompt, params, arrived: Instant::now() }
+        Request {
+            id,
+            prompt,
+            params,
+            arrived: Instant::now(),
+            queued_step: 0,
+        }
     }
 }
 
@@ -59,6 +69,10 @@ pub struct GenResult {
     pub finish: FinishReason,
     /// time to first token (prefill + queueing), seconds
     pub ttft_s: f64,
+    /// time to first token in ENGINE STEPS (submit -> first token) —
+    /// the wall-clock-free latency the chunked scheduler trades
+    /// against throughput; 0 for rejected requests
+    pub ttft_steps: u64,
     /// total wall time, seconds
     pub total_s: f64,
 }
@@ -93,6 +107,7 @@ mod tests {
             tokens: vec![1, 2, 3, 4],
             finish: FinishReason::MaxTokens,
             ttft_s: 0.1,
+            ttft_steps: 2,
             total_s: 2.0,
         };
         assert!((r.tokens_per_s() - 2.0).abs() < 1e-9);

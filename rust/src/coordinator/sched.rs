@@ -1,0 +1,215 @@
+//! Per-request prefill progress for the iteration-level scheduler.
+//!
+//! With chunked prefill, a prompt no longer moves through the engine
+//! as one monolithic prefill step: it is admitted (slot claimed,
+//! prefix-cache blocks retained, first chunk's blocks backed), then
+//! advances one block-aligned CHUNK per engine iteration while the
+//! active decode batch keeps producing a token every step.  This
+//! module owns that in-flight state: a [`PrefillSched`] of
+//! [`PrefillEntry`]s ordered by admission, each tracking how far its
+//! prompt has been computed (`done`), and the chunk-sizing rule the
+//! batcher's `plan_step` applies under the step token budget.
+//!
+//! Chunk/block alignment rule: a chunk ends on a KV-block boundary
+//! whenever the budget reaches at least one full block past `done`
+//! (so each chunk fills whole blocks and the next chunk starts
+//! aligned); when the budget is smaller than the distance to the next
+//! boundary the chunk takes the budgeted remainder unaligned —
+//! progress beats alignment — and the FINAL chunk always ends exactly
+//! at the prompt length.
+
+use super::request::Request;
+
+/// One prefill chunk scheduled for the current engine iteration: row
+/// `slot`'s prompt advances by positions `[start, end)`.
+#[derive(Clone, Debug)]
+pub struct ChunkPlan {
+    /// request id (keys into [`PrefillSched`])
+    pub id: u64,
+    /// decode slot / block table the sequence owns
+    pub slot: usize,
+    /// first position this chunk computes
+    pub start: usize,
+    /// one past the last position this chunk computes
+    pub end: usize,
+    /// true when `end` reaches the prompt length — the chunk that
+    /// produces the first token
+    pub last: bool,
+}
+
+/// The fused work set for one engine iteration, assembled by
+/// `batcher::plan_step` under the step token budget.
+#[derive(Debug, Default)]
+pub struct StepPlan {
+    /// run one decode token for every active sequence this iteration
+    /// (decode tokens are budgeted first and never withheld — the
+    /// budget throttles prefill work, not decode liveness)
+    pub decode: bool,
+    /// prefill chunks riding along this iteration (at most
+    /// `prefill_batch` rows — the prefill graph's batch bucket)
+    pub chunks: Vec<ChunkPlan>,
+}
+
+impl StepPlan {
+    /// Does this plan do any work at all?
+    pub fn is_idle(&self) -> bool {
+        !self.decode && self.chunks.is_empty()
+    }
+}
+
+/// One mid-prefill sequence: admitted (slot + initial blocks claimed)
+/// but not yet fully computed.
+pub struct PrefillEntry {
+    pub req: Request,
+    pub slot: usize,
+    /// next prompt position to compute; admission sets it to the
+    /// prefix-cache suffix start (0 on a miss)
+    pub done: usize,
+    /// the admission-time suffix start, kept for the prefix-hit
+    /// metrics emitted when the final chunk lands
+    pub start0: usize,
+    /// admission order stamp — preemption evicts the YOUNGEST
+    /// (largest), shared with the decode-side `ActiveSeq` stamps
+    pub admit_seq: u64,
+}
+
+/// In-flight prefills in admission order (oldest first, so the token
+/// budget always advances the longest-waiting prompt before newer
+/// ones — no prompt starves behind later arrivals).
+#[derive(Default)]
+pub struct PrefillSched {
+    entries: Vec<PrefillEntry>,
+}
+
+impl PrefillSched {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn push(&mut self, e: PrefillEntry) {
+        self.entries.push(e);
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.entries.iter().any(|e| e.req.id == id)
+    }
+
+    pub fn get(&self, id: u64) -> Option<&PrefillEntry> {
+        self.entries.iter().find(|e| e.req.id == id)
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut PrefillEntry> {
+        self.entries.iter_mut().find(|e| e.req.id == id)
+    }
+
+    /// Remove and return an entry (sequence finished its prefill or
+    /// was preempted).
+    pub fn remove(&mut self, id: u64) -> Option<PrefillEntry> {
+        let i = self.entries.iter().position(|e| e.req.id == id)?;
+        Some(self.entries.remove(i))
+    }
+
+    /// Admission-ordered iteration (oldest first).
+    pub fn iter(&self) -> impl Iterator<Item = &PrefillEntry> {
+        self.entries.iter()
+    }
+
+    /// Largest admission stamp among in-flight prefills (preemption
+    /// considers mid-prefill sequences alongside active decodes).
+    pub fn youngest(&self) -> Option<(u64, u64)> {
+        self.entries
+            .iter()
+            .map(|e| (e.admit_seq, e.req.id))
+            .max()
+    }
+}
+
+/// Where a chunk starting at `done` should end, given the remaining
+/// token budget and the block-alignment rule (see module docs).
+/// `chunking == false` means the whole remaining prompt (the
+/// `ODYSSEY_NO_CHUNKING` one-shot shape).  Returns `done` itself when
+/// the budget is exhausted (no chunk this step).
+pub fn chunk_end(
+    done: usize,
+    prompt_len: usize,
+    budget: usize,
+    block: usize,
+    chunking: bool,
+) -> usize {
+    debug_assert!(done < prompt_len, "fully prefilled entry scheduled");
+    if !chunking {
+        return prompt_len;
+    }
+    if budget == 0 {
+        return done;
+    }
+    let raw = (done + budget).min(prompt_len);
+    if raw == prompt_len {
+        return prompt_len; // final chunk: always to the end
+    }
+    let aligned = raw - raw % block.max(1);
+    if aligned > done {
+        aligned
+    } else {
+        raw // sub-block budget: take it unaligned, progress first
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::GenParams;
+
+    fn entry(id: u64, slot: usize, plen: usize, done: usize) -> PrefillEntry {
+        PrefillEntry {
+            req: Request::new(id, vec![1; plen], GenParams::default()),
+            slot,
+            done,
+            start0: done,
+            admit_seq: id,
+        }
+    }
+
+    #[test]
+    fn chunk_end_block_alignment() {
+        // budget reaches past a boundary: align down to it
+        assert_eq!(chunk_end(0, 100, 10, 4, true), 8);
+        assert_eq!(chunk_end(8, 100, 10, 4, true), 16);
+        // budget inside the first block: unaligned remainder
+        assert_eq!(chunk_end(0, 100, 3, 4, true), 3);
+        assert_eq!(chunk_end(3, 100, 3, 4, true), 6);
+        // final chunk always lands exactly on the prompt end
+        assert_eq!(chunk_end(96, 100, 10, 4, true), 100);
+        assert_eq!(chunk_end(96, 98, 100, 4, true), 98);
+        // zero budget: no progress
+        assert_eq!(chunk_end(5, 100, 0, 4, true), 5);
+        // chunking off: the whole remaining prompt, budget ignored
+        assert_eq!(chunk_end(0, 100, 1, 4, false), 100);
+    }
+
+    #[test]
+    fn sched_orders_and_removes() {
+        let mut s = PrefillSched::new();
+        s.push(entry(7, 0, 16, 0));
+        s.push(entry(9, 1, 16, 4));
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(7));
+        assert_eq!(s.youngest(), Some((9, 9)));
+        let ids: Vec<u64> = s.iter().map(|e| e.req.id).collect();
+        assert_eq!(ids, vec![7, 9], "admission order preserved");
+        let e = s.remove(7).unwrap();
+        assert_eq!(e.req.id, 7);
+        assert!(!s.contains(7));
+        assert!(s.remove(7).is_none());
+        s.get_mut(9).unwrap().done = 8;
+        assert_eq!(s.get(9).unwrap().done, 8);
+    }
+}

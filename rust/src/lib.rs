@@ -13,8 +13,9 @@
 //! * **L3** — this crate: the quantization toolchain (RTN / LWC / GPTQ /
 //!   SmoothQuant / AWQ, SINT4 packing), a pluggable execution runtime
 //!   (native CPU interpreter by default; PJRT over the AOT artifacts
-//!   behind `--features pjrt`), the serving coordinator (continuous
-//!   batching, KV cache management, prefill/decode scheduling), the
+//!   behind `--features pjrt`), the serving coordinator
+//!   (iteration-level scheduling with chunked prefill, paged KV cache
+//!   management, prefix sharing), the
 //!   analytical A100 perf model, and the experiment drivers that
 //!   regenerate every table and figure of the paper.
 //!

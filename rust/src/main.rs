@@ -30,7 +30,10 @@ fn main() {
 
 fn run(argv: &[String]) -> Result<()> {
     let args =
-        Args::parse(argv, &["force", "no-paging", "no-prefix-cache"])?;
+        Args::parse(
+            argv,
+            &["force", "no-paging", "no-prefix-cache", "no-chunking"],
+        )?;
     let cmd = args
         .positional
         .first()

@@ -54,23 +54,31 @@
 //! paths generate (`ODYSSEY_NO_PAGING=1` keeps the engine on the
 //! contiguous path the parity suite compares against).
 //!
-//! # Partial prefill (prefix-cache suffix computation)
+//! # Chunked / partial prefill (arbitrary `[start, end)` windows)
 //!
 //! With the paged pool refcounted into a prefix cache
 //! ([`crate::coordinator::kv::PagedKv`]), an admitted prompt may find
-//! its leading blocks already resident.
-//! [`ExecBackend::execute_prefill_paged`] runs a STAGED prefill that
-//! takes a per-row `start`: positions `0..start` are READ from the
-//! block pool through the row's table (cached history another request
-//! computed), and only positions `start..len` are computed — their
-//! K/V written through the table in place, logits returned for the
-//! whole bucket.  With `start == 0` it is a full prefill writing the
-//! pool directly (the cache-off paged path).  Per-row float ops are
-//! independent of which other rows/positions are computed, so a
-//! partial prefill is bit-identical to the full prefill at every
-//! computed position — the prefix-cache parity suite pins cache-on
-//! token streams equal to cache-off
-//! (`ODYSSEY_NO_PREFIX_CACHE=1` is the escape hatch).
+//! its leading blocks already resident; with the iteration-level
+//! scheduler (`coordinator/sched.rs`), a long prompt advances one
+//! CHUNK per engine step instead of monopolizing an iteration.  Both
+//! ride on one entry point: [`ExecBackend::execute_prefill_paged`]
+//! runs a STAGED prefill over per-row windows — positions
+//! `0..starts[bi]` are READ from the block pool through the row's
+//! table (cached history: a shared prefix another request computed,
+//! or this prompt's own earlier chunks), positions
+//! `starts[bi]..ends[bi]` are computed and their K/V written through
+//! the table in place, and positions `ends[bi]..lengths[bi]` are left
+//! for a later chunk.  With `start == 0, end == len` it is a full
+//! prefill writing the pool directly.  Per-row float ops are
+//! independent of which other rows/positions are computed in the same
+//! call, so any chunk schedule is bit-identical to the one-shot
+//! prefill at every computed position — pinned by the chunk-schedule
+//! property in `tests/properties.rs` (`ODYSSEY_NO_PREFIX_CACHE=1` /
+//! `ODYSSEY_NO_CHUNKING=1` are the escape hatches).  The native
+//! backend also COMPACTS the computed rows into a dense matrix before
+//! the linear/MLP GEMMs (every op is row-local, so compaction cannot
+//! change a computed row's bits): a chunk pays GEMM FLOPs for its own
+//! rows only, not for the full `[B, S]` bucket.
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -672,21 +680,24 @@ pub trait ExecBackend {
         tables: &[&[u32]],
     ) -> Result<Value>;
 
-    /// The paged/partial prefill variant: run one prefill step of a
-    /// STAGED prefill graph with K/V landing in the block pool.
-    /// `tokens` is the full `[B, S]` bucket, `lengths[bi]` the prompt
-    /// length, `starts[bi]` the cached-history length: positions
-    /// `0..starts[bi]` are READ from the pool through `tables[bi]`
-    /// (they were written by an earlier, logically identical prefix),
-    /// positions `starts[bi]..lengths[bi]` are computed and their K/V
-    /// written through the table IN PLACE.  Rows with an empty table
-    /// are idle (skipped, zero logits).  Returns the logits value
+    /// The paged/chunked prefill variant: run one prefill step of a
+    /// STAGED prefill graph with K/V landing in the block pool over
+    /// arbitrary per-row `[start, end)` windows.  `tokens` is the full
+    /// `[B, S]` bucket, `lengths[bi]` the prompt length, and row `bi`
+    /// computes exactly positions `starts[bi]..ends[bi]`: history
+    /// `0..starts[bi]` is READ from the pool through `tables[bi]` (a
+    /// shared cached prefix, or this prompt's own earlier chunks),
+    /// the window's K/V is written through the table IN PLACE, and
+    /// `ends[bi]..lengths[bi]` is left for a later chunk.  Rows with
+    /// an empty table or an empty window (`start == end`) are idle
+    /// (skipped, zero logits).  Returns the logits value
     /// `f32[B, S, V]` only — there are no cache outputs to install.
     ///
-    /// Computed positions are bit-identical to a full
-    /// `execute_staged` prefill of the same prompts (pinned by
-    /// `tests/properties.rs`): sharing changes where history K/V
-    /// comes from, never the float-op sequence that consumes it.
+    /// Computed positions are bit-identical to a full one-window
+    /// `execute_staged` prefill of the same prompts under ANY chunk
+    /// schedule (pinned by `tests/properties.rs`): chunking changes
+    /// where history K/V comes from, never the float-op sequence that
+    /// consumes it.
     #[allow(clippy::too_many_arguments)]
     fn execute_prefill_paged(
         &mut self,
@@ -694,6 +705,7 @@ pub trait ExecBackend {
         tokens: &[i32],
         lengths: &[i32],
         starts: &[i32],
+        ends: &[i32],
         pool: &mut KvBlockPool,
         tables: &[&[u32]],
     ) -> Result<Value>;
@@ -972,10 +984,11 @@ impl Runtime {
             .execute_decode_paged(staged, token, pos, pool, tables)
     }
 
-    /// Run one PAGED (and possibly partial) prefill step: cached
-    /// history `0..starts[bi]` is read from `pool` through the block
-    /// tables, the uncached suffix is computed and written in place.
-    /// Returns the logits value `f32[B, S, V]` only.
+    /// Run one PAGED (and possibly partial/chunked) prefill step: each
+    /// row computes its `starts[bi]..ends[bi]` window, reading cached
+    /// history `0..starts[bi]` from `pool` through the block tables
+    /// and writing the window's K/V in place.  Returns the logits
+    /// value `f32[B, S, V]` only.
     #[allow(clippy::too_many_arguments)]
     pub fn run_prefill_paged(
         &mut self,
@@ -983,6 +996,7 @@ impl Runtime {
         tokens: &[i32],
         lengths: &[i32],
         starts: &[i32],
+        ends: &[i32],
         pool: &mut KvBlockPool,
         tables: &[&[u32]],
     ) -> Result<Value> {
@@ -1006,30 +1020,35 @@ impl Runtime {
         if tokens.len() != b * s
             || lengths.len() != b
             || starts.len() != b
+            || ends.len() != b
             || tables.len() != b
         {
             bail!(
                 "{}: paged prefill wants tokens[{b},{s}] + \
-                 lengths/starts/tables of batch {b}, got {}/{}/{}/{}",
+                 lengths/starts/ends/tables of batch {b}, got \
+                 {}/{}/{}/{}/{}",
                 staged.graph(),
                 tokens.len(),
                 lengths.len(),
                 starts.len(),
+                ends.len(),
                 tables.len()
             );
         }
         for bi in 0..b {
-            if starts[bi] > lengths[bi] {
+            if starts[bi] > ends[bi] || ends[bi] > lengths[bi] {
                 bail!(
-                    "{}: row {bi} start {} exceeds length {}",
+                    "{}: row {bi} window [{}, {}) outside prompt \
+                     length {}",
                     staged.graph(),
                     starts[bi],
+                    ends[bi],
                     lengths[bi]
                 );
             }
         }
         self.backend.execute_prefill_paged(
-            staged, tokens, lengths, starts, pool, tables,
+            staged, tokens, lengths, starts, ends, pool, tables,
         )
     }
 
@@ -1072,6 +1091,28 @@ pub fn prefix_cache_enabled_from_env() -> bool {
         std::env::var("ODYSSEY_NO_PREFIX_CACHE").as_deref(),
         Ok("1") | Ok("true")
     )
+}
+
+/// `ODYSSEY_NO_CHUNKING=1` (or `true`) disables the iteration-level
+/// scheduler's chunked prefill and puts the engine back on the legacy
+/// two-phase (whole-prompt prefill | decode) loop — the escape hatch
+/// the chunked/unchunked parity tests compare against.  Anything else
+/// (including unset) leaves chunking on.
+pub fn chunking_enabled_from_env() -> bool {
+    !matches!(
+        std::env::var("ODYSSEY_NO_CHUNKING").as_deref(),
+        Ok("1") | Ok("true")
+    )
+}
+
+/// `ODYSSEY_STEP_TOKEN_BUDGET=N` overrides the engine's per-iteration
+/// token budget (see `EngineOptions::step_token_budget`); unset or
+/// unparsable leaves the built-in default.
+pub fn step_token_budget_from_env() -> Option<usize> {
+    std::env::var("ODYSSEY_STEP_TOKEN_BUDGET")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
 }
 
 #[cfg(test)]

@@ -1208,34 +1208,33 @@ fn decode_core_paged(
     Ok((Value::f32(&[b, v], logits.into_vec()), kv_bytes))
 }
 
-/// Paged (and possibly partial) prefill on pre-parsed weights: row
-/// `bi` computes positions `starts[bi]..lengths[bi]` only — K/V for
-/// the cached history `0..starts[bi]` is READ from the block pool
-/// through the row's table (written earlier by a logically identical
-/// prefix), and the computed suffix K/V is written through the table
-/// IN PLACE.  With `start == 0` this is a full prefill that writes
-/// the pool directly (the cache-off paged path).
+/// Paged chunked/partial prefill on pre-parsed weights: row `bi`
+/// computes exactly its `[starts[bi], ends[bi])` window — K/V for the
+/// history `0..starts[bi]` is READ from the block pool through the
+/// row's table (a shared cached prefix, or this prompt's own earlier
+/// chunks), the window's K/V is written through the table IN PLACE,
+/// and `ends[bi]..lengths[bi]` is left for a later chunk.  With
+/// `start == 0, end == len` this is a full prefill writing the pool
+/// directly (the cache-off paged path).
 ///
 /// Bit-exactness contract with [`prefill_core`]: every float op
 /// applied to a computed row is row-local (embedding, rms_norm,
 /// per-token activation quant, GEMM rows, rope) or reads K/V values
-/// that are bit-identical wherever they live (cached history equals
-/// what a full prefill would have computed, by induction over
-/// layers), in the same order — the `s`-length masked-score buffer,
-/// softmax, and weighted-sum loops are copied from `prefill_core`
-/// verbatim.  So partial-prefill logits and written K/V rows equal
-/// the full prefill's at every computed position (pinned by
-/// `tests/properties.rs`).  Idle rows (empty table) are skipped;
-/// their logits stay zero.
+/// that are bit-identical wherever they live (pool history equals
+/// what a one-shot prefill would have computed, by induction over
+/// layers and chunks), in the same order — the `s`-length
+/// masked-score buffer, softmax, and weighted-sum loops mirror
+/// `prefill_core` exactly.  So chunked logits and written K/V rows
+/// equal the one-shot prefill's at every computed position under ANY
+/// chunk schedule (pinned by `tests/properties.rs`).  Idle rows
+/// (empty table or empty window) are skipped; their logits stay zero.
 ///
-/// NOTE on cost: the batched linear/MLP GEMMs still run over the full
-/// `[B*S, d]` bucket (they always have — padding rows included), so a
-/// prefix hit skips the attention/rope/KV work of the cached
-/// positions but not the GEMM FLOPs; `prefill_tokens_skipped` counts
-/// positions not recomputed, not wall-clock.  Compacting the computed
-/// rows into a dense matrix before the GEMMs would stay bit-exact
-/// (every op is row-local) and is the natural next optimization (see
-/// ROADMAP).
+/// Suffix-only GEMMs: the computed rows are COMPACTED into a dense
+/// `[R, d]` matrix (R = Σ window sizes) before every linear/MLP GEMM,
+/// so a chunk pays FLOPs proportional to the positions it actually
+/// computes — not to the full `[B*S, d]` bucket the pre-chunking
+/// interpreter always batched.  Compaction cannot change a computed
+/// row's bits: every dense op is row-local.
 ///
 /// Returns `(logits f32[B, S, V], kv bytes written)`.
 #[allow(clippy::too_many_arguments)]
@@ -1248,6 +1247,7 @@ fn prefill_core_paged(
     tokens: &[i32],
     lengths: &[i32],
     starts: &[i32],
+    ends: &[i32],
     pool: &mut super::KvBlockPool,
     tables: &[&[u32]],
     w: &Weights,
@@ -1257,11 +1257,12 @@ fn prefill_core_paged(
     if tokens.len() != b * s
         || lengths.len() != b
         || starts.len() != b
+        || ends.len() != b
         || tables.len() != b
     {
         bail!(
             "paged prefill wants tokens[{b},{s}] + \
-             lengths/starts/tables[{b}]"
+             lengths/starts/ends/tables[{b}]"
         );
     }
     if pool.n_layers != nl
@@ -1281,25 +1282,28 @@ fn prefill_core_paged(
     let (d, nh, dh) = (info.d_model, info.n_heads, info.head_dim);
     let v = info.vocab;
     let half = dh / 2;
-    let rows = b * s;
-    let active: Vec<bool> =
-        tables.iter().map(|t| !t.is_empty()).collect();
+    // a row participates when it has a table AND a non-empty window
+    let active: Vec<bool> = (0..b)
+        .map(|bi| !tables[bi].is_empty() && starts[bi] < ends[bi])
+        .collect();
     for bi in 0..b {
         if !active[bi] {
             continue;
         }
-        let (len, start) = (lengths[bi], starts[bi]);
+        let (len, start, end) = (lengths[bi], starts[bi], ends[bi]);
         if len <= 0 || len as usize > s {
             bail!("row {bi}: prompt length {len} outside 1..={s}");
         }
-        if start < 0 || start >= len {
+        if start < 0 || start >= end || end > len {
             bail!(
-                "row {bi}: start {start} leaves no position to \
-                 compute for length {len}"
+                "row {bi}: window [{start}, {end}) invalid for \
+                 length {len}"
             );
         }
-        let (len, start) = (len as usize, start as usize);
-        for p in 0..len {
+        let (start, end) = (start as usize, end as usize);
+        // history + the window itself must be paged in; later chunks
+        // page their own blocks before they run
+        for p in 0..end {
             if pool.locate(tables[bi], p).is_none() {
                 bail!(
                     "row {bi}: block table ({} blocks of {}) has no \
@@ -1309,7 +1313,7 @@ fn prefill_core_paged(
                 );
             }
         }
-        for p in start..len {
+        for p in start..end {
             let t = tokens[bi * s + p];
             if t < 0 || t as usize >= v {
                 bail!("token id {t} out of vocab range 0..{v}");
@@ -1317,18 +1321,30 @@ fn prefill_core_paged(
         }
     }
 
-    // embedding for the computed suffix rows only (other rows stay
-    // zero: no computed row ever reads them)
-    let mut x = vec![0f32; rows * d];
+    // ---- computed-row compaction map: compact row index -> (bi, p),
+    // rows ordered (bi asc, p asc) so a window is contiguous and
+    // (bi, ki) resolves to row_base[bi] + (ki - start)
+    let mut rows_map: Vec<(usize, usize)> = Vec::new();
+    let mut row_base = vec![usize::MAX; b];
     for bi in 0..b {
         if !active[bi] {
             continue;
         }
-        for p in starts[bi] as usize..lengths[bi] as usize {
-            let r = bi * s + p;
-            x[r * d..(r + 1) * d]
-                .copy_from_slice(w.embed.row(tokens[r] as usize));
+        row_base[bi] = rows_map.len();
+        for p in starts[bi] as usize..ends[bi] as usize {
+            rows_map.push((bi, p));
         }
+    }
+    let rows = rows_map.len();
+    if rows == 0 {
+        return Ok((Value::f32(&[b, s, v], vec![0f32; b * s * v]), 0));
+    }
+
+    // embedding of the computed rows only
+    let mut x = vec![0f32; rows * d];
+    for (r, &(bi, p)) in rows_map.iter().enumerate() {
+        x[r * d..(r + 1) * d]
+            .copy_from_slice(w.embed.row(tokens[bi * s + p] as usize));
     }
 
     // rope tables per in-bucket position (== global position: every
@@ -1361,21 +1377,15 @@ fn prefill_core_paged(
         let vv = qkv.pop().unwrap();
         let mut kk = qkv.pop().unwrap();
         let mut qq = qkv.pop().unwrap();
-        for bi in 0..b {
-            if !active[bi] {
-                continue;
-            }
-            for p in starts[bi] as usize..lengths[bi] as usize {
-                let r = bi * s + p;
-                let c = &cos[p * half..(p + 1) * half];
-                let sn = &sin[p * half..(p + 1) * half];
-                apply_rope_row(qq.row_mut(r), nh, dh, c, sn);
-                apply_rope_row(kk.row_mut(r), nh, dh, c, sn);
-            }
+        for (r, &(_, p)) in rows_map.iter().enumerate() {
+            let c = &cos[p * half..(p + 1) * half];
+            let sn = &sin[p * half..(p + 1) * half];
+            apply_rope_row(qq.row_mut(r), nh, dh, c, sn);
+            apply_rope_row(kk.row_mut(r), nh, dh, c, sn);
         }
 
-        // write the suffix K/V through the tables, then attend: the
-        // history 0..start is read from the pool, the suffix from the
+        // write the window's K/V through the tables, then attend: the
+        // history 0..start is read from the pool, the window from the
         // freshly computed rows — identical values either way
         let (kc, vc) = pool.layer_mut(li);
         let mut o2 = Tensor::<f32>::zeros(&[rows, d]);
@@ -1385,15 +1395,17 @@ fn prefill_core_paged(
                 continue;
             }
             let table = tables[bi];
-            let (len_b, start) =
-                (lengths[bi] as usize, starts[bi] as usize);
+            let len_b = lengths[bi] as usize;
+            let (start, end) =
+                (starts[bi] as usize, ends[bi] as usize);
+            let base = row_base[bi];
             // page address of (position, head 0); validated above
             let locate = |q: usize| -> usize {
                 (table[q / bs] as usize * bs + q % bs) * row_stride
             };
-            for p in start..len_b {
+            for p in start..end {
                 let dst = locate(p);
-                let r = bi * s + p;
+                let r = base + (p - start);
                 for h in 0..nh {
                     kc[dst + h * dh..dst + (h + 1) * dh].copy_from_slice(
                         &kk.row(r)[h * dh..(h + 1) * dh],
@@ -1404,8 +1416,8 @@ fn prefill_core_paged(
                 }
                 kv_bytes += (2 * nh * dh * 4) as u64;
             }
-            for qi in start..len_b {
-                let qr = bi * s + qi;
+            for qi in start..end {
+                let qr = base + (qi - start);
                 for h in 0..nh {
                     let qh = &qq.row(qr)[h * dh..(h + 1) * dh];
                     for (ki, sc) in scores.iter_mut().enumerate() {
@@ -1414,7 +1426,7 @@ fn prefill_core_paged(
                                 let off = locate(ki) + h * dh;
                                 &kc[off..off + dh]
                             } else {
-                                &kk.row(bi * s + ki)
+                                &kk.row(base + (ki - start))
                                     [h * dh..(h + 1) * dh]
                             };
                             let mut dot = 0f32;
@@ -1437,7 +1449,8 @@ fn prefill_core_paged(
                             let off = locate(ki) + h * dh;
                             &vc[off..off + dh]
                         } else {
-                            &vv.row(bi * s + ki)[h * dh..(h + 1) * dh]
+                            &vv.row(base + (ki - start))
+                                [h * dh..(h + 1) * dh]
                         };
                         for t in 0..dh {
                             oh[t] += att * vh[t];
@@ -1478,10 +1491,15 @@ fn prefill_core_paged(
         }
     }
 
-    // ---- head
+    // ---- head over the compacted rows, scattered into [B, S, V]
     let xf = rms_norm(&x, rows, d, &w.norm_f);
-    let logits = gemm_fp(&xf, &w.lm_head);
-    Ok((Value::f32(&[b, s, v], logits.into_vec()), kv_bytes))
+    let logits_c = gemm_fp(&xf, &w.lm_head);
+    let mut logits = vec![0f32; b * s * v];
+    for (r, &(bi, p)) in rows_map.iter().enumerate() {
+        logits[(bi * s + p) * v..(bi * s + p + 1) * v]
+            .copy_from_slice(logits_c.row(r));
+    }
+    Ok((Value::f32(&[b, s, v], logits), kv_bytes))
 }
 
 /// Standalone GEMM graphs (the measured kernel benches).  Unstaged
@@ -1975,6 +1993,7 @@ impl ExecBackend for NativeBackend {
         tokens: &[i32],
         lengths: &[i32],
         starts: &[i32],
+        ends: &[i32],
         pool: &mut super::KvBlockPool,
         tables: &[&[u32]],
     ) -> Result<Value> {
@@ -2010,6 +2029,7 @@ impl ExecBackend for NativeBackend {
             tokens,
             lengths,
             starts,
+            ends,
             pool,
             tables,
             weights,

@@ -421,21 +421,28 @@ impl ExecBackend for PjrtBackend {
         Ok(outs.swap_remove(0))
     }
 
-    /// Paged/partial prefill on PJRT, as a compatibility shim: the AOT
-    /// prefill artifact computes every prompt position from the tokens
-    /// alone (it has no history input), so the staged graph runs in
-    /// full and only the suffix rows `starts[bi]..lengths[bi]` scatter
-    /// back into the pool — the cached history positions are left
-    /// untouched (they may live in SHARED blocks), and the recomputed
-    /// values are bit-identical to what already sits there.  No
-    /// prefill FLOPs are saved on this backend; a true partial-prefill
-    /// HLO artifact would take a start offset + gathered history.
+    /// Paged chunked/partial prefill on PJRT, as a
+    /// recompute-and-scatter compatibility shim: the AOT prefill
+    /// artifact computes every prompt position from the tokens alone
+    /// (it has no history input), so the staged graph runs in full
+    /// and only the window rows `starts[bi]..ends[bi]` scatter back
+    /// into the pool — positions outside the window are left
+    /// untouched (history may live in SHARED blocks, and positions
+    /// past `end` belong to a later chunk whose blocks may not be
+    /// paged in yet), and the recomputed history values are
+    /// bit-identical to what already sits there.  No prefill FLOPs
+    /// are saved on this backend; a true chunk-window HLO artifact
+    /// would take start/end offsets + gathered history.
+    ///
+    /// NOTE: the full recompute needs the whole prompt in `tokens`
+    /// every chunk call (the engine always passes the full bucket).
     fn execute_prefill_paged(
         &mut self,
         staged: &StagedGraph,
         tokens: &[i32],
         lengths: &[i32],
         starts: &[i32],
+        ends: &[i32],
         pool: &mut super::KvBlockPool,
         tables: &[&[u32]],
     ) -> Result<Value> {
@@ -447,11 +454,12 @@ impl ExecBackend for PjrtBackend {
         if tokens.len() != b * s
             || lengths.len() != b
             || starts.len() != b
+            || ends.len() != b
             || tables.len() != b
         {
             bail!(
                 "{}: paged prefill wants tokens[{b},{s}] + \
-                 lengths/starts/tables of batch {b}",
+                 lengths/starts/ends/tables of batch {b}",
                 info.name
             );
         }
@@ -477,21 +485,22 @@ impl ExecBackend for PjrtBackend {
             bail!("{}: prefill returned {} outputs", info.name, outs.len());
         }
 
-        // scatter ONLY the computed suffix back; history stays put
+        // scatter ONLY the computed window back; history stays put and
+        // positions past `end` wait for their own chunk
         for l in 0..nl {
             let kc = outs[1 + l].as_slice::<f32>()?;
             let vc = outs[1 + nl + l].as_slice::<f32>()?;
             for bi in 0..b {
-                if tables[bi].is_empty() {
+                if tables[bi].is_empty() || starts[bi] >= ends[bi] {
                     continue;
                 }
-                let (len, start) =
-                    (lengths[bi] as usize, starts[bi] as usize);
+                let (end, start) =
+                    (ends[bi] as usize, starts[bi] as usize);
                 pool.scatter_row_from(
                     l,
                     tables[bi],
                     start,
-                    len,
+                    end,
                     smax,
                     &kc[bi * row_len..(bi + 1) * row_len],
                     &vc[bi * row_len..(bi + 1) * row_len],

@@ -86,6 +86,10 @@ impl Summary {
         self.percentile(50.0)
     }
 
+    pub fn p95(&mut self) -> f64 {
+        self.percentile(95.0)
+    }
+
     pub fn p99(&mut self) -> f64 {
         self.percentile(99.0)
     }

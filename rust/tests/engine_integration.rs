@@ -617,6 +617,293 @@ fn prefix_cache_survives_preemption_of_sharers() {
 }
 
 #[test]
+fn chunked_prefill_removes_decode_stalls_and_keeps_streams() {
+    // the tentpole acceptance run: three short requests decode while a
+    // LONG prompt arrives.  The legacy two-phase loop stalls every
+    // active decode behind the whole-prompt prefill; the fused
+    // scheduler advances the prompt chunk-by-chunk with zero decode
+    // stalls, and the token streams stay bit-identical.
+    with_engine(|_shared| {
+        let long_prompt = prompt(31, 96); // 24 KV blocks of 4
+        let run = |chunking: bool| {
+            let mut o = opts("fp");
+            o.paged = true;
+            o.staging = true;
+            o.chunking = chunking;
+            o.step_token_budget = 16;
+            o.kv_block_size = 4;
+            o.max_queue = 16;
+            let mut engine = Engine::new(o).unwrap();
+            assert_eq!(engine.chunking_active(), chunking);
+            for i in 0..3u64 {
+                engine.submit(Request::new(
+                    i,
+                    prompt(i as i32 + 1, 8),
+                    GenParams {
+                        max_new_tokens: 30,
+                        eos: None,
+                        ..Default::default()
+                    },
+                ));
+            }
+            // get the short requests prefilled and decoding first
+            engine.step().unwrap();
+            engine.step().unwrap();
+            assert!(engine.metrics.decode_tokens > 0, "decodes active");
+            engine.submit(Request::new(
+                10,
+                long_prompt.clone(),
+                GenParams {
+                    max_new_tokens: 4,
+                    eos: None,
+                    ..Default::default()
+                },
+            ));
+            let mut results = engine.run_until_idle().unwrap();
+            results.sort_by_key(|r| r.id);
+            (results, engine)
+        };
+
+        let (on_res, mut on) = run(true);
+        let (off_res, off) = run(false);
+
+        let on_tokens: Vec<&Vec<i32>> =
+            on_res.iter().map(|r| &r.tokens).collect();
+        let off_tokens: Vec<&Vec<i32>> =
+            off_res.iter().map(|r| &r.tokens).collect();
+        assert_eq!(
+            on_tokens, off_tokens,
+            "chunked serving must be bit-identical to chunking-off"
+        );
+        assert_eq!(on_res.len(), 4);
+
+        // the fused scheduler never withholds a decode token; the
+        // legacy loop stalls every active behind the long prefill
+        let m_on = &on.metrics;
+        let m_off = &off.metrics;
+        assert_eq!(
+            m_on.max_decode_stall_steps, 0,
+            "fused scheduler must decode every iteration"
+        );
+        assert!(
+            m_off.max_decode_stall_steps >= 1,
+            "legacy loop must stall actives behind the long prefill"
+        );
+        assert!(
+            m_on.max_decode_stall_steps < m_off.max_decode_stall_steps,
+            "chunking must strictly improve the worst decode stall"
+        );
+        // no decode slot waits more than ceil(prompt/chunk) steps; the
+        // long prompt's first token lands within its chunk count plus
+        // scheduling slack.  With budget 16 and 3 actives the chunk is
+        // >= 12 positions, so 96 tokens need <= 8 chunks.
+        let long = on_res.iter().find(|r| r.id == 10).unwrap();
+        let chunks = 96usize.div_ceil(12) as u64;
+        assert!(
+            long.ttft_steps <= chunks + 4,
+            "long-prompt TTFT {} steps exceeds {} chunks + slack",
+            long.ttft_steps,
+            chunks
+        );
+        assert!(m_on.engine_steps > 0 && m_on.decode_steps > 0);
+        // steady-state ITL of the fused path is one token per step
+        assert_eq!(on.metrics.itl_steps_pcts().0, 1.0, "itl p50");
+    });
+}
+
+#[test]
+fn escape_hatch_matrix_produces_identical_streams() {
+    // every combination of ODYSSEY_NO_PAGING x ODYSSEY_NO_PREFIX_CACHE
+    // x ODYSSEY_NO_CHUNKING (exercised through their EngineOptions
+    // equivalents) must produce bit-identical token streams — mixed
+    // workload: two distinct prompts, one repeated prompt (prefix-hit
+    // shape), one long prompt (multi-chunk shape).
+    with_engine(|_shared| {
+        let shared_prompt = prompt(41, 16);
+        let run = |paged: bool, prefix: bool, chunking: bool| {
+            let mut o = opts("fp");
+            o.paged = paged;
+            o.staging = true;
+            o.prefix_cache = prefix;
+            o.chunking = chunking;
+            o.step_token_budget = 12; // small: forces real chunking
+            o.kv_block_size = 4;
+            o.max_queue = 16;
+            let mut engine = Engine::new(o).unwrap();
+            for (i, p) in [
+                prompt(3, 9),
+                shared_prompt.clone(),
+                prompt(17, 40),
+                shared_prompt.clone(),
+                prompt(29, 12),
+            ]
+            .into_iter()
+            .enumerate()
+            {
+                engine.submit(Request::new(
+                    i as u64,
+                    p,
+                    GenParams {
+                        max_new_tokens: 5,
+                        eos: None,
+                        ..Default::default()
+                    },
+                ));
+            }
+            let mut results = engine.run_until_idle().unwrap();
+            results.sort_by_key(|r| r.id);
+            results
+                .into_iter()
+                .map(|r| r.tokens)
+                .collect::<Vec<_>>()
+        };
+
+        let reference = run(false, false, false);
+        assert_eq!(reference.len(), 5);
+        assert!(reference.iter().all(|t| t.len() == 5));
+        for paged in [false, true] {
+            for prefix in [false, true] {
+                for chunking in [false, true] {
+                    let got = run(paged, prefix, chunking);
+                    assert_eq!(
+                        got, reference,
+                        "paging={paged} prefix={prefix} \
+                         chunking={chunking} diverged from the \
+                         all-hatches-off baseline"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn oversize_prompts_reject_up_front_on_both_kv_paths() {
+    // bugfix satellite: a prompt the decode path can never extend
+    // (len >= max_seq) must bounce with FinishReason::Rejected at
+    // admission on BOTH KV paths — it used to be caught only deep in
+    // the runtime on the contiguous path
+    with_engine(|_shared| {
+        for paged in [true, false] {
+            let mut o = opts("fp");
+            o.paged = paged;
+            o.max_queue = 16;
+            let mut engine = Engine::new(o).unwrap();
+            let max_seq = engine.info().max_seq;
+            engine.submit(Request::new(
+                1,
+                prompt(0, max_seq),
+                GenParams::default(),
+            ));
+            engine.submit(Request::new(
+                2,
+                prompt(0, 8),
+                GenParams {
+                    max_new_tokens: 2,
+                    eos: None,
+                    ..Default::default()
+                },
+            ));
+            let results = engine.run_until_idle().unwrap();
+            let rejected =
+                results.iter().find(|r| r.id == 1).unwrap();
+            assert_eq!(
+                rejected.finish,
+                FinishReason::Rejected,
+                "paged={paged}: oversize prompt must reject cleanly"
+            );
+            assert!(rejected.tokens.is_empty());
+            let ok = results.iter().find(|r| r.id == 2).unwrap();
+            assert_eq!(ok.tokens.len(), 2, "paged={paged}");
+        }
+    });
+}
+
+#[test]
+fn max_prompt_cap_validated_at_construction() {
+    with_engine(|_shared| {
+        // a cap the prefill graph cannot serve is a construction error
+        let mut o = opts("fp");
+        o.max_prompt = Some(4096);
+        assert!(
+            Engine::new(o).is_err(),
+            "max_prompt beyond the seq bucket must fail construction"
+        );
+        let mut o = opts("fp");
+        o.max_prompt = Some(0);
+        assert!(Engine::new(o).is_err(), "zero cap must fail");
+        let mut o = opts("fp");
+        o.step_token_budget = 0;
+        assert!(Engine::new(o).is_err(), "zero budget must fail");
+        // a valid tighter cap admits under it and rejects over it
+        let mut o = opts("fp");
+        o.max_prompt = Some(10);
+        let mut engine = Engine::new(o).unwrap();
+        engine.submit(Request::new(
+            1,
+            prompt(0, 12),
+            GenParams::default(),
+        ));
+        engine.submit(Request::new(
+            2,
+            prompt(0, 10),
+            GenParams {
+                max_new_tokens: 2,
+                eos: None,
+                ..Default::default()
+            },
+        ));
+        let results = engine.run_until_idle().unwrap();
+        assert_eq!(
+            results.iter().find(|r| r.id == 1).unwrap().finish,
+            FinishReason::Rejected
+        );
+        assert_eq!(
+            results.iter().find(|r| r.id == 2).unwrap().tokens.len(),
+            2
+        );
+    });
+}
+
+#[test]
+fn no_chunking_env_var_flips_the_default() {
+    // same serialization rationale as the staging/paging twins below
+    with_engine(|_shared| {
+        let saved = std::env::var("ODYSSEY_NO_CHUNKING").ok();
+        std::env::remove_var("ODYSSEY_NO_CHUNKING");
+        let on_by_default = odyssey::runtime::chunking_enabled_from_env();
+        std::env::set_var("ODYSSEY_NO_CHUNKING", "1");
+        let off = odyssey::runtime::chunking_enabled_from_env();
+        let opts_off = EngineOptions::default().chunking;
+        match saved {
+            Some(v) => std::env::set_var("ODYSSEY_NO_CHUNKING", v),
+            None => std::env::remove_var("ODYSSEY_NO_CHUNKING"),
+        }
+        assert!(on_by_default, "chunking must default on");
+        assert!(!off, "ODYSSEY_NO_CHUNKING=1 must disable it");
+        assert!(!opts_off, "EngineOptions::default must honor the env");
+
+        // the step-token-budget env override, same serialization
+        let saved = std::env::var("ODYSSEY_STEP_TOKEN_BUDGET").ok();
+        std::env::set_var("ODYSSEY_STEP_TOKEN_BUDGET", "24");
+        let opts_budget = EngineOptions::default().step_token_budget;
+        std::env::set_var("ODYSSEY_STEP_TOKEN_BUDGET", "0");
+        let zero_ignored =
+            odyssey::runtime::step_token_budget_from_env();
+        match saved {
+            Some(v) => {
+                std::env::set_var("ODYSSEY_STEP_TOKEN_BUDGET", v)
+            }
+            None => {
+                std::env::remove_var("ODYSSEY_STEP_TOKEN_BUDGET")
+            }
+        }
+        assert_eq!(opts_budget, 24, "env budget must flow to options");
+        assert_eq!(zero_ignored, None, "a zero budget is ignored");
+    });
+}
+
+#[test]
 fn no_prefix_cache_env_var_flips_the_default() {
     // same serialization rationale as the staging/paging twins below
     with_engine(|_shared| {

@@ -543,6 +543,7 @@ fn prop_partial_prefill_bit_identical_to_full() {
                     &tokens,
                     &lengths,
                     &[0],
+                    &[plen as i32],
                     &mut pool_a,
                     &[&table_a],
                 )
@@ -575,6 +576,7 @@ fn prop_partial_prefill_bit_identical_to_full() {
                     &tokens,
                     &lengths,
                     &[start as i32],
+                    &[plen as i32],
                     &mut pool_b,
                     &[&table_b],
                 )
@@ -605,6 +607,175 @@ fn prop_partial_prefill_bit_identical_to_full() {
                     ka == kb && va == vb,
                     "{variant} layer {l}: partial-prefill K/V differs \
                      (start={start}, plen={plen})"
+                );
+            }
+        }
+    });
+}
+
+/// Chunked prefill must be BIT-IDENTICAL to the one-shot prefill under
+/// ANY chunk schedule: run a full paged prefill of a random prompt,
+/// then replay the SAME prompt through a random sequence of
+/// `[start, end)` windows (random per-chunk budgets through the real
+/// `sched::chunk_end` sizing rule, optionally starting from a cached
+/// prefix as the engine does on an index hit) into a second pool over
+/// shuffled block ids.  Logits at every computed position and the K/V
+/// written through the tables must match exactly, for every serving
+/// variant — the contract that lets `ODYSSEY_NO_CHUNKING=1` and the
+/// fused scheduler produce identical token streams.
+#[test]
+fn prop_chunked_prefill_bit_identical_to_unchunked() {
+    use odyssey::coordinator::sched::chunk_end;
+    synth::ensure_artifacts("artifacts").expect("synthesize artifacts");
+    Prop::new("chunked == unchunked (prefill)").cases(2).check(|rng| {
+        let mut rt =
+            Runtime::with_backend("artifacts", BackendKind::Native)
+                .unwrap();
+        let info = rt.manifest.model("tiny3m").unwrap().clone();
+        let group = rt.manifest.group_size;
+        let (nl, nh, dh) = (info.n_layers, info.n_heads, info.head_dim);
+        let smax = info.max_seq;
+        for variant in ["fp", "w8a8", "w4a8_fast"] {
+            let ckpt = random_checkpoint(&info, rng);
+            let qw = model::quantize_checkpoint(
+                &ckpt,
+                None,
+                &QuantRecipe::vanilla_w4(),
+                variant,
+                group,
+            )
+            .unwrap();
+            let weights: Vec<runtime::Literal> = qw
+                .tensors
+                .iter()
+                .map(|t| runtime::literal_from_st(t).unwrap())
+                .collect();
+            let pairs: Vec<(&str, &runtime::Literal)> = qw
+                .names
+                .iter()
+                .map(String::as_str)
+                .zip(weights.iter())
+                .collect();
+            let graph = format!("tiny3m_{variant}_prefill_b1");
+            let gi = rt.manifest.graph(&graph).unwrap().clone();
+            let (b, s) = (gi.batch, gi.seq);
+            assert_eq!(b, 1);
+            let staged = rt.stage(&graph, &pairs).unwrap();
+
+            let bs_kv = 4usize;
+            let plen = 9 + (rng.next_u64() % 10) as usize; // 9..=18
+            let mut tokens = vec![0i32; b * s];
+            for t in tokens.iter_mut().take(plen) {
+                *t = rng.range(3, info.vocab as i64 - 1) as i32;
+            }
+            let lengths = [plen as i32];
+            let n_blocks = 16usize;
+            let need = plen.div_ceil(bs_kv);
+
+            // reference: ONE window [0, plen) into pool A
+            let table_a: Vec<u32> = (0..need as u32).collect();
+            let mut pool_a =
+                KvBlockPool::new(n_blocks, bs_kv, nl, nh, dh);
+            let full_logits = rt
+                .run_prefill_paged(
+                    &staged,
+                    &tokens,
+                    &lengths,
+                    &[0],
+                    &[plen as i32],
+                    &mut pool_a,
+                    &[&table_a],
+                )
+                .unwrap()
+                .to_vec::<f32>()
+                .unwrap();
+
+            // chunked replay into pool B over shuffled block ids,
+            // optionally starting from a cached prefix (the engine's
+            // prefix-hit shape: chunking starts at the first uncached
+            // token)
+            let mut ids: Vec<u32> = (0..n_blocks as u32).collect();
+            for i in (1..ids.len()).rev() {
+                let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+                ids.swap(i, j);
+            }
+            let table_b: Vec<u32> = ids[..need].to_vec();
+            let mut pool_b =
+                KvBlockPool::new(n_blocks, bs_kv, nl, nh, dh);
+            let start0 = if rng.next_f64() < 0.5 {
+                // block-aligned cached prefix, at least one position
+                // left to compute
+                (bs_kv
+                    * (1 + (rng.next_u64() % need.max(1) as u64)
+                        as usize))
+                    .min(plen - 1)
+            } else {
+                0
+            };
+            for l in 0..nl {
+                let (kr, vr) = pool_a
+                    .gather_row(l, &table_a, start0, smax)
+                    .unwrap();
+                pool_b
+                    .scatter_row(l, &table_b, start0, smax, &kr, &vr)
+                    .unwrap();
+            }
+
+            let v = info.vocab;
+            let mut chunk_logits = vec![0f32; b * s * v];
+            let mut done = start0;
+            let mut n_chunks = 0usize;
+            while done < plen {
+                let budget = 1 + (rng.next_u64() % 6) as usize; // 1..=6
+                let end = chunk_end(done, plen, budget, bs_kv, true);
+                assert!(end > done, "chunk must make progress");
+                let out = rt
+                    .run_prefill_paged(
+                        &staged,
+                        &tokens,
+                        &lengths,
+                        &[done as i32],
+                        &[end as i32],
+                        &mut pool_b,
+                        &[&table_b],
+                    )
+                    .unwrap()
+                    .to_vec::<f32>()
+                    .unwrap();
+                for p in done..end {
+                    chunk_logits[p * v..(p + 1) * v]
+                        .copy_from_slice(&out[p * v..(p + 1) * v]);
+                }
+                done = end;
+                n_chunks += 1;
+            }
+            assert!(
+                start0 > 0 || n_chunks >= 2 || plen <= 6,
+                "schedule degenerated to one chunk (plen={plen})"
+            );
+
+            // logits at every computed position must match bit for bit
+            for p in start0..plen {
+                assert!(
+                    full_logits[p * v..(p + 1) * v]
+                        == chunk_logits[p * v..(p + 1) * v],
+                    "{variant} pos {p}: chunked logits differ \
+                     (start0={start0}, plen={plen}, chunks={n_chunks})"
+                );
+            }
+            // the K/V written through both tables must agree at every
+            // prompt position
+            for l in 0..nl {
+                let (ka, va) = pool_a
+                    .gather_row(l, &table_a, plen, smax)
+                    .unwrap();
+                let (kb, vb) = pool_b
+                    .gather_row(l, &table_b, plen, smax)
+                    .unwrap();
+                assert!(
+                    ka == kb && va == vb,
+                    "{variant} layer {l}: chunked K/V differs \
+                     (start0={start0}, plen={plen})"
                 );
             }
         }
