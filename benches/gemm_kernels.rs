@@ -12,8 +12,12 @@
 //! the measured region, keeping the fusion ablation apples-to-apples.
 
 use odyssey::exp::latency::random_gemm_args;
+use odyssey::formats::json::Json;
+use odyssey::kernels::{kernel_set, KernelChoice};
+use odyssey::quant::{pack, rtn, scale};
 use odyssey::runtime::{Literal, Runtime};
-use odyssey::util::Bencher;
+use odyssey::tensor::Tensor;
+use odyssey::util::{merge_bench_records, Bencher};
 
 fn main() {
     odyssey::util::log::init_from_env();
@@ -90,5 +94,147 @@ fn main() {
             "fine-grained vs FastGEMM @ M=1 1024x1024: {:.2}x",
             group / fast
         );
+    }
+
+    // ---- kernel-set sweep: the SAME fp / w8a8 / w4a8_fast GEMMs run
+    // straight through each dispatch set (scalar reference, cache-
+    // blocked, threadpool-parallel) at a prefill-slab shape.  Parity is
+    // asserted BEFORE timing — the GFLOP/s column only means anything
+    // because the outputs are bit-identical — and the section lands in
+    // BENCH_kernels.json (the committed trajectory file).
+    let smoke = matches!(
+        std::env::var("ODYSSEY_BENCH_SMOKE").as_deref(),
+        Ok("1") | Ok("true")
+    );
+    let (m, n, k) =
+        if smoke { (32, 256, 256) } else { (256, 1024, 1024) };
+    let budget = if smoke { 0.2 } else { 1.0 };
+    let (it_min, it_max) = if smoke { (2, 4) } else { (3, 20) };
+    let x = Tensor::randn(&[m, k], 7);
+    let wf = Tensor::randn(&[k, n], 11);
+    let (xq, s_a) = scale::quant_act_per_token(&x);
+    let (w8, s_w8) = rtn::rtn_per_channel(&wf, 8, None, None);
+    let (w4, s_w4) = rtn::rtn_per_channel(&wf, 4, None, None);
+    let wp = pack::pack_int4(&w4);
+    let flops = 2.0 * (m * n * k) as f64;
+
+    let reference = kernel_set(KernelChoice::Scalar);
+    let ref_fp = reference.gemm_fp(&x, &wf);
+    let ref_w8 = reference.gemm_w8a8(&xq, &s_a, &w8, &s_w8);
+    let ref_fast = reference.gemm_w4a8_fast(&xq, &s_a, &wp, &s_w4);
+
+    println!(
+        "\nkernel-set sweep @ {m}x{n}x{k} (GFLOP/s from min time)"
+    );
+    println!(
+        "{:<10} {:<12} {:>10} {:>10}",
+        "set", "variant", "min µs", "GFLOP/s"
+    );
+    let mut records = Vec::new();
+    let mut w8a8_min = Vec::new();
+    for choice in
+        [KernelChoice::Scalar, KernelChoice::Blocked, KernelChoice::Parallel]
+    {
+        let ks = kernel_set(choice);
+        assert_eq!(
+            ks.gemm_fp(&x, &wf),
+            ref_fp,
+            "{}: fp output differs from scalar",
+            ks.name()
+        );
+        assert_eq!(
+            ks.gemm_w8a8(&xq, &s_a, &w8, &s_w8),
+            ref_w8,
+            "{}: w8a8 output differs from scalar",
+            ks.name()
+        );
+        assert_eq!(
+            ks.gemm_w4a8_fast(&xq, &s_a, &wp, &s_w4),
+            ref_fast,
+            "{}: w4a8_fast output differs from scalar",
+            ks.name()
+        );
+        let runs: [(&str, Box<dyn FnMut() + '_>); 3] = [
+            (
+                "fp",
+                Box::new(|| {
+                    std::hint::black_box(ks.gemm_fp(&x, &wf));
+                }),
+            ),
+            (
+                "w8a8",
+                Box::new(|| {
+                    std::hint::black_box(
+                        ks.gemm_w8a8(&xq, &s_a, &w8, &s_w8),
+                    );
+                }),
+            ),
+            (
+                "w4a8_fast",
+                Box::new(|| {
+                    std::hint::black_box(
+                        ks.gemm_w4a8_fast(&xq, &s_a, &wp, &s_w4),
+                    );
+                }),
+            ),
+        ];
+        for (variant, mut f) in runs {
+            let r = Bencher::new(&format!("{} {variant}", ks.name()))
+                .with_budget(budget)
+                .with_iters(it_min, it_max)
+                .run(&mut *f);
+            let gflops = flops / r.min_s / 1e9;
+            println!(
+                "{:<10} {:<12} {:>10.1} {:>10.2}",
+                ks.name(),
+                variant,
+                r.min_s * 1e6,
+                gflops
+            );
+            if variant == "w8a8" {
+                w8a8_min.push((ks.name(), r.min_s));
+            }
+            records.push(Json::obj(vec![
+                ("bench", Json::Str("gemm_kernels".into())),
+                ("kernels", Json::Str(ks.name().into())),
+                ("variant", Json::Str(variant.into())),
+                ("m", Json::Num(m as f64)),
+                ("n", Json::Num(n as f64)),
+                ("k", Json::Num(k as f64)),
+                ("min_us", Json::Num(r.min_s * 1e6)),
+                ("gflops", Json::Num(gflops)),
+            ]));
+        }
+    }
+
+    let min_of = |set: &str| {
+        w8a8_min
+            .iter()
+            .find(|(s, _)| *s == set)
+            .map(|(_, t)| *t)
+            .expect("w8a8 timing")
+    };
+    let cores = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(1);
+    let speedup = min_of("scalar") / min_of("parallel");
+    println!(
+        "parallel vs scalar w8a8 @ {m}x{n}x{k}: {speedup:.2}x \
+         ({cores} cores)"
+    );
+    // acceptance guard: on a real multi-core runner the parallel set
+    // must clear 2x over the scalar reference at the full bench shape
+    // (smoke shapes are too small to amortize the fork/join)
+    if !smoke && cores >= 4 {
+        assert!(
+            speedup >= 2.0,
+            "parallel w8a8 only {speedup:.2}x over scalar on \
+             {cores} cores (want >= 2x)"
+        );
+    }
+    merge_bench_records("BENCH_kernels.json", "gemm_kernels", &records)
+        .expect("write BENCH_kernels.json");
+    for r in &records {
+        println!("BENCH {}", r.emit());
     }
 }

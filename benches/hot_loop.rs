@@ -24,10 +24,11 @@
 
 use odyssey::coordinator::{Engine, EngineOptions, GenParams, Request};
 use odyssey::formats::json::Json;
+use odyssey::kernels::KernelChoice;
 use odyssey::model::{self, Checkpoint};
 use odyssey::quant::QuantRecipe;
 use odyssey::runtime::{self, KvBlockPool, Literal, Runtime};
-use odyssey::util::Bencher;
+use odyssey::util::{merge_bench_records, Bencher};
 
 fn main() {
     odyssey::util::log::init_from_env();
@@ -483,4 +484,79 @@ fn main() {
         ("drain_s_nocache", Json::Num(off_s)),
     ]);
     println!("BENCH {}", bench.emit());
+
+    // ---- kernel-set sweep: tokens/sec through the FULL engine
+    // (prefill + continuous-batched decode, paged KV, staged weights)
+    // with each dispatch set pinned via EngineOptions::kernels.  The
+    // streams must be bit-identical across sets — the dispatch layer's
+    // whole contract — and the throughput rows land in the committed
+    // BENCH_kernels.json trajectory next to the raw-GEMM GFLOP/s
+    // section from `gemm_kernels`.
+    let gen_tokens = if smoke { 6 } else { 16 };
+    let mut kernel_records = Vec::new();
+    let mut kernel_streams: Vec<Vec<Vec<i32>>> = Vec::new();
+    for choice in
+        [KernelChoice::Scalar, KernelChoice::Blocked, KernelChoice::Parallel]
+    {
+        let mut o = EngineOptions {
+            variant: "w4a8_fast".into(),
+            recipe: QuantRecipe::vanilla_w4(),
+            max_queue: 16,
+            ..Default::default()
+        };
+        o.paged = true;
+        o.staging = true;
+        o.kernels = choice;
+        let mut engine = Engine::new(o).expect("engine");
+        for i in 0..4u64 {
+            engine.submit(Request::new(
+                i,
+                (0..24)
+                    .map(|j| 3 + ((i as i32) * 7 + j) % 500)
+                    .collect(),
+                GenParams {
+                    max_new_tokens: gen_tokens,
+                    eos: None,
+                    ..Default::default()
+                },
+            ));
+        }
+        let t0 = std::time::Instant::now();
+        let mut results = engine.run_until_idle().expect("drain");
+        let dt = t0.elapsed().as_secs_f64();
+        results.sort_by_key(|r| r.id);
+        let generated: usize =
+            results.iter().map(|r| r.tokens.len()).sum();
+        let tps = generated as f64 / dt.max(1e-9);
+        let name = choice.name();
+        println!(
+            "{name:<10} engine: {generated} tokens in {dt:.3}s \
+             = {tps:.1} tok/s"
+        );
+        kernel_streams
+            .push(results.into_iter().map(|r| r.tokens).collect());
+        kernel_records.push(Json::obj(vec![
+            ("bench", Json::Str("hot_loop_kernels".into())),
+            ("kernels", Json::Str(name.into())),
+            ("variant", Json::Str("w4a8_fast".into())),
+            ("tokens", Json::Num(generated as f64)),
+            ("tokens_per_s", Json::Num(tps)),
+            ("drain_s", Json::Num(dt)),
+        ]));
+    }
+    for s in &kernel_streams[1..] {
+        assert_eq!(
+            &kernel_streams[0], s,
+            "kernel sets must not change token streams"
+        );
+    }
+    merge_bench_records(
+        "BENCH_kernels.json",
+        "hot_loop_kernels",
+        &kernel_records,
+    )
+    .expect("write BENCH_kernels.json");
+    for r in &kernel_records {
+        println!("BENCH {}", r.emit());
+    }
 }

@@ -91,6 +91,11 @@ GLOBAL FLAGS:
   --backend native|pjrt        execution backend (default: native CPU;
                                env ODYSSEY_BACKEND also honored; pjrt
                                needs --features pjrt + AOT HLO)
+  --kernels auto|scalar|blocked|parallel
+                               native-backend kernel set (default:
+                               auto = parallel on multi-core, blocked
+                               otherwise; env ODYSSEY_KERNELS also
+                               honored; all sets are bit-exact)
 
 SERVING FLAGS (generate / serve):
   --no-paging                  contiguous KV escape hatch (default is
@@ -169,6 +174,22 @@ pub fn parse_backend(args: &Args) -> Result<crate::runtime::BackendKind> {
         Some(name) => crate::runtime::BackendKind::parse(name),
         // no flag: fall back to ODYSSEY_BACKEND, then native
         None => Ok(crate::runtime::BackendKind::from_env()),
+    }
+}
+
+/// Kernel-set names accepted by --kernels (defaults to
+/// `ODYSSEY_KERNELS`, then auto-detect).  The flag is strict — a typo
+/// should fail loudly here, not silently fall back like the env var.
+pub fn parse_kernels(args: &Args) -> Result<crate::kernels::KernelChoice> {
+    match args.get("kernels") {
+        Some(name) => crate::kernels::KernelChoice::parse(name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown kernel set '{name}' \
+                     (want auto|scalar|blocked|parallel)"
+                )
+            }),
+        None => Ok(crate::kernels::KernelChoice::from_env()),
     }
 }
 
@@ -274,6 +295,19 @@ mod tests {
         )
         .unwrap();
         assert!(parse_kv_flags(&bad, &mut opts).is_err());
+    }
+
+    #[test]
+    fn kernels_flag_resolves() {
+        use crate::kernels::KernelChoice;
+        let a = Args::parse(&sv(&["--kernels", "blocked"]), &[]).unwrap();
+        assert_eq!(parse_kernels(&a).unwrap(), KernelChoice::Blocked);
+        // no flag: env fallback — assert against from_env so the test
+        // holds regardless of the ambient ODYSSEY_KERNELS setting
+        let d = Args::parse(&sv(&[]), &[]).unwrap();
+        assert_eq!(parse_kernels(&d).unwrap(), KernelChoice::from_env());
+        let bad = Args::parse(&sv(&["--kernels", "avx"]), &[]).unwrap();
+        assert!(parse_kernels(&bad).is_err());
     }
 
     #[test]

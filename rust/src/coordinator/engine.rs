@@ -67,6 +67,12 @@ pub struct EngineOptions {
     /// execution backend (native CPU interpreter by default; `pjrt`
     /// runs the AOT artifacts and needs the pjrt feature)
     pub backend: BackendKind,
+    /// kernel set for the native backend (`ODYSSEY_KERNELS` /
+    /// `--kernels`): `scalar` reference loops, `blocked` cache-tiled,
+    /// `parallel` threadpool strips, or `auto` (default — parallel on
+    /// multi-core, blocked otherwise).  All sets are bit-exact; pjrt
+    /// ignores the knob.
+    pub kernels: crate::kernels::KernelChoice,
     /// stage the weight tail once at construction and run the serving
     /// loop through `execute_staged` (default; `ODYSSEY_NO_STAGING=1`
     /// flips the default off — the per-step escape hatch the parity
@@ -128,6 +134,7 @@ impl Default for EngineOptions {
             // honor ODYSSEY_BACKEND like Runtime::new, so engine entry
             // points (benches, examples, EngineService) follow it too
             backend: BackendKind::from_env(),
+            kernels: crate::kernels::KernelChoice::from_env(),
             staging: runtime::staging_enabled_from_env(),
             paged: runtime::paging_enabled_from_env(),
             kv_block_size: 16,
@@ -247,8 +254,11 @@ impl Engine {
     /// the variant, compile the two serving graphs.
     pub fn new(opts: EngineOptions) -> Result<Self> {
         let t0 = Instant::now();
-        let mut rt =
-            Runtime::with_backend(&opts.artifacts_dir, opts.backend)?;
+        let mut rt = Runtime::with_backend_kernels(
+            &opts.artifacts_dir,
+            opts.backend,
+            opts.kernels,
+        )?;
         let info = rt.manifest.model(&opts.model)?.clone();
         let group = rt.manifest.group_size;
 
@@ -405,10 +415,11 @@ impl Engine {
             ))
         };
         crate::util::log::info(&format!(
-            "engine up: model={} variant={} backend={} staging={} paging={} sched={} params={:.1}M graphs=({}, {}) in {:.2}s",
+            "engine up: model={} variant={} backend={} kernels={} staging={} paging={} sched={} params={:.1}M graphs=({}, {}) in {:.2}s",
             opts.model,
             opts.variant,
             rt.backend_name(),
+            opts.kernels.resolve().name(),
             if staged_decode.is_some() { "on" } else { "off" },
             match &kv {
                 KvBacking::Paged(p) => format!(

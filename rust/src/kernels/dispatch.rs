@@ -1,0 +1,141 @@
+//! Kernel-set selection: one choice per backend construction, never
+//! per call.  `ODYSSEY_KERNELS=scalar|blocked|parallel` (or the
+//! `--kernels` CLI flag) forces a set; the default `auto` picks the
+//! parallel set on multi-core machines and the blocked set otherwise.
+//!
+//! The parallel set shares ONE process-wide [`ThreadPool`], sized once
+//! from `available_parallelism` — constructing many backends (tests,
+//! bench sweeps) must not multiply worker threads.
+
+use std::sync::{Arc, OnceLock};
+
+use crate::util::threadpool::ThreadPool;
+
+use super::gemm::{BlockedKernels, ParallelKernels, ScalarKernels};
+use super::KernelSet;
+
+/// Which kernel set the backend dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelChoice {
+    /// Parallel on >= 2 cores, blocked otherwise.
+    #[default]
+    Auto,
+    /// The single-threaded reference loops.
+    Scalar,
+    /// Cache-tiled, fused-unpack, single-threaded.
+    Blocked,
+    /// The blocked kernel over the shared thread pool.
+    Parallel,
+}
+
+impl KernelChoice {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(KernelChoice::Auto),
+            "scalar" => Some(KernelChoice::Scalar),
+            "blocked" => Some(KernelChoice::Blocked),
+            "parallel" => Some(KernelChoice::Parallel),
+            _ => None,
+        }
+    }
+
+    /// `ODYSSEY_KERNELS`, defaulting to `auto`; unknown values warn
+    /// once and fall back rather than abort (same contract as
+    /// `BackendKind::from_env`).
+    pub fn from_env() -> Self {
+        match std::env::var("ODYSSEY_KERNELS") {
+            Ok(v) => KernelChoice::parse(&v).unwrap_or_else(|| {
+                static WARN: std::sync::Once = std::sync::Once::new();
+                WARN.call_once(|| {
+                    eprintln!(
+                        "warning: unknown ODYSSEY_KERNELS={v:?} \
+                         (want scalar|blocked|parallel|auto); using auto"
+                    );
+                });
+                KernelChoice::Auto
+            }),
+            Err(_) => KernelChoice::Auto,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelChoice::Auto => "auto",
+            KernelChoice::Scalar => "scalar",
+            KernelChoice::Blocked => "blocked",
+            KernelChoice::Parallel => "parallel",
+        }
+    }
+
+    /// Resolve `Auto` to a concrete set for this machine.
+    pub fn resolve(self) -> Self {
+        match self {
+            KernelChoice::Auto => {
+                if cores() >= 2 {
+                    KernelChoice::Parallel
+                } else {
+                    KernelChoice::Blocked
+                }
+            }
+            other => other,
+        }
+    }
+}
+
+/// Detected core count (1 if detection fails).
+pub fn cores() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// The process-wide pool backing every `ParallelKernels` instance.
+fn shared_pool() -> Arc<ThreadPool> {
+    static POOL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
+    Arc::clone(POOL.get_or_init(|| Arc::new(ThreadPool::new(cores()))))
+}
+
+/// Build the kernel set for a choice.  Called once at backend
+/// construction; the graph walkers hold the returned handle.
+pub fn kernel_set(choice: KernelChoice) -> Arc<dyn KernelSet> {
+    match choice.resolve() {
+        KernelChoice::Scalar => Arc::new(ScalarKernels),
+        KernelChoice::Blocked => Arc::new(BlockedKernels),
+        KernelChoice::Parallel | KernelChoice::Auto => {
+            Arc::new(ParallelKernels::new(shared_pool()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_names() {
+        for c in [
+            KernelChoice::Auto,
+            KernelChoice::Scalar,
+            KernelChoice::Blocked,
+            KernelChoice::Parallel,
+        ] {
+            assert_eq!(KernelChoice::parse(c.name()), Some(c));
+        }
+        assert_eq!(KernelChoice::parse("AVX512"), None);
+        assert_eq!(KernelChoice::parse("Scalar"), Some(KernelChoice::Scalar));
+    }
+
+    #[test]
+    fn auto_resolves_to_concrete_set() {
+        let r = KernelChoice::Auto.resolve();
+        assert_ne!(r, KernelChoice::Auto);
+        assert_ne!(r, KernelChoice::Scalar, "auto never picks the reference");
+    }
+
+    #[test]
+    fn kernel_set_honors_forced_choice() {
+        assert_eq!(kernel_set(KernelChoice::Scalar).name(), "scalar");
+        assert_eq!(kernel_set(KernelChoice::Blocked).name(), "blocked");
+        assert_eq!(kernel_set(KernelChoice::Parallel).name(), "parallel");
+    }
+}

@@ -1,0 +1,147 @@
+//! Elementwise / small-vector model math: RMSNorm, rotary embedding,
+//! SiLU, masked softmax, and the attention dot/accumulate primitives.
+//!
+//! These are shared by every [`super::KernelSet`]: they are memory-bound
+//! row-local ops whose cost is negligible next to the GEMMs, so there is
+//! exactly one implementation and the bit-exactness story is trivial —
+//! all kernel sets run the same float-op sequence here.
+
+use crate::tensor::Tensor;
+
+/// `configs.py::ModelConfig` defaults (the manifest does not carry them;
+/// both tiny models use the defaults).
+pub const NORM_EPS: f32 = 1e-5;
+pub const ROPE_THETA: f32 = 10000.0;
+pub const NEG_INF: f32 = -1e9;
+
+/// RMSNorm over the last dim of a [rows, d] buffer.
+pub fn rms_norm(x: &[f32], rows: usize, d: usize, w: &[f32]) -> Tensor<f32> {
+    let mut out = vec![0f32; rows * d];
+    for r in 0..rows {
+        let row = &x[r * d..(r + 1) * d];
+        let var: f32 = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + NORM_EPS).sqrt();
+        let orow = &mut out[r * d..(r + 1) * d];
+        for j in 0..d {
+            orow[j] = row[j] * inv * w[j];
+        }
+    }
+    Tensor::from_vec(&[rows, d], out)
+}
+
+/// (cos, sin) rope tables for one position, each of length head_dim/2.
+pub fn rope_row(pos: f32, head_dim: usize, cos: &mut [f32], sin: &mut [f32]) {
+    let half = head_dim / 2;
+    for i in 0..half {
+        let inv = 1.0 / ROPE_THETA.powf(2.0 * i as f32 / head_dim as f32);
+        let ang = pos * inv;
+        cos[i] = ang.cos();
+        sin[i] = ang.sin();
+    }
+}
+
+/// Rotate every head of one [d_model] row in place.
+pub fn apply_rope_row(
+    row: &mut [f32],
+    n_heads: usize,
+    head_dim: usize,
+    cos: &[f32],
+    sin: &[f32],
+) {
+    let half = head_dim / 2;
+    for h in 0..n_heads {
+        let base = h * head_dim;
+        for i in 0..half {
+            let x1 = row[base + i];
+            let x2 = row[base + half + i];
+            row[base + i] = x1 * cos[i] - x2 * sin[i];
+            row[base + half + i] = x2 * cos[i] + x1 * sin[i];
+        }
+    }
+}
+
+pub fn silu(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+pub fn softmax_inplace(scores: &mut [f32]) {
+    let maxv = scores.iter().fold(f32::MIN, |a, &b| a.max(b));
+    let mut z = 0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - maxv).exp();
+        z += *s;
+    }
+    for s in scores.iter_mut() {
+        *s /= z;
+    }
+}
+
+/// Sequential dot product (attention scores): accumulation order is the
+/// bit-exactness contract, identical across all paths that score a
+/// query head against a key row.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0f32;
+    for (x, y) in a.iter().zip(b.iter()) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// `out += scale * v` (attention value accumulation), in index order.
+#[inline]
+pub fn axpy_f32(out: &mut [f32], scale: f32, v: &[f32]) {
+    debug_assert_eq!(out.len(), v.len());
+    for (o, x) in out.iter_mut().zip(v.iter()) {
+        *o += scale * x;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rms_norm_unit_rows() {
+        let x = vec![2.0f32, 2.0, 2.0, 2.0];
+        let w = vec![1.0f32; 4];
+        let out = rms_norm(&x, 1, 4, &w);
+        for &v in out.data() {
+            assert!((v - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut row = vec![0.3f32, -0.7, 1.1, 0.2, 0.5, -0.1, 0.9, 0.4];
+        let before: f32 = row.iter().map(|v| v * v).sum();
+        let mut cos = vec![0f32; 2];
+        let mut sin = vec![0f32; 2];
+        rope_row(5.0, 4, &mut cos, &mut sin);
+        apply_rope_row(&mut row, 2, 4, &cos, &sin);
+        let after: f32 = row.iter().map(|v| v * v).sum();
+        assert!((before - after).abs() < 1e-4, "rotation is an isometry");
+    }
+
+    #[test]
+    fn softmax_normalizes_with_mask() {
+        let mut s = vec![1.0f32, NEG_INF, 0.5, NEG_INF];
+        softmax_inplace(&mut s);
+        let z: f32 = s.iter().sum();
+        assert!((z - 1.0).abs() < 1e-6);
+        assert_eq!(s[1], 0.0);
+        assert_eq!(s[3], 0.0);
+        assert!(s[0] > s[2]);
+    }
+
+    #[test]
+    fn dot_and_axpy_match_loops() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, 5.0, 6.0];
+        assert_eq!(dot_f32(&a, &b), 32.0);
+        let mut out = [1.0f32, 1.0, 1.0];
+        axpy_f32(&mut out, 2.0, &b);
+        assert_eq!(out, [9.0, 11.0, 13.0]);
+    }
+}

@@ -1,0 +1,82 @@
+//! Dequant epilogues: the f32 tail applied to an s32 accumulator row.
+//!
+//! The bit-exactness contract of the whole kernel layer rests here: the
+//! integer GEMM accumulation is order-free (i32 adds commute), and the
+//! epilogue is ELEMENTWISE — one fixed expression per output element,
+//! written per row in index order.  Any row/column partition of the
+//! accumulator therefore produces bit-identical f32 output, which is
+//! what lets the blocked and threadpool-parallel GEMMs in
+//! [`super::gemm`] match the scalar reference exactly (pinned by the
+//! cross-set parity props in `tests/properties.rs`).
+
+/// W8A8 epilogue (paper Eq. 6/7): `out[j] = acc[j] * (s_a[i] * s_w[j])`
+/// over one output row `i`.
+#[inline]
+pub fn dequant_row(acc: &[i32], s_ai: f32, s_w: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(acc.len(), out.len());
+    debug_assert_eq!(acc.len(), s_w.len());
+    for j in 0..out.len() {
+        out[j] = acc[j] as f32 * (s_ai * s_w[j]);
+    }
+}
+
+/// FastGEMM epilogue (paper Sec. 5.3): the x16 unpack left weights at
+/// 16x their int4 value, undone here by folding /16 into the channel
+/// scale — `out[j] = acc[j] * (s_a[i] * (s_w[j] / 16.0))`.
+#[inline]
+pub fn dequant_row_x16(
+    acc: &[i32],
+    s_ai: f32,
+    s_w: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(acc.len(), out.len());
+    debug_assert_eq!(acc.len(), s_w.len());
+    for j in 0..out.len() {
+        out[j] = acc[j] as f32 * (s_ai * (s_w[j] / 16.0));
+    }
+}
+
+/// Asymmetric-W4 epilogue: zero-point correction via the activation
+/// row sum `rs` — `out[j] = (acc[j] - rs * z[j]) * (s_a[i] * s_w[j])`.
+#[inline]
+pub fn dequant_row_asym(
+    acc: &[i32],
+    rs: i32,
+    z: &[i32],
+    s_ai: f32,
+    s_w: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(acc.len(), out.len());
+    for j in 0..out.len() {
+        out[j] = (acc[j] - rs * z[j]) as f32 * (s_ai * s_w[j]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn x16_epilogue_is_plain_epilogue_at_scaled_channel() {
+        // the /16 fold: dequant_row_x16(s_w) == dequant_row(s_w/16)
+        let acc = [160i32, -320, 48];
+        let s_w = [2.0f32, 4.0, 8.0];
+        let s16: Vec<f32> = s_w.iter().map(|v| v / 16.0).collect();
+        let mut a = [0f32; 3];
+        let mut b = [0f32; 3];
+        dequant_row_x16(&acc, 0.5, &s_w, &mut a);
+        dequant_row(&acc, 0.5, &s16, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn asym_subtracts_zero_points() {
+        let acc = [10i32, 10];
+        let z = [1i32, 2];
+        let mut out = [0f32; 2];
+        dequant_row_asym(&acc, 3, &z, 1.0, &[1.0, 1.0], &mut out);
+        assert_eq!(out, [7.0, 4.0]);
+    }
+}

@@ -1,0 +1,912 @@
+//! The GEMM kernel sets: scalar reference, cache-blocked, and
+//! threadpool-parallel — one [`KernelSet`] implementation each.
+//!
+//! Bit-exactness across the three sets is by construction, not by
+//! tolerance:
+//!
+//! * the int8 GEMM accumulates in i32, and i32 addition is commutative
+//!   and associative (wrapping included), so ANY loop tiling or
+//!   row/column partition produces the identical accumulator;
+//! * the f32 dequant epilogue ([`super::epilogue`]) is elementwise with
+//!   a fixed per-element expression, applied per output row in index
+//!   order — partitioning rows or columns cannot reorder any float op;
+//! * the fp GEMM computes each output element with one sequential
+//!   k-loop (the [`matmul_f32`] order), independent of which thread or
+//!   tile visits the element.
+//!
+//! The blocked set tiles K x N so a `KC x NC` weight tile stays in
+//! cache across all M rows, and fuses the SINT4toS8 x16 unpack per
+//! tile ([`super::unpack`]) instead of materializing the 2x-sized s8
+//! weight matrix.  The parallel set runs the blocked kernel over
+//! row-blocks when M is large (prefill) and over column-blocks when M
+//! is small (single-token decode), on the shared
+//! [`crate::util::threadpool::ThreadPool`].
+
+use std::sync::Arc;
+
+use crate::quant::pack;
+use crate::tensor::{matmul_f32, Tensor};
+use crate::util::threadpool::ThreadPool;
+
+use super::epilogue;
+use super::unpack;
+use super::KernelSet;
+
+/// K-tile depth: a KC x NC s8 tile (32 KiB) fits L1/L2 comfortably.
+const KC: usize = 256;
+/// N-tile width.
+const NC: usize = 128;
+
+// ---------------------------------------------------------------------
+// shared inner loops
+// ---------------------------------------------------------------------
+
+/// Weight operand of the int8 GEMM: dense s8, or SINT4-packed bytes
+/// that the blocked kernel unpacks tile-by-tile (the FastGEMM fusion).
+#[derive(Clone, Copy)]
+enum WSrc<'a> {
+    Dense(&'a Tensor<i8>),
+    Packed(&'a Tensor<u8>),
+}
+
+impl WSrc<'_> {
+    fn k(&self) -> usize {
+        match self {
+            WSrc::Dense(w) => w.rows(),
+            WSrc::Packed(wp) => 2 * wp.rows(),
+        }
+    }
+
+    fn n(&self) -> usize {
+        match self {
+            WSrc::Dense(w) => w.cols(),
+            WSrc::Packed(wp) => wp.cols(),
+        }
+    }
+}
+
+/// The verbatim scalar reference: xq [M,K] x w [K,N] in one pass,
+/// skipping zero activations (exact: skipped terms contribute 0).
+fn scalar_idot(xq: &Tensor<i8>, w: &Tensor<i8>) -> Vec<i32> {
+    let (m, k) = (xq.rows(), xq.cols());
+    let n = w.cols();
+    assert_eq!(w.rows(), k, "idot inner dims {k} vs {}", w.rows());
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        let xrow = xq.row(i);
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &a) in xrow.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            let a = a as i32;
+            let wrow = w.row(kk);
+            for j in 0..n {
+                orow[j] += a * wrow[j] as i32;
+            }
+        }
+    }
+    out
+}
+
+/// Cache-blocked int8 accumulation of the output strip
+/// `[m0, m1) x [j0, j1)` into `acc` (row-major `[(m1-m0), (j1-j0)]`).
+/// K x N tiles keep a KC x NC weight tile hot across all strip rows;
+/// packed weights are unpacked x16 into a tile scratch ONCE per tile
+/// and reused by every row (the fused FastGEMM conversion).
+fn idot_blocked_strip(
+    xq: &Tensor<i8>,
+    w: WSrc<'_>,
+    m0: usize,
+    m1: usize,
+    j0: usize,
+    j1: usize,
+    acc: &mut [i32],
+) {
+    let k = xq.cols();
+    assert_eq!(w.k(), k, "idot inner dims {k} vs {}", w.k());
+    let sw = j1 - j0;
+    debug_assert!(acc.len() >= (m1 - m0) * sw);
+    let mut tile = vec![0i8; KC * NC.min(sw.max(1))];
+    for jc in (j0..j1).step_by(NC) {
+        let jce = (jc + NC).min(j1);
+        let tw = jce - jc;
+        for kc in (0..k).step_by(KC) {
+            let kce = (kc + KC).min(k);
+            let wtile: Option<&[i8]> = match w {
+                WSrc::Dense(_) => None,
+                WSrc::Packed(wp) => {
+                    // KC is even and K is even for packed weights, so
+                    // the tile is always nibble-pair aligned
+                    unpack::unpack_tile_x16(wp, kc, kce, jc, jce, &mut tile);
+                    Some(&tile[..(kce - kc) * tw])
+                }
+            };
+            for i in m0..m1 {
+                let xrow = xq.row(i);
+                let arow = &mut acc[(i - m0) * sw + (jc - j0)..][..tw];
+                for kk in kc..kce {
+                    let a = xrow[kk];
+                    if a == 0 {
+                        continue;
+                    }
+                    let a = a as i32;
+                    let wrow: &[i8] = match (w, wtile) {
+                        (WSrc::Dense(wd), _) => &wd.row(kk)[jc..jce],
+                        (_, Some(t)) => &t[(kk - kc) * tw..][..tw],
+                        _ => unreachable!(),
+                    };
+                    for (d, &wv) in arow.iter_mut().zip(wrow) {
+                        *d += a * wv as i32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// f32 GEMM strip `[m0, m1) x [j0, j1)` against a pre-transposed B —
+/// per element, the exact sequential k-loop of [`matmul_f32`].
+fn matmul_f32_strip(
+    a: &Tensor<f32>,
+    bt: &Tensor<f32>,
+    m0: usize,
+    m1: usize,
+    j0: usize,
+    j1: usize,
+) -> Vec<f32> {
+    let k = a.cols();
+    let sw = j1 - j0;
+    let mut out = vec![0f32; (m1 - m0) * sw];
+    for i in m0..m1 {
+        let arow = a.row(i);
+        let orow = &mut out[(i - m0) * sw..][..sw];
+        for j in j0..j1 {
+            let brow = bt.row(j);
+            let mut acc = 0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            orow[j - j0] = acc;
+        }
+    }
+    out
+}
+
+/// Apply the w8a8 / x16 epilogue to the accumulator strip
+/// `[m0, m1) x [j0, j1)` (row-major `[(m1-m0), (j1-j0)]`), writing the
+/// same-layout output strip.  `s_a` is indexed by ABSOLUTE row, `s_w`
+/// by the absolute column window — the strip layout itself is relative.
+#[allow(clippy::too_many_arguments)]
+fn dequant_strip(
+    acc: &[i32],
+    s_a: &[f32],
+    s_w: &[f32],
+    x16: bool,
+    m0: usize,
+    m1: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    let sw = j1 - j0;
+    for i in m0..m1 {
+        let arow = &acc[(i - m0) * sw..][..sw];
+        let orow = &mut out[(i - m0) * sw..][..sw];
+        if x16 {
+            epilogue::dequant_row_x16(arow, s_a[i], &s_w[j0..j1], orow);
+        } else {
+            epilogue::dequant_row(arow, s_a[i], &s_w[j0..j1], orow);
+        }
+    }
+}
+
+/// Split `[0, total)` into at most `parts` contiguous ranges.
+fn split_ranges(total: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, total.max(1));
+    let base = total / parts;
+    let rem = total % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    for p in 0..parts {
+        let hi = lo + base + usize::from(p < rem);
+        if hi > lo {
+            out.push((lo, hi));
+        }
+        lo = hi;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// scalar: the reference set (the pre-dispatch interpreter loops)
+// ---------------------------------------------------------------------
+
+/// The original single-threaded loops, kept verbatim as the reference
+/// every other set must match bit for bit.
+pub struct ScalarKernels;
+
+impl KernelSet for ScalarKernels {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn idot(&self, xq: &Tensor<i8>, w: &Tensor<i8>) -> Vec<i32> {
+        scalar_idot(xq, w)
+    }
+
+    fn gemm_fp(&self, x: &Tensor<f32>, w: &Tensor<f32>) -> Tensor<f32> {
+        matmul_f32(x, w)
+    }
+
+    fn gemm_w8a8(
+        &self,
+        xq: &Tensor<i8>,
+        s_a: &[f32],
+        wq: &Tensor<i8>,
+        s_w: &[f32],
+    ) -> Tensor<f32> {
+        let (m, n) = (xq.rows(), wq.cols());
+        let acc = scalar_idot(xq, wq);
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            epilogue::dequant_row(
+                &acc[i * n..(i + 1) * n],
+                s_a[i],
+                s_w,
+                &mut out[i * n..(i + 1) * n],
+            );
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    fn gemm_w4a8_fast(
+        &self,
+        xq: &Tensor<i8>,
+        s_a: &[f32],
+        wp: &Tensor<u8>,
+        s_w: &[f32],
+    ) -> Tensor<f32> {
+        let w16 = pack::unpack_x16(wp);
+        self.gemm_w4a8_fast_pre(xq, s_a, &w16, s_w)
+    }
+
+    fn gemm_w4a8_fast_pre(
+        &self,
+        xq: &Tensor<i8>,
+        s_a: &[f32],
+        w16: &Tensor<i8>,
+        s_w: &[f32],
+    ) -> Tensor<f32> {
+        let (m, n) = (xq.rows(), w16.cols());
+        let acc = scalar_idot(xq, w16);
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            epilogue::dequant_row_x16(
+                &acc[i * n..(i + 1) * n],
+                s_a[i],
+                s_w,
+                &mut out[i * n..(i + 1) * n],
+            );
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    fn unpack_x16(&self, wp: &Tensor<u8>) -> Tensor<i8> {
+        pack::unpack_x16(wp)
+    }
+}
+
+// ---------------------------------------------------------------------
+// blocked: cache-tiled, fused per-tile unpack
+// ---------------------------------------------------------------------
+
+/// Cache-blocked set: K x N tiling for weight-tile reuse across rows,
+/// SINT4toS8 unpack fused per tile.  Single-threaded.
+pub struct BlockedKernels;
+
+impl BlockedKernels {
+    fn int8_gemm(
+        &self,
+        xq: &Tensor<i8>,
+        s_a: &[f32],
+        w: WSrc<'_>,
+        s_w: &[f32],
+        x16: bool,
+    ) -> Tensor<f32> {
+        let (m, n) = (xq.rows(), w.n());
+        let mut out = vec![0f32; m * n];
+        if m * n > 0 {
+            let mut acc = vec![0i32; m * n];
+            idot_blocked_strip(xq, w, 0, m, 0, n, &mut acc);
+            // the full-matrix "strip" shares the output's layout
+            dequant_strip(&acc, s_a, s_w, x16, 0, m, 0, n, &mut out);
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+}
+
+impl KernelSet for BlockedKernels {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn idot(&self, xq: &Tensor<i8>, w: &Tensor<i8>) -> Vec<i32> {
+        let (m, n) = (xq.rows(), w.cols());
+        let mut acc = vec![0i32; m * n];
+        if m * n > 0 {
+            idot_blocked_strip(xq, WSrc::Dense(w), 0, m, 0, n, &mut acc);
+        }
+        acc
+    }
+
+    fn gemm_fp(&self, x: &Tensor<f32>, w: &Tensor<f32>) -> Tensor<f32> {
+        // matmul_f32 is already cache-tiled; its per-element k-loop is
+        // the order contract all sets share
+        matmul_f32(x, w)
+    }
+
+    fn gemm_w8a8(
+        &self,
+        xq: &Tensor<i8>,
+        s_a: &[f32],
+        wq: &Tensor<i8>,
+        s_w: &[f32],
+    ) -> Tensor<f32> {
+        self.int8_gemm(xq, s_a, WSrc::Dense(wq), s_w, false)
+    }
+
+    fn gemm_w4a8_fast(
+        &self,
+        xq: &Tensor<i8>,
+        s_a: &[f32],
+        wp: &Tensor<u8>,
+        s_w: &[f32],
+    ) -> Tensor<f32> {
+        // the fused path: never materializes the 2x-sized w16 matrix
+        self.int8_gemm(xq, s_a, WSrc::Packed(wp), s_w, true)
+    }
+
+    fn gemm_w4a8_fast_pre(
+        &self,
+        xq: &Tensor<i8>,
+        s_a: &[f32],
+        w16: &Tensor<i8>,
+        s_w: &[f32],
+    ) -> Tensor<f32> {
+        self.int8_gemm(xq, s_a, WSrc::Dense(w16), s_w, true)
+    }
+
+    fn unpack_x16(&self, wp: &Tensor<u8>) -> Tensor<i8> {
+        pack::unpack_x16(wp)
+    }
+}
+
+// ---------------------------------------------------------------------
+// parallel: the blocked kernel over the thread pool
+// ---------------------------------------------------------------------
+
+/// Threadpool-parallel set: row-blocks when M is large enough to feed
+/// every worker (prefill), column-blocks otherwise (M=1 decode), each
+/// strip running the blocked kernel + the per-row epilogue.  Strips
+/// are disjoint output regions, so the partition cannot reorder any
+/// element's ops — results are bit-identical to [`ScalarKernels`].
+pub struct ParallelKernels {
+    pool: Arc<ThreadPool>,
+}
+
+impl ParallelKernels {
+    pub fn new(pool: Arc<ThreadPool>) -> Self {
+        ParallelKernels { pool }
+    }
+
+    fn int8_gemm(
+        &self,
+        xq: &Tensor<i8>,
+        s_a: &[f32],
+        w: WSrc<'_>,
+        s_w: &[f32],
+        x16: bool,
+    ) -> Tensor<f32> {
+        let (m, n) = (xq.rows(), w.n());
+        let mut out = vec![0f32; m * n];
+        if m * n == 0 {
+            return Tensor::from_vec(&[m, n], out);
+        }
+        let threads = self.pool.size();
+        if m >= 2 * threads {
+            // row-blocks: each strip is a contiguous run of output rows
+            let strips = self.pool.par_map(
+                split_ranges(m, threads),
+                |(m0, m1)| {
+                    let mut acc = vec![0i32; (m1 - m0) * n];
+                    idot_blocked_strip(xq, w, m0, m1, 0, n, &mut acc);
+                    let mut o = vec![0f32; (m1 - m0) * n];
+                    dequant_strip(&acc, s_a, s_w, x16, m0, m1, 0, n, &mut o);
+                    (m0, o)
+                },
+            );
+            for (m0, o) in strips {
+                out[m0 * n..m0 * n + o.len()].copy_from_slice(&o);
+            }
+        } else {
+            // column-blocks: every worker sees all rows, a slice of N
+            let strips = self.pool.par_map(
+                split_ranges(n, threads),
+                |(j0, j1)| {
+                    let mut acc = vec![0i32; m * (j1 - j0)];
+                    idot_blocked_strip(xq, w, 0, m, j0, j1, &mut acc);
+                    let mut o = vec![0f32; m * (j1 - j0)];
+                    dequant_strip(&acc, s_a, s_w, x16, 0, m, j0, j1, &mut o);
+                    (j0, j1, o)
+                },
+            );
+            for (j0, j1, o) in strips {
+                let sw = j1 - j0;
+                for i in 0..m {
+                    out[i * n + j0..i * n + j1]
+                        .copy_from_slice(&o[i * sw..(i + 1) * sw]);
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+}
+
+impl KernelSet for ParallelKernels {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn idot(&self, xq: &Tensor<i8>, w: &Tensor<i8>) -> Vec<i32> {
+        let (m, n) = (xq.rows(), w.cols());
+        let mut acc = vec![0i32; m * n];
+        if m * n == 0 {
+            return acc;
+        }
+        let threads = self.pool.size();
+        if m >= 2 * threads {
+            let strips = self.pool.par_map(
+                split_ranges(m, threads),
+                |(m0, m1)| {
+                    let mut a = vec![0i32; (m1 - m0) * n];
+                    idot_blocked_strip(
+                        xq,
+                        WSrc::Dense(w),
+                        m0,
+                        m1,
+                        0,
+                        n,
+                        &mut a,
+                    );
+                    (m0, a)
+                },
+            );
+            for (m0, a) in strips {
+                acc[m0 * n..m0 * n + a.len()].copy_from_slice(&a);
+            }
+        } else {
+            let strips = self.pool.par_map(
+                split_ranges(n, threads),
+                |(j0, j1)| {
+                    let mut a = vec![0i32; m * (j1 - j0)];
+                    idot_blocked_strip(
+                        xq,
+                        WSrc::Dense(w),
+                        0,
+                        m,
+                        j0,
+                        j1,
+                        &mut a,
+                    );
+                    (j0, j1, a)
+                },
+            );
+            for (j0, j1, a) in strips {
+                let sw = j1 - j0;
+                for i in 0..m {
+                    acc[i * n + j0..i * n + j1]
+                        .copy_from_slice(&a[i * sw..(i + 1) * sw]);
+                }
+            }
+        }
+        acc
+    }
+
+    fn gemm_fp(&self, x: &Tensor<f32>, w: &Tensor<f32>) -> Tensor<f32> {
+        let (m, k) = (x.rows(), x.cols());
+        let (kb, n) = (w.rows(), w.cols());
+        assert_eq!(k, kb, "inner dims mismatch: {k} vs {kb}");
+        let mut out = vec![0f32; m * n];
+        if m * n == 0 {
+            return Tensor::from_vec(&[m, n], out);
+        }
+        let bt = w.transpose();
+        let threads = self.pool.size();
+        if m >= 2 * threads {
+            let strips = self.pool.par_map(
+                split_ranges(m, threads),
+                |(m0, m1)| (m0, matmul_f32_strip(x, &bt, m0, m1, 0, n)),
+            );
+            for (m0, o) in strips {
+                out[m0 * n..m0 * n + o.len()].copy_from_slice(&o);
+            }
+        } else {
+            let strips = self.pool.par_map(
+                split_ranges(n, threads),
+                |(j0, j1)| (j0, j1, matmul_f32_strip(x, &bt, 0, m, j0, j1)),
+            );
+            for (j0, j1, o) in strips {
+                let sw = j1 - j0;
+                for i in 0..m {
+                    out[i * n + j0..i * n + j1]
+                        .copy_from_slice(&o[i * sw..(i + 1) * sw]);
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    fn gemm_w8a8(
+        &self,
+        xq: &Tensor<i8>,
+        s_a: &[f32],
+        wq: &Tensor<i8>,
+        s_w: &[f32],
+    ) -> Tensor<f32> {
+        self.int8_gemm(xq, s_a, WSrc::Dense(wq), s_w, false)
+    }
+
+    fn gemm_w4a8_fast(
+        &self,
+        xq: &Tensor<i8>,
+        s_a: &[f32],
+        wp: &Tensor<u8>,
+        s_w: &[f32],
+    ) -> Tensor<f32> {
+        self.int8_gemm(xq, s_a, WSrc::Packed(wp), s_w, true)
+    }
+
+    fn gemm_w4a8_fast_pre(
+        &self,
+        xq: &Tensor<i8>,
+        s_a: &[f32],
+        w16: &Tensor<i8>,
+        s_w: &[f32],
+    ) -> Tensor<f32> {
+        self.int8_gemm(xq, s_a, WSrc::Dense(w16), s_w, true)
+    }
+
+    fn unpack_x16(&self, wp: &Tensor<u8>) -> Tensor<i8> {
+        pack::unpack_x16(wp)
+    }
+}
+
+// ---------------------------------------------------------------------
+// reference free functions + ks-routed baselines
+// ---------------------------------------------------------------------
+
+/// FP GEMM (scalar reference; re-exported for the existing test API).
+pub fn gemm_fp(x: &Tensor<f32>, w: &Tensor<f32>) -> Tensor<f32> {
+    ScalarKernels.gemm_fp(x, w)
+}
+
+/// W8A8 scalar reference: int GEMM, per-token x per-channel dequant
+/// AFTER (paper Eq. 6/7).
+pub fn gemm_w8a8(
+    xq: &Tensor<i8>,
+    s_a: &[f32],
+    wq: &Tensor<i8>,
+    s_w: &[f32],
+) -> Tensor<f32> {
+    ScalarKernels.gemm_w8a8(xq, s_a, wq, s_w)
+}
+
+/// FastGEMM scalar reference: packed int4 weights, x16 high-nibble
+/// unpack + int GEMM, single per-channel dequant epilogue dividing by
+/// 16 (paper Sec. 5.3 / Fig. 4(d)).
+pub fn gemm_w4a8_fast(
+    xq: &Tensor<i8>,
+    s_a: &[f32],
+    wp: &Tensor<u8>,
+    s_w: &[f32],
+) -> Tensor<f32> {
+    ScalarKernels.gemm_w4a8_fast(xq, s_a, wp, s_w)
+}
+
+/// FastGEMM inner kernel on an ALREADY x16-unpacked weight buffer —
+/// the staged serving path (`ExecBackend::stage` runs the SINT4toS8
+/// unpack once).  Same float-op sequence as [`gemm_w4a8_fast`].
+pub fn gemm_w4a8_fast_pre(
+    xq: &Tensor<i8>,
+    s_a: &[f32],
+    w16: &Tensor<i8>,
+    s_w: &[f32],
+) -> Tensor<f32> {
+    ScalarKernels.gemm_w4a8_fast_pre(xq, s_a, w16, s_w)
+}
+
+/// The unfused baseline (Fig. 4(b) vs (c)) on a chosen kernel set:
+/// recover true int4 values (the extra arithmetic FastGEMM avoids),
+/// then the plain W8A8 route — so the fusion ablation compares like
+/// with like at every dispatch level.
+pub fn gemm_w4a8_unfused_with(
+    ks: &dyn KernelSet,
+    xq: &Tensor<i8>,
+    s_a: &[f32],
+    wp: &Tensor<u8>,
+    s_w: &[f32],
+) -> Tensor<f32> {
+    let w = pack::unpack_int4(wp);
+    ks.gemm_w8a8(xq, s_a, &w, s_w)
+}
+
+/// Scalar-reference unfused baseline (existing test API).
+pub fn gemm_w4a8_unfused(
+    xq: &Tensor<i8>,
+    s_a: &[f32],
+    wp: &Tensor<u8>,
+    s_w: &[f32],
+) -> Tensor<f32> {
+    gemm_w4a8_unfused_with(&ScalarKernels, xq, s_a, wp, s_w)
+}
+
+/// Fine-grained W4A8 (paper Eq. 5): per-group dequantize WHILE
+/// accumulating — the hardware-unfriendly baseline.  Deliberately a
+/// single scalar implementation: its per-group f32 epilogue inside the
+/// k-loop is exactly what FastGEMM exists to avoid, so it is measured
+/// as-is rather than optimized.
+pub fn gemm_w4a8_grouped(
+    xq: &Tensor<i8>,
+    s_a: &[f32],
+    wq: &Tensor<i8>,
+    s_g: &Tensor<f32>,
+    group: usize,
+) -> Tensor<f32> {
+    let (m, k) = (xq.rows(), xq.cols());
+    let n = wq.cols();
+    assert_eq!(k % group, 0, "K={k} not divisible by group={group}");
+    let gcount = k / group;
+    let mut out = vec![0f32; m * n];
+    let mut acc = vec![0i32; n];
+    for i in 0..m {
+        let xrow = xq.row(i);
+        let orow = &mut out[i * n..(i + 1) * n];
+        for g in 0..gcount {
+            acc.iter_mut().for_each(|a| *a = 0);
+            for kk in g * group..(g + 1) * group {
+                let a = xrow[kk] as i32;
+                if a == 0 {
+                    continue;
+                }
+                let wrow = wq.row(kk);
+                for j in 0..n {
+                    acc[j] += a * wrow[j] as i32;
+                }
+            }
+            for j in 0..n {
+                orow[j] += acc[j] as f32 * s_g.at2(g, j);
+            }
+        }
+        for j in 0..n {
+            orow[j] *= s_a[i];
+        }
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// Asymmetric W4A8 on a chosen kernel set: the int accumulation is
+/// dispatched (order-free), the zero-point correction epilogue stays
+/// fixed per row.
+pub fn gemm_w4a8_asym_with(
+    ks: &dyn KernelSet,
+    xq: &Tensor<i8>,
+    s_a: &[f32],
+    wu: &Tensor<u8>,
+    s_w: &[f32],
+    z: &[i32],
+) -> Tensor<f32> {
+    let (m, n) = (xq.rows(), wu.cols());
+    let wi = wu.map(|v| v as i8); // u4 fits in s8
+    let acc = ks.idot(xq, &wi);
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let rs: i32 = xq.row(i).iter().map(|&v| v as i32).sum();
+        epilogue::dequant_row_asym(
+            &acc[i * n..(i + 1) * n],
+            rs,
+            z,
+            s_a[i],
+            s_w,
+            &mut out[i * n..(i + 1) * n],
+        );
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// Scalar-reference asymmetric W4A8 (existing test API).
+pub fn gemm_w4a8_asym(
+    xq: &Tensor<i8>,
+    s_a: &[f32],
+    wu: &Tensor<u8>,
+    s_w: &[f32],
+    z: &[i32],
+) -> Tensor<f32> {
+    gemm_w4a8_asym_with(&ScalarKernels, xq, s_a, wu, s_w, z)
+}
+
+/// W4A16 (paper Eq. 4) on a chosen kernel set: dequantize group-wise
+/// int4 weights to float BEFORE an FP GEMM.
+pub fn gemm_w4a16_with(
+    ks: &dyn KernelSet,
+    x: &Tensor<f32>,
+    wq: &Tensor<i8>,
+    s_g: &Tensor<f32>,
+    group: usize,
+) -> Tensor<f32> {
+    let (k, n) = (wq.rows(), wq.cols());
+    let mut wf = Tensor::<f32>::zeros(&[k, n]);
+    for i in 0..k {
+        let g = i / group;
+        let qrow = wq.row(i);
+        let orow = wf.row_mut(i);
+        for j in 0..n {
+            orow[j] = qrow[j] as f32 * s_g.at2(g, j);
+        }
+    }
+    ks.gemm_fp(x, &wf)
+}
+
+/// Scalar-reference W4A16 (existing test API).
+pub fn gemm_w4a16(
+    x: &Tensor<f32>,
+    wq: &Tensor<i8>,
+    s_g: &Tensor<f32>,
+    group: usize,
+) -> Tensor<f32> {
+    gemm_w4a16_with(&ScalarKernels, x, wq, s_g, group)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{rtn, scale};
+
+    fn mk_xq(m: usize, k: usize, seed: u64) -> (Tensor<i8>, Vec<f32>) {
+        let x = Tensor::randn(&[m, k], seed);
+        scale::quant_act_per_token(&x)
+    }
+
+    fn sets() -> Vec<Box<dyn KernelSet>> {
+        vec![
+            Box::new(ScalarKernels),
+            Box::new(BlockedKernels),
+            Box::new(ParallelKernels::new(Arc::new(ThreadPool::new(3)))),
+        ]
+    }
+
+    #[test]
+    fn fastgemm_matches_w8a8_on_x16_weights() {
+        // the x16 contract, per kernel set
+        let (m, k, n) = (3, 32, 5);
+        let (xq, s_a) = mk_xq(m, k, 7);
+        let wf = Tensor::randn(&[k, n], 8);
+        let (q4, s_w) = rtn::rtn_per_channel(&wf, 4, None, None);
+        let p = pack::pack_int4(&q4);
+        let x16 = pack::unpack_x16(&p);
+        let s16: Vec<f32> = s_w.iter().map(|v| v / 16.0).collect();
+        for ks in sets() {
+            let fast = ks.gemm_w4a8_fast(&xq, &s_a, &p, &s_w);
+            let w8 = ks.gemm_w8a8(&xq, &s_a, &x16, &s16);
+            assert_eq!(
+                fast,
+                w8,
+                "{}: x16 contract must be bit-exact",
+                ks.name()
+            );
+        }
+    }
+
+    #[test]
+    fn unfused_equals_fast() {
+        let (m, k, n) = (2, 16, 3);
+        let (xq, s_a) = mk_xq(m, k, 9);
+        let wf = Tensor::randn(&[k, n], 10);
+        let (q4, s_w) = rtn::rtn_per_channel(&wf, 4, None, None);
+        let p = pack::pack_int4(&q4);
+        let fast = gemm_w4a8_fast(&xq, &s_a, &p, &s_w);
+        let unfused = gemm_w4a8_unfused(&xq, &s_a, &p, &s_w);
+        assert!(fast.max_abs_diff(&unfused) < 1e-5);
+    }
+
+    #[test]
+    fn grouped_close_to_fp_on_exact_weights() {
+        // int4 grid weights quantize losslessly -> grouped path must be
+        // close to the fp product (only activation quant noise remains)
+        let (m, k, n) = (2, 16, 4);
+        let group = 8;
+        let x = Tensor::randn(&[m, k], 11);
+        let (xq, s_a) = scale::quant_act_per_token(&x);
+        let wf = Tensor::randn(&[k, n], 12);
+        let (q, s_g) = rtn::rtn_per_group(&wf, group, 4);
+        let wdeq = rtn::dequant_per_group(&q, &s_g, group);
+        let got = gemm_w4a8_grouped(&xq, &s_a, &q, &s_g, group);
+        let want = gemm_fp(&x, &wdeq);
+        // residual = activation-quant noise only; outputs are O(sqrt(K))
+        assert!(got.max_abs_diff(&want) < 0.5, "activation-quant noise");
+    }
+
+    #[test]
+    fn asym_matches_reference_dequant() {
+        let (m, k, n) = (2, 12, 3);
+        let (xq, s_a) = mk_xq(m, k, 13);
+        let wf = Tensor::randn(&[k, n], 14);
+        let (wu, s_w, z) = rtn::rtn_per_channel_asym(&wf, 4);
+        let got = gemm_w4a8_asym(&xq, &s_a, &wu, &s_w, &z);
+        // reference: dequantize weights then fp gemm on dequant acts
+        let mut xf = Tensor::<f32>::zeros(&[m, k]);
+        for i in 0..m {
+            for j in 0..k {
+                xf.set2(i, j, xq.at2(i, j) as f32 * s_a[i]);
+            }
+        }
+        let mut wf2 = Tensor::<f32>::zeros(&[k, n]);
+        for i in 0..k {
+            for j in 0..n {
+                wf2.set2(i, j, (wu.at2(i, j) as i32 - z[j]) as f32 * s_w[j]);
+            }
+        }
+        let want = gemm_fp(&xf, &wf2);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn blocked_and_parallel_match_scalar_ragged() {
+        // shapes straddling the KC/NC tile edges and the x16 pair width
+        for &(m, k, n) in &[
+            (1usize, 6usize, 3usize),
+            (5, 300, 130),
+            (17, 258, 129),
+            (2, 512, 128),
+        ] {
+            let (xq, s_a) = mk_xq(m, k, 100 + m as u64);
+            let wf = Tensor::randn(&[k, n], 200 + n as u64);
+            let (q4, s_w) = rtn::rtn_per_channel(&wf, 4, None, None);
+            let p = pack::pack_int4(&q4);
+            let x = Tensor::randn(&[m, k], 300 + k as u64);
+            let scalar = ScalarKernels;
+            for ks in sets() {
+                assert_eq!(
+                    ks.gemm_w4a8_fast(&xq, &s_a, &p, &s_w),
+                    scalar.gemm_w4a8_fast(&xq, &s_a, &p, &s_w),
+                    "{} w4a8_fast ({m},{k},{n})",
+                    ks.name()
+                );
+                assert_eq!(
+                    ks.gemm_fp(&x, &wf),
+                    scalar.gemm_fp(&x, &wf),
+                    "{} fp ({m},{k},{n})",
+                    ks.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn split_ranges_covers_everything() {
+        for total in [0usize, 1, 2, 7, 16] {
+            for parts in [1usize, 2, 3, 8] {
+                let r = split_ranges(total, parts);
+                let mut covered = 0;
+                let mut last = 0;
+                for &(lo, hi) in &r {
+                    assert_eq!(lo, last);
+                    assert!(hi > lo);
+                    covered += hi - lo;
+                    last = hi;
+                }
+                assert_eq!(covered, total);
+            }
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! The kernel layer: compute primitives behind a dispatch trait,
+//! separated from graph interpretation.
+//!
+//! `runtime::native` walks graphs — embedding lookups, attention
+//! plumbing, cache layout, output assembly — and calls through a
+//! [`KernelSet`] handle (chosen ONCE at backend construction, see
+//! [`dispatch`]) for every GEMM-shaped op.  Three sets implement the
+//! trait:
+//!
+//! | set        | strategy                                   | threads |
+//! |------------|--------------------------------------------|---------|
+//! | `scalar`   | the original reference loops, verbatim     | 1       |
+//! | `blocked`  | K x N cache tiles, fused SINT4toS8 unpack  | 1       |
+//! | `parallel` | blocked kernel over row/column strips      | pool    |
+//!
+//! **Bit-exactness contract:** all three sets produce IDENTICAL bits
+//! for every trait method.  int accumulation is order-free (i32 adds
+//! commute), the f32 epilogue is elementwise in a fixed order
+//! ([`epilogue`]), and the fp GEMM keeps one sequential k-loop per
+//! output element ([`gemm`]).  `tests/properties.rs` pins scalar ==
+//! blocked == parallel with exact `assert_eq!` across ragged shapes,
+//! and the engine-level stream parity test pins token-identical output
+//! across `ODYSSEY_KERNELS` values.
+//!
+//! Submodules: [`gemm`] (the three sets + reference free functions),
+//! [`unpack`] (tile-granular SINT4toS8 x16), [`epilogue`] (dequant
+//! tails), [`elementwise`] (norm/rope/softmax/attention primitives,
+//! shared by all sets), [`dispatch`] (choice + construction).
+
+pub mod dispatch;
+pub mod elementwise;
+pub mod epilogue;
+pub mod gemm;
+pub mod unpack;
+
+use crate::tensor::Tensor;
+
+pub use dispatch::{kernel_set, KernelChoice};
+pub use gemm::{BlockedKernels, ParallelKernels, ScalarKernels};
+
+/// The compute interface the graph walkers dispatch through.
+///
+/// Every method is a pure function of its arguments; implementations
+/// differ only in loop order and threading, never in the per-element
+/// float-op sequence — see the module docs for why that guarantees
+/// bit-identical results.
+pub trait KernelSet: Send + Sync {
+    /// Set name (`scalar` / `blocked` / `parallel`) for logs + benches.
+    fn name(&self) -> &'static str;
+
+    /// Raw int8 GEMM accumulator: xq [M,K] x w [K,N] -> i32 [M*N].
+    fn idot(&self, xq: &Tensor<i8>, w: &Tensor<i8>) -> Vec<i32>;
+
+    /// FP GEMM (the fp variant + W4A16 after dequant + lm_head).
+    fn gemm_fp(&self, x: &Tensor<f32>, w: &Tensor<f32>) -> Tensor<f32>;
+
+    /// W8A8: int GEMM + per-token x per-channel dequant epilogue.
+    fn gemm_w8a8(
+        &self,
+        xq: &Tensor<i8>,
+        s_a: &[f32],
+        wq: &Tensor<i8>,
+        s_w: &[f32],
+    ) -> Tensor<f32>;
+
+    /// FastGEMM W4A8: SINT4-packed weights, x16 unpack (fused or not is
+    /// the implementation's business), /16-folded dequant epilogue.
+    fn gemm_w4a8_fast(
+        &self,
+        xq: &Tensor<i8>,
+        s_a: &[f32],
+        wp: &Tensor<u8>,
+        s_w: &[f32],
+    ) -> Tensor<f32>;
+
+    /// FastGEMM on an already x16-unpacked weight buffer (the staged
+    /// serving path).
+    fn gemm_w4a8_fast_pre(
+        &self,
+        xq: &Tensor<i8>,
+        s_a: &[f32],
+        w16: &Tensor<i8>,
+        s_w: &[f32],
+    ) -> Tensor<f32>;
+
+    /// Whole-matrix SINT4toS8 x16 unpack (weight staging).
+    fn unpack_x16(&self, wp: &Tensor<u8>) -> Tensor<i8>;
+}

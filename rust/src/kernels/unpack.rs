@@ -1,0 +1,76 @@
+//! SINT4toS8 x16 unpack, tile-granular.
+//!
+//! [`crate::quant::pack`] owns the storage format and the whole-matrix
+//! reference conversion (`unpack_x16`); this module unpacks one
+//! `[kc..kce) x [jc..jce)` weight tile into a scratch buffer so the
+//! blocked GEMM can fuse the conversion per tile (the FastGEMM fusion,
+//! paper Fig. 4(d)) instead of materializing the full 2x-sized s8
+//! matrix.  Byte semantics are IDENTICAL to `pack::unpack_x16` — low
+//! nibble shifted into the high bits, high nibble masked in place — so
+//! every produced value is exactly 16x the int4 weight and the fused
+//! path stays bit-exact against unpack-then-GEMM.
+
+use crate::tensor::Tensor;
+
+/// Unpack rows `[kc, kce)` x cols `[jc, jce)` of a packed `[K/2, N]` u8
+/// matrix into `scratch` (row-major `[kce-kc, jce-jc]` s8, x16 values).
+/// `kc`/`kce` must be even: packed bytes hold K-adjacent nibble pairs.
+pub fn unpack_tile_x16(
+    wp: &Tensor<u8>,
+    kc: usize,
+    kce: usize,
+    jc: usize,
+    jce: usize,
+    scratch: &mut [i8],
+) {
+    debug_assert_eq!(kc % 2, 0, "tile start must be nibble-pair aligned");
+    debug_assert_eq!(kce % 2, 0, "tile end must be nibble-pair aligned");
+    let tw = jce - jc;
+    debug_assert!(scratch.len() >= (kce - kc) * tw);
+    for kp in kc / 2..kce / 2 {
+        let prow = &wp.row(kp)[jc..jce];
+        let lo_base = (2 * kp - kc) * tw;
+        let (head, tail) = scratch.split_at_mut(lo_base + tw);
+        let lo_row = &mut head[lo_base..];
+        let hi_row = &mut tail[..tw];
+        for j in 0..tw {
+            let b = prow[j];
+            lo_row[j] = (b << 4) as i8; // low nibble -> high bits
+            hi_row[j] = (b & 0xF0) as i8; // high nibble already in place
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack;
+
+    #[test]
+    fn tile_unpack_matches_whole_matrix_reference() {
+        // ragged K/N, several tile windows — every tile must reproduce
+        // the corresponding window of pack::unpack_x16 exactly
+        let (k, n) = (12, 7);
+        let mut rng = crate::util::XorShift::new(42);
+        let q: Vec<i8> =
+            (0..k * n).map(|_| rng.range(-8, 8) as i8).collect();
+        let q = Tensor::from_vec(&[k, n], q);
+        let p = pack::pack_int4(&q);
+        let whole = pack::unpack_x16(&p);
+        for &(kc, kce, jc, jce) in
+            &[(0, 12, 0, 7), (0, 4, 2, 5), (4, 12, 0, 3), (8, 10, 6, 7)]
+        {
+            let mut scratch = vec![0i8; (kce - kc) * (jce - jc)];
+            unpack_tile_x16(&p, kc, kce, jc, jce, &mut scratch);
+            for kk in kc..kce {
+                for j in jc..jce {
+                    assert_eq!(
+                        scratch[(kk - kc) * (jce - jc) + (j - jc)],
+                        whole.at2(kk, j),
+                        "tile ({kc},{kce})x({jc},{jce}) at ({kk},{j})"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -37,6 +37,7 @@
 //! | [`linalg`]    | Cholesky / triangular solve / SPD inverse for GPTQ |
 //! | [`formats`]   | JSON + safetensors + manifest/config files (no serde) |
 //! | [`quant`]     | the paper's quantization recipe + all baselines |
+//! | [`kernels`]   | dispatching kernel layer: `KernelSet` trait, scalar / cache-blocked / threadpool-parallel GEMM sets, tile unpack, dequant epilogues |
 //! | [`model`]     | LLaMA checkpoint container + canonical naming |
 //! | [`runtime`]   | `ExecBackend` trait (prepare-once weight staging + paged decode), native CPU + pjrt backends, `Value` host tensors, KV block pool, synthetic artifacts |
 //! | [`coordinator`]| serving engine: router, batcher, scheduler, paged/contiguous KV manager |
@@ -48,6 +49,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod exp;
 pub mod formats;
+pub mod kernels;
 pub mod linalg;
 pub mod model;
 pub mod perfmodel;

@@ -60,7 +60,11 @@ fn run(argv: &[String]) -> Result<()> {
 }
 
 fn info(args: &Args, artifacts: &str) -> Result<()> {
-    let rt = Runtime::with_backend(artifacts, cli::parse_backend(args)?)?;
+    let rt = Runtime::with_backend_kernels(
+        artifacts,
+        cli::parse_backend(args)?,
+        cli::parse_kernels(args)?,
+    )?;
     println!("artifacts: {}", rt.manifest.dir.display());
     println!("backend: {}", rt.backend_name());
     println!("group size: {}", rt.manifest.group_size);
@@ -105,7 +109,11 @@ fn quantize(args: &Args, artifacts: &str) -> Result<()> {
         "out",
         &format!("{artifacts}/{model_name}_{variant}_quantized.safetensors"),
     );
-    let rt = Runtime::with_backend(artifacts, cli::parse_backend(args)?)?;
+    let rt = Runtime::with_backend_kernels(
+        artifacts,
+        cli::parse_backend(args)?,
+        cli::parse_kernels(args)?,
+    )?;
     let ckpt = Checkpoint::load(&rt.manifest, &model_name)?;
     let calib = if recipe.use_gptq || recipe.use_lwc || recipe.use_smoothquant || recipe.use_awq
     {
@@ -138,7 +146,11 @@ fn eval(args: &Args, artifacts: &str) -> Result<()> {
     let model_name = args.get_or("model", "tiny3m");
     let variant = args.get_or("variant", "w4a8_fast");
     let recipe = cli::parse_recipe(&args.get_or("recipe", "odyssey"))?;
-    let rt = Runtime::with_backend(artifacts, cli::parse_backend(args)?)?;
+    let rt = Runtime::with_backend_kernels(
+        artifacts,
+        cli::parse_backend(args)?,
+        cli::parse_kernels(args)?,
+    )?;
     let mut ev = exp::eval::Evaluator::with_runtime(
         rt,
         &model_name,
@@ -172,6 +184,7 @@ fn generate(args: &Args, artifacts: &str) -> Result<()> {
         variant: args.get_or("variant", "w4a8_fast"),
         recipe: cli::parse_recipe(&args.get_or("recipe", "odyssey"))?,
         backend: cli::parse_backend(args)?,
+        kernels: cli::parse_kernels(args)?,
         ..Default::default()
     };
     cli::parse_kv_flags(args, &mut opts)?;
@@ -208,6 +221,7 @@ fn serve(args: &Args, artifacts: &str) -> Result<()> {
         variant: args.get_or("variant", "w4a8_fast"),
         recipe: cli::parse_recipe(&args.get_or("recipe", "odyssey"))?,
         backend: cli::parse_backend(args)?,
+        kernels: cli::parse_kernels(args)?,
         ..Default::default()
     };
     cli::parse_kv_flags(args, &mut opts)?;

@@ -763,11 +763,16 @@ impl BackendKind {
     }
 }
 
-fn make_backend(kind: BackendKind) -> Result<Box<dyn ExecBackend>> {
+fn make_backend(
+    kind: BackendKind,
+    kernels: crate::kernels::KernelChoice,
+) -> Result<Box<dyn ExecBackend>> {
     match kind {
         BackendKind::Native => {
-            Ok(Box::new(native::NativeBackend::new()))
+            Ok(Box::new(native::NativeBackend::with_kernels(kernels)))
         }
+        // the pjrt backend runs AOT HLO; the kernel-set choice is a
+        // native-interpreter knob and is ignored there
         #[cfg(feature = "pjrt")]
         BackendKind::Pjrt => Ok(Box::new(pjrt::PjrtBackend::new()?)),
         #[cfg(not(feature = "pjrt"))]
@@ -804,15 +809,29 @@ impl Runtime {
         Self::with_backend(artifacts_dir, kind)
     }
 
-    /// Open with an explicit backend.
+    /// Open with an explicit backend and the env-default kernel set.
     pub fn with_backend(
         artifacts_dir: &str,
         kind: BackendKind,
     ) -> Result<Self> {
+        Self::with_backend_kernels(
+            artifacts_dir,
+            kind,
+            crate::kernels::KernelChoice::from_env(),
+        )
+    }
+
+    /// Open with an explicit backend and kernel-set choice (native
+    /// backend only; pjrt ignores the kernel knob).
+    pub fn with_backend_kernels(
+        artifacts_dir: &str,
+        kind: BackendKind,
+        kernels: crate::kernels::KernelChoice,
+    ) -> Result<Self> {
         let manifest = Manifest::load(artifacts_dir)?;
         Ok(Runtime {
             manifest,
-            backend: make_backend(kind)?,
+            backend: make_backend(kind, kernels)?,
             prepared: BTreeSet::new(),
             compile_times: BTreeMap::new(),
         })

@@ -1,12 +1,10 @@
-//! Native CPU execution backend: interprets the manifest graphs in pure
-//! Rust, mirroring `python/compile/model.py` + `kernels/ref.py` exactly.
-//!
-//! This is what makes the FastGEMM W4A8 path runnable end-to-end on any
-//! machine with no AOT/XLA toolchain: the SINT4toS8 x16 unpack
-//! ([`crate::quant::pack::unpack_x16`]), the int8 GEMM with an s32
-//! accumulator, and the single per-channel dequant epilogue dividing by
-//! 16 (paper Sec. 5.3 / Fig. 4(d)) all run as plain Rust loops.  The fp
-//! linears reuse [`crate::tensor::matmul_f32`].
+//! Native CPU execution backend: a pure graph INTERPRETER.  Every
+//! compute kernel lives in [`crate::kernels`] behind the
+//! [`KernelSet`] trait; this module only walks the manifest graphs —
+//! embedding lookup, rope/attention plumbing, KV-cache layout, output
+//! assembly — and dispatches each GEMM-shaped op through a kernel
+//! handle chosen ONCE at backend construction
+//! (`ODYSSEY_KERNELS=scalar|blocked|parallel`, auto-detected default).
 //!
 //! Numeric contracts kept from the reference kernels:
 //! * `gemm_w4a8_fast(xq, s_a, pack(q), s_w)` is bit-exact against
@@ -17,6 +15,10 @@
 //!   unstaged `execute`: staging only moves the weight parse (including
 //!   the SINT4toS8 x16 unpack) out of the per-step path, it never
 //!   changes the float-op sequence.
+//! * every kernel set produces IDENTICAL bits for every dispatched op
+//!   (see `crate::kernels`), so backend output does not depend on the
+//!   `ODYSSEY_KERNELS` choice — pinned by `tests/properties.rs` and the
+//!   engine stream-parity test.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -24,196 +26,26 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Result};
 
 use crate::formats::config::{GraphInfo, GraphKind, Manifest, ModelInfo};
-use crate::quant::{pack, scale, WeightFormat};
-use crate::tensor::{matmul_f32, Tensor};
+use crate::kernels::elementwise::{
+    apply_rope_row, axpy_f32, dot_f32, rms_norm, rope_row, silu,
+    softmax_inplace, NEG_INF,
+};
+use crate::kernels::gemm::{
+    gemm_w4a16_with, gemm_w4a8_asym_with, gemm_w4a8_unfused_with,
+};
+use crate::kernels::{kernel_set, KernelChoice, KernelSet};
+use crate::quant::{scale, WeightFormat};
+use crate::tensor::Tensor;
 
 use super::{ExecBackend, StagedGraph, StagedHandle, StagingStats, Value};
 
-/// `configs.py::ModelConfig` defaults (the manifest does not carry them;
-/// both tiny models use the defaults).
-pub const NORM_EPS: f32 = 1e-5;
-pub const ROPE_THETA: f32 = 10000.0;
-const NEG_INF: f32 = -1e9;
-
-// ---------------------------------------------------------------------
-// GEMM kernels (public: unit/property tests exercise them directly)
-// ---------------------------------------------------------------------
-
-/// Integer matmul with an s32 accumulator: xq [M,K] x w [K,N].
-fn idot(xq: &Tensor<i8>, w: &Tensor<i8>) -> Vec<i32> {
-    let (m, k) = (xq.rows(), xq.cols());
-    let n = w.cols();
-    assert_eq!(w.rows(), k, "idot inner dims {k} vs {}", w.rows());
-    let mut out = vec![0i32; m * n];
-    for i in 0..m {
-        let xrow = xq.row(i);
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &a) in xrow.iter().enumerate() {
-            if a == 0 {
-                continue;
-            }
-            let a = a as i32;
-            let wrow = w.row(kk);
-            for j in 0..n {
-                orow[j] += a * wrow[j] as i32;
-            }
-        }
-    }
-    out
-}
-
-/// FP GEMM (reuses the tiled `tensor::matmul_f32`).
-pub fn gemm_fp(x: &Tensor<f32>, w: &Tensor<f32>) -> Tensor<f32> {
-    matmul_f32(x, w)
-}
-
-/// W8A8: int GEMM, per-token x per-channel dequant AFTER (paper Eq. 6/7).
-pub fn gemm_w8a8(
-    xq: &Tensor<i8>,
-    s_a: &[f32],
-    wq: &Tensor<i8>,
-    s_w: &[f32],
-) -> Tensor<f32> {
-    let (m, n) = (xq.rows(), wq.cols());
-    let acc = idot(xq, wq);
-    let mut out = vec![0f32; m * n];
-    for i in 0..m {
-        for j in 0..n {
-            out[i * n + j] = acc[i * n + j] as f32 * (s_a[i] * s_w[j]);
-        }
-    }
-    Tensor::from_vec(&[m, n], out)
-}
-
-/// FastGEMM: packed int4 weights, x16 high-nibble unpack fused with the
-/// int GEMM, single per-channel dequant epilogue dividing by 16.
-pub fn gemm_w4a8_fast(
-    xq: &Tensor<i8>,
-    s_a: &[f32],
-    wp: &Tensor<u8>,
-    s_w: &[f32],
-) -> Tensor<f32> {
-    let w16 = pack::unpack_x16(wp);
-    gemm_w4a8_fast_pre(xq, s_a, &w16, s_w)
-}
-
-/// FastGEMM inner kernel on an ALREADY x16-unpacked weight buffer —
-/// the staged path (`ExecBackend::stage` runs the SINT4toS8 unpack
-/// once).  Same float-op sequence as [`gemm_w4a8_fast`], so staged and
-/// unstaged execution are bit-identical.
-pub fn gemm_w4a8_fast_pre(
-    xq: &Tensor<i8>,
-    s_a: &[f32],
-    w16: &Tensor<i8>,
-    s_w: &[f32],
-) -> Tensor<f32> {
-    let (m, n) = (xq.rows(), w16.cols());
-    let acc = idot(xq, w16);
-    let mut out = vec![0f32; m * n];
-    for i in 0..m {
-        for j in 0..n {
-            out[i * n + j] =
-                acc[i * n + j] as f32 * (s_a[i] * (s_w[j] / 16.0));
-        }
-    }
-    Tensor::from_vec(&[m, n], out)
-}
-
-/// The unfused baseline (Fig. 4(b) vs (c)): recover true int4 values
-/// (extra arithmetic FastGEMM avoids), then the plain dequant epilogue.
-pub fn gemm_w4a8_unfused(
-    xq: &Tensor<i8>,
-    s_a: &[f32],
-    wp: &Tensor<u8>,
-    s_w: &[f32],
-) -> Tensor<f32> {
-    let w = pack::unpack_int4(wp);
-    gemm_w8a8(xq, s_a, &w, s_w)
-}
-
-/// Fine-grained W4A8 (paper Eq. 5): per-group dequantize WHILE
-/// accumulating — the hardware-unfriendly baseline.
-pub fn gemm_w4a8_grouped(
-    xq: &Tensor<i8>,
-    s_a: &[f32],
-    wq: &Tensor<i8>,
-    s_g: &Tensor<f32>,
-    group: usize,
-) -> Tensor<f32> {
-    let (m, k) = (xq.rows(), xq.cols());
-    let n = wq.cols();
-    assert_eq!(k % group, 0, "K={k} not divisible by group={group}");
-    let gcount = k / group;
-    let mut out = vec![0f32; m * n];
-    let mut acc = vec![0i32; n];
-    for i in 0..m {
-        let xrow = xq.row(i);
-        let orow = &mut out[i * n..(i + 1) * n];
-        for g in 0..gcount {
-            acc.iter_mut().for_each(|a| *a = 0);
-            for kk in g * group..(g + 1) * group {
-                let a = xrow[kk] as i32;
-                if a == 0 {
-                    continue;
-                }
-                let wrow = wq.row(kk);
-                for j in 0..n {
-                    acc[j] += a * wrow[j] as i32;
-                }
-            }
-            for j in 0..n {
-                orow[j] += acc[j] as f32 * s_g.at2(g, j);
-            }
-        }
-        for j in 0..n {
-            orow[j] *= s_a[i];
-        }
-    }
-    Tensor::from_vec(&[m, n], out)
-}
-
-/// Asymmetric W4A8: zero-point correction via activation row sums.
-pub fn gemm_w4a8_asym(
-    xq: &Tensor<i8>,
-    s_a: &[f32],
-    wu: &Tensor<u8>,
-    s_w: &[f32],
-    z: &[i32],
-) -> Tensor<f32> {
-    let (m, n) = (xq.rows(), wu.cols());
-    let wi = wu.map(|v| v as i8); // u4 fits in s8
-    let acc = idot(xq, &wi);
-    let mut out = vec![0f32; m * n];
-    for i in 0..m {
-        let rs: i32 = xq.row(i).iter().map(|&v| v as i32).sum();
-        for j in 0..n {
-            out[i * n + j] =
-                (acc[i * n + j] - rs * z[j]) as f32 * (s_a[i] * s_w[j]);
-        }
-    }
-    Tensor::from_vec(&[m, n], out)
-}
-
-/// W4A16 (paper Eq. 4): dequantize group-wise int4 weights to float
-/// BEFORE an FP GEMM.
-pub fn gemm_w4a16(
-    x: &Tensor<f32>,
-    wq: &Tensor<i8>,
-    s_g: &Tensor<f32>,
-    group: usize,
-) -> Tensor<f32> {
-    let (k, n) = (wq.rows(), wq.cols());
-    let mut wf = Tensor::<f32>::zeros(&[k, n]);
-    for i in 0..k {
-        let g = i / group;
-        let qrow = wq.row(i);
-        let orow = wf.row_mut(i);
-        for j in 0..n {
-            orow[j] = qrow[j] as f32 * s_g.at2(g, j);
-        }
-    }
-    matmul_f32(x, &wf)
-}
+// The kernel reference API lived in this module before the kernels
+// layer was split out; tests and downstream callers keep their paths.
+pub use crate::kernels::elementwise::{NORM_EPS, ROPE_THETA};
+pub use crate::kernels::gemm::{
+    gemm_fp, gemm_w4a16, gemm_w4a8_asym, gemm_w4a8_fast,
+    gemm_w4a8_fast_pre, gemm_w4a8_grouped, gemm_w4a8_unfused, gemm_w8a8,
+};
 
 // ---------------------------------------------------------------------
 // value <-> tensor plumbing
@@ -253,38 +85,39 @@ enum Mat {
 
 impl Mat {
     /// Apply this matrix to an input, given the (possibly pre-quantized)
-    /// activation of the matrix's linear group.
+    /// activation of the matrix's linear group, dispatching through `ks`.
     fn apply(
         &self,
+        ks: &dyn KernelSet,
         x: &Tensor<f32>,
         xq: Option<(&Tensor<i8>, &[f32])>,
         group: usize,
     ) -> Result<Tensor<f32>> {
         Ok(match self {
-            Mat::Fp(w) => gemm_fp(x, w),
+            Mat::Fp(w) => ks.gemm_fp(x, w),
             Mat::W8 { wq, s_w } => {
                 let (q, s_a) = xq.ok_or_else(|| {
                     anyhow!("w8a8 matrix needs quantized activations")
                 })?;
-                gemm_w8a8(q, s_a, wq, s_w)
+                ks.gemm_w8a8(q, s_a, wq, s_w)
             }
             Mat::W4Fast { w16, s_w } => {
                 let (q, s_a) = xq.ok_or_else(|| {
                     anyhow!("fastgemm matrix needs quantized activations")
                 })?;
-                gemm_w4a8_fast_pre(q, s_a, w16, s_w)
+                ks.gemm_w4a8_fast_pre(q, s_a, w16, s_w)
             }
             Mat::W4Grouped { wq, s_g } => match xq {
-                // w4a8_group: int path
+                // w4a8_group: int path (scalar-only baseline by design)
                 Some((q, s_a)) => gemm_w4a8_grouped(q, s_a, wq, s_g, group),
                 // w4a16: fp activations
-                None => gemm_w4a16(x, wq, s_g, group),
+                None => gemm_w4a16_with(ks, x, wq, s_g, group),
             },
             Mat::W4Asym { wu, s_w, z } => {
                 let (q, s_a) = xq.ok_or_else(|| {
                     anyhow!("asym matrix needs quantized activations")
                 })?;
-                gemm_w4a8_asym(q, s_a, wu, s_w, z)
+                gemm_w4a8_asym_with(ks, q, s_a, wu, s_w, z)
             }
         })
     }
@@ -293,6 +126,7 @@ impl Mat {
 /// Applies several matrices to ONE input, quantizing the input once —
 /// the fusion the paper's engine applies (q/k/v and gate/up groups).
 fn linear_group(
+    ks: &dyn KernelSet,
     x2d: &Tensor<f32>,
     mats: &[&Mat],
     quant_act: bool,
@@ -301,10 +135,10 @@ fn linear_group(
     if quant_act {
         let (xq, s_a) = scale::quant_act_per_token(x2d);
         mats.iter()
-            .map(|m| m.apply(x2d, Some((&xq, s_a.as_slice())), group))
+            .map(|m| m.apply(ks, x2d, Some((&xq, s_a.as_slice())), group))
             .collect()
     } else {
-        mats.iter().map(|m| m.apply(x2d, None, group)).collect()
+        mats.iter().map(|m| m.apply(ks, x2d, None, group)).collect()
     }
 }
 
@@ -345,7 +179,7 @@ impl<'a, 'b> Cursor<'a, 'b> {
         Ok(v)
     }
 
-    fn mat(&mut self, fmt: WeightFormat) -> Result<Mat> {
+    fn mat(&mut self, fmt: WeightFormat, ks: &dyn KernelSet) -> Result<Mat> {
         Ok(match fmt {
             WeightFormat::Fp => Mat::Fp(t2::<f32>(self.take()?)?),
             WeightFormat::W8Channel => Mat::W8 {
@@ -355,7 +189,7 @@ impl<'a, 'b> Cursor<'a, 'b> {
             WeightFormat::W4Packed => Mat::W4Fast {
                 // SINT4toS8 x16 unpack happens HERE, at parse time:
                 // staged graphs pay it once, not per token
-                w16: pack::unpack_x16(&t2::<u8>(self.take()?)?),
+                w16: ks.unpack_x16(&t2::<u8>(self.take()?)?),
                 s_w: vec_f32(self.take()?)?,
             },
             WeightFormat::W4Grouped => Mat::W4Grouped {
@@ -373,6 +207,7 @@ impl<'a, 'b> Cursor<'a, 'b> {
 
 /// Parse the flat weight-argument tail (canonical order).
 fn parse_weights(
+    ks: &dyn KernelSet,
     args: &[&Value],
     info: &ModelInfo,
     variant: &str,
@@ -397,14 +232,14 @@ fn parse_weights(
     for _ in 0..info.n_layers {
         layers.push(LayerW {
             attn_norm: vec_f32(cur.take()?)?,
-            wq: cur.mat(fmt)?,
-            wk: cur.mat(fmt)?,
-            wv: cur.mat(fmt)?,
-            wo: cur.mat(fmt)?,
+            wq: cur.mat(fmt, ks)?,
+            wk: cur.mat(fmt, ks)?,
+            wv: cur.mat(fmt, ks)?,
+            wo: cur.mat(fmt, ks)?,
             mlp_norm: vec_f32(cur.take()?)?,
-            w_gate: cur.mat(fmt)?,
-            w_up: cur.mat(fmt)?,
-            w_down: cur.mat(fmt)?,
+            w_gate: cur.mat(fmt, ks)?,
+            w_up: cur.mat(fmt, ks)?,
+            w_down: cur.mat(fmt, ks)?,
         });
     }
     let norm_f = vec_f32(cur.take()?)?;
@@ -419,74 +254,6 @@ fn variant_quant_act(variant: &str) -> Result<bool> {
         "w8a8" | "w4a8_fast" | "w4a8_group" | "w4a8_asym" => true,
         other => bail!("unknown serving variant {other}"),
     })
-}
-
-// ---------------------------------------------------------------------
-// model math helpers
-// ---------------------------------------------------------------------
-
-/// RMSNorm over the last dim of a [rows, d] buffer.
-fn rms_norm(x: &[f32], rows: usize, d: usize, w: &[f32]) -> Tensor<f32> {
-    let mut out = vec![0f32; rows * d];
-    for r in 0..rows {
-        let row = &x[r * d..(r + 1) * d];
-        let var: f32 =
-            row.iter().map(|v| v * v).sum::<f32>() / d as f32;
-        let inv = 1.0 / (var + NORM_EPS).sqrt();
-        let orow = &mut out[r * d..(r + 1) * d];
-        for j in 0..d {
-            orow[j] = row[j] * inv * w[j];
-        }
-    }
-    Tensor::from_vec(&[rows, d], out)
-}
-
-/// (cos, sin) rope tables for one position, each of length head_dim/2.
-fn rope_row(pos: f32, head_dim: usize, cos: &mut [f32], sin: &mut [f32]) {
-    let half = head_dim / 2;
-    for i in 0..half {
-        let inv =
-            1.0 / ROPE_THETA.powf(2.0 * i as f32 / head_dim as f32);
-        let ang = pos * inv;
-        cos[i] = ang.cos();
-        sin[i] = ang.sin();
-    }
-}
-
-/// Rotate every head of one [d_model] row in place.
-fn apply_rope_row(
-    row: &mut [f32],
-    n_heads: usize,
-    head_dim: usize,
-    cos: &[f32],
-    sin: &[f32],
-) {
-    let half = head_dim / 2;
-    for h in 0..n_heads {
-        let base = h * head_dim;
-        for i in 0..half {
-            let x1 = row[base + i];
-            let x2 = row[base + half + i];
-            row[base + i] = x1 * cos[i] - x2 * sin[i];
-            row[base + half + i] = x2 * cos[i] + x1 * sin[i];
-        }
-    }
-}
-
-fn silu(v: f32) -> f32 {
-    v / (1.0 + (-v).exp())
-}
-
-fn softmax_inplace(scores: &mut [f32]) {
-    let maxv = scores.iter().fold(f32::MIN, |a, &b| a.max(b));
-    let mut z = 0f32;
-    for s in scores.iter_mut() {
-        *s = (*s - maxv).exp();
-        z += *s;
-    }
-    for s in scores.iter_mut() {
-        *s /= z;
-    }
 }
 
 /// Tap collector for the calibration pass (synthetic artifacts): running
@@ -569,6 +336,7 @@ impl TapSink {
 /// call, then runs [`prefill_core`].  Staged execution parses once and
 /// calls the core directly.
 pub fn forward_prefill(
+    ks: &dyn KernelSet,
     info: &ModelInfo,
     variant: &str,
     group: usize,
@@ -582,13 +350,25 @@ pub fn forward_prefill(
     }
     let tokens = args[0].as_slice::<i32>()?;
     let lengths = args[1].as_slice::<i32>()?;
-    let w = parse_weights(&args[2..], info, variant)?;
-    prefill_core(info, variant, group, b, s, tokens, lengths, &w, taps)
+    let w = parse_weights(ks, &args[2..], info, variant)?;
+    prefill_core(ks, info, variant, group, b, s, tokens, lengths, &w, taps)
 }
 
 /// Prefill on pre-parsed weights (the staged hot path).
+///
+/// Dense-row compaction: in-prompt rows (`si < lengths[bi]`) are packed
+/// into a dense `[R, d]` matrix before every GEMM, so a ragged batch
+/// pays FLOPs for real tokens only — not the full `[B*S, d]` bucket.
+/// Compaction cannot change a computed row's bits (every dense op is
+/// row-local, and the attention loops read K/V by position exactly as
+/// before); pad positions get zero logits / zero cache rows, which the
+/// engine never reads (it samples the last PROMPT position and decode
+/// overwrites cache rows from `pos = len` onwards before reading them).
+/// The calibration pass (`taps`) needs pad-row statistics to match the
+/// historical tap stream, so compaction is bypassed while tapping.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn prefill_core(
+    ks: &dyn KernelSet,
     info: &ModelInfo,
     variant: &str,
     group: usize,
@@ -610,16 +390,47 @@ pub(crate) fn prefill_core(
     let (d, nh, dh) = (info.d_model, info.n_heads, info.head_dim);
     let (v, smax) = (info.vocab, info.max_seq);
     let half = dh / 2;
-    let rows = b * s;
 
-    // embedding lookup
-    let mut x = vec![0f32; rows * d];
-    for (r, &t) in tokens.iter().enumerate() {
+    // every token is validated whether or not its row is computed
+    // (same error contract as the uncompacted interpreter)
+    for &t in tokens {
         if t < 0 || t as usize >= v {
             bail!("token id {t} out of vocab range 0..{v}");
         }
+    }
+
+    // ---- computed-row map: compact row index -> (bi, si), rows ordered
+    // (bi asc, si asc) so (bi, ki) resolves to row_base[bi] + ki
+    let compact = taps.is_none();
+    let mut rows_map: Vec<(usize, usize)> = Vec::new();
+    let mut row_base = vec![usize::MAX; b];
+    for bi in 0..b {
+        let lim =
+            if compact { (lengths[bi].max(0) as usize).min(s) } else { s };
+        row_base[bi] = rows_map.len();
+        for si in 0..lim {
+            rows_map.push((bi, si));
+        }
+    }
+    let rows = rows_map.len();
+    if rows == 0 {
+        // all-pad batch: zero logits, zero caches
+        let mut outs = Vec::with_capacity(1 + 2 * info.n_layers);
+        outs.push(Value::f32(&[b, s, v], vec![0f32; b * s * v]));
+        for _ in 0..2 * info.n_layers {
+            outs.push(Value::f32(
+                &[b, nh, smax, dh],
+                vec![0f32; b * nh * smax * dh],
+            ));
+        }
+        return Ok(outs);
+    }
+
+    // embedding lookup over the computed rows
+    let mut x = vec![0f32; rows * d];
+    for (r, &(bi, si)) in rows_map.iter().enumerate() {
         x[r * d..(r + 1) * d]
-            .copy_from_slice(w.embed.row(t as usize));
+            .copy_from_slice(w.embed.row(tokens[bi * s + si] as usize));
     }
 
     // rope tables per in-bucket position (same for every batch row)
@@ -645,6 +456,7 @@ pub(crate) fn prefill_core(
             t.record(&format!("layers.{li}.attn_in"), &h2);
         }
         let mut qkv = linear_group(
+            ks,
             &h2,
             &[&lw.wq, &lw.wk, &lw.wv],
             quant_act,
@@ -653,67 +465,53 @@ pub(crate) fn prefill_core(
         let vv = qkv.pop().unwrap();
         let mut kk = qkv.pop().unwrap();
         let mut qq = qkv.pop().unwrap();
-        for bi in 0..b {
-            for si in 0..s {
-                let r = bi * s + si;
-                let c = &cos[si * half..(si + 1) * half];
-                let sn = &sin[si * half..(si + 1) * half];
-                apply_rope_row(qq.row_mut(r), nh, dh, c, sn);
-                apply_rope_row(kk.row_mut(r), nh, dh, c, sn);
-            }
+        for (r, &(_, si)) in rows_map.iter().enumerate() {
+            let c = &cos[si * half..(si + 1) * half];
+            let sn = &sin[si * half..(si + 1) * half];
+            apply_rope_row(qq.row_mut(r), nh, dh, c, sn);
+            apply_rope_row(kk.row_mut(r), nh, dh, c, sn);
         }
 
-        // KV caches in [B,H,max_seq,Dh] layout, zero-padded past S
+        // KV caches in [B,H,max_seq,Dh] layout, zero-padded past the
+        // computed rows
         let mut kc = vec![0f32; b * nh * smax * dh];
         let mut vc = vec![0f32; b * nh * smax * dh];
-        for bi in 0..b {
-            for si in 0..s {
-                let r = bi * s + si;
-                for h in 0..nh {
-                    let dst = ((bi * nh + h) * smax + si) * dh;
-                    kc[dst..dst + dh]
-                        .copy_from_slice(&kk.row(r)[h * dh..(h + 1) * dh]);
-                    vc[dst..dst + dh]
-                        .copy_from_slice(&vv.row(r)[h * dh..(h + 1) * dh]);
-                }
+        for (r, &(bi, si)) in rows_map.iter().enumerate() {
+            for h in 0..nh {
+                let dst = ((bi * nh + h) * smax + si) * dh;
+                kc[dst..dst + dh]
+                    .copy_from_slice(&kk.row(r)[h * dh..(h + 1) * dh]);
+                vc[dst..dst + dh]
+                    .copy_from_slice(&vv.row(r)[h * dh..(h + 1) * dh]);
             }
         }
 
         // causal masked attention (keys limited to the prompt length)
         let mut o2 = Tensor::<f32>::zeros(&[rows, d]);
         let mut scores = vec![0f32; s];
-        for bi in 0..b {
+        for (qr, &(bi, qi)) in rows_map.iter().enumerate() {
             let len_b = lengths[bi].max(0) as usize;
-            for qi in 0..s {
-                let qr = bi * s + qi;
-                for h in 0..nh {
-                    let qh = &qq.row(qr)[h * dh..(h + 1) * dh];
-                    for (ki, sc) in scores.iter_mut().enumerate() {
-                        if ki <= qi && ki < len_b {
-                            let kh = &kk.row(bi * s + ki)
-                                [h * dh..(h + 1) * dh];
-                            let mut dot = 0f32;
-                            for t in 0..dh {
-                                dot += qh[t] * kh[t];
-                            }
-                            *sc = dot * scale_inv;
-                        } else {
-                            *sc = NEG_INF;
-                        }
+            let base = row_base[bi];
+            for h in 0..nh {
+                let qh = &qq.row(qr)[h * dh..(h + 1) * dh];
+                for (ki, sc) in scores.iter_mut().enumerate() {
+                    if ki <= qi && ki < len_b {
+                        let kh =
+                            &kk.row(base + ki)[h * dh..(h + 1) * dh];
+                        *sc = dot_f32(qh, kh) * scale_inv;
+                    } else {
+                        *sc = NEG_INF;
                     }
-                    softmax_inplace(&mut scores);
-                    let orow = o2.row_mut(qr);
-                    let oh = &mut orow[h * dh..(h + 1) * dh];
-                    for (ki, &att) in scores.iter().enumerate() {
-                        if att == 0.0 {
-                            continue;
-                        }
-                        let vh = &vv.row(bi * s + ki)
-                            [h * dh..(h + 1) * dh];
-                        for t in 0..dh {
-                            oh[t] += att * vh[t];
-                        }
+                }
+                softmax_inplace(&mut scores);
+                let orow = o2.row_mut(qr);
+                let oh = &mut orow[h * dh..(h + 1) * dh];
+                for (ki, &att) in scores.iter().enumerate() {
+                    if att == 0.0 {
+                        continue;
                     }
+                    let vh = &vv.row(base + ki)[h * dh..(h + 1) * dh];
+                    axpy_f32(oh, att, vh);
                 }
             }
         }
@@ -721,7 +519,7 @@ pub(crate) fn prefill_core(
             t.record(&format!("layers.{li}.attn_out_in"), &o2);
         }
         let o_proj =
-            linear_group(&o2, &[&lw.wo], quant_act, group)?.remove(0);
+            linear_group(ks, &o2, &[&lw.wo], quant_act, group)?.remove(0);
         for (xi, oi) in x.iter_mut().zip(o_proj.data().iter()) {
             *xi += *oi;
         }
@@ -732,6 +530,7 @@ pub(crate) fn prefill_core(
             t.record(&format!("layers.{li}.mlp_in"), &h2);
         }
         let mut gu = linear_group(
+            ks,
             &h2,
             &[&lw.w_gate, &lw.w_up],
             quant_act,
@@ -751,8 +550,8 @@ pub(crate) fn prefill_core(
         if let Some(t) = taps.as_deref_mut() {
             t.record(&format!("layers.{li}.mlp_down_in"), &act);
         }
-        let down =
-            linear_group(&act, &[&lw.w_down], quant_act, group)?.remove(0);
+        let down = linear_group(ks, &act, &[&lw.w_down], quant_act, group)?
+            .remove(0);
         for (xi, di) in x.iter_mut().zip(down.data().iter()) {
             *xi += *di;
         }
@@ -761,15 +560,20 @@ pub(crate) fn prefill_core(
         v_caches.push(vc);
     }
 
-    // ---- head
+    // ---- head over the computed rows, scattered into [B, S, V]
     let xf = rms_norm(&x, rows, d, &w.norm_f);
     if let Some(t) = taps.as_deref_mut() {
         t.record("lm_head_in", &xf);
     }
-    let logits = gemm_fp(&xf, &w.lm_head);
+    let logits_c = ks.gemm_fp(&xf, &w.lm_head);
+    let mut logits = vec![0f32; b * s * v];
+    for (r, &(bi, si)) in rows_map.iter().enumerate() {
+        logits[(bi * s + si) * v..(bi * s + si + 1) * v]
+            .copy_from_slice(logits_c.row(r));
+    }
 
     let mut outs = Vec::with_capacity(1 + 2 * info.n_layers);
-    outs.push(Value::f32(&[b, s, v], logits.into_vec()));
+    outs.push(Value::f32(&[b, s, v], logits));
     for kc in k_caches {
         outs.push(Value::f32(&[b, nh, smax, dh], kc));
     }
@@ -811,6 +615,7 @@ fn parse_decode_caches(
 /// call, then runs [`decode_core`].  Staged execution parses once and
 /// calls the core directly.
 pub fn forward_decode(
+    ks: &dyn KernelSet,
     info: &ModelInfo,
     variant: &str,
     group: usize,
@@ -826,13 +631,16 @@ pub fn forward_decode(
     let cache_len = b * info.n_heads * info.max_seq * info.head_dim;
     let (k_caches, v_caches) =
         parse_decode_caches(&args[2..2 + 2 * nl], nl, cache_len)?;
-    let w = parse_weights(&args[2 + 2 * nl..], info, variant)?;
-    decode_core(info, variant, group, b, token, pos, k_caches, v_caches, &w)
+    let w = parse_weights(ks, &args[2 + 2 * nl..], info, variant)?;
+    decode_core(
+        ks, info, variant, group, b, token, pos, k_caches, v_caches, &w,
+    )
 }
 
 /// Decode on pre-parsed weights (the staged hot path).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn decode_core(
+    ks: &dyn KernelSet,
     info: &ModelInfo,
     variant: &str,
     group: usize,
@@ -895,6 +703,7 @@ pub(crate) fn decode_core(
     for (li, lw) in w.layers.iter().enumerate() {
         let h2 = rms_norm(&x, b, d, &lw.attn_norm);
         let mut qkv = linear_group(
+            ks,
             &h2,
             &[&lw.wq, &lw.wk, &lw.wv],
             quant_act,
@@ -929,11 +738,7 @@ pub(crate) fn decode_core(
                 for (ki, sc) in scores.iter_mut().enumerate() {
                     if ki <= p {
                         let kh = &kc[base + ki * dh..base + (ki + 1) * dh];
-                        let mut dot = 0f32;
-                        for t in 0..dh {
-                            dot += qh[t] * kh[t];
-                        }
-                        *sc = dot * scale_inv;
+                        *sc = dot_f32(qh, kh) * scale_inv;
                     } else {
                         *sc = NEG_INF;
                     }
@@ -946,20 +751,19 @@ pub(crate) fn decode_core(
                         continue;
                     }
                     let vh = &vc[base + ki * dh..base + (ki + 1) * dh];
-                    for t in 0..dh {
-                        oh[t] += att * vh[t];
-                    }
+                    axpy_f32(oh, att, vh);
                 }
             }
         }
         let o_proj =
-            linear_group(&o, &[&lw.wo], quant_act, group)?.remove(0);
+            linear_group(ks, &o, &[&lw.wo], quant_act, group)?.remove(0);
         for (xi, oi) in x.iter_mut().zip(o_proj.data().iter()) {
             *xi += *oi;
         }
 
         let h2 = rms_norm(&x, b, d, &lw.mlp_norm);
         let mut gu = linear_group(
+            ks,
             &h2,
             &[&lw.w_gate, &lw.w_up],
             quant_act,
@@ -976,15 +780,15 @@ pub(crate) fn decode_core(
         {
             *a = silu(g) * u;
         }
-        let down =
-            linear_group(&act, &[&lw.w_down], quant_act, group)?.remove(0);
+        let down = linear_group(ks, &act, &[&lw.w_down], quant_act, group)?
+            .remove(0);
         for (xi, di) in x.iter_mut().zip(down.data().iter()) {
             *xi += *di;
         }
     }
 
     let xf = rms_norm(&x, b, d, &w.norm_f);
-    let logits = gemm_fp(&xf, &w.lm_head);
+    let logits = ks.gemm_fp(&xf, &w.lm_head);
 
     let mut outs = Vec::with_capacity(1 + 2 * nl);
     outs.push(Value::f32(&[b, v], logits.into_vec()));
@@ -1015,6 +819,7 @@ pub(crate) fn decode_core(
 /// Returns `(logits f32[B, V], kv bytes written)`.
 #[allow(clippy::too_many_arguments)]
 fn decode_core_paged(
+    ks: &dyn KernelSet,
     info: &ModelInfo,
     variant: &str,
     group: usize,
@@ -1102,6 +907,7 @@ fn decode_core_paged(
     for (li, lw) in w.layers.iter().enumerate() {
         let h2 = rms_norm(&x, b, d, &lw.attn_norm);
         let mut qkv = linear_group(
+            ks,
             &h2,
             &[&lw.wq, &lw.wk, &lw.wv],
             quant_act,
@@ -1148,11 +954,7 @@ fn decode_core_paged(
                     if ki <= p {
                         let off = locate(ki) + h * dh;
                         let kh = &kc[off..off + dh];
-                        let mut dot = 0f32;
-                        for t in 0..dh {
-                            dot += qh[t] * kh[t];
-                        }
-                        *sc = dot * scale_inv;
+                        *sc = dot_f32(qh, kh) * scale_inv;
                     } else {
                         *sc = NEG_INF;
                     }
@@ -1166,20 +968,19 @@ fn decode_core_paged(
                     }
                     let off = locate(ki) + h * dh;
                     let vh = &vc[off..off + dh];
-                    for t in 0..dh {
-                        oh[t] += att * vh[t];
-                    }
+                    axpy_f32(oh, att, vh);
                 }
             }
         }
         let o_proj =
-            linear_group(&o, &[&lw.wo], quant_act, group)?.remove(0);
+            linear_group(ks, &o, &[&lw.wo], quant_act, group)?.remove(0);
         for (xi, oi) in x.iter_mut().zip(o_proj.data().iter()) {
             *xi += *oi;
         }
 
         let h2 = rms_norm(&x, b, d, &lw.mlp_norm);
         let mut gu = linear_group(
+            ks,
             &h2,
             &[&lw.w_gate, &lw.w_up],
             quant_act,
@@ -1196,15 +997,15 @@ fn decode_core_paged(
         {
             *a = silu(g) * u;
         }
-        let down =
-            linear_group(&act, &[&lw.w_down], quant_act, group)?.remove(0);
+        let down = linear_group(ks, &act, &[&lw.w_down], quant_act, group)?
+            .remove(0);
         for (xi, di) in x.iter_mut().zip(down.data().iter()) {
             *xi += *di;
         }
     }
 
     let xf = rms_norm(&x, b, d, &w.norm_f);
-    let logits = gemm_fp(&xf, &w.lm_head);
+    let logits = ks.gemm_fp(&xf, &w.lm_head);
     Ok((Value::f32(&[b, v], logits.into_vec()), kv_bytes))
 }
 
@@ -1239,6 +1040,7 @@ fn decode_core_paged(
 /// Returns `(logits f32[B, S, V], kv bytes written)`.
 #[allow(clippy::too_many_arguments)]
 fn prefill_core_paged(
+    ks: &dyn KernelSet,
     info: &ModelInfo,
     variant: &str,
     group: usize,
@@ -1369,6 +1171,7 @@ fn prefill_core_paged(
         // ---- attention
         let h2 = rms_norm(&x, rows, d, &lw.attn_norm);
         let mut qkv = linear_group(
+            ks,
             &h2,
             &[&lw.wq, &lw.wk, &lw.wv],
             quant_act,
@@ -1429,11 +1232,7 @@ fn prefill_core_paged(
                                 &kk.row(base + (ki - start))
                                     [h * dh..(h + 1) * dh]
                             };
-                            let mut dot = 0f32;
-                            for t in 0..dh {
-                                dot += qh[t] * kh[t];
-                            }
-                            *sc = dot * scale_inv;
+                            *sc = dot_f32(qh, kh) * scale_inv;
                         } else {
                             *sc = NEG_INF;
                         }
@@ -1452,15 +1251,13 @@ fn prefill_core_paged(
                             &vv.row(base + (ki - start))
                                 [h * dh..(h + 1) * dh]
                         };
-                        for t in 0..dh {
-                            oh[t] += att * vh[t];
-                        }
+                        axpy_f32(oh, att, vh);
                     }
                 }
             }
         }
         let o_proj =
-            linear_group(&o2, &[&lw.wo], quant_act, group)?.remove(0);
+            linear_group(ks, &o2, &[&lw.wo], quant_act, group)?.remove(0);
         for (xi, oi) in x.iter_mut().zip(o_proj.data().iter()) {
             *xi += *oi;
         }
@@ -1468,6 +1265,7 @@ fn prefill_core_paged(
         // ---- MLP
         let h2 = rms_norm(&x, rows, d, &lw.mlp_norm);
         let mut gu = linear_group(
+            ks,
             &h2,
             &[&lw.w_gate, &lw.w_up],
             quant_act,
@@ -1484,8 +1282,8 @@ fn prefill_core_paged(
         {
             *a = silu(g) * u;
         }
-        let down =
-            linear_group(&act, &[&lw.w_down], quant_act, group)?.remove(0);
+        let down = linear_group(ks, &act, &[&lw.w_down], quant_act, group)?
+            .remove(0);
         for (xi, di) in x.iter_mut().zip(down.data().iter()) {
             *xi += *di;
         }
@@ -1493,7 +1291,7 @@ fn prefill_core_paged(
 
     // ---- head over the compacted rows, scattered into [B, S, V]
     let xf = rms_norm(&x, rows, d, &w.norm_f);
-    let logits_c = gemm_fp(&xf, &w.lm_head);
+    let logits_c = ks.gemm_fp(&xf, &w.lm_head);
     let mut logits = vec![0f32; b * s * v];
     for (r, &(bi, p)) in rows_map.iter().enumerate() {
         logits[(bi * s + p) * v..(bi * s + p + 1) * v]
@@ -1506,13 +1304,17 @@ fn prefill_core_paged(
 /// execution is parse-then-run of the EXACT staged dispatch
 /// (`parse_gemm_weights` + `run_gemm_staged`), so staged/unstaged
 /// bit-exactness holds by construction — there is one kernel table.
-fn run_gemm(gi: &GraphInfo, args: &[&Value]) -> Result<Vec<Value>> {
+fn run_gemm(
+    ks: &dyn KernelSet,
+    gi: &GraphInfo,
+    args: &[&Value],
+) -> Result<Vec<Value>> {
     let n_dyn = crate::formats::config::gemm_dynamic_args(&gi.variant);
     if args.len() < n_dyn {
         bail!("gemm graph {}: expected at least {n_dyn} args", gi.name);
     }
     let w = parse_gemm_weights(gi, &args[n_dyn..])?;
-    run_gemm_staged(gi, &w, &args[..n_dyn])
+    run_gemm_staged(ks, gi, &w, &args[..n_dyn])
 }
 
 // ---------------------------------------------------------------------
@@ -1599,26 +1401,30 @@ fn parse_gemm_weights(gi: &GraphInfo, vals: &[&Value]) -> Result<GemmW> {
 /// apply the pre-parsed weights.  Kernel-for-kernel identical to
 /// [`run_gemm`], so staged output is bit-exact against unstaged.
 fn run_gemm_staged(
+    ks: &dyn KernelSet,
     gi: &GraphInfo,
     w: &GemmW,
     dynamic: &[&Value],
 ) -> Result<Vec<Value>> {
     let take = |i: usize| nth(dynamic, i, &gi.name, "dynamic-arg");
     let out = match w {
-        GemmW::Fp { w } => gemm_fp(&t2::<f32>(take(0)?)?, w),
-        GemmW::W8 { wq, s_w } => gemm_w8a8(
+        GemmW::Fp { w } => ks.gemm_fp(&t2::<f32>(take(0)?)?, w),
+        GemmW::W8 { wq, s_w } => ks.gemm_w8a8(
             &t2::<i8>(take(0)?)?,
             &vec_f32(take(1)?)?,
             wq,
             s_w,
         ),
-        GemmW::W4Fast { wp, s_w } => gemm_w4a8_fast(
+        // packed payload stays packed: the in-kernel conversion is the
+        // measured cost (fused per-tile in blocked/parallel sets)
+        GemmW::W4Fast { wp, s_w } => ks.gemm_w4a8_fast(
             &t2::<i8>(take(0)?)?,
             &vec_f32(take(1)?)?,
             wp,
             s_w,
         ),
-        GemmW::W4Unfused { wp, s_w } => gemm_w4a8_unfused(
+        GemmW::W4Unfused { wp, s_w } => gemm_w4a8_unfused_with(
+            ks,
             &t2::<i8>(take(0)?)?,
             &vec_f32(take(1)?)?,
             wp,
@@ -1626,7 +1432,7 @@ fn run_gemm_staged(
         ),
         GemmW::W4Grouped { wq, s_g } => {
             if gi.variant == "w4a16" {
-                gemm_w4a16(&t2::<f32>(take(0)?)?, wq, s_g, gi.group)
+                gemm_w4a16_with(ks, &t2::<f32>(take(0)?)?, wq, s_g, gi.group)
             } else {
                 gemm_w4a8_grouped(
                     &t2::<i8>(take(0)?)?,
@@ -1637,7 +1443,8 @@ fn run_gemm_staged(
                 )
             }
         }
-        GemmW::W4Asym { wu, s_w, z } => gemm_w4a8_asym(
+        GemmW::W4Asym { wu, s_w, z } => gemm_w4a8_asym_with(
+            ks,
             &t2::<i8>(take(0)?)?,
             &vec_f32(take(1)?)?,
             wu,
@@ -1651,15 +1458,37 @@ fn run_gemm_staged(
 
 /// Pure-Rust CPU backend (the default).  Graph "preparation" validates
 /// the graph against the manifest; `stage` parses weight payloads once
-/// into [`NativeStaged`] handles.
-#[derive(Default)]
+/// into [`NativeStaged`] handles.  Every GEMM-shaped op dispatches
+/// through the [`KernelSet`] chosen at construction.
 pub struct NativeBackend {
     stats: StagingStats,
+    kernels: Arc<dyn KernelSet>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend::with_kernels(KernelChoice::from_env())
+    }
 }
 
 impl NativeBackend {
     pub fn new() -> Self {
         NativeBackend::default()
+    }
+
+    /// Backend with an explicit kernel-set choice (the env default is
+    /// [`NativeBackend::new`]).  The choice is resolved HERE, once —
+    /// graph walkers only ever see the dispatch handle.
+    pub fn with_kernels(choice: KernelChoice) -> Self {
+        NativeBackend {
+            stats: StagingStats::default(),
+            kernels: kernel_set(choice),
+        }
+    }
+
+    /// Name of the resolved kernel set (for logs and benches).
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernels.name()
     }
 
     fn model_of<'m>(
@@ -1730,10 +1559,11 @@ impl ExecBackend for NativeBackend {
             }
         }
         match info.kind {
-            GraphKind::Gemm => run_gemm(info, args),
+            GraphKind::Gemm => run_gemm(self.kernels.as_ref(), info, args),
             GraphKind::Prefill => {
                 let mi = Self::model_of(manifest, info)?;
                 forward_prefill(
+                    self.kernels.as_ref(),
                     mi,
                     &info.variant,
                     manifest.group_size,
@@ -1751,6 +1581,7 @@ impl ExecBackend for NativeBackend {
                 self.stats.kv_bytes_moved +=
                     (4 * mi.n_layers * cache_len * 4) as u64;
                 forward_decode(
+                    self.kernels.as_ref(),
                     mi,
                     &info.variant,
                     manifest.group_size,
@@ -1781,7 +1612,12 @@ impl ExecBackend for NativeBackend {
                 let minfo = Self::model_of(manifest, info)?.clone();
                 let vals: Vec<&Value> =
                     weights.iter().map(|(_, v)| *v).collect();
-                let parsed = parse_weights(&vals, &minfo, &info.variant)?;
+                let parsed = parse_weights(
+                    self.kernels.as_ref(),
+                    &vals,
+                    &minfo,
+                    &info.variant,
+                )?;
                 NativeStaged::Model {
                     minfo,
                     group: manifest.group_size,
@@ -1872,7 +1708,12 @@ impl ExecBackend for NativeBackend {
         let info = &staged.info;
         match (info.kind, handle) {
             (GraphKind::Gemm, NativeStaged::Gemm { weights }) => {
-                run_gemm_staged(info, weights, dynamic_args)
+                run_gemm_staged(
+                    self.kernels.as_ref(),
+                    info,
+                    weights,
+                    dynamic_args,
+                )
             }
             (
                 GraphKind::Prefill,
@@ -1884,6 +1725,7 @@ impl ExecBackend for NativeBackend {
                 let tokens = dynamic_args[0].as_slice::<i32>()?;
                 let lengths = dynamic_args[1].as_slice::<i32>()?;
                 prefill_core(
+                    self.kernels.as_ref(),
                     minfo,
                     &info.variant,
                     *group,
@@ -1920,6 +1762,7 @@ impl ExecBackend for NativeBackend {
                     cache_len,
                 )?;
                 decode_core(
+                    self.kernels.as_ref(),
                     minfo,
                     &info.variant,
                     *group,
@@ -1971,6 +1814,7 @@ impl ExecBackend for NativeBackend {
             ),
         };
         let (logits, kv_bytes) = decode_core_paged(
+            self.kernels.as_ref(),
             minfo,
             &info.variant,
             group,
@@ -2021,6 +1865,7 @@ impl ExecBackend for NativeBackend {
             ),
         };
         let (logits, _kv_bytes) = prefill_core_paged(
+            self.kernels.as_ref(),
             minfo,
             &info.variant,
             group,
@@ -2047,113 +1892,6 @@ impl ExecBackend for NativeBackend {
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::quant::rtn;
-
-    fn mk_xq(m: usize, k: usize, seed: u64) -> (Tensor<i8>, Vec<f32>) {
-        let x = Tensor::randn(&[m, k], seed);
-        scale::quant_act_per_token(&x)
-    }
-
-    #[test]
-    fn fastgemm_matches_w8a8_on_x16_weights() {
-        let (m, k, n) = (3, 32, 5);
-        let (xq, s_a) = mk_xq(m, k, 7);
-        let wf = Tensor::randn(&[k, n], 8);
-        let (q4, s_w) = rtn::rtn_per_channel(&wf, 4, None, None);
-        let p = pack::pack_int4(&q4);
-        let fast = gemm_w4a8_fast(&xq, &s_a, &p, &s_w);
-        let x16 = pack::unpack_x16(&p);
-        let s16: Vec<f32> = s_w.iter().map(|v| v / 16.0).collect();
-        let w8 = gemm_w8a8(&xq, &s_a, &x16, &s16);
-        assert_eq!(fast, w8, "x16 contract must be bit-exact");
-    }
-
-    #[test]
-    fn unfused_equals_fast() {
-        let (m, k, n) = (2, 16, 3);
-        let (xq, s_a) = mk_xq(m, k, 9);
-        let wf = Tensor::randn(&[k, n], 10);
-        let (q4, s_w) = rtn::rtn_per_channel(&wf, 4, None, None);
-        let p = pack::pack_int4(&q4);
-        let fast = gemm_w4a8_fast(&xq, &s_a, &p, &s_w);
-        let unfused = gemm_w4a8_unfused(&xq, &s_a, &p, &s_w);
-        assert!(fast.max_abs_diff(&unfused) < 1e-5);
-    }
-
-    #[test]
-    fn grouped_close_to_fp_on_exact_weights() {
-        // int4 grid weights quantize losslessly -> grouped path must be
-        // close to the fp product (only activation quant noise remains)
-        let (m, k, n) = (2, 16, 4);
-        let group = 8;
-        let x = Tensor::randn(&[m, k], 11);
-        let (xq, s_a) = scale::quant_act_per_token(&x);
-        let wf = Tensor::randn(&[k, n], 12);
-        let (q, s_g) = rtn::rtn_per_group(&wf, group, 4);
-        let wdeq = rtn::dequant_per_group(&q, &s_g, group);
-        let got = gemm_w4a8_grouped(&xq, &s_a, &q, &s_g, group);
-        let want = gemm_fp(&x, &wdeq);
-        // residual = activation-quant noise only; outputs are O(sqrt(K))
-        assert!(got.max_abs_diff(&want) < 0.5, "activation-quant noise");
-    }
-
-    #[test]
-    fn asym_matches_reference_dequant() {
-        let (m, k, n) = (2, 12, 3);
-        let (xq, s_a) = mk_xq(m, k, 13);
-        let wf = Tensor::randn(&[k, n], 14);
-        let (wu, s_w, z) = rtn::rtn_per_channel_asym(&wf, 4);
-        let got = gemm_w4a8_asym(&xq, &s_a, &wu, &s_w, &z);
-        // reference: dequantize weights then fp gemm on dequant acts
-        let mut xf = Tensor::<f32>::zeros(&[m, k]);
-        for i in 0..m {
-            for j in 0..k {
-                xf.set2(i, j, xq.at2(i, j) as f32 * s_a[i]);
-            }
-        }
-        let mut wf2 = Tensor::<f32>::zeros(&[k, n]);
-        for i in 0..k {
-            for j in 0..n {
-                wf2.set2(i, j, (wu.at2(i, j) as i32 - z[j]) as f32 * s_w[j]);
-            }
-        }
-        let want = gemm_fp(&xf, &wf2);
-        assert!(got.max_abs_diff(&want) < 1e-3);
-    }
-
-    #[test]
-    fn rms_norm_unit_rows() {
-        let x = vec![2.0f32, 2.0, 2.0, 2.0];
-        let w = vec![1.0f32; 4];
-        let out = rms_norm(&x, 1, 4, &w);
-        for &v in out.data() {
-            assert!((v - 1.0).abs() < 1e-3);
-        }
-    }
-
-    #[test]
-    fn rope_preserves_norm() {
-        let mut row = vec![0.3f32, -0.7, 1.1, 0.2, 0.5, -0.1, 0.9, 0.4];
-        let before: f32 = row.iter().map(|v| v * v).sum();
-        let mut cos = vec![0f32; 2];
-        let mut sin = vec![0f32; 2];
-        rope_row(5.0, 4, &mut cos, &mut sin);
-        apply_rope_row(&mut row, 2, 4, &cos, &sin);
-        let after: f32 = row.iter().map(|v| v * v).sum();
-        assert!((before - after).abs() < 1e-4, "rotation is an isometry");
-    }
-
-    #[test]
-    fn softmax_normalizes_with_mask() {
-        let mut s = vec![1.0f32, NEG_INF, 0.5, NEG_INF];
-        softmax_inplace(&mut s);
-        let z: f32 = s.iter().sum();
-        assert!((z - 1.0).abs() < 1e-6);
-        assert_eq!(s[1], 0.0);
-        assert_eq!(s[3], 0.0);
-        assert!(s[0] > s[2]);
-    }
-}
+// Kernel and elementwise unit tests moved to `crate::kernels` with the
+// code they exercise (gemm.rs / elementwise.rs / epilogue.rs / unpack.rs);
+// cross-set and staged/unstaged parity is pinned by tests/properties.rs.

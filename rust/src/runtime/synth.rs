@@ -352,8 +352,10 @@ fn write_calibration(
         let len_v = Value::i32(&[b], vec![s as i32; b]);
         let mut args: Vec<&Value> = vec![&tok_v, &len_v];
         args.extend(flat.iter());
-        forward_prefill(info, "fp", GROUP_SIZE, b, s, &args,
-                        Some(&mut taps))?;
+        // scalar reference kernels: calibration statistics must not
+        // depend on the session's ODYSSEY_KERNELS choice
+        forward_prefill(&crate::kernels::ScalarKernels, info, "fp",
+                        GROUP_SIZE, b, s, &args, Some(&mut taps))?;
     }
 
     let mut st = SafeTensors::new();

@@ -11,7 +11,7 @@ pub mod rng;
 pub mod stats;
 pub mod threadpool;
 
-pub use bench::{BenchResult, Bencher};
+pub use bench::{merge_bench_records, BenchResult, Bencher};
 pub use log::{set_level, Level};
 pub use propcheck::Prop;
 pub use rng::XorShift;

@@ -1,26 +1,47 @@
 //! Fixed-size thread pool over std::sync::mpsc (tokio is unavailable
-//! offline).  Used by the HTTP server and by data-parallel quantization.
+//! offline).  Used by the HTTP server, data-parallel quantization, and
+//! the `kernels::ParallelKernels` GEMM set (which holds one pool for
+//! the process, sized once — see `kernels::dispatch`).
 
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+type Pending = (Mutex<usize>, Condvar);
+
+/// Decrements the pending-job counter on drop, so a panicking job still
+/// releases its slot and `join` cannot hang on a lost decrement.
+struct PendingGuard<'a>(&'a Pending);
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        let (lock, cv) = self.0;
+        let mut cnt = lock.lock().unwrap();
+        *cnt -= 1;
+        if *cnt == 0 {
+            cv.notify_all();
+        }
+    }
+}
 
 /// A simple fixed-size worker pool.  Jobs run FIFO; `join` blocks until
 /// all submitted jobs have completed (the pool stays usable afterwards).
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,
-    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+    pending: Arc<Pending>,
 }
 
 impl ThreadPool {
+    /// Pool of `n` workers; `n == 0` is clamped to 1 (a degenerate but
+    /// valid pool) rather than panicking.
     pub fn new(n: usize) -> Self {
-        assert!(n > 0);
+        let n = n.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
         let mut workers = Vec::with_capacity(n);
         for _ in 0..n {
             let rx = Arc::clone(&rx);
@@ -32,13 +53,12 @@ impl ThreadPool {
                 };
                 match job {
                     Ok(job) => {
-                        job();
-                        let (lock, cv) = &*pending;
-                        let mut cnt = lock.lock().unwrap();
-                        *cnt -= 1;
-                        if *cnt == 0 {
-                            cv.notify_all();
-                        }
+                        let _slot = PendingGuard(&pending);
+                        // keep the worker alive across a panicking job;
+                        // par_map re-raises from the missing result
+                        let _ = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(job),
+                        );
                     }
                     Err(_) => break,
                 }
@@ -56,8 +76,12 @@ impl ThreadPool {
         Self::new(n)
     }
 
-    /// Submit a job.
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn execute_boxed(&self, job: Job) {
         {
             let (lock, _) = &*self.pending;
             *lock.lock().unwrap() += 1;
@@ -65,8 +89,13 @@ impl ThreadPool {
         self.tx
             .as_ref()
             .expect("pool shut down")
-            .send(Box::new(f))
+            .send(job)
             .expect("worker channel closed");
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.execute_boxed(Box::new(f));
     }
 
     /// Block until every submitted job has finished.
@@ -78,32 +107,51 @@ impl ThreadPool {
         }
     }
 
-    /// Map `f` over `items` in parallel, preserving order.
+    /// Map `f` over `items` in parallel, preserving order.  An empty
+    /// `items` returns an empty vec without touching the pool.
+    ///
+    /// Scoped: `f` and the items may borrow from the caller's stack —
+    /// `join()` runs before this returns, so every borrow outlives every
+    /// job.  If a job panics, the panic is re-raised here (after all
+    /// other jobs have drained) rather than deadlocking `join`.
     pub fn par_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
-        T: Send + 'static,
-        R: Send + 'static,
-        F: Fn(T) -> R + Send + Sync + 'static,
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
     {
-        let f = Arc::new(f);
-        let results: Arc<Mutex<Vec<Option<R>>>> = Arc::new(Mutex::new(
-            items.iter().map(|_| None).collect(),
-        ));
-        for (i, item) in items.into_iter().enumerate() {
-            let f = Arc::clone(&f);
-            let results = Arc::clone(&results);
-            self.execute(move || {
-                let r = f(item);
-                results.lock().unwrap()[i] = Some(r);
-            });
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
         }
-        self.join();
-        Arc::try_unwrap(results)
-            .unwrap_or_else(|_| panic!("results still shared"))
-            .into_inner()
-            .unwrap()
+        let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        {
+            let f_ref: &(dyn Fn(T) -> R + Sync) = &f;
+            // usize-erased base pointer: each job writes only slot i,
+            // and slots are disjoint, so no two jobs alias
+            let res_base = results.as_mut_ptr() as usize;
+            for (i, item) in items.into_iter().enumerate() {
+                let job: Box<dyn FnOnce() + Send + '_> =
+                    Box::new(move || {
+                        let r = f_ref(item);
+                        // SAFETY: i < n, slots are disjoint per job, and
+                        // `join()` below keeps `results` alive and
+                        // unobserved until every job has finished
+                        unsafe {
+                            *(res_base as *mut Option<R>).add(i) = Some(r);
+                        }
+                    });
+                // SAFETY: lifetime erasure only — `join()` below blocks
+                // until the job has run, so the borrows it captures
+                // (f_ref, res_base's buffer) outlive it
+                let job: Job = unsafe { std::mem::transmute(job) };
+                self.execute_boxed(job);
+            }
+            self.join();
+        }
+        results
             .into_iter()
-            .map(|r| r.unwrap())
+            .map(|r| r.expect("par_map worker panicked"))
             .collect()
     }
 }
@@ -141,6 +189,51 @@ mod tests {
         let pool = ThreadPool::new(3);
         let out = pool.par_map((0..50).collect::<Vec<i32>>(), |x| x * 2);
         assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_size_clamps_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        let out = pool.par_map(vec![1, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn par_map_empty_items() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<i32> = pool.par_map(Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+        pool.join(); // pool untouched and still healthy
+    }
+
+    #[test]
+    fn par_map_borrows_from_caller() {
+        // the scoped contract: closures may capture stack references
+        let pool = ThreadPool::new(3);
+        let base = vec![10i32, 20, 30, 40];
+        let out =
+            pool.par_map((0..4).collect::<Vec<usize>>(), |i| base[i] + 1);
+        assert_eq!(out, vec![11, 21, 31, 41]);
+    }
+
+    #[test]
+    fn panicking_job_does_not_hang_join() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        pool.join(); // must return despite the panic
+        // pool still works afterwards
+        let out = pool.par_map(vec![1, 2], |x| x * 3);
+        assert_eq!(out, vec![3, 6]);
+    }
+
+    #[test]
+    fn par_map_reraises_worker_panic() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || pool.par_map(vec![0, 1], |x| if x == 1 { panic!() } else { x }),
+        ));
+        assert!(r.is_err(), "panic must surface to the caller");
     }
 
     #[test]

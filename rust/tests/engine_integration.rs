@@ -1022,3 +1022,52 @@ fn variant_engines_agree_on_next_token() {
         rank_of(&fp_logits, w8_top)
     );
 }
+
+#[test]
+fn kernel_sets_produce_identical_token_streams() {
+    // the end-to-end half of the dispatch contract: a full serving run
+    // (prefill + continuous-batched decode) through each kernel set
+    // must emit bit-identical token streams — ODYSSEY_KERNELS (and the
+    // --kernels flag feeding EngineOptions::kernels) is a pure speed
+    // knob.  The choice rides EngineOptions rather than the env var so
+    // parallel test binaries cannot race on process state.
+    use odyssey::kernels::KernelChoice;
+
+    with_engine(|_shared| {
+        let run = |choice: KernelChoice| {
+            let mut o = opts("w4a8_fast");
+            o.kernels = choice;
+            let mut engine = Engine::new(o).expect("engine");
+            for i in 0..3u64 {
+                engine.submit(Request::new(
+                    i,
+                    prompt(11 + i as i32, 10 + 3 * i as usize),
+                    GenParams {
+                        max_new_tokens: 6,
+                        eos: None,
+                        ..Default::default()
+                    },
+                ));
+            }
+            let mut results = engine.run_until_idle().expect("drain");
+            results.sort_by_key(|r| r.id);
+            results
+                .into_iter()
+                .map(|r| r.tokens)
+                .collect::<Vec<Vec<i32>>>()
+        };
+        let scalar = run(KernelChoice::Scalar);
+        let blocked = run(KernelChoice::Blocked);
+        let parallel = run(KernelChoice::Parallel);
+        assert_eq!(scalar.len(), 3);
+        assert!(scalar.iter().all(|t| t.len() == 6));
+        assert_eq!(
+            scalar, blocked,
+            "blocked kernel set changed the token streams"
+        );
+        assert_eq!(
+            scalar, parallel,
+            "parallel kernel set changed the token streams"
+        );
+    });
+}

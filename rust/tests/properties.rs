@@ -1328,3 +1328,78 @@ fn prop_fastgemm_epilogue_matches_unpacked_route_bit_exact() {
         }
     });
 }
+
+// --------------------------------------------- kernel-set dispatch
+
+/// Cross-set dispatch parity: the scalar reference set, the
+/// cache-blocked set, and the threadpool-parallel set must produce
+/// BIT-IDENTICAL outputs for every GEMM flavor the graph walkers
+/// dispatch (`fp`, `w8a8`, `w4a8_fast` packed, `w4a8_fast_pre`
+/// pre-unpacked), across ragged shapes that straddle the blocked set's
+/// KC=256 / NC=128 tile borders and both parallel partitioning modes
+/// (row blocks at large M, column strips at small M).  This is the
+/// contract that makes `ODYSSEY_KERNELS` a pure speed knob: token
+/// streams cannot depend on it.
+#[test]
+fn prop_kernel_sets_bit_identical_across_dispatch() {
+    use odyssey::kernels::{kernel_set, KernelChoice};
+
+    Prop::new("kernel sets bit-identical").cases(10).check(|rng| {
+        // constructed per case: the dispatch handles are Arc'd trait
+        // objects, which the panic-capturing prop harness cannot hold
+        // across cases (not RefUnwindSafe)
+        let sets = [
+            kernel_set(KernelChoice::Scalar),
+            kernel_set(KernelChoice::Blocked),
+            kernel_set(KernelChoice::Parallel),
+        ];
+        // M from 1 (decode row) to ~20 (prefill slab); K even for the
+        // int4 pack, up to 2*KC + change; N past one NC tile
+        let m = 1 + (rng.next_u64() % 20) as usize;
+        let k = 2 * (1 + (rng.next_u64() % 160) as usize);
+        let n = 1 + (rng.next_u64() % 140) as usize;
+        let x = Tensor::randn(&[m, k], rng.next_u64());
+        let wf = Tensor::randn(&[k, n], rng.next_u64());
+        let (xq, s_a) = scale::quant_act_per_token(&x);
+        let (w8, s_w8) = rtn::rtn_per_channel(&wf, 8, None, None);
+        let (w4, s_w4) = rtn::rtn_per_channel(&wf, 4, None, None);
+        let wp = pack::pack_int4(&w4);
+        let w16 = pack::unpack_x16(&wp);
+
+        let fp: Vec<_> =
+            sets.iter().map(|ks| ks.gemm_fp(&x, &wf)).collect();
+        let w8a8: Vec<_> = sets
+            .iter()
+            .map(|ks| ks.gemm_w8a8(&xq, &s_a, &w8, &s_w8))
+            .collect();
+        let fast: Vec<_> = sets
+            .iter()
+            .map(|ks| ks.gemm_w4a8_fast(&xq, &s_a, &wp, &s_w4))
+            .collect();
+        let pre: Vec<_> = sets
+            .iter()
+            .map(|ks| ks.gemm_w4a8_fast_pre(&xq, &s_a, &w16, &s_w4))
+            .collect();
+        for (i, ks) in sets.iter().enumerate().skip(1) {
+            let who = ks.name();
+            assert_eq!(fp[0], fp[i], "({m},{k},{n}) fp: scalar != {who}");
+            assert_eq!(
+                w8a8[0], w8a8[i],
+                "({m},{k},{n}) w8a8: scalar != {who}"
+            );
+            assert_eq!(
+                fast[0], fast[i],
+                "({m},{k},{n}) w4a8_fast: scalar != {who}"
+            );
+            assert_eq!(
+                pre[0], pre[i],
+                "({m},{k},{n}) w4a8_fast_pre: scalar != {who}"
+            );
+        }
+        // the fused per-tile unpack equals the pre-unpacked route too
+        assert_eq!(
+            fast[0], pre[0],
+            "({m},{k},{n}) fused unpack != pre-unpacked"
+        );
+    });
+}
