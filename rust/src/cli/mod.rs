@@ -79,8 +79,22 @@ COMMANDS:
       --model tiny3m --variant w4a8_fast --recipe odyssey
   generate                     one-shot generation from a token prompt
       --prompt 1,17,140,9 --max-new-tokens 16 --variant w4a8_fast
-  serve                        HTTP server (POST /generate, GET /stats)
+  serve                        HTTP server (POST /generate, GET /stats;
+                               streamed NDJSON with \"stream\": true)
       --addr 127.0.0.1:8080 --variant w4a8_fast --workers 4
+  loadgen                      open-loop serving load harness; emits a
+                               BENCH_serving.json record (TTFT/ITL
+                               percentiles, goodput, reject/retry/hung)
+      --requests 48 --rate 16 --arrival poisson|bursty --classes 4
+      --slo-ttft-ms 2500 --max-retries 3 --seed 1 --no-stream
+      --timeout-s 60 --out BENCH_serving.json
+      --addr HOST:PORT         target a running server; omitted =
+                               self-host a synth-checkpoint engine
+                               (honors --model/--variant/--recipe,
+                               --max-queue, --workers, --max-inflight
+                               and the serving flags below)
+      --assert-no-hung         exit nonzero if any connection hung
+      --assert-ttft-p95-ms N   exit nonzero if TTFT p95 exceeds N ms
   bench-gemm                   measured GEMM kernels (cpu shape set)
       --variants w4a8_fast,w8a8 --m 1
   reproduce <exp|all>          regenerate a paper table/figure

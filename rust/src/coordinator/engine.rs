@@ -41,7 +41,7 @@ use crate::coordinator::kv::{KvState, PagedKv};
 use crate::coordinator::metrics::EngineMetrics;
 use crate::coordinator::queue::{Admit, RequestQueue};
 use crate::coordinator::request::{
-    FinishReason, GenResult, Request,
+    FinishReason, GenResult, Request, TokenEvent,
 };
 use crate::coordinator::sched::{ChunkPlan, PrefillSched};
 use crate::formats::config::GraphKind;
@@ -118,6 +118,11 @@ pub struct EngineOptions {
     /// the graph cannot serve is a config error, caught up front
     /// rather than deep in the runtime).
     pub max_prompt: Option<usize>,
+    /// fault injection: make `Engine::step` fail once the step counter
+    /// reaches this value.  Never set in production — it exists so the
+    /// handle/server layers can prove they resolve every waiter when
+    /// the backend errors mid-step (the hang-regression suite).
+    pub fail_step_after: Option<u64>,
 }
 
 impl Default for EngineOptions {
@@ -145,6 +150,7 @@ impl Default for EngineOptions {
             step_token_budget: runtime::step_token_budget_from_env()
                 .unwrap_or(64),
             max_prompt: None,
+            fail_step_after: None,
         }
     }
 }
@@ -247,6 +253,11 @@ pub struct Engine {
     /// `EngineOptions::max_prompt` or the max_seq headroom clamp).
     prefill_seq: usize,
     finished: Vec<GenResult>,
+    /// per-token emission buffer for streaming consumers; only filled
+    /// while `token_events` is on (the handle layer enables it — direct
+    /// engine drivers like benches would otherwise grow it unbounded)
+    events: Vec<TokenEvent>,
+    token_events: bool,
 }
 
 impl Engine {
@@ -468,6 +479,8 @@ impl Engine {
             decode_graph,
             prefill_seq,
             finished: Vec::new(),
+            events: Vec::new(),
+            token_events: false,
             opts,
         })
     }
@@ -519,6 +532,68 @@ impl Engine {
         std::mem::take(&mut self.finished)
     }
 
+    /// Opt into per-token event emission ([`take_token_events`]).  The
+    /// handle layer turns this on; drivers that never drain the buffer
+    /// (benches, batch tests) leave it off so it cannot grow unbounded.
+    ///
+    /// [`take_token_events`]: Engine::take_token_events
+    pub fn set_token_events(&mut self, on: bool) {
+        self.token_events = on;
+        if !on {
+            self.events.clear();
+        }
+    }
+
+    /// Drain the per-token events emitted since the last call (empty
+    /// unless [`Engine::set_token_events`] enabled collection).
+    pub fn take_token_events(&mut self) -> Vec<TokenEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Record one generated token for streaming consumers.
+    fn emit_token(&mut self, id: u64, index: usize, token: i32) {
+        if self.token_events {
+            self.events.push(TokenEvent { id, index, token });
+        }
+    }
+
+    /// Abort every in-flight and queued request after a backend error:
+    /// KV blocks are released, the queue is drained, and a synthesized
+    /// `FinishReason::Error` result is pushed to `finished` for EVERY
+    /// affected request — so a caller blocked on the handle always
+    /// receives a result instead of hanging on a dropped sender.
+    pub fn abort_all(&mut self) {
+        let actives: Vec<u64> = self.active.keys().copied().collect();
+        for id in actives {
+            let seq = self.active.remove(&id).expect("listed active");
+            self.kv.free(seq.slot);
+            self.finish_error(seq.req);
+        }
+        let mid_prefill = self.sched.drain_all();
+        for e in mid_prefill {
+            self.kv.free(e.slot);
+            self.finish_error(e.req);
+        }
+        for r in self.queue.drain_all() {
+            self.finish_error(r);
+        }
+        self.kv_lits = None;
+    }
+
+    /// Synthesize an error result for an aborted request.
+    fn finish_error(&mut self, r: Request) {
+        self.finished.push(GenResult {
+            id: r.id,
+            prompt_len: r.prompt.len(),
+            tokens: Vec::new(),
+            finish: FinishReason::Error,
+            ttft_s: 0.0,
+            ttft_steps: 0,
+            total_s: r.arrived.elapsed().as_secs_f64(),
+        });
+        self.metrics.aborted += 1;
+    }
+
     /// Run engine iterations until no work remains.
     pub fn run_until_idle(&mut self) -> Result<Vec<GenResult>> {
         while self.step()? {}
@@ -535,6 +610,11 @@ impl Engine {
     pub fn step(&mut self) -> Result<bool> {
         self.step_counter += 1;
         self.metrics.engine_steps += 1;
+        if let Some(n) = self.opts.fail_step_after {
+            if self.step_counter >= n {
+                bail!("injected step failure (fail_step_after={n})");
+            }
+        }
         if self.chunking_active() {
             self.step_fused()
         } else {
@@ -907,6 +987,7 @@ impl Engine {
             let ttft = e.req.arrived.elapsed().as_secs_f64();
             let ttft_steps =
                 self.step_counter.saturating_sub(e.req.queued_step);
+            self.emit_token(e.req.id, 0, tok);
             self.active.insert(
                 e.req.id,
                 ActiveSeq {
@@ -1036,6 +1117,7 @@ impl Engine {
             self.metrics.prefill_tokens += plen as u64;
             self.metrics.admitted += 1;
             self.admit_counter += 1;
+            self.emit_token(req.id, 0, tok);
             self.active.insert(
                 req.id,
                 ActiveSeq {
@@ -1157,6 +1239,7 @@ impl Engine {
             self.metrics.prefill_tokens += plen as u64;
             self.metrics.admitted += 1;
             self.admit_counter += 1;
+            self.emit_token(req.id, 0, tok);
             self.active.insert(
                 req.id,
                 ActiveSeq {
@@ -1329,6 +1412,15 @@ impl Engine {
             );
             seq.generated.push(tok);
             seq.last_token = tok;
+            // field access, not `self.emit_token`: `self.active` is
+            // mutably borrowed by the loop
+            if self.token_events {
+                self.events.push(TokenEvent {
+                    id: *id,
+                    index: seq.generated.len() - 1,
+                    token: tok,
+                });
+            }
             let hit_eos = seq.req.params.eos == Some(tok);
             let hit_max =
                 seq.generated.len() >= seq.req.params.max_new_tokens;

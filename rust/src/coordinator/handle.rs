@@ -5,6 +5,27 @@
 //! threads: it runs on its own thread and callers talk to it over
 //! channels — the same topology a vLLM router uses between HTTP workers
 //! and the model executor.
+//!
+//! Two calling conventions share the thread:
+//!
+//! * [`EngineHandle::generate`] blocks until the request finishes and
+//!   returns the whole [`GenResult`].
+//! * [`EngineHandle::generate_streaming`] returns immediately with a
+//!   [`Receiver`] of [`StreamEvent`]s: one `Token` per generated token
+//!   as `Engine::step` produces it, then exactly one `Done` carrying
+//!   the same final [`GenResult`] the blocking call would have
+//!   returned.  Preemption replays are deduplicated here (the engine
+//!   deterministically re-generates identical tokens after an
+//!   eviction), so consumers see each token index exactly once, in
+//!   order.
+//!
+//! Failure discipline: EVERY submitted request resolves.  If
+//! `engine.step()` errors the thread aborts all in-flight work
+//! ([`Engine::abort_all`]) and the synthesized `FinishReason::Error`
+//! results flow through the normal delivery path, so callers blocked
+//! on a result channel get an answer instead of hanging forever (and
+//! their HTTP connections close instead of leaking).  Shutdown and
+//! handle-disconnect drain the same way.
 
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -12,12 +33,25 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, Result};
 
 use super::engine::{Engine, EngineOptions};
-use super::request::{GenParams, GenResult, Request};
+use super::request::{FinishReason, GenParams, GenResult, Request};
 
 enum Cmd {
     Generate(Request, Sender<GenResult>),
+    GenerateStreaming(Request, Sender<StreamEvent>),
     Stats(Sender<String>),
     Shutdown,
+}
+
+/// One frame of a streaming generation.
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// `index` is the token's position in the generated sequence
+    /// (0-based, strictly increasing, no gaps).
+    Token { index: usize, token: i32 },
+    /// Terminal frame: the complete result, bit-identical to what
+    /// [`EngineHandle::generate`] returns for the same seeded request.
+    /// Always the last event on the channel.
+    Done(GenResult),
 }
 
 /// Cloneable handle; `generate` blocks until the result is ready.
@@ -91,6 +125,29 @@ impl EngineHandle {
         rx.recv().map_err(|_| anyhow!("engine dropped request"))
     }
 
+    /// Streaming generation: returns a receiver that yields one
+    /// [`StreamEvent::Token`] per generated token and ends with
+    /// [`StreamEvent::Done`].  The call itself never blocks on
+    /// generation; rejected/errored requests still terminate with a
+    /// `Done` frame so consumers never hang.
+    pub fn generate_streaming(
+        &self,
+        prompt: Vec<i32>,
+        params: GenParams,
+    ) -> Result<Receiver<StreamEvent>> {
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::GenerateStreaming(
+                Request::new(id, prompt, params),
+                tx,
+            ))
+            .map_err(|_| anyhow!("engine gone"))?;
+        Ok(rx)
+    }
+
     /// Engine metrics snapshot (formatted).
     pub fn stats(&self) -> Result<String> {
         let (tx, rx) = mpsc::channel();
@@ -98,6 +155,28 @@ impl EngineHandle {
             .send(Cmd::Stats(tx))
             .map_err(|_| anyhow!("engine gone"))?;
         rx.recv().map_err(|_| anyhow!("engine dropped stats call"))
+    }
+}
+
+/// A streaming waiter: the event channel plus how many tokens the
+/// consumer has been sent.  Preemption makes the engine re-emit a
+/// sequence's tokens from index 0; forwarding only `index ==
+/// delivered` passes each token exactly once (replayed prefixes are
+/// bit-identical by seeded-sampling determinism).
+struct StreamWaiter {
+    tx: Sender<StreamEvent>,
+    delivered: usize,
+}
+
+fn reject_result(id: u64) -> GenResult {
+    GenResult {
+        id,
+        prompt_len: 0,
+        tokens: Vec::new(),
+        finish: FinishReason::Rejected,
+        ttft_s: 0.0,
+        ttft_steps: 0,
+        total_s: 0.0,
     }
 }
 
@@ -116,12 +195,20 @@ fn engine_thread(
             return;
         }
     };
+    // token events feed the stream waiters; harmless when none exist
+    // (drained every iteration either way)
+    engine.set_token_events(true);
     let mut waiters: std::collections::HashMap<u64, Sender<GenResult>> =
+        std::collections::HashMap::new();
+    let mut stream_waiters: std::collections::HashMap<u64, StreamWaiter> =
         std::collections::HashMap::new();
     'outer: loop {
         // 1. drain commands (block only when fully idle)
         loop {
-            let cmd = if engine.pending() == 0 && waiters.is_empty() {
+            let idle = engine.pending() == 0
+                && waiters.is_empty()
+                && stream_waiters.is_empty();
+            let cmd = if idle {
                 match rx.recv() {
                     Ok(c) => Some(c),
                     Err(_) => break 'outer,
@@ -140,16 +227,19 @@ fn engine_thread(
                         waiters.insert(id, tx);
                     } else {
                         // shed: synthesize a rejection
-                        let _ = tx.send(GenResult {
+                        let _ = tx.send(reject_result(id));
+                    }
+                }
+                Some(Cmd::GenerateStreaming(req, tx)) => {
+                    let id = req.id;
+                    if engine.submit(req) {
+                        stream_waiters.insert(
                             id,
-                            prompt_len: 0,
-                            tokens: Vec::new(),
-                            finish:
-                                super::request::FinishReason::Rejected,
-                            ttft_s: 0.0,
-                            ttft_steps: 0,
-                            total_s: 0.0,
-                        });
+                            StreamWaiter { tx, delivered: 0 },
+                        );
+                    } else {
+                        let _ = tx
+                            .send(StreamEvent::Done(reject_result(id)));
                     }
                 }
                 Some(Cmd::Stats(tx)) => {
@@ -175,13 +265,49 @@ fn engine_thread(
             Ok(_progress) => {}
             Err(e) => {
                 crate::util::log::error(&format!("engine step: {e:#}"));
+                // fail everything in flight: abort_all synthesizes a
+                // FinishReason::Error result for every queued /
+                // mid-prefill / active request, and the delivery loop
+                // below resolves the waiters.  Without this, every
+                // caller blocked on recv() hangs forever.
+                engine.abort_all();
             }
         }
-        // 3. deliver finished results
+        // 3. stream out tokens produced this iteration
+        for ev in engine.take_token_events() {
+            if let Some(w) = stream_waiters.get_mut(&ev.id) {
+                // preemption replay: forward only the frontier token
+                if ev.index == w.delivered {
+                    w.delivered += 1;
+                    // receiver gone (client hung up): keep the waiter
+                    // so Done-time cleanup still removes it; the
+                    // engine runs the request to completion either way
+                    let _ = w.tx.send(StreamEvent::Token {
+                        index: ev.index,
+                        token: ev.token,
+                    });
+                }
+            }
+        }
+        // 4. deliver finished results
         for res in engine.take_finished() {
             if let Some(tx) = waiters.remove(&res.id) {
                 let _ = tx.send(res);
+            } else if let Some(w) = stream_waiters.remove(&res.id) {
+                let _ = w.tx.send(StreamEvent::Done(res));
             }
+        }
+    }
+    // Shutdown / handle-disconnect: nothing new will be accepted, but
+    // whatever is still in flight must resolve — abort and deliver the
+    // synthesized errors so no caller is left blocked on a channel
+    // that never closes cleanly.
+    engine.abort_all();
+    for res in engine.take_finished() {
+        if let Some(tx) = waiters.remove(&res.id) {
+            let _ = tx.send(res);
+        } else if let Some(w) = stream_waiters.remove(&res.id) {
+            let _ = w.tx.send(StreamEvent::Done(res));
         }
     }
 }

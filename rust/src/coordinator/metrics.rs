@@ -20,6 +20,10 @@ pub struct EngineMetrics {
     /// paged KV: sequences evicted to recover blocks (re-queued for
     /// re-prefill from their original prompt)
     pub preempted: u64,
+    /// requests failed by an engine abort (`abort_all` after a backend
+    /// error): each got a synthesized `FinishReason::Error` result so
+    /// its waiter resolved instead of hanging
+    pub aborted: u64,
     /// admissions that matched a cached prefix (prefill skipped the
     /// matched history)
     pub prefix_hits: u64,
@@ -109,7 +113,8 @@ impl EngineMetrics {
     /// Multi-line human report.
     pub fn report(&mut self) -> String {
         format!(
-            "completed={} rejected={} admitted={} preempted={}\n\
+            "completed={} rejected={} admitted={} preempted={} \
+             aborted={}\n\
              prefix : {} hits, {} prompt tokens skipped, {} cow forks, \
              {} shared blocks (peak), {} blocks allocated\n\
              prefill: {} steps, {} tokens, {:.1} tok/s ({:.3}s total)\n\
@@ -123,6 +128,7 @@ impl EngineMetrics {
             self.rejected,
             self.admitted,
             self.preempted,
+            self.aborted,
             self.prefix_hits,
             self.prefill_tokens_skipped,
             self.cow_forks,

@@ -17,7 +17,10 @@
 //!                 far each has advanced.
 //! * [`engine`]  — the generation loop over the execution backend;
 //!                 owns the runtime, quantized weights, and KV state.
-//! * [`handle`]  — thread-safe front door (mpsc) for servers/examples.
+//! * [`handle`]  — thread-safe front door (mpsc) for servers/examples:
+//!                 blocking `generate` plus channel-fed
+//!                 `generate_streaming`, with every waiter resolved
+//!                 even when the backend errors mid-step.
 //! * [`metrics`] — throughput/latency accounting.
 
 pub mod batcher;
@@ -30,6 +33,6 @@ pub mod request;
 pub mod sched;
 
 pub use engine::{Engine, EngineOptions};
-pub use handle::EngineHandle;
+pub use handle::{EngineHandle, StreamEvent};
 pub use metrics::EngineMetrics;
-pub use request::{GenParams, GenResult, Request};
+pub use request::{FinishReason, GenParams, GenResult, Request};

@@ -75,6 +75,12 @@ impl RequestQueue {
         self.items.push_front(r);
     }
 
+    /// Take every queued request (engine abort: the backend failed and
+    /// queued work must be bounced rather than left to hang callers).
+    pub fn drain_all(&mut self) -> Vec<Request> {
+        self.items.drain(..).collect()
+    }
+
     pub fn len(&self) -> usize {
         self.items.len()
     }

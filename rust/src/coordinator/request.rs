@@ -58,6 +58,23 @@ pub enum FinishReason {
     MaxTokens,
     /// prompt too long for the graph bucket
     Rejected,
+    /// the engine failed mid-flight (backend error): the request was
+    /// aborted and a synthesized result delivered so callers blocked
+    /// on the handle never hang
+    Error,
+}
+
+/// One generated token, emitted by the engine as `Engine::step`
+/// produces it (streaming delivery).  `index` is the token's position
+/// in the request's generated sequence: after a preemption the engine
+/// deterministically re-generates the same tokens, so a consumer that
+/// forwards only `index == delivered_so_far` sees each token exactly
+/// once.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TokenEvent {
+    pub id: u64,
+    pub index: usize,
+    pub token: i32,
 }
 
 /// Completed generation.

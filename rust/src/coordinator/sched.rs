@@ -122,6 +122,11 @@ impl PrefillSched {
         self.entries.iter()
     }
 
+    /// Take every in-flight entry (engine abort after a backend error).
+    pub fn drain_all(&mut self) -> Vec<PrefillEntry> {
+        std::mem::take(&mut self.entries)
+    }
+
     /// Largest admission stamp among in-flight prefills (preemption
     /// considers mid-prefill sequences alongside active decodes).
     pub fn youngest(&self) -> Option<(u64, u64)> {

@@ -29,11 +29,17 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> Result<()> {
-    let args =
-        Args::parse(
-            argv,
-            &["force", "no-paging", "no-prefix-cache", "no-chunking"],
-        )?;
+    let args = Args::parse(
+        argv,
+        &[
+            "force",
+            "no-paging",
+            "no-prefix-cache",
+            "no-chunking",
+            "no-stream",
+            "assert-no-hung",
+        ],
+    )?;
     let cmd = args
         .positional
         .first()
@@ -47,6 +53,7 @@ fn run(argv: &[String]) -> Result<()> {
         "eval" => eval(&args, &artifacts),
         "generate" => generate(&args, &artifacts),
         "serve" => serve(&args, &artifacts),
+        "loadgen" => loadgen(&args, &artifacts),
         "bench-gemm" => bench_gemm(&args, &artifacts),
         "reproduce" => {
             let exp_id = args
@@ -228,6 +235,89 @@ fn serve(args: &Args, artifacts: &str) -> Result<()> {
     let svc = EngineService::spawn(opts)?;
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     odyssey::server::serve(&addr, svc.handle.clone(), workers, stop)
+}
+
+fn loadgen(args: &Args, artifacts: &str) -> Result<()> {
+    use odyssey::server::loadgen::{ArrivalKind, LoadgenOptions};
+    let get_f64 = |key: &str, default: f64| -> Result<f64> {
+        match args.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow!("--{key} expects a number, got {v}")
+            }),
+        }
+    };
+    let opts = LoadgenOptions {
+        requests: args.get_usize("requests", 48)?,
+        rate: get_f64("rate", 16.0)?,
+        arrival: ArrivalKind::parse(&args.get_or("arrival", "poisson"))?,
+        seed: args.get_usize("seed", 1)? as u64,
+        classes: args.get_usize("classes", 4)?,
+        slo_ttft_ms: get_f64("slo-ttft-ms", 2500.0)?,
+        max_retries: args.get_usize("max-retries", 3)?,
+        stream: !args.has("no-stream"),
+        timeout_s: get_f64("timeout-s", 60.0)?,
+    };
+    let mut report = if let Some(addr) = args.get("addr") {
+        odyssey::server::loadgen::run(addr, &opts)?
+    } else {
+        // self-host: synth artifacts + engine + server on an OS port
+        odyssey::runtime::synth::ensure_artifacts(artifacts)?;
+        let mut eopts = EngineOptions {
+            artifacts_dir: artifacts.to_string(),
+            model: args.get_or("model", "tiny3m"),
+            variant: args.get_or("variant", "w4a8_fast"),
+            // vanilla keeps startup fast; --recipe odyssey for the
+            // full LWC+GPTQ pipeline
+            recipe: cli::parse_recipe(&args.get_or("recipe", "vanilla"))?,
+            backend: cli::parse_backend(args)?,
+            kernels: cli::parse_kernels(args)?,
+            ..Default::default()
+        };
+        eopts.max_queue = args.get_usize("max-queue", eopts.max_queue)?;
+        cli::parse_kv_flags(args, &mut eopts)?;
+        let svc = EngineService::spawn(eopts)?;
+        let server = odyssey::server::Server::bind(
+            "127.0.0.1:0",
+            svc.handle.clone(),
+            odyssey::server::ServerOptions {
+                workers: args.get_usize("workers", 8)?,
+                max_inflight: args.get_usize("max-inflight", 64)?,
+                ..Default::default()
+            },
+        )?;
+        let addr = server.local_addr()?.to_string();
+        let stop = std::sync::Arc::new(
+            std::sync::atomic::AtomicBool::new(false),
+        );
+        let stop2 = std::sync::Arc::clone(&stop);
+        let jh = std::thread::spawn(move || server.run(stop2));
+        let report = odyssey::server::loadgen::run(&addr, &opts);
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        let _ = jh.join();
+        svc.shutdown();
+        report?
+    };
+    println!("{}", report.human());
+    let section = report.bench_name();
+    let record = report.record();
+    println!("BENCH {}", record.emit());
+    let out = args.get_or("out", "BENCH_serving.json");
+    odyssey::util::bench::merge_bench_records(&out, &section, &[record])
+        .map_err(|e| anyhow!("writing {out}: {e}"))?;
+    if args.has("assert-no-hung") && report.hung > 0 {
+        bail!("{} hung connections (want 0)", report.hung);
+    }
+    if let Some(cap) = args.get("assert-ttft-p95-ms") {
+        let cap: f64 = cap.parse().map_err(|_| {
+            anyhow!("--assert-ttft-p95-ms expects a number")
+        })?;
+        let p95 = report.ttft.p95() * 1e3;
+        if !p95.is_finite() || p95 > cap {
+            bail!("ttft p95 {p95:.1}ms exceeds the {cap}ms cap");
+        }
+    }
+    Ok(())
 }
 
 fn bench_gemm(args: &Args, artifacts: &str) -> Result<()> {

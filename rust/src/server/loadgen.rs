@@ -1,0 +1,723 @@
+//! Open-loop load generator for the serving stack.
+//!
+//! Open-loop means arrivals follow a PRE-COMPUTED schedule, independent
+//! of completions — the generator keeps firing even when the server
+//! slows down, which is what exposes queueing collapse (a closed-loop
+//! client self-throttles and hides it).  Two arrival processes:
+//!
+//! * `poisson` — iid exponential inter-arrival gaps at the mean rate.
+//! * `bursty`  — the same mean rate compressed into the ON half of a
+//!   square wave: 2x-rate bursts alternating with silent gaps, the
+//!   admission-control stress shape.
+//!
+//! The workload mixes prompt/output lengths and groups requests into
+//! shared-prefix CLASSES (same first [`PREFIX_LEN`] tokens within a
+//! class) so the engine's prefix cache sees realistic reuse.
+//!
+//! Each request runs on its own thread (the open-loop contract), talks
+//! real HTTP over a socket, and measures WALL-CLOCK latencies from the
+//! client side: TTFT = send → first token frame, ITL = gaps between
+//! token frames (streaming mode; blocking mode can only observe
+//! TTFT = total).  429 responses honor `Retry-After` up to a retry
+//! budget, then count as rejected.  The aggregate [`Report`] carries
+//! TTFT/ITL p50/p95/p99, goodput under a TTFT SLO, reject/retry/error/
+//! hung counts — and serializes into the committed `BENCH_serving.json`
+//! trajectory via [`crate::util::bench::merge_bench_records`].
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::formats::json::Json;
+use crate::util::rng::XorShift;
+use crate::util::stats::Summary;
+
+/// Shared-prefix length per request class (block-aligned for the
+/// default 16-position KV block, so whole prefix blocks are reusable).
+pub const PREFIX_LEN: usize = 16;
+
+/// Bursty arrival period: arrivals land in the first half of each
+/// period at twice the mean rate, the second half is silent.
+pub const BURST_PERIOD_S: f64 = 2.0;
+
+/// Arrival process shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalKind {
+    Poisson,
+    Bursty,
+}
+
+impl ArrivalKind {
+    pub fn parse(name: &str) -> Result<ArrivalKind> {
+        match name {
+            "poisson" => Ok(ArrivalKind::Poisson),
+            "bursty" => Ok(ArrivalKind::Bursty),
+            other => Err(anyhow!(
+                "unknown arrival process '{other}' (want poisson|bursty)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Bursty => "bursty",
+        }
+    }
+}
+
+/// Load-generation knobs.
+#[derive(Clone, Debug)]
+pub struct LoadgenOptions {
+    pub requests: usize,
+    /// mean arrival rate, requests/second
+    pub rate: f64,
+    pub arrival: ArrivalKind,
+    pub seed: u64,
+    /// number of shared-prefix request classes
+    pub classes: usize,
+    /// TTFT SLO for goodput accounting, milliseconds
+    pub slo_ttft_ms: f64,
+    /// 429 retry budget per request (honoring Retry-After)
+    pub max_retries: usize,
+    /// streamed NDJSON requests (true) or blocking JSON (false)
+    pub stream: bool,
+    /// per-socket read timeout — a request exceeding it counts as HUNG
+    pub timeout_s: f64,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> Self {
+        LoadgenOptions {
+            requests: 48,
+            rate: 16.0,
+            arrival: ArrivalKind::Poisson,
+            seed: 1,
+            classes: 4,
+            slo_ttft_ms: 2500.0,
+            max_retries: 3,
+            stream: true,
+            timeout_s: 60.0,
+        }
+    }
+}
+
+fn exp_gap(rng: &mut XorShift, rate: f64) -> f64 {
+    // inverse-CDF exponential; 1-u in (0, 1] so ln is finite
+    -(1.0 - rng.next_f64()).ln() / rate
+}
+
+/// Pre-computed arrival times (seconds from start), seeded and sorted.
+pub fn arrival_times(
+    kind: ArrivalKind,
+    n: usize,
+    rate: f64,
+    seed: u64,
+) -> Vec<f64> {
+    let mut rng = XorShift::new(seed ^ 0xA881_15EC);
+    let mut out = Vec::with_capacity(n);
+    match kind {
+        ArrivalKind::Poisson => {
+            let mut t = 0.0;
+            for _ in 0..n {
+                t += exp_gap(&mut rng, rate);
+                out.push(t);
+            }
+        }
+        ArrivalKind::Bursty => {
+            // accumulate arrivals in ON-phase time at 2x rate, then
+            // map onto the wall clock by inserting the OFF half of
+            // every period
+            let on = BURST_PERIOD_S / 2.0;
+            let mut t_on = 0.0;
+            for _ in 0..n {
+                t_on += exp_gap(&mut rng, rate * 2.0);
+                let period = (t_on / on).floor();
+                let within = t_on - period * on;
+                out.push(period * BURST_PERIOD_S + within);
+            }
+        }
+    }
+    out
+}
+
+/// One request's prompt + sampling knobs, serialized as the POST body.
+#[derive(Clone, Debug)]
+pub struct RequestSpec {
+    pub class: usize,
+    pub tokens: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub seed: u64,
+}
+
+impl RequestSpec {
+    pub fn body(&self, stream: bool) -> String {
+        Json::obj(vec![
+            (
+                "tokens",
+                Json::Arr(
+                    self.tokens
+                        .iter()
+                        .map(|&t| Json::num(t as f64))
+                        .collect(),
+                ),
+            ),
+            ("max_new_tokens", Json::num(self.max_new_tokens as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("stream", Json::Bool(stream)),
+        ])
+        .emit()
+    }
+}
+
+/// Seeded workload: `n` requests over `classes` shared-prefix classes
+/// with mixed prompt lengths (PREFIX_LEN+4 ..= PREFIX_LEN+48 tokens)
+/// and output lengths (4 ..= 24 tokens).  Token ids stay in the synth
+/// vocab's content range [3, 500).
+pub fn build_workload(
+    n: usize,
+    classes: usize,
+    seed: u64,
+) -> Vec<RequestSpec> {
+    let classes = classes.max(1);
+    // fixed per-class prefixes, independent of the request mix
+    let prefixes: Vec<Vec<i32>> = (0..classes)
+        .map(|c| {
+            let mut rng = XorShift::new(seed ^ (0xC1A5_5000 + c as u64));
+            (0..PREFIX_LEN)
+                .map(|_| rng.range(3, 500) as i32)
+                .collect()
+        })
+        .collect();
+    let mut rng = XorShift::new(seed ^ 0x10AD_6E4E);
+    (0..n)
+        .map(|i| {
+            let class = i % classes;
+            let suffix_len = rng.range(4, 49) as usize;
+            let mut tokens = prefixes[class].clone();
+            tokens.extend(
+                (0..suffix_len).map(|_| rng.range(3, 500) as i32),
+            );
+            RequestSpec {
+                class,
+                tokens,
+                max_new_tokens: rng.range(4, 25) as usize,
+                seed: seed.wrapping_mul(1000).wrapping_add(i as u64),
+            }
+        })
+        .collect()
+}
+
+/// Client-side observation of one request (after retries resolved).
+#[derive(Clone, Debug, Default)]
+pub struct RequestOutcome {
+    /// finished with a complete 200 response / stream
+    pub ok: bool,
+    /// terminal 429 after exhausting the retry budget
+    pub rejected: bool,
+    /// socket read timed out mid-request — the hang class of failure
+    pub hung: bool,
+    /// non-200/429 response or transport error
+    pub error: bool,
+    pub retries: usize,
+    /// send → first token frame (streaming) / full response (blocking)
+    pub ttft_s: f64,
+    /// gaps between consecutive token frames (streaming only)
+    pub itls_s: Vec<f64>,
+    pub total_s: f64,
+    pub n_tokens: usize,
+}
+
+enum Attempt {
+    Done(RequestOutcome),
+    /// got a 429; retry after this many seconds
+    Backoff(f64),
+}
+
+fn parse_status_line(line: &str) -> Option<u16> {
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+/// Why reading a response head failed: a transport error (which may be
+/// a read timeout — the hang signal) vs. a malformed response.
+enum HeadError {
+    Io(std::io::Error),
+    Proto(String),
+}
+
+/// Read headers off the stream; returns (status, headers, leftover
+/// body bytes already read past the header terminator).
+fn read_head(
+    s: &mut TcpStream,
+) -> std::result::Result<(u16, BTreeMap<String, String>, Vec<u8>), HeadError>
+{
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 2048];
+    let hdr_end = loop {
+        let n = s.read(&mut chunk).map_err(HeadError::Io)?;
+        if n == 0 {
+            return Err(HeadError::Proto(
+                "connection closed before headers".into(),
+            ));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if let Some(e) =
+            buf.windows(4).position(|w| w == b"\r\n\r\n")
+        {
+            break e;
+        }
+        if buf.len() > 64 * 1024 {
+            return Err(HeadError::Proto(
+                "response headers too large".into(),
+            ));
+        }
+    };
+    let head = std::str::from_utf8(&buf[..hdr_end])
+        .map_err(|_| HeadError::Proto("response head not utf8".into()))?;
+    let mut lines = head.split("\r\n");
+    let status = lines
+        .next()
+        .and_then(parse_status_line)
+        .ok_or_else(|| HeadError::Proto("bad status line".into()))?;
+    let mut headers = BTreeMap::new();
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            headers
+                .insert(k.trim().to_lowercase(), v.trim().to_string());
+        }
+    }
+    Ok((status, headers, buf[hdr_end + 4..].to_vec()))
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+fn one_attempt(
+    addr: &str,
+    body: &str,
+    stream_mode: bool,
+    timeout_s: f64,
+) -> Result<Attempt> {
+    let t_send = Instant::now();
+    let mut s = TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(Duration::from_secs_f64(
+        timeout_s.max(0.01),
+    )))?;
+    s.set_nodelay(true)?;
+    let req = format!(
+        "POST /generate HTTP/1.1\r\nHost: l\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes())?;
+    let (status, headers, leftover) = match read_head(&mut s) {
+        Ok(h) => h,
+        Err(e) => {
+            let hung =
+                matches!(&e, HeadError::Io(ioe) if is_timeout(ioe));
+            return Ok(Attempt::Done(RequestOutcome {
+                hung,
+                error: !hung,
+                total_s: t_send.elapsed().as_secs_f64(),
+                ..Default::default()
+            }));
+        }
+    };
+    if status == 429 {
+        let after = headers
+            .get("retry-after")
+            .and_then(|v| v.parse::<f64>().ok())
+            .unwrap_or(1.0);
+        return Ok(Attempt::Backoff(after));
+    }
+    if status != 200 {
+        return Ok(Attempt::Done(RequestOutcome {
+            error: true,
+            total_s: t_send.elapsed().as_secs_f64(),
+            ..Default::default()
+        }));
+    }
+    // 200: consume the body, timing frames
+    let mut out = RequestOutcome::default();
+    let mut line_buf = leftover;
+    let mut chunk = [0u8; 2048];
+    let mut last_frame_at: Option<Instant> = None;
+    let mut done = false;
+    let mut scan_from = 0usize;
+    loop {
+        // harvest complete lines already in the buffer
+        while let Some(pos) = line_buf[scan_from..]
+            .iter()
+            .position(|&b| b == b'\n')
+        {
+            let line_end = scan_from + pos;
+            let line = String::from_utf8_lossy(&line_buf[..line_end])
+                .into_owned();
+            line_buf.drain(..=line_end);
+            scan_from = 0;
+            let now = Instant::now();
+            if line.contains("\"done\":true") {
+                done = true;
+            } else if stream_mode {
+                match last_frame_at {
+                    None => {
+                        out.ttft_s =
+                            now.duration_since(t_send).as_secs_f64()
+                    }
+                    Some(prev) => out.itls_s.push(
+                        now.duration_since(prev).as_secs_f64(),
+                    ),
+                }
+                last_frame_at = Some(now);
+                out.n_tokens += 1;
+            }
+        }
+        scan_from = line_buf.len();
+        if done {
+            break;
+        }
+        match s.read(&mut chunk) {
+            Ok(0) => break, // connection closed
+            Ok(n) => line_buf.extend_from_slice(&chunk[..n]),
+            Err(e) if is_timeout(&e) => {
+                out.hung = true;
+                out.total_s = t_send.elapsed().as_secs_f64();
+                return Ok(Attempt::Done(out));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    out.total_s = t_send.elapsed().as_secs_f64();
+    if stream_mode {
+        // a truncated stream (EOF before the done frame) is an error
+        out.ok = done;
+        out.error = !done;
+    } else {
+        // blocking: the whole response IS the first observable byte
+        out.ttft_s = out.total_s;
+        // tokens arrive as one JSON array; count them loosely
+        let text = String::from_utf8_lossy(&line_buf).into_owned();
+        out.n_tokens = Json::parse(text.trim())
+            .ok()
+            .and_then(|j| j.get("tokens").as_arr().map(|a| a.len()))
+            .unwrap_or(0);
+        out.ok = true;
+    }
+    Ok(Attempt::Done(out))
+}
+
+fn run_one(
+    addr: &str,
+    body: &str,
+    opts: &LoadgenOptions,
+) -> RequestOutcome {
+    let mut retries = 0usize;
+    loop {
+        match one_attempt(addr, body, opts.stream, opts.timeout_s) {
+            Ok(Attempt::Done(mut o)) => {
+                o.retries = retries;
+                return o;
+            }
+            Ok(Attempt::Backoff(after_s)) => {
+                if retries >= opts.max_retries {
+                    return RequestOutcome {
+                        rejected: true,
+                        retries,
+                        ..Default::default()
+                    };
+                }
+                retries += 1;
+                std::thread::sleep(Duration::from_secs_f64(
+                    after_s.clamp(0.0, 5.0),
+                ));
+            }
+            Err(_) => {
+                return RequestOutcome {
+                    error: true,
+                    retries,
+                    ..Default::default()
+                };
+            }
+        }
+    }
+}
+
+/// Aggregate results of one loadgen run.
+pub struct Report {
+    pub opts: LoadgenOptions,
+    pub completed: usize,
+    pub rejected: usize,
+    pub errors: usize,
+    pub hung: usize,
+    pub retries: usize,
+    pub tokens: usize,
+    pub ttft: Summary,
+    pub itl: Summary,
+    /// wall time from first arrival to last completion
+    pub duration_s: f64,
+    /// completions meeting the TTFT SLO, per second
+    pub goodput_rps: f64,
+}
+
+impl Report {
+    pub fn human(&mut self) -> String {
+        let (tp50, tp95, tp99) =
+            (self.ttft.p50(), self.ttft.p95(), self.ttft.p99());
+        let (ip50, ip95, ip99) =
+            (self.itl.p50(), self.itl.p95(), self.itl.p99());
+        format!(
+            "loadgen: {} requests ({} arrivals @ {:.1}/s), {} ok, \
+             {} rejected, {} errors, {} hung, {} retries, {} tokens \
+             in {:.2}s\n\
+             ttft   : p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms\n\
+             itl    : p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms\n\
+             goodput: {:.2} req/s within {:.0}ms TTFT SLO",
+            self.opts.requests,
+            self.opts.arrival.name(),
+            self.opts.rate,
+            self.completed,
+            self.rejected,
+            self.errors,
+            self.hung,
+            self.retries,
+            self.tokens,
+            self.duration_s,
+            tp50 * 1e3,
+            tp95 * 1e3,
+            tp99 * 1e3,
+            ip50 * 1e3,
+            ip95 * 1e3,
+            ip99 * 1e3,
+            self.goodput_rps,
+            self.opts.slo_ttft_ms,
+        )
+    }
+
+    /// Section name in the merged bench file: one section per arrival
+    /// process, so a poisson run and a bursty run coexist and each
+    /// replaces only its own prior record on regeneration.
+    pub fn bench_name(&self) -> String {
+        format!("serving_{}", self.opts.arrival.name())
+    }
+
+    /// Flat record for `BENCH_serving.json` (NaNs from empty summaries
+    /// are clamped to 0 so the file stays valid JSON).
+    pub fn record(&mut self) -> Json {
+        fn f(x: f64) -> Json {
+            Json::num(if x.is_finite() { x } else { 0.0 })
+        }
+        let (tp50, tp95, tp99) =
+            (self.ttft.p50(), self.ttft.p95(), self.ttft.p99());
+        let (ip50, ip95, ip99) =
+            (self.itl.p50(), self.itl.p95(), self.itl.p99());
+        Json::obj(vec![
+            ("bench", Json::Str(self.bench_name())),
+            ("arrival", Json::str(self.opts.arrival.name())),
+            ("requests", Json::num(self.opts.requests as f64)),
+            ("rate_rps", f(self.opts.rate)),
+            ("stream", Json::Bool(self.opts.stream)),
+            ("classes", Json::num(self.opts.classes as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("hung", Json::num(self.hung as f64)),
+            ("retries", Json::num(self.retries as f64)),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("ttft_p50_ms", f(tp50 * 1e3)),
+            ("ttft_p95_ms", f(tp95 * 1e3)),
+            ("ttft_p99_ms", f(tp99 * 1e3)),
+            ("itl_p50_ms", f(ip50 * 1e3)),
+            ("itl_p95_ms", f(ip95 * 1e3)),
+            ("itl_p99_ms", f(ip99 * 1e3)),
+            ("goodput_rps", f(self.goodput_rps)),
+            ("slo_ttft_ms", f(self.opts.slo_ttft_ms)),
+            ("duration_s", f(self.duration_s)),
+        ])
+    }
+}
+
+/// Fire the open-loop run against `addr` and aggregate the outcomes.
+pub fn run(addr: &str, opts: &LoadgenOptions) -> Result<Report> {
+    let sched = arrival_times(
+        opts.arrival,
+        opts.requests,
+        opts.rate,
+        opts.seed,
+    );
+    let specs =
+        build_workload(opts.requests, opts.classes, opts.seed);
+    let t0 = Instant::now();
+    let threads: Vec<std::thread::JoinHandle<RequestOutcome>> = specs
+        .iter()
+        .zip(sched.iter())
+        .map(|(spec, &at)| {
+            let addr = addr.to_string();
+            let body = spec.body(opts.stream);
+            let opts = opts.clone();
+            std::thread::spawn(move || {
+                let wait = at - t0.elapsed().as_secs_f64();
+                if wait > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(wait));
+                }
+                run_one(&addr, &body, &opts)
+            })
+        })
+        .collect();
+    let outcomes: Vec<RequestOutcome> = threads
+        .into_iter()
+        .map(|t| {
+            t.join().unwrap_or(RequestOutcome {
+                error: true,
+                ..Default::default()
+            })
+        })
+        .collect();
+    let duration_s = t0.elapsed().as_secs_f64();
+    let mut rep = Report {
+        opts: opts.clone(),
+        completed: 0,
+        rejected: 0,
+        errors: 0,
+        hung: 0,
+        retries: 0,
+        tokens: 0,
+        ttft: Summary::new(),
+        itl: Summary::new(),
+        duration_s,
+        goodput_rps: 0.0,
+    };
+    let mut within_slo = 0usize;
+    for o in &outcomes {
+        rep.retries += o.retries;
+        rep.tokens += o.n_tokens;
+        if o.ok {
+            rep.completed += 1;
+            rep.ttft.add(o.ttft_s);
+            for &g in &o.itls_s {
+                rep.itl.add(g);
+            }
+            if o.ttft_s * 1e3 <= opts.slo_ttft_ms {
+                within_slo += 1;
+            }
+        } else if o.rejected {
+            rep.rejected += 1;
+        } else if o.hung {
+            rep.hung += 1;
+        } else {
+            rep.errors += 1;
+        }
+    }
+    if duration_s > 0.0 {
+        rep.goodput_rps = within_slo as f64 / duration_s;
+    }
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_arrivals_sorted_and_deterministic() {
+        let a = arrival_times(ArrivalKind::Poisson, 100, 20.0, 7);
+        let b = arrival_times(ArrivalKind::Poisson, 100, 20.0, 7);
+        assert_eq!(a, b, "seeded schedule must be reproducible");
+        assert_eq!(a.len(), 100);
+        for w in a.windows(2) {
+            assert!(w[1] >= w[0], "arrivals must be sorted");
+        }
+        // mean inter-arrival ~ 1/rate (loose bound: within 3x)
+        let span = a.last().unwrap() - a[0];
+        let mean_gap = span / 99.0;
+        assert!(
+            mean_gap > 1.0 / 60.0 && mean_gap < 3.0 / 20.0,
+            "mean gap {mean_gap} implausible for rate 20"
+        );
+    }
+
+    #[test]
+    fn bursty_arrivals_land_in_on_windows() {
+        let a = arrival_times(ArrivalKind::Bursty, 200, 10.0, 3);
+        let on = BURST_PERIOD_S / 2.0;
+        for &t in &a {
+            let phase = t % BURST_PERIOD_S;
+            assert!(
+                phase < on + 1e-9,
+                "arrival at {t} falls in the OFF window"
+            );
+        }
+        for w in a.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+
+    #[test]
+    fn workload_shares_class_prefixes() {
+        let specs = build_workload(12, 3, 42);
+        assert_eq!(specs.len(), 12);
+        for s in &specs {
+            assert!(s.tokens.len() > PREFIX_LEN);
+            assert!((4..=24).contains(&s.max_new_tokens));
+            for &t in &s.tokens {
+                assert!((3..500).contains(&t), "token {t} out of vocab");
+            }
+        }
+        // same class -> identical prefix
+        assert_eq!(
+            specs[0].tokens[..PREFIX_LEN],
+            specs[3].tokens[..PREFIX_LEN]
+        );
+        // different classes -> different prefixes
+        assert_ne!(
+            specs[0].tokens[..PREFIX_LEN],
+            specs[1].tokens[..PREFIX_LEN]
+        );
+        // every request gets a distinct sampling seed
+        assert_ne!(specs[0].seed, specs[1].seed);
+    }
+
+    #[test]
+    fn request_body_roundtrips() {
+        let spec = RequestSpec {
+            class: 0,
+            tokens: vec![3, 4, 5],
+            max_new_tokens: 7,
+            seed: 9,
+        };
+        let j = Json::parse(&spec.body(true)).unwrap();
+        assert_eq!(j.get("tokens").as_arr().unwrap().len(), 3);
+        assert_eq!(j.get("max_new_tokens").as_i64(), Some(7));
+        assert_eq!(j.get("stream").as_bool(), Some(true));
+        let j = Json::parse(&spec.body(false)).unwrap();
+        assert_eq!(j.get("stream").as_bool(), Some(false));
+    }
+
+    #[test]
+    fn status_line_parses() {
+        assert_eq!(
+            parse_status_line("HTTP/1.1 429 Too Many Requests"),
+            Some(429)
+        );
+        assert_eq!(parse_status_line("HTTP/1.1 200 OK"), Some(200));
+        assert_eq!(parse_status_line("garbage"), None);
+    }
+
+    #[test]
+    fn arrival_kind_parses() {
+        assert_eq!(
+            ArrivalKind::parse("poisson").unwrap(),
+            ArrivalKind::Poisson
+        );
+        assert_eq!(
+            ArrivalKind::parse("bursty").unwrap(),
+            ArrivalKind::Bursty
+        );
+        assert!(ArrivalKind::parse("uniform").is_err());
+    }
+}

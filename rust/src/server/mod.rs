@@ -1,80 +1,235 @@
-//! Minimal HTTP/1.1 front-end over std::net (tokio unavailable offline).
+//! HTTP/1.1 serving front-end over std::net (tokio unavailable
+//! offline), wired to the fused iteration-level engine.
 //!
 //! Routes:
 //! * `POST /generate` — body `{"tokens": [..], "max_new_tokens": n,
-//!   "temperature": t, "top_k": k}` → generated token ids + timings.
+//!   "temperature": t, "top_k": k, "seed": s, "stream": bool}`.
+//!   Blocking form returns one JSON object with the generated token
+//!   ids + timings.  With `"stream": true` the response is NDJSON
+//!   (`application/x-ndjson`, `Connection: close` delimited): one
+//!   `{"index":i,"token":t}` line per token as `Engine::step` produces
+//!   it, then a final `{"done":true,"finish":...,"tokens":[..],...}`
+//!   line carrying the same result the blocking form returns.
 //! * `GET /stats`  — engine metrics snapshot.
 //! * `GET /health` — liveness.
 //!
-//! Requests are parsed by the in-crate HTTP substrate ([`http`]); each
-//! connection is handled on the thread pool and blocks on the engine
-//! handle (the engine itself pipelines via continuous batching).
+//! Input validation is strict: a non-integer entry in `"tokens"` or a
+//! zero `"max_new_tokens"` is a 400 naming the offending field, never
+//! silently coerced.
+//!
+//! Backpressure has two layers.  The ENGINE sheds load by rejecting
+//! admissions past its queue cap — surfaced as 429 with `Retry-After`.
+//! The SERVER bounds concurrently-handled connections
+//! ([`ServerOptions::max_inflight`]): at the cap the accept loop stops
+//! accepting, so excess connections wait in the OS backlog instead of
+//! buffering requests in process.
+//!
+//! Shutdown drains gracefully: flip the `stop` flag and the accept
+//! loop closes to new connections, resident requests (including
+//! streams) run to completion against the still-live engine, and
+//! [`Server::run`] returns once the last connection finishes (bounded
+//! by [`ServerOptions::drain_wait_s`] before it stops waiting
+//! politely).  Shutting the engine down afterwards fails anything
+//! still queued with a clean error result — no waiter ever hangs.
 
 pub mod http;
+pub mod loadgen;
 
 use std::io::Write;
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::coordinator::handle::StreamEvent;
 use crate::coordinator::request::{FinishReason, GenParams};
 use crate::coordinator::EngineHandle;
 use crate::formats::json::Json;
 use crate::util::ThreadPool;
 
-use http::{HttpRequest, HttpResponse};
+use http::{HttpRequest, HttpResponse, ReadError};
 
-/// Serve forever (or until `stop` flips).
+/// Server tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServerOptions {
+    /// connection-handler threads
+    pub workers: usize,
+    /// max connections being handled at once; past this the accept
+    /// loop stops reading and new connections queue in the OS backlog
+    pub max_inflight: usize,
+    /// graceful-drain patience: how long `run` waits for resident
+    /// connections after `stop` flips before returning anyway
+    pub drain_wait_s: f64,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions {
+            workers: 4,
+            max_inflight: 64,
+            drain_wait_s: 10.0,
+        }
+    }
+}
+
+/// A bound listener + engine handle; `run` serves until stopped.
+pub struct Server {
+    listener: TcpListener,
+    engine: EngineHandle,
+    opts: ServerOptions,
+}
+
+/// Decrements the in-flight gauge when a connection handler exits
+/// (normally or by panic), so the accept loop can never wedge shut.
+struct InflightGuard(Arc<AtomicUsize>);
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl Server {
+    /// Bind (use port 0 for an OS-assigned port, then `local_addr`).
+    pub fn bind(
+        addr: &str,
+        engine: EngineHandle,
+        opts: ServerOptions,
+    ) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        Ok(Server { listener, engine, opts })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until `stop` flips, then drain: stop accepting, let
+    /// resident connections finish (the engine must stay alive until
+    /// this returns), bounded by `drain_wait_s`.
+    pub fn run(&self, stop: Arc<AtomicBool>) -> Result<()> {
+        crate::util::log::info(&format!(
+            "http server on {} ({} workers, max_inflight {})",
+            self.local_addr()?,
+            self.opts.workers,
+            self.opts.max_inflight
+        ));
+        let pool = ThreadPool::new(self.opts.workers);
+        let inflight = Arc::new(AtomicUsize::new(0));
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            // saturation: stop accepting; the OS backlog (and the
+            // client's connect timeout) is the queue, not our memory
+            if inflight.load(Ordering::Relaxed) >= self.opts.max_inflight
+            {
+                std::thread::sleep(Duration::from_millis(1));
+                continue;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    inflight.fetch_add(1, Ordering::Relaxed);
+                    let guard = InflightGuard(Arc::clone(&inflight));
+                    let engine = self.engine.clone();
+                    pool.execute(move || {
+                        let _guard = guard;
+                        if let Err(e) = handle_conn(stream, &engine) {
+                            crate::util::log::debug(&format!(
+                                "conn: {e:#}"
+                            ));
+                        }
+                    });
+                }
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        // graceful drain: no new connections; residents finish against
+        // the still-live engine
+        let t0 = Instant::now();
+        while inflight.load(Ordering::Relaxed) > 0
+            && t0.elapsed().as_secs_f64() < self.opts.drain_wait_s
+        {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let leftover = inflight.load(Ordering::Relaxed);
+        if leftover > 0 {
+            crate::util::log::info(&format!(
+                "drain timeout: {leftover} connections still resident"
+            ));
+        }
+        pool.join();
+        Ok(())
+    }
+}
+
+/// Serve forever (or until `stop` flips) with default backpressure
+/// knobs — the legacy entry point.
 pub fn serve(
     addr: &str,
     engine: EngineHandle,
     workers: usize,
     stop: Arc<AtomicBool>,
 ) -> Result<()> {
-    let listener = TcpListener::bind(addr)?;
-    listener.set_nonblocking(true)?;
-    crate::util::log::info(&format!("http server on {addr}"));
-    let pool = ThreadPool::new(workers);
-    loop {
-        if stop.load(Ordering::Relaxed) {
-            break;
-        }
-        match listener.accept() {
-            Ok((stream, _peer)) => {
-                let engine = engine.clone();
-                pool.execute(move || {
-                    if let Err(e) = handle_conn(stream, &engine) {
-                        crate::util::log::debug(&format!("conn: {e:#}"));
-                    }
-                });
-            }
-            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(std::time::Duration::from_millis(5));
-            }
-            Err(e) => return Err(e.into()),
-        }
-    }
-    Ok(())
+    let srv = Server::bind(
+        addr,
+        engine,
+        ServerOptions { workers, ..ServerOptions::default() },
+    )?;
+    srv.run(stop)
 }
 
 fn handle_conn(mut stream: TcpStream, engine: &EngineHandle) -> Result<()> {
     stream.set_nonblocking(false)?;
-    let req = match HttpRequest::read_from(&mut stream) {
+    let req = match HttpRequest::read_duplex(&mut stream) {
         Ok(r) => r,
         Err(e) => {
-            let resp = HttpResponse::text(400, &format!("bad request: {e}"));
+            let status = match &e {
+                ReadError::TooLarge(_) => 413,
+                ReadError::Bad(_) => 400,
+                // peer gone: nobody to answer
+                ReadError::Io(_) => return Ok(()),
+            };
+            let resp = HttpResponse::text(status, &e.to_string());
             stream.write_all(&resp.to_bytes())?;
             return Ok(());
         }
     };
+    // streaming /generate writes frames as the engine produces them,
+    // so it owns the socket instead of going through `route`
+    if req.method == "POST"
+        && req.path == "/generate"
+        && wants_stream(&req.body)
+    {
+        return generate_streaming(&req, engine, &mut stream);
+    }
     let resp = route(&req, engine);
     stream.write_all(&resp.to_bytes())?;
     Ok(())
 }
 
+/// Does the (possibly unparseable) body ask for a streamed response?
+/// Malformed bodies answer `false` — the blocking path then produces
+/// the proper 400.
+fn wants_stream(body: &[u8]) -> bool {
+    std::str::from_utf8(body)
+        .ok()
+        .and_then(|s| Json::parse(s).ok())
+        .map(|j| j.get("stream").as_bool() == Some(true))
+        .unwrap_or(false)
+}
+
 /// Dispatch one request (pure; unit-testable without sockets).
+/// Streaming is handled before this in `handle_conn`; a `stream: true`
+/// body arriving here is served blocking.
 pub fn route(req: &HttpRequest, engine: &EngineHandle) -> HttpResponse {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/health") => HttpResponse::json(200, &Json::obj(vec![
@@ -82,66 +237,324 @@ pub fn route(req: &HttpRequest, engine: &EngineHandle) -> HttpResponse {
         ])),
         ("GET", "/stats") => match engine.stats() {
             Ok(s) => HttpResponse::text(200, &s),
-            Err(e) => HttpResponse::text(500, &format!("{e:#}")),
+            Err(e) => HttpResponse::text(503, &format!("{e:#}")),
         },
         ("POST", "/generate") => generate(req, engine),
         _ => HttpResponse::text(404, "not found"),
     }
 }
 
-fn generate(req: &HttpRequest, engine: &EngineHandle) -> HttpResponse {
-    let body = match std::str::from_utf8(&req.body) {
-        Ok(b) => b,
-        Err(_) => return HttpResponse::text(400, "body not utf8"),
-    };
-    let j = match Json::parse(body) {
-        Ok(j) => j,
-        Err(e) => return HttpResponse::text(400, &format!("bad json: {e}")),
-    };
-    let tokens: Vec<i32> = match j.get("tokens").as_arr() {
-        Some(a) => a.iter().filter_map(|v| v.as_i64()).map(|v| v as i32)
-            .collect(),
-        None => return HttpResponse::text(400, "missing 'tokens' array"),
-    };
-    if tokens.is_empty() {
-        return HttpResponse::text(400, "'tokens' must be non-empty");
+fn finish_str(f: FinishReason) -> &'static str {
+    match f {
+        FinishReason::Eos => "eos",
+        FinishReason::MaxTokens => "length",
+        FinishReason::Rejected => "rejected",
+        FinishReason::Error => "error",
+    }
+}
+
+/// Parse + validate a `/generate` body.  Returns the prompt, params,
+/// and the `stream` flag — or the 400 message naming the offending
+/// field.  Validation is strict: every provided field must have the
+/// right type and range; nothing is silently dropped or clamped.
+pub fn parse_gen_request(
+    body: &[u8],
+) -> std::result::Result<(Vec<i32>, GenParams, bool), String> {
+    let body = std::str::from_utf8(body)
+        .map_err(|_| "body not utf8".to_string())?;
+    let j = Json::parse(body).map_err(|e| format!("bad json: {e}"))?;
+    let arr = j
+        .get("tokens")
+        .as_arr()
+        .ok_or_else(|| "missing 'tokens' array".to_string())?;
+    if arr.is_empty() {
+        return Err("'tokens' must be non-empty".to_string());
+    }
+    let mut tokens = Vec::with_capacity(arr.len());
+    for (i, v) in arr.iter().enumerate() {
+        // a non-integer entry is an error naming its index, NOT a
+        // silently dropped element
+        let n = v.as_f64().ok_or_else(|| {
+            format!("'tokens[{i}]' is not an integer token id")
+        })?;
+        if n.fract() != 0.0
+            || n < i32::MIN as f64
+            || n > i32::MAX as f64
+        {
+            return Err(format!(
+                "'tokens[{i}]' is not an integer token id"
+            ));
+        }
+        tokens.push(n as i32);
     }
     let mut params = GenParams::default();
-    if let Some(n) = j.get("max_new_tokens").as_usize() {
-        params.max_new_tokens = n.max(1);
-    }
-    if let Some(t) = j.get("temperature").as_f64() {
-        params.temperature = t as f32;
-    }
-    if let Some(k) = j.get("top_k").as_usize() {
-        params.top_k = k;
-    }
-    if let Some(s) = j.get("seed").as_i64() {
-        params.seed = s as u64;
-    }
-    match engine.generate(tokens, params) {
-        Ok(res) => {
-            if res.finish == FinishReason::Rejected {
-                return HttpResponse::json(429, &Json::obj(vec![
-                    ("error", Json::str("queue full or prompt too long")),
-                ]));
+    match j.get("max_new_tokens") {
+        Json::Null => {}
+        v => {
+            let n = v.as_f64().unwrap_or(-1.0);
+            if n.fract() != 0.0 || n < 1.0 {
+                // zero used to be silently clamped to 1 — now a 400
+                return Err(
+                    "'max_new_tokens' must be an integer >= 1".to_string()
+                );
             }
-            HttpResponse::json(200, &Json::obj(vec![
+            params.max_new_tokens = n as usize;
+        }
+    }
+    match j.get("temperature") {
+        Json::Null => {}
+        v => {
+            let t = v.as_f64().ok_or_else(|| {
+                "'temperature' must be a number".to_string()
+            })?;
+            if t < 0.0 {
+                return Err("'temperature' must be >= 0".to_string());
+            }
+            params.temperature = t as f32;
+        }
+    }
+    match j.get("top_k") {
+        Json::Null => {}
+        v => {
+            let k = v.as_f64().unwrap_or(-1.0);
+            if k.fract() != 0.0 || k < 0.0 {
+                return Err(
+                    "'top_k' must be an integer >= 0".to_string()
+                );
+            }
+            params.top_k = k as usize;
+        }
+    }
+    match j.get("seed") {
+        Json::Null => {}
+        v => {
+            let s = v.as_f64().unwrap_or(-1.0);
+            if s.fract() != 0.0 || s < 0.0 {
+                return Err(
+                    "'seed' must be an integer >= 0".to_string()
+                );
+            }
+            params.seed = s as u64;
+        }
+    }
+    let stream = match j.get("stream") {
+        Json::Null => false,
+        v => v
+            .as_bool()
+            .ok_or_else(|| "'stream' must be a boolean".to_string())?,
+    };
+    Ok((tokens, params, stream))
+}
+
+/// The queue-full / prompt-too-long response (shared by the blocking
+/// and streaming paths): 429 with a `Retry-After` hint.
+fn reject_response() -> HttpResponse {
+    HttpResponse::json(429, &Json::obj(vec![
+        ("error", Json::str("queue full or prompt too long")),
+    ]))
+    .with_header("Retry-After", "1")
+}
+
+fn generate(req: &HttpRequest, engine: &EngineHandle) -> HttpResponse {
+    let (tokens, params, _stream) = match parse_gen_request(&req.body) {
+        Ok(t) => t,
+        Err(msg) => return HttpResponse::text(400, &msg),
+    };
+    match engine.generate(tokens, params) {
+        Ok(res) => match res.finish {
+            FinishReason::Rejected => reject_response(),
+            FinishReason::Error => HttpResponse::text(
+                500,
+                "engine error: request aborted",
+            ),
+            _ => HttpResponse::json(200, &Json::obj(vec![
                 (
                     "tokens",
                     Json::Arr(res.tokens.iter()
                         .map(|&t| Json::num(t as f64)).collect()),
                 ),
-                ("finish", Json::str(match res.finish {
-                    FinishReason::Eos => "eos",
-                    FinishReason::MaxTokens => "length",
-                    FinishReason::Rejected => "rejected",
-                })),
+                ("finish", Json::str(finish_str(res.finish))),
                 ("ttft_ms", Json::num(res.ttft_s * 1e3)),
                 ("total_ms", Json::num(res.total_s * 1e3)),
                 ("tokens_per_s", Json::num(res.tokens_per_s())),
-            ]))
+            ])),
+        },
+        Err(e) => HttpResponse::text(503, &format!("{e:#}")),
+    }
+}
+
+/// Stream one generation as NDJSON.  The first engine event decides
+/// the status line: a pre-token rejection/error is still a clean
+/// 429/500 (headers not yet sent); after the first token the stream is
+/// committed and failures surface in the final `"finish"` field.
+fn generate_streaming(
+    req: &HttpRequest,
+    engine: &EngineHandle,
+    stream: &mut TcpStream,
+) -> Result<()> {
+    let (tokens, params, _stream) = match parse_gen_request(&req.body) {
+        Ok(t) => t,
+        Err(msg) => {
+            stream
+                .write_all(&HttpResponse::text(400, &msg).to_bytes())?;
+            return Ok(());
         }
-        Err(e) => HttpResponse::text(500, &format!("{e:#}")),
+    };
+    let rx = match engine.generate_streaming(tokens, params) {
+        Ok(rx) => rx,
+        Err(e) => {
+            let resp = HttpResponse::text(503, &format!("{e:#}"));
+            stream.write_all(&resp.to_bytes())?;
+            return Ok(());
+        }
+    };
+    let mut ev = match rx.recv() {
+        Ok(ev) => ev,
+        Err(_) => {
+            let resp =
+                HttpResponse::text(500, "engine dropped the stream");
+            stream.write_all(&resp.to_bytes())?;
+            return Ok(());
+        }
+    };
+    // first event decides: rejected/errored before any token keeps the
+    // plain status-code shape
+    if let StreamEvent::Done(res) = &ev {
+        match res.finish {
+            FinishReason::Rejected => {
+                stream.write_all(&reject_response().to_bytes())?;
+                return Ok(());
+            }
+            FinishReason::Error => {
+                let resp = HttpResponse::text(
+                    500,
+                    "engine error: request aborted",
+                );
+                stream.write_all(&resp.to_bytes())?;
+                return Ok(());
+            }
+            _ => {}
+        }
+    }
+    stream.write_all(&http::streaming_head(
+        200,
+        "application/x-ndjson",
+    ))?;
+    loop {
+        match ev {
+            StreamEvent::Token { index, token } => {
+                let mut line = Json::obj(vec![
+                    ("index", Json::num(index as f64)),
+                    ("token", Json::num(token as f64)),
+                ])
+                .emit();
+                line.push('\n');
+                stream.write_all(line.as_bytes())?;
+                stream.flush()?;
+            }
+            StreamEvent::Done(res) => {
+                let mut line = Json::obj(vec![
+                    ("done", Json::Bool(true)),
+                    ("finish", Json::str(finish_str(res.finish))),
+                    (
+                        "tokens",
+                        Json::Arr(res.tokens.iter()
+                            .map(|&t| Json::num(t as f64)).collect()),
+                    ),
+                    ("ttft_ms", Json::num(res.ttft_s * 1e3)),
+                    ("total_ms", Json::num(res.total_s * 1e3)),
+                    ("tokens_per_s", Json::num(res.tokens_per_s())),
+                ])
+                .emit();
+                line.push('\n');
+                stream.write_all(line.as_bytes())?;
+                stream.flush()?;
+                return Ok(());
+            }
+        }
+        ev = match rx.recv() {
+            Ok(e) => e,
+            Err(_) => {
+                // engine died mid-stream: the connection close tells
+                // the client the stream ended without a done frame
+                return Ok(());
+            }
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_valid_request() {
+        let (tokens, params, stream) = parse_gen_request(
+            br#"{"tokens":[3,4,5],"max_new_tokens":8,"temperature":0.5,
+                "top_k":10,"seed":7,"stream":true}"#,
+        )
+        .unwrap();
+        assert_eq!(tokens, vec![3, 4, 5]);
+        assert_eq!(params.max_new_tokens, 8);
+        assert!((params.temperature - 0.5).abs() < 1e-6);
+        assert_eq!(params.top_k, 10);
+        assert_eq!(params.seed, 7);
+        assert!(stream);
+    }
+
+    #[test]
+    fn non_integer_token_names_the_field() {
+        // regression: used to be silently dropped by filter_map
+        let err =
+            parse_gen_request(br#"{"tokens":[1,"a",2]}"#).unwrap_err();
+        assert!(err.contains("tokens[1]"), "got: {err}");
+        let err =
+            parse_gen_request(br#"{"tokens":[1,2.5]}"#).unwrap_err();
+        assert!(err.contains("tokens[1]"), "got: {err}");
+    }
+
+    #[test]
+    fn zero_max_new_tokens_names_the_field() {
+        // regression: used to be silently clamped to 1
+        let err = parse_gen_request(
+            br#"{"tokens":[1],"max_new_tokens":0}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("max_new_tokens"), "got: {err}");
+    }
+
+    #[test]
+    fn defaults_applied_when_fields_absent() {
+        let (tokens, params, stream) =
+            parse_gen_request(br#"{"tokens":[1]}"#).unwrap();
+        assert_eq!(tokens, vec![1]);
+        assert_eq!(
+            params.max_new_tokens,
+            GenParams::default().max_new_tokens
+        );
+        assert!(!stream);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(parse_gen_request(b"not json").is_err());
+        assert!(parse_gen_request(br#"{"tokens":[]}"#).is_err());
+        assert!(parse_gen_request(br#"{"tokens":"abc"}"#).is_err());
+        assert!(parse_gen_request(
+            br#"{"tokens":[1],"stream":"yes"}"#
+        )
+        .is_err());
+        assert!(parse_gen_request(
+            br#"{"tokens":[1],"top_k":-1}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn wants_stream_only_on_true() {
+        assert!(wants_stream(br#"{"tokens":[1],"stream":true}"#));
+        assert!(!wants_stream(br#"{"tokens":[1],"stream":false}"#));
+        assert!(!wants_stream(br#"{"tokens":[1]}"#));
+        assert!(!wants_stream(b"garbage"));
     }
 }

@@ -1,0 +1,539 @@
+//! End-to-end serving stack over real sockets: the HTTP front-end, the
+//! engine service thread, and streaming NDJSON responses, all against a
+//! synth-checkpoint engine on the native CPU backend.
+//!
+//! What this suite pins down:
+//!
+//! * streamed token frames reassemble bit-identical to what
+//!   [`EngineHandle::generate`] returns for the same seeded request
+//! * concurrent streaming clients each see ordered, gap-free frames
+//! * a saturating burst is shed with 429 + `Retry-After` — every
+//!   client gets an answer, none hang
+//! * strict input validation surfaces as 400s naming the field
+//! * oversized declared bodies are rejected before the upload and
+//!   `Expect: 100-continue` is answered on a real socket
+//! * graceful drain lets in-flight streams finish after `stop` flips
+//! * an engine step failure resolves every waiter (blocking AND
+//!   streaming) with `FinishReason::Error` instead of hanging them
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use odyssey::coordinator::handle::EngineService;
+use odyssey::coordinator::{
+    EngineHandle, EngineOptions, FinishReason, GenParams, StreamEvent,
+};
+use odyssey::formats::json::Json;
+use odyssey::quant::QuantRecipe;
+use odyssey::runtime::{synth, BackendKind};
+use odyssey::server::{Server, ServerOptions};
+
+/// Serialize server/engine construction across tests: the first call
+/// synthesizes artifacts, and one engine at a time mirrors production.
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap()
+}
+
+fn engine_opts() -> EngineOptions {
+    EngineOptions {
+        variant: "fp".into(),
+        // vanilla: serving tests exercise the stack, not the quantizer
+        recipe: QuantRecipe::vanilla_w4(),
+        max_queue: 8,
+        backend: BackendKind::Native,
+        ..Default::default()
+    }
+}
+
+/// A live server + engine; dropped = stopped, drained, shut down.
+struct TestServer {
+    addr: SocketAddr,
+    handle: EngineHandle,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+    svc: Option<EngineService>,
+}
+
+fn start(eopts: EngineOptions, sopts: ServerOptions) -> TestServer {
+    synth::ensure_artifacts("artifacts").expect("synthesize artifacts");
+    let svc = EngineService::spawn(eopts).expect("engine spawn");
+    let handle = svc.handle.clone();
+    let server = Server::bind("127.0.0.1:0", handle.clone(), sopts)
+        .expect("bind");
+    let addr = server.local_addr().expect("local addr");
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let join = std::thread::spawn(move || {
+        server.run(stop2).expect("server run");
+    });
+    TestServer { addr, handle, stop, join: Some(join), svc: Some(svc) }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        if let Some(svc) = self.svc.take() {
+            svc.shutdown();
+        }
+    }
+}
+
+/// POST and read the whole response (the server closes the connection,
+/// so `read_to_string` delimits it).  A read timeout turns a hung
+/// connection into an `Err` instead of wedging the test.
+fn post(
+    addr: SocketAddr,
+    path: &str,
+    body: &str,
+    timeout_s: u64,
+) -> anyhow::Result<(u16, Vec<(String, String)>, String)> {
+    let mut s = TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(Duration::from_secs(timeout_s)))?;
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes())?;
+    let mut out = String::new();
+    s.read_to_string(&mut out)?;
+    Ok(split_response(&out))
+}
+
+fn split_response(raw: &str) -> (u16, Vec<(String, String)>, String) {
+    let mut parts = raw.splitn(2, "\r\n\r\n");
+    let head = parts.next().unwrap_or("");
+    let body = parts.next().unwrap_or("").to_string();
+    let mut lines = head.lines();
+    let status = lines
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|c| c.parse().ok())
+        .unwrap_or(0);
+    let headers = lines
+        .filter_map(|l| {
+            l.split_once(':').map(|(k, v)| {
+                (k.trim().to_ascii_lowercase(), v.trim().to_string())
+            })
+        })
+        .collect();
+    (status, headers, body)
+}
+
+fn header<'a>(
+    headers: &'a [(String, String)],
+    name: &str,
+) -> Option<&'a str> {
+    headers
+        .iter()
+        .find(|(k, _)| k.as_str() == name)
+        .map(|(_, v)| v.as_str())
+}
+
+/// Parse an NDJSON body into frames.
+fn parse_frames(body: &str) -> Vec<Json> {
+    body.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Json::parse(l).expect("frame is valid json"))
+        .collect()
+}
+
+fn tokens_of(frame: &Json) -> Vec<i32> {
+    frame
+        .get("tokens")
+        .as_arr()
+        .expect("frame carries a tokens array")
+        .iter()
+        .map(|v| v.as_f64().expect("token is a number") as i32)
+        .collect()
+}
+
+/// Read from the socket until the end of an HTTP header block.
+fn read_head_block(s: &mut TcpStream) -> String {
+    let mut buf = Vec::new();
+    let mut b = [0u8; 1];
+    while !buf.ends_with(b"\r\n\r\n") {
+        match s.read(&mut b) {
+            Ok(1) => buf.push(b[0]),
+            _ => break,
+        }
+    }
+    String::from_utf8_lossy(&buf).into_owned()
+}
+
+fn finish_name(f: FinishReason) -> &'static str {
+    match f {
+        FinishReason::Eos => "eos",
+        FinishReason::MaxTokens => "length",
+        FinishReason::Rejected => "rejected",
+        FinishReason::Error => "error",
+    }
+}
+
+#[test]
+fn streamed_frames_match_blocking_generate() {
+    let _g = lock();
+    let ts = start(engine_opts(), ServerOptions::default());
+    let prompt: Vec<i32> = (0..24).map(|i| 3 + (i * 7) % 490).collect();
+    let params =
+        GenParams { max_new_tokens: 8, seed: 7, ..Default::default() };
+    let blocking = ts
+        .handle
+        .generate(prompt.clone(), params)
+        .expect("blocking generate");
+
+    let toks = prompt
+        .iter()
+        .map(|t| t.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    let body = format!(
+        r#"{{"tokens":[{toks}],"max_new_tokens":8,"seed":7,"stream":true}}"#
+    );
+    let (status, headers, resp) =
+        post(ts.addr, "/generate", &body, 60).expect("stream request");
+    assert_eq!(status, 200, "body: {resp}");
+    let ct = header(&headers, "content-type").unwrap_or_default();
+    assert!(ct.contains("ndjson"), "content-type: {ct}");
+    assert!(
+        header(&headers, "content-length").is_none(),
+        "streaming responses are connection-close delimited"
+    );
+
+    let frames = parse_frames(&resp);
+    let (done, token_frames) =
+        frames.split_last().expect("at least a done frame");
+    assert_eq!(done.get("done").as_bool(), Some(true));
+    let done_tokens = tokens_of(done);
+    let streamed: Vec<i32> = token_frames
+        .iter()
+        .enumerate()
+        .map(|(i, f)| {
+            assert_eq!(
+                f.get("index").as_f64(),
+                Some(i as f64),
+                "frames arrive in order with no gaps"
+            );
+            f.get("token").as_f64().expect("token number") as i32
+        })
+        .collect();
+    assert_eq!(
+        streamed, done_tokens,
+        "per-token frames reassemble to the final result"
+    );
+    assert_eq!(
+        done_tokens, blocking.tokens,
+        "streamed tokens are bit-identical to the blocking call"
+    );
+    assert_eq!(
+        done.get("finish").as_str(),
+        Some(finish_name(blocking.finish))
+    );
+}
+
+#[test]
+fn concurrent_streaming_clients_each_get_ordered_frames() {
+    let _g = lock();
+    let ts = start(engine_opts(), ServerOptions::default());
+    let addr = ts.addr;
+    let clients: Vec<_> = (0..4)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let body = format!(
+                    r#"{{"tokens":[1,3,{},{},3,80],"max_new_tokens":6,"stream":true}}"#,
+                    140 + i,
+                    150 + i
+                );
+                post(addr, "/generate", &body, 60)
+            })
+        })
+        .collect();
+    for c in clients {
+        let (status, _h, resp) =
+            c.join().unwrap().expect("client got a response");
+        assert_eq!(status, 200, "body: {resp}");
+        let frames = parse_frames(&resp);
+        let (done, token_frames) =
+            frames.split_last().expect("at least a done frame");
+        assert_eq!(done.get("done").as_bool(), Some(true));
+        let done_tokens = tokens_of(done);
+        assert_eq!(
+            token_frames.len(),
+            done_tokens.len(),
+            "one frame per generated token"
+        );
+        for (i, f) in token_frames.iter().enumerate() {
+            assert_eq!(f.get("index").as_f64(), Some(i as f64));
+            assert_eq!(
+                f.get("token").as_f64().map(|t| t as i32),
+                Some(done_tokens[i])
+            );
+        }
+    }
+}
+
+#[test]
+fn saturating_burst_sheds_with_429_and_no_hangs() {
+    let _g = lock();
+    let eopts = EngineOptions { max_queue: 1, ..engine_opts() };
+    let sopts = ServerOptions { workers: 8, ..Default::default() };
+    let ts = start(eopts, sopts);
+    let addr = ts.addr;
+    let n = 16;
+    let clients: Vec<_> = (0..n)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let toks = (0..48)
+                    .map(|j| (3 + (i * 31 + j * 7) % 490).to_string())
+                    .collect::<Vec<_>>()
+                    .join(",");
+                let body = format!(
+                    r#"{{"tokens":[{toks}],"max_new_tokens":12}}"#
+                );
+                post(addr, "/generate", &body, 60)
+            })
+        })
+        .collect();
+    let mut ok = 0;
+    let mut rejected = 0;
+    for c in clients {
+        let (status, headers, resp) = c
+            .join()
+            .unwrap()
+            .expect("every client gets an answer — no hangs");
+        match status {
+            200 => ok += 1,
+            429 => {
+                rejected += 1;
+                let ra = header(&headers, "retry-after")
+                    .expect("429 carries Retry-After");
+                assert!(
+                    ra.parse::<f64>().is_ok(),
+                    "Retry-After is numeric: {ra}"
+                );
+            }
+            other => panic!("unexpected status {other}: {resp}"),
+        }
+    }
+    assert_eq!(ok + rejected, n);
+    assert!(ok >= 1, "the queue still serves someone");
+    assert!(
+        rejected >= 1,
+        "a 16-deep burst over max_queue=1 must shed load"
+    );
+}
+
+#[test]
+fn validation_errors_name_the_field_over_http() {
+    let _g = lock();
+    let ts = start(engine_opts(), ServerOptions::default());
+    // regression: non-integer entries used to be silently dropped
+    let (status, _h, body) =
+        post(ts.addr, "/generate", r#"{"tokens":[1,"a",2]}"#, 30)
+            .unwrap();
+    assert_eq!(status, 400);
+    assert!(body.contains("tokens[1]"), "got: {body}");
+    // regression: zero used to be silently clamped to 1
+    let (status, _h, body) = post(
+        ts.addr,
+        "/generate",
+        r#"{"tokens":[5],"max_new_tokens":0}"#,
+        30,
+    )
+    .unwrap();
+    assert_eq!(status, 400);
+    assert!(body.contains("max_new_tokens"), "got: {body}");
+    // the streaming path validates identically (plain 400, no frames)
+    let (status, _h, body) = post(
+        ts.addr,
+        "/generate",
+        r#"{"tokens":[5],"max_new_tokens":0,"stream":true}"#,
+        30,
+    )
+    .unwrap();
+    assert_eq!(status, 400);
+    assert!(body.contains("max_new_tokens"), "got: {body}");
+}
+
+#[test]
+fn oversize_rejected_early_and_expect_continue_answered() {
+    let _g = lock();
+    let ts = start(engine_opts(), ServerOptions::default());
+
+    // declared length over the cap: 413 from the header alone — the
+    // body is never uploaded (we never send it)
+    let mut s = TcpStream::connect(ts.addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(
+        b"POST /generate HTTP/1.1\r\nHost: t\r\n\
+          Content-Length: 20000000\r\nExpect: 100-continue\r\n\r\n",
+    )
+    .unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    assert!(out.starts_with("HTTP/1.1 413"), "got: {out}");
+    assert!(
+        !out.contains("HTTP/1.1 100"),
+        "no continue invitation for a condemned request"
+    );
+
+    // small body with Expect: the server invites the upload first
+    let body = r#"{"tokens":[1,3,140],"max_new_tokens":2}"#;
+    let mut s = TcpStream::connect(ts.addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(
+        format!(
+            "POST /generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\
+             Expect: 100-continue\r\n\r\n",
+            body.len()
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+    let interim = read_head_block(&mut s);
+    assert!(interim.starts_with("HTTP/1.1 100"), "got: {interim}");
+    s.write_all(body.as_bytes()).unwrap();
+    let mut rest = String::new();
+    s.read_to_string(&mut rest).unwrap();
+    assert!(rest.starts_with("HTTP/1.1 200"), "got: {rest}");
+}
+
+#[test]
+fn graceful_drain_completes_inflight_streams() {
+    let _g = lock();
+    let sopts =
+        ServerOptions { drain_wait_s: 30.0, ..Default::default() };
+    let ts = start(engine_opts(), sopts);
+
+    // open streams and read each response head: once the 200 head is
+    // on the wire the request is provably resident in the server
+    let mut socks: Vec<TcpStream> = (0..3)
+        .map(|i| {
+            let body = format!(
+                r#"{{"tokens":[1,3,{},80],"max_new_tokens":24,"stream":true}}"#,
+                140 + i
+            );
+            let mut s = TcpStream::connect(ts.addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+            s.write_all(
+                format!(
+                    "POST /generate HTTP/1.1\r\nHost: t\r\n\
+                     Content-Length: {}\r\n\r\n{}",
+                    body.len(),
+                    body
+                )
+                .as_bytes(),
+            )
+            .unwrap();
+            s
+        })
+        .collect();
+    for s in &mut socks {
+        let head = read_head_block(s);
+        assert!(head.starts_with("HTTP/1.1 200"), "got: {head}");
+    }
+
+    // close the doors mid-stream; residents must still finish
+    ts.stop.store(true, Ordering::Relaxed);
+    for mut s in socks {
+        let mut rest = String::new();
+        s.read_to_string(&mut rest)
+            .expect("in-flight stream finishes during drain");
+        let frames = parse_frames(&rest);
+        let done = frames.last().expect("frames delivered during drain");
+        assert_eq!(
+            done.get("done").as_bool(),
+            Some(true),
+            "drain delivers the terminal frame"
+        );
+    }
+}
+
+#[test]
+fn engine_step_failure_resolves_all_waiters_instead_of_hanging() {
+    let _g = lock();
+    synth::ensure_artifacts("artifacts").expect("synthesize artifacts");
+    // the backend errors on the third engine step; with eos disabled no
+    // request can finish in two steps, so every caller must be failed
+    let svc = EngineService::spawn(EngineOptions {
+        fail_step_after: Some(3),
+        ..engine_opts()
+    })
+    .expect("engine spawn");
+    let handle = svc.handle.clone();
+
+    let done = Arc::new(AtomicUsize::new(0));
+    let results = Arc::new(Mutex::new(Vec::new()));
+    let mut joins = Vec::new();
+    for i in 0..4i32 {
+        let h = handle.clone();
+        let d = Arc::clone(&done);
+        let r = Arc::clone(&results);
+        joins.push(std::thread::spawn(move || {
+            let res = h.generate(
+                (0..16).map(|j| 3 + (i * 13 + j) % 490).collect(),
+                GenParams {
+                    max_new_tokens: 8,
+                    eos: None,
+                    ..Default::default()
+                },
+            );
+            r.lock().unwrap().push(res);
+            d.fetch_add(1, Ordering::SeqCst);
+        }));
+    }
+
+    // a streaming caller rides along, consumed with bounded waits
+    let rx = handle
+        .generate_streaming(
+            vec![3, 4, 5, 6],
+            GenParams { max_new_tokens: 8, eos: None, ..Default::default() },
+        )
+        .expect("submit stream");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut stream_done = None;
+    while Instant::now() < deadline {
+        match rx.recv_timeout(Duration::from_millis(200)) {
+            Ok(StreamEvent::Done(res)) => {
+                stream_done = Some(res);
+                break;
+            }
+            Ok(StreamEvent::Token { .. }) => {}
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    let stream_done = stream_done
+        .expect("streaming waiter gets a Done frame, not a hang");
+    assert_eq!(stream_done.finish, FinishReason::Error);
+
+    // bounded wait: before the fix, these callers hung forever
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while done.load(Ordering::SeqCst) < 4 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(
+        done.load(Ordering::SeqCst),
+        4,
+        "every blocking caller resolves after the step failure"
+    );
+    for j in joins {
+        let _ = j.join();
+    }
+    for res in results.lock().unwrap().iter() {
+        let res = res.as_ref().expect("generate returns a result");
+        assert_eq!(
+            res.finish,
+            FinishReason::Error,
+            "aborted requests carry FinishReason::Error"
+        );
+    }
+    svc.shutdown();
+}
