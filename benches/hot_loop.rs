@@ -559,4 +559,103 @@ fn main() {
     for r in &kernel_records {
         println!("BENCH {}", r.emit());
     }
+
+    // ---- parallel sampling: one n=4 request vs 4 independent copies
+    // of the same sampled request (prefix cache OFF, so the ONLY
+    // sharing is the prompt-KV fork).  The forked run must allocate
+    // strictly fewer KV blocks — the prefill-once/fork-n acceptance
+    // guard — and the record lands in the committed trajectory.
+    let fork_prompt: Vec<i32> =
+        (0..18).map(|i| 3 + (i * 13) % 500).collect();
+    let run_fork = |n: usize, requests: u64| {
+        let mut o = EngineOptions {
+            variant: "fp".into(),
+            recipe: QuantRecipe::vanilla_w4(),
+            max_queue: 16,
+            ..Default::default()
+        };
+        o.paged = true;
+        o.staging = true;
+        o.prefix_cache = false;
+        o.kv_block_size = 4;
+        let mut engine = Engine::new(o).expect("engine");
+        for i in 0..requests {
+            engine.submit(Request::new(
+                i,
+                fork_prompt.clone(),
+                GenParams {
+                    max_new_tokens: 8,
+                    eos: None,
+                    n,
+                    temperature: 0.8,
+                    seed: 7,
+                    ..Default::default()
+                },
+            ));
+        }
+        let t0 = std::time::Instant::now();
+        let results = engine.run_until_idle().expect("drain");
+        let dt = t0.elapsed().as_secs_f64();
+        let generated: usize = results
+            .iter()
+            .flat_map(|r| r.branches.iter())
+            .map(|b| b.tokens.len())
+            .sum();
+        (generated, engine, dt)
+    };
+    let (forked_tokens, forked, forked_s) = run_fork(4, 1);
+    let (indep_tokens, indep, indep_s) = run_fork(1, 4);
+    assert_eq!(
+        forked_tokens, indep_tokens,
+        "both shapes generate 4 x 8 tokens"
+    );
+    let (m_fork, m_ind) = (&forked.metrics, &indep.metrics);
+    assert_eq!(m_fork.forked_branches, 3);
+    assert!(m_fork.cow_forks >= 3, "siblings must CoW-split the tail");
+    assert!(
+        m_fork.kv_blocks_allocated < m_ind.kv_blocks_allocated,
+        "n=4 fork allocated {} KV blocks, 4 independent requests {} — \
+         prompt sharing must allocate strictly fewer",
+        m_fork.kv_blocks_allocated,
+        m_ind.kv_blocks_allocated
+    );
+    println!(
+        "parallel sampling: n=4 forked {} blocks vs independent {} \
+         blocks ({} cow forks; drain {:.3}s vs {:.3}s)\n",
+        m_fork.kv_blocks_allocated,
+        m_ind.kv_blocks_allocated,
+        m_fork.cow_forks,
+        forked_s,
+        indep_s,
+    );
+    let fork_records = vec![Json::obj(vec![
+        ("bench", Json::Str("parallel_sampling".into())),
+        ("variant", Json::Str("fp".into())),
+        ("n", Json::Num(4.0)),
+        (
+            "kv_blocks_allocated_forked",
+            Json::Num(m_fork.kv_blocks_allocated as f64),
+        ),
+        (
+            "kv_blocks_allocated_independent",
+            Json::Num(m_ind.kv_blocks_allocated as f64),
+        ),
+        ("cow_forks", Json::Num(m_fork.cow_forks as f64)),
+        (
+            "forked_branches",
+            Json::Num(m_fork.forked_branches as f64),
+        ),
+        ("tokens", Json::Num(forked_tokens as f64)),
+        ("drain_s_forked", Json::Num(forked_s)),
+        ("drain_s_independent", Json::Num(indep_s)),
+    ])];
+    merge_bench_records(
+        "BENCH_kernels.json",
+        "parallel_sampling",
+        &fork_records,
+    )
+    .expect("write BENCH_kernels.json");
+    for r in &fork_records {
+        println!("BENCH {}", r.emit());
+    }
 }

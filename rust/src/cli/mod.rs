@@ -79,6 +79,10 @@ COMMANDS:
       --model tiny3m --variant w4a8_fast --recipe odyssey
   generate                     one-shot generation from a token prompt
       --prompt 1,17,140,9 --max-new-tokens 16 --variant w4a8_fast
+      sampling: --temperature 0.8 --top-k 40 --top-p 0.95
+      --repetition-penalty 1.1 --seed 7 --n 4 (parallel completions
+      from one shared prompt prefill) --stop \"7,8;9\" (';' separates
+      stop sequences, ',' token ids within one)
   serve                        HTTP server (POST /generate, GET /stats;
                                streamed NDJSON with \"stream\": true)
       --addr 127.0.0.1:8080 --variant w4a8_fast --workers 4
@@ -88,6 +92,8 @@ COMMANDS:
       --requests 48 --rate 16 --arrival poisson|bursty --classes 4
       --slo-ttft-ms 2500 --max-retries 3 --seed 1 --no-stream
       --timeout-s 60 --out BENCH_serving.json
+      --temperature 0.8          sampled (non-greedy) traffic
+      --n 4                      parallel completions per request
       --addr HOST:PORT         target a running server; omitted =
                                self-host a synth-checkpoint engine
                                (honors --model/--variant/--recipe,
@@ -177,6 +183,69 @@ pub fn parse_kv_flags(
             .parse()
             .map_err(|_| anyhow!("--max-prompt expects an integer"))?;
         opts.max_prompt = Some(n);
+    }
+    Ok(())
+}
+
+/// Sampling parameters shared by `generate`-style commands:
+/// `--temperature`, `--top-k`, `--top-p`, `--repetition-penalty`,
+/// `--seed`, `--n`, and `--stop "7,8;9"` (`;` separates stop
+/// sequences, `,` token ids within one).  Validation mirrors the
+/// server's strict 400s: out-of-range values error naming the flag.
+pub fn parse_sampling_flags(
+    args: &Args,
+    params: &mut crate::coordinator::GenParams,
+) -> Result<()> {
+    if let Some(t) = args.get("temperature") {
+        let t: f32 = t
+            .parse()
+            .map_err(|_| anyhow!("--temperature expects a number"))?;
+        if t < 0.0 {
+            return Err(anyhow!("--temperature must be >= 0"));
+        }
+        params.temperature = t;
+    }
+    params.top_k = args.get_usize("top-k", params.top_k)?;
+    if let Some(p) = args.get("top-p") {
+        let p: f32 = p
+            .parse()
+            .map_err(|_| anyhow!("--top-p expects a number"))?;
+        if !(p > 0.0 && p <= 1.0) {
+            return Err(anyhow!("--top-p must be in (0, 1]"));
+        }
+        params.top_p = p;
+    }
+    if let Some(r) = args.get("repetition-penalty") {
+        let r: f32 = r.parse().map_err(|_| {
+            anyhow!("--repetition-penalty expects a number")
+        })?;
+        if !(r > 0.0) {
+            return Err(anyhow!("--repetition-penalty must be > 0"));
+        }
+        params.repetition_penalty = r;
+    }
+    params.seed = args.get_usize("seed", params.seed as usize)? as u64;
+    params.n = args.get_usize("n", params.n)?;
+    if params.n == 0 {
+        return Err(anyhow!("--n must be at least 1"));
+    }
+    if let Some(s) = args.get("stop") {
+        for seq_str in s.split(';') {
+            let seq: Vec<i32> = seq_str
+                .split(',')
+                .map(|t| t.trim().parse::<i32>())
+                .collect::<Result<Vec<_>, _>>()
+                .map_err(|_| {
+                    anyhow!(
+                        "--stop expects ';'-separated lists of \
+                         comma-separated token ids, got '{seq_str}'"
+                    )
+                })?;
+            if seq.is_empty() {
+                return Err(anyhow!("--stop sequences must be non-empty"));
+            }
+            params.stop.push(seq);
+        }
     }
     Ok(())
 }
@@ -322,6 +391,58 @@ mod tests {
         assert_eq!(parse_kernels(&d).unwrap(), KernelChoice::from_env());
         let bad = Args::parse(&sv(&["--kernels", "avx"]), &[]).unwrap();
         assert!(parse_kernels(&bad).is_err());
+    }
+
+    #[test]
+    fn sampling_flags_parse() {
+        let mut params = crate::coordinator::GenParams::default();
+        let a = Args::parse(
+            &sv(&[
+                "--temperature",
+                "0.8",
+                "--top-k",
+                "40",
+                "--top-p",
+                "0.95",
+                "--repetition-penalty",
+                "1.1",
+                "--seed",
+                "7",
+                "--n",
+                "4",
+                "--stop",
+                "7,8;9",
+            ]),
+            &[],
+        )
+        .unwrap();
+        parse_sampling_flags(&a, &mut params).unwrap();
+        assert!((params.temperature - 0.8).abs() < 1e-6);
+        assert_eq!(params.top_k, 40);
+        assert!((params.top_p - 0.95).abs() < 1e-6);
+        assert!((params.repetition_penalty - 1.1).abs() < 1e-6);
+        assert_eq!(params.seed, 7);
+        assert_eq!(params.n, 4);
+        assert_eq!(params.stop, vec![vec![7, 8], vec![9]]);
+    }
+
+    #[test]
+    fn bad_sampling_flags_error() {
+        for argv in [
+            vec!["--top-p", "0"],
+            vec!["--top-p", "1.5"],
+            vec!["--repetition-penalty", "0"],
+            vec!["--n", "0"],
+            vec!["--stop", "7,x"],
+            vec!["--temperature", "-1"],
+        ] {
+            let mut params = crate::coordinator::GenParams::default();
+            let a = Args::parse(&sv(&argv), &[]).unwrap();
+            assert!(
+                parse_sampling_flags(&a, &mut params).is_err(),
+                "{argv:?} should be rejected"
+            );
+        }
     }
 
     #[test]

@@ -41,7 +41,10 @@ use crate::coordinator::kv::{KvState, PagedKv};
 use crate::coordinator::metrics::EngineMetrics;
 use crate::coordinator::queue::{Admit, RequestQueue};
 use crate::coordinator::request::{
-    FinishReason, GenResult, Request, TokenEvent,
+    BranchResult, FinishReason, GenResult, Request, TokenEvent,
+};
+use crate::coordinator::sampler::{
+    branch_seed, SampleCtx, SamplerRng, SamplerStack,
 };
 use crate::coordinator::sched::{ChunkPlan, PrefillSched};
 use crate::formats::config::GraphKind;
@@ -50,7 +53,6 @@ use crate::quant::QuantRecipe;
 use crate::runtime::{
     self, BackendKind, Literal, Runtime, StagedGraph, StagingStats,
 };
-use crate::util::XorShift;
 
 /// Engine construction options.
 #[derive(Clone, Debug)]
@@ -123,6 +125,12 @@ pub struct EngineOptions {
     /// handle/server layers can prove they resolve every waiter when
     /// the backend errors mid-step (the hang-regression suite).
     pub fail_step_after: Option<u64>,
+    /// fault injection: poison every active sequence's decode logits
+    /// row with a NaN once the step counter reaches this value.  Never
+    /// set in production — it exists so tests can prove a NaN row
+    /// finishes the request with `FinishReason::Error` instead of
+    /// panicking the engine thread (the sampler NaN-regression suite).
+    pub nan_logits_after: Option<u64>,
 }
 
 impl Default for EngineOptions {
@@ -151,9 +159,14 @@ impl Default for EngineOptions {
                 .unwrap_or(64),
             max_prompt: None,
             fail_step_after: None,
+            nan_logits_after: None,
         }
     }
 }
+
+/// Key of one decoding branch: `(request id, branch index)`.  Branch 0
+/// is the prefilled sequence; higher branches are its CoW forks.
+type SeqKey = (u64, u32);
 
 struct ActiveSeq {
     req: Request,
@@ -166,9 +179,21 @@ struct ActiveSeq {
     /// engine step that produced this sequence's latest token (ITL
     /// gaps are measured against it)
     last_token_step: u64,
-    rng: XorShift,
-    /// admission order stamp — preemption evicts the YOUNGEST (largest)
+    /// assembled sampling pipeline (per branch; owns the stop list)
+    stack: SamplerStack,
+    /// replayable sampling randomness (seed + draw count) — preemption
+    /// re-prefill rebuilds the identical stream position
+    rng: SamplerRng,
+    /// admission order stamp — preemption evicts the YOUNGEST
+    /// (largest); all branches of a request share one stamp and are
+    /// evicted together
     admit_seq: u64,
+}
+
+/// Book-keeping for an n>1 request: collects each branch's completion
+/// until all n have landed, then one aggregated [`GenResult`] ships.
+struct BranchSet {
+    done: Vec<Option<BranchResult>>,
 }
 
 /// The engine's KV state: paged block tables (default) or the
@@ -206,6 +231,33 @@ impl KvBacking {
             KvBacking::Paged(p) => p.free_seq(slot),
         }
     }
+
+    /// Fork `src_slot` into a fresh sibling slot for parallel sampling.
+    /// Paged: the block table is cloned with every block's refcount
+    /// bumped — the prompt KV is SHARED copy-on-write and siblings
+    /// diverge on first write.  Contiguous: a deep per-slot copy (no
+    /// sharing to exploit, but the branch semantics match).
+    fn fork(&mut self, src_slot: usize, id: u64) -> Option<usize> {
+        match self {
+            KvBacking::Contiguous(s) => s.fork_from(src_slot, id).ok(),
+            KvBacking::Paged(p) => p.fork_seq(src_slot, id),
+        }
+    }
+
+    /// Decode slots this backing can hold.
+    fn n_slots(&self) -> usize {
+        match self {
+            KvBacking::Contiguous(s) => s.batch,
+            KvBacking::Paged(p) => p.n_slots(),
+        }
+    }
+
+    fn free_slots(&self) -> usize {
+        match self {
+            KvBacking::Contiguous(s) => s.free_slots(),
+            KvBacking::Paged(p) => p.free_slots(),
+        }
+    }
 }
 
 /// The engine.  Single-threaded by design (PJRT handles intra-op
@@ -231,7 +283,9 @@ pub struct Engine {
     kv_lits: Option<Vec<Literal>>,
     queue: RequestQueue,
     policy: BatchPolicy,
-    active: BTreeMap<u64, ActiveSeq>,
+    active: BTreeMap<SeqKey, ActiveSeq>,
+    /// per-request completion collectors for n>1 parallel sampling
+    branch_sets: BTreeMap<u64, BranchSet>,
     /// mid-prefill sequences (fused scheduler): admitted, advancing
     /// chunk by chunk, not yet producing tokens
     sched: PrefillSched,
@@ -470,6 +524,7 @@ impl Engine {
                 prefill_priority: true,
             },
             active: BTreeMap::new(),
+            branch_sets: BTreeMap::new(),
             sched: PrefillSched::new(),
             admit_counter: 0,
             step_counter: 0,
@@ -551,9 +606,9 @@ impl Engine {
     }
 
     /// Record one generated token for streaming consumers.
-    fn emit_token(&mut self, id: u64, index: usize, token: i32) {
+    fn emit_token(&mut self, id: u64, branch: u32, index: usize, token: i32) {
         if self.token_events {
-            self.events.push(TokenEvent { id, index, token });
+            self.events.push(TokenEvent { id, branch, index, token });
         }
     }
 
@@ -563,12 +618,17 @@ impl Engine {
     /// affected request — so a caller blocked on the handle always
     /// receives a result instead of hanging on a dropped sender.
     pub fn abort_all(&mut self) {
-        let actives: Vec<u64> = self.active.keys().copied().collect();
-        for id in actives {
-            let seq = self.active.remove(&id).expect("listed active");
+        let actives: Vec<SeqKey> = self.active.keys().copied().collect();
+        let mut errored = std::collections::BTreeSet::new();
+        for key in actives {
+            let seq = self.active.remove(&key).expect("listed active");
             self.kv.free(seq.slot);
-            self.finish_error(seq.req);
+            // one synthesized result per REQUEST, not per branch
+            if errored.insert(key.0) {
+                self.finish_error(seq.req);
+            }
         }
+        self.branch_sets.clear();
         let mid_prefill = self.sched.drain_all();
         for e in mid_prefill {
             self.kv.free(e.slot);
@@ -587,6 +647,7 @@ impl Engine {
             prompt_len: r.prompt.len(),
             tokens: Vec::new(),
             finish: FinishReason::Error,
+            branches: Vec::new(),
             ttft_s: 0.0,
             ttft_steps: 0,
             total_s: r.arrived.elapsed().as_secs_f64(),
@@ -666,6 +727,18 @@ impl Engine {
                         // amount of waiting admits it
                         return Admission::Reject;
                     }
+                    if r.params.n > paged.n_slots() {
+                        // more parallel branches than decode slots
+                        // exist: can never fork
+                        return Admission::Reject;
+                    }
+                    // n>1 forks need n-1 MORE slots at spawn; hold the
+                    // request until siblings can be placed too
+                    if r.params.n > 1
+                        && paged.free_slots() < r.params.n
+                    {
+                        return Admission::Retry;
+                    }
                     // chunked admission backs the cached prefix plus
                     // ONE computable position; later chunks page
                     // their blocks in on use
@@ -676,7 +749,8 @@ impl Engine {
                     }
                     match paged.alloc_seq_backed(r.id, &r.prompt, 1) {
                         Some(a) => {
-                            resident += 1;
+                            // every branch will hold growth headroom
+                            resident += r.params.n.max(1);
                             metrics.admitted += 1;
                             Admission::Slot {
                                 slot: a.slot,
@@ -731,6 +805,15 @@ impl Engine {
                         // runtime (the paged twin is fits_pool)
                         return Admission::Reject;
                     }
+                    if r.params.n > state.batch {
+                        // more branches than slots exist
+                        return Admission::Reject;
+                    }
+                    if r.params.n > 1
+                        && state.free_slots() < r.params.n
+                    {
+                        return Admission::Retry;
+                    }
                     match state.alloc(r.id) {
                         Ok(slot) => Admission::Slot { slot, start: 0 },
                         // free slots were checked but a large pop can
@@ -759,6 +842,15 @@ impl Engine {
                             // amount of waiting admits it
                             return Admission::Reject;
                         }
+                        if r.params.n > paged.n_slots() {
+                            // more branches than decode slots exist
+                            return Admission::Reject;
+                        }
+                        if r.params.n > 1
+                            && paged.free_slots() < r.params.n
+                        {
+                            return Admission::Retry;
+                        }
                         // exact feasibility (fresh-block demand with
                         // prefix hits subtracted, reclaimable
                         // index-only blocks counted, the prompt's own
@@ -771,7 +863,7 @@ impl Engine {
                         }
                         match paged.alloc_seq(r.id, &r.prompt) {
                             Some(a) => {
-                                resident += 1;
+                                resident += r.params.n.max(1);
                                 Admission::Slot {
                                     slot: a.slot,
                                     start: a.start,
@@ -840,6 +932,7 @@ impl Engine {
             prompt_len: r.prompt.len(),
             tokens: Vec::new(),
             finish: FinishReason::Rejected,
+            branches: Vec::new(),
             ttft_s: 0.0,
             ttft_steps: 0,
             total_s: r.arrived.elapsed().as_secs_f64(),
@@ -977,31 +1070,12 @@ impl Engine {
             }
             self.metrics.prefill_tokens += plen as u64;
             let off = (row * s + (plen - 1)) * v;
-            let mut rng = XorShift::new(e.req.params.seed ^ e.req.id);
-            let tok = sample(
+            self.spawn_after_prefill(
+                e.req,
+                e.slot,
                 &logits[off..off + v],
-                &e.req.params.temperature,
-                e.req.params.top_k,
-                &mut rng,
-            );
-            let ttft = e.req.arrived.elapsed().as_secs_f64();
-            let ttft_steps =
-                self.step_counter.saturating_sub(e.req.queued_step);
-            self.emit_token(e.req.id, 0, tok);
-            self.active.insert(
-                e.req.id,
-                ActiveSeq {
-                    slot: e.slot,
-                    generated: vec![tok],
-                    last_token: tok,
-                    ttft_s: ttft,
-                    ttft_steps,
-                    last_token_step: self.step_counter,
-                    rng,
-                    req: e.req,
-                    admit_seq: e.admit_seq,
-                },
-            );
+                e.admit_seq,
+            )?;
         }
         self.sync_kv_gauges();
         crate::util::log::debug(&format!(
@@ -1012,8 +1086,110 @@ impl Engine {
         Ok(())
     }
 
-    /// Sequences holding KV blocks: decoding actives plus mid-prefill
-    /// entries.
+    /// Move a fully-prefilled request into the decode batch: sample
+    /// every branch's first token from the request's final prompt
+    /// logit row and insert the branch sequences.  For n>1 the prompt
+    /// KV is forked copy-on-write FIRST — n-1 sibling slots cloning
+    /// branch 0's block table with refcounts bumped — so all branches
+    /// share the prompt blocks and diverge on first write.
+    ///
+    /// A NaN logit row finishes the request with `FinishReason::Error`
+    /// and keeps serving the rest of the batch (the old sampler
+    /// panicked the engine thread).  A fork that cannot place every
+    /// sibling releases the request's slots and requeues it FRONT —
+    /// deterministic replay, exactly like a preemption.
+    fn spawn_after_prefill(
+        &mut self,
+        req: Request,
+        slot: usize,
+        logits_row: &[f32],
+        admit_seq: u64,
+    ) -> Result<()> {
+        let ttft_s = req.arrived.elapsed().as_secs_f64();
+        let ttft_steps =
+            self.step_counter.saturating_sub(req.queued_step);
+        if logits_row.iter().any(|v| v.is_nan()) {
+            self.kv.free(slot);
+            let total = req.arrived.elapsed().as_secs_f64();
+            self.metrics.record_completion(ttft_s, ttft_steps, total, 0);
+            self.finished.push(GenResult {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens: Vec::new(),
+                finish: FinishReason::Error,
+                branches: Vec::new(),
+                ttft_s,
+                ttft_steps,
+                total_s: total,
+            });
+            crate::util::log::info(&format!(
+                "request {}: NaN in prefill logits — finished with \
+                 FinishReason::Error",
+                req.id
+            ));
+            return Ok(());
+        }
+        let n = req.params.n.max(1);
+        // fork siblings BEFORE any branch starts decoding, so a
+        // placement failure can release cleanly and requeue
+        let mut slots = vec![slot];
+        for _ in 1..n {
+            match self.kv.fork(slot, req.id) {
+                Some(s) => slots.push(s),
+                None => {
+                    for s in slots {
+                        self.kv.free(s);
+                    }
+                    crate::util::log::debug(&format!(
+                        "request {}: cannot place {n} sibling slots — \
+                         requeued for re-prefill",
+                        req.id
+                    ));
+                    self.metrics.preempted += 1;
+                    self.queue.requeue_front(req);
+                    return Ok(());
+                }
+            }
+        }
+        if n > 1 {
+            self.metrics.forked_branches += (n - 1) as u64;
+            self.branch_sets
+                .insert(req.id, BranchSet { done: vec![None; n] });
+        }
+        for (b, s) in slots.into_iter().enumerate() {
+            let branch = b as u32;
+            let stack = SamplerStack::from_params(&req.params);
+            let mut rng = SamplerRng::new(branch_seed(
+                req.params.seed,
+                req.id,
+                branch,
+            ));
+            let ctx = SampleCtx { prompt: &req.prompt, generated: &[] };
+            let tok = stack
+                .sample(logits_row, &ctx, &mut rng)
+                .map_err(|e| anyhow!("sampling branch {branch}: {e}"))?;
+            self.emit_token(req.id, branch, 0, tok);
+            self.active.insert(
+                (req.id, branch),
+                ActiveSeq {
+                    req: req.clone(),
+                    slot: s,
+                    generated: vec![tok],
+                    last_token: tok,
+                    ttft_s,
+                    ttft_steps,
+                    last_token_step: self.step_counter,
+                    stack,
+                    rng,
+                    admit_seq,
+                },
+            );
+        }
+        Ok(())
+    }
+
+    /// Sequences holding KV blocks: decoding branch sequences plus
+    /// mid-prefill entries.
     fn resident_count(&self) -> usize {
         self.active.len() + self.sched.len()
     }
@@ -1108,30 +1284,16 @@ impl Engine {
             }
             // sample the first generated token from the last prompt logit
             let off = (row * s + (plen - 1)) * v;
-            let mut rng = XorShift::new(req.params.seed ^ req.id);
-            let tok = sample(&logits[off..off + v], &req.params.temperature,
-                             req.params.top_k, &mut rng);
-            let ttft = req.arrived.elapsed().as_secs_f64();
-            let ttft_steps =
-                self.step_counter.saturating_sub(req.queued_step);
             self.metrics.prefill_tokens += plen as u64;
             self.metrics.admitted += 1;
             self.admit_counter += 1;
-            self.emit_token(req.id, 0, tok);
-            self.active.insert(
-                req.id,
-                ActiveSeq {
-                    slot,
-                    generated: vec![tok],
-                    last_token: tok,
-                    ttft_s: ttft,
-                    ttft_steps,
-                    last_token_step: self.step_counter,
-                    rng,
-                    req,
-                    admit_seq: self.admit_counter,
-                },
-            );
+            let admit_seq = self.admit_counter;
+            self.spawn_after_prefill(
+                req,
+                slot,
+                &logits[off..off + v],
+                admit_seq,
+            )?;
         }
         crate::util::log::debug(&format!(
             "prefill: {n_reqs} reqs in {:.1}ms",
@@ -1226,34 +1388,16 @@ impl Engine {
             }
             // sample the first generated token from the last prompt logit
             let off = (row * s + (plen - 1)) * v;
-            let mut rng = XorShift::new(req.params.seed ^ req.id);
-            let tok = sample(
-                &logits[off..off + v],
-                &req.params.temperature,
-                req.params.top_k,
-                &mut rng,
-            );
-            let ttft = req.arrived.elapsed().as_secs_f64();
-            let ttft_steps =
-                self.step_counter.saturating_sub(req.queued_step);
             self.metrics.prefill_tokens += plen as u64;
             self.metrics.admitted += 1;
             self.admit_counter += 1;
-            self.emit_token(req.id, 0, tok);
-            self.active.insert(
-                req.id,
-                ActiveSeq {
-                    slot,
-                    generated: vec![tok],
-                    last_token: tok,
-                    ttft_s: ttft,
-                    ttft_steps,
-                    last_token_step: self.step_counter,
-                    rng,
-                    req,
-                    admit_seq: self.admit_counter,
-                },
-            );
+            let admit_seq = self.admit_counter;
+            self.spawn_after_prefill(
+                req,
+                slot,
+                &logits[off..off + v],
+                admit_seq,
+            )?;
         }
         self.sync_kv_gauges();
         crate::util::log::debug(&format!(
@@ -1301,7 +1445,7 @@ impl Engine {
             pos[seq.slot] = self.kv.pos(seq.slot) as i32;
         }
 
-        let logits = match &mut self.kv {
+        let mut logits = match &mut self.kv {
             KvBacking::Paged(paged) => {
                 // block-table decode: KV history is read through the
                 // tables and the new token's K/V lands in the pool in
@@ -1391,57 +1535,128 @@ impl Engine {
         self.metrics.decode_steps += 1;
         self.metrics.decode_time_s += dt;
 
-        // sample next token / finish sequences
-        let mut done: Vec<u64> = Vec::new();
-        for (id, seq) in self.active.iter_mut() {
+        // fault injection: poison each active row's logits so tests
+        // can prove NaN rows error the request, not the engine thread
+        if let Some(after) = self.opts.nan_logits_after {
+            if self.step_counter >= after {
+                for seq in self.active.values() {
+                    logits[seq.slot * v] = f32::NAN;
+                }
+            }
+        }
+
+        // sample next token / finish branches
+        let mut done: Vec<(SeqKey, FinishReason)> = Vec::new();
+        for (key, seq) in self.active.iter_mut() {
             self.kv.advance(seq.slot)?;
             self.metrics.decode_tokens += 1;
-            // inter-token latency in engine steps (1.0 = a token
-            // every iteration, the fused scheduler's steady state)
+            // inter-token latency in engine steps, per branch (1.0 =
+            // a token every iteration, the fused scheduler's steady
+            // state)
             self.metrics.itl_steps.add(
                 self.step_counter.saturating_sub(seq.last_token_step)
                     as f64,
             );
             seq.last_token_step = self.step_counter;
             let off = seq.slot * v;
-            let tok = sample(
+            let ctx = SampleCtx {
+                prompt: &seq.req.prompt,
+                generated: &seq.generated,
+            };
+            let tok = match seq.stack.sample(
                 &logits[off..off + v],
-                &seq.req.params.temperature,
-                seq.req.params.top_k,
+                &ctx,
                 &mut seq.rng,
-            );
+            ) {
+                Ok(t) => t,
+                Err(e) => {
+                    // NaN row: error THIS branch, keep the batch alive
+                    crate::util::log::info(&format!(
+                        "request {} branch {}: {e} — finishing with \
+                         FinishReason::Error",
+                        key.0, key.1
+                    ));
+                    done.push((*key, FinishReason::Error));
+                    continue;
+                }
+            };
             seq.generated.push(tok);
             seq.last_token = tok;
             // field access, not `self.emit_token`: `self.active` is
             // mutably borrowed by the loop
             if self.token_events {
                 self.events.push(TokenEvent {
-                    id: *id,
+                    id: key.0,
+                    branch: key.1,
                     index: seq.generated.len() - 1,
                     token: tok,
                 });
             }
             let hit_eos = seq.req.params.eos == Some(tok);
+            let hit_stop = seq.stack.hits_stop(&seq.generated);
             let hit_max =
                 seq.generated.len() >= seq.req.params.max_new_tokens;
             let hit_cap = self.kv.headroom(seq.slot) <= 1;
-            if hit_eos || hit_max || hit_cap {
-                done.push(*id);
+            if hit_eos {
+                done.push((*key, FinishReason::Eos));
+            } else if hit_stop {
+                done.push((*key, FinishReason::Stop));
+            } else if hit_max || hit_cap {
+                done.push((*key, FinishReason::MaxTokens));
             }
         }
-        for id in done {
-            let seq = self.active.remove(&id).unwrap();
+        for (key, finish) in done {
+            let seq = self.active.remove(&key).unwrap();
             self.kv.free(seq.slot);
             #[cfg(debug_assertions)]
             if let KvBacking::Paged(p) = &self.kv {
                 p.check_conservation().expect("block conservation");
             }
-            let finish = if seq.req.params.eos == Some(seq.last_token) {
-                FinishReason::Eos
-            } else {
-                FinishReason::MaxTokens
-            };
-            let total = seq.req.arrived.elapsed().as_secs_f64();
+            self.finish_branch(key, seq, finish);
+        }
+        self.sync_kv_gauges();
+        Ok(())
+    }
+
+    /// Record one branch's completion.  Single-completion requests
+    /// ship their `GenResult` immediately; an n>1 request ships ONE
+    /// aggregated result (and counts ONE completion in the metrics,
+    /// matching its single admission) when its last branch lands.
+    fn finish_branch(
+        &mut self,
+        key: SeqKey,
+        seq: ActiveSeq,
+        finish: FinishReason,
+    ) {
+        let (id, branch) = key;
+        let total = seq.req.arrived.elapsed().as_secs_f64();
+        if let Some(set) = self.branch_sets.get_mut(&id) {
+            set.done[branch as usize] =
+                Some(BranchResult { tokens: seq.generated, finish });
+            if set.done.iter().all(Option::is_some) {
+                let set = self.branch_sets.remove(&id).unwrap();
+                let branches: Vec<BranchResult> =
+                    set.done.into_iter().map(Option::unwrap).collect();
+                let n_tokens =
+                    branches.iter().map(|b| b.tokens.len()).sum();
+                self.metrics.record_completion(
+                    seq.ttft_s,
+                    seq.ttft_steps,
+                    total,
+                    n_tokens,
+                );
+                self.finished.push(GenResult {
+                    id,
+                    prompt_len: seq.req.prompt.len(),
+                    tokens: branches[0].tokens.clone(),
+                    finish: branches[0].finish,
+                    branches,
+                    ttft_s: seq.ttft_s,
+                    ttft_steps: seq.ttft_steps,
+                    total_s: total,
+                });
+            }
+        } else {
             self.metrics.record_completion(
                 seq.ttft_s,
                 seq.ttft_steps,
@@ -1451,15 +1666,17 @@ impl Engine {
             self.finished.push(GenResult {
                 id,
                 prompt_len: seq.req.prompt.len(),
-                tokens: seq.generated,
+                tokens: seq.generated.clone(),
                 finish,
+                branches: vec![BranchResult {
+                    tokens: seq.generated,
+                    finish,
+                }],
                 ttft_s: seq.ttft_s,
                 ttft_steps: seq.ttft_steps,
                 total_s: total,
             });
         }
-        self.sync_kv_gauges();
-        Ok(())
     }
 
     /// Fold device-format KV literals back into the contiguous host
@@ -1507,15 +1724,15 @@ impl Engine {
     /// A sequence that exhausts the pool all by itself finishes at
     /// capacity instead of thrashing.
     fn ensure_decode_capacity(&mut self) -> Result<()> {
-        let mut order: Vec<(u64, u64)> = self
+        let mut order: Vec<(u64, SeqKey)> = self
             .active
-            .values()
-            .map(|s| (s.admit_seq, s.req.id))
+            .iter()
+            .map(|(k, s)| (s.admit_seq, *k))
             .collect();
         order.sort_unstable(); // oldest admission first
-        for (_, id) in order {
-            while self.active.contains_key(&id) {
-                let slot = self.active[&id].slot;
+        for (_, key) in order {
+            while self.active.contains_key(&key) {
+                let slot = self.active[&key].slot;
                 let paged = match &mut self.kv {
                     KvBacking::Paged(p) => p,
                     KvBacking::Contiguous(_) => return Ok(()),
@@ -1523,10 +1740,13 @@ impl Engine {
                 if paged.ensure_write_capacity(slot) {
                     break;
                 }
-                if self.resident_count() == 1 {
-                    // sole block holder: preempting itself would just
-                    // re-prefill into the same wall — finish here
-                    self.finish_at_capacity(id);
+                if self.request_is_sole_resident(key.0) {
+                    // every resident block belongs to this request:
+                    // preempting itself would re-prefill into the
+                    // same wall — finish THIS branch at capacity
+                    // (sibling branches keep decoding into the blocks
+                    // it releases)
+                    self.finish_branch_at_capacity(key);
                     break;
                 }
                 // evict the youngest resident (largest admission
@@ -1535,7 +1755,7 @@ impl Engine {
                     .youngest_resident()
                     .expect("residents exist");
                 self.preempt(victim);
-                if victim == id {
+                if victim == key.0 {
                     break; // it evicted itself; nothing left to back
                 }
             }
@@ -1543,18 +1763,44 @@ impl Engine {
         Ok(())
     }
 
-    /// Evict one resident sequence — decoding (generated tokens
-    /// discarded) or mid-prefill (chunk progress discarded): blocks
-    /// back to the pool, request re-queued FRONT for re-prefill.
+    /// Does request `id` own every resident sequence (all decoding
+    /// branches AND mid-prefill entries)?  Then preemption cannot free
+    /// anything it does not immediately need back.
+    fn request_is_sole_resident(&self, id: u64) -> bool {
+        self.active.keys().all(|k| k.0 == id)
+            && self.sched.iter().all(|e| e.req.id == id)
+    }
+
+    /// Evict one resident REQUEST — all its decoding branches
+    /// (generated tokens discarded; partial branch completions too) or
+    /// its mid-prefill entry (chunk progress discarded): blocks back
+    /// to the pool, request re-queued FRONT for re-prefill.  Seeded
+    /// generation and branch forking are deterministic, so the re-run
+    /// reproduces the same tokens on every branch.
     fn preempt(&mut self, id: u64) {
-        if let Some(seq) = self.active.remove(&id) {
-            self.kv.free(seq.slot);
+        let keys: Vec<SeqKey> = self
+            .active
+            .range((id, 0)..=(id, u32::MAX))
+            .map(|(k, _)| *k)
+            .collect();
+        if !keys.is_empty() {
+            let mut req = None;
+            let mut n_tokens = 0usize;
+            for key in keys {
+                let seq =
+                    self.active.remove(&key).expect("listed branch");
+                self.kv.free(seq.slot);
+                n_tokens += seq.generated.len();
+                req = Some(seq.req);
+            }
+            // already-finished branch results are discarded with the
+            // set; the deterministic re-run regenerates them
+            self.branch_sets.remove(&id);
             crate::util::log::debug(&format!(
-                "preempt: request {id} re-queued after {} generated \
-                 tokens (pool dry)",
-                seq.generated.len()
+                "preempt: request {id} re-queued after {n_tokens} \
+                 generated tokens (pool dry)"
             ));
-            self.queue.requeue_front(seq.req);
+            self.queue.requeue_front(req.expect("branch existed"));
         } else if let Some(e) = self.sched.remove(id) {
             self.kv.free(e.slot);
             crate::util::log::debug(&format!(
@@ -1570,27 +1816,13 @@ impl Engine {
         self.metrics.preempted += 1;
     }
 
-    /// Finish a sequence that ran the pool dry with no other sequence
-    /// to evict (pool-capacity analogue of the `max_seq` cap).
-    fn finish_at_capacity(&mut self, id: u64) {
-        let seq = self.active.remove(&id).expect("finish target active");
+    /// Finish a branch that ran the pool dry with nothing left to
+    /// evict (pool-capacity analogue of the `max_seq` cap).
+    fn finish_branch_at_capacity(&mut self, key: SeqKey) {
+        let seq =
+            self.active.remove(&key).expect("finish target active");
         self.kv.free(seq.slot);
-        let total = seq.req.arrived.elapsed().as_secs_f64();
-        self.metrics.record_completion(
-            seq.ttft_s,
-            seq.ttft_steps,
-            total,
-            seq.generated.len(),
-        );
-        self.finished.push(GenResult {
-            id,
-            prompt_len: seq.req.prompt.len(),
-            tokens: seq.generated,
-            finish: FinishReason::MaxTokens,
-            ttft_s: seq.ttft_s,
-            ttft_steps: seq.ttft_steps,
-            total_s: total,
-        });
+        self.finish_branch(key, seq, FinishReason::MaxTokens);
     }
 
     /// Is the engine serving from the paged KV pool?
@@ -1722,78 +1954,8 @@ impl Engine {
     }
 }
 
-/// Sample a token id from logits.
-fn sample(logits: &[f32], temperature: &f32, top_k: usize,
-          rng: &mut XorShift) -> i32 {
-    if *temperature <= 0.0 {
-        return argmax(logits) as i32;
-    }
-    // softmax with temperature over (optionally) the top-k set
-    let mut idx: Vec<usize> = (0..logits.len()).collect();
-    if top_k > 0 && top_k < logits.len() {
-        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
-        idx.truncate(top_k);
-    }
-    let maxv = idx.iter().map(|&i| logits[i]).fold(f32::MIN, f32::max);
-    let mut probs: Vec<f64> = idx
-        .iter()
-        .map(|&i| (((logits[i] - maxv) / *temperature) as f64).exp())
-        .collect();
-    let z: f64 = probs.iter().sum();
-    for p in &mut probs {
-        *p /= z;
-    }
-    let mut u = rng.next_f64();
-    for (k, &p) in probs.iter().enumerate() {
-        if u < p {
-            return idx[k] as i32;
-        }
-        u -= p;
-    }
-    idx[idx.len() - 1] as i32
-}
-
-fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0;
-    for (i, &v) in xs.iter().enumerate() {
-        if v > xs[best] {
-            best = i;
-        }
-    }
-    best
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn greedy_sampling_is_argmax() {
-        let mut rng = XorShift::new(1);
-        let logits = vec![0.1f32, 3.0, -1.0, 2.9];
-        assert_eq!(sample(&logits, &0.0, 0, &mut rng), 1);
-    }
-
-    #[test]
-    fn temperature_sampling_in_topk() {
-        let mut rng = XorShift::new(2);
-        let logits = vec![5.0f32, 4.9, -10.0, -10.0];
-        for _ in 0..50 {
-            let t = sample(&logits, &1.0, 2, &mut rng);
-            assert!(t == 0 || t == 1, "top-2 only, got {t}");
-        }
-    }
-
-    #[test]
-    fn sampling_deterministic_by_seed() {
-        let logits = vec![1.0f32, 1.1, 0.9, 1.05];
-        let mut a = XorShift::new(42);
-        let mut b = XorShift::new(42);
-        for _ in 0..20 {
-            assert_eq!(
-                sample(&logits, &0.8, 0, &mut a),
-                sample(&logits, &0.8, 0, &mut b)
-            );
-        }
-    }
-}
+// Sampling lives in `coordinator::sampler` — a composable
+// trait-per-transform stack (temperature, top-k, top-p, repetition
+// penalty, stop sequences) with a bit-identical greedy bypass and
+// replayable seeded draws.  See that module's tests for the sampler
+// regression suite (NaN handling, underflow fallback, determinism).

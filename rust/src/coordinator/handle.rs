@@ -45,9 +45,10 @@ enum Cmd {
 /// One frame of a streaming generation.
 #[derive(Clone, Debug)]
 pub enum StreamEvent {
-    /// `index` is the token's position in the generated sequence
-    /// (0-based, strictly increasing, no gaps).
-    Token { index: usize, token: i32 },
+    /// `index` is the token's position in branch `branch`'s generated
+    /// sequence (0-based, strictly increasing per branch, no gaps;
+    /// `branch` is always 0 for single-completion requests).
+    Token { index: usize, branch: u32, token: i32 },
     /// Terminal frame: the complete result, bit-identical to what
     /// [`EngineHandle::generate`] returns for the same seeded request.
     /// Always the last event on the channel.
@@ -158,14 +159,38 @@ impl EngineHandle {
     }
 }
 
-/// A streaming waiter: the event channel plus how many tokens the
-/// consumer has been sent.  Preemption makes the engine re-emit a
-/// sequence's tokens from index 0; forwarding only `index ==
-/// delivered` passes each token exactly once (replayed prefixes are
-/// bit-identical by seeded-sampling determinism).
+/// A streaming waiter: the event channel plus, PER BRANCH, how many
+/// tokens the consumer has been sent.  Preemption makes the engine
+/// re-emit a branch's tokens from index 0; forwarding only `index ==
+/// delivered[branch]` passes each token exactly once (replayed
+/// prefixes are bit-identical by seeded-sampling determinism — the
+/// rng replays its recorded draws).
 struct StreamWaiter {
     tx: Sender<StreamEvent>,
-    delivered: usize,
+    /// delivery frontier per branch (grown on demand; n is not known
+    /// to the handle layer)
+    delivered: Vec<usize>,
+}
+
+impl StreamWaiter {
+    /// Forward `ev` iff it is its branch's frontier token.
+    fn forward(&mut self, ev: &crate::coordinator::request::TokenEvent) {
+        let b = ev.branch as usize;
+        if b >= self.delivered.len() {
+            self.delivered.resize(b + 1, 0);
+        }
+        if ev.index == self.delivered[b] {
+            self.delivered[b] += 1;
+            // receiver gone (client hung up): keep the waiter so
+            // Done-time cleanup still removes it; the engine runs the
+            // request to completion either way
+            let _ = self.tx.send(StreamEvent::Token {
+                index: ev.index,
+                branch: ev.branch,
+                token: ev.token,
+            });
+        }
+    }
 }
 
 fn reject_result(id: u64) -> GenResult {
@@ -174,6 +199,7 @@ fn reject_result(id: u64) -> GenResult {
         prompt_len: 0,
         tokens: Vec::new(),
         finish: FinishReason::Rejected,
+        branches: Vec::new(),
         ttft_s: 0.0,
         ttft_steps: 0,
         total_s: 0.0,
@@ -235,7 +261,7 @@ fn engine_thread(
                     if engine.submit(req) {
                         stream_waiters.insert(
                             id,
-                            StreamWaiter { tx, delivered: 0 },
+                            StreamWaiter { tx, delivered: Vec::new() },
                         );
                     } else {
                         let _ = tx
@@ -276,17 +302,9 @@ fn engine_thread(
         // 3. stream out tokens produced this iteration
         for ev in engine.take_token_events() {
             if let Some(w) = stream_waiters.get_mut(&ev.id) {
-                // preemption replay: forward only the frontier token
-                if ev.index == w.delivered {
-                    w.delivered += 1;
-                    // receiver gone (client hung up): keep the waiter
-                    // so Done-time cleanup still removes it; the
-                    // engine runs the request to completion either way
-                    let _ = w.tx.send(StreamEvent::Token {
-                        index: ev.index,
-                        token: ev.token,
-                    });
-                }
+                // preemption replay: forward only each branch's
+                // frontier token
+                w.forward(&ev);
             }
         }
         // 4. deliver finished results

@@ -214,6 +214,35 @@ impl KvState {
         Ok(())
     }
 
+    /// Fork `src` into a freshly-allocated sibling slot (parallel
+    /// sampling on the contiguous path): deep-copies the slot's K/V
+    /// rows and position.  The caller must have synced any
+    /// device-format KV back to the host arrays first — the copy reads
+    /// them directly.
+    pub fn fork_from(
+        &mut self,
+        src: usize,
+        request_id: u64,
+    ) -> Result<usize> {
+        if self.slots[src].is_none() {
+            bail!("fork source slot {src} is free");
+        }
+        let dst = self.alloc(request_id)?;
+        let stride = self.slot_stride();
+        for l in 0..self.n_layers {
+            self.k[l].copy_within(
+                src * stride..(src + 1) * stride,
+                dst * stride,
+            );
+            self.v[l].copy_within(
+                src * stride..(src + 1) * stride,
+                dst * stride,
+            );
+        }
+        self.pos[dst] = self.pos[src];
+        Ok(dst)
+    }
+
     /// Advance a slot's position after a decode step.
     pub fn advance(&mut self, slot: usize) -> Result<()> {
         if self.pos[slot] + 1 >= self.max_seq {
@@ -1220,6 +1249,11 @@ impl PagedKv {
 
     pub fn free_slots(&self) -> usize {
         self.slots.iter().filter(|s| s.is_none()).count()
+    }
+
+    /// Total decode slots (the decode graph's batch bucket).
+    pub fn n_slots(&self) -> usize {
+        self.batch
     }
 
     pub fn free_blocks(&self) -> usize {

@@ -34,6 +34,9 @@ pub struct EngineMetrics {
     /// copy-on-write block forks (admission tail forks + write-path
     /// forks), mirrored from the paged KV manager
     pub cow_forks: u64,
+    /// sibling branches forked for n>1 parallel sampling (n-1 per
+    /// spawned request; re-spawns after preemption count again)
+    pub forked_branches: u64,
     /// PEAK count of pool blocks held by more than one holder
     pub shared_blocks: u64,
     /// cumulative fresh block allocations, mirrored from the paged KV
@@ -116,7 +119,8 @@ impl EngineMetrics {
             "completed={} rejected={} admitted={} preempted={} \
              aborted={}\n\
              prefix : {} hits, {} prompt tokens skipped, {} cow forks, \
-             {} shared blocks (peak), {} blocks allocated\n\
+             {} forked branches, {} shared blocks (peak), \
+             {} blocks allocated\n\
              prefill: {} steps, {} tokens, {:.1} tok/s ({:.3}s total)\n\
              decode : {} steps, {} tokens, {:.1} tok/s ({:.3}s total)\n\
              sched  : {} engine steps, max decode stall {} steps, \
@@ -132,6 +136,7 @@ impl EngineMetrics {
             self.prefix_hits,
             self.prefill_tokens_skipped,
             self.cow_forks,
+            self.forked_branches,
             self.shared_blocks,
             self.kv_blocks_allocated,
             self.prefill_steps,

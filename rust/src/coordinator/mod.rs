@@ -15,8 +15,14 @@
 //! * [`sched`]   — per-request prefill progress for the chunked
 //!                 scheduler: which prompts are mid-prefill and how
 //!                 far each has advanced.
+//! * [`sampler`] — composable trait-per-transform sampling pipeline
+//!                 (temperature, top-k, top-p, repetition penalty,
+//!                 stop sequences) with replayable seeded draws and a
+//!                 bit-identical greedy bypass.
 //! * [`engine`]  — the generation loop over the execution backend;
-//!                 owns the runtime, quantized weights, and KV state.
+//!                 owns the runtime, quantized weights, and KV state;
+//!                 forks n>1 requests into CoW sibling branches after
+//!                 one shared prompt prefill.
 //! * [`handle`]  — thread-safe front door (mpsc) for servers/examples:
 //!                 blocking `generate` plus channel-fed
 //!                 `generate_streaming`, with every waiter resolved
@@ -30,9 +36,13 @@ pub mod kv;
 pub mod metrics;
 pub mod queue;
 pub mod request;
+pub mod sampler;
 pub mod sched;
 
 pub use engine::{Engine, EngineOptions};
 pub use handle::{EngineHandle, StreamEvent};
 pub use metrics::EngineMetrics;
-pub use request::{FinishReason, GenParams, GenResult, Request};
+pub use request::{
+    BranchResult, FinishReason, GenParams, GenResult, Request,
+};
+pub use sampler::{SampleError, SamplerRng, SamplerStack};

@@ -8,10 +8,21 @@ pub struct GenParams {
     pub max_new_tokens: usize,
     /// 0.0 = greedy
     pub temperature: f32,
+    /// keep the k highest-logit candidates (0 = off)
     pub top_k: usize,
+    /// nucleus mass bound (1.0 = off)
+    pub top_p: f32,
+    /// CTRL-style repetition penalty (1.0 = off)
+    pub repetition_penalty: f32,
     /// stop token (EOS in the synthetic vocab)
     pub eos: Option<i32>,
     pub seed: u64,
+    /// parallel completions over a shared prompt prefill (>= 1); the
+    /// engine forks the prompt KV copy-on-write into n sibling branches
+    pub n: usize,
+    /// token sequences that finish a branch (`FinishReason::Stop`)
+    /// when they appear as a suffix of the generation
+    pub stop: Vec<Vec<i32>>,
 }
 
 impl Default for GenParams {
@@ -20,8 +31,12 @@ impl Default for GenParams {
             max_new_tokens: 32,
             temperature: 0.0,
             top_k: 0,
+            top_p: 1.0,
+            repetition_penalty: 1.0,
             eos: Some(2),
             seed: 0,
+            n: 1,
+            stop: Vec::new(),
         }
     }
 }
@@ -56,6 +71,8 @@ impl Request {
 pub enum FinishReason {
     Eos,
     MaxTokens,
+    /// a configured stop sequence became a suffix of the generation
+    Stop,
     /// prompt too long for the graph bucket
     Rejected,
     /// the engine failed mid-flight (backend error): the request was
@@ -66,15 +83,24 @@ pub enum FinishReason {
 
 /// One generated token, emitted by the engine as `Engine::step`
 /// produces it (streaming delivery).  `index` is the token's position
-/// in the request's generated sequence: after a preemption the engine
-/// deterministically re-generates the same tokens, so a consumer that
-/// forwards only `index == delivered_so_far` sees each token exactly
-/// once.
+/// in BRANCH `branch`'s generated sequence: after a preemption the
+/// engine deterministically re-generates the same tokens, so a
+/// consumer that forwards only `index == delivered_so_far[branch]`
+/// sees each token exactly once.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TokenEvent {
     pub id: u64,
+    /// sampling branch (0..n; always 0 for single-completion requests)
+    pub branch: u32,
     pub index: usize,
     pub token: i32,
+}
+
+/// One completed sampling branch of a request.
+#[derive(Clone, Debug)]
+pub struct BranchResult {
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
 }
 
 /// Completed generation.
@@ -82,8 +108,14 @@ pub struct TokenEvent {
 pub struct GenResult {
     pub id: u64,
     pub prompt_len: usize,
+    /// branch 0's tokens (back-compat view of `branches`)
     pub tokens: Vec<i32>,
+    /// branch 0's finish reason (back-compat view of `branches`)
     pub finish: FinishReason,
+    /// all n completions, in branch order.  Empty for synthesized
+    /// results (rejections / engine errors before spawn), where
+    /// `tokens`/`finish` above are authoritative.
+    pub branches: Vec<BranchResult>,
     /// time to first token (prefill + queueing), seconds
     pub ttft_s: f64,
     /// time to first token in ENGINE STEPS (submit -> first token) —
@@ -123,6 +155,7 @@ mod tests {
             prompt_len: 4,
             tokens: vec![1, 2, 3, 4],
             finish: FinishReason::MaxTokens,
+            branches: Vec::new(),
             ttft_s: 0.1,
             ttft_steps: 2,
             total_s: 2.0,

@@ -1,0 +1,507 @@
+//! Composable sampler pipeline: logits → token id.
+//!
+//! The engine used to sample through a single free function
+//! (temperature + top-k softmax draw).  This module replaces it with a
+//! trait-per-transform stack so new decoding controls compose without
+//! touching the hot loop:
+//!
+//! * [`RepetitionPenalty`] — demote tokens already seen in the prompt
+//!   or the generation (CTRL-style: positive logits divide by the
+//!   penalty, negative logits multiply),
+//! * [`Temperature`] — scale logits by `1/t`,
+//! * [`TopK`] — keep the k highest-logit candidates,
+//! * [`TopP`] — keep the smallest prefix of the (sorted) candidate
+//!   distribution whose probability mass reaches `p` (nucleus).
+//!
+//! [`SamplerStack::from_params`] assembles the transforms in that FIXED
+//! order — penalty before temperature before truncation — so a given
+//! `GenParams` always means the same distribution.  Transforms operate
+//! on a candidate list of `(vocab_index, logit)` pairs (a view; the
+//! engine's logits buffer is never mutated), and the final draw
+//! softmaxes the surviving candidates in f64 and walks the CDF with one
+//! [`SamplerRng`] draw.
+//!
+//! Determinism contract:
+//!
+//! * **Greedy bypass** (`temperature <= 0`, no penalty) is the exact
+//!   pre-stack argmax loop — bit-identical to the engine's historical
+//!   greedy path, and it consumes NO rng draw (matching the old code,
+//!   which returned before touching the rng).
+//! * **Seeded sampling** draws exactly one `f64` per sampled token from
+//!   a [`SamplerRng`] that records its draw count.  After a preemption
+//!   the engine rebuilds the rng with [`SamplerRng::replay`] —
+//!   fast-forwarding a fresh stream by the recorded count — so a
+//!   re-prefilled sequence regenerates the SAME tokens and the
+//!   streaming frontier dedup in `handle.rs` stays sound.
+//! * **NaN logits** are an error ([`SampleError::NanLogits`]), not a
+//!   panic: the old top-k sort `partial_cmp().unwrap()`ed and the old
+//!   argmax silently returned index 0 on all-NaN rows.  The engine maps
+//!   the error to `FinishReason::Error` for that request and keeps
+//!   serving the rest of the batch.
+//! * **Softmax underflow** (the CDF walk falling off the end from
+//!   accumulated rounding) falls back to the MAX-probability candidate.
+//!   The old code returned the last candidate — the *least* likely
+//!   token of a sorted top-k set.
+//!
+//! Stop sequences ride on the stack ([`SamplerStack::hits_stop`])
+//! rather than transforming logits: after each emitted token the engine
+//! asks whether any configured token sequence is a suffix of the
+//! generation and finishes the branch with `FinishReason::Stop`.
+
+use super::request::GenParams;
+use crate::util::rng::XorShift;
+use std::collections::HashSet;
+
+/// Multiplier that decorrelates sibling branch seeds (golden-ratio
+/// constant, the usual Weyl-sequence increment).
+const BRANCH_SEED_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Seed for branch `branch` of request `id` under user seed `seed`.
+///
+/// Branch 0 is EXACTLY `seed ^ id` — the seed the engine has always
+/// used for single-completion requests — so n=1 token streams are
+/// bit-identical to the pre-stack engine.  Higher branches mix in a
+/// Weyl increment to decorrelate siblings.
+pub fn branch_seed(seed: u64, id: u64, branch: u32) -> u64 {
+    (seed ^ id) ^ (branch as u64).wrapping_mul(BRANCH_SEED_MIX)
+}
+
+/// Sampling failed in a way that should error the request, not panic
+/// the engine thread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SampleError {
+    /// The logits row contained at least one NaN (upstream numerical
+    /// blow-up); there is no meaningful distribution to sample.
+    NanLogits,
+}
+
+impl std::fmt::Display for SampleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SampleError::NanLogits => write!(f, "NaN in logits row"),
+        }
+    }
+}
+
+impl std::error::Error for SampleError {}
+
+/// Replayable sampling randomness: an [`XorShift`] stream plus the
+/// count of draws taken from it.  The engine persists `(seed, draws)`
+/// on the sequence; after preemption [`SamplerRng::replay`] rebuilds
+/// the identical stream position so regenerated tokens match the ones
+/// already streamed out.
+#[derive(Clone, Debug)]
+pub struct SamplerRng {
+    seed: u64,
+    draws: u64,
+    rng: XorShift,
+}
+
+impl SamplerRng {
+    /// Fresh stream at draw 0.
+    pub fn new(seed: u64) -> Self {
+        SamplerRng { seed, draws: 0, rng: XorShift::new(seed) }
+    }
+
+    /// Rebuild a stream fast-forwarded past `draws` draws — the state a
+    /// fresh `new(seed)` stream reaches after `draws` samples.
+    pub fn replay(seed: u64, draws: u64) -> Self {
+        let mut rng = XorShift::new(seed);
+        for _ in 0..draws {
+            rng.next_u64();
+        }
+        SamplerRng { seed, draws, rng }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Draws taken so far (replay cursor).
+    pub fn draws(&self) -> u64 {
+        self.draws
+    }
+
+    /// One uniform draw in [0, 1); advances the replay cursor.
+    fn next_f64(&mut self) -> f64 {
+        self.draws += 1;
+        self.rng.next_f64()
+    }
+}
+
+/// Context a transform may consult: the request's prompt and what has
+/// been generated so far (for this branch).
+pub struct SampleCtx<'a> {
+    pub prompt: &'a [i32],
+    pub generated: &'a [i32],
+}
+
+/// One logits transform in the stack.  `apply` mutates the candidate
+/// list (pairs of vocab index and logit) in place — scaling logits or
+/// dropping candidates — and must leave at least one candidate.
+pub trait LogitsTransform: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn apply(&self, ctx: &SampleCtx<'_>, cands: &mut Vec<(usize, f32)>);
+}
+
+/// CTRL-style repetition penalty: candidates whose token appears in the
+/// prompt or the generation so far are demoted — positive logits divide
+/// by the penalty, negative logits multiply.  Unseen tokens are
+/// untouched (bitwise).
+pub struct RepetitionPenalty(pub f32);
+
+impl LogitsTransform for RepetitionPenalty {
+    fn name(&self) -> &'static str {
+        "repetition_penalty"
+    }
+
+    fn apply(&self, ctx: &SampleCtx<'_>, cands: &mut Vec<(usize, f32)>) {
+        let seen: HashSet<usize> = ctx
+            .prompt
+            .iter()
+            .chain(ctx.generated.iter())
+            .filter(|&&t| t >= 0)
+            .map(|&t| t as usize)
+            .collect();
+        for (i, l) in cands.iter_mut() {
+            if seen.contains(i) {
+                if *l > 0.0 {
+                    *l /= self.0;
+                } else {
+                    *l *= self.0;
+                }
+            }
+        }
+    }
+}
+
+/// Divide logits by the temperature (t > 0; the greedy bypass handles
+/// t <= 0 before the stack runs).
+pub struct Temperature(pub f32);
+
+impl LogitsTransform for Temperature {
+    fn name(&self) -> &'static str {
+        "temperature"
+    }
+
+    fn apply(&self, _ctx: &SampleCtx<'_>, cands: &mut Vec<(usize, f32)>) {
+        for (_, l) in cands.iter_mut() {
+            *l /= self.0;
+        }
+    }
+}
+
+/// Keep the k highest-logit candidates (no-op when k == 0 or k covers
+/// every candidate).  Sorts by logit descending, ties by vocab index
+/// ascending — `total_cmp`, so NaN-free rows sort identically to the
+/// old `partial_cmp` code and NaN rows (already rejected upstream)
+/// could not panic here anyway.
+pub struct TopK(pub usize);
+
+impl LogitsTransform for TopK {
+    fn name(&self) -> &'static str {
+        "top_k"
+    }
+
+    fn apply(&self, _ctx: &SampleCtx<'_>, cands: &mut Vec<(usize, f32)>) {
+        if self.0 == 0 || self.0 >= cands.len() {
+            return;
+        }
+        cands.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        cands.truncate(self.0);
+    }
+}
+
+/// Nucleus sampling: softmax the candidates, sort by probability
+/// descending, and keep the smallest prefix whose cumulative mass
+/// reaches `p` (the candidate that crosses the threshold is kept).
+/// No-op when `p >= 1`.
+pub struct TopP(pub f32);
+
+impl LogitsTransform for TopP {
+    fn name(&self) -> &'static str {
+        "top_p"
+    }
+
+    fn apply(&self, _ctx: &SampleCtx<'_>, cands: &mut Vec<(usize, f32)>) {
+        if self.0 >= 1.0 || cands.len() <= 1 {
+            return;
+        }
+        cands.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        let probs = softmax(cands);
+        let mut cum = 0.0f64;
+        let mut keep = cands.len();
+        for (k, &p) in probs.iter().enumerate() {
+            cum += p;
+            if cum >= self.0 as f64 {
+                keep = k + 1;
+                break;
+            }
+        }
+        cands.truncate(keep);
+    }
+}
+
+/// Softmax (f64, max-subtracted) over the candidates' logits.
+fn softmax(cands: &[(usize, f32)]) -> Vec<f64> {
+    let maxv = cands.iter().map(|c| c.1).fold(f32::MIN, f32::max);
+    let mut probs: Vec<f64> =
+        cands.iter().map(|c| ((c.1 - maxv) as f64).exp()).collect();
+    let z: f64 = probs.iter().sum();
+    for p in &mut probs {
+        *p /= z;
+    }
+    probs
+}
+
+/// Walk the CDF with draw `u`; on fallthrough (accumulated rounding
+/// left the total mass below `u`) return the MAX-probability candidate
+/// — never the tail, which under top-k is the least likely token.
+fn draw_from(probs: &[f64], cands: &[(usize, f32)], mut u: f64) -> i32 {
+    let mut best = 0usize;
+    for (k, &p) in probs.iter().enumerate() {
+        if u < p {
+            return cands[k].0 as i32;
+        }
+        u -= p;
+        if p > probs[best] {
+            best = k;
+        }
+    }
+    cands[best].0 as i32
+}
+
+/// The exact pre-stack greedy argmax (first max wins).  NaN rows are
+/// rejected before this runs; on NaN-free input `v > best` never
+/// involves a NaN comparison surprise.
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// A request's assembled sampling pipeline.  Built once per branch at
+/// spawn ([`SamplerStack::from_params`]); `sample` runs per token.
+pub struct SamplerStack {
+    transforms: Vec<Box<dyn LogitsTransform>>,
+    greedy: bool,
+    stop: Vec<Vec<i32>>,
+}
+
+impl SamplerStack {
+    /// Assemble the stack for `params`.  Transform order is FIXED:
+    /// repetition penalty → temperature → top-k → top-p; transforms at
+    /// their neutral setting are omitted.
+    pub fn from_params(params: &GenParams) -> Self {
+        let greedy = params.temperature <= 0.0;
+        let mut transforms: Vec<Box<dyn LogitsTransform>> = Vec::new();
+        if params.repetition_penalty != 1.0 {
+            transforms.push(Box::new(RepetitionPenalty(
+                params.repetition_penalty,
+            )));
+        }
+        if !greedy {
+            transforms.push(Box::new(Temperature(params.temperature)));
+            if params.top_k > 0 {
+                transforms.push(Box::new(TopK(params.top_k)));
+            }
+            if params.top_p < 1.0 {
+                transforms.push(Box::new(TopP(params.top_p)));
+            }
+        }
+        SamplerStack { transforms, greedy, stop: params.stop.clone() }
+    }
+
+    /// Transform names in application order (pins the fixed order in
+    /// tests).
+    pub fn names(&self) -> Vec<&'static str> {
+        self.transforms.iter().map(|t| t.name()).collect()
+    }
+
+    /// Sample one token from `logits`.  Greedy (with no transforms) is
+    /// the exact historical argmax and consumes no rng draw; otherwise
+    /// the transforms run in order and one CDF draw picks the token.
+    pub fn sample(
+        &self,
+        logits: &[f32],
+        ctx: &SampleCtx<'_>,
+        rng: &mut SamplerRng,
+    ) -> Result<i32, SampleError> {
+        if logits.iter().any(|v| v.is_nan()) {
+            return Err(SampleError::NanLogits);
+        }
+        if self.greedy && self.transforms.is_empty() {
+            return Ok(argmax(logits) as i32);
+        }
+        let mut cands: Vec<(usize, f32)> =
+            logits.iter().copied().enumerate().collect();
+        for t in &self.transforms {
+            t.apply(ctx, &mut cands);
+        }
+        debug_assert!(!cands.is_empty(), "transforms must keep a candidate");
+        if self.greedy {
+            // greedy + repetition penalty: argmax of the adjusted row
+            let best = cands
+                .iter()
+                .fold(cands[0], |b, &c| if c.1 > b.1 { c } else { b });
+            return Ok(best.0 as i32);
+        }
+        let probs = softmax(&cands);
+        Ok(draw_from(&probs, &cands, rng.next_f64()))
+    }
+
+    /// True when any configured stop sequence is a suffix of
+    /// `generated`.
+    pub fn hits_stop(&self, generated: &[i32]) -> bool {
+        self.stop.iter().any(|s| !s.is_empty() && generated.ends_with(s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(temperature: f32, top_k: usize) -> GenParams {
+        GenParams { temperature, top_k, ..Default::default() }
+    }
+
+    fn ctx() -> SampleCtx<'static> {
+        SampleCtx { prompt: &[], generated: &[] }
+    }
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let stack = SamplerStack::from_params(&params(0.0, 0));
+        let mut rng = SamplerRng::new(1);
+        let logits = vec![0.1f32, 3.0, -1.0, 2.9];
+        assert_eq!(stack.sample(&logits, &ctx(), &mut rng).unwrap(), 1);
+        assert_eq!(rng.draws(), 0, "greedy consumes no draw");
+    }
+
+    #[test]
+    fn temperature_sampling_in_topk() {
+        let stack = SamplerStack::from_params(&params(1.0, 2));
+        let mut rng = SamplerRng::new(2);
+        let logits = vec![5.0f32, 4.9, -10.0, -10.0];
+        for _ in 0..50 {
+            let t = stack.sample(&logits, &ctx(), &mut rng).unwrap();
+            assert!(t == 0 || t == 1, "top-2 only, got {t}");
+        }
+        assert_eq!(rng.draws(), 50, "one draw per sampled token");
+    }
+
+    #[test]
+    fn sampling_deterministic_by_seed() {
+        let stack = SamplerStack::from_params(&params(0.8, 0));
+        let logits = vec![1.0f32, 1.1, 0.9, 1.05];
+        let mut a = SamplerRng::new(42);
+        let mut b = SamplerRng::new(42);
+        for _ in 0..20 {
+            assert_eq!(
+                stack.sample(&logits, &ctx(), &mut a).unwrap(),
+                stack.sample(&logits, &ctx(), &mut b).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn replay_matches_live_stream() {
+        let stack = SamplerStack::from_params(&params(0.9, 3));
+        let logits = vec![1.0f32, 2.0, 0.5, 1.5, -0.2];
+        let mut live = SamplerRng::new(7);
+        let mut prefix = Vec::new();
+        for _ in 0..5 {
+            prefix.push(stack.sample(&logits, &ctx(), &mut live).unwrap());
+        }
+        // preemption: rebuild from (seed, draws) and regenerate
+        let mut replayed = SamplerRng::replay(live.seed(), live.draws());
+        let mut again = SamplerRng::new(7);
+        let mut re_prefix = Vec::new();
+        for _ in 0..5 {
+            re_prefix
+                .push(stack.sample(&logits, &ctx(), &mut again).unwrap());
+        }
+        assert_eq!(prefix, re_prefix, "regeneration is deterministic");
+        for _ in 0..5 {
+            assert_eq!(
+                stack.sample(&logits, &ctx(), &mut live).unwrap(),
+                stack.sample(&logits, &ctx(), &mut replayed).unwrap(),
+                "replayed stream continues identically"
+            );
+        }
+    }
+
+    #[test]
+    fn nan_row_is_error_not_panic() {
+        let stack = SamplerStack::from_params(&params(1.0, 2));
+        let mut rng = SamplerRng::new(3);
+        let logits = vec![1.0f32, f32::NAN, 0.5];
+        assert_eq!(
+            stack.sample(&logits, &ctx(), &mut rng),
+            Err(SampleError::NanLogits)
+        );
+        // all-NaN greedy used to silently return index 0
+        let greedy = SamplerStack::from_params(&params(0.0, 0));
+        let all_nan = vec![f32::NAN; 4];
+        assert_eq!(
+            greedy.sample(&all_nan, &ctx(), &mut rng),
+            Err(SampleError::NanLogits)
+        );
+    }
+
+    #[test]
+    fn tiny_temperature_is_argmax() {
+        // t → 0+ concentrates all mass on the argmax; the sampled path
+        // must agree with greedy (the old fallback returned the LAST
+        // top-k candidate on underflow, breaking this)
+        let mut gen = XorShift::new(11);
+        for _ in 0..50 {
+            let logits: Vec<f32> =
+                (0..32).map(|_| gen.normal_f32() * 4.0).collect();
+            let greedy = SamplerStack::from_params(&params(0.0, 0));
+            let tiny = SamplerStack::from_params(&params(1e-6, 8));
+            let mut rng = SamplerRng::new(gen.next_u64());
+            let g = greedy
+                .sample(&logits, &ctx(), &mut SamplerRng::new(1))
+                .unwrap();
+            let t = tiny.sample(&logits, &ctx(), &mut rng).unwrap();
+            assert_eq!(g, t, "sample(t→0+) == argmax");
+        }
+    }
+
+    #[test]
+    fn underflow_fallback_is_max_probability() {
+        // force the fallthrough: u exceeds the (deliberately short)
+        // total mass — the pick must be the max-probability candidate,
+        // not the tail
+        let cands = vec![(3usize, 0.0f32), (9, 0.0), (1, 0.0)];
+        let probs = vec![0.1f64, 0.3, 0.05];
+        assert_eq!(draw_from(&probs, &cands, 0.999), 9);
+    }
+
+    #[test]
+    fn branch_zero_seed_is_legacy() {
+        assert_eq!(branch_seed(17, 40, 0), 17 ^ 40);
+        assert_ne!(branch_seed(17, 40, 1), branch_seed(17, 40, 0));
+        assert_ne!(branch_seed(17, 40, 1), branch_seed(17, 40, 2));
+    }
+
+    #[test]
+    fn stop_sequence_suffix_match() {
+        let p = GenParams {
+            stop: vec![vec![5, 6], vec![9]],
+            ..Default::default()
+        };
+        let stack = SamplerStack::from_params(&p);
+        assert!(stack.hits_stop(&[1, 5, 6]));
+        assert!(stack.hits_stop(&[9]));
+        assert!(!stack.hits_stop(&[5, 6, 1]));
+        assert!(!stack.hits_stop(&[6]));
+        assert!(!SamplerStack::from_params(&GenParams::default())
+            .hits_stop(&[5, 6]));
+    }
+}

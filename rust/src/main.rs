@@ -196,18 +196,22 @@ fn generate(args: &Args, artifacts: &str) -> Result<()> {
     };
     cli::parse_kv_flags(args, &mut opts)?;
     let svc = EngineService::spawn(opts)?;
-    let params = GenParams {
+    let mut params = GenParams {
         max_new_tokens: args.get_usize("max-new-tokens", 16)?,
-        temperature: args
-            .get("temperature")
-            .map(|t| t.parse::<f32>())
-            .transpose()
-            .map_err(|e| anyhow!("bad --temperature: {e}"))?
-            .unwrap_or(0.0),
         ..Default::default()
     };
+    cli::parse_sampling_flags(args, &mut params)?;
     let res = svc.handle.generate(prompt, params)?;
-    println!("generated: {:?}", res.tokens);
+    if res.branches.len() > 1 {
+        for (i, b) in res.branches.iter().enumerate() {
+            println!(
+                "completion {i}: {:?} (finish={:?})",
+                b.tokens, b.finish
+            );
+        }
+    } else {
+        println!("generated: {:?}", res.tokens);
+    }
     println!(
         "finish={:?} ttft={:.1}ms total={:.1}ms ({:.1} tok/s)",
         res.finish,
@@ -257,7 +261,12 @@ fn loadgen(args: &Args, artifacts: &str) -> Result<()> {
         max_retries: args.get_usize("max-retries", 3)?,
         stream: !args.has("no-stream"),
         timeout_s: get_f64("timeout-s", 60.0)?,
+        temperature: get_f64("temperature", 0.0)?,
+        n: args.get_usize("n", 1)?,
     };
+    if opts.n == 0 {
+        bail!("--n must be at least 1");
+    }
     let mut report = if let Some(addr) = args.get("addr") {
         odyssey::server::loadgen::run(addr, &opts)?
     } else {

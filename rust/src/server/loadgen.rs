@@ -87,6 +87,12 @@ pub struct LoadgenOptions {
     pub stream: bool,
     /// per-socket read timeout — a request exceeding it counts as HUNG
     pub timeout_s: f64,
+    /// sampling temperature (0 = greedy); > 0 exercises the seeded
+    /// sampled path under load
+    pub temperature: f64,
+    /// parallel completions per request (n > 1 exercises CoW branch
+    /// forking under load)
+    pub n: usize,
 }
 
 impl Default for LoadgenOptions {
@@ -101,6 +107,8 @@ impl Default for LoadgenOptions {
             max_retries: 3,
             stream: true,
             timeout_s: 60.0,
+            temperature: 0.0,
+            n: 1,
         }
     }
 }
@@ -151,11 +159,15 @@ pub struct RequestSpec {
     pub tokens: Vec<i32>,
     pub max_new_tokens: usize,
     pub seed: u64,
+    /// sampling temperature (0 = greedy; only emitted when > 0)
+    pub temperature: f64,
+    /// parallel completions (only emitted when > 1)
+    pub n: usize,
 }
 
 impl RequestSpec {
     pub fn body(&self, stream: bool) -> String {
-        Json::obj(vec![
+        let mut fields = vec![
             (
                 "tokens",
                 Json::Arr(
@@ -167,9 +179,17 @@ impl RequestSpec {
             ),
             ("max_new_tokens", Json::num(self.max_new_tokens as f64)),
             ("seed", Json::num(self.seed as f64)),
-            ("stream", Json::Bool(stream)),
-        ])
-        .emit()
+        ];
+        // defaults stay implicit so greedy/n=1 bodies are byte-stable
+        // across loadgen versions
+        if self.temperature > 0.0 {
+            fields.push(("temperature", Json::num(self.temperature)));
+        }
+        if self.n > 1 {
+            fields.push(("n", Json::num(self.n as f64)));
+        }
+        fields.push(("stream", Json::Bool(stream)));
+        Json::obj(fields).emit()
     }
 }
 
@@ -181,6 +201,8 @@ pub fn build_workload(
     n: usize,
     classes: usize,
     seed: u64,
+    temperature: f64,
+    n_completions: usize,
 ) -> Vec<RequestSpec> {
     let classes = classes.max(1);
     // fixed per-class prefixes, independent of the request mix
@@ -206,6 +228,8 @@ pub fn build_workload(
                 tokens,
                 max_new_tokens: rng.range(4, 25) as usize,
                 seed: seed.wrapping_mul(1000).wrapping_add(i as u64),
+                temperature,
+                n: n_completions.max(1),
             }
         })
         .collect()
@@ -523,6 +547,8 @@ impl Report {
             ("rate_rps", f(self.opts.rate)),
             ("stream", Json::Bool(self.opts.stream)),
             ("classes", Json::num(self.opts.classes as f64)),
+            ("temperature", f(self.opts.temperature)),
+            ("n", Json::num(self.opts.n as f64)),
             ("completed", Json::num(self.completed as f64)),
             ("rejected", Json::num(self.rejected as f64)),
             ("errors", Json::num(self.errors as f64)),
@@ -550,8 +576,13 @@ pub fn run(addr: &str, opts: &LoadgenOptions) -> Result<Report> {
         opts.rate,
         opts.seed,
     );
-    let specs =
-        build_workload(opts.requests, opts.classes, opts.seed);
+    let specs = build_workload(
+        opts.requests,
+        opts.classes,
+        opts.seed,
+        opts.temperature,
+        opts.n,
+    );
     let t0 = Instant::now();
     let threads: Vec<std::thread::JoinHandle<RequestOutcome>> = specs
         .iter()
@@ -659,7 +690,7 @@ mod tests {
 
     #[test]
     fn workload_shares_class_prefixes() {
-        let specs = build_workload(12, 3, 42);
+        let specs = build_workload(12, 3, 42, 0.0, 1);
         assert_eq!(specs.len(), 12);
         for s in &specs {
             assert!(s.tokens.len() > PREFIX_LEN);
@@ -689,13 +720,28 @@ mod tests {
             tokens: vec![3, 4, 5],
             max_new_tokens: 7,
             seed: 9,
+            temperature: 0.0,
+            n: 1,
         };
         let j = Json::parse(&spec.body(true)).unwrap();
         assert_eq!(j.get("tokens").as_arr().unwrap().len(), 3);
         assert_eq!(j.get("max_new_tokens").as_i64(), Some(7));
         assert_eq!(j.get("stream").as_bool(), Some(true));
+        // defaults stay off the wire
+        assert!(matches!(j.get("temperature"), Json::Null));
+        assert!(matches!(j.get("n"), Json::Null));
         let j = Json::parse(&spec.body(false)).unwrap();
         assert_eq!(j.get("stream").as_bool(), Some(false));
+        let sampled = RequestSpec {
+            temperature: 0.7,
+            n: 4,
+            ..spec
+        };
+        let j = Json::parse(&sampled.body(true)).unwrap();
+        assert!(
+            (j.get("temperature").as_f64().unwrap() - 0.7).abs() < 1e-9
+        );
+        assert_eq!(j.get("n").as_i64(), Some(4));
     }
 
     #[test]

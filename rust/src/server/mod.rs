@@ -3,13 +3,19 @@
 //!
 //! Routes:
 //! * `POST /generate` — body `{"tokens": [..], "max_new_tokens": n,
-//!   "temperature": t, "top_k": k, "seed": s, "stream": bool}`.
+//!   "temperature": t, "top_k": k, "top_p": p,
+//!   "repetition_penalty": r, "n": n_completions,
+//!   "stop": [[..token ids..], ..], "seed": s, "stream": bool}`.
 //!   Blocking form returns one JSON object with the generated token
-//!   ids + timings.  With `"stream": true` the response is NDJSON
+//!   ids + timings; with `"n" > 1` it additionally carries a
+//!   `"completions"` array holding every branch's tokens and finish
+//!   reason (the top-level `tokens`/`finish` stay the branch-0 view).
+//!   With `"stream": true` the response is NDJSON
 //!   (`application/x-ndjson`, `Connection: close` delimited): one
-//!   `{"index":i,"token":t}` line per token as `Engine::step` produces
-//!   it, then a final `{"done":true,"finish":...,"tokens":[..],...}`
-//!   line carrying the same result the blocking form returns.
+//!   `{"index":i,"branch":b,"token":t}` line per token as
+//!   `Engine::step` produces it (`index` counts per branch), then a
+//!   final `{"done":true,"finish":...,"tokens":[..],...}` line
+//!   carrying the same result the blocking form returns.
 //! * `GET /stats`  — engine metrics snapshot.
 //! * `GET /health` — liveness.
 //!
@@ -248,6 +254,7 @@ fn finish_str(f: FinishReason) -> &'static str {
     match f {
         FinishReason::Eos => "eos",
         FinishReason::MaxTokens => "length",
+        FinishReason::Stop => "stop",
         FinishReason::Rejected => "rejected",
         FinishReason::Error => "error",
     }
@@ -337,6 +344,82 @@ pub fn parse_gen_request(
             params.seed = s as u64;
         }
     }
+    match j.get("top_p") {
+        Json::Null => {}
+        v => {
+            let p = v.as_f64().ok_or_else(|| {
+                "'top_p' must be a number".to_string()
+            })?;
+            if !(p > 0.0 && p <= 1.0) {
+                return Err(
+                    "'top_p' must be in (0, 1]".to_string()
+                );
+            }
+            params.top_p = p as f32;
+        }
+    }
+    match j.get("repetition_penalty") {
+        Json::Null => {}
+        v => {
+            let r = v.as_f64().ok_or_else(|| {
+                "'repetition_penalty' must be a number".to_string()
+            })?;
+            if !(r > 0.0) {
+                return Err(
+                    "'repetition_penalty' must be > 0".to_string()
+                );
+            }
+            params.repetition_penalty = r as f32;
+        }
+    }
+    match j.get("n") {
+        Json::Null => {}
+        v => {
+            let n = v.as_f64().unwrap_or(-1.0);
+            if n.fract() != 0.0 || n < 1.0 {
+                return Err("'n' must be an integer >= 1".to_string());
+            }
+            params.n = n as usize;
+        }
+    }
+    match j.get("stop") {
+        Json::Null => {}
+        v => {
+            let seqs = v.as_arr().ok_or_else(|| {
+                "'stop' must be an array of token-id arrays".to_string()
+            })?;
+            for (i, s) in seqs.iter().enumerate() {
+                let inner = s.as_arr().ok_or_else(|| {
+                    format!("'stop[{i}]' must be an array of token ids")
+                })?;
+                if inner.is_empty() {
+                    return Err(format!(
+                        "'stop[{i}]' must be non-empty"
+                    ));
+                }
+                let mut seq = Vec::with_capacity(inner.len());
+                for (k, t) in inner.iter().enumerate() {
+                    let n = t.as_f64().ok_or_else(|| {
+                        format!(
+                            "'stop[{i}][{k}]' is not an integer \
+                             token id"
+                        )
+                    })?;
+                    if n.fract() != 0.0
+                        || n < i32::MIN as f64
+                        || n > i32::MAX as f64
+                    {
+                        return Err(format!(
+                            "'stop[{i}][{k}]' is not an integer \
+                             token id"
+                        ));
+                    }
+                    seq.push(n as i32);
+                }
+                params.stop.push(seq);
+            }
+        }
+    }
     let stream = match j.get("stream") {
         Json::Null => false,
         v => v
@@ -355,6 +438,45 @@ fn reject_response() -> HttpResponse {
     .with_header("Retry-After", "1")
 }
 
+/// The shared response fields of the blocking body and the streaming
+/// done-frame: branch-0 `tokens`/`finish` (back-compat) plus, for
+/// n > 1, a `completions` array with every branch's tokens + finish.
+fn result_fields(
+    res: &crate::coordinator::request::GenResult,
+) -> Vec<(&'static str, Json)> {
+    let mut fields = vec![
+        (
+            "tokens",
+            Json::Arr(res.tokens.iter()
+                .map(|&t| Json::num(t as f64)).collect()),
+        ),
+        ("finish", Json::str(finish_str(res.finish))),
+    ];
+    if res.branches.len() > 1 {
+        fields.push((
+            "completions",
+            Json::Arr(
+                res.branches
+                    .iter()
+                    .map(|b| Json::obj(vec![
+                        (
+                            "tokens",
+                            Json::Arr(b.tokens.iter()
+                                .map(|&t| Json::num(t as f64))
+                                .collect()),
+                        ),
+                        ("finish", Json::str(finish_str(b.finish))),
+                    ]))
+                    .collect(),
+            ),
+        ));
+    }
+    fields.push(("ttft_ms", Json::num(res.ttft_s * 1e3)));
+    fields.push(("total_ms", Json::num(res.total_s * 1e3)));
+    fields.push(("tokens_per_s", Json::num(res.tokens_per_s())));
+    fields
+}
+
 fn generate(req: &HttpRequest, engine: &EngineHandle) -> HttpResponse {
     let (tokens, params, _stream) = match parse_gen_request(&req.body) {
         Ok(t) => t,
@@ -367,17 +489,10 @@ fn generate(req: &HttpRequest, engine: &EngineHandle) -> HttpResponse {
                 500,
                 "engine error: request aborted",
             ),
-            _ => HttpResponse::json(200, &Json::obj(vec![
-                (
-                    "tokens",
-                    Json::Arr(res.tokens.iter()
-                        .map(|&t| Json::num(t as f64)).collect()),
-                ),
-                ("finish", Json::str(finish_str(res.finish))),
-                ("ttft_ms", Json::num(res.ttft_s * 1e3)),
-                ("total_ms", Json::num(res.total_s * 1e3)),
-                ("tokens_per_s", Json::num(res.tokens_per_s())),
-            ])),
+            _ => HttpResponse::json(
+                200,
+                &Json::obj(result_fields(&res)),
+            ),
         },
         Err(e) => HttpResponse::text(503, &format!("{e:#}")),
     }
@@ -442,9 +557,10 @@ fn generate_streaming(
     ))?;
     loop {
         match ev {
-            StreamEvent::Token { index, token } => {
+            StreamEvent::Token { index, branch, token } => {
                 let mut line = Json::obj(vec![
                     ("index", Json::num(index as f64)),
+                    ("branch", Json::num(branch as f64)),
                     ("token", Json::num(token as f64)),
                 ])
                 .emit();
@@ -453,19 +569,9 @@ fn generate_streaming(
                 stream.flush()?;
             }
             StreamEvent::Done(res) => {
-                let mut line = Json::obj(vec![
-                    ("done", Json::Bool(true)),
-                    ("finish", Json::str(finish_str(res.finish))),
-                    (
-                        "tokens",
-                        Json::Arr(res.tokens.iter()
-                            .map(|&t| Json::num(t as f64)).collect()),
-                    ),
-                    ("ttft_ms", Json::num(res.ttft_s * 1e3)),
-                    ("total_ms", Json::num(res.total_s * 1e3)),
-                    ("tokens_per_s", Json::num(res.tokens_per_s())),
-                ])
-                .emit();
+                let mut fields = vec![("done", Json::Bool(true))];
+                fields.extend(result_fields(&res));
+                let mut line = Json::obj(fields).emit();
                 line.push('\n');
                 stream.write_all(line.as_bytes())?;
                 stream.flush()?;
@@ -548,6 +654,52 @@ mod tests {
             br#"{"tokens":[1],"top_k":-1}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn parse_sampling_extensions() {
+        let (_, params, _) = parse_gen_request(
+            br#"{"tokens":[1],"top_p":0.9,"repetition_penalty":1.2,
+                "n":4,"stop":[[7,8],[9]]}"#,
+        )
+        .unwrap();
+        assert!((params.top_p - 0.9).abs() < 1e-6);
+        assert!((params.repetition_penalty - 1.2).abs() < 1e-6);
+        assert_eq!(params.n, 4);
+        assert_eq!(params.stop, vec![vec![7, 8], vec![9]]);
+    }
+
+    #[test]
+    fn bad_sampling_extensions_name_the_field() {
+        let err = parse_gen_request(br#"{"tokens":[1],"top_p":0}"#)
+            .unwrap_err();
+        assert!(err.contains("top_p"), "got: {err}");
+        let err = parse_gen_request(br#"{"tokens":[1],"top_p":1.5}"#)
+            .unwrap_err();
+        assert!(err.contains("top_p"), "got: {err}");
+        let err = parse_gen_request(
+            br#"{"tokens":[1],"repetition_penalty":0}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("repetition_penalty"), "got: {err}");
+        let err =
+            parse_gen_request(br#"{"tokens":[1],"n":0}"#).unwrap_err();
+        assert!(err.contains("'n'"), "got: {err}");
+        let err = parse_gen_request(br#"{"tokens":[1],"n":1.5}"#)
+            .unwrap_err();
+        assert!(err.contains("'n'"), "got: {err}");
+        // stop errors name the exact offending index
+        let err = parse_gen_request(br#"{"tokens":[1],"stop":[5]}"#)
+            .unwrap_err();
+        assert!(err.contains("stop[0]"), "got: {err}");
+        let err = parse_gen_request(br#"{"tokens":[1],"stop":[[]]}"#)
+            .unwrap_err();
+        assert!(err.contains("stop[0]"), "got: {err}");
+        let err = parse_gen_request(
+            br#"{"tokens":[1],"stop":[[3],[4,"x"]]}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("stop[1][1]"), "got: {err}");
     }
 
     #[test]

@@ -1071,3 +1071,280 @@ fn kernel_sets_produce_identical_token_streams() {
         );
     });
 }
+
+#[test]
+fn parallel_sampling_shares_prompt_blocks_via_cow() {
+    // the tentpole acceptance run: one n=4 request prefills ONCE and
+    // forks into 4 siblings that retain the prompt blocks; the fork
+    // must allocate strictly fewer KV blocks than 4 independent copies
+    // of the same request, the shared tail must CoW-split on the first
+    // diverging write, and greedy branches must stay bit-identical to
+    // a plain n=1 run.
+    with_engine(|_shared| {
+        // 10 tokens over 4-position blocks: the tail block is half
+        // full, so every sibling's first decode write hits shared
+        // storage and must CoW-fork it
+        let p = prompt(13, 10);
+        let run = |n: usize, requests: u64| {
+            let mut o = opts("fp");
+            o.paged = true;
+            o.staging = true;
+            o.prefix_cache = false; // isolate fork sharing from the index
+            o.kv_block_size = 4;
+            o.max_queue = 16;
+            let mut engine = Engine::new(o).unwrap();
+            for i in 0..requests {
+                engine.submit(Request::new(
+                    i,
+                    p.clone(),
+                    GenParams {
+                        max_new_tokens: 6,
+                        eos: None,
+                        n,
+                        ..Default::default()
+                    },
+                ));
+            }
+            let mut results = engine.run_until_idle().unwrap();
+            results.sort_by_key(|r| r.id);
+            (results, engine)
+        };
+
+        let (forked, engine) = run(4, 1);
+        assert_eq!(forked.len(), 1, "n=4 is ONE aggregated result");
+        let res = &forked[0];
+        assert_eq!(res.branches.len(), 4);
+        for b in &res.branches {
+            assert_eq!(b.finish, FinishReason::MaxTokens);
+            assert_eq!(b.tokens.len(), 6);
+        }
+        // greedy ignores the per-branch rng: every sibling must decode
+        // the identical stream, matching a plain n=1 request
+        let (single, _) = run(1, 1);
+        for b in &res.branches {
+            assert_eq!(b.tokens, single[0].tokens);
+        }
+        assert_eq!(res.tokens, single[0].tokens, "back-compat view");
+
+        let m = &engine.metrics;
+        assert_eq!(m.forked_branches, 3, "n=4 forks three siblings");
+        assert!(
+            m.cow_forks >= 3,
+            "each sibling's first write must CoW-split the shared \
+             tail block (cow_forks={})",
+            m.cow_forks
+        );
+        assert_eq!(m.completed, 1, "n=4 counts as ONE completion");
+        assert_eq!(engine.kv_blocks_in_use(), 0, "drained: no leaks");
+        let forked_blocks = m.kv_blocks_allocated;
+
+        // baseline: 4 independent requests with the same prompt (the
+        // prefix cache is off, so nothing is shared between them)
+        let (indep, engine) = run(1, 4);
+        assert_eq!(indep.len(), 4);
+        for r in &indep {
+            assert_eq!(r.tokens, single[0].tokens);
+        }
+        assert!(
+            forked_blocks < engine.metrics.kv_blocks_allocated,
+            "n=4 fork allocated {} blocks, 4 independent requests {} \
+             — prompt sharing must allocate strictly fewer",
+            forked_blocks,
+            engine.metrics.kv_blocks_allocated
+        );
+    });
+}
+
+#[test]
+fn contiguous_engine_forks_siblings_by_deep_copy() {
+    // the ODYSSEY_NO_PAGING path serves n>1 by deep-copying the
+    // prompt's KV rows instead of CoW block sharing; the sampled
+    // branch streams must be bit-identical across both KV paths, and
+    // distinct branch seeds must make the siblings diverge.
+    with_engine(|_shared| {
+        let run = |paged: bool| {
+            let mut o = opts("fp");
+            o.paged = paged;
+            o.staging = true;
+            o.kv_block_size = 4;
+            o.max_queue = 16;
+            let mut engine = Engine::new(o).unwrap();
+            engine.submit(Request::new(
+                1,
+                prompt(9, 10),
+                GenParams {
+                    max_new_tokens: 6,
+                    eos: None,
+                    n: 2,
+                    temperature: 0.7,
+                    seed: 77,
+                    ..Default::default()
+                },
+            ));
+            engine.run_until_idle().unwrap()
+        };
+        let paged = run(true);
+        let contig = run(false);
+        assert_eq!(paged.len(), 1);
+        assert_eq!(contig.len(), 1);
+        assert_eq!(paged[0].branches.len(), 2);
+        assert_eq!(contig[0].branches.len(), 2);
+        for b in 0..2 {
+            assert_eq!(
+                paged[0].branches[b].tokens,
+                contig[0].branches[b].tokens,
+                "branch {b} diverged across KV paths"
+            );
+            assert_eq!(paged[0].branches[b].tokens.len(), 6);
+        }
+        assert_ne!(
+            paged[0].branches[0].tokens, paged[0].branches[1].tokens,
+            "sampled siblings draw from independent branch seeds"
+        );
+    });
+}
+
+#[test]
+fn preempted_sampled_streams_replay_bit_identical() {
+    // replayable-rng satellite: preemption re-prefills a sampled
+    // (temperature > 0) request and regenerates its stream from the
+    // same branch seed, so the paged tiny-pool run (which preempts)
+    // must produce streams bit-identical to the contiguous engine
+    // (which never preempts).
+    with_engine(|_shared| {
+        let submit_all = |engine: &mut Engine| {
+            for i in 0..16u64 {
+                let plen = 6 + (i as usize % 5);
+                let gen = 8 + (i as usize % 7);
+                engine.submit(Request::new(
+                    i,
+                    prompt(i as i32 + 2, plen),
+                    GenParams {
+                        max_new_tokens: gen,
+                        eos: None,
+                        temperature: 0.9,
+                        top_k: 40,
+                        top_p: 0.95,
+                        seed: 1234,
+                        ..Default::default()
+                    },
+                ));
+            }
+        };
+        let mut o = opts("fp");
+        o.paged = true;
+        o.staging = true;
+        o.kv_block_size = 4;
+        o.kv_blocks = Some(12);
+        o.max_queue = 32;
+        let mut engine = Engine::new(o).unwrap();
+        submit_all(&mut engine);
+        let mut paged_res = engine.run_until_idle().unwrap();
+        paged_res.sort_by_key(|r| r.id);
+        assert_eq!(paged_res.len(), 16, "every request completes");
+        for r in &paged_res {
+            assert_eq!(r.tokens.len(), 8 + (r.id as usize % 7));
+        }
+        assert!(
+            engine.metrics.preempted >= 1,
+            "a 12-block pool must force at least one preemption"
+        );
+
+        let mut o = opts("fp");
+        o.paged = false;
+        o.max_queue = 32;
+        let mut engine = Engine::new(o).unwrap();
+        submit_all(&mut engine);
+        let mut contig_res = engine.run_until_idle().unwrap();
+        contig_res.sort_by_key(|r| r.id);
+
+        let pt: Vec<&Vec<i32>> =
+            paged_res.iter().map(|r| &r.tokens).collect();
+        let ct: Vec<&Vec<i32>> =
+            contig_res.iter().map(|r| &r.tokens).collect();
+        assert_eq!(
+            pt, ct,
+            "preemption + seeded-rng replay must reproduce identical \
+             sampled streams"
+        );
+    });
+}
+
+#[test]
+fn nan_logits_finish_with_error_instead_of_panicking() {
+    // bugfix satellite: a NaN logits row used to panic the top-k
+    // sort's partial_cmp().unwrap() (and greedy argmax silently chose
+    // token 0).  The sampler now detects the poisoned row up front and
+    // finishes the branch with FinishReason::Error — on BOTH the
+    // greedy and the sampled path — while the engine thread survives.
+    with_engine(|_shared| {
+        for temperature in [0.0f32, 0.8] {
+            let mut o = opts("fp");
+            o.nan_logits_after = Some(3);
+            o.max_queue = 16;
+            let mut engine = Engine::new(o).unwrap();
+            for i in 0..3u64 {
+                engine.submit(Request::new(
+                    i,
+                    prompt(i as i32 + 4, 8),
+                    GenParams {
+                        max_new_tokens: 12,
+                        eos: None,
+                        temperature,
+                        seed: 5,
+                        ..Default::default()
+                    },
+                ));
+            }
+            let results = engine.run_until_idle().unwrap();
+            assert_eq!(results.len(), 3, "temperature={temperature}");
+            for r in &results {
+                assert_eq!(
+                    r.finish,
+                    FinishReason::Error,
+                    "temperature={temperature}: a NaN row must error \
+                     the request, not panic or emit token 0"
+                );
+                assert!(
+                    r.tokens.len() < 12,
+                    "temperature={temperature}: the stream stops at \
+                     the poisoned step"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn stop_sequences_finish_with_stop() {
+    with_engine(|engine| {
+        engine.submit(Request::new(
+            1,
+            prompt(3, 12),
+            GenParams {
+                max_new_tokens: 8,
+                eos: None,
+                ..Default::default()
+            },
+        ));
+        let r = engine.run_until_idle().unwrap();
+        let toks = r[0].tokens.clone();
+        assert_eq!(toks.len(), 8);
+        // stop on the 3rd+4th generated tokens: the greedy replay must
+        // halt right after emitting them (stop tokens stay in the
+        // output, matching the streamed frames)
+        engine.submit(Request::new(
+            2,
+            prompt(3, 12),
+            GenParams {
+                max_new_tokens: 8,
+                eos: None,
+                stop: vec![toks[2..4].to_vec()],
+                ..Default::default()
+            },
+        ));
+        let r = engine.run_until_idle().unwrap();
+        assert_eq!(r[0].finish, FinishReason::Stop);
+        assert_eq!(r[0].tokens, toks[..4].to_vec());
+    });
+}

@@ -5,6 +5,10 @@
 use odyssey::coordinator::kv::{BlockAllocator, KvState, PagedKv};
 use odyssey::coordinator::queue::{Admit, RequestQueue};
 use odyssey::coordinator::request::{GenParams, Request};
+use odyssey::coordinator::sampler::{
+    LogitsTransform, RepetitionPenalty, SampleCtx, SamplerRng,
+    SamplerStack, TopP,
+};
 use odyssey::exp::latency::random_gemm_args_with;
 use odyssey::formats::config::ModelInfo;
 use odyssey::formats::json::Json;
@@ -160,6 +164,182 @@ fn prop_queue_fifo_and_conservation() {
             assert!(q.len() <= cap);
         }
         assert_eq!(q.len(), expected.len());
+    });
+}
+
+// --------------------------------------------------------------- sampler
+
+/// Top-p keeps exactly the minimal highest-probability prefix whose
+/// cumulative mass reaches p: replicate the sort + f64 softmax + CDF
+/// walk independently and demand the surviving candidates match index
+/// for index, then check the mass bound and its minimality directly.
+#[test]
+fn prop_top_p_keeps_minimal_mass_prefix() {
+    Prop::new("top-p minimal mass prefix").cases(100).check(|rng| {
+        let v = 2 + (rng.next_u64() % 64) as usize;
+        let logits: Vec<f32> =
+            (0..v).map(|_| rng.normal_f32() * 3.0).collect();
+        let p = (0.05 + 0.9 * rng.next_f64()) as f32;
+        let mut cands: Vec<(usize, f32)> =
+            logits.iter().copied().enumerate().collect();
+        TopP(p).apply(&SampleCtx { prompt: &[], generated: &[] },
+                      &mut cands);
+        assert!(!cands.is_empty(), "top-p must keep a candidate");
+
+        // independent reference: sort desc (ties by vocab index), f64
+        // max-subtracted softmax, smallest prefix reaching p
+        let mut sorted: Vec<(usize, f32)> =
+            logits.iter().copied().enumerate().collect();
+        sorted.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        let maxv = sorted.iter().map(|c| c.1).fold(f32::MIN, f32::max);
+        let exps: Vec<f64> = sorted
+            .iter()
+            .map(|c| ((c.1 - maxv) as f64).exp())
+            .collect();
+        let z: f64 = exps.iter().sum();
+        let mut cum = 0.0f64;
+        let mut keep = sorted.len();
+        for (k, e) in exps.iter().enumerate() {
+            cum += e / z;
+            if cum >= p as f64 {
+                keep = k + 1;
+                break;
+            }
+        }
+        assert_eq!(cands, sorted[..keep].to_vec(), "p={p}");
+
+        // mass bound: kept mass reaches p, and dropping the last kept
+        // candidate would fall below it (minimality)
+        let mass: f64 = exps[..keep].iter().sum::<f64>() / z;
+        assert!(mass + 1e-9 >= p as f64, "mass {mass} < p {p}");
+        if keep > 1 {
+            let without_last: f64 =
+                exps[..keep - 1].iter().sum::<f64>() / z;
+            assert!(
+                without_last < p as f64,
+                "kept prefix is not minimal (p={p})"
+            );
+        }
+    });
+}
+
+/// The repetition penalty demotes tokens seen in the prompt or the
+/// generation and leaves every other logit BITWISE untouched — and it
+/// never drops a candidate.
+#[test]
+fn prop_repetition_penalty_only_demotes_seen() {
+    Prop::new("repetition penalty demotes only seen").cases(100).check(
+        |rng| {
+            let v = 8 + (rng.next_u64() % 56) as usize;
+            let logits: Vec<f32> =
+                (0..v).map(|_| rng.normal_f32() * 2.0).collect();
+            let prompt: Vec<i32> = (0..4)
+                .map(|_| (rng.next_u64() % v as u64) as i32)
+                .collect();
+            let generated: Vec<i32> = (0..3)
+                .map(|_| (rng.next_u64() % v as u64) as i32)
+                .collect();
+            let penalty = (1.05 + rng.next_f64()) as f32;
+            let ctx =
+                SampleCtx { prompt: &prompt, generated: &generated };
+            let mut cands: Vec<(usize, f32)> =
+                logits.iter().copied().enumerate().collect();
+            RepetitionPenalty(penalty).apply(&ctx, &mut cands);
+            assert_eq!(cands.len(), v, "penalty drops no candidates");
+            for (i, l) in &cands {
+                let seen = prompt
+                    .iter()
+                    .chain(generated.iter())
+                    .any(|&t| t as usize == *i);
+                let orig = logits[*i];
+                if seen {
+                    let want = if orig > 0.0 {
+                        orig / penalty
+                    } else {
+                        orig * penalty
+                    };
+                    assert_eq!(*l, want, "seen token {i}");
+                    assert!(*l <= orig, "penalty must demote, not boost");
+                } else {
+                    assert_eq!(
+                        l.to_bits(),
+                        orig.to_bits(),
+                        "unseen token {i} must be bitwise untouched"
+                    );
+                }
+            }
+        },
+    );
+}
+
+/// Whatever subset of transforms a request enables, the stack applies
+/// them in the FIXED canonical order: repetition penalty → temperature
+/// → top-k → top-p (neutral settings omitted).
+#[test]
+fn prop_sampler_stack_order_is_fixed() {
+    Prop::new("sampler stack order").cases(100).check(|rng| {
+        let penalty_on = rng.next_f64() < 0.5;
+        let top_k_on = rng.next_f64() < 0.5;
+        let top_p_on = rng.next_f64() < 0.5;
+        let p = GenParams {
+            temperature: 0.7,
+            repetition_penalty: if penalty_on { 1.2 } else { 1.0 },
+            top_k: if top_k_on { 5 } else { 0 },
+            top_p: if top_p_on { 0.9 } else { 1.0 },
+            ..Default::default()
+        };
+        let names = SamplerStack::from_params(&p).names();
+        let mut expect = Vec::new();
+        if penalty_on {
+            expect.push("repetition_penalty");
+        }
+        expect.push("temperature");
+        if top_k_on {
+            expect.push("top_k");
+        }
+        if top_p_on {
+            expect.push("top_p");
+        }
+        assert_eq!(names, expect);
+    });
+}
+
+/// The greedy bypass is the EXACT historical argmax (first max wins on
+/// ties) and consumes no rng draw — the seeded-stream back-compat
+/// contract for every pre-sampler request.
+#[test]
+fn prop_greedy_stack_is_exact_historical_argmax() {
+    Prop::new("greedy == historical argmax").cases(200).check(|rng| {
+        let v = 2 + (rng.next_u64() % 128) as usize;
+        let mut logits: Vec<f32> =
+            (0..v).map(|_| rng.normal_f32()).collect();
+        // inject ties sometimes: first-max-wins must be preserved
+        if rng.next_f64() < 0.3 {
+            let a = (rng.next_u64() % v as u64) as usize;
+            let b = (rng.next_u64() % v as u64) as usize;
+            logits[b] = logits[a];
+        }
+        // the pre-refactor inline loop, verbatim
+        let mut best = 0usize;
+        for (i, &x) in logits.iter().enumerate() {
+            if x > logits[best] {
+                best = i;
+            }
+        }
+        let stack = SamplerStack::from_params(&GenParams {
+            temperature: 0.0,
+            ..Default::default()
+        });
+        let mut srng = SamplerRng::new(rng.next_u64());
+        let got = stack
+            .sample(
+                &logits,
+                &SampleCtx { prompt: &[], generated: &[] },
+                &mut srng,
+            )
+            .unwrap();
+        assert_eq!(got, best as i32);
+        assert_eq!(srng.draws(), 0, "greedy must consume no draw");
     });
 }
 

@@ -172,6 +172,7 @@ fn finish_name(f: FinishReason) -> &'static str {
     match f {
         FinishReason::Eos => "eos",
         FinishReason::MaxTokens => "length",
+        FinishReason::Stop => "stop",
         FinishReason::Rejected => "rejected",
         FinishReason::Error => "error",
     }
@@ -276,6 +277,58 @@ fn concurrent_streaming_clients_each_get_ordered_frames() {
                 Some(done_tokens[i])
             );
         }
+    }
+}
+
+#[test]
+fn parallel_sampling_streams_branch_tagged_frames() {
+    let _g = lock();
+    let ts = start(engine_opts(), ServerOptions::default());
+    let toks = (0..24)
+        .map(|i| (3 + (i * 7) % 490).to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    let body = format!(
+        r#"{{"tokens":[{toks}],"max_new_tokens":6,"n":2,"temperature":0.8,"seed":11,"stream":true}}"#
+    );
+    let (status, _h, resp) =
+        post(ts.addr, "/generate", &body, 60).expect("stream request");
+    assert_eq!(status, 200, "body: {resp}");
+    let frames = parse_frames(&resp);
+    let (done, token_frames) =
+        frames.split_last().expect("at least a done frame");
+    assert_eq!(done.get("done").as_bool(), Some(true));
+
+    // the terminal frame carries one completion per branch, and its
+    // top-level tokens/finish mirror branch 0
+    let completions = done
+        .get("completions")
+        .as_arr()
+        .expect("n=2 result carries a completions array");
+    assert_eq!(completions.len(), 2);
+    assert_eq!(tokens_of(done), tokens_of(&completions[0]));
+
+    // token frames are branch-tagged; per branch they arrive ordered
+    // and gap-free and reassemble to that branch's completion
+    let mut per_branch: Vec<Vec<i32>> = vec![Vec::new(), Vec::new()];
+    for f in token_frames {
+        let b = f.get("branch").as_f64().expect("frame carries branch")
+            as usize;
+        assert!(b < 2, "branch index in range");
+        assert_eq!(
+            f.get("index").as_f64(),
+            Some(per_branch[b].len() as f64),
+            "per-branch frames are ordered with no gaps"
+        );
+        per_branch[b]
+            .push(f.get("token").as_f64().expect("token number") as i32);
+    }
+    for (b, c) in completions.iter().enumerate() {
+        assert_eq!(
+            per_branch[b],
+            tokens_of(c),
+            "branch {b} frames reassemble to its completion"
+        );
     }
 }
 
