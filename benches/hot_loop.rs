@@ -27,7 +27,7 @@ use odyssey::formats::json::Json;
 use odyssey::kernels::KernelChoice;
 use odyssey::model::{self, Checkpoint};
 use odyssey::quant::QuantRecipe;
-use odyssey::runtime::{self, KvBlockPool, Literal, Runtime};
+use odyssey::runtime::{self, KvBlockPool, KvDtype, Literal, Runtime};
 use odyssey::util::{merge_bench_records, Bencher};
 
 fn main() {
@@ -656,6 +656,121 @@ fn main() {
     )
     .expect("write BENCH_kernels.json");
     for r in &fork_records {
+        println!("BENCH {}", r.emit());
+    }
+
+    // ---- quantized KV capacity: bytes-equal pools.  An int8 block
+    // stores the same positions in 1/4 the arena bytes of an fp32
+    // block (the per-(block, head) scales are noise next to the
+    // payload), so at EQUAL arena bytes the int8 pool holds 4x the
+    // blocks.  Run the tiny-pool overload from the preemption test
+    // through both: the fp32 pool must thrash (preemptions fire), the
+    // int8 pool at the same byte budget must preempt strictly less —
+    // the capacity half of the quantized-KV story.  Token streams are
+    // deliberately NOT compared across dtypes: int8 is lossy.
+    let run_kv = |dtype: KvDtype, blocks: usize| {
+        let mut o = EngineOptions {
+            variant: "fp".into(),
+            recipe: QuantRecipe::vanilla_w4(),
+            max_queue: 32,
+            ..Default::default()
+        };
+        o.paged = true;
+        o.staging = true;
+        o.prefix_cache = false;
+        o.kv_block_size = 4;
+        o.kv_blocks = Some(blocks);
+        o.kv_quant = dtype;
+        let mut engine = Engine::new(o).expect("engine");
+        for i in 0..16u64 {
+            let plen = 6 + (i as usize % 5);
+            engine.submit(Request::new(
+                i,
+                (0..plen as i32)
+                    .map(|j| 3 + ((i as i32) * 13 + j) % 500)
+                    .collect(),
+                GenParams {
+                    max_new_tokens: 8 + (i as usize % 7),
+                    eos: None,
+                    ..Default::default()
+                },
+            ));
+        }
+        let t0 = std::time::Instant::now();
+        let mut results = engine.run_until_idle().expect("drain");
+        let dt = t0.elapsed().as_secs_f64();
+        results.sort_by_key(|r| r.id);
+        assert_eq!(results.len(), 16, "every request completes");
+        for r in &results {
+            assert_eq!(
+                r.tokens.len(),
+                8 + (r.id as usize % 7),
+                "request {} got a truncated stream ({})",
+                r.id,
+                dtype.name()
+            );
+        }
+        (engine, dt)
+    };
+    // fp32 gets the 12-block pool the preemption test proves too
+    // small; int8 gets 12 x elem_bytes(fp32) = 48 blocks — the SAME
+    // arena bytes, 4x the positions.
+    let kv_blocks_f = 12usize;
+    let kv_blocks_q = kv_blocks_f * KvDtype::F32.elem_bytes();
+    let (kv_f, kv_f_s) = run_kv(KvDtype::F32, kv_blocks_f);
+    let (kv_q, kv_q_s) = run_kv(KvDtype::Int8, kv_blocks_q);
+    let (m_f, m_q) = (&kv_f.metrics, &kv_q.metrics);
+    assert!(
+        m_f.preempted >= 1,
+        "the 12-block fp32 pool must force at least one preemption"
+    );
+    assert!(
+        m_q.preempted < m_f.preempted,
+        "int8 at equal arena bytes preempted {} times, fp32 {} — the \
+         4x block budget must buy residency",
+        m_q.preempted,
+        m_f.preempted
+    );
+    assert_eq!(m_f.completed, 16);
+    assert_eq!(m_q.completed, 16);
+    println!(
+        "kv quant capacity: fp32 {} blocks preempted {}x vs int8 {} \
+         blocks (equal arena bytes) preempted {}x (blocks allocated \
+         {} -> {}; drain {:.3}s -> {:.3}s)\n",
+        kv_blocks_f,
+        m_f.preempted,
+        kv_blocks_q,
+        m_q.preempted,
+        m_f.kv_blocks_allocated,
+        m_q.kv_blocks_allocated,
+        kv_f_s,
+        kv_q_s,
+    );
+    let kv_records = vec![Json::obj(vec![
+        ("bench", Json::Str("kv_quant_capacity".into())),
+        ("variant", Json::Str("fp".into())),
+        ("blocks_fp32", Json::Num(kv_blocks_f as f64)),
+        ("blocks_int8", Json::Num(kv_blocks_q as f64)),
+        ("preempted_fp32", Json::Num(m_f.preempted as f64)),
+        ("preempted_int8", Json::Num(m_q.preempted as f64)),
+        (
+            "kv_blocks_allocated_fp32",
+            Json::Num(m_f.kv_blocks_allocated as f64),
+        ),
+        (
+            "kv_blocks_allocated_int8",
+            Json::Num(m_q.kv_blocks_allocated as f64),
+        ),
+        ("drain_s_fp32", Json::Num(kv_f_s)),
+        ("drain_s_int8", Json::Num(kv_q_s)),
+    ])];
+    merge_bench_records(
+        "BENCH_kernels.json",
+        "kv_quant_capacity",
+        &kv_records,
+    )
+    .expect("write BENCH_kernels.json");
+    for r in &kv_records {
         println!("BENCH {}", r.emit());
     }
 }

@@ -126,6 +126,11 @@ SERVING FLAGS (generate / serve):
                                decode_batch * ceil(max_seq/block) —
                                the no-preemption worst case; smaller
                                caps KV memory, preemption absorbs it)
+  --kv-quant fp32|int8         paged-pool KV storage dtype (default
+                               fp32 — the bit-exact reference; int8
+                               stores 4x more positions per byte with
+                               per-(block,head) symmetric scales; env
+                               ODYSSEY_KV_QUANT also honored)
   --no-prefix-cache            disable cross-request prefix sharing on
                                the paged pool (default on; env
                                ODYSSEY_NO_PREFIX_CACHE=1 also honored)
@@ -160,6 +165,14 @@ pub fn parse_kv_flags(
             .parse()
             .map_err(|_| anyhow!("--kv-blocks expects an integer"))?;
         opts.kv_blocks = Some(n);
+    }
+    if let Some(v) = args.get("kv-quant") {
+        opts.kv_quant =
+            crate::runtime::KvDtype::parse(v).ok_or_else(|| {
+                anyhow!(
+                    "--kv-quant expects fp32|int8, got '{v}'"
+                )
+            })?;
     }
     if args.has("no-prefix-cache") {
         opts.prefix_cache = false;

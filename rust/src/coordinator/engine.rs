@@ -93,6 +93,14 @@ pub struct EngineOptions {
     /// default serving can never be starved into preemption.  Set it
     /// smaller to cap KV memory and let preemption absorb overload.
     pub kv_blocks: Option<usize>,
+    /// storage dtype of the paged KV pool: `fp32` (default — the
+    /// bit-exact reference) or `int8` (per-`(block, head)` symmetric
+    /// scales, ~4× more resident positions per pool at the cost of
+    /// quantization noise; gated by round-trip props and the
+    /// perplexity-delta bound rather than bit-exact parity).  Opt-IN
+    /// via `ODYSSEY_KV_QUANT=int8` / `--kv-quant int8`.  No effect on
+    /// the contiguous path.
+    pub kv_quant: runtime::KvDtype,
     /// share cached prompt prefixes across requests on the paged path
     /// (default; `ODYSSEY_NO_PREFIX_CACHE=1` / `--no-prefix-cache`
     /// flips the default off — the escape hatch the prefix parity
@@ -152,6 +160,7 @@ impl Default for EngineOptions {
             paged: runtime::paging_enabled_from_env(),
             kv_block_size: 16,
             kv_blocks: None,
+            kv_quant: runtime::kv_quant_from_env(),
             prefix_cache: runtime::prefix_cache_enabled_from_env(),
             prefix_cache_cap: None,
             chunking: runtime::chunking_enabled_from_env(),
@@ -465,6 +474,7 @@ impl Engine {
                     bs,
                     blocks,
                 )
+                .with_kv_dtype(opts.kv_quant)
                 .with_prefix_cache(opts.prefix_cache)
                 .with_prefix_cap(
                     opts.prefix_cache_cap.unwrap_or(blocks),
@@ -488,9 +498,10 @@ impl Engine {
             if staged_decode.is_some() { "on" } else { "off" },
             match &kv {
                 KvBacking::Paged(p) => format!(
-                    "on({}x{}{})",
+                    "on({}x{},{}{})",
                     p.pool.n_blocks,
                     p.pool.block_size,
+                    p.pool.dtype().name(),
                     if p.prefix_cache_enabled() {
                         ",prefix-cache"
                     } else {
@@ -671,6 +682,8 @@ impl Engine {
     pub fn step(&mut self) -> Result<bool> {
         self.step_counter += 1;
         self.metrics.engine_steps += 1;
+        self.metrics.peak_queue_depth =
+            self.metrics.peak_queue_depth.max(self.pending() as u64);
         if let Some(n) = self.opts.fail_step_after {
             if self.step_counter >= n {
                 bail!("injected step failure (fail_step_after={n})");

@@ -60,6 +60,10 @@ pub enum StreamEvent {
 pub struct EngineHandle {
     tx: Sender<Cmd>,
     next_id: std::sync::Arc<std::sync::atomic::AtomicU64>,
+    /// live engine backlog (queued + active + mid-prefill), published
+    /// by the engine thread once per iteration; server threads read it
+    /// lock-free to stamp `X-Queue-Depth` on shed responses
+    depth: std::sync::Arc<std::sync::atomic::AtomicUsize>,
 }
 
 /// The engine thread plus its handle.
@@ -74,9 +78,12 @@ impl EngineService {
     pub fn spawn(opts: EngineOptions) -> Result<Self> {
         let (tx, rx) = mpsc::channel::<Cmd>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let depth =
+            std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let depth_pub = depth.clone();
         let join = std::thread::Builder::new()
             .name("odyssey-engine".into())
-            .spawn(move || engine_thread(opts, rx, ready_tx))?;
+            .spawn(move || engine_thread(opts, rx, ready_tx, depth_pub))?;
         // wait for engine construction (compile etc.)
         ready_rx
             .recv()
@@ -87,6 +94,7 @@ impl EngineService {
                 next_id: std::sync::Arc::new(
                     std::sync::atomic::AtomicU64::new(1),
                 ),
+                depth,
             },
             join: Some(join),
         })
@@ -147,6 +155,14 @@ impl EngineHandle {
             ))
             .map_err(|_| anyhow!("engine gone"))?;
         Ok(rx)
+    }
+
+    /// Engine backlog as of the last engine iteration (queued +
+    /// active + mid-prefill sequences).  Lock-free; may lag the true
+    /// depth by one iteration.  Exported on 429 shed responses as the
+    /// `X-Queue-Depth` header so clients can scale their backoff.
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Engine metrics snapshot (formatted).
@@ -210,6 +226,7 @@ fn engine_thread(
     opts: EngineOptions,
     rx: Receiver<Cmd>,
     ready: Sender<Result<()>>,
+    depth: std::sync::Arc<std::sync::atomic::AtomicUsize>,
 ) {
     let mut engine = match Engine::new(opts) {
         Ok(e) => {
@@ -285,6 +302,13 @@ fn engine_thread(
                 Some(Cmd::Shutdown) => break 'outer,
                 None => break,
             }
+            // publish the backlog after every accepted/shed command so
+            // a rejection's X-Queue-Depth reflects the submit that was
+            // just refused, not the previous iteration's depth
+            depth.store(
+                engine.pending(),
+                std::sync::atomic::Ordering::Relaxed,
+            );
         }
         // 2. one engine iteration
         match engine.step() {
@@ -315,6 +339,7 @@ fn engine_thread(
                 let _ = w.tx.send(StreamEvent::Done(res));
             }
         }
+        depth.store(engine.pending(), std::sync::atomic::Ordering::Relaxed);
     }
     // Shutdown / handle-disconnect: nothing new will be accepted, but
     // whatever is still in flight must resolve — abort and deliver the

@@ -576,6 +576,26 @@ impl PagedKv {
         }
     }
 
+    /// Rebuild the pool with a storage dtype (builder style,
+    /// construction time only — the pool is still empty).  Int8 cuts
+    /// resident KV bytes ~4× at the cost of quantization noise; the
+    /// allocator, tables, prefix index, and CoW machinery are all
+    /// dtype-oblivious (they deal in block ids, and the pool clones
+    /// scales alongside data on `copy_block`).
+    pub fn with_kv_dtype(mut self, dtype: crate::runtime::KvDtype) -> Self {
+        if self.pool.dtype() != dtype {
+            self.pool = KvBlockPool::with_dtype(
+                self.pool.n_blocks,
+                self.pool.block_size,
+                self.pool.n_layers,
+                self.pool.n_heads,
+                self.pool.head_dim,
+                dtype,
+            );
+        }
+        self
+    }
+
     /// Toggle the prefix cache (builder style, construction time only:
     /// disabling after donations would strand the index holds).
     /// Enabled by default with an LRU cap of the pool size.

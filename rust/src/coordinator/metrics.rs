@@ -46,6 +46,11 @@ pub struct EngineMetrics {
     /// engine iterations run (the clock the step-count latencies tick
     /// against)
     pub engine_steps: u64,
+    /// PEAK queue depth observed across engine steps (waiting +
+    /// active + chunk-scheduled) — the live gauge is exported on 429
+    /// shed responses as `X-Queue-Depth` so clients can scale their
+    /// backoff to how far behind the engine is
+    pub peak_queue_depth: u64,
     /// worst streak of consecutive engine iterations in which an
     /// ACTIVE sequence received no decode token (head-of-line
     /// blocking: a whole-prompt prefill stalling the decode batch).
@@ -123,7 +128,8 @@ impl EngineMetrics {
              {} blocks allocated\n\
              prefill: {} steps, {} tokens, {:.1} tok/s ({:.3}s total)\n\
              decode : {} steps, {} tokens, {:.1} tok/s ({:.3}s total)\n\
-             sched  : {} engine steps, max decode stall {} steps, \
+             sched  : {} engine steps, peak queue depth {}, \
+             max decode stall {} steps, \
              ttft p50/p95 {:.1}/{:.1} steps, itl p50/p95 {:.1}/{:.1} \
              steps\n\
              ttft   : {}\n\
@@ -148,6 +154,7 @@ impl EngineMetrics {
             self.decode_tps(),
             self.decode_time_s,
             self.engine_steps,
+            self.peak_queue_depth,
             self.max_decode_stall_steps,
             self.ttft_steps.p50(),
             self.ttft_steps.p95(),

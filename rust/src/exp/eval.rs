@@ -87,6 +87,14 @@ pub fn load_corpus(artifacts_dir: &str, split: &str) -> Result<Vec<u16>> {
 pub struct Evaluator {
     rt: Runtime,
     staged: StagedGraph,
+    /// decode graph sharing `staged`'s weights, staged lazily on the
+    /// first [`Evaluator::decode_perplexity`] call
+    decode_staged: Option<StagedGraph>,
+    model: String,
+    variant: String,
+    n_layers: usize,
+    n_heads: usize,
+    head_dim: usize,
     pub batch: usize,
     pub seq: usize,
     pub vocab: usize,
@@ -175,6 +183,12 @@ impl Evaluator {
         Ok(Evaluator {
             rt,
             staged,
+            decode_staged: None,
+            model: model_name.to_string(),
+            variant: variant.to_string(),
+            n_layers: info.n_layers,
+            n_heads: info.n_heads,
+            head_dim: info.head_dim,
             batch: gi.batch,
             seq: gi.seq,
             vocab: info.vocab,
@@ -226,6 +240,101 @@ impl Evaluator {
                     let target = corpus[st + i + 1] as usize;
                     let off = (row * s + i) * v;
                     nll -= log_softmax_at(&logits[off..off + v], target);
+                    count += 1;
+                }
+            }
+        }
+        Ok((nll / count as f64).exp())
+    }
+
+    /// Held-out perplexity measured through the PAGED DECODE path:
+    /// corpus windows are fed one position at a time through the
+    /// decode graph, so every prediction reads its whole history back
+    /// out of a [`runtime::KvBlockPool`] of the requested `dtype`.
+    /// This is the quality gate that actually exercises KV storage —
+    /// the prefill-graph [`Evaluator::perplexity`] computes attention
+    /// from fresh f32 activations and never reads the pool, so
+    /// quantized KV cannot move it.
+    ///
+    /// `window` positions per stream, `max_windows` streams (rounded
+    /// down to whole decode batches).  Deterministic for a fixed
+    /// corpus, so an fp32-vs-int8 delta is pure KV quantization
+    /// noise.
+    pub fn decode_perplexity(
+        &mut self,
+        corpus: &[u16],
+        window: usize,
+        max_windows: usize,
+        dtype: runtime::KvDtype,
+    ) -> Result<f64> {
+        if self.decode_staged.is_none() {
+            let graph = self.rt.manifest.stage_graph(
+                &self.model,
+                &self.variant,
+                "decode",
+                self.batch,
+            );
+            self.decode_staged =
+                Some(self.rt.stage_shared(&graph, &self.staged)?);
+        }
+        let staged = self.decode_staged.as_ref().unwrap();
+        let (b, v) = (staged.info.batch, self.vocab);
+        let win = window.max(2);
+        let mut starts: Vec<usize> = Vec::new();
+        let mut pos = 0usize;
+        while pos + win + 1 < corpus.len() && starts.len() < max_windows {
+            starts.push(pos);
+            pos += win;
+        }
+        if starts.len() < b {
+            bail!(
+                "decode_perplexity: corpus too short for one batch of \
+                 {b} windows of {win} positions"
+            );
+        }
+        starts.truncate(starts.len() - starts.len() % b);
+        let block_size = 16usize;
+        let blocks_per_row = win.div_ceil(block_size);
+        let mut nll = 0f64;
+        let mut count = 0usize;
+        for block in starts.chunks_exact(b) {
+            // fresh pool per batch of streams: each row owns a
+            // striped run of blocks, table built up front (the native
+            // loops only touch rows `0..=pos`)
+            let mut pool = runtime::KvBlockPool::with_dtype(
+                b * blocks_per_row,
+                block_size,
+                self.n_layers,
+                self.n_heads,
+                self.head_dim,
+                dtype,
+            );
+            let tables_owned: Vec<Vec<u32>> = (0..b)
+                .map(|bi| {
+                    (0..blocks_per_row)
+                        .map(|j| (bi * blocks_per_row + j) as u32)
+                        .collect()
+                })
+                .collect();
+            let tables: Vec<&[u32]> =
+                tables_owned.iter().map(Vec::as_slice).collect();
+            for p in 0..win - 1 {
+                let token: Vec<i32> = block
+                    .iter()
+                    .map(|&st| corpus[st + p] as i32)
+                    .collect();
+                let posv = vec![p as i32; b];
+                let out = self.rt.run_decode_paged(
+                    staged, &token, &posv, &mut pool, &tables,
+                )?;
+                let logits = runtime::literal_to_f32(&out, b * v)?;
+                for (row, &st) in block.iter().enumerate() {
+                    let target = corpus[st + p + 1] as usize;
+                    let off = row * v;
+                    nll -= log_softmax_at(
+                        &logits[off..off + v],
+                        target,
+                    );
                     count += 1;
                 }
             }

@@ -98,6 +98,29 @@ pub fn axpy_f32(out: &mut [f32], scale: f32, v: &[f32]) {
     }
 }
 
+/// Dot of an f32 query row against an int8 key row (quantized KV
+/// path): the caller multiplies the result by the row's dequant scale
+/// — one multiply per row instead of `Dh` materialized dequants.
+#[inline]
+pub fn dot_q8_f32(a: &[f32], q: &[i8]) -> f32 {
+    debug_assert_eq!(a.len(), q.len());
+    let mut acc = 0f32;
+    for (x, y) in a.iter().zip(q.iter()) {
+        acc += x * (*y as f32);
+    }
+    acc
+}
+
+/// `out += scale * q` over an int8 value row (quantized KV path); the
+/// dequant scale is folded into `scale` by the caller.
+#[inline]
+pub fn axpy_q8_f32(out: &mut [f32], scale: f32, q: &[i8]) {
+    debug_assert_eq!(out.len(), q.len());
+    for (o, x) in out.iter_mut().zip(q.iter()) {
+        *o += scale * (*x as f32);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -774,7 +774,7 @@ mod tests {
 
     fn mk_xq(m: usize, k: usize, seed: u64) -> (Tensor<i8>, Vec<f32>) {
         let x = Tensor::randn(&[m, k], seed);
-        scale::quant_act_per_token(&x)
+        scale::quant_act_per_token(&x).unwrap()
     }
 
     fn sets() -> Vec<Box<dyn KernelSet>> {
@@ -826,7 +826,7 @@ mod tests {
         let (m, k, n) = (2, 16, 4);
         let group = 8;
         let x = Tensor::randn(&[m, k], 11);
-        let (xq, s_a) = scale::quant_act_per_token(&x);
+        let (xq, s_a) = scale::quant_act_per_token(&x).unwrap();
         let wf = Tensor::randn(&[k, n], 12);
         let (q, s_g) = rtn::rtn_per_group(&wf, group, 4);
         let wdeq = rtn::dequant_per_group(&q, &s_g, group);

@@ -74,6 +74,14 @@ pub fn rtn_per_group(
 }
 
 /// Asymmetric per-channel RTN (UINT).  Returns (u u8[K,N], s, z).
+///
+/// Channels with a zero / non-finite scale quantize to `u = z` (which
+/// dequantizes to an explicit 0), mirroring the symmetric guard in
+/// [`quantize_with_channel_scales`] — `row[j] / 0.0` would otherwise
+/// push NaN through the clamp-and-cast.  A NaN element in an otherwise
+/// healthy channel also lands on `u = z` (the clamp propagates NaN and
+/// the cast saturates it to 0, i.e. below `z`) — pinned down here so
+/// degenerate inputs stay deterministic.
 pub fn rtn_per_channel_asym(
     w: &Tensor<f32>,
     bits: u32,
@@ -86,11 +94,53 @@ pub fn rtn_per_channel_asym(
         let row = w.row(i);
         let urow = u.row_mut(i);
         for j in 0..n {
-            urow[j] =
-                ((row[j] / s[j]).round() + z[j] as f32).clamp(0.0, qmax) as u8;
+            urow[j] = if s[j] > 0.0 && s[j].is_finite() {
+                let q = (row[j] / s[j]).round() + z[j] as f32;
+                if q.is_finite() {
+                    q.clamp(0.0, qmax) as u8
+                } else {
+                    z[j].clamp(0, qmax as i32) as u8
+                }
+            } else {
+                // degenerate scale: emit the zero point (dequant == 0)
+                z[j].clamp(0, qmax as i32) as u8
+            };
         }
     }
     (u, s, z)
+}
+
+/// Quantize one row at a FIXED symmetric int8 scale — the paged KV
+/// cache's write primitive (the scale is owned per `(block, head)` by
+/// [`crate::runtime::KvBlockPool`], not recomputed per row).  Non-finite
+/// inputs quantize to 0 deterministically.
+#[inline]
+pub fn quantize_row_i8(xs: &[f32], s: f32, out: &mut [i8]) {
+    debug_assert!(s > 0.0 && s.is_finite(), "quantize_row_i8 scale {s}");
+    for (q, &x) in out.iter_mut().zip(xs) {
+        let r = (x / s).round();
+        *q = if r.is_finite() { r.clamp(-127.0, 127.0) as i8 } else { 0 };
+    }
+}
+
+/// Re-quantize an int8 row in place by `ratio = s_old / s_new < 1` —
+/// the scale-widening step when a new KV row's amax exceeds its
+/// block's current scale.
+#[inline]
+pub fn rescale_row_i8(q: &mut [i8], ratio: f32) {
+    for v in q.iter_mut() {
+        *v = (*v as f32 * ratio).round().clamp(-127.0, 127.0) as i8;
+    }
+}
+
+/// Dequantize an int8 row at a fixed scale into `out` — the paged KV
+/// cache's read primitive.
+#[inline]
+pub fn dequant_row_i8(q: &[i8], s: f32, out: &mut [f32]) {
+    debug_assert_eq!(q.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(q) {
+        *o = v as f32 * s;
+    }
 }
 
 /// Dequantize per-channel int weights back to f32 (for MSE studies).
@@ -219,6 +269,68 @@ mod tests {
         for &v in q.data() {
             assert!((-8..=7).contains(&(v as i32)));
         }
+    }
+
+    #[test]
+    fn prop_asym_degenerate_columns_are_safe() {
+        // constant / all-zero / single-outlier columns must produce a
+        // finite positive scale, an in-range zero point, and a bounded
+        // dequant error (the constant case used to dequantize to ~0)
+        Prop::new("asym degenerate columns").cases(30).check(|rng| {
+            let k = 4 + (rng.next_u64() % 12) as usize;
+            let c = ((rng.next_u64() % 2001) as f32 - 1000.0) / 100.0;
+            let mut w = Tensor::<f32>::zeros(&[k, 3]);
+            for i in 0..k {
+                w.set2(i, 0, c); // constant column
+                // col 1 stays all-zero
+            }
+            // single outlier in an otherwise-zero column
+            let oi = (rng.next_u64() % k as u64) as usize;
+            w.set2(oi, 2, c.abs() + 1.0);
+            let (u, s, z) = rtn_per_channel_asym(&w, 4);
+            for j in 0..3 {
+                assert!(s[j] > 0.0 && s[j].is_finite(), "col {j} scale");
+                assert!((0..=15).contains(&z[j]), "col {j} zero point");
+            }
+            for i in 0..k {
+                for j in 0..3 {
+                    assert!(u.at2(i, j) <= 15);
+                    let deq =
+                        (u.at2(i, j) as i32 - z[j]) as f32 * s[j];
+                    assert!(
+                        (deq - w.at2(i, j)).abs() <= s[j] + 1e-5,
+                        "col {j} row {i}: {} -> {deq} (s={})",
+                        w.at2(i, j),
+                        s[j]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn kv_row_helpers_roundtrip_and_rescale() {
+        let xs = [0.9f32, -0.3, 0.05, -1.2];
+        let s = crate::quant::scale::sym_row_scale(&xs);
+        let mut q = [0i8; 4];
+        quantize_row_i8(&xs, s, &mut q);
+        let mut back = [0f32; 4];
+        dequant_row_i8(&q, s, &mut back);
+        for (b, x) in back.iter().zip(&xs) {
+            assert!((b - x).abs() <= s * 0.5 + 1e-7);
+        }
+        // widening by 2x: values keep their magnitude within one new
+        // quantum after the int8 -> int8 rescale
+        let s2 = s * 2.0;
+        rescale_row_i8(&mut q, s / s2);
+        let mut wide = [0f32; 4];
+        dequant_row_i8(&q, s2, &mut wide);
+        for (w, x) in wide.iter().zip(&xs) {
+            assert!((w - x).abs() <= s2 + 1e-7, "{w} vs {x}");
+        }
+        // NaN input quantizes to an explicit 0
+        quantize_row_i8(&[f32::NAN; 4], s, &mut q);
+        assert_eq!(q, [0i8; 4]);
     }
 
     #[test]

@@ -1,6 +1,9 @@
 //! Scale computation for every granularity in the paper's glossary
 //! (Sec. 3): per-token (activations), per-channel and per-group (weights),
-//! symmetric and asymmetric.
+//! symmetric and asymmetric — plus the single-row granularity the
+//! quantized KV cache uses (one symmetric scale per `(block, head)`).
+
+use anyhow::{bail, Result};
 
 use crate::tensor::Tensor;
 
@@ -8,13 +11,32 @@ use super::INT8_MAX;
 
 /// Per-token symmetric INT8 activation quantization (`RTN-pt`).
 /// Returns (q s8[M,K], s f32[M]).
-pub fn quant_act_per_token(x: &Tensor<f32>) -> (Tensor<i8>, Vec<f32>) {
+///
+/// A non-finite activation is an error: `f32::max` silently DROPS NaN
+/// from the amax fold, so a poisoned row used to quantize to garbage
+/// int8 that only blew up (or worse, didn't) thousands of ops later.
+/// Matching the sampler's `NanLogits` convention, the poison surfaces
+/// here as an error the engine turns into a per-request failure.
+pub fn quant_act_per_token(
+    x: &Tensor<f32>,
+) -> Result<(Tensor<i8>, Vec<f32>)> {
     let (m, k) = (x.rows(), x.cols());
     let mut q = Tensor::<i8>::zeros(&[m, k]);
     let mut scales = Vec::with_capacity(m);
     for i in 0..m {
         let row = x.row(i);
-        let amax = row.iter().fold(0f32, |a, v| a.max(v.abs()));
+        let mut amax = 0f32;
+        let mut finite = true;
+        for &v in row {
+            finite &= v.is_finite();
+            amax = amax.max(v.abs());
+        }
+        if !finite {
+            bail!(
+                "quant_act_per_token: non-finite activation in row {i} \
+                 (NaN/inf-poisoned input)"
+            );
+        }
         let s = (amax / INT8_MAX as f32).max(1e-8);
         scales.push(s);
         let qrow = q.row_mut(i);
@@ -23,7 +45,18 @@ pub fn quant_act_per_token(x: &Tensor<f32>) -> (Tensor<i8>, Vec<f32>) {
                                             INT8_MAX as f32) as i8;
         }
     }
-    (q, scales)
+    Ok((q, scales))
+}
+
+/// Symmetric int8 scale for ONE contiguous row of values — the KV
+/// cache's per-`(block, head)` granularity: `amax / 127` with the same
+/// epsilon floor as the per-token activation path.  Infallible: the KV
+/// write path cannot reject a row (a NaN-poisoned step is caught at
+/// the logits by the sampler's NanLogits handling), so NaNs fall out
+/// of the amax fold and quantize to 0 downstream.
+pub fn sym_row_scale(xs: &[f32]) -> f32 {
+    let amax = xs.iter().fold(0f32, |a, v| a.max(v.abs()));
+    (amax / INT8_MAX as f32).max(1e-8)
 }
 
 /// Symmetric per-output-channel scales (paper Eq. 9), with optional LWC
@@ -72,6 +105,14 @@ pub fn sym_per_group_scales(
 
 /// Asymmetric per-channel (UINT) scales + zero points.
 /// Returns (s f32[N], z i32[N]).
+///
+/// Degenerate columns are clamped like the symmetric path: a constant
+/// column (`hi == lo`) has zero range, and the raw `range / qmax`
+/// scale collapsed to the epsilon — the zero point then saturated and
+/// the column dequantized to garbage.  Such columns fall back to an
+/// absmax scale (a constant column round-trips exactly); an all-zero
+/// column keeps the epsilon floor with `z = 0`, and a non-finite
+/// column degrades to the same safe pair instead of emitting NaN.
 pub fn asym_per_channel_scales(
     w: &Tensor<f32>,
     bits: u32,
@@ -82,9 +123,22 @@ pub fn asym_per_channel_scales(
     let mut s = Vec::with_capacity(w.cols());
     let mut z = Vec::with_capacity(w.cols());
     for j in 0..w.cols() {
-        let sj = ((hi[j] - lo[j]) / qmax).max(1e-12);
+        let (h, l) = (hi[j], lo[j]);
+        let range = h - l;
+        let sj = if range.is_finite() && range > 0.0 {
+            (range / qmax).max(1e-12)
+        } else {
+            // constant / all-zero / non-finite column: absmax fallback
+            (h.abs().max(l.abs()) / qmax).max(1e-12)
+        };
+        let sj = if sj.is_finite() { sj } else { 1e-12 };
         s.push(sj);
-        z.push((-lo[j] / sj).round().clamp(0.0, qmax) as i32);
+        let zf = (-l / sj).round();
+        z.push(if zf.is_finite() {
+            zf.clamp(0.0, qmax) as i32
+        } else {
+            0
+        });
     }
     (s, z)
 }
@@ -96,7 +150,7 @@ mod tests {
     #[test]
     fn act_quant_roundtrips_within_step() {
         let x = Tensor::from_vec(&[2, 3], vec![1.0, -2.0, 0.5, 10.0, 0.0, -5.0]);
-        let (q, s) = quant_act_per_token(&x);
+        let (q, s) = quant_act_per_token(&x).unwrap();
         for i in 0..2 {
             for j in 0..3 {
                 let deq = q.at2(i, j) as f32 * s[i];
@@ -110,9 +164,35 @@ mod tests {
     #[test]
     fn act_quant_zero_row_safe() {
         let x = Tensor::<f32>::zeros(&[1, 4]);
-        let (q, s) = quant_act_per_token(&x);
+        let (q, s) = quant_act_per_token(&x).unwrap();
         assert!(s[0] > 0.0);
         assert_eq!(q.data(), &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn act_quant_rejects_nan_poisoned_rows() {
+        // regression: f32::max drops NaN from the amax fold, so a
+        // poisoned row used to quantize to garbage int8 silently
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let x = Tensor::from_vec(&[2, 2], vec![1.0, bad, 0.5, -2.0]);
+            let err = quant_act_per_token(&x).unwrap_err();
+            assert!(
+                err.to_string().contains("row 0"),
+                "error must name the poisoned row: {err}"
+            );
+        }
+        // clean rows still pass
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, -1.0]);
+        assert!(quant_act_per_token(&x).is_ok());
+    }
+
+    #[test]
+    fn sym_row_scale_matches_per_token_granularity() {
+        let xs = [1.0f32, -3.0, 0.5];
+        assert!((sym_row_scale(&xs) - 3.0 / 127.0).abs() < 1e-9);
+        assert_eq!(sym_row_scale(&[0.0, 0.0]), 1e-8, "epsilon floor");
+        // NaN drops out of the fold instead of poisoning the scale
+        assert!(sym_row_scale(&[f32::NAN, 2.0]).is_finite());
     }
 
     #[test]
@@ -161,5 +241,36 @@ mod tests {
         let hi = (15 - z[0]) as f32 * s[0];
         // zero-point rounding can cost up to one quantization step
         assert!(lo <= -0.3 + s[0] && hi >= 0.5 - s[0]);
+    }
+
+    #[test]
+    fn asym_constant_column_roundtrips_exactly() {
+        // regression: hi == lo used to collapse the scale to the
+        // epsilon, saturating the zero point and dequantizing a
+        // constant column to ~0
+        for c in [5.0f32, -5.0, 0.25] {
+            let w = Tensor::from_vec(&[3, 1], vec![c; 3]);
+            let (s, z) = asym_per_channel_scales(&w, 4);
+            assert!(s[0].is_finite() && s[0] > 1e-9, "real scale, not eps");
+            assert!((0..=15).contains(&z[0]), "zero point in range");
+            let q = ((c / s[0]).round() + z[0] as f32).clamp(0.0, 15.0);
+            let deq = (q - z[0] as f32) * s[0];
+            assert!(
+                (deq - c).abs() <= s[0] * 0.5 + 1e-6,
+                "constant {c} dequantized to {deq}"
+            );
+        }
+    }
+
+    #[test]
+    fn asym_all_zero_and_nonfinite_columns_are_safe() {
+        let w = Tensor::<f32>::zeros(&[4, 1]);
+        let (s, z) = asym_per_channel_scales(&w, 4);
+        assert!(s[0] > 0.0 && s[0].is_finite());
+        assert_eq!(z[0], 0);
+        let w = Tensor::from_vec(&[2, 1], vec![f32::NAN, f32::NAN]);
+        let (s, z) = asym_per_channel_scales(&w, 4);
+        assert!(s[0] > 0.0 && s[0].is_finite(), "NaN column scale");
+        assert!((0..=15).contains(&z[0]), "NaN column zero point");
     }
 }

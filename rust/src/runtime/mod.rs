@@ -93,7 +93,7 @@ pub mod paged;
 pub mod pjrt;
 pub mod synth;
 
-pub use paged::KvBlockPool;
+pub use paged::{KvBlockPool, KvDtype};
 
 // ---------------------------------------------------------------------
 // host values
@@ -1122,6 +1122,28 @@ pub fn chunking_enabled_from_env() -> bool {
         std::env::var("ODYSSEY_NO_CHUNKING").as_deref(),
         Ok("1") | Ok("true")
     )
+}
+
+/// `ODYSSEY_KV_QUANT=int8` opts the paged KV pool into quantized int8
+/// block storage (per-`(block, head)` symmetric scales, ~4× less
+/// resident KV).  Unlike the `ODYSSEY_NO_*` hatches this knob is
+/// opt-IN: unset / `fp32` / `off` keep the f32 pool, which remains the
+/// bit-exact reference path.  An unrecognized value is loudly logged
+/// (once) and ignored rather than silently quantizing.
+pub fn kv_quant_from_env() -> KvDtype {
+    match std::env::var("ODYSSEY_KV_QUANT") {
+        Ok(v) => KvDtype::parse(&v).unwrap_or_else(|| {
+            static WARNED: std::sync::Once = std::sync::Once::new();
+            WARNED.call_once(|| {
+                crate::util::log::error(&format!(
+                    "ignoring invalid ODYSSEY_KV_QUANT='{v}' \
+                     (expected int8 | fp32); using fp32"
+                ));
+            });
+            KvDtype::F32
+        }),
+        Err(_) => KvDtype::F32,
+    }
 }
 
 /// `ODYSSEY_STEP_TOKEN_BUDGET=N` overrides the engine's per-iteration

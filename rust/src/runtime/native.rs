@@ -27,8 +27,8 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::formats::config::{GraphInfo, GraphKind, Manifest, ModelInfo};
 use crate::kernels::elementwise::{
-    apply_rope_row, axpy_f32, dot_f32, rms_norm, rope_row, silu,
-    softmax_inplace, NEG_INF,
+    apply_rope_row, axpy_f32, axpy_q8_f32, dot_f32, dot_q8_f32, rms_norm,
+    rope_row, silu, softmax_inplace, NEG_INF,
 };
 use crate::kernels::gemm::{
     gemm_w4a16_with, gemm_w4a8_asym_with, gemm_w4a8_unfused_with,
@@ -37,6 +37,7 @@ use crate::kernels::{kernel_set, KernelChoice, KernelSet};
 use crate::quant::{scale, WeightFormat};
 use crate::tensor::Tensor;
 
+use super::paged::{quant_store_head, KvDtype};
 use super::{ExecBackend, StagedGraph, StagedHandle, StagingStats, Value};
 
 // The kernel reference API lived in this module before the kernels
@@ -133,7 +134,7 @@ fn linear_group(
     group: usize,
 ) -> Result<Vec<Tensor<f32>>> {
     if quant_act {
-        let (xq, s_a) = scale::quant_act_per_token(x2d);
+        let (xq, s_a) = scale::quant_act_per_token(x2d)?;
         mats.iter()
             .map(|m| m.apply(ks, x2d, Some((&xq, s_a.as_slice())), group))
             .collect()
@@ -926,49 +927,123 @@ fn decode_core_paged(
             apply_rope_row(kk.row_mut(bi), nh, dh, c, sn);
         }
 
-        // write k/v at pos through the table, then attend over the pages
-        let (kc, vc) = pool.layer_mut(li);
+        // write k/v at pos through the table, then attend over the
+        // pages.  f32 pools run the bit-exact reference loop; int8
+        // pools quantize the new row on write (per-(block, head)
+        // scales) and fold the dequant scale into each history read —
+        // kv_bytes counts the bytes ACTUALLY stored, so the int8 win
+        // is visible (not 4x overstated) in kv_bytes_moved.
         let mut o = Tensor::<f32>::zeros(&[b, d]);
-        for bi in 0..b {
-            if !active[bi] {
-                continue;
-            }
-            let table = tables[bi];
-            let p = pos[bi] as usize;
-            // page address of (position, head 0); validated above, so
-            // every `q <= p` resolves
-            let locate = |q: usize| -> usize {
-                (table[q / bs] as usize * bs + q % bs) * row_stride
-            };
-            let dst = locate(p);
-            for h in 0..nh {
-                kc[dst + h * dh..dst + (h + 1) * dh]
-                    .copy_from_slice(&kk.row(bi)[h * dh..(h + 1) * dh]);
-                vc[dst + h * dh..dst + (h + 1) * dh]
-                    .copy_from_slice(&vv.row(bi)[h * dh..(h + 1) * dh]);
-            }
-            kv_bytes += (2 * nh * dh * 4) as u64;
-            for h in 0..nh {
-                let qh = &qq.row(bi)[h * dh..(h + 1) * dh];
-                for (ki, sc) in scores.iter_mut().enumerate() {
-                    if ki <= p {
-                        let off = locate(ki) + h * dh;
-                        let kh = &kc[off..off + dh];
-                        *sc = dot_f32(qh, kh) * scale_inv;
-                    } else {
-                        *sc = NEG_INF;
-                    }
-                }
-                softmax_inplace(&mut scores);
-                let orow = o.row_mut(bi);
-                let oh = &mut orow[h * dh..(h + 1) * dh];
-                for (ki, &att) in scores.iter().enumerate().take(p + 1) {
-                    if att == 0.0 {
+        match pool.dtype() {
+            KvDtype::F32 => {
+                let (kc, vc) = pool.layer_mut(li);
+                for bi in 0..b {
+                    if !active[bi] {
                         continue;
                     }
-                    let off = locate(ki) + h * dh;
-                    let vh = &vc[off..off + dh];
-                    axpy_f32(oh, att, vh);
+                    let table = tables[bi];
+                    let p = pos[bi] as usize;
+                    // page address of (position, head 0); validated
+                    // above, so every `q <= p` resolves
+                    let locate = |q: usize| -> usize {
+                        (table[q / bs] as usize * bs + q % bs)
+                            * row_stride
+                    };
+                    let dst = locate(p);
+                    for h in 0..nh {
+                        kc[dst + h * dh..dst + (h + 1) * dh]
+                            .copy_from_slice(
+                                &kk.row(bi)[h * dh..(h + 1) * dh],
+                            );
+                        vc[dst + h * dh..dst + (h + 1) * dh]
+                            .copy_from_slice(
+                                &vv.row(bi)[h * dh..(h + 1) * dh],
+                            );
+                    }
+                    kv_bytes += (2 * nh * dh * 4) as u64;
+                    for h in 0..nh {
+                        let qh = &qq.row(bi)[h * dh..(h + 1) * dh];
+                        for (ki, sc) in scores.iter_mut().enumerate() {
+                            if ki <= p {
+                                let off = locate(ki) + h * dh;
+                                let kh = &kc[off..off + dh];
+                                *sc = dot_f32(qh, kh) * scale_inv;
+                            } else {
+                                *sc = NEG_INF;
+                            }
+                        }
+                        softmax_inplace(&mut scores);
+                        let orow = o.row_mut(bi);
+                        let oh = &mut orow[h * dh..(h + 1) * dh];
+                        for (ki, &att) in
+                            scores.iter().enumerate().take(p + 1)
+                        {
+                            if att == 0.0 {
+                                continue;
+                            }
+                            let off = locate(ki) + h * dh;
+                            let vh = &vc[off..off + dh];
+                            axpy_f32(oh, att, vh);
+                        }
+                    }
+                }
+            }
+            KvDtype::Int8 => {
+                let (kc, vc, ksc, vsc) = pool.layer_int8_mut(li);
+                for bi in 0..b {
+                    if !active[bi] {
+                        continue;
+                    }
+                    let table = tables[bi];
+                    let p = pos[bi] as usize;
+                    let locate = |q: usize| -> usize {
+                        (table[q / bs] as usize * bs + q % bs)
+                            * row_stride
+                    };
+                    let blk_of = |q: usize| table[q / bs] as usize;
+                    let (blk, row) = (blk_of(p), p % bs);
+                    for h in 0..nh {
+                        quant_store_head(
+                            kc, ksc, blk, row, bs, nh, dh, h,
+                            &kk.row(bi)[h * dh..(h + 1) * dh],
+                        );
+                        quant_store_head(
+                            vc, vsc, blk, row, bs, nh, dh, h,
+                            &vv.row(bi)[h * dh..(h + 1) * dh],
+                        );
+                    }
+                    kv_bytes += (2 * nh * dh) as u64;
+                    for h in 0..nh {
+                        let qh = &qq.row(bi)[h * dh..(h + 1) * dh];
+                        for (ki, sc) in scores.iter_mut().enumerate() {
+                            if ki <= p {
+                                let off = locate(ki) + h * dh;
+                                let s_k = ksc[blk_of(ki) * nh + h];
+                                *sc = dot_q8_f32(qh, &kc[off..off + dh])
+                                    * s_k
+                                    * scale_inv;
+                            } else {
+                                *sc = NEG_INF;
+                            }
+                        }
+                        softmax_inplace(&mut scores);
+                        let orow = o.row_mut(bi);
+                        let oh = &mut orow[h * dh..(h + 1) * dh];
+                        for (ki, &att) in
+                            scores.iter().enumerate().take(p + 1)
+                        {
+                            if att == 0.0 {
+                                continue;
+                            }
+                            let off = locate(ki) + h * dh;
+                            let s_v = vsc[blk_of(ki) * nh + h];
+                            axpy_q8_f32(
+                                oh,
+                                att * s_v,
+                                &vc[off..off + dh],
+                            );
+                        }
+                    }
                 }
             }
         }
@@ -1189,69 +1264,173 @@ fn prefill_core_paged(
 
         // write the window's K/V through the tables, then attend: the
         // history 0..start is read from the pool, the window from the
-        // freshly computed rows — identical values either way
-        let (kc, vc) = pool.layer_mut(li);
+        // freshly computed rows — identical values either way on the
+        // f32 path.  Int8 pools quantize the window on write and
+        // dequantize history reads (window reads still come from the
+        // fresh f32 rows); kv_bytes counts actual stored bytes.
         let mut o2 = Tensor::<f32>::zeros(&[rows, d]);
         let mut scores = vec![0f32; s];
-        for bi in 0..b {
-            if !active[bi] {
-                continue;
-            }
-            let table = tables[bi];
-            let len_b = lengths[bi] as usize;
-            let (start, end) =
-                (starts[bi] as usize, ends[bi] as usize);
-            let base = row_base[bi];
-            // page address of (position, head 0); validated above
-            let locate = |q: usize| -> usize {
-                (table[q / bs] as usize * bs + q % bs) * row_stride
-            };
-            for p in start..end {
-                let dst = locate(p);
-                let r = base + (p - start);
-                for h in 0..nh {
-                    kc[dst + h * dh..dst + (h + 1) * dh].copy_from_slice(
-                        &kk.row(r)[h * dh..(h + 1) * dh],
-                    );
-                    vc[dst + h * dh..dst + (h + 1) * dh].copy_from_slice(
-                        &vv.row(r)[h * dh..(h + 1) * dh],
-                    );
-                }
-                kv_bytes += (2 * nh * dh * 4) as u64;
-            }
-            for qi in start..end {
-                let qr = base + (qi - start);
-                for h in 0..nh {
-                    let qh = &qq.row(qr)[h * dh..(h + 1) * dh];
-                    for (ki, sc) in scores.iter_mut().enumerate() {
-                        if ki <= qi && ki < len_b {
-                            let kh: &[f32] = if ki < start {
-                                let off = locate(ki) + h * dh;
-                                &kc[off..off + dh]
-                            } else {
-                                &kk.row(base + (ki - start))
-                                    [h * dh..(h + 1) * dh]
-                            };
-                            *sc = dot_f32(qh, kh) * scale_inv;
-                        } else {
-                            *sc = NEG_INF;
+        match pool.dtype() {
+            KvDtype::F32 => {
+                let (kc, vc) = pool.layer_mut(li);
+                for bi in 0..b {
+                    if !active[bi] {
+                        continue;
+                    }
+                    let table = tables[bi];
+                    let len_b = lengths[bi] as usize;
+                    let (start, end) =
+                        (starts[bi] as usize, ends[bi] as usize);
+                    let base = row_base[bi];
+                    // page address of (position, head 0); validated
+                    // above
+                    let locate = |q: usize| -> usize {
+                        (table[q / bs] as usize * bs + q % bs)
+                            * row_stride
+                    };
+                    for p in start..end {
+                        let dst = locate(p);
+                        let r = base + (p - start);
+                        for h in 0..nh {
+                            kc[dst + h * dh..dst + (h + 1) * dh]
+                                .copy_from_slice(
+                                    &kk.row(r)[h * dh..(h + 1) * dh],
+                                );
+                            vc[dst + h * dh..dst + (h + 1) * dh]
+                                .copy_from_slice(
+                                    &vv.row(r)[h * dh..(h + 1) * dh],
+                                );
+                        }
+                        kv_bytes += (2 * nh * dh * 4) as u64;
+                    }
+                    for qi in start..end {
+                        let qr = base + (qi - start);
+                        for h in 0..nh {
+                            let qh =
+                                &qq.row(qr)[h * dh..(h + 1) * dh];
+                            for (ki, sc) in
+                                scores.iter_mut().enumerate()
+                            {
+                                if ki <= qi && ki < len_b {
+                                    let kh: &[f32] = if ki < start {
+                                        let off = locate(ki) + h * dh;
+                                        &kc[off..off + dh]
+                                    } else {
+                                        &kk.row(base + (ki - start))
+                                            [h * dh..(h + 1) * dh]
+                                    };
+                                    *sc = dot_f32(qh, kh) * scale_inv;
+                                } else {
+                                    *sc = NEG_INF;
+                                }
+                            }
+                            softmax_inplace(&mut scores);
+                            let orow = o2.row_mut(qr);
+                            let oh = &mut orow[h * dh..(h + 1) * dh];
+                            for (ki, &att) in
+                                scores.iter().enumerate()
+                            {
+                                if att == 0.0 {
+                                    continue;
+                                }
+                                let vh: &[f32] = if ki < start {
+                                    let off = locate(ki) + h * dh;
+                                    &vc[off..off + dh]
+                                } else {
+                                    &vv.row(base + (ki - start))
+                                        [h * dh..(h + 1) * dh]
+                                };
+                                axpy_f32(oh, att, vh);
+                            }
                         }
                     }
-                    softmax_inplace(&mut scores);
-                    let orow = o2.row_mut(qr);
-                    let oh = &mut orow[h * dh..(h + 1) * dh];
-                    for (ki, &att) in scores.iter().enumerate() {
-                        if att == 0.0 {
-                            continue;
+                }
+            }
+            KvDtype::Int8 => {
+                let (kc, vc, ksc, vsc) = pool.layer_int8_mut(li);
+                for bi in 0..b {
+                    if !active[bi] {
+                        continue;
+                    }
+                    let table = tables[bi];
+                    let len_b = lengths[bi] as usize;
+                    let (start, end) =
+                        (starts[bi] as usize, ends[bi] as usize);
+                    let base = row_base[bi];
+                    let locate = |q: usize| -> usize {
+                        (table[q / bs] as usize * bs + q % bs)
+                            * row_stride
+                    };
+                    let blk_of = |q: usize| table[q / bs] as usize;
+                    for p in start..end {
+                        let (blk, row) = (blk_of(p), p % bs);
+                        let r = base + (p - start);
+                        for h in 0..nh {
+                            quant_store_head(
+                                kc, ksc, blk, row, bs, nh, dh, h,
+                                &kk.row(r)[h * dh..(h + 1) * dh],
+                            );
+                            quant_store_head(
+                                vc, vsc, blk, row, bs, nh, dh, h,
+                                &vv.row(r)[h * dh..(h + 1) * dh],
+                            );
                         }
-                        let vh: &[f32] = if ki < start {
-                            let off = locate(ki) + h * dh;
-                            &vc[off..off + dh]
-                        } else {
-                            &vv.row(base + (ki - start))
-                                [h * dh..(h + 1) * dh]
-                        };
-                        axpy_f32(oh, att, vh);
+                        kv_bytes += (2 * nh * dh) as u64;
+                    }
+                    for qi in start..end {
+                        let qr = base + (qi - start);
+                        for h in 0..nh {
+                            let qh =
+                                &qq.row(qr)[h * dh..(h + 1) * dh];
+                            for (ki, sc) in
+                                scores.iter_mut().enumerate()
+                            {
+                                if ki <= qi && ki < len_b {
+                                    *sc = if ki < start {
+                                        let off = locate(ki) + h * dh;
+                                        let s_k =
+                                            ksc[blk_of(ki) * nh + h];
+                                        dot_q8_f32(
+                                            qh,
+                                            &kc[off..off + dh],
+                                        ) * s_k
+                                            * scale_inv
+                                    } else {
+                                        let kh = &kk
+                                            .row(base + (ki - start))
+                                            [h * dh..(h + 1) * dh];
+                                        dot_f32(qh, kh) * scale_inv
+                                    };
+                                } else {
+                                    *sc = NEG_INF;
+                                }
+                            }
+                            softmax_inplace(&mut scores);
+                            let orow = o2.row_mut(qr);
+                            let oh = &mut orow[h * dh..(h + 1) * dh];
+                            for (ki, &att) in
+                                scores.iter().enumerate()
+                            {
+                                if att == 0.0 {
+                                    continue;
+                                }
+                                if ki < start {
+                                    let off = locate(ki) + h * dh;
+                                    let s_v =
+                                        vsc[blk_of(ki) * nh + h];
+                                    axpy_q8_f32(
+                                        oh,
+                                        att * s_v,
+                                        &vc[off..off + dh],
+                                    );
+                                } else {
+                                    let vh = &vv
+                                        .row(base + (ki - start))
+                                        [h * dh..(h + 1) * dh];
+                                    axpy_f32(oh, att, vh);
+                                }
+                            }
+                        }
                     }
                 }
             }

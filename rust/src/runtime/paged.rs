@@ -11,6 +11,20 @@
 //! round-tripping the whole cache tensor through the execution
 //! boundary.
 //!
+//! # Storage dtype ([`KvDtype`])
+//!
+//! Blocks are stored either as f32 (the bit-exact reference, default)
+//! or as int8 with one symmetric scale per `(block, head)` per arena
+//! (`ODYSSEY_KV_QUANT=int8`).  The int8 layout quantizes on scatter and
+//! dequantizes on read, cutting resident KV bytes ~4× so the same
+//! `kv_blocks` budget holds ~4× more positions.  Scales are maintained
+//! incrementally: writing in-block row 0 resets the owning block's
+//! scales (a block is always filled position-major by one owner, so a
+//! row-0 write means a fresh claim), and a later row whose amax
+//! exceeds the current scale re-quantizes the block's earlier rows for
+//! that head before widening the scale — quantization is therefore a
+//! deterministic function of the write history alone.
+//!
 //! The pool is pure storage + addressing: allocation policy (free
 //! lists, refcounts, the prefix index, preemption) lives in
 //! [`crate::coordinator::kv`], and the attention gather that READS
@@ -26,20 +40,120 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::quant::rtn::{dequant_row_i8, quantize_row_i8, rescale_row_i8};
+use crate::quant::scale::sym_row_scale;
+
+/// Element type of the pooled K/V arenas.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KvDtype {
+    /// 4-byte floats — the bit-exact reference path (default).
+    #[default]
+    F32,
+    /// 1-byte symmetric int8 with per-`(block, head)` scales — ~4×
+    /// less resident KV, lossy (gated by round-trip props and the
+    /// perplexity-delta bound, not bit-exact parity).
+    Int8,
+}
+
+impl KvDtype {
+    /// Bytes per stored K/V element.
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            KvDtype::F32 => 4,
+            KvDtype::Int8 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KvDtype::F32 => "fp32",
+            KvDtype::Int8 => "int8",
+        }
+    }
+
+    /// Parse a knob value (`--kv-quant` / `ODYSSEY_KV_QUANT`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "" | "fp32" | "f32" | "fp" | "off" | "none" | "0" => {
+                Some(KvDtype::F32)
+            }
+            "int8" | "i8" | "q8" => Some(KvDtype::Int8),
+            _ => None,
+        }
+    }
+}
+
+/// Per-layer K and V storage in one of the [`KvDtype`] layouts.
+enum Arena {
+    F32 {
+        k: Vec<Vec<f32>>,
+        v: Vec<Vec<f32>>,
+    },
+    Int8 {
+        k: Vec<Vec<i8>>,
+        v: Vec<Vec<i8>>,
+        /// per-layer `[n_blocks * n_heads]` symmetric scales
+        k_scale: Vec<Vec<f32>>,
+        v_scale: Vec<Vec<f32>>,
+    },
+}
+
 /// Fixed arena of KV blocks for one model: per layer, a K arena and a V
-/// arena of `n_blocks * block_size * n_heads * head_dim` f32s.
+/// arena of `n_blocks * block_size * n_heads * head_dim` elements
+/// (f32 or int8-with-scales, see [`KvDtype`]).
 pub struct KvBlockPool {
     pub n_blocks: usize,
     pub block_size: usize,
     pub n_layers: usize,
     pub n_heads: usize,
     pub head_dim: usize,
-    /// per-layer arenas, each `[n_blocks, block_size, H, Dh]` flattened
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
+    arena: Arena,
+}
+
+/// Quantize one head's `dh` values of in-block row `row` into an int8
+/// arena, maintaining the per-`(block, head)` scale: a row-0 write
+/// resets the scale (fresh claim of the block), a wider row first
+/// re-quantizes the block's earlier rows for this head.  Free function
+/// (not `&mut self`) so the attention loops can call it while holding
+/// the arena borrows from [`KvBlockPool::layer_int8_mut`].
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn quant_store_head(
+    arena: &mut [i8],
+    scales: &mut [f32],
+    blk: usize,
+    row: usize,
+    block_size: usize,
+    n_heads: usize,
+    head_dim: usize,
+    h: usize,
+    xs: &[f32],
+) {
+    debug_assert_eq!(xs.len(), head_dim);
+    let sidx = blk * n_heads + h;
+    if row == 0 {
+        scales[sidx] = 0.0;
+    }
+    let s_new = sym_row_scale(xs);
+    let s_old = scales[sidx];
+    if s_old == 0.0 {
+        scales[sidx] = s_new;
+    } else if s_new > s_old {
+        // widen: earlier rows of this block were quantized at a finer
+        // scale — re-quantize them so one scale covers the block
+        let ratio = s_old / s_new;
+        for r in 0..row {
+            let off = ((blk * block_size + r) * n_heads + h) * head_dim;
+            rescale_row_i8(&mut arena[off..off + head_dim], ratio);
+        }
+        scales[sidx] = s_new;
+    }
+    let off = ((blk * block_size + row) * n_heads + h) * head_dim;
+    quantize_row_i8(xs, scales[sidx], &mut arena[off..off + head_dim]);
 }
 
 impl KvBlockPool {
+    /// f32 pool — the bit-exact reference layout.
     pub fn new(
         n_blocks: usize,
         block_size: usize,
@@ -47,28 +161,87 @@ impl KvBlockPool {
         n_heads: usize,
         head_dim: usize,
     ) -> Self {
+        Self::with_dtype(
+            n_blocks,
+            block_size,
+            n_layers,
+            n_heads,
+            head_dim,
+            KvDtype::F32,
+        )
+    }
+
+    pub fn with_dtype(
+        n_blocks: usize,
+        block_size: usize,
+        n_layers: usize,
+        n_heads: usize,
+        head_dim: usize,
+        dtype: KvDtype,
+    ) -> Self {
         assert!(block_size > 0, "block_size must be positive");
         assert!(n_blocks > 0, "pool needs at least one block");
         let numel = n_blocks * block_size * n_heads * head_dim;
+        let arena = match dtype {
+            KvDtype::F32 => Arena::F32 {
+                k: (0..n_layers).map(|_| vec![0f32; numel]).collect(),
+                v: (0..n_layers).map(|_| vec![0f32; numel]).collect(),
+            },
+            KvDtype::Int8 => Arena::Int8 {
+                k: (0..n_layers).map(|_| vec![0i8; numel]).collect(),
+                v: (0..n_layers).map(|_| vec![0i8; numel]).collect(),
+                k_scale: (0..n_layers)
+                    .map(|_| vec![0f32; n_blocks * n_heads])
+                    .collect(),
+                v_scale: (0..n_layers)
+                    .map(|_| vec![0f32; n_blocks * n_heads])
+                    .collect(),
+            },
+        };
         KvBlockPool {
             n_blocks,
             block_size,
             n_layers,
             n_heads,
             head_dim,
-            k: (0..n_layers).map(|_| vec![0f32; numel]).collect(),
-            v: (0..n_layers).map(|_| vec![0f32; numel]).collect(),
+            arena,
         }
     }
 
-    /// f32 elements of one block across K+V and all layers.
+    /// Storage dtype of the K/V arenas.
+    pub fn dtype(&self) -> KvDtype {
+        match self.arena {
+            Arena::F32 { .. } => KvDtype::F32,
+            Arena::Int8 { .. } => KvDtype::Int8,
+        }
+    }
+
+    /// Elements of one block across K+V and all layers.
     pub fn block_numel(&self) -> usize {
         self.block_size * self.n_heads * self.head_dim
     }
 
-    /// Total arena bytes (K + V, all layers).
+    /// Total arena bytes (K + V, all layers), at the ACTUAL stored
+    /// element width — int8 pools report ~4× less than f32 pools of
+    /// the same geometry (plus their per-`(block, head)` scales).
     pub fn bytes(&self) -> usize {
-        2 * self.n_layers * self.n_blocks * self.block_numel() * 4
+        let elems = 2 * self.n_layers * self.n_blocks * self.block_numel();
+        let scales = match self.arena {
+            Arena::F32 { .. } => 0,
+            Arena::Int8 { .. } => {
+                2 * self.n_layers * self.n_blocks * self.n_heads * 4
+            }
+        };
+        elems * self.dtype().elem_bytes() + scales
+    }
+
+    /// Bytes the pool stores per written position (K + V, one layer) —
+    /// what a scatter/decode write actually moves, at the stored
+    /// element width.  The contiguous-path accounting uses 4-byte
+    /// elements; this is its dtype-aware paged counterpart.
+    pub fn row_write_bytes(&self) -> u64 {
+        (2 * self.n_heads * self.head_dim * self.dtype().elem_bytes())
+            as u64
     }
 
     /// Flat arena offset of `(position, head 0)` resolved through a
@@ -82,20 +255,51 @@ impl KvBlockPool {
         Some(row * self.n_heads * self.head_dim)
     }
 
-    /// Borrow one layer's K and V arenas mutably (the decode write path).
+    /// Borrow one layer's K and V arenas mutably (the decode write
+    /// path).  f32 pools only — the int8 loops go through
+    /// [`Self::layer_int8_mut`].
     pub fn layer_mut(&mut self, layer: usize) -> (&mut [f32], &mut [f32]) {
-        (&mut self.k[layer], &mut self.v[layer])
+        match &mut self.arena {
+            Arena::F32 { k, v } => (&mut k[layer], &mut v[layer]),
+            Arena::Int8 { .. } => {
+                panic!("layer_mut on an int8 pool (use layer_int8_mut)")
+            }
+        }
     }
 
-    /// Borrow one layer's K and V arenas.
+    /// Borrow one layer's K and V arenas.  f32 pools only.
     pub fn layer(&self, layer: usize) -> (&[f32], &[f32]) {
-        (&self.k[layer], &self.v[layer])
+        match &self.arena {
+            Arena::F32 { k, v } => (&k[layer], &v[layer]),
+            Arena::Int8 { .. } => {
+                panic!("layer on an int8 pool (use layer_int8_mut)")
+            }
+        }
+    }
+
+    /// Borrow one layer's int8 K/V arenas and their per-`(block, head)`
+    /// scale rows mutably: `(k, v, k_scale, v_scale)`.
+    pub fn layer_int8_mut(
+        &mut self,
+        layer: usize,
+    ) -> (&mut [i8], &mut [i8], &mut [f32], &mut [f32]) {
+        match &mut self.arena {
+            Arena::Int8 { k, v, k_scale, v_scale } => (
+                &mut k[layer],
+                &mut v[layer],
+                &mut k_scale[layer],
+                &mut v_scale[layer],
+            ),
+            Arena::F32 { .. } => {
+                panic!("layer_int8_mut on an f32 pool (use layer_mut)")
+            }
+        }
     }
 
     /// Copy every layer's K and V rows of block `src` into block `dst`
     /// — the copy-on-write fork primitive: a sharer about to write into
     /// a shared block clones it first so the other holders never
-    /// observe the write.
+    /// observe the write.  Int8 pools clone the block's scales too.
     pub fn copy_block(&mut self, src: u32, dst: u32) {
         let n = self.block_numel();
         let (s, d) = (src as usize * n, dst as usize * n);
@@ -104,9 +308,21 @@ impl KvBlockPool {
                 && (dst as usize) < self.n_blocks,
             "copy_block outside pool"
         );
+        let nh = self.n_heads;
+        let (ss, sd) = (src as usize * nh, dst as usize * nh);
         for l in 0..self.n_layers {
-            self.k[l].copy_within(s..s + n, d);
-            self.v[l].copy_within(s..s + n, d);
+            match &mut self.arena {
+                Arena::F32 { k, v } => {
+                    k[l].copy_within(s..s + n, d);
+                    v[l].copy_within(s..s + n, d);
+                }
+                Arena::Int8 { k, v, k_scale, v_scale } => {
+                    k[l].copy_within(s..s + n, d);
+                    v[l].copy_within(s..s + n, d);
+                    k_scale[l].copy_within(ss..ss + nh, sd);
+                    v_scale[l].copy_within(ss..ss + nh, sd);
+                }
+            }
         }
     }
 
@@ -126,7 +342,8 @@ impl KvBlockPool {
 
     /// Scatter positions `from..len` only (the partial-prefill install:
     /// positions before `from` belong to a cached — possibly shared —
-    /// prefix that must not be rewritten).
+    /// prefix that must not be rewritten).  Int8 pools quantize on the
+    /// way in (see the module docs for the scale-maintenance contract).
     #[allow(clippy::too_many_arguments)]
     pub fn scatter_row_from(
         &mut self,
@@ -139,6 +356,7 @@ impl KvBlockPool {
         v_row: &[f32],
     ) -> Result<()> {
         let (nh, dh) = (self.n_heads, self.head_dim);
+        let bs = self.block_size;
         if k_row.len() < nh * max_seq * dh || v_row.len() < nh * max_seq * dh
         {
             bail!("scatter_row: source rows shorter than [H, max_seq, Dh]");
@@ -147,12 +365,45 @@ impl KvBlockPool {
             let dst = self.locate(table, p).ok_or_else(|| {
                 anyhow!("scatter_row: no block for position {p}")
             })?;
-            for h in 0..nh {
-                let src = (h * max_seq + p) * dh;
-                self.k[layer][dst + h * dh..dst + (h + 1) * dh]
-                    .copy_from_slice(&k_row[src..src + dh]);
-                self.v[layer][dst + h * dh..dst + (h + 1) * dh]
-                    .copy_from_slice(&v_row[src..src + dh]);
+            let blk = table[p / bs] as usize;
+            let row = p % bs;
+            match &mut self.arena {
+                Arena::F32 { k, v } => {
+                    for h in 0..nh {
+                        let src = (h * max_seq + p) * dh;
+                        k[layer][dst + h * dh..dst + (h + 1) * dh]
+                            .copy_from_slice(&k_row[src..src + dh]);
+                        v[layer][dst + h * dh..dst + (h + 1) * dh]
+                            .copy_from_slice(&v_row[src..src + dh]);
+                    }
+                }
+                Arena::Int8 { k, v, k_scale, v_scale } => {
+                    for h in 0..nh {
+                        let src = (h * max_seq + p) * dh;
+                        quant_store_head(
+                            &mut k[layer],
+                            &mut k_scale[layer],
+                            blk,
+                            row,
+                            bs,
+                            nh,
+                            dh,
+                            h,
+                            &k_row[src..src + dh],
+                        );
+                        quant_store_head(
+                            &mut v[layer],
+                            &mut v_scale[layer],
+                            blk,
+                            row,
+                            bs,
+                            nh,
+                            dh,
+                            h,
+                            &v_row[src..src + dh],
+                        );
+                    }
+                }
             }
         }
         Ok(())
@@ -161,7 +412,8 @@ impl KvBlockPool {
     /// Gather one sequence's pages (positions `0..len`) back into
     /// contiguous `[H, max_seq, Dh]` K and V rows, zero-padded past
     /// `len` — the inverse of [`Self::scatter_row`], used by the pjrt
-    /// compatibility path and the parity tests.
+    /// compatibility path and the parity tests.  Int8 pools dequantize
+    /// on the way out.
     pub fn gather_row(
         &self,
         layer: usize,
@@ -170,20 +422,42 @@ impl KvBlockPool {
         max_seq: usize,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
         let (nh, dh) = (self.n_heads, self.head_dim);
+        let bs = self.block_size;
         let mut k_row = vec![0f32; nh * max_seq * dh];
         let mut v_row = vec![0f32; nh * max_seq * dh];
         for p in 0..len {
             let src = self.locate(table, p).ok_or_else(|| {
                 anyhow!("gather_row: no block for position {p}")
             })?;
-            for h in 0..nh {
-                let dst = (h * max_seq + p) * dh;
-                k_row[dst..dst + dh].copy_from_slice(
-                    &self.k[layer][src + h * dh..src + (h + 1) * dh],
-                );
-                v_row[dst..dst + dh].copy_from_slice(
-                    &self.v[layer][src + h * dh..src + (h + 1) * dh],
-                );
+            let blk = table[p / bs] as usize;
+            match &self.arena {
+                Arena::F32 { k, v } => {
+                    for h in 0..nh {
+                        let dst = (h * max_seq + p) * dh;
+                        k_row[dst..dst + dh].copy_from_slice(
+                            &k[layer][src + h * dh..src + (h + 1) * dh],
+                        );
+                        v_row[dst..dst + dh].copy_from_slice(
+                            &v[layer][src + h * dh..src + (h + 1) * dh],
+                        );
+                    }
+                }
+                Arena::Int8 { k, v, k_scale, v_scale } => {
+                    for h in 0..nh {
+                        let dst = (h * max_seq + p) * dh;
+                        let off = src + h * dh;
+                        dequant_row_i8(
+                            &k[layer][off..off + dh],
+                            k_scale[layer][blk * nh + h],
+                            &mut k_row[dst..dst + dh],
+                        );
+                        dequant_row_i8(
+                            &v[layer][off..off + dh],
+                            v_scale[layer][blk * nh + h],
+                            &mut v_row[dst..dst + dh],
+                        );
+                    }
+                }
             }
         }
         Ok((k_row, v_row))
@@ -197,6 +471,10 @@ mod tests {
     fn pool() -> KvBlockPool {
         // 6 blocks of 4 positions, 2 layers, 2 heads, dh=4
         KvBlockPool::new(6, 4, 2, 2, 4)
+    }
+
+    fn pool_i8() -> KvBlockPool {
+        KvBlockPool::with_dtype(6, 4, 2, 2, 4, KvDtype::Int8)
     }
 
     #[test]
@@ -245,6 +523,76 @@ mod tests {
     }
 
     #[test]
+    fn int8_scatter_gather_roundtrip_within_scale_quantum() {
+        let mut p = pool_i8();
+        let max_seq = 16;
+        let (nh, dh) = (2, 4);
+        let len = 6;
+        let table = [3u32, 0];
+        let k_row: Vec<f32> = (0..nh * max_seq * dh)
+            .map(|i| (i as f32 * 0.37).sin() * 3.0)
+            .collect();
+        let v_row: Vec<f32> = (0..nh * max_seq * dh)
+            .map(|i| (i as f32 * 0.11).cos() * 5.0)
+            .collect();
+        for l in 0..2 {
+            p.scatter_row(l, &table, len, max_seq, &k_row, &v_row)
+                .unwrap();
+        }
+        let (gk, gv) = p.gather_row(1, &table, len, max_seq).unwrap();
+        // every recovered value within one scale quantum of the source
+        // (amax <= 5, so quantum <= 5/127; rescaled rows may see 2x)
+        let tol = 2.0 * 5.0 / 127.0;
+        for h in 0..nh {
+            for pos in 0..len {
+                for t in 0..dh {
+                    let i = (h * max_seq + pos) * dh + t;
+                    assert!(
+                        (gk[i] - k_row[i]).abs() <= tol,
+                        "K h{h} pos{pos} t{t}: {} vs {}",
+                        gk[i],
+                        k_row[i]
+                    );
+                    assert!(
+                        (gv[i] - v_row[i]).abs() <= tol,
+                        "V h{h} pos{pos} t{t}: {} vs {}",
+                        gv[i],
+                        v_row[i]
+                    );
+                }
+            }
+        }
+        // pad stays zero (head 0, first position past len)
+        let i = len * dh;
+        assert_eq!(gk[i], 0.0);
+    }
+
+    #[test]
+    fn int8_rewrite_of_row_zero_resets_the_block_scale() {
+        let mut p = pool_i8();
+        let max_seq = 16;
+        let (nh, dh) = (2usize, 4usize);
+        let table = [2u32];
+        // first pass: huge values -> coarse scale
+        let big: Vec<f32> = vec![100.0; nh * max_seq * dh];
+        p.scatter_row(0, &table, 4, max_seq, &big, &big).unwrap();
+        // second pass from row 0: tiny values must NOT inherit the
+        // coarse scale (they would all collapse to zero)
+        let tiny: Vec<f32> = (0..nh * max_seq * dh)
+            .map(|i| 0.01 + (i % 7) as f32 * 0.001)
+            .collect();
+        p.scatter_row(0, &table, 4, max_seq, &tiny, &tiny).unwrap();
+        let (gk, _) = p.gather_row(0, &table, 4, max_seq).unwrap();
+        let i = 0; // h0 pos0 t0
+        assert!(
+            (gk[i] - tiny[i]).abs() <= 2.0 * 0.017 / 127.0 + 1e-6,
+            "stale coarse scale survived a row-0 rewrite: {} vs {}",
+            gk[i],
+            tiny[i]
+        );
+    }
+
+    #[test]
     fn scatter_without_block_errors() {
         let mut p = pool();
         let row = vec![0f32; 2 * 16 * 4];
@@ -268,6 +616,27 @@ mod tests {
             let (ok, ov) = p.gather_row(l, &[2], 4, max_seq).unwrap();
             assert_eq!(gk, ok, "layer {l} K clone");
             assert_eq!(gv, ov, "layer {l} V clone");
+        }
+    }
+
+    #[test]
+    fn int8_copy_block_clones_scales() {
+        let mut p = pool_i8();
+        let max_seq = 16;
+        let n = 2 * max_seq * 4;
+        let k_row: Vec<f32> =
+            (0..n).map(|i| (i as f32 * 0.3).sin() * 2.0).collect();
+        let v_row: Vec<f32> =
+            (0..n).map(|i| (i as f32 * 0.7).cos() * 9.0).collect();
+        for l in 0..2 {
+            p.scatter_row(l, &[2], 4, max_seq, &k_row, &v_row).unwrap();
+        }
+        p.copy_block(2, 5);
+        for l in 0..2 {
+            let (gk, gv) = p.gather_row(l, &[5], 4, max_seq).unwrap();
+            let (ok, ov) = p.gather_row(l, &[2], 4, max_seq).unwrap();
+            assert_eq!(gk, ok, "layer {l} K clone (int8 + scales)");
+            assert_eq!(gv, ov, "layer {l} V clone (int8 + scales)");
         }
     }
 
@@ -299,5 +668,26 @@ mod tests {
         let p = pool();
         // 2 layers * 2 (k+v) * 6 blocks * 4 pos * 2 heads * 4 dh * 4 B
         assert_eq!(p.bytes(), 2 * 2 * 6 * 4 * 2 * 4 * 4);
+    }
+
+    #[test]
+    fn int8_bytes_are_quarter_plus_scales() {
+        let (f, q) = (pool(), pool_i8());
+        // same geometry: elements at 1 byte plus 4-byte scales per
+        // (layer, k/v, block, head)
+        assert_eq!(q.bytes(), f.bytes() / 4 + 2 * 2 * 6 * 2 * 4);
+        assert!(q.bytes() * 3 < f.bytes(), "int8 pool must be far smaller");
+        assert_eq!(f.row_write_bytes(), (2 * 2 * 4 * 4) as u64);
+        assert_eq!(q.row_write_bytes(), (2 * 2 * 4) as u64);
+    }
+
+    #[test]
+    fn kv_dtype_parses_knob_values() {
+        assert_eq!(KvDtype::parse("int8"), Some(KvDtype::Int8));
+        assert_eq!(KvDtype::parse("INT8"), Some(KvDtype::Int8));
+        assert_eq!(KvDtype::parse("fp32"), Some(KvDtype::F32));
+        assert_eq!(KvDtype::parse("off"), Some(KvDtype::F32));
+        assert_eq!(KvDtype::parse(""), Some(KvDtype::F32));
+        assert_eq!(KvDtype::parse("int4"), None);
     }
 }

@@ -253,12 +253,17 @@ pub struct RequestOutcome {
     pub itls_s: Vec<f64>,
     pub total_s: f64,
     pub n_tokens: usize,
+    /// `X-Queue-Depth` values observed on 429 responses (one per
+    /// shed attempt) — the server-reported engine backlog at shed
+    /// time
+    pub shed_queue_depths: Vec<u64>,
 }
 
 enum Attempt {
     Done(RequestOutcome),
-    /// got a 429; retry after this many seconds
-    Backoff(f64),
+    /// got a 429; retry after this many seconds, with the engine
+    /// backlog the server reported alongside the shed (if any)
+    Backoff { after_s: f64, queue_depth: Option<u64> },
 }
 
 fn parse_status_line(line: &str) -> Option<u16> {
@@ -358,7 +363,10 @@ fn one_attempt(
             .get("retry-after")
             .and_then(|v| v.parse::<f64>().ok())
             .unwrap_or(1.0);
-        return Ok(Attempt::Backoff(after));
+        let queue_depth = headers
+            .get("x-queue-depth")
+            .and_then(|v| v.parse::<u64>().ok());
+        return Ok(Attempt::Backoff { after_s: after, queue_depth });
     }
     if status != 200 {
         return Ok(Attempt::Done(RequestOutcome {
@@ -442,17 +450,23 @@ fn run_one(
     opts: &LoadgenOptions,
 ) -> RequestOutcome {
     let mut retries = 0usize;
+    let mut shed_depths: Vec<u64> = Vec::new();
     loop {
         match one_attempt(addr, body, opts.stream, opts.timeout_s) {
             Ok(Attempt::Done(mut o)) => {
                 o.retries = retries;
+                o.shed_queue_depths = shed_depths;
                 return o;
             }
-            Ok(Attempt::Backoff(after_s)) => {
+            Ok(Attempt::Backoff { after_s, queue_depth }) => {
+                if let Some(d) = queue_depth {
+                    shed_depths.push(d);
+                }
                 if retries >= opts.max_retries {
                     return RequestOutcome {
                         rejected: true,
                         retries,
+                        shed_queue_depths: shed_depths,
                         ..Default::default()
                     };
                 }
@@ -465,6 +479,7 @@ fn run_one(
                 return RequestOutcome {
                     error: true,
                     retries,
+                    shed_queue_depths: shed_depths,
                     ..Default::default()
                 };
             }
@@ -483,6 +498,10 @@ pub struct Report {
     pub tokens: usize,
     pub ttft: Summary,
     pub itl: Summary,
+    /// server-reported `X-Queue-Depth` across every shed (429)
+    /// attempt — how far behind the engine was each time it pushed
+    /// back
+    pub shed_depth: Summary,
     /// wall time from first arrival to last completion
     pub duration_s: f64,
     /// completions meeting the TTFT SLO, per second
@@ -495,13 +514,19 @@ impl Report {
             (self.ttft.p50(), self.ttft.p95(), self.ttft.p99());
         let (ip50, ip95, ip99) =
             (self.itl.p50(), self.itl.p95(), self.itl.p99());
+        let (sd50, sdmax) = if self.shed_depth.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (self.shed_depth.p50(), self.shed_depth.max())
+        };
         format!(
             "loadgen: {} requests ({} arrivals @ {:.1}/s), {} ok, \
              {} rejected, {} errors, {} hung, {} retries, {} tokens \
              in {:.2}s\n\
              ttft   : p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms\n\
              itl    : p50 {:.1}ms p95 {:.1}ms p99 {:.1}ms\n\
-             goodput: {:.2} req/s within {:.0}ms TTFT SLO",
+             goodput: {:.2} req/s within {:.0}ms TTFT SLO\n\
+             shed   : queue depth p50 {:.0} max {:.0} over {} 429s",
             self.opts.requests,
             self.opts.arrival.name(),
             self.opts.rate,
@@ -520,6 +545,9 @@ impl Report {
             ip99 * 1e3,
             self.goodput_rps,
             self.opts.slo_ttft_ms,
+            sd50,
+            sdmax,
+            self.shed_depth.len(),
         )
     }
 
@@ -562,6 +590,9 @@ impl Report {
             ("itl_p95_ms", f(ip95 * 1e3)),
             ("itl_p99_ms", f(ip99 * 1e3)),
             ("goodput_rps", f(self.goodput_rps)),
+            ("shed_depth_p50", f(self.shed_depth.p50())),
+            ("shed_depth_max", f(self.shed_depth.max())),
+            ("shed_observations", Json::num(self.shed_depth.len() as f64)),
             ("slo_ttft_ms", f(self.opts.slo_ttft_ms)),
             ("duration_s", f(self.duration_s)),
         ])
@@ -620,6 +651,7 @@ pub fn run(addr: &str, opts: &LoadgenOptions) -> Result<Report> {
         tokens: 0,
         ttft: Summary::new(),
         itl: Summary::new(),
+        shed_depth: Summary::new(),
         duration_s,
         goodput_rps: 0.0,
     };
@@ -627,6 +659,9 @@ pub fn run(addr: &str, opts: &LoadgenOptions) -> Result<Report> {
     for o in &outcomes {
         rep.retries += o.retries;
         rep.tokens += o.n_tokens;
+        for &d in &o.shed_queue_depths {
+            rep.shed_depth.add(d as f64);
+        }
         if o.ok {
             rep.completed += 1;
             rep.ttft.add(o.ttft_s);

@@ -430,12 +430,16 @@ pub fn parse_gen_request(
 }
 
 /// The queue-full / prompt-too-long response (shared by the blocking
-/// and streaming paths): 429 with a `Retry-After` hint.
-fn reject_response() -> HttpResponse {
+/// and streaming paths): 429 with a `Retry-After` hint plus the live
+/// engine backlog in `X-Queue-Depth`, so clients can scale their
+/// backoff to how far behind the engine actually is instead of
+/// retrying blind.
+fn reject_response(engine: &EngineHandle) -> HttpResponse {
     HttpResponse::json(429, &Json::obj(vec![
         ("error", Json::str("queue full or prompt too long")),
     ]))
     .with_header("Retry-After", "1")
+    .with_header("X-Queue-Depth", &engine.queue_depth().to_string())
 }
 
 /// The shared response fields of the blocking body and the streaming
@@ -484,7 +488,7 @@ fn generate(req: &HttpRequest, engine: &EngineHandle) -> HttpResponse {
     };
     match engine.generate(tokens, params) {
         Ok(res) => match res.finish {
-            FinishReason::Rejected => reject_response(),
+            FinishReason::Rejected => reject_response(engine),
             FinishReason::Error => HttpResponse::text(
                 500,
                 "engine error: request aborted",
@@ -537,7 +541,7 @@ fn generate_streaming(
     if let StreamEvent::Done(res) = &ev {
         match res.finish {
             FinishReason::Rejected => {
-                stream.write_all(&reject_response().to_bytes())?;
+                stream.write_all(&reject_response(engine).to_bytes())?;
                 return Ok(());
             }
             FinishReason::Error => {

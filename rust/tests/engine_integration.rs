@@ -11,7 +11,7 @@ use odyssey::coordinator::handle::EngineService;
 use odyssey::coordinator::request::FinishReason;
 use odyssey::coordinator::{Engine, EngineOptions, GenParams, Request};
 use odyssey::quant::QuantRecipe;
-use odyssey::runtime::{synth, BackendKind};
+use odyssey::runtime::{synth, BackendKind, KvDtype};
 
 /// Serialize engine construction: engines are cheap on the native
 /// backend but the first call synthesizes the artifact set, and keeping
@@ -226,6 +226,7 @@ fn staged_and_unstaged_engines_produce_identical_streams() {
         let run = |staging: bool| {
             let mut o = opts("w4a8_fast");
             o.staging = staging; // what ODYSSEY_NO_STAGING=1 flips off
+            o.kv_quant = KvDtype::F32; // exactness vs unstaged-contiguous
             let mut engine = Engine::new(o).unwrap();
             for i in 0..3u64 {
                 engine.submit(Request::new(
@@ -296,6 +297,7 @@ fn paged_and_contiguous_engines_produce_identical_streams() {
             let mut o = opts("w4a8_fast");
             o.paged = paged;
             o.staging = true; // paging rides on staged weights
+            o.kv_quant = KvDtype::F32; // exactness vs contiguous
             let mut engine = Engine::new(o).unwrap();
             assert_eq!(engine.paging_active(), paged);
             for i in 0..3u64 {
@@ -380,6 +382,7 @@ fn paged_engine_preempts_and_completes_under_tiny_pool() {
         let mut o = opts("fp");
         o.paged = true;
         o.staging = true; // paging rides on staged weights
+        o.kv_quant = KvDtype::F32; // exactness vs contiguous
         o.kv_block_size = 4;
         o.kv_blocks = Some(12);
         o.max_queue = 32;
@@ -461,6 +464,7 @@ fn prefix_cache_engine_bit_identical_with_fewer_blocks() {
             o.paged = true; // explicit: survives the NO_PAGING CI leg
             o.staging = true;
             o.prefix_cache = prefix;
+            o.kv_quant = KvDtype::F32; // exactness across schedules
             o.prefill_batch = 1;
             o.kv_block_size = 4;
             o.kv_blocks = Some(28);
@@ -557,6 +561,7 @@ fn prefix_cache_survives_preemption_of_sharers() {
             o.paged = true;
             o.staging = true;
             o.prefix_cache = prefix;
+            o.kv_quant = KvDtype::F32; // exactness across schedules
             o.prefill_batch = 1;
             o.kv_block_size = 4;
             o.kv_blocks = Some(12);
@@ -630,6 +635,7 @@ fn chunked_prefill_removes_decode_stalls_and_keeps_streams() {
             o.paged = true;
             o.staging = true;
             o.chunking = chunking;
+            o.kv_quant = KvDtype::F32; // exactness across chunk schedules
             o.step_token_budget = 16;
             o.kv_block_size = 4;
             o.max_queue = 16;
@@ -714,18 +720,26 @@ fn chunked_prefill_removes_decode_stalls_and_keeps_streams() {
 #[test]
 fn escape_hatch_matrix_produces_identical_streams() {
     // every combination of ODYSSEY_NO_PAGING x ODYSSEY_NO_PREFIX_CACHE
-    // x ODYSSEY_NO_CHUNKING (exercised through their EngineOptions
-    // equivalents) must produce bit-identical token streams — mixed
-    // workload: two distinct prompts, one repeated prompt (prefix-hit
-    // shape), one long prompt (multi-chunk shape).
+    // x ODYSSEY_NO_CHUNKING x ODYSSEY_KV_QUANT (exercised through
+    // their EngineOptions equivalents) — fp-KV combos must produce
+    // bit-identical token streams; int8-KV combos are LOSSY by
+    // contract (in-window prefill reads stay f32 while history reads
+    // dequantize, so different chunk schedules legitimately see
+    // different rounding) and are flagged on divergence, not failed.
+    // Mixed workload: two distinct prompts, one repeated prompt
+    // (prefix-hit shape), one long prompt (multi-chunk shape).
     with_engine(|_shared| {
         let shared_prompt = prompt(41, 16);
-        let run = |paged: bool, prefix: bool, chunking: bool| {
+        let run = |paged: bool,
+                   prefix: bool,
+                   chunking: bool,
+                   kv_quant: KvDtype| {
             let mut o = opts("fp");
             o.paged = paged;
             o.staging = true;
             o.prefix_cache = prefix;
             o.chunking = chunking;
+            o.kv_quant = kv_quant;
             o.step_token_budget = 12; // small: forces real chunking
             o.kv_block_size = 4;
             o.max_queue = 16;
@@ -758,18 +772,41 @@ fn escape_hatch_matrix_produces_identical_streams() {
                 .collect::<Vec<_>>()
         };
 
-        let reference = run(false, false, false);
+        let reference = run(false, false, false, KvDtype::F32);
         assert_eq!(reference.len(), 5);
         assert!(reference.iter().all(|t| t.len() == 5));
         for paged in [false, true] {
             for prefix in [false, true] {
                 for chunking in [false, true] {
-                    let got = run(paged, prefix, chunking);
+                    let got =
+                        run(paged, prefix, chunking, KvDtype::F32);
                     assert_eq!(
                         got, reference,
                         "paging={paged} prefix={prefix} \
                          chunking={chunking} diverged from the \
                          all-hatches-off baseline"
+                    );
+                }
+            }
+        }
+        // int8-KV axis (paged only — the contiguous path has no
+        // pool): every combo must COMPLETE with full-length streams;
+        // divergence from the fp baseline is expected quantization
+        // behavior, logged so schedule-sensitivity stays visible
+        for prefix in [false, true] {
+            for chunking in [false, true] {
+                let got = run(true, prefix, chunking, KvDtype::Int8);
+                assert_eq!(got.len(), 5);
+                assert!(
+                    got.iter().all(|t| t.len() == 5),
+                    "int8 prefix={prefix} chunking={chunking}: \
+                     stream truncated"
+                );
+                if got != reference {
+                    eprintln!(
+                        "note: int8 KV (prefix={prefix} \
+                         chunking={chunking}) diverged from fp \
+                         streams — lossy path, allowed"
                     );
                 }
             }
@@ -900,6 +937,99 @@ fn no_chunking_env_var_flips_the_default() {
         }
         assert_eq!(opts_budget, 24, "env budget must flow to options");
         assert_eq!(zero_ignored, None, "a zero budget is ignored");
+    });
+}
+
+#[test]
+fn kv_quant_env_var_flips_the_default() {
+    // same serialization rationale as the staging/paging twins below
+    with_engine(|_shared| {
+        let saved = std::env::var("ODYSSEY_KV_QUANT").ok();
+        std::env::remove_var("ODYSSEY_KV_QUANT");
+        let default = EngineOptions::default().kv_quant;
+        std::env::set_var("ODYSSEY_KV_QUANT", "int8");
+        let opted_in = EngineOptions::default().kv_quant;
+        std::env::set_var("ODYSSEY_KV_QUANT", "bf13");
+        let invalid = odyssey::runtime::kv_quant_from_env();
+        match saved {
+            Some(v) => std::env::set_var("ODYSSEY_KV_QUANT", v),
+            None => std::env::remove_var("ODYSSEY_KV_QUANT"),
+        }
+        assert_eq!(
+            default,
+            KvDtype::F32,
+            "fp32 must stay the out-of-the-box default"
+        );
+        assert_eq!(
+            opted_in,
+            KvDtype::Int8,
+            "ODYSSEY_KV_QUANT=int8 must flow into EngineOptions"
+        );
+        assert_eq!(
+            invalid,
+            KvDtype::F32,
+            "an unknown dtype must fall back to fp32, not panic"
+        );
+    });
+}
+
+#[test]
+fn int8_kv_engine_completes_and_repeats_streams() {
+    // The int8 pool is LOSSY, so no fp comparison here — the
+    // engine-level contract is (a) every request runs to completion
+    // through quantized paged attention with sane counters, and
+    // (b) the path is deterministic: two identical runs (same
+    // schedule) must produce byte-identical streams, because the
+    // per-(block, head) scales are a pure function of write history.
+    with_engine(|_shared| {
+        let run = || {
+            let mut o = opts("fp");
+            o.paged = true;
+            o.staging = true;
+            o.kv_quant = KvDtype::Int8;
+            o.kv_block_size = 4;
+            let mut engine = Engine::new(o).unwrap();
+            for i in 0..4u64 {
+                engine.submit(Request::new(
+                    i,
+                    prompt(i as i32 + 11, 7 + i as usize),
+                    GenParams {
+                        max_new_tokens: 6,
+                        eos: None,
+                        ..Default::default()
+                    },
+                ));
+            }
+            let mut results = engine.run_until_idle().unwrap();
+            results.sort_by_key(|r| r.id);
+            assert_eq!(results.len(), 4, "every request completes");
+            for r in &results {
+                assert_eq!(r.finish, FinishReason::MaxTokens);
+                assert_eq!(
+                    r.tokens.len(),
+                    6,
+                    "request {} got a truncated stream",
+                    r.id
+                );
+            }
+            let m = &engine.metrics;
+            assert_eq!(m.completed, 4);
+            assert_eq!(m.rejected, 0);
+            assert!(
+                m.kv_blocks_allocated > 0,
+                "int8 requests must still allocate pool blocks"
+            );
+            results
+                .into_iter()
+                .map(|r| r.tokens)
+                .collect::<Vec<_>>()
+        };
+        let first = run();
+        let second = run();
+        assert_eq!(
+            first, second,
+            "int8 KV must be deterministic across identical runs"
+        );
     });
 }
 
@@ -1234,6 +1364,7 @@ fn preempted_sampled_streams_replay_bit_identical() {
         let mut o = opts("fp");
         o.paged = true;
         o.staging = true;
+        o.kv_quant = KvDtype::F32; // replay exactness vs contiguous
         o.kv_block_size = 4;
         o.kv_blocks = Some(12);
         o.max_queue = 32;

@@ -15,7 +15,9 @@ use odyssey::formats::json::Json;
 use odyssey::formats::safetensors::{SafeTensors, StTensor};
 use odyssey::model::{self, Checkpoint};
 use odyssey::quant::{gptq, lwc, pack, rtn, scale, GptqConfig, QuantRecipe};
-use odyssey::runtime::{self, synth, BackendKind, KvBlockPool, Runtime};
+use odyssey::runtime::{
+    self, synth, BackendKind, KvBlockPool, KvDtype, Runtime,
+};
 use odyssey::tensor::Tensor;
 use odyssey::util::propcheck::Prop;
 use odyssey::util::XorShift;
@@ -98,7 +100,7 @@ fn prop_act_quant_scales_bound_error() {
         let m = 1 + (rng.next_u64() % 6) as usize;
         let k = 2 + (rng.next_u64() % 48) as usize;
         let x = Tensor::randn(&[m, k], rng.next_u64());
-        let (q, s) = scale::quant_act_per_token(&x);
+        let (q, s) = scale::quant_act_per_token(&x).unwrap();
         for i in 0..m {
             for j in 0..k {
                 let deq = q.at2(i, j) as f32 * s[i];
@@ -1402,6 +1404,148 @@ fn prop_paged_decode_bit_identical_to_contiguous() {
     });
 }
 
+/// Int8 KV (the PR 9 tentpole) against the fp32 reference on one
+/// decode step: logits must TRACK the fp pool (quantization noise,
+/// not garbage — relative L2 under a loose bound, all finite), and
+/// `kv_bytes_moved` must count the bytes ACTUALLY stored — 4 bytes
+/// per element on the fp32 pool, 1 on the int8 pool (the satellite-3
+/// accounting fix: the counter used to assume fp32 width).
+#[test]
+fn prop_int8_paged_decode_tracks_fp_and_counts_stored_bytes() {
+    synth::ensure_artifacts("artifacts").expect("synthesize artifacts");
+    Prop::new("int8 paged decode").cases(2).check(|rng| {
+        let mut rt =
+            Runtime::with_backend("artifacts", BackendKind::Native)
+                .unwrap();
+        let info = rt.manifest.model("tiny3m").unwrap().clone();
+        let group = rt.manifest.group_size;
+        let (nl, nh, dh) = (info.n_layers, info.n_heads, info.head_dim);
+        let smax = info.max_seq;
+        let ckpt = random_checkpoint(&info, rng);
+        let qw = model::quantize_checkpoint(
+            &ckpt,
+            None,
+            &QuantRecipe::vanilla_w4(),
+            "fp",
+            group,
+        )
+        .unwrap();
+        let weights: Vec<runtime::Literal> = qw
+            .tensors
+            .iter()
+            .map(|t| runtime::literal_from_st(t).unwrap())
+            .collect();
+        let pairs: Vec<(&str, &runtime::Literal)> = qw
+            .names
+            .iter()
+            .map(String::as_str)
+            .zip(weights.iter())
+            .collect();
+        let staged =
+            rt.stage("tiny3m_fp_decode_b4", &pairs).unwrap();
+
+        let b = 4usize;
+        let mut lens = [0usize; 4];
+        let mut token = [0i32; 4];
+        for bi in 0..b {
+            lens[bi] = 1 + (rng.next_u64() % 20) as usize;
+            token[bi] = rng.range(3, info.vocab as i64 - 1) as i32;
+        }
+        let pos: Vec<i32> = lens.iter().map(|&l| l as i32).collect();
+        let bs = 8usize;
+        let n_blocks = 32usize;
+        let mut tables: Vec<Vec<u32>> = vec![Vec::new(); b];
+        let mut cursor = 0u32;
+        for bi in 0..b {
+            let need = (lens[bi] + 1).div_ceil(bs).max(1) as u32;
+            tables[bi] = (cursor..cursor + need).collect();
+            cursor += need;
+        }
+        let tbl: Vec<&[u32]> =
+            tables.iter().map(|t| t.as_slice()).collect();
+
+        // identical random history scattered into both pools (the
+        // int8 pool quantizes on scatter)
+        let mut pool_f =
+            KvBlockPool::new(n_blocks, bs, nl, nh, dh);
+        let mut pool_q = KvBlockPool::with_dtype(
+            n_blocks,
+            bs,
+            nl,
+            nh,
+            dh,
+            KvDtype::Int8,
+        );
+        let row_len = nh * smax * dh;
+        for l in 0..nl {
+            for bi in 0..b {
+                let mut k_row = vec![0f32; row_len];
+                let mut v_row = vec![0f32; row_len];
+                for h in 0..nh {
+                    for p in 0..lens[bi] {
+                        for t in 0..dh {
+                            let off = (h * smax + p) * dh + t;
+                            k_row[off] = rng.normal_f32() * 0.1;
+                            v_row[off] = rng.normal_f32() * 0.1;
+                        }
+                    }
+                }
+                pool_f
+                    .scatter_row(
+                        l, &tables[bi], lens[bi], smax, &k_row, &v_row,
+                    )
+                    .unwrap();
+                pool_q
+                    .scatter_row(
+                        l, &tables[bi], lens[bi], smax, &k_row, &v_row,
+                    )
+                    .unwrap();
+            }
+        }
+
+        let before_f = rt.staging_stats().kv_bytes_moved;
+        let out_f = rt
+            .run_decode_paged(&staged, &token, &pos, &mut pool_f, &tbl)
+            .unwrap();
+        let moved_f = rt.staging_stats().kv_bytes_moved - before_f;
+        let before_q = rt.staging_stats().kv_bytes_moved;
+        let out_q = rt
+            .run_decode_paged(&staged, &token, &pos, &mut pool_q, &tbl)
+            .unwrap();
+        let moved_q = rt.staging_stats().kv_bytes_moved - before_q;
+
+        // satellite 3: actual stored bytes, not assumed-fp32 width
+        let per_row = (2 * nh * dh) as u64;
+        assert_eq!(
+            moved_f,
+            nl as u64 * b as u64 * per_row * 4,
+            "fp32 pool must count 4 bytes per stored element"
+        );
+        assert_eq!(
+            moved_q,
+            nl as u64 * b as u64 * per_row,
+            "int8 pool must count 1 byte per stored element"
+        );
+
+        // quality: int8 logits track fp (noise, not garbage)
+        let lf = out_f.to_vec::<f32>().unwrap();
+        let lq = out_q.to_vec::<f32>().unwrap();
+        assert_eq!(lf.len(), lq.len());
+        let mut num = 0f64;
+        let mut den = 0f64;
+        for (a, q) in lf.iter().zip(lq.iter()) {
+            assert!(q.is_finite(), "int8 decode produced non-finite");
+            num += ((a - q) as f64).powi(2);
+            den += (*a as f64).powi(2);
+        }
+        let rel = (num / den.max(1e-12)).sqrt();
+        assert!(
+            rel < 0.25,
+            "int8 KV logits diverged from fp: rel L2 {rel:.4}"
+        );
+    });
+}
+
 /// Staged GEMM graphs (packed int4 payloads staged once, conversion
 /// still fused in-kernel) must also match unstaged execution bit for
 /// bit, across fp, W8A8, and the FastGEMM path.
@@ -1463,7 +1607,7 @@ fn prop_fastgemm_epilogue_matches_unpacked_route_bit_exact() {
         for &(k, n) in &shapes {
             let m = 2;
             let x = Tensor::randn(&[m, k], rng.next_u64());
-            let (xq, s_a) = scale::quant_act_per_token(&x);
+            let (xq, s_a) = scale::quant_act_per_token(&x).unwrap();
             // int4 weights covering ALL 16 nibble values: first rows
             // sweep -8..=7 in every column, the rest are random
             let mut q = Tensor::<i8>::zeros(&[k, n]);
@@ -1540,7 +1684,7 @@ fn prop_kernel_sets_bit_identical_across_dispatch() {
         let n = 1 + (rng.next_u64() % 140) as usize;
         let x = Tensor::randn(&[m, k], rng.next_u64());
         let wf = Tensor::randn(&[k, n], rng.next_u64());
-        let (xq, s_a) = scale::quant_act_per_token(&x);
+        let (xq, s_a) = scale::quant_act_per_token(&x).unwrap();
         let (w8, s_w8) = rtn::rtn_per_channel(&wf, 8, None, None);
         let (w4, s_w4) = rtn::rtn_per_channel(&wf, 4, None, None);
         let wp = pack::pack_int4(&w4);
