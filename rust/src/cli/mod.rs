@@ -148,6 +148,13 @@ SERVING FLAGS (generate / serve):
   --max-prompt N               admitted-prompt cap (default: the
                                prefill graph's seq bucket; validated
                                against it at engine construction)
+  --draft-k N                  speculative decoding: propose N tokens
+                               per step with the `{model}_draft`
+                               companion and verify them in ONE target
+                               chunk-window pass (default 0 = off;
+                               greedy-only, output bit-identical to
+                               plain greedy decode; env ODYSSEY_SPEC_K
+                               also honored)
 ";
 
 /// Paged-KV engine options shared by `generate` and `serve`.
@@ -197,6 +204,7 @@ pub fn parse_kv_flags(
             .map_err(|_| anyhow!("--max-prompt expects an integer"))?;
         opts.max_prompt = Some(n);
     }
+    opts.speculative = args.get_usize("draft-k", opts.speculative)?;
     Ok(())
 }
 
@@ -359,6 +367,8 @@ mod tests {
                 "32",
                 "--max-prompt",
                 "48",
+                "--draft-k",
+                "4",
             ]),
             &["no-paging", "no-prefix-cache", "no-chunking"],
         )
@@ -371,6 +381,7 @@ mod tests {
         assert!(opts.chunking, "--no-chunking was not passed");
         assert_eq!(opts.step_token_budget, 32);
         assert_eq!(opts.max_prompt, Some(48));
+        assert_eq!(opts.speculative, 4, "--draft-k sets speculative");
     }
 
     #[test]

@@ -25,6 +25,28 @@
 //! two-phase loop (whole-prompt `Step::Prefill` | `Step::Decode`),
 //! which also serves the contiguous-KV and unstaged configurations.
 //!
+//! # Speculative decoding (`--draft-k` / `ODYSSEY_SPEC_K`, opt-in)
+//!
+//! With `speculative = k > 0` the engine stages a second, much
+//! cheaper model — `{model}_draft`, fabricated by `runtime::synth`
+//! in the same tokenizer space — next to the target.  Each decode
+//! step of a GREEDY sequence then runs k draft decode passes to
+//! propose `d_1..d_k`, and scores all of them in ONE target pass by
+//! reusing the chunk-window prefill machinery: the window
+//! `[pos, pos + k + 1)` holds the true last token plus the proposals,
+//! so row `pos + i` yields exactly the logits the plain decode loop
+//! would have produced after accepting `d_1..d_i`.  The engine
+//! accepts the longest prefix on which the target's own sampler
+//! reproduces the draft and always emits the target's next token at
+//! the first divergence — so the token stream is BIT-IDENTICAL to
+//! non-speculative greedy decoding, only cheaper per token when the
+//! draft guesses well.  Rejected rows roll back via
+//! `PagedKv::truncate_seq` (CoW-shared tails were forked up front by
+//! `ensure_window_capacity`).  Sampling sequences
+//! (temperature > 0), contiguous KV, and unstaged weights fall back
+//! to the plain decode path; rejection-sampled speculation is
+//! follow-up work (ROADMAP).
+//!
 //! Python is long gone by the time this runs — graph math comes from the
 //! selected [`crate::runtime::ExecBackend`] and the weights from the
 //! rust quantizer.
@@ -139,6 +161,14 @@ pub struct EngineOptions {
     /// finishes the request with `FinishReason::Error` instead of
     /// panicking the engine thread (the sampler NaN-regression suite).
     pub nan_logits_after: Option<u64>,
+    /// speculative decoding draft depth k (0 = off, the default).
+    /// Opt-IN via `ODYSSEY_SPEC_K=k` / `--draft-k k`.  Requires the
+    /// paged KV pool and staged weights (otherwise speculation is
+    /// disabled with a log line) and a `{model}_draft` companion in
+    /// the manifest (otherwise construction fails fast).  Greedy
+    /// sequences emit bit-identical streams with or without it; see
+    /// the module docs.
+    pub speculative: usize,
 }
 
 impl Default for EngineOptions {
@@ -169,6 +199,7 @@ impl Default for EngineOptions {
             max_prompt: None,
             fail_step_after: None,
             nan_logits_after: None,
+            speculative: runtime::spec_k_from_env().unwrap_or(0),
         }
     }
 }
@@ -197,6 +228,13 @@ struct ActiveSeq {
     /// (largest); all branches of a request share one stamp and are
     /// evicted together
     admit_seq: u64,
+    /// Σ per-token log-probability under the branch's sampling
+    /// distribution (0.0 on greedy branches); feeds best-of-n ranking
+    sum_logprob: f64,
+    /// draft-model KV slot for speculative decoding; None = this
+    /// branch decodes on the plain path (sampling request, speculation
+    /// off, or the draft pool could not place it)
+    draft_slot: Option<usize>,
 }
 
 /// Book-keeping for an n>1 request: collects each branch's completion
@@ -269,6 +307,64 @@ impl KvBacking {
     }
 }
 
+/// The staged draft model backing speculative decoding: its own
+/// serving graphs (same variant/recipe as the target) and a PRIVATE
+/// paged KV pool sized for the worst case — `decode_batch` slots at
+/// `max_seq` positions — so draft capacity can never fail mid-step.
+/// The draft pool always stores fp32 (its reads feed proposals, which
+/// the target re-verifies anyway) and never shares prefixes.
+struct DraftState {
+    staged_prefill: StagedGraph,
+    staged_decode: StagedGraph,
+    kv: PagedKv,
+    /// the draft prefill graph's seq bucket
+    prefill_seq: usize,
+}
+
+/// Draft/target compatibility: proposals index the target's token
+/// space and draft positions mirror target positions, so the two
+/// models must agree on vocab and max_seq.  Checked at construction —
+/// a mismatched pair fails fast here instead of emitting garbage.
+pub(crate) fn validate_draft_target(
+    draft: &crate::formats::config::ModelInfo,
+    target: &crate::formats::config::ModelInfo,
+) -> Result<()> {
+    if draft.vocab != target.vocab {
+        bail!(
+            "draft model '{}' has vocab {} but target '{}' has {} — \
+             speculative proposals would index a different token space",
+            draft.name,
+            draft.vocab,
+            target.name,
+            target.vocab
+        );
+    }
+    if draft.max_seq != target.max_seq {
+        bail!(
+            "draft model '{}' has max_seq {} but target '{}' has {} — \
+             the draft cache could not mirror target positions",
+            draft.name,
+            draft.max_seq,
+            target.name,
+            target.max_seq
+        );
+    }
+    Ok(())
+}
+
+/// First-max-wins argmax over a draft logits row (same tie-break as
+/// the sampler's greedy path; NaNs lose every comparison and fall to
+/// index 0 — harmless, a bad proposal is simply rejected).
+fn draft_argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
 /// The engine.  Single-threaded by design (PJRT handles intra-op
 /// parallelism); wrap in [`super::EngineHandle`] for concurrent callers.
 pub struct Engine {
@@ -321,6 +417,9 @@ pub struct Engine {
     /// engine drivers like benches would otherwise grow it unbounded)
     events: Vec<TokenEvent>,
     token_events: bool,
+    /// staged draft model for speculative decoding; None = plain
+    /// decoding (speculation off, or unavailable on this config)
+    draft: Option<DraftState>,
 }
 
 impl Engine {
@@ -489,8 +588,27 @@ impl Engine {
                 info.head_dim,
             ))
         };
+        // ---- speculative decoding: stage the self-drafted companion
+        // model.  Rides on the paged pool + staged weights (verify
+        // reuses the chunk-window prefill path); other configs fall
+        // back to plain decoding with a log line.  A MISSING or
+        // incompatible draft with speculation requested is a config
+        // error and fails construction fast.
+        let draft = if opts.speculative > 0 {
+            if matches!(kv, KvBacking::Paged(_)) {
+                Some(Self::build_draft(&mut rt, &opts, &info, group)?)
+            } else {
+                crate::util::log::info(
+                    "speculative decoding rides on the paged KV pool \
+                     and staged weights; speculation disabled",
+                );
+                None
+            }
+        } else {
+            None
+        };
         crate::util::log::info(&format!(
-            "engine up: model={} variant={} backend={} kernels={} staging={} paging={} sched={} params={:.1}M graphs=({}, {}) in {:.2}s",
+            "engine up: model={} variant={} backend={} kernels={} staging={} paging={} sched={} spec={} params={:.1}M graphs=({}, {}) in {:.2}s",
             opts.model,
             opts.variant,
             rt.backend_name(),
@@ -514,6 +632,11 @@ impl Engine {
                 format!("chunked(budget={})", opts.step_token_budget)
             } else {
                 "two-phase".into()
+            },
+            if draft.is_some() {
+                format!("k={}", opts.speculative)
+            } else {
+                "off".into()
             },
             info.n_params as f64 / 1e6,
             prefill_graph,
@@ -547,8 +670,118 @@ impl Engine {
             finished: Vec::new(),
             events: Vec::new(),
             token_events: false,
+            draft,
             opts,
         })
+    }
+
+    /// Load, quantize, and stage the `{model}_draft` companion for
+    /// speculative decoding, with its own private KV pool.  The draft
+    /// reuses the target's variant and recipe (same quantizer path),
+    /// so a manifest regenerated by `runtime::synth` always carries a
+    /// compatible pair.
+    fn build_draft(
+        rt: &mut Runtime,
+        opts: &EngineOptions,
+        target: &crate::formats::config::ModelInfo,
+        group: usize,
+    ) -> Result<DraftState> {
+        let name = format!("{}_draft", opts.model);
+        let dinfo = rt
+            .manifest
+            .model(&name)
+            .map_err(|e| {
+                anyhow!(
+                    "speculative={} needs draft model '{name}' in the \
+                     manifest ({e}); regenerate artifacts — \
+                     runtime::synth fabricates it",
+                    opts.speculative
+                )
+            })?
+            .clone();
+        validate_draft_target(&dinfo, target)?;
+        let payload_names = model::payload_names(&dinfo, &opts.variant)?;
+        let ckpt = Checkpoint::load(&rt.manifest, &name)?;
+        let calib = if opts.recipe.use_gptq
+            || opts.recipe.use_lwc
+            || opts.recipe.use_smoothquant
+            || opts.recipe.use_awq
+        {
+            Some(Calibration::load(&rt.manifest, &name)?)
+        } else {
+            None
+        };
+        let qw = model::quantize_checkpoint(
+            &ckpt,
+            calib.as_ref(),
+            &opts.recipe,
+            &opts.variant,
+            group,
+        )?;
+        if qw.names != payload_names {
+            bail!("draft weight payload names diverge from manifest order");
+        }
+        let weight_args = qw
+            .tensors
+            .iter()
+            .map(runtime::literal_from_st)
+            .collect::<Result<Vec<_>>>()?;
+        let prefill_graph = rt.manifest.stage_graph(
+            &name,
+            &opts.variant,
+            "prefill",
+            opts.prefill_batch,
+        );
+        let decode_graph = rt.manifest.stage_graph(
+            &name,
+            &opts.variant,
+            "decode",
+            opts.decode_batch,
+        );
+        for (g, kind) in [
+            (&prefill_graph, GraphKind::Prefill),
+            (&decode_graph, GraphKind::Decode),
+        ] {
+            let gi = rt.manifest.graph(g)?;
+            if gi.kind != kind {
+                bail!("draft graph {g} has wrong kind");
+            }
+        }
+        rt.executable(&prefill_graph)?;
+        rt.executable(&decode_graph)?;
+        let (staged_prefill, staged_decode) = Self::stage_serving_graphs(
+            rt,
+            &prefill_graph,
+            &decode_graph,
+            &payload_names,
+            &weight_args,
+        )?;
+        let prefill_seq = rt.manifest.graph(&prefill_graph)?.seq;
+        let bs = opts.kv_block_size.max(1);
+        // worst-case pool: one slot per target decode slot, each able
+        // to reach max_seq — draft admission/growth can never fail
+        let blocks = opts.decode_batch * dinfo.max_seq.div_ceil(bs);
+        let kv = PagedKv::new(
+            opts.decode_batch,
+            dinfo.n_layers,
+            dinfo.n_heads,
+            dinfo.max_seq,
+            dinfo.head_dim,
+            bs,
+            blocks,
+        )
+        .with_prefix_cache(false);
+        Ok(DraftState {
+            staged_prefill,
+            staged_decode,
+            kv,
+            prefill_seq,
+        })
+    }
+
+    /// Is speculative decoding staged and live on this engine?
+    pub fn speculative_active(&self) -> bool {
+        self.draft.is_some()
     }
 
     /// Stage both serving graphs from ONE weight materialization: the
@@ -633,7 +866,7 @@ impl Engine {
         let mut errored = std::collections::BTreeSet::new();
         for key in actives {
             let seq = self.active.remove(&key).expect("listed active");
-            self.kv.free(seq.slot);
+            self.free_seq_kv(&seq);
             // one synthesized result per REQUEST, not per branch
             if errored.insert(key.0) {
                 self.finish_error(seq.req);
@@ -651,6 +884,38 @@ impl Engine {
         self.kv_lits = None;
     }
 
+    /// Release one branch's KV holds: the target slot AND (when
+    /// speculating) its draft slot — every free site goes through
+    /// here so the two pools can never skew.
+    fn free_seq_kv(&mut self, seq: &ActiveSeq) {
+        self.kv.free(seq.slot);
+        if let (Some(d), Some(ds)) = (&mut self.draft, seq.draft_slot) {
+            d.kv.free_seq(ds);
+        }
+    }
+
+    /// Retire a FINISHED branch: donate its whole cached thread —
+    /// prompt and generated blocks — to the prefix index, so a
+    /// multi-turn follow-up whose prompt is `prior prompt +
+    /// completion` re-prefills only the new turn; then release the
+    /// branch's holds.  (The newest token never has K/V yet, so the
+    /// donation covers exactly `pos` positions.)
+    fn retire_seq(&mut self, seq: &ActiveSeq) {
+        if let KvBacking::Paged(p) = &mut self.kv {
+            let pos = p.pos(seq.slot);
+            let plen = seq.req.prompt.len();
+            if pos > 0 && pos <= plen + seq.generated.len() {
+                let mut full = Vec::with_capacity(pos);
+                full.extend_from_slice(&seq.req.prompt[..plen.min(pos)]);
+                if pos > plen {
+                    full.extend_from_slice(&seq.generated[..pos - plen]);
+                }
+                p.donate_prefix(seq.slot, &full);
+            }
+        }
+        self.free_seq_kv(seq);
+    }
+
     /// Synthesize an error result for an aborted request.
     fn finish_error(&mut self, r: Request) {
         self.finished.push(GenResult {
@@ -659,6 +924,7 @@ impl Engine {
             tokens: Vec::new(),
             finish: FinishReason::Error,
             branches: Vec::new(),
+            best: None,
             ttft_s: 0.0,
             ttft_steps: 0,
             total_s: r.arrived.elapsed().as_secs_f64(),
@@ -701,6 +967,20 @@ impl Engine {
     /// this same step), then one decode token for every active.
     fn step_fused(&mut self) -> Result<bool> {
         let active_n = self.active.len();
+        // budget accounting: a speculative sequence consumes up to
+        // k+1 positions of target compute this step (k proposals
+        // verified + the bonus token), a plain one exactly 1
+        let decode_demand: usize = self
+            .active
+            .values()
+            .map(|s| {
+                if self.draft.is_some() && s.draft_slot.is_some() {
+                    self.opts.speculative + 1
+                } else {
+                    1
+                }
+            })
+            .sum();
         let budget = self.opts.step_token_budget;
         let (plan, rejected) = {
             let Engine {
@@ -728,7 +1008,7 @@ impl Engine {
                 policy,
                 queue,
                 sched,
-                active_n,
+                decode_demand,
                 budget,
                 true,
                 block_size,
@@ -946,6 +1226,7 @@ impl Engine {
             tokens: Vec::new(),
             finish: FinishReason::Rejected,
             branches: Vec::new(),
+            best: None,
             ttft_s: 0.0,
             ttft_steps: 0,
             total_s: r.arrived.elapsed().as_secs_f64(),
@@ -1131,6 +1412,7 @@ impl Engine {
                 tokens: Vec::new(),
                 finish: FinishReason::Error,
                 branches: Vec::new(),
+                best: None,
                 ttft_s,
                 ttft_steps,
                 total_s: total,
@@ -1178,10 +1460,11 @@ impl Engine {
                 branch,
             ));
             let ctx = SampleCtx { prompt: &req.prompt, generated: &[] };
-            let tok = stack
-                .sample(logits_row, &ctx, &mut rng)
+            let (tok, lp) = stack
+                .sample_scored(logits_row, &ctx, &mut rng)
                 .map_err(|e| anyhow!("sampling branch {branch}: {e}"))?;
             self.emit_token(req.id, branch, 0, tok);
+            let draft_slot = self.spawn_draft(&req)?;
             self.active.insert(
                 (req.id, branch),
                 ActiveSeq {
@@ -1195,10 +1478,67 @@ impl Engine {
                     stack,
                     rng,
                     admit_seq,
+                    sum_logprob: lp,
+                    draft_slot,
                 },
             );
         }
         Ok(())
+    }
+
+    /// Stand up the draft cache for one spec-eligible branch: a
+    /// private draft slot prefilled over the whole prompt in one pass,
+    /// logits discarded — the draft only ever proposes from decode
+    /// passes.  Returns None (plain decoding for this branch) when
+    /// speculation is off, the request samples (temperature > 0; only
+    /// greedy verification is bit-exact), or the prompt exceeds the
+    /// draft's prefill bucket.
+    fn spawn_draft(&mut self, req: &Request) -> Result<Option<usize>> {
+        if self.draft.is_none() || req.params.temperature > 0.0 {
+            return Ok(None);
+        }
+        let plen = req.prompt.len();
+        let (ds, b, s) = {
+            let d = self.draft.as_mut().expect("checked above");
+            if plen > d.prefill_seq {
+                return Ok(None);
+            }
+            let Some(ds) = d.kv.alloc_seq_uncached(req.id, plen)
+            else {
+                // unreachable by pool sizing, but a missing draft
+                // cache only costs speed — never fail the request
+                return Ok(None);
+            };
+            (ds, self.opts.prefill_batch, d.prefill_seq)
+        };
+        let mut tokens = vec![0i32; b * s];
+        tokens[..plen].copy_from_slice(&req.prompt);
+        let mut lengths = vec![0i32; b];
+        lengths[0] = plen as i32;
+        let starts = vec![0i32; b];
+        let mut ends = vec![0i32; b];
+        ends[0] = plen as i32;
+        {
+            let d = self.draft.as_mut().expect("checked above");
+            let (slot_tables, pool) = d.kv.decode_view();
+            let mut row_tables: Vec<&[u32]> = vec![&[]; b];
+            row_tables[0] = slot_tables[ds];
+            self.rt.run_prefill_paged(
+                &d.staged_prefill,
+                &tokens,
+                &lengths,
+                &starts,
+                &ends,
+                pool,
+                &row_tables,
+            )?;
+        }
+        self.draft
+            .as_mut()
+            .expect("checked above")
+            .kv
+            .finish_prefill(ds, plen)?;
+        Ok(Some(ds))
     }
 
     /// Sequences holding KV blocks: decoding branch sequences plus
@@ -1446,6 +1786,33 @@ impl Engine {
                 return Ok(());
             }
         }
+        // partition: speculative branches (greedy, with a draft cache)
+        // take the draft/verify path, everything else decodes one
+        // token on the plain path.  With speculation off `spec` stays
+        // empty and this is exactly the old single decode pass.
+        let mut spec: Vec<SeqKey> = Vec::new();
+        let mut norm: Vec<SeqKey> = Vec::new();
+        for (key, seq) in &self.active {
+            if self.draft.is_some() && seq.draft_slot.is_some() {
+                spec.push(*key);
+            } else {
+                norm.push(*key);
+            }
+        }
+        if !norm.is_empty() {
+            self.decode_step_for(&norm)?;
+        }
+        if !spec.is_empty() {
+            self.decode_spec_for(spec)?;
+        }
+        Ok(())
+    }
+
+    /// One plain decode pass for the listed branches: each advances
+    /// one position and samples one token.  This is every active on
+    /// the non-speculative path; under speculation it is the plain
+    /// remainder (speculative branches' batch rows stay masked idle).
+    fn decode_step_for(&mut self, keys: &[SeqKey]) -> Result<()> {
         let t0 = Instant::now();
         let b = self.opts.decode_batch;
         let v = self.info.vocab;
@@ -1453,7 +1820,8 @@ impl Engine {
 
         let mut token = vec![0i32; b];
         let mut pos = vec![0i32; b];
-        for seq in self.active.values() {
+        for key in keys {
+            let seq = &self.active[key];
             token[seq.slot] = seq.last_token;
             pos[seq.slot] = self.kv.pos(seq.slot) as i32;
         }
@@ -1473,8 +1841,9 @@ impl Engine {
                 // writes a bogus token into its pages
                 let mut tables: Vec<&[u32]> =
                     vec![&[]; slot_tables.len()];
-                for seq in self.active.values() {
-                    tables[seq.slot] = slot_tables[seq.slot];
+                for key in keys {
+                    let slot = self.active[key].slot;
+                    tables[slot] = slot_tables[slot];
                 }
                 let out = self.rt.run_decode_paged(
                     staged, &token, &pos, pool, &tables,
@@ -1552,15 +1921,16 @@ impl Engine {
         // can prove NaN rows error the request, not the engine thread
         if let Some(after) = self.opts.nan_logits_after {
             if self.step_counter >= after {
-                for seq in self.active.values() {
-                    logits[seq.slot * v] = f32::NAN;
+                for key in keys {
+                    logits[self.active[key].slot * v] = f32::NAN;
                 }
             }
         }
 
         // sample next token / finish branches
         let mut done: Vec<(SeqKey, FinishReason)> = Vec::new();
-        for (key, seq) in self.active.iter_mut() {
+        for key in keys {
+            let seq = self.active.get_mut(key).expect("listed branch");
             self.kv.advance(seq.slot)?;
             self.metrics.decode_tokens += 1;
             // inter-token latency in engine steps, per branch (1.0 =
@@ -1576,12 +1946,15 @@ impl Engine {
                 prompt: &seq.req.prompt,
                 generated: &seq.generated,
             };
-            let tok = match seq.stack.sample(
+            let tok = match seq.stack.sample_scored(
                 &logits[off..off + v],
                 &ctx,
                 &mut seq.rng,
             ) {
-                Ok(t) => t,
+                Ok((t, lp)) => {
+                    seq.sum_logprob += lp;
+                    t
+                }
                 Err(e) => {
                     // NaN row: error THIS branch, keep the batch alive
                     crate::util::log::info(&format!(
@@ -1620,7 +1993,375 @@ impl Engine {
         }
         for (key, finish) in done {
             let seq = self.active.remove(&key).unwrap();
-            self.kv.free(seq.slot);
+            self.retire_seq(&seq);
+            #[cfg(debug_assertions)]
+            if let KvBacking::Paged(p) = &self.kv {
+                p.check_conservation().expect("block conservation");
+            }
+            self.finish_branch(key, seq, finish);
+        }
+        self.sync_kv_gauges();
+        Ok(())
+    }
+
+    /// Speculative draft-k/verify-accept for the listed greedy
+    /// branches, in verify groups of `prefill_batch` rows:
+    ///
+    /// 1. catch the draft cache up to the target position (replaying
+    ///    true sequence tokens; lag accrues only when a step fell
+    ///    back to plain decode),
+    /// 2. run `k_eff` cheap draft decode passes, batched across the
+    ///    group, collecting greedy proposals `d_1..d_k`,
+    /// 3. score ALL proposals in ONE target chunk-window pass over
+    ///    `[pos, pos + k_eff + 1)`, then accept the longest prefix the
+    ///    target's own sampler reproduces and emit the target's next
+    ///    token at the first divergence — bit-identical to plain
+    ///    greedy decoding,
+    /// 4. roll rejected rows back (`truncate_seq`, target and draft).
+    ///
+    /// Branches whose window cannot run this step (k clipped to zero
+    /// by the seq bucket / max_seq / max_new_tokens, or a dry pool)
+    /// fall back to one plain decode token.
+    fn decode_spec_for(&mut self, keys: Vec<SeqKey>) -> Result<()> {
+        let k_max = self.opts.speculative;
+        let s = self.prefill_seq;
+        let max_seq = self.info.max_seq;
+        let mut fallback: Vec<SeqKey> = Vec::new();
+        // (key, pos, k_eff) for branches verifying this step
+        let mut planned: Vec<(SeqKey, usize, usize)> = Vec::new();
+        for key in keys {
+            let seq = &self.active[&key];
+            let p = self.kv.pos(seq.slot);
+            let remaining = seq
+                .req
+                .params
+                .max_new_tokens
+                .saturating_sub(seq.generated.len());
+            // the window [p, p + k + 1) must fit the prefill bucket,
+            // leave decode headroom under max_seq, and not overshoot
+            // the request's remaining token allowance
+            let k_eff = k_max
+                .min(s.saturating_sub(p + 1))
+                .min(max_seq.saturating_sub(p + 2))
+                .min(remaining.saturating_sub(1));
+            if k_eff == 0 {
+                fallback.push(key);
+                continue;
+            }
+            let ok = match &mut self.kv {
+                KvBacking::Paged(paged) => {
+                    paged.ensure_window_capacity(seq.slot, p + k_eff + 1)
+                }
+                KvBacking::Contiguous(_) => false,
+            };
+            if ok {
+                planned.push((key, p, k_eff));
+            } else {
+                fallback.push(key);
+            }
+        }
+        let groups: Vec<Vec<(SeqKey, usize, usize)>> = planned
+            .chunks(self.opts.prefill_batch)
+            .map(<[_]>::to_vec)
+            .collect();
+        for group in groups {
+            self.run_spec_group(&group)?;
+        }
+        if !fallback.is_empty() {
+            self.decode_step_for(&fallback)?;
+        }
+        Ok(())
+    }
+
+    /// One draft decode pass over the given draft slots (other rows
+    /// masked idle): K/V lands in the draft pool, the slots advance,
+    /// and the full logits buffer comes back for proposal argmax.
+    fn run_draft_decode(
+        &mut self,
+        token: &[i32],
+        dpos: &[i32],
+        rows: &[usize],
+    ) -> Result<Vec<f32>> {
+        let b = self.opts.decode_batch;
+        let v = self.info.vocab;
+        let d = self.draft.as_mut().expect("speculative path has a draft");
+        for &ds in rows {
+            if !d.kv.ensure_write_capacity(ds) {
+                bail!("draft KV pool sized for the worst case ran dry");
+            }
+        }
+        let logits = {
+            let (slot_tables, pool) = d.kv.decode_view();
+            let mut tables: Vec<&[u32]> = vec![&[]; slot_tables.len()];
+            for &ds in rows {
+                tables[ds] = slot_tables[ds];
+            }
+            let out = self.rt.run_decode_paged(
+                &d.staged_decode,
+                token,
+                dpos,
+                pool,
+                &tables,
+            )?;
+            runtime::literal_to_f32(&out, b * v)?
+        };
+        for &ds in rows {
+            d.kv.advance(ds)?;
+        }
+        Ok(logits)
+    }
+
+    /// Draft, verify, and accept for one group of ≤ `prefill_batch`
+    /// speculative branches (see [`Self::decode_spec_for`]).
+    fn run_spec_group(
+        &mut self,
+        group: &[(SeqKey, usize, usize)],
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        let b = self.opts.prefill_batch;
+        let db = self.opts.decode_batch;
+        let s = self.prefill_seq;
+        let v = self.info.vocab;
+        let max_seq = self.info.max_seq;
+
+        // ---- 1. draft catch-up: replay true sequence tokens until
+        // every draft cache reaches its target position
+        loop {
+            let mut token = vec![0i32; db];
+            let mut dpos = vec![0i32; db];
+            let mut rows: Vec<usize> = Vec::new();
+            for &(key, p, _) in group {
+                let seq = &self.active[&key];
+                let ds = seq.draft_slot.expect("speculative branch");
+                let dp =
+                    self.draft.as_ref().expect("has draft").kv.pos(ds);
+                if dp >= p {
+                    continue;
+                }
+                let plen = seq.req.prompt.len();
+                token[ds] = if dp < plen {
+                    seq.req.prompt[dp]
+                } else {
+                    seq.generated[dp - plen]
+                };
+                dpos[ds] = dp as i32;
+                rows.push(ds);
+            }
+            if rows.is_empty() {
+                break;
+            }
+            // logits discarded: these passes only rebuild draft K/V
+            self.run_draft_decode(&token, &dpos, &rows)?;
+        }
+
+        // ---- 2. k_eff proposal passes, batched across the group
+        let mut props: Vec<Vec<i32>> = vec![Vec::new(); group.len()];
+        let mut feed: Vec<i32> = group
+            .iter()
+            .map(|&(key, _, _)| self.active[&key].last_token)
+            .collect();
+        let k_top =
+            group.iter().map(|&(_, _, k)| k).max().unwrap_or(0);
+        for pass in 0..k_top {
+            let mut token = vec![0i32; db];
+            let mut dpos = vec![0i32; db];
+            let mut rows: Vec<usize> = Vec::new();
+            let mut live: Vec<usize> = Vec::new();
+            for (gi, &(key, p, k_eff)) in group.iter().enumerate() {
+                if pass >= k_eff {
+                    continue;
+                }
+                let ds = self.active[&key]
+                    .draft_slot
+                    .expect("speculative branch");
+                token[ds] = feed[gi];
+                dpos[ds] = (p + pass) as i32;
+                rows.push(ds);
+                live.push(gi);
+            }
+            if rows.is_empty() {
+                break;
+            }
+            let logits = self.run_draft_decode(&token, &dpos, &rows)?;
+            for gi in live {
+                let ds = self.active[&group[gi].0]
+                    .draft_slot
+                    .expect("speculative branch");
+                let d = draft_argmax(&logits[ds * v..(ds + 1) * v]);
+                props[gi].push(d);
+                feed[gi] = d;
+            }
+        }
+
+        // ---- 3. ONE target chunk-window pass scores every proposal:
+        // row r's window [p, p + k_eff + 1) holds the true last token
+        // plus the proposals, so logits at p + i are exactly what the
+        // plain decode loop would see after accepting d_1..d_i
+        let mut tokens = vec![0i32; b * s];
+        let mut lengths = vec![0i32; b];
+        let mut starts = vec![0i32; b];
+        let mut ends = vec![0i32; b];
+        for (row, &(key, p, k_eff)) in group.iter().enumerate() {
+            let seq = &self.active[&key];
+            let plen = seq.req.prompt.len();
+            let end = p + k_eff + 1;
+            let dst = &mut tokens[row * s..row * s + end];
+            dst[..plen].copy_from_slice(&seq.req.prompt);
+            dst[plen..p + 1].copy_from_slice(&seq.generated);
+            dst[p + 1..end].copy_from_slice(&props[row]);
+            lengths[row] = end as i32;
+            starts[row] = p as i32;
+            ends[row] = end as i32;
+        }
+        let logits = {
+            let Engine { kv, rt, staged_prefill, active, .. } = self;
+            let paged = match kv {
+                KvBacking::Paged(p) => p,
+                KvBacking::Contiguous(_) => {
+                    bail!("speculative verify on contiguous KV")
+                }
+            };
+            let staged = staged_prefill.as_ref().ok_or_else(|| {
+                anyhow!("speculative verify without staged weights")
+            })?;
+            let (slot_tables, pool) = paged.decode_view();
+            let mut row_tables: Vec<&[u32]> = vec![&[]; b];
+            for (row, &(key, _, _)) in group.iter().enumerate() {
+                row_tables[row] = slot_tables[active[&key].slot];
+            }
+            let out = rt.run_prefill_paged(
+                staged, &tokens, &lengths, &starts, &ends, pool,
+                &row_tables,
+            )?;
+            runtime::literal_to_f32(&out, b * s * v)?
+        };
+        self.metrics.decode_time_s += t0.elapsed().as_secs_f64();
+
+        // ---- 4. accept / emit / roll back, per branch
+        let mut done: Vec<(SeqKey, FinishReason)> = Vec::new();
+        for (row, &(key, p, k_eff)) in group.iter().enumerate() {
+            let seq = self.active.get_mut(&key).expect("listed branch");
+            let drafts = &props[row];
+            let gap = self
+                .step_counter
+                .saturating_sub(seq.last_token_step)
+                as f64;
+            let mut emitted = 0usize;
+            let mut accepted = 0usize;
+            let mut finish: Option<FinishReason> = None;
+            for i in 0..=k_eff {
+                let off = (row * s + p + i) * v;
+                let ctx = SampleCtx {
+                    prompt: &seq.req.prompt,
+                    generated: &seq.generated,
+                };
+                // the sequence's own sampler stack (greedy bypass
+                // consumes zero rng draws, repetition penalty sees
+                // the accepted prefix) — NOT a raw argmax
+                let tok = match seq.stack.sample(
+                    &logits[off..off + v],
+                    &ctx,
+                    &mut seq.rng,
+                ) {
+                    Ok(t) => t,
+                    Err(e) => {
+                        crate::util::log::info(&format!(
+                            "request {} branch {}: {e} — finishing \
+                             with FinishReason::Error",
+                            key.0, key.1
+                        ));
+                        finish = Some(FinishReason::Error);
+                        break;
+                    }
+                };
+                seq.generated.push(tok);
+                seq.last_token = tok;
+                emitted += 1;
+                let confirmed = i < k_eff && tok == drafts[i];
+                if confirmed {
+                    accepted += 1;
+                }
+                // field access, not `self.emit_token`: `self.active`
+                // is mutably borrowed through `seq`
+                if self.token_events {
+                    self.events.push(TokenEvent {
+                        id: key.0,
+                        branch: key.1,
+                        index: seq.generated.len() - 1,
+                        token: tok,
+                    });
+                }
+                // finish checks mirror the plain decode path exactly
+                // (eos -> stop -> max/cap), per emitted token
+                let hit_eos = seq.req.params.eos == Some(tok);
+                let hit_stop = seq.stack.hits_stop(&seq.generated);
+                let hit_max = seq.generated.len()
+                    >= seq.req.params.max_new_tokens;
+                let hit_cap = max_seq - (p + emitted) <= 1;
+                if hit_eos {
+                    finish = Some(FinishReason::Eos);
+                    break;
+                }
+                if hit_stop {
+                    finish = Some(FinishReason::Stop);
+                    break;
+                }
+                if hit_max || hit_cap {
+                    finish = Some(FinishReason::MaxTokens);
+                    break;
+                }
+                if !confirmed {
+                    break; // divergence: tok IS the corrected token
+                }
+            }
+            // ITL: the verify pass delivers its first token at this
+            // step's gap and the rest within the same iteration
+            for j in 0..emitted {
+                self.metrics
+                    .itl_steps
+                    .add(if j == 0 { gap } else { 0.0 });
+            }
+            if emitted > 0 {
+                seq.last_token_step = self.step_counter;
+            }
+            self.metrics.spec_steps += 1;
+            self.metrics.draft_tokens_proposed += k_eff as u64;
+            self.metrics.spec_accepted_tokens += accepted as u64;
+            self.metrics.spec_emitted_tokens += emitted as u64;
+            self.metrics.decode_tokens += emitted as u64;
+            if emitted < k_eff + 1 {
+                self.metrics.spec_rollbacks += 1;
+            }
+            // commit: the window wrote K/V for [p, p + k_eff]; the
+            // sequence owns [0, p + emitted) now (its newest token
+            // never has K/V yet, same as plain decode) — the rest
+            // rolls back to the pool
+            let (slot, ds) =
+                (seq.slot, seq.draft_slot.expect("speculative branch"));
+            match &mut self.kv {
+                KvBacking::Paged(paged) => {
+                    paged.truncate_seq(slot, p + emitted)
+                }
+                KvBacking::Contiguous(_) => {
+                    bail!("speculative commit on contiguous KV")
+                }
+            }
+            if let Some(fr) = finish {
+                done.push((key, fr));
+            } else {
+                // draft rows are valid through the accepted prefix
+                // (position p holds the true last token, p + i holds
+                // confirmed d_i); everything past it re-drafts later
+                self.draft
+                    .as_mut()
+                    .expect("has draft")
+                    .kv
+                    .truncate_seq(ds, p + (accepted + 1).min(k_eff));
+            }
+        }
+        for (key, finish) in done {
+            let seq = self.active.remove(&key).expect("listed branch");
+            self.retire_seq(&seq);
             #[cfg(debug_assertions)]
             if let KvBacking::Paged(p) = &self.kv {
                 p.check_conservation().expect("block conservation");
@@ -1644,14 +2385,31 @@ impl Engine {
         let (id, branch) = key;
         let total = seq.req.arrived.elapsed().as_secs_f64();
         if let Some(set) = self.branch_sets.get_mut(&id) {
-            set.done[branch as usize] =
-                Some(BranchResult { tokens: seq.generated, finish });
+            set.done[branch as usize] = Some(BranchResult {
+                sum_logprob: seq.sum_logprob,
+                tokens: seq.generated,
+                finish,
+            });
             if set.done.iter().all(Option::is_some) {
                 let set = self.branch_sets.remove(&id).unwrap();
                 let branches: Vec<BranchResult> =
                     set.done.into_iter().map(Option::unwrap).collect();
                 let n_tokens =
                     branches.iter().map(|b| b.tokens.len()).sum();
+                // best-of-n: highest sum-logprob branch, sampling
+                // requests only (greedy branches all tie at 0.0);
+                // ties keep the LOWEST branch index
+                let best = if seq.req.params.temperature > 0.0 {
+                    let mut bi = 0usize;
+                    for (i, b) in branches.iter().enumerate() {
+                        if b.sum_logprob > branches[bi].sum_logprob {
+                            bi = i;
+                        }
+                    }
+                    Some(bi)
+                } else {
+                    None
+                };
                 self.metrics.record_completion(
                     seq.ttft_s,
                     seq.ttft_steps,
@@ -1664,6 +2422,7 @@ impl Engine {
                     tokens: branches[0].tokens.clone(),
                     finish: branches[0].finish,
                     branches,
+                    best,
                     ttft_s: seq.ttft_s,
                     ttft_steps: seq.ttft_steps,
                     total_s: total,
@@ -1682,9 +2441,11 @@ impl Engine {
                 tokens: seq.generated.clone(),
                 finish,
                 branches: vec![BranchResult {
+                    sum_logprob: seq.sum_logprob,
                     tokens: seq.generated,
                     finish,
                 }],
+                best: None,
                 ttft_s: seq.ttft_s,
                 ttft_steps: seq.ttft_steps,
                 total_s: total,
@@ -1802,7 +2563,7 @@ impl Engine {
             for key in keys {
                 let seq =
                     self.active.remove(&key).expect("listed branch");
-                self.kv.free(seq.slot);
+                self.free_seq_kv(&seq);
                 n_tokens += seq.generated.len();
                 req = Some(seq.req);
             }
@@ -1834,7 +2595,7 @@ impl Engine {
     fn finish_branch_at_capacity(&mut self, key: SeqKey) {
         let seq =
             self.active.remove(&key).expect("finish target active");
-        self.kv.free(seq.slot);
+        self.retire_seq(&seq);
         self.finish_branch(key, seq, FinishReason::MaxTokens);
     }
 
@@ -1972,3 +2733,55 @@ impl Engine {
 // penalty, stop sequences) with a bit-identical greedy bypass and
 // replayable seeded draws.  See that module's tests for the sampler
 // regression suite (NaN handling, underflow fallback, determinism).
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::config::ModelInfo;
+
+    fn mi(name: &str, vocab: usize, max_seq: usize) -> ModelInfo {
+        ModelInfo {
+            name: name.into(),
+            d_model: 64,
+            n_layers: 1,
+            n_heads: 4,
+            d_ff: 64,
+            vocab,
+            max_seq,
+            head_dim: 16,
+            weights_file: format!("{name}.safetensors"),
+            hessians_file: format!("hessians_{name}.safetensors"),
+            n_params: 0,
+        }
+    }
+
+    #[test]
+    fn draft_shape_mismatch_fails_fast() {
+        let target = mi("tiny3m", 512, 256);
+        assert!(validate_draft_target(
+            &mi("tiny3m_draft", 512, 256),
+            &target
+        )
+        .is_ok());
+        let err = validate_draft_target(
+            &mi("tiny3m_draft", 1024, 256),
+            &target,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("vocab"), "{err}");
+        let err = validate_draft_target(
+            &mi("tiny3m_draft", 512, 128),
+            &target,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("max_seq"), "{err}");
+    }
+
+    #[test]
+    fn draft_argmax_first_max_wins() {
+        assert_eq!(draft_argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
+        assert_eq!(draft_argmax(&[f32::NAN, 1.0, 0.5]), 1);
+    }
+}

@@ -1145,6 +1145,92 @@ impl PagedKv {
         true
     }
 
+    /// Back positions `pos..upto` of `slot` with PRIVATE pages — the
+    /// speculative verify window writes `upto - pos` K/V rows in one
+    /// chunk-window pass.  Every existing block the window writes into
+    /// that is shared (refcount > 1) is copy-on-write forked first, and
+    /// missing tail blocks are allocated (reclaiming index-only blocks
+    /// under pressure).  False = pool dry; the table is restored to its
+    /// pre-call length (grown blocks released, completed forks kept —
+    /// both leave the committed positions `0..pos` intact), so the
+    /// caller can simply fall back to plain one-token decode.
+    pub fn ensure_window_capacity(
+        &mut self,
+        slot: usize,
+        upto: usize,
+    ) -> bool {
+        debug_assert!(
+            self.pos[slot] <= upto && upto <= self.max_seq,
+            "window [{}, {upto}) outside max_seq {}",
+            self.pos[slot],
+            self.max_seq
+        );
+        let bs = self.pool.block_size;
+        let first = self.pos[slot] / bs;
+        let need = self.blocks_for(upto);
+        let committed = self.tables[slot].len();
+        // CoW-fork every shared block the window will write into
+        for idx in first..committed.min(need) {
+            let b = self.tables[slot][idx];
+            if self.alloc.ref_count(b) <= 1 {
+                continue;
+            }
+            match self.alloc_reclaiming() {
+                Some(nb) => {
+                    self.pool.copy_block(b, nb);
+                    self.alloc.release(b).expect("forking a held block");
+                    self.tables[slot][idx] = nb;
+                    self.cow_forks += 1;
+                }
+                None => return false,
+            }
+        }
+        while self.tables[slot].len() < need {
+            match self.alloc_reclaiming() {
+                Some(b) => self.tables[slot].push(b),
+                None => {
+                    // drop exactly the blocks this call grew: they are
+                    // private and unwritten, nothing else holds them
+                    while self.tables[slot].len() > committed {
+                        let b = self.tables[slot]
+                            .pop()
+                            .expect("len > committed");
+                        self.alloc
+                            .release(b)
+                            .expect("releasing a just-grown block");
+                    }
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Commit a speculative verify outcome: the accepted prefix of the
+    /// window becomes the sequence's new position (`new_pos` may be
+    /// AHEAD of the current `pos` — the window already wrote those
+    /// rows) and table blocks past `blocks_for(new_pos)` — the rejected
+    /// draft rows' pages — return to the pool.  Dropped blocks were
+    /// grown or CoW-forked by [`Self::ensure_window_capacity`], so they
+    /// are private and releasing them cannot disturb prefix-index or
+    /// sibling holders.  With an int8 pool the surviving tail block may
+    /// keep scales widened by rejected rows — int8 KV is lossy by
+    /// design; the exactness contract is pinned on the fp32 pool.
+    pub fn truncate_seq(&mut self, slot: usize, new_pos: usize) {
+        debug_assert!(
+            self.slots[slot].is_some() && new_pos <= self.max_seq,
+            "truncating idle slot {slot} or past max_seq"
+        );
+        let keep = self.blocks_for(new_pos);
+        while self.tables[slot].len() > keep {
+            let b = self.tables[slot].pop().expect("len > keep >= 1");
+            self.alloc
+                .release(b)
+                .expect("window block was held by this table");
+        }
+        self.pos[slot] = new_pos;
+    }
+
     /// Mark a sequence prefilled through the paged prefill path (K/V
     /// already written through the table in place — nothing to
     /// install).
@@ -1842,6 +1928,101 @@ mod tests {
         p.free_seq(c.slot);
         p.flush_prefix_index();
         assert_eq!(p.free_blocks(), 6, "nothing leaked");
+        p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn window_capacity_grows_and_truncate_rolls_back() {
+        let mut p = paged(); // 2 slots, block 4, max_seq 32, 6 blocks
+        let s = p.alloc_seq(1, &uniq(1, 6)).unwrap().slot; // 2 blocks
+        p.finish_prefill(s, 6).unwrap();
+        // verify window [6, 11): writes positions 6..10 -> 3 blocks
+        assert!(p.ensure_window_capacity(s, 11));
+        assert_eq!(p.table(s).len(), 3);
+        p.check_conservation().unwrap();
+        // accept 1 draft + the target's own token: commit pos 8; the
+        // block backing only rejected rows returns to the pool
+        p.truncate_seq(s, 8);
+        assert_eq!(p.pos(s), 8);
+        assert_eq!(p.table(s).len(), 2);
+        p.check_conservation().unwrap();
+        // a window already inside committed blocks is a no-op
+        assert!(p.ensure_window_capacity(s, 8));
+        assert_eq!(p.table(s).len(), 2);
+        p.free_seq(s);
+        assert_eq!(p.free_blocks(), 6, "nothing leaked");
+        p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn window_capacity_cow_forks_shared_tail() {
+        let mut p = PagedKv::new(4, 2, 2, 64, 4, 4, 12);
+        let prompt = uniq(7, 11); // 3 blocks, tail partially filled
+        let a = p.alloc_seq(1, &prompt).unwrap();
+        p.finish_prefill(a.slot, 11).unwrap();
+        let t = p.fork_seq(a.slot, 2).unwrap();
+        // the twin's verify window writes into the shared tail block:
+        // it must fork before the window pass runs
+        let forks = p.cow_forks();
+        assert!(p.ensure_window_capacity(t, 13));
+        assert_eq!(p.cow_forks(), forks + 1);
+        assert_ne!(p.table(t)[2], p.table(a.slot)[2], "tail forked");
+        assert_eq!(p.ref_count(p.table(t)[2]), 1, "write range private");
+        assert_eq!(p.table(t).len(), 4);
+        p.check_conservation().unwrap();
+        p.free_seq(t);
+        p.free_seq(a.slot);
+        assert_eq!(p.free_blocks(), 12);
+        p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn window_capacity_dry_pool_restores_table() {
+        let mut p = paged(); // 6 blocks
+        let a = p.alloc_seq(1, &uniq(1, 12)).unwrap().slot; // 3 blocks
+        p.finish_prefill(a, 12).unwrap();
+        let b = p.alloc_seq(2, &uniq(2, 8)).unwrap().slot; // 2 blocks
+        p.finish_prefill(b, 8).unwrap();
+        // one free block; a window needing three more must fail AND
+        // restore the table so plain decode can proceed
+        assert!(!p.ensure_window_capacity(a, 21), "pool must run dry");
+        assert_eq!(p.table(a).len(), 3, "failed grow restored");
+        assert_eq!(p.free_blocks(), 1);
+        p.check_conservation().unwrap();
+        // a smaller window still fits
+        assert!(p.ensure_window_capacity(a, 16));
+        assert_eq!(p.table(a).len(), 4);
+        p.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn donating_generated_blocks_enables_multi_turn_reuse() {
+        let mut p = PagedKv::new(2, 2, 2, 64, 4, 4, 12);
+        let prompt = uniq(3, 8); // 2 full blocks
+        let a = p.alloc_seq(1, &prompt).unwrap();
+        p.finish_prefill(a.slot, 8).unwrap();
+        // decode 8 tokens: the cache then holds prompt ++ generated
+        let generated = uniq(4, 8);
+        for _ in 0..8 {
+            assert!(p.ensure_write_capacity(a.slot));
+            p.advance(a.slot).unwrap();
+        }
+        let mut full = prompt.clone();
+        full.extend(&generated);
+        // multi-turn donation: ALL full blocks, not just the prompt's
+        p.donate_prefix(a.slot, &full);
+        assert_eq!(p.prefix_index_blocks(), 4);
+        p.free_seq(a.slot);
+        p.check_conservation().unwrap();
+        // follow-up turn with prompt = prior prompt + completion hits
+        // the whole chain
+        assert_eq!(p.probe_cached_blocks(&full), 4);
+        let b = p.alloc_seq(2, &full).unwrap();
+        assert_eq!(
+            b.start,
+            15,
+            "full hit recomputes only the last position"
+        );
         p.check_conservation().unwrap();
     }
 

@@ -58,6 +58,22 @@ pub struct EngineMetrics {
     /// pins this at 0; the legacy two-phase loop accrues one stall
     /// per prefill step that runs with actives resident.
     pub max_decode_stall_steps: u64,
+    /// speculative decoding: per-sequence verify passes run (each one
+    /// target chunk-window pass scoring k draft proposals)
+    pub spec_steps: u64,
+    /// draft tokens proposed across all verify passes (Σ k_eff)
+    pub draft_tokens_proposed: u64,
+    /// draft tokens accepted by target greedy verification (Σ a);
+    /// emitted tokens per verify pass = accepted + 1 (the target's own
+    /// next token always lands)
+    pub spec_accepted_tokens: u64,
+    /// tokens emitted by verify passes (accepted drafts + the target's
+    /// own token, clipped by eos/stop/max); numerator of
+    /// [`Self::accepted_tokens_per_target_step`]
+    pub spec_emitted_tokens: u64,
+    /// verify passes that rejected at least one draft token and rolled
+    /// the rejected rows' KV blocks back via `truncate_seq`
+    pub spec_rollbacks: u64,
     pub ttft: Summary,
     pub total_latency: Summary,
     pub tokens_out: Summary,
@@ -108,14 +124,34 @@ impl EngineMetrics {
         }
     }
 
-    /// `(p50, p95)` of per-request TTFT in engine steps.
-    pub fn ttft_steps_pcts(&mut self) -> (f64, f64) {
-        (self.ttft_steps.p50(), self.ttft_steps.p95())
+    /// `(p50, p95, p99)` of per-request TTFT in engine steps — the
+    /// same quantiles loadgen reports, so the two layers agree.
+    pub fn ttft_steps_pcts(&mut self) -> (f64, f64, f64) {
+        (
+            self.ttft_steps.p50(),
+            self.ttft_steps.p95(),
+            self.ttft_steps.p99(),
+        )
     }
 
-    /// `(p50, p95)` of inter-token latency in engine steps.
-    pub fn itl_steps_pcts(&mut self) -> (f64, f64) {
-        (self.itl_steps.p50(), self.itl_steps.p95())
+    /// `(p50, p95, p99)` of inter-token latency in engine steps.
+    pub fn itl_steps_pcts(&mut self) -> (f64, f64, f64) {
+        (
+            self.itl_steps.p50(),
+            self.itl_steps.p95(),
+            self.itl_steps.p99(),
+        )
+    }
+
+    /// Mean tokens emitted per target verify pass — the speculative
+    /// speedup gauge (1.0 = no better than plain decode; k+1 = every
+    /// draft accepted).  0.0 until a verify pass has run.
+    pub fn accepted_tokens_per_target_step(&self) -> f64 {
+        if self.spec_steps > 0 {
+            self.spec_emitted_tokens as f64 / self.spec_steps as f64
+        } else {
+            0.0
+        }
     }
 
     /// Multi-line human report.
@@ -130,8 +166,10 @@ impl EngineMetrics {
              decode : {} steps, {} tokens, {:.1} tok/s ({:.3}s total)\n\
              sched  : {} engine steps, peak queue depth {}, \
              max decode stall {} steps, \
-             ttft p50/p95 {:.1}/{:.1} steps, itl p50/p95 {:.1}/{:.1} \
-             steps\n\
+             ttft p50/p95/p99 {:.1}/{:.1}/{:.1} steps, \
+             itl p50/p95/p99 {:.1}/{:.1}/{:.1} steps\n\
+             spec   : {} verify passes, {} proposed, {} accepted, \
+             {} emitted, {} rollbacks, {:.2} tokens/target-step\n\
              ttft   : {}\n\
              e2e    : {}",
             self.completed,
@@ -158,8 +196,16 @@ impl EngineMetrics {
             self.max_decode_stall_steps,
             self.ttft_steps.p50(),
             self.ttft_steps.p95(),
+            self.ttft_steps.p99(),
             self.itl_steps.p50(),
             self.itl_steps.p95(),
+            self.itl_steps.p99(),
+            self.spec_steps,
+            self.draft_tokens_proposed,
+            self.spec_accepted_tokens,
+            self.spec_emitted_tokens,
+            self.spec_rollbacks,
+            self.accepted_tokens_per_target_step(),
             self.ttft.report_ms(),
             self.total_latency.report_ms(),
         )
@@ -179,6 +225,33 @@ mod tests {
         m.record_completion(0.1, 3, 1.0, 16);
         assert_eq!(m.completed, 1);
         assert!(m.report().contains("completed=1"));
+    }
+
+    #[test]
+    fn speculative_accounting() {
+        let mut m = EngineMetrics::default();
+        assert_eq!(m.accepted_tokens_per_target_step(), 0.0);
+        // two verify passes: 4+4 proposed, 3+1 accepted -> 4+2 emitted
+        m.spec_steps = 2;
+        m.draft_tokens_proposed = 8;
+        m.spec_accepted_tokens = 4;
+        m.spec_emitted_tokens = 6;
+        m.spec_rollbacks = 1;
+        assert!((m.accepted_tokens_per_target_step() - 3.0).abs() < 1e-9);
+        assert!(m.report().contains("2 verify passes"));
+    }
+
+    #[test]
+    fn step_latency_pcts_include_p99() {
+        let mut m = EngineMetrics::default();
+        for i in 0..100 {
+            m.ttft_steps.add(i as f64);
+            m.itl_steps.add(1.0);
+        }
+        let (p50, p95, p99) = m.ttft_steps_pcts();
+        assert!(p50 < p95 && p95 < p99, "quantiles must be ordered");
+        let (i50, i95, i99) = m.itl_steps_pcts();
+        assert_eq!((i50, i95, i99), (1.0, 1.0, 1.0));
     }
 
     #[test]

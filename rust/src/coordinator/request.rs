@@ -101,6 +101,9 @@ pub struct TokenEvent {
 pub struct BranchResult {
     pub tokens: Vec<i32>,
     pub finish: FinishReason,
+    /// Σ per-token log-probability under the branch's post-transform
+    /// sampling distribution (0.0 on greedy branches — a point mass)
+    pub sum_logprob: f64,
 }
 
 /// Completed generation.
@@ -116,6 +119,11 @@ pub struct GenResult {
     /// results (rejections / engine errors before spawn), where
     /// `tokens`/`finish` above are authoritative.
     pub branches: Vec<BranchResult>,
+    /// best-of-n ranking: index into `branches` of the completion with
+    /// the highest `sum_logprob`.  `None` unless n > 1 AND sampling
+    /// (temperature > 0) — greedy branches all tie at 0.0, so ranking
+    /// them would be noise.
+    pub best: Option<usize>,
     /// time to first token (prefill + queueing), seconds
     pub ttft_s: f64,
     /// time to first token in ENGINE STEPS (submit -> first token) —
@@ -156,6 +164,7 @@ mod tests {
             tokens: vec![1, 2, 3, 4],
             finish: FinishReason::MaxTokens,
             branches: Vec::new(),
+            best: None,
             ttft_s: 0.1,
             ttft_steps: 2,
             total_s: 2.0,

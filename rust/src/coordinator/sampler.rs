@@ -257,18 +257,23 @@ fn softmax(cands: &[(usize, f32)]) -> Vec<f64> {
 /// Walk the CDF with draw `u`; on fallthrough (accumulated rounding
 /// left the total mass below `u`) return the MAX-probability candidate
 /// — never the tail, which under top-k is the least likely token.
-fn draw_from(probs: &[f64], cands: &[(usize, f32)], mut u: f64) -> i32 {
+fn draw_index(probs: &[f64], mut u: f64) -> usize {
     let mut best = 0usize;
     for (k, &p) in probs.iter().enumerate() {
         if u < p {
-            return cands[k].0 as i32;
+            return k;
         }
         u -= p;
         if p > probs[best] {
             best = k;
         }
     }
-    cands[best].0 as i32
+    best
+}
+
+/// [`draw_index`] mapped back to the candidate's vocab id.
+fn draw_from(probs: &[f64], cands: &[(usize, f32)], u: f64) -> i32 {
+    cands[draw_index(probs, u)].0 as i32
 }
 
 /// The exact pre-stack greedy argmax (first max wins).  NaN rows are
@@ -331,11 +336,28 @@ impl SamplerStack {
         ctx: &SampleCtx<'_>,
         rng: &mut SamplerRng,
     ) -> Result<i32, SampleError> {
+        self.sample_scored(logits, ctx, rng).map(|(t, _)| t)
+    }
+
+    /// [`Self::sample`] plus the chosen token's log-probability under
+    /// the post-transform distribution — the per-token increment of a
+    /// branch's sum-logprob (best-of-n ranking).  Greedy paths score
+    /// `0.0` (a point mass; all greedy branches tie, matching the
+    /// ranking being defined only for temperature > 0).  Draw behavior
+    /// is IDENTICAL to `sample`: zero draws on the greedy bypass, one
+    /// CDF draw otherwise, so scored and unscored streams replay
+    /// bit-identically.
+    pub fn sample_scored(
+        &self,
+        logits: &[f32],
+        ctx: &SampleCtx<'_>,
+        rng: &mut SamplerRng,
+    ) -> Result<(i32, f64), SampleError> {
         if logits.iter().any(|v| v.is_nan()) {
             return Err(SampleError::NanLogits);
         }
         if self.greedy && self.transforms.is_empty() {
-            return Ok(argmax(logits) as i32);
+            return Ok((argmax(logits) as i32, 0.0));
         }
         let mut cands: Vec<(usize, f32)> =
             logits.iter().copied().enumerate().collect();
@@ -348,10 +370,12 @@ impl SamplerStack {
             let best = cands
                 .iter()
                 .fold(cands[0], |b, &c| if c.1 > b.1 { c } else { b });
-            return Ok(best.0 as i32);
+            return Ok((best.0 as i32, 0.0));
         }
         let probs = softmax(&cands);
-        Ok(draw_from(&probs, &cands, rng.next_f64()))
+        let k = draw_index(&probs, rng.next_f64());
+        let logprob = probs[k].max(f64::MIN_POSITIVE).ln();
+        Ok((cands[k].0 as i32, logprob))
     }
 
     /// True when any configured stop sequence is a suffix of
@@ -481,6 +505,32 @@ mod tests {
         let cands = vec![(3usize, 0.0f32), (9, 0.0), (1, 0.0)];
         let probs = vec![0.1f64, 0.3, 0.05];
         assert_eq!(draw_from(&probs, &cands, 0.999), 9);
+    }
+
+    #[test]
+    fn scored_sampling_matches_unscored_and_ranks_mass() {
+        let stack = SamplerStack::from_params(&params(0.8, 0));
+        let logits = vec![1.0f32, 4.0, 0.5, 3.8];
+        let mut a = SamplerRng::new(99);
+        let mut b = SamplerRng::new(99);
+        let mut sum = 0.0f64;
+        for _ in 0..30 {
+            let t = stack.sample(&logits, &ctx(), &mut a).unwrap();
+            let (ts, lp) =
+                stack.sample_scored(&logits, &ctx(), &mut b).unwrap();
+            assert_eq!(t, ts, "scored picks the same token");
+            assert!(lp <= 0.0 && lp.is_finite());
+            sum += lp;
+        }
+        assert_eq!(a.draws(), b.draws(), "identical draw consumption");
+        assert!(sum < 0.0);
+        // greedy scores a point mass: logprob exactly 0, no draw
+        let greedy = SamplerStack::from_params(&params(0.0, 0));
+        let mut rng = SamplerRng::new(1);
+        let (t, lp) =
+            greedy.sample_scored(&logits, &ctx(), &mut rng).unwrap();
+        assert_eq!((t, lp), (1, 0.0));
+        assert_eq!(rng.draws(), 0);
     }
 
     #[test]

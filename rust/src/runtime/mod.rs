@@ -1156,6 +1156,18 @@ pub fn step_token_budget_from_env() -> Option<usize> {
         .filter(|&n| n > 0)
 }
 
+/// `ODYSSEY_SPEC_K=k` (k >= 1) opts the engine into speculative
+/// decoding with the self-drafted companion model: k draft proposals
+/// per target step, scored in one chunk-window verify pass (see
+/// `EngineOptions::speculative`).  Unset, `0`, or unparsable leaves
+/// speculation off — like `ODYSSEY_KV_QUANT` this knob is opt-IN.
+pub fn spec_k_from_env() -> Option<usize> {
+    std::env::var("ODYSSEY_SPEC_K")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&k| k > 0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

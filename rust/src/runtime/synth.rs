@@ -8,11 +8,18 @@
 //!
 //! * `tiny3m.safetensors` — a deterministic random-init checkpoint
 //!   (LLaMA layout, canonical weight names).
+//! * `tiny3m_draft.safetensors` — the speculative-decoding companion: a
+//!   one-layer, d=128 model in the SAME tokenizer space whose layer
+//!   matrices are exactly zero and whose embedding/lm_head encode a
+//!   bigram table distilled from the target's own fp argmax (see
+//!   [`write_draft_checkpoint`]) — cheap to run, agrees with the
+//!   target's greedy choice often, identical under every quant variant.
 //! * `corpus_train.bin` / `corpus_val.bin` + `tasks.json` — a synthetic
 //!   token stream and eval task file for the evaluators.
-//! * `hessians_tiny3m.safetensors` — REAL calibration statistics
-//!   (absmax / absmean / Hessians / activation samples per tap),
-//!   collected by running the native fp prefill over the corpus.
+//! * `hessians_tiny3m.safetensors` (and the `_draft` twin) — REAL
+//!   calibration statistics (absmax / absmean / Hessians / activation
+//!   samples per tap), collected by running the native fp prefill over
+//!   the corpus.
 //! * `manifest.json` + placeholder `*.hlo.txt` files — every serving
 //!   graph (6 variants x prefill/decode x batch buckets) and the cpu
 //!   GEMM shape set.  The native backend interprets graphs from the
@@ -75,6 +82,27 @@ fn tiny3m() -> ModelInfo {
     }
 }
 
+/// The self-drafted speculative-decoding companion: narrow and shallow
+/// (one layer, d=128) but the SAME vocab and max_seq as the target, so
+/// draft proposals are valid target inputs and the two KV managers
+/// share position arithmetic.
+fn tiny3m_draft() -> ModelInfo {
+    let (d, l, h, ff, v, smax) = (128, 1, 4, 128, 512, 256);
+    ModelInfo {
+        name: "tiny3m_draft".into(),
+        d_model: d,
+        n_layers: l,
+        n_heads: h,
+        d_ff: ff,
+        vocab: v,
+        max_seq: smax,
+        head_dim: d / h,
+        weights_file: "tiny3m_draft.safetensors".into(),
+        hessians_file: "hessians_tiny3m_draft.safetensors".into(),
+        n_params: l * (4 * d * d + 3 * d * ff + 2 * d) + 2 * v * d + d,
+    }
+}
+
 /// (K, N) of a quantizable/embedding matrix by canonical leaf name.
 fn matrix_shape(info: &ModelInfo, leaf: &str) -> (usize, usize) {
     let (d, f, v) = (info.d_model, info.d_ff, info.vocab);
@@ -88,16 +116,24 @@ fn matrix_shape(info: &ModelInfo, leaf: &str) -> (usize, usize) {
     }
 }
 
+/// A manifest that names every synthesized model (an older checkout's
+/// artifact dir predating the draft model is regenerated in place).
+fn manifest_complete(root: &Path) -> bool {
+    std::fs::read_to_string(root.join("manifest.json"))
+        .map(|s| s.contains("\"tiny3m_draft\""))
+        .unwrap_or(false)
+}
+
 /// Ensure `dir` holds a complete artifact set; generates the synthetic
-/// one if `manifest.json` is absent.  Safe to call concurrently from
-/// test threads (serialized in-process; cross-process installs go
-/// through a tmp-dir + atomic rename).
+/// one if `manifest.json` is absent or predates a synthesized model.
+/// Safe to call concurrently from test threads (serialized in-process;
+/// cross-process installs go through a tmp-dir + atomic rename).
 pub fn ensure_artifacts(dir: &str) -> Result<()> {
     static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
     let _guard = LOCK.get_or_init(|| Mutex::new(())).lock().unwrap();
 
     let root = Path::new(dir);
-    if root.join("manifest.json").exists() {
+    if manifest_complete(root) {
         return Ok(());
     }
     if root.exists() {
@@ -116,7 +152,7 @@ pub fn ensure_artifacts(dir: &str) -> Result<()> {
                 Err(e)
                     if e.kind() == std::io::ErrorKind::AlreadyExists =>
                 {
-                    if root.join("manifest.json").exists() {
+                    if manifest_complete(root) {
                         return Ok(()); // the lock holder finished
                     }
                     // staleness is judged by the lock FILE's age, not
@@ -159,7 +195,7 @@ pub fn ensure_artifacts(dir: &str) -> Result<()> {
     match std::fs::rename(&tmp, root) {
         Ok(()) => Ok(()),
         Err(e) => {
-            if root.join("manifest.json").exists() {
+            if manifest_complete(root) {
                 // another process won the race
                 let _ = std::fs::remove_dir_all(&tmp);
                 Ok(())
@@ -172,16 +208,22 @@ pub fn ensure_artifacts(dir: &str) -> Result<()> {
 
 fn generate_into(dir: &Path) -> Result<()> {
     let info = tiny3m();
+    let draft = tiny3m_draft();
     crate::util::log::info(&format!(
-        "synthesizing artifacts for {} into {} (no python AOT pass found)",
+        "synthesizing artifacts for {} (+ draft {}) into {} (no python \
+         AOT pass found)",
         info.name,
+        draft.name,
         dir.display()
     ));
     let train = write_corpus(dir)?;
     write_tasks(dir, &info)?;
     let weights = write_checkpoint(dir, &info)?;
     write_calibration(dir, &info, &weights, &train)?;
-    write_graphs_and_manifest(dir, &info)?;
+    let draft_weights =
+        write_draft_checkpoint(dir, &info, &draft, &weights)?;
+    write_calibration(dir, &draft, &draft_weights, &train)?;
+    write_graphs_and_manifest(dir, &[info, draft])?;
     Ok(())
 }
 
@@ -320,6 +362,108 @@ fn write_checkpoint(
     }
     st.save(dir.join(&info.weights_file))
         .context("writing synthetic checkpoint")?;
+    Ok(weights)
+}
+
+/// Distill the target's next-token preference into a bigram table with
+/// ONE fp prefill over a 4x128 probe grid that uses every vocab token
+/// as a "last token" exactly once: the greedy argmax of the logits at
+/// the position holding token `t` approximates the target's decode-time
+/// choice after `t`.
+fn distill_bigram(
+    info: &ModelInfo,
+    weights: &BTreeMap<String, Tensor<f32>>,
+) -> Result<Vec<i32>> {
+    let flat: Vec<Value> = weight_names(info)
+        .iter()
+        .map(|name| {
+            let t = &weights[name];
+            Value::f32(t.shape(), t.data().to_vec())
+        })
+        .collect();
+    let (b, s, v) = (4usize, PREFILL_SEQ, info.vocab);
+    assert_eq!(b * s, v, "probe grid must cover the vocab exactly once");
+    let tokens: Vec<i32> = (0..(b * s) as i32).collect();
+    let tok_v = Value::i32(&[b, s], tokens);
+    let len_v = Value::i32(&[b], vec![s as i32; b]);
+    let mut args: Vec<&Value> = vec![&tok_v, &len_v];
+    args.extend(flat.iter());
+    // scalar reference kernels, like calibration: the distilled table
+    // must not depend on the session's ODYSSEY_KERNELS choice
+    let out = forward_prefill(&crate::kernels::ScalarKernels, info, "fp",
+                              GROUP_SIZE, b, s, &args, None)?;
+    let logits = out[0].as_slice::<f32>()?;
+    let mut next = vec![0i32; v];
+    for (t, n) in next.iter_mut().enumerate() {
+        // position (bi*s + si) holds token id (bi*s + si) == t, so the
+        // logit row for "what follows t" is just row t of [b*s, v]
+        let row = &logits[t * v..(t + 1) * v];
+        let mut best = 0usize;
+        for (j, &x) in row.iter().enumerate() {
+            if x > row[best] {
+                best = j;
+            }
+        }
+        *n = best as i32;
+    }
+    Ok(next)
+}
+
+/// Fabricate the speculative draft checkpoint.  Every layer matrix is
+/// EXACTLY zero — the attention value path and the MLP collapse, so
+/// each layer contributes nothing to the residual stream under EVERY
+/// quant variant (zero rows quantize to zero bit-exactly) and the
+/// final hidden state is the raw embedding of the last token.  The
+/// embedding rows are unit-norm random directions and
+/// `lm_head[:, next(t)]` accumulates the direction of `t`, so the
+/// draft's greedy proposal after token `t` is the distilled target
+/// choice `next(t)` with high probability (cross-term noise is
+/// O(1/sqrt(d)) against a margin of 1).  Embedding and lm_head stay
+/// f32 through quantization (only `LAYER_MATRICES` are quantized), so
+/// the bigram behavior is identical in every variant.
+fn write_draft_checkpoint(
+    dir: &Path,
+    target: &ModelInfo,
+    draft: &ModelInfo,
+    target_weights: &BTreeMap<String, Tensor<f32>>,
+) -> Result<BTreeMap<String, Tensor<f32>>> {
+    assert_eq!(draft.vocab, target.vocab, "same tokenizer space");
+    let next = distill_bigram(target, target_weights)?;
+    let (v, d) = (draft.vocab, draft.d_model);
+    let mut emb = Tensor::randn(&[v, d], SEED ^ 0x00D4_AF7).data().to_vec();
+    for row in emb.chunks_mut(d) {
+        let norm =
+            row.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+        row.iter_mut().for_each(|x| *x /= norm);
+    }
+    let mut head = vec![0f32; d * v];
+    for (t, &j) in next.iter().enumerate() {
+        for c in 0..d {
+            head[c * v + j as usize] += emb[t * d + c];
+        }
+    }
+    let mut weights: BTreeMap<String, Tensor<f32>> = BTreeMap::new();
+    for name in weight_names(draft) {
+        let leaf = name.rsplit('.').next().unwrap();
+        let t = match leaf {
+            "attn_norm" | "mlp_norm" | "norm_f" => {
+                Tensor::full(&[d], 1.0f32)
+            }
+            "embed" => Tensor::from_vec(&[v, d], emb.clone()),
+            "lm_head" => Tensor::from_vec(&[d, v], head.clone()),
+            _ => {
+                let (k, n) = matrix_shape(draft, leaf);
+                Tensor::full(&[k, n], 0.0f32)
+            }
+        };
+        weights.insert(name, t);
+    }
+    let mut st = SafeTensors::new();
+    for (name, t) in &weights {
+        st.insert(name, StTensor::from_f32(t));
+    }
+    st.save(dir.join(&draft.weights_file))
+        .context("writing synthetic draft checkpoint")?;
     Ok(weights)
 }
 
@@ -516,13 +660,90 @@ fn kv_shape(info: &ModelInfo, b: usize) -> Vec<usize> {
     vec![b, info.n_heads, info.max_seq, info.head_dim]
 }
 
-fn write_graphs_and_manifest(dir: &Path, info: &ModelInfo) -> Result<()> {
+fn write_graphs_and_manifest(
+    dir: &Path,
+    models: &[ModelInfo],
+) -> Result<()> {
     let mut graphs: BTreeMap<String, Json> = BTreeMap::new();
     let placeholder = "// synthetic placeholder — the native backend \
                        interprets the manifest directly; run the python \
                        AOT pass for real HLO artifacts\n";
 
-    // serving graphs
+    // serving graphs (per model: target + speculative draft)
+    for info in models {
+        write_serving_graphs(&mut graphs, info);
+    }
+
+    // cpu GEMM shape set
+    for variant in GEMM_VARIANTS {
+        for (n, k) in CPU_GEMM_NK {
+            for m in GEMM_MS {
+                let name = format!("gemm_{variant}_cpu_m{m}n{n}k{k}");
+                graphs.insert(
+                    name.clone(),
+                    Json::obj(vec![
+                        ("kind", jstr("gemm")),
+                        ("path", jstr(&format!("{name}.hlo.txt"))),
+                        (
+                            "params",
+                            Json::Arr(gemm_params(
+                                variant, m, n, k, GROUP_SIZE,
+                            )),
+                        ),
+                        (
+                            "outputs",
+                            Json::Arr(vec![jparam("out", &[m, n], "f32")]),
+                        ),
+                        ("variant", jstr(variant)),
+                        ("m", jnum(m)),
+                        ("n", jnum(n)),
+                        ("k", jnum(k)),
+                        ("group", jnum(GROUP_SIZE)),
+                        ("shape_set", jstr("cpu")),
+                    ]),
+                );
+            }
+        }
+    }
+
+    for name in graphs.keys() {
+        std::fs::write(dir.join(format!("{name}.hlo.txt")), placeholder)
+            .with_context(|| format!("writing {name}.hlo.txt"))?;
+    }
+
+    let mut model_map: BTreeMap<String, Json> = BTreeMap::new();
+    for info in models {
+        let model_entry = Json::obj(vec![
+            ("d_model", jnum(info.d_model)),
+            ("n_layers", jnum(info.n_layers)),
+            ("n_heads", jnum(info.n_heads)),
+            ("d_ff", jnum(info.d_ff)),
+            ("vocab", jnum(info.vocab)),
+            ("max_seq", jnum(info.max_seq)),
+            ("head_dim", jnum(info.head_dim)),
+            ("weights", jstr(&info.weights_file)),
+            ("hessians", jstr(&info.hessians_file)),
+            ("n_params", jnum(info.n_params)),
+        ]);
+        model_map.insert(info.name.clone(), model_entry);
+    }
+    let manifest = Json::obj(vec![
+        ("group_size", jnum(GROUP_SIZE)),
+        ("models", Json::Obj(model_map)),
+        ("graphs", Json::Obj(graphs)),
+        ("synthetic", Json::Bool(true)),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.emit())
+        .context("writing manifest.json")?;
+    Ok(())
+}
+
+/// All prefill/decode serving graphs for one model (6 variants x batch
+/// buckets), keyed `{model}_{variant}_{stage}_b{batch}`.
+fn write_serving_graphs(
+    graphs: &mut BTreeMap<String, Json>,
+    info: &ModelInfo,
+) {
     for variant in VARIANTS {
         let wents = weight_params(info, variant);
         for b in PREFILL_BATCHES {
@@ -603,71 +824,6 @@ fn write_graphs_and_manifest(dir: &Path, info: &ModelInfo) -> Result<()> {
             );
         }
     }
-
-    // cpu GEMM shape set
-    for variant in GEMM_VARIANTS {
-        for (n, k) in CPU_GEMM_NK {
-            for m in GEMM_MS {
-                let name = format!("gemm_{variant}_cpu_m{m}n{n}k{k}");
-                graphs.insert(
-                    name.clone(),
-                    Json::obj(vec![
-                        ("kind", jstr("gemm")),
-                        ("path", jstr(&format!("{name}.hlo.txt"))),
-                        (
-                            "params",
-                            Json::Arr(gemm_params(
-                                variant, m, n, k, GROUP_SIZE,
-                            )),
-                        ),
-                        (
-                            "outputs",
-                            Json::Arr(vec![jparam("out", &[m, n], "f32")]),
-                        ),
-                        ("variant", jstr(variant)),
-                        ("m", jnum(m)),
-                        ("n", jnum(n)),
-                        ("k", jnum(k)),
-                        ("group", jnum(GROUP_SIZE)),
-                        ("shape_set", jstr("cpu")),
-                    ]),
-                );
-            }
-        }
-    }
-
-    for name in graphs.keys() {
-        std::fs::write(dir.join(format!("{name}.hlo.txt")), placeholder)
-            .with_context(|| format!("writing {name}.hlo.txt"))?;
-    }
-
-    let model_entry = Json::obj(vec![
-        ("d_model", jnum(info.d_model)),
-        ("n_layers", jnum(info.n_layers)),
-        ("n_heads", jnum(info.n_heads)),
-        ("d_ff", jnum(info.d_ff)),
-        ("vocab", jnum(info.vocab)),
-        ("max_seq", jnum(info.max_seq)),
-        ("head_dim", jnum(info.head_dim)),
-        ("weights", jstr(&info.weights_file)),
-        ("hessians", jstr(&info.hessians_file)),
-        ("n_params", jnum(info.n_params)),
-    ]);
-    let manifest = Json::obj(vec![
-        ("group_size", jnum(GROUP_SIZE)),
-        (
-            "models",
-            Json::Obj(BTreeMap::from([(
-                info.name.clone(),
-                model_entry,
-            )])),
-        ),
-        ("graphs", Json::Obj(graphs)),
-        ("synthetic", Json::Bool(true)),
-    ]);
-    std::fs::write(dir.join("manifest.json"), manifest.emit())
-        .context("writing manifest.json")?;
-    Ok(())
 }
 
 #[cfg(test)]
@@ -697,5 +853,19 @@ mod tests {
         let info = tiny3m();
         assert!(info.n_params > 3_000_000 && info.n_params < 4_000_000);
         assert_eq!(info.head_dim, 32);
+    }
+
+    #[test]
+    fn draft_shares_tokenizer_space_and_is_much_cheaper() {
+        let t = tiny3m();
+        let d = tiny3m_draft();
+        assert_eq!(d.vocab, t.vocab, "proposals must be valid inputs");
+        assert_eq!(d.max_seq, t.max_seq, "same position arithmetic");
+        assert!(
+            d.n_params * 10 < t.n_params,
+            "draft passes must be much cheaper than target passes"
+        );
+        // the bigram probe grid covers the vocab exactly once
+        assert_eq!(4 * PREFILL_SEQ, t.vocab);
     }
 }

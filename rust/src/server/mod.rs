@@ -444,7 +444,9 @@ fn reject_response(engine: &EngineHandle) -> HttpResponse {
 
 /// The shared response fields of the blocking body and the streaming
 /// done-frame: branch-0 `tokens`/`finish` (back-compat) plus, for
-/// n > 1, a `completions` array with every branch's tokens + finish.
+/// n > 1, a `completions` array with every branch's tokens + finish +
+/// `sum_logprob`, and (sampled runs only) `best` — the index of the
+/// highest-scoring completion.
 fn result_fields(
     res: &crate::coordinator::request::GenResult,
 ) -> Vec<(&'static str, Json)> {
@@ -470,10 +472,14 @@ fn result_fields(
                                 .collect()),
                         ),
                         ("finish", Json::str(finish_str(b.finish))),
+                        ("sum_logprob", Json::num(b.sum_logprob)),
                     ]))
                     .collect(),
             ),
         ));
+        if let Some(best) = res.best {
+            fields.push(("best", Json::num(best as f64)));
+        }
     }
     fields.push(("ttft_ms", Json::num(res.ttft_s * 1e3)));
     fields.push(("total_ms", Json::num(res.total_s * 1e3)));

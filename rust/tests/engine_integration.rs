@@ -72,7 +72,10 @@ fn w4a8_fast_generates_end_to_end_on_native_backend() {
     // the acceptance path: the paper's FastGEMM W4A8 variant serving
     // tokens through the pure-Rust backend, no AOT artifacts involved
     with_engine(|_shared| {
-        let mut engine = Engine::new(opts("w4a8_fast")).unwrap();
+        let mut o = opts("w4a8_fast");
+        // step-count asserts below assume one token per decode pass
+        o.speculative = 0;
+        let mut engine = Engine::new(o).unwrap();
         assert_eq!(engine.rt.backend_name(), "native");
         engine.submit(Request::new(
             99,
@@ -227,6 +230,11 @@ fn staged_and_unstaged_engines_produce_identical_streams() {
             let mut o = opts("w4a8_fast");
             o.staging = staging; // what ODYSSEY_NO_STAGING=1 flips off
             o.kv_quant = KvDtype::F32; // exactness vs unstaged-contiguous
+            // the staged-exec arithmetic below counts one staged exec
+            // per decode token; speculation would fold several tokens
+            // into one verify pass (its own coverage lives in the
+            // speculative tests)
+            o.speculative = 0;
             let mut engine = Engine::new(o).unwrap();
             for i in 0..3u64 {
                 engine.submit(Request::new(
@@ -298,6 +306,10 @@ fn paged_and_contiguous_engines_produce_identical_streams() {
             o.paged = paged;
             o.staging = true; // paging rides on staged weights
             o.kv_quant = KvDtype::F32; // exactness vs contiguous
+            // paged_decode_steps == decode_steps below assumes the
+            // one-token decode path (speculative verify goes through
+            // the prefill window instead)
+            o.speculative = 0;
             let mut engine = Engine::new(o).unwrap();
             assert_eq!(engine.paging_active(), paged);
             for i in 0..3u64 {
@@ -636,6 +648,10 @@ fn chunked_prefill_removes_decode_stalls_and_keeps_streams() {
             o.staging = true;
             o.chunking = chunking;
             o.kv_quant = KvDtype::F32; // exactness across chunk schedules
+            // the ITL p50 == 1.0 steady-state assert below counts one
+            // token per engine step; a verify pass emitting a batch of
+            // tokens in one step would skew it by design
+            o.speculative = 0;
             o.step_token_budget = 16;
             o.kv_block_size = 4;
             o.max_queue = 16;
@@ -733,13 +749,15 @@ fn escape_hatch_matrix_produces_identical_streams() {
         let run = |paged: bool,
                    prefix: bool,
                    chunking: bool,
-                   kv_quant: KvDtype| {
+                   kv_quant: KvDtype,
+                   spec: usize| {
             let mut o = opts("fp");
             o.paged = paged;
             o.staging = true;
             o.prefix_cache = prefix;
             o.chunking = chunking;
             o.kv_quant = kv_quant;
+            o.speculative = spec;
             o.step_token_budget = 12; // small: forces real chunking
             o.kv_block_size = 4;
             o.max_queue = 16;
@@ -772,30 +790,41 @@ fn escape_hatch_matrix_produces_identical_streams() {
                 .collect::<Vec<_>>()
         };
 
-        let reference = run(false, false, false, KvDtype::F32);
+        let reference = run(false, false, false, KvDtype::F32, 0);
         assert_eq!(reference.len(), 5);
         assert!(reference.iter().all(|t| t.len() == 5));
+        // speculative axis: k=3 on fp KV must stay bit-identical too
+        // (draft proposals only ever get emitted after the target
+        // verifies them; paging-off combos silently fall back to
+        // plain decode, which is the same stream by construction)
         for paged in [false, true] {
             for prefix in [false, true] {
                 for chunking in [false, true] {
-                    let got =
-                        run(paged, prefix, chunking, KvDtype::F32);
-                    assert_eq!(
-                        got, reference,
-                        "paging={paged} prefix={prefix} \
-                         chunking={chunking} diverged from the \
-                         all-hatches-off baseline"
-                    );
+                    for spec in [0usize, 3] {
+                        let got = run(
+                            paged, prefix, chunking, KvDtype::F32,
+                            spec,
+                        );
+                        assert_eq!(
+                            got, reference,
+                            "paging={paged} prefix={prefix} \
+                             chunking={chunking} spec={spec} diverged \
+                             from the all-hatches-off baseline"
+                        );
+                    }
                 }
             }
         }
         // int8-KV axis (paged only — the contiguous path has no
-        // pool): every combo must COMPLETE with full-length streams;
+        // pool; spec pinned off — int8 history reads dequantize, so
+        // the verify window may legitimately round differently):
+        // every combo must COMPLETE with full-length streams;
         // divergence from the fp baseline is expected quantization
         // behavior, logged so schedule-sensitivity stays visible
         for prefix in [false, true] {
             for chunking in [false, true] {
-                let got = run(true, prefix, chunking, KvDtype::Int8);
+                let got =
+                    run(true, prefix, chunking, KvDtype::Int8, 0);
                 assert_eq!(got.len(), 5);
                 assert!(
                     got.iter().all(|t| t.len() == 5),
@@ -1094,6 +1123,146 @@ fn no_staging_env_var_flips_the_default() {
         assert!(on_by_default, "staging must default on when env unset");
         assert!(!off, "ODYSSEY_NO_STAGING=1 must disable staging");
         assert!(!opts_off, "EngineOptions::default must honor the env");
+    });
+}
+
+#[test]
+fn spec_k_env_var_opts_into_speculation() {
+    // same serialization rationale as the staging/paging twins above
+    with_engine(|_shared| {
+        let saved = std::env::var("ODYSSEY_SPEC_K").ok();
+        std::env::remove_var("ODYSSEY_SPEC_K");
+        let off_by_default = EngineOptions::default().speculative;
+        std::env::set_var("ODYSSEY_SPEC_K", "4");
+        let opted_in = EngineOptions::default().speculative;
+        std::env::set_var("ODYSSEY_SPEC_K", "0");
+        let zero = odyssey::runtime::spec_k_from_env();
+        std::env::set_var("ODYSSEY_SPEC_K", "many");
+        let junk = odyssey::runtime::spec_k_from_env();
+        match saved {
+            Some(v) => std::env::set_var("ODYSSEY_SPEC_K", v),
+            None => std::env::remove_var("ODYSSEY_SPEC_K"),
+        }
+        assert_eq!(
+            off_by_default, 0,
+            "speculation must stay opt-in (default off)"
+        );
+        assert_eq!(
+            opted_in, 4,
+            "ODYSSEY_SPEC_K=4 must flow into EngineOptions"
+        );
+        assert_eq!(zero, None, "an explicit 0 stays off");
+        assert_eq!(junk, None, "unparsable values stay off, not panic");
+    });
+}
+
+#[test]
+fn speculative_decoding_is_bit_identical_to_plain_greedy() {
+    // The speculative contract: draft-k proposals only ever reach the
+    // stream after the target verifies them in its own chunk-window
+    // pass, and the first divergence is replaced by the target's own
+    // token — so `--draft-k` must change THROUGHPUT SHAPE (several
+    // tokens per target pass), never the tokens.  Mixed greedy
+    // workload: different lengths, an eos-armed request, a
+    // stop-sequence request, plus enough new tokens that rollbacks
+    // and re-drafts actually happen.
+    with_engine(|_shared| {
+        let run = |k: usize| {
+            let mut o = opts("fp");
+            o.paged = true;
+            o.staging = true;
+            o.kv_quant = KvDtype::F32; // exactness vs plain decode
+            o.speculative = k;
+            o.max_queue = 16;
+            let mut engine = Engine::new(o).unwrap();
+            assert_eq!(engine.speculative_active(), k > 0);
+            for i in 0..4u64 {
+                engine.submit(Request::new(
+                    i,
+                    prompt(i as i32 * 3 + 2, 6 + 2 * i as usize),
+                    GenParams {
+                        max_new_tokens: 10 + i as usize,
+                        eos: if i == 2 { Some(2) } else { None },
+                        stop: if i == 3 {
+                            vec![vec![7, 8]]
+                        } else {
+                            Vec::new()
+                        },
+                        ..Default::default()
+                    },
+                ));
+            }
+            let mut results = engine.run_until_idle().unwrap();
+            results.sort_by_key(|r| r.id);
+            let streams: Vec<(Vec<i32>, FinishReason)> = results
+                .into_iter()
+                .map(|r| (r.tokens, r.finish))
+                .collect();
+            (streams, engine)
+        };
+        let (spec_streams, spec) = run(4);
+        let (plain_streams, plain) = run(0);
+        assert_eq!(
+            spec_streams, plain_streams,
+            "speculative greedy must be bit-identical to plain greedy \
+             (tokens AND finish reasons)"
+        );
+        let m = &spec.metrics;
+        assert!(m.spec_steps > 0, "verify passes must have run");
+        assert!(
+            m.draft_tokens_proposed >= m.spec_steps,
+            "each verify pass scores at least one proposal"
+        );
+        assert!(
+            m.spec_emitted_tokens >= m.spec_steps,
+            "each verify pass emits at least the target's own token"
+        );
+        assert!(
+            m.accepted_tokens_per_target_step() >= 1.0,
+            "emitted/verify-pass must be at least 1.0, got {}",
+            m.accepted_tokens_per_target_step()
+        );
+        assert_eq!(
+            plain.metrics.spec_steps, 0,
+            "k=0 must never touch the speculative path"
+        );
+        // the block pools of both engines drained clean
+        assert_eq!(spec.kv_blocks_in_use(), 0);
+    });
+}
+
+#[test]
+fn speculation_with_missing_draft_model_fails_construction() {
+    // fault injection: requesting speculation for a model whose
+    // `{model}_draft` companion is not in the manifest must fail FAST
+    // at construction with an actionable error — not at the first
+    // decode step.  `tiny3m_draft` is itself a model with serving
+    // graphs, but `tiny3m_draft_draft` does not exist.
+    with_engine(|_shared| {
+        let mut o = opts("fp");
+        o.model = "tiny3m_draft".into();
+        o.paged = true;
+        o.staging = true;
+        o.speculative = 2;
+        let err = match Engine::new(o) {
+            Ok(_) => panic!("construction must fail without a draft"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(
+            err.contains("tiny3m_draft_draft"),
+            "error must name the missing companion: {err}"
+        );
+        assert!(
+            err.contains("speculative"),
+            "error must say speculation needs it: {err}"
+        );
+        // same options with speculation off must construct fine
+        let mut o = opts("fp");
+        o.model = "tiny3m_draft".into();
+        o.paged = true;
+        o.staging = true;
+        o.speculative = 0;
+        Engine::new(o).expect("draft model serves fine as a target");
     });
 }
 
@@ -1412,6 +1581,9 @@ fn nan_logits_finish_with_error_instead_of_panicking() {
         for temperature in [0.0f32, 0.8] {
             let mut o = opts("fp");
             o.nan_logits_after = Some(3);
+            // fault injection poisons the plain decode path's logits;
+            // under speculation the greedy arm would never hit it
+            o.speculative = 0;
             o.max_queue = 16;
             let mut engine = Engine::new(o).unwrap();
             for i in 0..3u64 {

@@ -493,12 +493,14 @@ fn prop_paged_kv_lifecycle_never_leaks_blocks() {
 
 /// The PR 4 tentpole fuzz: random interleavings of
 /// admit-with-shared-prefix / decode-with-CoW-fork / fork_seq / free /
-/// index-evict on the refcounted prefix cache.  After EVERY op,
-/// `check_conservation` proves `free + Σ refcounted-unique == pool
-/// size` with each block's refcount equal to its reachable holds
-/// (tables + index) — no leak, no double free — and every write
-/// target is PRIVATE (refcount 1) after the write path runs, so no
-/// block is reachable from two tables once a fork writes.
+/// index-evict — now also speculative verify windows
+/// (`ensure_window_capacity` + `truncate_seq` rollback) and multi-turn
+/// donation of GENERATED blocks at free — on the refcounted prefix
+/// cache.  After EVERY op, `check_conservation` proves `free +
+/// Σ refcounted-unique == pool size` with each block's refcount equal
+/// to its reachable holds (tables + index) — no leak, no double free —
+/// and every write target is PRIVATE (refcount 1) after the write path
+/// runs, so no block is reachable from two tables once a fork writes.
 #[test]
 fn prop_prefix_cache_refcount_conservation() {
     Prop::new("prefix cache refcount conservation").cases(25).check(
@@ -514,9 +516,12 @@ fn prop_prefix_cache_refcount_conservation() {
             let stems: Vec<Vec<i32>> = (0..3i32)
                 .map(|s| (0..24).map(|i| 100 * (s + 1) + i).collect())
                 .collect();
-            let mut live: Vec<(usize, u64)> = Vec::new();
+            // (slot, request id, every token whose K/V the cache
+            // holds: prompt ++ generated — donated in full at free)
+            let mut live: Vec<(usize, u64, Vec<i32>)> = Vec::new();
+            let mut gen_ctr = 0i32;
             for step in 0..300u64 {
-                match rng.next_u64() % 8 {
+                match rng.next_u64() % 10 {
                     // admit with a (likely shared) prefix, then do what
                     // the engine does: prefill + donate
                     0 | 1 | 2 => {
@@ -538,7 +543,7 @@ fn prop_prefix_cache_refcount_conservation() {
                                 );
                                 assert!(live
                                     .iter()
-                                    .all(|&(s, _)| s != a.slot));
+                                    .all(|l| l.0 != a.slot));
                                 // prefill writes start..plen through
                                 // the table: every touched block must
                                 // be private after admission
@@ -556,7 +561,7 @@ fn prop_prefix_cache_refcount_conservation() {
                                 kv.finish_prefill(a.slot, plen)
                                     .unwrap();
                                 kv.donate_prefix(a.slot, &prompt);
-                                live.push((a.slot, step));
+                                live.push((a.slot, step, prompt));
                             }
                             None => assert!(
                                 !kv.admission_feasible(&prompt, 0),
@@ -571,7 +576,7 @@ fn prop_prefix_cache_refcount_conservation() {
                             let i = (rng.next_u64()
                                 % live.len() as u64)
                                 as usize;
-                            let (slot, _) = live[i];
+                            let slot = live[i].0;
                             if kv.pos(slot) + 2 < max_seq {
                                 if kv.ensure_write_capacity(slot) {
                                     let b = kv.table(slot)
@@ -583,6 +588,10 @@ fn prop_prefix_cache_refcount_conservation() {
                                          after the CoW path"
                                     );
                                     kv.advance(slot).unwrap();
+                                    gen_ctr += 1;
+                                    live[i]
+                                        .2
+                                        .push(-1_000_000 - gen_ctr);
                                 } else {
                                     assert_eq!(
                                         kv.available_blocks(),
@@ -601,7 +610,7 @@ fn prop_prefix_cache_refcount_conservation() {
                             let i = (rng.next_u64()
                                 % live.len() as u64)
                                 as usize;
-                            let (slot, _) = live[i];
+                            let slot = live[i].0;
                             if let Some(twin) =
                                 kv.fork_seq(slot, 100_000 + step)
                             {
@@ -610,24 +619,93 @@ fn prop_prefix_cache_refcount_conservation() {
                                     kv.table(slot),
                                     "twins share every block"
                                 );
-                                live.push((twin, 100_000 + step));
+                                let hist = live[i].2.clone();
+                                live.push((twin, 100_000 + step, hist));
                             }
                         }
                     }
-                    // free (completion / preemption): releases only
+                    // free (completion / preemption): donate the whole
+                    // cached thread — prompt AND generated blocks — so
+                    // a follow-up turn can resume it, then release only
                     // this sequence's holds
                     6 => {
                         if !live.is_empty() {
                             let i = (rng.next_u64()
                                 % live.len() as u64)
                                 as usize;
-                            let (slot, _) = live.swap_remove(i);
+                            let (slot, _, hist) = live.swap_remove(i);
+                            assert_eq!(
+                                hist.len(),
+                                kv.pos(slot),
+                                "tracked tokens drifted from pos"
+                            );
+                            kv.donate_prefix(slot, &hist);
                             kv.free_seq(slot);
                         }
                     }
                     // explicit index eviction
-                    _ => {
+                    7 => {
                         let _ = kv.reclaim_index_lru();
+                    }
+                    // speculative verify window: back [pos, upto) with
+                    // private pages, then commit a random accepted
+                    // prefix and roll the rejected rows' blocks back
+                    _ => {
+                        if !live.is_empty() {
+                            let i = (rng.next_u64()
+                                % live.len() as u64)
+                                as usize;
+                            let slot = live[i].0;
+                            let pos = kv.pos(slot);
+                            let upto = (pos
+                                + 2
+                                + (rng.next_u64() % 4) as usize)
+                                .min(max_seq);
+                            let before = kv.table(slot).len();
+                            if upto <= pos {
+                                // already parked at max_seq: no window
+                            } else if kv
+                                .ensure_window_capacity(slot, upto)
+                            {
+                                for idx in
+                                    (pos / bs)..kv.blocks_for(upto)
+                                {
+                                    let b = kv.table(slot)[idx];
+                                    assert_eq!(
+                                        kv.ref_count(b),
+                                        1,
+                                        "window write range must be \
+                                         private (block {b})"
+                                    );
+                                }
+                                let commit = pos
+                                    + 1
+                                    + (rng.next_u64()
+                                        % (upto - pos) as u64)
+                                        as usize;
+                                kv.truncate_seq(slot, commit);
+                                assert_eq!(kv.pos(slot), commit);
+                                for _ in pos..commit {
+                                    gen_ctr += 1;
+                                    live[i]
+                                        .2
+                                        .push(-1_000_000 - gen_ctr);
+                                }
+                            } else {
+                                assert_eq!(
+                                    kv.available_blocks(),
+                                    0,
+                                    "window refused with reclaimable \
+                                     capacity"
+                                );
+                                assert_eq!(
+                                    kv.table(slot).len(),
+                                    before,
+                                    "failed window grow must restore \
+                                     the table"
+                                );
+                            }
+                        }
                     }
                 }
                 kv.check_conservation().unwrap_or_else(|e| {
@@ -640,7 +718,7 @@ fn prop_prefix_cache_refcount_conservation() {
             }
             // drain: free everything and flush the index — the pool
             // must come back whole
-            for (slot, _) in live.drain(..) {
+            for (slot, _, _) in live.drain(..) {
                 kv.free_seq(slot);
             }
             kv.flush_prefix_index();

@@ -308,6 +308,26 @@ fn parallel_sampling_streams_branch_tagged_frames() {
     assert_eq!(completions.len(), 2);
     assert_eq!(tokens_of(done), tokens_of(&completions[0]));
 
+    // sampled n>1 results carry best-of-n ranking: a per-branch
+    // sum_logprob and a top-level `best` index into completions
+    let scores: Vec<f64> = completions
+        .iter()
+        .map(|c| {
+            c.get("sum_logprob")
+                .as_f64()
+                .expect("each completion carries sum_logprob")
+        })
+        .collect();
+    let best = done
+        .get("best")
+        .as_f64()
+        .expect("sampled n=2 result carries best") as usize;
+    assert!(best < 2, "best indexes a completion");
+    assert!(
+        scores.iter().all(|&s| scores[best] >= s),
+        "best must have the highest sum_logprob ({scores:?})"
+    );
+
     // token frames are branch-tagged; per branch they arrive ordered
     // and gap-free and reassemble to that branch's completion
     let mut per_branch: Vec<Vec<i32>> = vec![Vec::new(), Vec::new()];
